@@ -1,0 +1,99 @@
+//! E4 — latency-bandwidth characterization + calibration (paper
+//! §III-B.2/§V): fit the differentiable link model to three synthetic
+//! vendor cards via the AOT fwd+grad artifact, then cross-check the
+//! *simulator's own* loaded-latency curve against the fitted model.
+//! Requires `make artifacts`.
+
+use cxlramsim::calibrate::{hwref, Fitter};
+use cxlramsim::config::SimConfig;
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::runtime::XlaRuntime;
+use cxlramsim::system::Machine;
+use cxlramsim::util::bench::Table;
+use cxlramsim::workloads::RandomAccess;
+
+fn main() {
+    let Ok(rt) = XlaRuntime::load(std::path::Path::new("artifacts")) else {
+        println!("calib_latency_bw: artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    let cfg = SimConfig::default();
+    let fitter = Fitter::default();
+
+    // --- per-vendor fits ----------------------------------------------------
+    let mut t = Table::new(
+        "Calibration: fit vs synthetic vendor silicon",
+        &["card", "init loss", "final loss", "iters", "rms ns"],
+    );
+    for (i, card) in hwref::CARDS.iter().enumerate() {
+        let loads =
+            hwref::load_grid(rt.manifest.calib_points, card.sat_bw_gbps);
+        let meas = hwref::measure(card, &loads, 0.02, 100 + i as u64);
+        let r = fitter
+            .fit(&rt, Fitter::seed_from(&cfg.cxl), &loads, &meas)
+            .expect("fit");
+        assert!(
+            r.final_loss < r.initial_loss / 50.0,
+            "{}: did not converge",
+            card.name
+        );
+        t.row(&[
+            card.name.to_string(),
+            format!("{:.1}", r.initial_loss),
+            format!("{:.3}", r.final_loss),
+            r.iterations.to_string(),
+            format!("{:.2}", r.rms_ns),
+        ]);
+    }
+    t.print();
+
+    // --- simulator loaded-latency curve (characterization series) ---------
+    // Vary offered load by inserting compute gaps between random CXL
+    // accesses; measure end-to-end CXL fill latency from the RC's
+    // round-trip histogram.
+    let mut t2 = Table::new(
+        "Simulator loaded-latency (random reads on CXL, O3, 1 core)",
+        &["gap cycles", "offered GB/s", "avg RT ns", "link util proxy"],
+    );
+    let mut series = Vec::new();
+    for gap in [400u64, 200, 100, 50, 20, 0] {
+        let mut c = cfg.clone();
+        c.cores = 1;
+        let mut m = Machine::new(c.clone()).unwrap();
+        m.boot(ProgModel::Znuma).unwrap();
+        let mut wl = RandomAccess::new(32 << 20, 30_000, 0.0, 7);
+        wl.gap_cycles = gap;
+        m.attach_workloads(
+            vec![Box::new(wl)],
+            &MemPolicy::Bind { nodes: vec![1] },
+        )
+        .unwrap();
+        let s = m.run(None);
+        let rt_ns = m.rc.stats.round_trip.stats.mean() / 1000.0;
+        let offered = s.bytes_moved as f64 / s.seconds / 1e9;
+        series.push((offered, rt_ns));
+        t2.row(&[
+            gap.to_string(),
+            format!("{offered:.2}"),
+            format!("{rt_ns:.0}"),
+            format!("{:.3}", s.cxl_accesses as f64 / s.seconds / 1e9),
+        ]);
+    }
+    t2.print();
+
+    // Shape: latency grows with offered load.
+    let lo = series.first().unwrap();
+    let hi = series.last().unwrap();
+    assert!(hi.0 > lo.0, "offered load must rise as gaps shrink");
+    assert!(
+        hi.1 > lo.1,
+        "loaded latency must exceed unloaded ({:.0} vs {:.0} ns)",
+        hi.1,
+        lo.1
+    );
+    println!(
+        "\ncalib_latency_bw: unloaded {:.0} ns -> loaded {:.0} ns at \
+         {:.1} GB/s offered",
+        lo.1, hi.1, hi.0
+    );
+}

@@ -1,0 +1,131 @@
+//! E3 — the Fig.-1 ablation: architecturally correct **IOBus attach**
+//! (CXLRAMSim, Fig. 1B) vs the **membus attach** shortcut of
+//! CXL-DMSim/SimCXL (Fig. 1A), identical in every other parameter.
+//!
+//! Expected shape: at low intensity the two roughly agree (the fixed
+//! protocol costs dominate and the baseline folds them into a
+//! constant), but under load the membus model *underestimates* latency
+//! because it has no flit serialization, no credit back-pressure and no
+//! IOBus occupancy — the modeling error the paper calls out.
+
+use cxlramsim::config::{CxlAttach, SimConfig};
+use cxlramsim::coordinator::run_sweep;
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::system::Machine;
+use cxlramsim::util::bench::Table;
+use cxlramsim::workloads::{PointerChase, RandomAccess, Stream, StreamKernel, Workload};
+
+#[derive(Clone, Copy, PartialEq)]
+enum Wl {
+    Chase,
+    Stream,
+    Random,
+}
+
+#[derive(Clone)]
+struct Point {
+    attach: CxlAttach,
+    wl: Wl,
+}
+
+fn make_wl(wl: Wl, cfg: &SimConfig) -> Box<dyn Workload> {
+    match wl {
+        // Dependent loads: unloaded latency probe.
+        Wl::Chase => Box::new(PointerChase::new(32 * 1024, 30_000, cfg.seed)),
+        // Sequential bandwidth under load.
+        Wl::Stream => {
+            Box::new(Stream::for_wss(StreamKernel::Copy, cfg.l2.size, 8))
+        }
+        // Random loaded traffic with writes.
+        Wl::Random => {
+            Box::new(RandomAccess::new(16 << 20, 60_000, 0.3, cfg.seed))
+        }
+    }
+}
+
+fn main() {
+    let mut points = Vec::new();
+    for wl in [Wl::Chase, Wl::Stream, Wl::Random] {
+        for attach in [CxlAttach::IoBus, CxlAttach::MemBus] {
+            points.push(Point { attach, wl });
+        }
+    }
+    let rows = run_sweep(points.clone(), 6, |p: Point| {
+        let mut cfg = SimConfig::default();
+        cfg.cores = 1;
+        cfg.cxl.attach = p.attach;
+        if p.wl == Wl::Chase {
+            // Dependent loads are an *idle latency* probe only when the
+            // core cannot overlap them.
+            cfg.cpu_model = cxlramsim::config::CpuModel::InOrder;
+        }
+        let mut m = Machine::new(cfg.clone()).unwrap();
+        m.boot(ProgModel::Znuma).unwrap();
+        m.attach_workloads(
+            vec![make_wl(p.wl, &cfg)],
+            &MemPolicy::Bind { nodes: vec![1] }, // all traffic on CXL
+        )
+        .unwrap();
+        let s = m.run(None);
+        (s.seconds * 1e3, s.bandwidth_gbps, s.m2s_req + s.m2s_rwd,
+         s.cxl_accesses)
+    });
+
+    let mut t = Table::new(
+        "Fig. 1 ablation — IOBus (CXLRAMSim) vs membus (DMSim-style)",
+        &["workload", "attach", "ms", "GB/s", "M2S pkts", "CXL fills"],
+    );
+    let name = |w: Wl| match w {
+        Wl::Chase => "chase (idle lat)",
+        Wl::Stream => "stream copy 8xL2",
+        Wl::Random => "random 30% wr",
+    };
+    for (p, (ms, bw, pkts, fills)) in points.iter().zip(&rows) {
+        t.row(&[
+            name(p.wl).to_string(),
+            match p.attach {
+                CxlAttach::IoBus => "IOBus".into(),
+                CxlAttach::MemBus => "membus".to_string(),
+            },
+            format!("{ms:.3}"),
+            format!("{bw:.2}"),
+            pkts.to_string(),
+            fills.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Shape assertions.
+    let get = |wl: Wl, attach: CxlAttach| {
+        points
+            .iter()
+            .zip(&rows)
+            .find(|(p, _)| p.wl == wl && p.attach == attach)
+            .map(|(_, r)| *r)
+            .unwrap()
+    };
+    // 1. The baseline never emits CXL.mem packets.
+    for wl in [Wl::Chase, Wl::Stream, Wl::Random] {
+        assert_eq!(get(wl, CxlAttach::MemBus).2, 0);
+        assert!(get(wl, CxlAttach::IoBus).2 > 0);
+    }
+    // 2. Idle latency (chase) roughly agrees: < 15% apart.
+    let (io_ms, _, _, _) = get(Wl::Chase, CxlAttach::IoBus);
+    let (mb_ms, _, _, _) = get(Wl::Chase, CxlAttach::MemBus);
+    let idle_gap = (io_ms - mb_ms).abs() / mb_ms;
+    assert!(idle_gap < 0.15, "idle gap {idle_gap:.3} too large");
+    // 3. Under load the baseline is optimistic (higher bandwidth).
+    let (_, io_bw, _, _) = get(Wl::Stream, CxlAttach::IoBus);
+    let (_, mb_bw, _, _) = get(Wl::Stream, CxlAttach::MemBus);
+    assert!(
+        mb_bw >= io_bw,
+        "membus attach must be optimistic under load \
+         (membus {mb_bw:.2} vs iobus {io_bw:.2})"
+    );
+    println!(
+        "\nfig1_attach_ablation: idle gap {:.1}%, loaded optimism {:.1}% — \
+         the membus shortcut matches idle latency but hides loaded effects",
+        idle_gap * 100.0,
+        (mb_bw / io_bw - 1.0) * 100.0
+    );
+}

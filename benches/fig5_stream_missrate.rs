@@ -1,0 +1,184 @@
+//! E2 — regenerate Fig. 5: LLC (L2) miss rate for the STREAM
+//! micro-benchmark under the Timing (in-order) and O3 CPU models, with
+//! working sets of 2/4/6/8x the L2 size and OS page-interleave ratios
+//! swept across DRAM:CXL = 100:0 .. 0:100 (paper §IV).
+//!
+//! Two prefetcher regimes are reported:
+//!  * pf=off — the paper's gem5-classic-caches setting: at WSS >= 2xL2
+//!    pure streaming defeats LRU entirely, so the LLC *demand* miss
+//!    rate sits at ~1.0 independent of the interleave ratio; the ratio
+//!    shows up purely as bandwidth (the CXL path is slower).
+//!  * pf=on — with an L2 stride prefetcher the demand miss rate
+//!    collapses and the latency interaction appears through prefetch
+//!    timeliness (the cache-pollution/latency effect the abstract
+//!    highlights), while the bandwidth ordering is preserved.
+
+use cxlramsim::config::{CpuModel, SimConfig};
+use cxlramsim::coordinator::run_sweep;
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::system::Machine;
+use cxlramsim::util::bench::Table;
+use cxlramsim::workloads::{Stream, StreamKernel};
+
+#[derive(Clone)]
+struct Point {
+    cpu: CpuModel,
+    pf: bool,
+    wss: u64,
+    label: &'static str,
+    weights: Vec<(u32, u32)>,
+}
+
+struct Row {
+    cpu: &'static str,
+    pf: bool,
+    wss: u64,
+    label: &'static str,
+    llc_miss: f64,
+    l1_miss: f64,
+    bw: f64,
+    cxl_share: f64,
+}
+
+fn main() {
+    let quick = std::env::var("CXLRAMSIM_BENCH_QUICK").is_ok();
+    let ratios: [(&'static str, Vec<(u32, u32)>); 5] = [
+        ("100:0", vec![(0, 1)]),
+        ("75:25", vec![(0, 3), (1, 1)]),
+        ("50:50", vec![(0, 1), (1, 1)]),
+        ("25:75", vec![(0, 1), (1, 3)]),
+        ("0:100", vec![(1, 1)]),
+    ];
+    let wss_list: &[u64] = if quick { &[2, 8] } else { &[2, 4, 6, 8] };
+    let mut points = Vec::new();
+    for pf in [false, true] {
+        for cpu in [CpuModel::InOrder, CpuModel::OutOfOrder] {
+            for &wss in wss_list {
+                for (label, w) in &ratios {
+                    points.push(Point {
+                        cpu,
+                        pf,
+                        wss,
+                        label,
+                        weights: w.clone(),
+                    });
+                }
+            }
+        }
+    }
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get().min(10))
+        .unwrap_or(4);
+    let rows: Vec<Row> = run_sweep(points, threads, |p: Point| {
+        let mut cfg = SimConfig::default();
+        cfg.cpu_model = p.cpu;
+        cfg.cores = 1;
+        cfg.l2.prefetch = p.pf;
+        let mut m = Machine::new(cfg.clone()).unwrap();
+        m.boot(ProgModel::Znuma).unwrap();
+        let wl = Stream::for_wss(StreamKernel::Triad, cfg.l2.size, p.wss);
+        m.attach_workloads(
+            vec![Box::new(wl)],
+            &MemPolicy::Interleave { weights: p.weights.clone() },
+        )
+        .unwrap();
+        let s = m.run(None);
+        m.verify().expect("stream verification");
+        Row {
+            cpu: match p.cpu {
+                CpuModel::InOrder => "Timing",
+                CpuModel::OutOfOrder => "O3",
+            },
+            pf: p.pf,
+            wss: p.wss,
+            label: p.label,
+            llc_miss: s.l2_miss_rate,
+            l1_miss: s.l1_miss_rate,
+            bw: s.bandwidth_gbps,
+            cxl_share: s.cxl_accesses as f64
+                / (s.cxl_accesses + s.dram_accesses).max(1) as f64,
+        }
+    });
+
+    let mut t = Table::new(
+        "Fig. 5 — STREAM triad LLC miss rate (Timing + O3, pf off/on)",
+        &[
+            "cpu", "pf", "wss(xL2)", "DRAM:CXL", "LLC miss", "L1 miss",
+            "GB/s", "CXL share",
+        ],
+    );
+    let mut jsonl = String::new();
+    for r in &rows {
+        t.row(&[
+            r.cpu.to_string(),
+            if r.pf { "on" } else { "off" }.to_string(),
+            r.wss.to_string(),
+            r.label.to_string(),
+            format!("{:.4}", r.llc_miss),
+            format!("{:.4}", r.l1_miss),
+            format!("{:.2}", r.bw),
+            format!("{:.2}", r.cxl_share),
+        ]);
+        jsonl.push_str(&format!(
+            "{{\"cpu\":\"{}\",\"pf\":{},\"wss\":{},\"ratio\":\"{}\",\
+             \"llc_miss\":{:.4},\"l1_miss\":{:.4},\"gbps\":{:.3},\
+             \"cxl_share\":{:.3}}}\n",
+            r.cpu, r.pf, r.wss, r.label, r.llc_miss, r.l1_miss, r.bw,
+            r.cxl_share
+        ));
+    }
+    t.print();
+    let _ = std::fs::create_dir_all("target/bench-results");
+    let _ = std::fs::write("target/bench-results/fig5.jsonl", jsonl);
+
+    // --- shape assertions (the paper's qualitative claims) -----------------
+    let at = |cpu: &str, pf: bool, wss: u64, label: &str| {
+        rows.iter()
+            .find(|r| {
+                r.cpu == cpu && r.pf == pf && r.wss == wss && r.label == label
+            })
+            .unwrap()
+    };
+    let wss_hi = *wss_list.last().unwrap();
+    for cpu in ["Timing", "O3"] {
+        for pf in [false, true] {
+            // All-DRAM strictly outperforms all-CXL; ordering monotone.
+            let bws: Vec<f64> = ratios
+                .iter()
+                .map(|(l, _)| at(cpu, pf, wss_hi, l).bw)
+                .collect();
+            for w in bws.windows(2) {
+                assert!(
+                    w[0] >= w[1] * 0.98,
+                    "{cpu}/pf={pf}: bandwidth must degrade with CXL share \
+                     ({bws:?})"
+                );
+            }
+            assert!(
+                bws[0] > bws[4] * 2.0,
+                "{cpu}/pf={pf}: all-DRAM must clearly beat all-CXL ({bws:?})"
+            );
+        }
+        // pf=off: capacity-dominated demand misses, ratio-independent.
+        let m_dram = at(cpu, false, wss_hi, "100:0").llc_miss;
+        let m_cxl = at(cpu, false, wss_hi, "0:100").llc_miss;
+        assert!(m_dram > 0.95 && m_cxl > 0.95, "{cpu}: streaming at 8xL2 \
+                 with no prefetch must defeat LRU ({m_dram}, {m_cxl})");
+        // pf=on: stride prefetching collapses demand misses.
+        let p_dram = at(cpu, true, wss_hi, "100:0").llc_miss;
+        assert!(
+            p_dram < 0.2,
+            "{cpu}: prefetcher must cover streaming ({p_dram})"
+        );
+    }
+    // CPU-model contrast (Fig. 5 plots both): the in-order core's one
+    // outstanding access makes L1 unit-stride reuse visible (~12.5%
+    // miss), while O3's run-ahead turns reuse into MSHR merges.
+    let t_l1 = at("Timing", true, wss_hi, "50:50").l1_miss;
+    let o_l1 = at("O3", true, wss_hi, "50:50").l1_miss;
+    assert!(
+        t_l1 < 0.3 && o_l1 > 0.5,
+        "CPU models must differ in L1 behaviour (Timing {t_l1}, O3 {o_l1})"
+    );
+    println!("\nfig5_stream_missrate: shape assertions hold");
+}

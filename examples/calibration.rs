@@ -1,0 +1,60 @@
+//! Latency-bandwidth calibration walkthrough (paper §III-B.2 / §V):
+//! "measure" three synthetic vendor cards, fit the differentiable link
+//! model to each via the AOT-compiled fwd+grad artifact, and show the
+//! calibrated simulator knobs. Requires `make artifacts`.
+//!
+//! Run: `cargo run --release --example calibration`
+
+use cxlramsim::calibrate::{hwref, Fitter};
+use cxlramsim::config::SimConfig;
+use cxlramsim::runtime::XlaRuntime;
+use cxlramsim::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    cxlramsim::util::logger::init();
+    let rt = XlaRuntime::load(std::path::Path::new("artifacts"))?;
+    println!(
+        "PJRT platform: {} (artifacts: window={}, calib_points={})\n",
+        rt.platform(),
+        rt.manifest.window,
+        rt.manifest.calib_points
+    );
+
+    let cfg = SimConfig::default();
+    let fitter = Fitter::default();
+    let mut t = Table::new(
+        "Per-vendor link calibration (fit vs synthetic silicon)",
+        &[
+            "card", "idle ns (true)", "sat GB/s (true)", "iters",
+            "rms ns", "fit pkt ns", "fit bw GB/s",
+        ],
+    );
+    for (i, card) in hwref::CARDS.iter().enumerate() {
+        let loads =
+            hwref::load_grid(rt.manifest.calib_points, card.sat_bw_gbps);
+        let meas = hwref::measure(card, &loads, 0.02, 42 + i as u64);
+        let report =
+            fitter.fit(&rt, Fitter::seed_from(&cfg.cxl), &loads, &meas)?;
+        let mut cal = cfg.cxl.clone();
+        Fitter::apply(&report.fitted, &mut cal);
+        t.row(&[
+            card.name.to_string(),
+            format!("{:.0}", card.idle_lat_ns),
+            format!("{:.0}", card.sat_bw_gbps),
+            report.iterations.to_string(),
+            format!("{:.2}", report.rms_ns),
+            format!("{:.1}", cal.pkt_lat_ns),
+            format!("{:.1}", cal.link_bw_gbps),
+        ]);
+        // The fitted curve must reproduce the measurement well.
+        assert!(
+            report.rms_ns < 25.0,
+            "{}: rms {} ns too high",
+            card.name,
+            report.rms_ns
+        );
+    }
+    t.print();
+    println!("\nFitted parameters feed straight back into [cxl.*] config keys.");
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Fig.-5-style exploration: STREAM triad across working-set sizes and
+//! OS page-interleave ratios, for both CPU models — the paper's §IV
+//! characterization, as a library consumer would script it.
+//!
+//! Run: `cargo run --release --example stream_sweep`
+
+use cxlramsim::config::{CpuModel, SimConfig};
+use cxlramsim::coordinator::run_sweep;
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::system::Machine;
+use cxlramsim::util::bench::Table;
+use cxlramsim::workloads::{Stream, StreamKernel};
+
+#[derive(Clone)]
+struct Point {
+    cpu: CpuModel,
+    wss_mult: u64,
+    ratio_label: &'static str,
+    weights: Vec<(u32, u32)>,
+}
+
+fn main() -> anyhow::Result<()> {
+    cxlramsim::util::logger::init();
+    let ratios: [(&'static str, Vec<(u32, u32)>); 3] = [
+        ("100:0", vec![(0, 1)]),
+        ("50:50", vec![(0, 1), (1, 1)]),
+        ("0:100", vec![(1, 1)]),
+    ];
+    let mut points = Vec::new();
+    for cpu in [CpuModel::InOrder, CpuModel::OutOfOrder] {
+        for wss in [2u64, 4, 8] {
+            for (label, w) in &ratios {
+                points.push(Point {
+                    cpu,
+                    wss_mult: wss,
+                    ratio_label: label,
+                    weights: w.clone(),
+                });
+            }
+        }
+    }
+
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8);
+    let rows = run_sweep(points, threads, |p: Point| {
+        let mut cfg = SimConfig::default();
+        cfg.cpu_model = p.cpu;
+        cfg.cores = 1;
+        let mut m = Machine::new(cfg.clone()).expect("machine");
+        m.boot(ProgModel::Znuma).expect("boot");
+        let wl = Stream::for_wss(StreamKernel::Triad, cfg.l2.size, p.wss_mult);
+        m.attach_workloads(
+            vec![Box::new(wl)],
+            &MemPolicy::Interleave { weights: p.weights.clone() },
+        )
+        .expect("attach");
+        let s = m.run(None);
+        vec![
+            match p.cpu {
+                CpuModel::InOrder => "Timing".to_string(),
+                CpuModel::OutOfOrder => "O3".to_string(),
+            },
+            p.wss_mult.to_string(),
+            p.ratio_label.to_string(),
+            format!("{:.4}", s.l2_miss_rate),
+            format!("{:.2}", s.bandwidth_gbps),
+            format!("{:.0}", s.avg_lat_cxl_ns),
+        ]
+    });
+
+    let mut t = Table::new(
+        "STREAM triad: WSS x interleave x CPU model",
+        &["cpu", "wss(xL2)", "DRAM:CXL", "LLC miss", "GB/s", "CXL lat ns"],
+    );
+    for r in rows {
+        t.row(&r);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Programming-model demo (paper §IV): the same KV-cache-shaped
+//! workload under three memory-exposure strategies:
+//!   1. zNUMA + explicit tiering (hot keys bound to DRAM, cold to CXL),
+//!   2. zNUMA + naive bind-everything-to-CXL,
+//!   3. Flat mode (CXL merged with system RAM, first-touch spill).
+//!
+//! Shows why the zNUMA programming model the paper champions matters:
+//! the OS-visible node boundary is what lets software tier at all.
+//!
+//! Run: `cargo run --release --example znuma_tiering`
+
+use cxlramsim::config::SimConfig;
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::system::Machine;
+use cxlramsim::util::bench::Table;
+use cxlramsim::workloads::TieredKv;
+
+fn run(
+    label: &str,
+    model: ProgModel,
+    hot: MemPolicy,
+    cold: MemPolicy,
+    t: &mut Table,
+) -> anyhow::Result<()> {
+    let mut cfg = SimConfig::default();
+    cfg.cores = 1;
+    let mut m = Machine::new(cfg.clone())?;
+    m.boot(model)?;
+    let mut kv = TieredKv::new(8192, 256, 30_000, cfg.seed);
+    kv.hot_policy = hot;
+    kv.cold_policy = cold;
+    m.attach_workloads(vec![Box::new(kv)], &MemPolicy::Local { home: 0 })?;
+    let s = m.run(None);
+    t.row(&[
+        label.to_string(),
+        format!("{:.2}", s.bandwidth_gbps),
+        format!("{:.3}", s.seconds * 1e3),
+        s.dram_accesses.to_string(),
+        s.cxl_accesses.to_string(),
+        format!("{:.0}", s.avg_lat_cxl_ns),
+    ]);
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    cxlramsim::util::logger::init();
+    let mut t = Table::new(
+        "Tiered KV (80% hot hits) under three programming models",
+        &["model", "GB/s", "ms", "DRAM fills", "CXL fills", "CXL lat ns"],
+    );
+
+    run(
+        "znuma+tiering (hot->DRAM)",
+        ProgModel::Znuma,
+        MemPolicy::Bind { nodes: vec![0] },
+        MemPolicy::Bind { nodes: vec![1] },
+        &mut t,
+    )?;
+    run(
+        "znuma, all-on-CXL",
+        ProgModel::Znuma,
+        MemPolicy::Bind { nodes: vec![1] },
+        MemPolicy::Bind { nodes: vec![1] },
+        &mut t,
+    )?;
+    // Flat mode: no node boundary — the workload cannot express
+    // tiering; everything is "local" and spills by first touch.
+    run(
+        "flat mode (no tiering)",
+        ProgModel::Flat,
+        MemPolicy::Local { home: 0 },
+        MemPolicy::Local { home: 0 },
+        &mut t,
+    )?;
+    t.print();
+    println!(
+        "\nTiering on the zNUMA boundary keeps the hot set on DRAM; flat \
+         mode loses the distinction, bind-to-CXL pays full link latency."
+    );
+    Ok(())
+}

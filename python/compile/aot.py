@@ -1,0 +1,108 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()`` and NOT serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` rust crate) rejects; the HLO text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_cache_warm():
+    n = model.WINDOW
+    l1 = _i32(model.L1_SETS, model.L1_WAYS)
+    l2 = _i32(model.L2_SETS, model.L2_WAYS)
+    return jax.jit(model.cache_warm).lower(
+        _i32(n), _i32(n), _i32(1), l1, l1, l1, l1, l2, l2, l2, l2
+    )
+
+
+def lower_calib_step():
+    m = model.CALIB_POINTS
+    return jax.jit(model.calib_step).lower(_f32(5), _f32(m), _f32(m),
+                                           _f32(5))
+
+
+def lower_lat_bw_sweep():
+    return jax.jit(model.lat_bw_sweep).lower(_f32(5),
+                                             _f32(model.SWEEP_POINTS))
+
+
+ARTIFACTS = {
+    "cache_warm": lower_cache_warm,
+    "calib_step": lower_calib_step,
+    "lat_bw_sweep": lower_lat_bw_sweep,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for *.hlo.txt + manifest.json")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = {}
+    for name, lower in ARTIFACTS.items():
+        text = to_hlo_text(lower())
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "format": "hlo-text",
+        "window": model.WINDOW,
+        "l1_sets": model.L1_SETS,
+        "l1_ways": model.L1_WAYS,
+        "l2_sets": model.L2_SETS,
+        "l2_ways": model.L2_WAYS,
+        "calib_points": model.CALIB_POINTS,
+        "sweep_points": model.SWEEP_POINTS,
+        "artifacts": entries,
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .cache_probe import cache_probe  # noqa: F401
+from .latency_model import latency_curve  # noqa: F401

@@ -1,0 +1,157 @@
+"""Layer-1 Pallas kernel: vectorised set-associative cache probe/update.
+
+This is the compute hot-spot of CXLRAMSim's *functional fast-forward*
+("cache warming") path: given a window of N memory accesses it probes and
+updates one cache level's tag/LRU/dirty state and reports, per access,
+hit/miss plus any dirty victim line.
+
+Design notes (DESIGN.md §Hardware-Adaptation):
+  * The tag state (sets x ways) is the VMEM-resident operand; for the
+    default L2 geometry (1024 sets x 16 ways x 4 state words) it is
+    256 KiB -- VMEM-resident on a real TPU. BlockSpec keeps the whole
+    state in one block; the access stream is streamed through.
+  * The per-access associative search is a masked vector compare across
+    the ways dimension (VPU work, no MXU), so a window is processed with
+    a sequential fori_loop over accesses but full vectorisation over ways.
+  * The kernel MUST be lowered with interpret=True in this environment:
+    the CPU PJRT plugin cannot execute Mosaic custom-calls.
+
+State encoding (all int32):
+  tags[s, w]   -- tag value stored in way w of set s
+  valid[s, w]  -- 0/1
+  dirty[s, w]  -- 0/1
+  lru[s, w]    -- last-use timestamp; larger == more recently used
+
+Per-access outputs (int32):
+  hit[i]   -- 1 hit, 0 miss, -1 access skipped (mask[i] == 0)
+  wb[i]    -- line address of a dirty victim evicted by access i, else -1
+
+Addresses are *line* addresses (byte address >> log2(line)); int32 line
+addresses cover a 128 GiB physical space at 64 B lines.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_body(i, refs, num_sets):
+    """One access: probe, update LRU/dirty, evict+install on miss."""
+    (addr_ref, wr_ref, mask_ref, t0_ref,
+     tags_ref, valid_ref, dirty_ref, lru_ref, hit_ref, wb_ref) = refs
+
+    addr = addr_ref[i]
+    is_wr = wr_ref[i]
+    act = mask_ref[i]
+
+    set_idx = jax.lax.rem(addr, num_sets)
+    tag = jax.lax.div(addr, num_sets)
+    now = t0_ref[0] + i  # monotonic recency stamp within the window
+
+    row_tags = pl.load(tags_ref, (pl.dslice(set_idx, 1), slice(None)))[0]
+    row_valid = pl.load(valid_ref, (pl.dslice(set_idx, 1), slice(None)))[0]
+    row_dirty = pl.load(dirty_ref, (pl.dslice(set_idx, 1), slice(None)))[0]
+    row_lru = pl.load(lru_ref, (pl.dslice(set_idx, 1), slice(None)))[0]
+
+    hit_vec = (row_tags == tag) & (row_valid == 1)
+    is_hit = jnp.any(hit_vec)
+
+    # Victim selection: any invalid way first, else true-LRU (min stamp).
+    # Invalid ways are forced to stamp INT32_MIN so argmin picks them.
+    eff_lru = jnp.where(row_valid == 1, row_lru, jnp.int32(-0x7FFFFFFF))
+    victim_way = jnp.argmin(eff_lru).astype(jnp.int32)
+    hit_way = jnp.argmax(hit_vec).astype(jnp.int32)
+    way = jnp.where(is_hit, hit_way, victim_way)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, row_tags.shape, 0) == way
+    )
+
+    victim_valid = row_valid[victim_way] == 1
+    victim_dirty = row_dirty[victim_way] == 1
+    victim_line = row_tags[victim_way] * num_sets + set_idx
+    wb_line = jnp.where(
+        (~is_hit) & victim_valid & victim_dirty, victim_line, jnp.int32(-1)
+    )
+
+    new_tags = jnp.where(onehot, jnp.where(is_hit, row_tags, tag), row_tags)
+    new_valid = jnp.where(onehot, jnp.int32(1), row_valid)
+    # On a miss the installed line is dirty iff the access is a write
+    # (write-allocate); on a write hit the way turns dirty.
+    new_dirty = jnp.where(
+        onehot,
+        jnp.where(is_hit, row_dirty | is_wr, is_wr),
+        row_dirty,
+    )
+    new_lru = jnp.where(onehot, now, row_lru)
+
+    keep = act == 1
+    sel = lambda n, o: jnp.where(keep, n, o)[None]  # noqa: E731
+    pl.store(tags_ref, (pl.dslice(set_idx, 1), slice(None)),
+             sel(new_tags, row_tags))
+    pl.store(valid_ref, (pl.dslice(set_idx, 1), slice(None)),
+             sel(new_valid, row_valid))
+    pl.store(dirty_ref, (pl.dslice(set_idx, 1), slice(None)),
+             sel(new_dirty, row_dirty))
+    pl.store(lru_ref, (pl.dslice(set_idx, 1), slice(None)),
+             sel(new_lru, row_lru))
+
+    hit_out = jnp.where(keep, is_hit.astype(jnp.int32), jnp.int32(-1))
+    wb_out = jnp.where(keep, wb_line, jnp.int32(-1))
+    pl.store(hit_ref, (pl.dslice(i, 1),), hit_out[None])
+    pl.store(wb_ref, (pl.dslice(i, 1),), wb_out[None])
+    return refs
+
+
+def _cache_kernel(addr_ref, wr_ref, mask_ref, t0_ref,
+                  tags_in, valid_in, dirty_in, lru_in,
+                  hit_ref, wb_ref,
+                  tags_ref, valid_ref, dirty_ref, lru_ref,
+                  *, num_sets):
+    # Copy state in -> out, then update in place on the outputs.
+    tags_ref[...] = tags_in[...]
+    valid_ref[...] = valid_in[...]
+    dirty_ref[...] = dirty_in[...]
+    lru_ref[...] = lru_in[...]
+
+    n = addr_ref.shape[0]
+    refs = (addr_ref, wr_ref, mask_ref, t0_ref,
+            tags_ref, valid_ref, dirty_ref, lru_ref, hit_ref, wb_ref)
+    jax.lax.fori_loop(
+        0, n, functools.partial(_probe_body, num_sets=num_sets), refs
+    )
+
+
+def cache_probe(addrs, is_write, mask, t0, tags, valid, dirty, lru,
+                *, interpret=True):
+    """Probe/update one cache level for a window of accesses.
+
+    Args:
+      addrs:    int32[N] line addresses.
+      is_write: int32[N] 0/1.
+      mask:     int32[N] 1 = process access, 0 = skip.
+      t0:       int32[1] recency stamp base for this window.
+      tags, valid, dirty, lru: int32[S, W] state.
+
+    Returns:
+      (hit[N], wb[N], tags', valid', dirty', lru') -- all int32.
+    """
+    n = addrs.shape[0]
+    num_sets, num_ways = tags.shape
+    i32 = jnp.int32
+    out_shape = (
+        jax.ShapeDtypeStruct((n,), i32),
+        jax.ShapeDtypeStruct((n,), i32),
+        jax.ShapeDtypeStruct((num_sets, num_ways), i32),
+        jax.ShapeDtypeStruct((num_sets, num_ways), i32),
+        jax.ShapeDtypeStruct((num_sets, num_ways), i32),
+        jax.ShapeDtypeStruct((num_sets, num_ways), i32),
+    )
+    kern = functools.partial(_cache_kernel, num_sets=num_sets)
+    return pl.pallas_call(kern, out_shape=out_shape, interpret=interpret)(
+        addrs.astype(i32), is_write.astype(i32), mask.astype(i32),
+        t0.astype(i32), tags, valid, dirty, lru,
+    )

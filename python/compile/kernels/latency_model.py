@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: batched CXL latency-bandwidth curve evaluation.
+
+CXLRAMSim exposes the latencies of CXL packetization/de-packetization, the
+CXL buses and the device media at the configuration level so users can
+calibrate them against real hardware (paper SIII-B.2, SV). The loaded
+latency of a CXL.mem link is modeled as a smooth queueing curve:
+
+    lat(load) = base + 2*pkt + media + k * load / softplus(bw - load)
+
+where
+    base   -- root-complex + IOBus traversal (ns)
+    pkt    -- one packetization *or* de-packetization step (ns); the
+              factor 2 accounts for M2S packetize + S2M de-packetize
+    media  -- device-side media (DRAM on the expander) latency (ns)
+    bw     -- link saturation bandwidth (GB/s)
+    k      -- queueing sensitivity (ns * GB/s)
+
+The kernel evaluates the curve for a batch of offered loads; it is the
+inner loop of both the calibration fitter and the latency/bandwidth
+characterisation bench (E4). Element-wise VPU work, tiled by BlockSpec.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Parameter vector layout (f32[5]):
+P_BASE, P_PKT, P_MEDIA, P_BW, P_K = range(5)
+
+
+def _lat_kernel(params_ref, loads_ref, out_ref):
+    base = params_ref[P_BASE]
+    pkt = params_ref[P_PKT]
+    media = params_ref[P_MEDIA]
+    bw = params_ref[P_BW]
+    k = params_ref[P_K]
+    loads = loads_ref[...]
+    headroom = jax.nn.softplus(bw - loads) + 1e-3
+    out_ref[...] = base + 2.0 * pkt + media + k * loads / headroom
+
+
+def latency_curve(params, loads, *, interpret=True, block=256):
+    """Evaluate the loaded-latency curve.
+
+    Args:
+      params: f32[5] -- (base, pkt, media, bw, k).
+      loads:  f32[M] offered loads in GB/s; M must be a multiple of
+              `block` (pad with zeros otherwise).
+
+    Returns:
+      f32[M] latency in ns.
+    """
+    m = loads.shape[0]
+    if m % block != 0:
+        raise ValueError(f"loads length {m} not a multiple of block {block}")
+    grid = (m // block,)
+    return pl.pallas_call(
+        _lat_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((5,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=interpret,
+    )(params.astype(jnp.float32), loads.astype(jnp.float32))

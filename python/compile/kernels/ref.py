@@ -1,0 +1,103 @@
+"""Pure-python/numpy correctness oracles for the Pallas kernels.
+
+These are deliberately written in the most obvious possible style (dicts
+and loops) so they can serve as ground truth for both the Pallas kernels
+(pytest/hypothesis, build time) and the Rust detailed cache model
+(golden-trace files, see rust/tests/).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+INT32_MIN_SENTINEL = -0x7FFFFFFF
+
+
+def cache_probe_ref(addrs, is_write, mask, t0, tags, valid, dirty, lru):
+    """Reference set-associative probe/update. Mirrors cache_probe().
+
+    All arrays numpy int32; state arrays are copied, not mutated.
+    Returns (hit, wb, tags, valid, dirty, lru).
+    """
+    tags = np.array(tags, dtype=np.int64).copy()
+    valid = np.array(valid, dtype=np.int64).copy()
+    dirty = np.array(dirty, dtype=np.int64).copy()
+    lru = np.array(lru, dtype=np.int64).copy()
+    num_sets, num_ways = tags.shape
+    n = len(addrs)
+    hit_out = np.full(n, -1, dtype=np.int64)
+    wb_out = np.full(n, -1, dtype=np.int64)
+    t0 = int(np.asarray(t0).reshape(-1)[0])
+
+    for i in range(n):
+        if mask[i] == 0:
+            continue
+        addr = int(addrs[i])
+        s = addr % num_sets
+        tag = addr // num_sets
+        now = t0 + i
+
+        hit_way = None
+        for w in range(num_ways):
+            if valid[s, w] == 1 and tags[s, w] == tag:
+                hit_way = w
+                break
+
+        if hit_way is not None:
+            hit_out[i] = 1
+            lru[s, hit_way] = now
+            if is_write[i]:
+                dirty[s, hit_way] = 1
+        else:
+            hit_out[i] = 0
+            # victim: first invalid way, else min-LRU (ties -> lowest way)
+            eff = [
+                lru[s, w] if valid[s, w] == 1 else INT32_MIN_SENTINEL
+                for w in range(num_ways)
+            ]
+            victim = int(np.argmin(eff))
+            if valid[s, victim] == 1 and dirty[s, victim] == 1:
+                wb_out[i] = tags[s, victim] * num_sets + s
+            tags[s, victim] = tag
+            valid[s, victim] = 1
+            dirty[s, victim] = 1 if is_write[i] else 0
+            lru[s, victim] = now
+
+    to32 = lambda a: a.astype(np.int32)  # noqa: E731
+    return (to32(hit_out), to32(wb_out), to32(tags), to32(valid),
+            to32(dirty), to32(lru))
+
+
+def two_level_ref(addrs, is_write, t0, l1_state, l2_state):
+    """Reference for the composed L1->L2 warming model (model.cache_warm).
+
+    l1_state/l2_state: tuples (tags, valid, dirty, lru).
+    Returns (hit1, hit2, l1_state', l2_state').
+    L2 sees exactly the L1 misses (no writeback traffic -- documented
+    simplification of the warming path, DESIGN.md S20).
+    """
+    n = len(addrs)
+    ones = np.ones(n, dtype=np.int32)
+    hit1, _, *l1p = cache_probe_ref(addrs, is_write, ones, t0, *l1_state)
+    mask2 = (hit1 == 0).astype(np.int32)
+    hit2, _, *l2p = cache_probe_ref(addrs, is_write, mask2, t0, *l2_state)
+    return hit1, hit2, tuple(l1p), tuple(l2p)
+
+
+def latency_curve_ref(params, loads):
+    """Reference loaded-latency curve. Mirrors latency_curve()."""
+    params = np.asarray(params, dtype=np.float64)
+    loads = np.asarray(loads, dtype=np.float64)
+    base, pkt, media, bw, k = params
+    x = bw - loads
+    # float64 softplus matching jax.nn.softplus, then the +1e-3 floor
+    headroom = np.logaddexp(0.0, x) + 1e-3
+    return (base + 2.0 * pkt + media + k * loads / headroom).astype(
+        np.float32
+    )
+
+
+def calib_loss_ref(params, loads, lat_meas):
+    """Reference MSE loss for the calibration objective."""
+    pred = latency_curve_ref(params, loads).astype(np.float64)
+    return float(np.mean((pred - np.asarray(lat_meas, np.float64)) ** 2))

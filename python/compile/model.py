@@ -1,0 +1,106 @@
+"""Layer-2 JAX compute graphs for CXLRAMSim (build-time only).
+
+Two graphs are AOT-lowered to HLO text by aot.py and executed from the
+Rust coordinator via PJRT; Python never runs on the simulation path.
+
+  cache_warm   -- functional fast-forward of a two-level cache hierarchy
+                  over a window of accesses (calls the L1 Pallas kernel
+                  per level). The gem5 analogue is functional warming:
+                  CXLRAMSim-rs uses it to warm caches through OS boot and
+                  array-init phases before switching to the detailed
+                  event-driven model.
+  calib_step   -- one fused fwd+grad+SGD step of the differentiable CXL
+                  latency-bandwidth model against measured points (the
+                  paper's user-facing latency calibration mechanism).
+  lat_bw_sweep -- batched evaluation of the latency curve (the L1 Pallas
+                  latency kernel) for characterisation benches.
+
+Geometry constants here are the single source of truth; aot.py writes
+them into artifacts/manifest.json, and the Rust runtime validates its
+config against that manifest before using an artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cache_probe, latency_curve
+
+# --- Default AOT geometry (matches rust/src/config defaults; Table I) ----
+WINDOW = 4096          # accesses per fast-forward window
+L1_SETS, L1_WAYS = 64, 8      # 32 KiB / 64 B lines
+L2_SETS, L2_WAYS = 1024, 16   # 1 MiB / 64 B lines
+CALIB_POINTS = 32      # measured (load, latency) pairs per calib step
+SWEEP_POINTS = 256     # loads per characterisation sweep
+
+
+def cache_warm(addrs, is_write, t0,
+               l1_tags, l1_valid, l1_dirty, l1_lru,
+               l2_tags, l2_valid, l2_dirty, l2_lru):
+    """Two-level functional warming for one window.
+
+    L2 sees exactly the L1 misses (warming models the allocation path;
+    writeback traffic does not change L2 *presence* under inclusive
+    write-allocate assumptions -- DESIGN.md S20).
+
+    Returns a flat tuple:
+      (hit1[N], hit2[N],
+       l1_tags', l1_valid', l1_dirty', l1_lru',
+       l2_tags', l2_valid', l2_dirty', l2_lru')
+    """
+    n = addrs.shape[0]
+    ones = jnp.ones((n,), jnp.int32)
+    hit1, _wb1, l1t, l1v, l1d, l1l = cache_probe(
+        addrs, is_write, ones, t0, l1_tags, l1_valid, l1_dirty, l1_lru
+    )
+    mask2 = (hit1 == 0).astype(jnp.int32)
+    hit2, _wb2, l2t, l2v, l2d, l2l = cache_probe(
+        addrs, is_write, mask2, t0, l2_tags, l2_valid, l2_dirty, l2_lru
+    )
+    return (hit1, hit2, l1t, l1v, l1d, l1l, l2t, l2v, l2d, l2l)
+
+
+def _curve_jnp(params, loads):
+    """Differentiable twin of kernels.latency_model._lat_kernel.
+
+    The Pallas kernel is used on the (grad-free) sweep path; the calib
+    path needs jax.grad, so the identical formula is expressed in plain
+    jnp here. test_latency_model.py asserts the two match to fp32.
+    """
+    base, pkt, media, bw, k = (params[i] for i in range(5))
+    headroom = jax.nn.softplus(bw - loads) + 1e-3
+    return base + 2.0 * pkt + media + k * loads / headroom
+
+
+def calib_loss(params, loads, lat_meas):
+    pred = _curve_jnp(params, loads)
+    return jnp.mean((pred - lat_meas) ** 2)
+
+
+def calib_step(params, loads, lat_meas, lr):
+    """One sign-SGD step on the latency-model parameters.
+
+    Sign-SGD (p <- p - lr * sign(grad)) instead of raw SGD: the loss
+    landscape is badly scaled (the queueing term's gradient w.r.t. `bw`
+    explodes near the knee and vanishes far from it, and raw SGD
+    reliably diverges with bw -> 1e6). Sign steps are scale-free; the
+    Rust fitter owns the per-parameter step sizes and their decay
+    schedule, so convergence radius shrinks geometrically.
+
+    Args:
+      params:   f32[5] (base, pkt, media, bw, k).
+      loads:    f32[CALIB_POINTS] offered loads (GB/s).
+      lat_meas: f32[CALIB_POINTS] measured latencies (ns).
+      lr:       f32[5] per-parameter step sizes (ns / GB/s units).
+
+    Returns (params', loss[1]).
+    """
+    loss, grad = jax.value_and_grad(calib_loss)(params, loads, lat_meas)
+    new_params = params - lr * jnp.sign(grad)
+    return new_params, loss.reshape((1,))
+
+
+def lat_bw_sweep(params, loads):
+    """Latency curve over a load sweep, via the Pallas kernel."""
+    return (latency_curve(params, loads),)

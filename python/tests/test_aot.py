@@ -1,0 +1,51 @@
+"""AOT pipeline: lowering produces valid HLO text + manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered_texts():
+    return {name: aot.to_hlo_text(fn()) for name, fn in aot.ARTIFACTS.items()}
+
+
+def test_all_artifacts_lower(lowered_texts):
+    assert set(lowered_texts) == {"cache_warm", "calib_step", "lat_bw_sweep"}
+    for name, text in lowered_texts.items():
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_cache_warm_signature_shapes(lowered_texts):
+    t = lowered_texts["cache_warm"]
+    assert f"s32[{model.WINDOW}]" in t
+    assert f"s32[{model.L1_SETS},{model.L1_WAYS}]" in t
+    assert f"s32[{model.L2_SETS},{model.L2_WAYS}]" in t
+
+
+def test_calib_step_is_differentiable_graph(lowered_texts):
+    # The fused fwd+grad step must reference the 5-param vector.
+    t = lowered_texts["calib_step"]
+    assert "f32[5]" in t
+    assert f"f32[{model.CALIB_POINTS}]" in t
+
+
+def test_main_writes_files_and_manifest(tmp_path, monkeypatch):
+    out = tmp_path / "arts"
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--out", str(out)]
+    )
+    aot.main()
+    man = json.loads((out / "manifest.json").read_text())
+    assert man["format"] == "hlo-text"
+    assert man["window"] == model.WINDOW
+    for name, meta in man["artifacts"].items():
+        p = out / meta["file"]
+        assert p.exists(), name
+        assert p.stat().st_size == meta["bytes"]
+    assert len(man["artifacts"]) == 3
+    assert os.listdir(out)  # non-empty

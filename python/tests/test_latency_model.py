@@ -1,0 +1,59 @@
+"""Latency-model Pallas kernel vs the numpy oracle and the jnp twin."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.latency_model import latency_curve
+from compile.kernels.ref import latency_curve_ref
+
+
+def params_strategy():
+    f = lambda lo, hi: st.floats(lo, hi, allow_nan=False)  # noqa: E731
+    return st.tuples(f(1, 300), f(1, 100), f(10, 300), f(4, 64), f(1, 100))
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=params_strategy(), seed=st.integers(0, 10**6))
+def test_kernel_matches_ref(p, seed):
+    rng = np.random.default_rng(seed)
+    params = np.array(p, np.float32)
+    loads = rng.uniform(0.05, p[3] * 1.5, 256).astype(np.float32)
+    k = np.asarray(latency_curve(jnp.asarray(params), jnp.asarray(loads)))
+    r = latency_curve_ref(params, loads)
+    np.testing.assert_allclose(k, r, rtol=2e-5, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=params_strategy())
+def test_kernel_matches_jnp_twin(p):
+    """The grad-capable jnp twin must be numerically identical to the
+    Pallas kernel — the calibration path depends on it."""
+    params = np.array(p, np.float32)
+    loads = np.linspace(0.1, p[3] * 1.3, 256).astype(np.float32)
+    k = np.asarray(latency_curve(jnp.asarray(params), jnp.asarray(loads)))
+    j = np.asarray(model._curve_jnp(jnp.asarray(params), jnp.asarray(loads)))
+    np.testing.assert_allclose(k, j, rtol=1e-6, atol=1e-3)
+
+
+def test_monotone_in_load():
+    params = jnp.array([80.0, 25.0, 110.0, 28.0, 40.0], jnp.float32)
+    loads = jnp.linspace(0.1, 27.0, 256)
+    lat = np.asarray(latency_curve(params, loads))
+    assert np.all(np.diff(lat) >= -1e-3)
+
+
+def test_block_divisibility_enforced():
+    params = jnp.zeros(5, jnp.float32)
+    with pytest.raises(ValueError):
+        latency_curve(params, jnp.zeros(100, jnp.float32))
+
+
+def test_unloaded_latency_is_fixed_costs():
+    params = np.array([80.0, 25.0, 110.0, 28.0, 40.0], np.float32)
+    loads = np.full(256, 0.01, np.float32)
+    lat = np.asarray(latency_curve(jnp.asarray(params), jnp.asarray(loads)))
+    # base + 2*pkt + media = 240, queue term ~ 0 at tiny load.
+    assert abs(lat[0] - 240.0) < 1.0

@@ -1,0 +1,110 @@
+"""L2 graphs: two-level warming composition + calibration step."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import (calib_loss_ref, latency_curve_ref,
+                                 two_level_ref)
+
+
+def small_states(S1=8, W1=2, S2=16, W2=4):
+    z1 = np.zeros((S1, W1), np.int32)
+    z2 = np.zeros((S2, W2), np.int32)
+    return ((z1, z1, z1, z1), (z2, z2, z2, z2))
+
+
+def run_warm(addrs, wr, t0, l1, l2):
+    out = model.cache_warm(
+        jnp.asarray(addrs, jnp.int32), jnp.asarray(wr, jnp.int32),
+        jnp.asarray([t0], jnp.int32),
+        *[jnp.asarray(x) for x in l1], *[jnp.asarray(x) for x in l2],
+    )
+    return [np.asarray(o) for o in out]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 64))
+def test_two_level_matches_ref(seed, n):
+    rng = np.random.default_rng(seed)
+    addrs = rng.integers(0, 128, n).astype(np.int32)
+    wr = rng.integers(0, 2, n).astype(np.int32)
+    l1, l2 = small_states()
+    out = run_warm(addrs, wr, 7, l1, l2)
+    rh1, rh2, rl1, rl2 = two_level_ref(addrs, wr, [7], l1, l2)
+    np.testing.assert_array_equal(out[0], rh1, "hit1")
+    np.testing.assert_array_equal(out[1], rh2, "hit2")
+    for o, r, n_ in zip(out[2:6], rl1, ["t", "v", "d", "l"]):
+        np.testing.assert_array_equal(o, r, f"l1.{n_}")
+    for o, r, n_ in zip(out[6:10], rl2, ["t", "v", "d", "l"]):
+        np.testing.assert_array_equal(o, r, f"l2.{n_}")
+
+
+def test_l2_sees_only_l1_misses():
+    l1, l2 = small_states()
+    # Same address twice: second L1-hits, so L2 sees exactly one access.
+    out = run_warm([5, 5], [0, 0], 0, l1, l2)
+    hit1, hit2 = out[0], out[1]
+    assert list(hit1) == [0, 1]
+    assert hit2[0] == 0  # L2 cold miss
+    assert hit2[1] == -1  # masked: L1 hit never reaches L2
+
+
+def test_inclusion_after_warming():
+    rng = np.random.default_rng(0)
+    l1, l2 = small_states()
+    addrs = rng.integers(0, 64, 200).astype(np.int32)
+    out = run_warm(addrs, np.zeros(200, np.int32), 0, l1, l2)
+    l1_tags, l1_valid = out[2], out[3]
+    l2_tags, l2_valid = out[6], out[7]
+    S1, S2 = l1_tags.shape[0], l2_tags.shape[0]
+    resident_l2 = {
+        int(l2_tags[s, w]) * S2 + s
+        for s in range(S2)
+        for w in range(l2_tags.shape[1])
+        if l2_valid[s, w]
+    }
+    for s in range(S1):
+        for w in range(l1_tags.shape[1]):
+            if l1_valid[s, w]:
+                line = int(l1_tags[s, w]) * S1 + s
+                assert line in resident_l2, f"L1 line {line} not in L2"
+
+
+def test_calib_step_matches_ref_loss_and_descends():
+    p = jnp.array([50.0, 10.0, 80.0, 20.0, 10.0], jnp.float32)
+    loads = np.linspace(0.5, 25.0, model.CALIB_POINTS).astype(np.float32)
+    target = latency_curve_ref(
+        np.array([80.0, 25.0, 110.0, 28.0, 40.0]), loads
+    )
+    lr = jnp.array([1e-2, 1e-2, 1e-2, 1e-2, 1e-3], jnp.float32)
+    p1, loss1 = model.calib_step(p, jnp.asarray(loads), jnp.asarray(target), lr)
+    ref_loss = calib_loss_ref(np.asarray(p), loads, target)
+    assert abs(float(loss1[0]) - ref_loss) / ref_loss < 1e-4
+    _, loss2 = model.calib_step(
+        p1, jnp.asarray(loads), jnp.asarray(target), lr
+    )
+    assert float(loss2[0]) < float(loss1[0])
+
+
+def test_calib_grad_matches_finite_difference():
+    loads = jnp.linspace(0.5, 20.0, model.CALIB_POINTS)
+    target = jnp.full((model.CALIB_POINTS,), 200.0)
+    p = jnp.array([50.0, 10.0, 80.0, 25.0, 10.0], jnp.float32)
+    g = jax.grad(model.calib_loss)(p, loads, target)
+    eps = 1e-2
+    for i in range(5):
+        dp = jnp.zeros(5).at[i].set(eps)
+        fd = (model.calib_loss(p + dp, loads, target)
+              - model.calib_loss(p - dp, loads, target)) / (2 * eps)
+        assert abs(float(g[i]) - float(fd)) < max(1e-2, abs(float(fd)) * 0.05)
+
+
+def test_lat_bw_sweep_shape():
+    p = jnp.array([80.0, 25.0, 110.0, 28.0, 40.0], jnp.float32)
+    loads = jnp.linspace(0.1, 30.0, model.SWEEP_POINTS)
+    (lat,) = model.lat_bw_sweep(p, loads)
+    assert lat.shape == (model.SWEEP_POINTS,)

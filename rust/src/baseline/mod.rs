@@ -1,0 +1,55 @@
+//! Baseline: membus-attached CXL (the CXL-DMSim / SimCXL architecture,
+//! paper Fig. 1A) for the E3 ablation.
+//!
+//! The baseline's *mechanism* lives in the machine
+//! (`CxlAttach::MemBus` short-circuits the IOBus/RC/link path into a
+//! fixed-latency adder on the membus); this module provides the
+//! config constructors and documents what the baseline deliberately
+//! gets wrong relative to the architecturally-correct IOBus attach:
+//!
+//! * no CXL.io surface (device would enumerate as a PCI memory
+//!   controller -> kernel must be patched; we keep the registers but
+//!   nothing routes through them),
+//! * no M2S/S2M packetization, flit framing or credit back-pressure,
+//! * no IOBus sharing/contention with other I/O traffic,
+//! * protocol latencies collapse into one constant, so loaded latency
+//!   under-estimates at high intensity (no queueing in the link).
+
+use crate::config::{CxlAttach, SimConfig};
+
+/// The paper's system: expander behind the root complex on the IOBus.
+pub fn iobus_config() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.cxl.attach = CxlAttach::IoBus;
+    c
+}
+
+/// The baseline: expander directly on the membus (Fig. 1A).
+pub fn membus_config() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.cxl.attach = CxlAttach::MemBus;
+    c
+}
+
+/// Derive the membus-attached twin of an arbitrary config (same sizes,
+/// latencies and workload surface — only the attach point differs).
+pub fn membus_twin(cfg: &SimConfig) -> SimConfig {
+    let mut c = cfg.clone();
+    c.cxl.attach = CxlAttach::MemBus;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twins_differ_only_in_attach() {
+        let a = iobus_config();
+        let b = membus_twin(&a);
+        assert_eq!(a.cxl.attach, CxlAttach::IoBus);
+        assert_eq!(b.cxl.attach, CxlAttach::MemBus);
+        assert_eq!(a.cxl.mem_size, b.cxl.mem_size);
+        assert_eq!(a.cxl.link_lat_ns, b.cxl.link_lat_ns);
+    }
+}

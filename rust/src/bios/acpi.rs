@@ -1,0 +1,299 @@
+//! ACPI table builders — real binary layouts with checksums.
+//!
+//! The guest OS model parses these *bytes* (signature, length, checksum,
+//! field offsets per the ACPI 6.5 spec), exactly as Linux would; nothing
+//! is passed out-of-band. Tables produced: RSDP, XSDT, FADT (DSDT
+//! pointer), MADT, MCFG, SRAT and the CXL 2.0 CEDT (CHBS + CFMWS).
+
+/// Compute the value that makes the byte sum zero.
+pub fn checksum_fix(bytes: &[u8], at: usize) -> u8 {
+    let sum: u8 = bytes
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != at)
+        .fold(0u8, |a, (_, b)| a.wrapping_add(*b));
+    0u8.wrapping_sub(sum)
+}
+
+pub fn table_checksum_ok(bytes: &[u8]) -> bool {
+    bytes.iter().fold(0u8, |a, b| a.wrapping_add(*b)) == 0
+}
+
+/// Standard 36-byte SDT header; returns the full table with checksum.
+pub fn sdt(signature: &[u8; 4], revision: u8, payload: &[u8]) -> Vec<u8> {
+    let len = 36 + payload.len();
+    let mut t = Vec::with_capacity(len);
+    t.extend_from_slice(signature);
+    t.extend_from_slice(&(len as u32).to_le_bytes());
+    t.push(revision);
+    t.push(0); // checksum placeholder
+    t.extend_from_slice(b"CXLRS "); // OEMID (6)
+    t.extend_from_slice(b"RAMSIM  "); // OEM table id (8)
+    t.extend_from_slice(&1u32.to_le_bytes()); // OEM revision
+    t.extend_from_slice(b"CSIM"); // creator id
+    t.extend_from_slice(&1u32.to_le_bytes()); // creator revision
+    t.extend_from_slice(payload);
+    let c = checksum_fix(&t, 9);
+    t[9] = c;
+    t
+}
+
+/// RSDP v2 (36 bytes) pointing at the XSDT.
+pub fn rsdp(xsdt_addr: u64) -> Vec<u8> {
+    let mut r = Vec::with_capacity(36);
+    r.extend_from_slice(b"RSD PTR "); // signature (8)
+    r.push(0); // checksum placeholder (covers first 20 bytes)
+    r.extend_from_slice(b"CXLRS "); // OEMID
+    r.push(2); // revision: ACPI 2.0+
+    r.extend_from_slice(&0u32.to_le_bytes()); // rsdt (legacy, unused)
+    r.extend_from_slice(&36u32.to_le_bytes()); // length
+    r.extend_from_slice(&xsdt_addr.to_le_bytes());
+    r.push(0); // extended checksum placeholder
+    r.extend_from_slice(&[0u8; 3]); // reserved
+    let c20 = checksum_fix(&r[..20], 8);
+    r[8] = c20;
+    let cext = checksum_fix(&r, 32);
+    r[32] = cext;
+    r
+}
+
+/// XSDT: array of 64-bit table pointers.
+pub fn xsdt(entries: &[u64]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(entries.len() * 8);
+    for e in entries {
+        p.extend_from_slice(&e.to_le_bytes());
+    }
+    sdt(b"XSDT", 1, &p)
+}
+
+/// FADT carrying the DSDT pointer (fields we need: DSDT @36, X_DSDT
+/// @140; table padded to 276 bytes of ACPI 6 FADT).
+pub fn fadt(dsdt_addr: u64) -> Vec<u8> {
+    let mut p = vec![0u8; 276 - 36];
+    // offset within payload = absolute - 36.
+    p[0..4].copy_from_slice(&(dsdt_addr as u32).to_le_bytes()); // DSDT
+    p[140 - 36..148 - 36].copy_from_slice(&dsdt_addr.to_le_bytes()); // X_DSDT
+    sdt(b"FACP", 6, &p)
+}
+
+/// MADT: local-APIC base + one Processor Local APIC entry per core.
+pub fn madt(cores: usize) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&0xFEE0_0000u32.to_le_bytes()); // local APIC addr
+    p.extend_from_slice(&1u32.to_le_bytes()); // flags: PC-AT compatible
+    for id in 0..cores as u8 {
+        p.push(0); // type 0: processor local APIC
+        p.push(8); // length
+        p.push(id); // ACPI processor uid
+        p.push(id); // APIC id
+        p.extend_from_slice(&1u32.to_le_bytes()); // enabled
+    }
+    sdt(b"APIC", 5, &p)
+}
+
+/// MCFG: one ECAM allocation (base, segment 0, bus range).
+pub fn mcfg(ecam_base: u64, start_bus: u8, end_bus: u8) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&[0u8; 8]); // reserved
+    p.extend_from_slice(&ecam_base.to_le_bytes());
+    p.extend_from_slice(&0u16.to_le_bytes()); // segment
+    p.push(start_bus);
+    p.push(end_bus);
+    p.extend_from_slice(&[0u8; 4]); // reserved
+    sdt(b"MCFG", 1, &p)
+}
+
+/// SRAT memory-affinity flags.
+pub const SRAT_MEM_ENABLED: u32 = 1 << 0;
+pub const SRAT_MEM_HOTPLUG: u32 = 1 << 1;
+
+pub struct SratMem {
+    pub domain: u32,
+    pub base: u64,
+    pub length: u64,
+    pub flags: u32,
+}
+
+/// SRAT: processor entries (all in domain 0) + memory ranges.
+pub fn srat(cores: usize, mems: &[SratMem]) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&1u32.to_le_bytes()); // reserved (must be 1)
+    p.extend_from_slice(&[0u8; 8]);
+    for id in 0..cores as u8 {
+        p.push(0); // type 0: processor local APIC affinity
+        p.push(16);
+        p.push(0); // proximity domain [7:0] = 0
+        p.push(id); // APIC id
+        p.extend_from_slice(&1u32.to_le_bytes()); // enabled
+        p.extend_from_slice(&[0u8; 8]);
+    }
+    for m in mems {
+        p.push(1); // type 1: memory affinity
+        p.push(40);
+        p.extend_from_slice(&m.domain.to_le_bytes());
+        p.extend_from_slice(&[0u8; 2]); // reserved
+        p.extend_from_slice(&m.base.to_le_bytes());
+        p.extend_from_slice(&m.length.to_le_bytes());
+        p.extend_from_slice(&[0u8; 4]); // reserved
+        p.extend_from_slice(&m.flags.to_le_bytes());
+        p.extend_from_slice(&[0u8; 8]); // reserved
+    }
+    sdt(b"SRAT", 3, &p)
+}
+
+/// CEDT — CXL Early Discovery Table (CXL 2.0 §9.14.1).
+pub struct Chbs {
+    pub uid: u32,
+    /// 0 = CXL 1.1, 1 = CXL 2.0 (register block is component regs).
+    pub cxl_version: u32,
+    pub base: u64,
+    pub length: u64,
+}
+
+pub struct Cfmws {
+    pub base_hpa: u64,
+    pub window_size: u64,
+    /// Host-bridge UIDs participating (SLD: one entry).
+    pub targets: Vec<u32>,
+    /// HBIG: interleave granularity encoding (0 = 256 B).
+    pub granularity: u16,
+    /// Restrictions bitfield: bit2 = volatile, bit3 = persistent.
+    pub restrictions: u16,
+    pub qtg_id: u16,
+}
+
+pub fn cedt(chbs: &[Chbs], cfmws: &[Cfmws]) -> Vec<u8> {
+    let mut p = Vec::new();
+    for c in chbs {
+        p.push(0); // structure type 0: CHBS
+        p.push(0); // reserved
+        p.extend_from_slice(&32u16.to_le_bytes()); // record length
+        p.extend_from_slice(&c.uid.to_le_bytes());
+        p.extend_from_slice(&c.cxl_version.to_le_bytes());
+        p.extend_from_slice(&[0u8; 4]); // reserved
+        p.extend_from_slice(&c.base.to_le_bytes());
+        p.extend_from_slice(&c.length.to_le_bytes());
+    }
+    for w in cfmws {
+        let niw = w.targets.len();
+        assert!(niw.is_power_of_two() && niw <= 16);
+        let len = 36 + 4 * niw;
+        p.push(1); // structure type 1: CFMWS
+        p.push(0);
+        p.extend_from_slice(&(len as u16).to_le_bytes());
+        p.extend_from_slice(&[0u8; 4]); // reserved
+        p.extend_from_slice(&w.base_hpa.to_le_bytes());
+        p.extend_from_slice(&w.window_size.to_le_bytes());
+        p.push((niw as f64).log2() as u8); // ENIW encoding
+        p.push(0); // interleave arithmetic: modulo
+        p.extend_from_slice(&[0u8; 2]);
+        p.extend_from_slice(&(w.granularity as u32).to_le_bytes());
+        p.extend_from_slice(&w.restrictions.to_le_bytes());
+        p.extend_from_slice(&w.qtg_id.to_le_bytes());
+        for t in &w.targets {
+            p.extend_from_slice(&t.to_le_bytes());
+        }
+    }
+    sdt(b"CEDT", 1, &p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sdt_checksums_to_zero() {
+        let t = sdt(b"TEST", 1, &[1, 2, 3, 4, 5]);
+        assert!(table_checksum_ok(&t));
+        assert_eq!(&t[0..4], b"TEST");
+        assert_eq!(u32::from_le_bytes(t[4..8].try_into().unwrap()), 41);
+    }
+
+    #[test]
+    fn rsdp_checksums() {
+        let r = rsdp(0x1234_5678_9ABC);
+        assert_eq!(&r[0..8], b"RSD PTR ");
+        assert!(r[..20].iter().fold(0u8, |a, b| a.wrapping_add(*b)) == 0);
+        assert!(table_checksum_ok(&r));
+        assert_eq!(
+            u64::from_le_bytes(r[24..32].try_into().unwrap()),
+            0x1234_5678_9ABC
+        );
+    }
+
+    #[test]
+    fn xsdt_entries_roundtrip() {
+        let t = xsdt(&[0x1000, 0x2000, 0x3000]);
+        assert!(table_checksum_ok(&t));
+        let n = (t.len() - 36) / 8;
+        assert_eq!(n, 3);
+        let e1 = u64::from_le_bytes(t[44..52].try_into().unwrap());
+        assert_eq!(e1, 0x2000);
+    }
+
+    #[test]
+    fn fadt_carries_dsdt_pointers() {
+        let t = fadt(0xABCD_0000);
+        assert!(table_checksum_ok(&t));
+        assert_eq!(
+            u32::from_le_bytes(t[36..40].try_into().unwrap()),
+            0xABCD_0000
+        );
+        assert_eq!(
+            u64::from_le_bytes(t[140..148].try_into().unwrap()),
+            0xABCD_0000
+        );
+        assert_eq!(t.len(), 276);
+    }
+
+    #[test]
+    fn madt_one_entry_per_core() {
+        let t = madt(4);
+        assert!(table_checksum_ok(&t));
+        assert_eq!((t.len() - 36 - 8) / 8, 4);
+    }
+
+    #[test]
+    fn srat_memory_entries() {
+        let t = srat(
+            2,
+            &[
+                SratMem { domain: 0, base: 0, length: 2 << 30, flags: SRAT_MEM_ENABLED },
+                SratMem {
+                    domain: 1,
+                    base: 4 << 30,
+                    length: 4 << 30,
+                    flags: SRAT_MEM_ENABLED | SRAT_MEM_HOTPLUG,
+                },
+            ],
+        );
+        assert!(table_checksum_ok(&t));
+        // 2 cpu entries (16B) + 2 mem entries (40B) + 12B static.
+        assert_eq!(t.len(), 36 + 12 + 32 + 80);
+    }
+
+    #[test]
+    fn cedt_chbs_cfmws_layout() {
+        let t = cedt(
+            &[Chbs { uid: 7, cxl_version: 1, base: 0xFE00_0000, length: 0x10000 }],
+            &[Cfmws {
+                base_hpa: 4 << 30,
+                window_size: 4 << 30,
+                targets: vec![7],
+                granularity: 0,
+                restrictions: 1 << 2,
+                qtg_id: 0,
+            }],
+        );
+        assert!(table_checksum_ok(&t));
+        assert_eq!(&t[0..4], b"CEDT");
+        // CHBS at 36: type 0, len 32.
+        assert_eq!(t[36], 0);
+        assert_eq!(u16::from_le_bytes(t[38..40].try_into().unwrap()), 32);
+        // CFMWS record follows.
+        assert_eq!(t[68], 1);
+        let base =
+            u64::from_le_bytes(t[68 + 8..68 + 16].try_into().unwrap());
+        assert_eq!(base, 4 << 30);
+    }
+}

@@ -1,0 +1,308 @@
+//! Mini-AML: encoder for the DSDT bytecode the BIOS emits and the
+//! interpreter subset the guest uses to walk it.
+//!
+//! The paper extends gem5's x86 BIOS with an "ACPI ML Interpreter" so
+//! the guest can parse dynamic tables (DSDT) that describe compute and
+//! memory heterogeneity. We implement the same idea end-to-end with a
+//! *real byte-code*: the encoder emits spec-conformant AML opcodes
+//! (DefScope 0x10, DefDevice 0x5B 0x82, DefName 0x08, String/DWord/
+//! Buffer data, PkgLength encoding per ACPI §20.2), and the guest-side
+//! interpreter in `guestos::acpi_parse` decodes them with no shared
+//! state. Supported subset: Scope / Device / Name with String, DWord,
+//! and Buffer (resource-template) data — enough to describe the CXL
+//! host bridge (`ACPI0016`), root-port windows and the MMIO windows for
+//! BAR assignment.
+
+/// ---- encoding --------------------------------------------------------
+
+/// Encode a PkgLength prefix (ACPI 6.5 §20.2.4) for `len` bytes of
+/// following content. Returns the prefix bytes; total package length
+/// includes the prefix itself, which is why encoding iterates.
+pub fn pkg_length(content_len: usize) -> Vec<u8> {
+    // Total = prefix_len + content_len must fit the encoding.
+    for prefix_len in 1..=4usize {
+        let total = prefix_len + content_len;
+        match prefix_len {
+            1 if total <= 0x3F => return vec![total as u8],
+            1 => continue,
+            n => {
+                let bits = (n - 1) * 8 + 4;
+                if total < (1usize << bits) {
+                    let mut v = Vec::with_capacity(n);
+                    v.push((((n - 1) as u8) << 6) | ((total & 0xF) as u8));
+                    let mut rest = total >> 4;
+                    for _ in 0..n - 1 {
+                        v.push((rest & 0xFF) as u8);
+                        rest >>= 8;
+                    }
+                    return v;
+                }
+            }
+        }
+    }
+    panic!("package too large for AML PkgLength");
+}
+
+/// Decode a PkgLength; returns (total_len, prefix_bytes).
+pub fn parse_pkg_length(b: &[u8]) -> (usize, usize) {
+    let lead = b[0];
+    let extra = (lead >> 6) as usize;
+    if extra == 0 {
+        ((lead & 0x3F) as usize, 1)
+    } else {
+        let mut total = (lead & 0xF) as usize;
+        for i in 0..extra {
+            total |= (b[1 + i] as usize) << (4 + 8 * i);
+        }
+        (total, 1 + extra)
+    }
+}
+
+/// A 4-char ACPI name segment, space-padded.
+pub fn nameseg(name: &str) -> [u8; 4] {
+    let mut s = [b'_'; 4];
+    for (i, c) in name.bytes().take(4).enumerate() {
+        s[i] = c.to_ascii_uppercase();
+    }
+    s
+}
+
+/// EISA ID compression for _HID values like "PNP0A08" / "ACPI0016"
+/// (7-char form c1c2c3 + 4 hex digits).
+pub fn eisa_id(id: &str) -> u32 {
+    let b = id.as_bytes();
+    assert_eq!(b.len(), 7, "EISA id must be 7 chars");
+    let c = |x: u8| (x - 0x40) as u32 & 0x1F;
+    let h = |x: u8| (x as char).to_digit(16).unwrap();
+    let sw = (c(b[0]) << 26)
+        | (c(b[1]) << 21)
+        | (c(b[2]) << 16)
+        | (h(b[3]) << 12)
+        | (h(b[4]) << 8)
+        | (h(b[5]) << 4)
+        | h(b[6]);
+    sw.swap_bytes()
+}
+
+/// AML data values we emit/interpret.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AmlData {
+    Str(String),
+    DWord(u32),
+    QWord(u64),
+    Buffer(Vec<u8>),
+}
+
+/// Namespace object builder.
+pub enum AmlObj {
+    Scope(String, Vec<AmlObj>),
+    Device(String, Vec<AmlObj>),
+    Name(String, AmlData),
+}
+
+pub fn encode(objs: &[AmlObj]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for o in objs {
+        encode_obj(o, &mut out);
+    }
+    out
+}
+
+fn encode_obj(o: &AmlObj, out: &mut Vec<u8>) {
+    match o {
+        AmlObj::Scope(name, kids) => {
+            let mut body = Vec::new();
+            body.extend_from_slice(&encode_namestring(name));
+            for k in kids {
+                encode_obj(k, &mut body);
+            }
+            out.push(0x10); // ScopeOp
+            out.extend_from_slice(&pkg_length(body.len()));
+            out.extend_from_slice(&body);
+        }
+        AmlObj::Device(name, kids) => {
+            let mut body = Vec::new();
+            body.extend_from_slice(&encode_namestring(name));
+            for k in kids {
+                encode_obj(k, &mut body);
+            }
+            out.push(0x5B); // ExtOpPrefix
+            out.push(0x82); // DeviceOp
+            out.extend_from_slice(&pkg_length(body.len()));
+            out.extend_from_slice(&body);
+        }
+        AmlObj::Name(name, data) => {
+            out.push(0x08); // NameOp
+            out.extend_from_slice(&encode_namestring(name));
+            encode_data(data, out);
+        }
+    }
+}
+
+fn encode_namestring(name: &str) -> Vec<u8> {
+    // Support "\\_SB" rooted and plain single segments.
+    let mut out = Vec::new();
+    let n = if let Some(rest) = name.strip_prefix('\\') {
+        out.push(b'\\');
+        rest
+    } else {
+        name
+    };
+    let segs: Vec<&str> = n.split('.').collect();
+    match segs.len() {
+        1 => out.extend_from_slice(&nameseg(segs[0])),
+        2 => {
+            out.push(0x2E); // DualNamePrefix
+            out.extend_from_slice(&nameseg(segs[0]));
+            out.extend_from_slice(&nameseg(segs[1]));
+        }
+        _ => panic!("multi-segment paths beyond 2 unsupported"),
+    }
+    out
+}
+
+fn encode_data(d: &AmlData, out: &mut Vec<u8>) {
+    match d {
+        AmlData::Str(s) => {
+            out.push(0x0D);
+            out.extend_from_slice(s.as_bytes());
+            out.push(0);
+        }
+        AmlData::DWord(v) => {
+            out.push(0x0C);
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        AmlData::QWord(v) => {
+            out.push(0x0E);
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        AmlData::Buffer(b) => {
+            // BufferOp PkgLength BufferSize(DWordConst) bytes
+            let mut size = Vec::new();
+            size.push(0x0C);
+            size.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            let content_len = size.len() + b.len();
+            out.push(0x11);
+            out.extend_from_slice(&pkg_length(content_len));
+            out.extend_from_slice(&size);
+            out.extend_from_slice(b);
+        }
+    }
+}
+
+/// ---- resource templates ------------------------------------------------
+
+/// QWordMemory descriptor (ACPI §6.4.3.5.1) for a _CRS buffer.
+pub fn qword_memory(min: u64, len: u64) -> Vec<u8> {
+    let mut d = Vec::with_capacity(0x2E);
+    d.push(0x8A); // QWORD address space descriptor
+    d.extend_from_slice(&0x2Bu16.to_le_bytes()); // length
+    d.push(0); // resource type: memory
+    d.push(0x0C); // general flags: min/max fixed... (producer)
+    d.push(0x01); // type-specific: read/write
+    d.extend_from_slice(&0u64.to_le_bytes()); // granularity
+    d.extend_from_slice(&min.to_le_bytes()); // range minimum
+    d.extend_from_slice(&(min + len - 1).to_le_bytes()); // range maximum
+    d.extend_from_slice(&0u64.to_le_bytes()); // translation
+    d.extend_from_slice(&len.to_le_bytes()); // length
+    d
+}
+
+/// End tag closing a resource template.
+pub fn end_tag() -> Vec<u8> {
+    vec![0x79, 0x00]
+}
+
+/// Parse all QWordMemory windows out of a _CRS buffer.
+pub fn parse_crs_memory(buf: &[u8]) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < buf.len() {
+        let b = buf[i];
+        if b == 0x79 {
+            break; // end tag
+        }
+        if b & 0x80 != 0 {
+            // Large descriptor.
+            let len =
+                u16::from_le_bytes([buf[i + 1], buf[i + 2]]) as usize;
+            if b == 0x8A && len >= 0x2B {
+                let g = |o: usize| {
+                    u64::from_le_bytes(
+                        buf[i + o..i + o + 8].try_into().unwrap(),
+                    )
+                };
+                let min = g(6 + 8);
+                let l = g(6 + 32);
+                out.push((min, l));
+            }
+            i += 3 + len;
+        } else {
+            // Small descriptor: low 3 bits = length.
+            i += 1 + (b & 0x7) as usize;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pkg_length_roundtrip() {
+        for content in [0usize, 1, 0x3D, 0x3E, 0x100, 0xFFF, 0x10000] {
+            let p = pkg_length(content);
+            let (total, plen) = parse_pkg_length(&p);
+            assert_eq!(plen, p.len());
+            assert_eq!(total, content + plen, "content={content}");
+        }
+    }
+
+    #[test]
+    fn eisa_id_known_values() {
+        // PNP0A08 == 0x080AD041 (little-endian dword in AML).
+        assert_eq!(eisa_id("PNP0A08"), 0x41D00A08u32.swap_bytes().swap_bytes().to_le().swap_bytes());
+        // Sanity: round-trip shape — first byte after swap is compressed 'P','N','P'.
+        let v = eisa_id("PNP0A08").to_le_bytes();
+        assert_eq!(v[0], 0x41); // "PNP" compresses to 0x41D0
+        assert_eq!(v[1], 0xD0);
+        assert_eq!(v[2], 0x0A);
+        assert_eq!(v[3], 0x08);
+    }
+
+    #[test]
+    fn nameseg_pads() {
+        assert_eq!(&nameseg("CXL0"), b"CXL0");
+        assert_eq!(&nameseg("SB"), b"SB__");
+    }
+
+    #[test]
+    fn qword_memory_parses_back() {
+        let mut crs = qword_memory(0xE000_0000, 0x1000_0000);
+        crs.extend(qword_memory(4 << 30, 4 << 30));
+        crs.extend(end_tag());
+        let ws = parse_crs_memory(&crs);
+        assert_eq!(
+            ws,
+            vec![(0xE000_0000, 0x1000_0000), (4 << 30, 4 << 30)]
+        );
+    }
+
+    #[test]
+    fn encode_emits_expected_opcodes() {
+        let aml = encode(&[AmlObj::Scope(
+            "\\_SB".into(),
+            vec![AmlObj::Device(
+                "PC00".into(),
+                vec![AmlObj::Name(
+                    "_HID".into(),
+                    AmlData::DWord(eisa_id("PNP0A08")),
+                )],
+            )],
+        )]);
+        assert_eq!(aml[0], 0x10); // ScopeOp
+        assert!(aml.windows(2).any(|w| w == [0x5B, 0x82])); // DeviceOp
+        assert!(aml.contains(&0x08)); // NameOp
+    }
+}

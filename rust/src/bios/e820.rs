@@ -1,0 +1,99 @@
+//! E820 physical memory map (the BIOS's first table, paper Fig. 2).
+
+/// E820 entry types (int 15h/AX=E820h ABI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum E820Type {
+    Usable = 1,
+    Reserved = 2,
+    AcpiReclaim = 3,
+    AcpiNvs = 4,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct E820Entry {
+    pub base: u64,
+    pub length: u64,
+    pub kind: E820Type,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct E820Map {
+    pub entries: Vec<E820Entry>,
+}
+
+impl E820Map {
+    pub fn add(&mut self, base: u64, length: u64, kind: E820Type) {
+        assert!(length > 0);
+        self.entries.push(E820Entry { base, length, kind });
+        self.entries.sort_by_key(|e| e.base);
+        // Overlap detection: BIOS bug if ranges collide.
+        for w in self.entries.windows(2) {
+            assert!(
+                w[0].base + w[0].length <= w[1].base,
+                "overlapping e820 entries"
+            );
+        }
+    }
+
+    /// Serialize in the 20-byte-per-entry boot-protocol format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.entries.len() * 20);
+        for e in &self.entries {
+            out.extend_from_slice(&e.base.to_le_bytes());
+            out.extend_from_slice(&e.length.to_le_bytes());
+            out.extend_from_slice(&(e.kind as u32).to_le_bytes());
+        }
+        out
+    }
+
+    pub fn parse(b: &[u8]) -> Self {
+        let mut m = E820Map::default();
+        for c in b.chunks_exact(20) {
+            let base = u64::from_le_bytes(c[0..8].try_into().unwrap());
+            let length = u64::from_le_bytes(c[8..16].try_into().unwrap());
+            let kind = match u32::from_le_bytes(c[16..20].try_into().unwrap())
+            {
+                1 => E820Type::Usable,
+                3 => E820Type::AcpiReclaim,
+                4 => E820Type::AcpiNvs,
+                _ => E820Type::Reserved,
+            };
+            m.entries.push(E820Entry { base, length, kind });
+        }
+        m
+    }
+
+    pub fn total_usable(&self) -> u64 {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == E820Type::Usable)
+            .map(|e| e.length)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = E820Map::default();
+        m.add(0, 640 << 10, E820Type::Usable);
+        m.add(0xE0000, 128 << 10, E820Type::AcpiReclaim);
+        m.add(1 << 20, 2 << 30, E820Type::Usable);
+        let b = m.to_bytes();
+        let p = E820Map::parse(&b);
+        assert_eq!(p.entries.len(), 3);
+        assert_eq!(p.total_usable(), (640 << 10) + (2 << 30));
+        assert_eq!(p.entries[1].kind, E820Type::AcpiReclaim);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping")]
+    fn overlaps_detected() {
+        let mut m = E820Map::default();
+        m.add(0, 4096, E820Type::Usable);
+        m.add(2048, 4096, E820Type::Usable);
+    }
+}

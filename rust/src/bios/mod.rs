@@ -1,0 +1,267 @@
+//! The x86 BIOS model (paper Fig. 2 — "Modeled X86 Bios in gem5 to
+//! support CXL2.0 devices").
+//!
+//! Assembles, as real bytes in simulated physical memory:
+//!   * the E820 physical memory map,
+//!   * RSDP -> XSDT -> { FADT(-> DSDT), MADT, MCFG, SRAT, CEDT },
+//!   * the DSDT's AML byte-code describing the PCIe host bridge
+//!     (PNP0A08) with its ECAM + MMIO windows and the CXL host bridge
+//!     (ACPI0016) with its component-register block.
+//!
+//! The guest OS model ([`crate::guestos`]) discovers everything by
+//! parsing these bytes — the BIOS and the guest share only the RSDP
+//! scan region, exactly like real firmware and kernel.
+
+pub mod acpi;
+pub mod aml;
+pub mod e820;
+
+use crate::config::SimConfig;
+use crate::mem::PhysMem;
+
+use acpi::{Cfmws, Chbs, SratMem};
+use aml::{AmlData, AmlObj};
+use e820::{E820Map, E820Type};
+
+/// Fixed platform addresses (the "motherboard wiring").
+pub mod layout {
+    /// RSDP lives in the classic BIOS search window.
+    pub const RSDP_ADDR: u64 = 0xE_0000;
+    /// ACPI tables are packed upward from here.
+    pub const ACPI_POOL: u64 = 0xE_1000;
+    /// E820 map bytes (as the bootloader would pass them).
+    pub const E820_ADDR: u64 = 0x9_0000;
+    /// ECAM window (8 buses x 1 MiB).
+    pub const ECAM_BASE: u64 = 0xE000_0000;
+    pub const ECAM_BUSES: u8 = 8;
+    /// MMIO window for BAR assignment.
+    pub const MMIO_BASE: u64 = 0xF000_0000;
+    pub const MMIO_SIZE: u64 = 0x0800_0000;
+    /// CXL host-bridge component register block (CHBS target).
+    pub const CHBS_BASE: u64 = 0xF000_0000;
+    pub const CHBS_SIZE: u64 = 0x1_0000;
+    /// CXL host bridge ACPI UID.
+    pub const CHB_UID: u32 = 7;
+}
+
+/// Everything the BIOS decided, for the machine builder's benefit
+/// (the guest does NOT get this struct — it parses memory).
+#[derive(Clone, Debug)]
+pub struct BiosInfo {
+    pub rsdp_addr: u64,
+    pub e820_addr: u64,
+    pub e820_len: usize,
+    pub ecam_base: u64,
+    pub cxl_window_base: u64,
+    pub cxl_window_size: u64,
+    pub tables_end: u64,
+}
+
+/// Place the CXL fixed memory window: above both 4 GiB and system DRAM,
+/// 1 GiB-aligned.
+pub fn cxl_window_base(sys_mem_size: u64) -> u64 {
+    let align = 1u64 << 30;
+    let min = 1u64 << 32;
+    let top = sys_mem_size.max(min);
+    top.div_ceil(align) * align
+}
+
+/// Build the BIOS into `mem` per `cfg`. Returns the placement info.
+pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
+    let cxl_base = cxl_window_base(cfg.sys_mem_size);
+    let cxl_size = cfg.cxl.mem_size;
+
+    // ---- E820 -----------------------------------------------------------
+    let mut e820 = E820Map::default();
+    e820.add(0, 640 << 10, E820Type::Usable);
+    e820.add(layout::RSDP_ADDR, 128 << 10, E820Type::AcpiReclaim);
+    e820.add(1 << 20, cfg.sys_mem_size - (1 << 20), E820Type::Usable);
+    // The CXL window is NOT in E820 — it appears via CEDT/SRAT and is
+    // hot-added by the driver; that asymmetry is the zNUMA mechanism.
+    let e820_bytes = e820.to_bytes();
+    mem.write(layout::E820_ADDR, &e820_bytes);
+
+    // ---- DSDT (AML) -------------------------------------------------------
+    let dsdt_aml = aml::encode(&[AmlObj::Scope(
+        "\\_SB".into(),
+        vec![
+            AmlObj::Device(
+                "PC00".into(),
+                vec![
+                    AmlObj::Name(
+                        "_HID".into(),
+                        AmlData::DWord(aml::eisa_id("PNP0A08")),
+                    ),
+                    AmlObj::Name("_UID".into(), AmlData::DWord(0)),
+                    AmlObj::Name("_CRS".into(), AmlData::Buffer({
+                        let mut b = aml::qword_memory(
+                            layout::ECAM_BASE,
+                            (layout::ECAM_BUSES as u64) << 20,
+                        );
+                        b.extend(aml::qword_memory(
+                            layout::MMIO_BASE,
+                            layout::MMIO_SIZE,
+                        ));
+                        b.extend(aml::end_tag());
+                        b
+                    })),
+                ],
+            ),
+            AmlObj::Device(
+                "CXL0".into(),
+                vec![
+                    // ACPI0016 — CXL host bridge (what linux's cxl_acpi
+                    // binds to).
+                    AmlObj::Name(
+                        "_HID".into(),
+                        AmlData::Str("ACPI0016".into()),
+                    ),
+                    AmlObj::Name(
+                        "_CID".into(),
+                        AmlData::DWord(aml::eisa_id("PNP0A08")),
+                    ),
+                    AmlObj::Name(
+                        "_UID".into(),
+                        AmlData::DWord(layout::CHB_UID),
+                    ),
+                    AmlObj::Name("_CRS".into(), AmlData::Buffer({
+                        let mut b = aml::qword_memory(
+                            layout::CHBS_BASE,
+                            layout::CHBS_SIZE,
+                        );
+                        b.extend(aml::end_tag());
+                        b
+                    })),
+                ],
+            ),
+        ],
+    )]);
+    let dsdt = acpi::sdt(b"DSDT", 2, &dsdt_aml);
+
+    // ---- fixed tables ------------------------------------------------------
+    let madt = acpi::madt(cfg.cores);
+    let mcfg = acpi::mcfg(layout::ECAM_BASE, 0, layout::ECAM_BUSES - 1);
+    let srat = acpi::srat(
+        cfg.cores,
+        &[
+            SratMem {
+                domain: 0,
+                base: 0,
+                length: cfg.sys_mem_size,
+                flags: acpi::SRAT_MEM_ENABLED,
+            },
+            // The zNUMA (CPU-less) domain for CXL memory: enabled +
+            // hot-pluggable, no processor affinity entries reference it.
+            SratMem {
+                domain: 1,
+                base: cxl_base,
+                length: cxl_size,
+                flags: acpi::SRAT_MEM_ENABLED | acpi::SRAT_MEM_HOTPLUG,
+            },
+        ],
+    );
+    let cedt = acpi::cedt(
+        &[Chbs {
+            uid: layout::CHB_UID,
+            cxl_version: 1, // CXL 2.0: block is component registers
+            base: layout::CHBS_BASE,
+            length: layout::CHBS_SIZE,
+        }],
+        &[Cfmws {
+            base_hpa: cxl_base,
+            window_size: cxl_size,
+            targets: vec![layout::CHB_UID],
+            granularity: 0,          // 256 B
+            restrictions: 1 << 2,    // volatile
+            qtg_id: 0,
+        }],
+    );
+
+    // ---- pack tables & pointers -----------------------------------------
+    let mut cursor = layout::ACPI_POOL;
+    let mut place = |mem: &mut PhysMem, bytes: &[u8]| -> u64 {
+        let at = cursor;
+        mem.write(at, bytes);
+        cursor = (at + bytes.len() as u64 + 63) & !63;
+        at
+    };
+    let dsdt_addr = place(mem, &dsdt);
+    let fadt = acpi::fadt(dsdt_addr);
+    let fadt_addr = place(mem, &fadt);
+    let madt_addr = place(mem, &madt);
+    let mcfg_addr = place(mem, &mcfg);
+    let srat_addr = place(mem, &srat);
+    let cedt_addr = place(mem, &cedt);
+    let xsdt = acpi::xsdt(&[
+        fadt_addr, madt_addr, mcfg_addr, srat_addr, cedt_addr,
+    ]);
+    let xsdt_addr = place(mem, &xsdt);
+    mem.write(layout::RSDP_ADDR, &acpi::rsdp(xsdt_addr));
+
+    BiosInfo {
+        rsdp_addr: layout::RSDP_ADDR,
+        e820_addr: layout::E820_ADDR,
+        e820_len: e820_bytes.len(),
+        ecam_base: layout::ECAM_BASE,
+        cxl_window_base: cxl_base,
+        cxl_window_size: cxl_size,
+        tables_end: cursor,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_placement() {
+        assert_eq!(cxl_window_base(2 << 30), 4 << 30);
+        assert_eq!(cxl_window_base(8 << 30), 8 << 30);
+        assert_eq!(cxl_window_base((8 << 30) + 5), (8 << 30) + (1 << 30));
+    }
+
+    #[test]
+    fn bios_builds_parseable_tables() {
+        let cfg = SimConfig::default();
+        let mut mem = PhysMem::new();
+        let info = build(&cfg, &mut mem);
+
+        // RSDP signature + checksum.
+        let mut rsdp = vec![0u8; 36];
+        mem.read(info.rsdp_addr, &mut rsdp);
+        assert_eq!(&rsdp[0..8], b"RSD PTR ");
+        assert!(acpi::table_checksum_ok(&rsdp));
+
+        // XSDT reachable and valid.
+        let xsdt_addr =
+            u64::from_le_bytes(rsdp[24..32].try_into().unwrap());
+        let len = mem.read_u32(xsdt_addr + 4) as usize;
+        let mut x = vec![0u8; len];
+        mem.read(xsdt_addr, &mut x);
+        assert_eq!(&x[0..4], b"XSDT");
+        assert!(acpi::table_checksum_ok(&x));
+        assert_eq!((len - 36) / 8, 5); // five tables
+
+        // E820 parses and covers system memory.
+        let mut e = vec![0u8; info.e820_len];
+        mem.read(info.e820_addr, &mut e);
+        let map = e820::E820Map::parse(&e);
+        assert!(map.total_usable() > (cfg.sys_mem_size * 9) / 10);
+    }
+
+    #[test]
+    fn signatures_present_exactly_once() {
+        let cfg = SimConfig::default();
+        let mut mem = PhysMem::new();
+        let info = build(&cfg, &mut mem);
+        let mut blob = vec![0u8; (info.tables_end - layout::ACPI_POOL) as usize];
+        mem.read(layout::ACPI_POOL, &mut blob);
+        for sig in [b"FACP", b"APIC", b"MCFG", b"SRAT", b"CEDT", b"DSDT"] {
+            let count = blob
+                .windows(4)
+                .filter(|w| w == sig)
+                .count();
+            assert_eq!(count, 1, "{}", String::from_utf8_lossy(sig));
+        }
+    }
+}

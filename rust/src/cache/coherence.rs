@@ -1,0 +1,134 @@
+//! MESI coherence states and transition table.
+//!
+//! The paper's Table I: "Cache Coherence — MESI (Two-level,
+//! Directory-based)". L1 caches hold MESI states; the shared L2 carries
+//! a directory ([`super::Directory`]) tracking which cores hold each line
+//! and in what mode. This module defines the states and the *legal*
+//! transitions; the event-driven protocol (who sends what when) lives in
+//! `system::coherence_flow`.
+
+/// Classic MESI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MesiState {
+    Modified,
+    Exclusive,
+    Shared,
+    Invalid,
+}
+
+impl MesiState {
+    pub fn readable(&self) -> bool {
+        *self != MesiState::Invalid
+    }
+
+    pub fn writable(&self) -> bool {
+        matches!(self, MesiState::Modified | MesiState::Exclusive)
+    }
+
+    /// True if the line holds (possibly) newer data than memory.
+    pub fn dirtyish(&self) -> bool {
+        *self == MesiState::Modified
+    }
+
+    pub fn short(&self) -> char {
+        match self {
+            MesiState::Modified => 'M',
+            MesiState::Exclusive => 'E',
+            MesiState::Shared => 'S',
+            MesiState::Invalid => 'I',
+        }
+    }
+}
+
+/// Coherence events a line can experience (local = this cache's CPU,
+/// remote = directory-forwarded from another core).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CohEvent {
+    LocalRead,
+    LocalWrite,
+    RemoteRead,
+    RemoteWrite,
+    Evict,
+}
+
+/// The MESI next-state function. Returns `None` for transitions that
+/// require a bus/directory transaction first (handled by the protocol
+/// layer), `Some(next)` for immediate transitions.
+pub fn next_state(cur: MesiState, ev: CohEvent) -> Option<MesiState> {
+    use CohEvent::*;
+    use MesiState::*;
+    match (cur, ev) {
+        // Hits that need no transaction:
+        (Modified, LocalRead) | (Modified, LocalWrite) => Some(Modified),
+        (Exclusive, LocalRead) => Some(Exclusive),
+        (Exclusive, LocalWrite) => Some(Modified), // silent upgrade
+        (Shared, LocalRead) => Some(Shared),
+        // Transactions required:
+        (Shared, LocalWrite) => None,  // upgrade (BusUpgr)
+        (Invalid, LocalRead) => None,  // fetch
+        (Invalid, LocalWrite) => None, // fetch-exclusive
+        // Snoops:
+        (Modified, RemoteRead) => Some(Shared), // flush + downgrade
+        (Exclusive, RemoteRead) => Some(Shared),
+        (Shared, RemoteRead) => Some(Shared),
+        (_, RemoteWrite) => Some(Invalid),
+        (_, Evict) => Some(Invalid),
+        (Invalid, RemoteRead) => Some(Invalid),
+    }
+}
+
+/// Protocol invariant check used by the property tests: at most one core
+/// in M/E, and M/E excludes any S elsewhere (SWMR).
+pub fn swmr_holds(states: &[MesiState]) -> bool {
+    let writers = states
+        .iter()
+        .filter(|s| matches!(s, MesiState::Modified | MesiState::Exclusive))
+        .count();
+    let readers = states
+        .iter()
+        .filter(|s| **s == MesiState::Shared)
+        .count();
+    writers <= 1 && (writers == 0 || readers == 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use MesiState::*;
+
+    #[test]
+    fn state_predicates() {
+        assert!(Modified.writable() && Modified.readable() && Modified.dirtyish());
+        assert!(Exclusive.writable() && !Exclusive.dirtyish());
+        assert!(Shared.readable() && !Shared.writable());
+        assert!(!Invalid.readable());
+    }
+
+    #[test]
+    fn silent_e_to_m() {
+        assert_eq!(next_state(Exclusive, CohEvent::LocalWrite), Some(Modified));
+    }
+
+    #[test]
+    fn transactions_required() {
+        assert_eq!(next_state(Shared, CohEvent::LocalWrite), None);
+        assert_eq!(next_state(Invalid, CohEvent::LocalRead), None);
+        assert_eq!(next_state(Invalid, CohEvent::LocalWrite), None);
+    }
+
+    #[test]
+    fn snoops_downgrade_and_invalidate() {
+        assert_eq!(next_state(Modified, CohEvent::RemoteRead), Some(Shared));
+        assert_eq!(next_state(Exclusive, CohEvent::RemoteWrite), Some(Invalid));
+        assert_eq!(next_state(Shared, CohEvent::RemoteWrite), Some(Invalid));
+    }
+
+    #[test]
+    fn swmr_checker() {
+        assert!(swmr_holds(&[Modified, Invalid, Invalid]));
+        assert!(swmr_holds(&[Shared, Shared, Invalid]));
+        assert!(!swmr_holds(&[Modified, Shared]));
+        assert!(!swmr_holds(&[Modified, Exclusive]));
+        assert!(swmr_holds(&[]));
+    }
+}

@@ -1,0 +1,227 @@
+//! Directory for the two-level MESI protocol.
+//!
+//! Lives logically at the shared L2: for every line cached above, track
+//! the owner/sharer set across cores. The system layer consults it to
+//! decide which invalidations/downgrades to issue; the property tests
+//! assert the SWMR invariant over (directory x L1 states).
+
+use crate::util::fxhash::FxHashMap;
+
+/// Directory entry state for one line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DirState {
+    /// No L1 holds the line.
+    Uncached,
+    /// Exactly one L1 holds it in M or E.
+    Owned { core: u8 },
+    /// One or more L1s hold it Shared (bitmask of cores).
+    Sharers { mask: u64 },
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Directory {
+    map: FxHashMap<u64, DirState>, // keyed by line address
+    pub invals_sent: u64,
+    pub downgrades_sent: u64,
+}
+
+/// Actions the protocol layer must perform before a request can proceed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DirAction {
+    /// Grant immediately (line uncached, or requester already owner).
+    Grant,
+    /// Downgrade the owner (remote read of an owned line), then grant
+    /// Shared to both.
+    DowngradeOwner { core: u8 },
+    /// Invalidate these cores (remote write / upgrade), then grant.
+    Invalidate { mask: u64 },
+}
+
+impl Directory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn state(&self, line: u64) -> DirState {
+        *self.map.get(&line).unwrap_or(&DirState::Uncached)
+    }
+
+    /// A core requests read access. Returns the required action; the
+    /// caller applies it and then calls `note_read`.
+    pub fn read_req(&mut self, line: u64, core: u8) -> DirAction {
+        match self.state(line) {
+            DirState::Uncached => DirAction::Grant,
+            DirState::Owned { core: o } if o == core => DirAction::Grant,
+            DirState::Owned { core: o } => {
+                self.downgrades_sent += 1;
+                DirAction::DowngradeOwner { core: o }
+            }
+            DirState::Sharers { .. } => DirAction::Grant,
+        }
+    }
+
+    /// A core requests write (exclusive) access.
+    pub fn write_req(&mut self, line: u64, core: u8) -> DirAction {
+        match self.state(line) {
+            DirState::Uncached => DirAction::Grant,
+            DirState::Owned { core: o } if o == core => DirAction::Grant,
+            DirState::Owned { core: o } => {
+                self.invals_sent += 1;
+                DirAction::Invalidate { mask: 1 << o }
+            }
+            DirState::Sharers { mask } => {
+                let others = mask & !(1u64 << core);
+                if others == 0 {
+                    DirAction::Grant
+                } else {
+                    self.invals_sent += others.count_ones() as u64;
+                    DirAction::Invalidate { mask: others }
+                }
+            }
+        }
+    }
+
+    /// Record that `core` now holds the line Shared (after a read grant).
+    /// If it was Uncached the core gets Exclusive (recorded as Owned) —
+    /// the standard E-state optimisation.
+    pub fn note_read(&mut self, line: u64, core: u8) -> bool {
+        match self.state(line) {
+            DirState::Uncached => {
+                self.map.insert(line, DirState::Owned { core });
+                true // granted Exclusive
+            }
+            DirState::Owned { core: o } if o == core => true,
+            DirState::Owned { core: o } => {
+                // After downgrade both are sharers.
+                let mask = (1u64 << o) | (1u64 << core);
+                self.map.insert(line, DirState::Sharers { mask });
+                false
+            }
+            DirState::Sharers { mask } => {
+                self.map
+                    .insert(line, DirState::Sharers { mask: mask | (1 << core) });
+                false
+            }
+        }
+    }
+
+    /// Record that `core` now owns the line (after a write grant).
+    pub fn note_write(&mut self, line: u64, core: u8) {
+        self.map.insert(line, DirState::Owned { core });
+    }
+
+    /// Record that `core` dropped the line (L1 eviction).
+    pub fn note_evict(&mut self, line: u64, core: u8) {
+        match self.state(line) {
+            DirState::Owned { core: o } if o == core => {
+                self.map.remove(&line);
+            }
+            DirState::Sharers { mask } => {
+                let m = mask & !(1u64 << core);
+                if m == 0 {
+                    self.map.remove(&line);
+                } else {
+                    self.map.insert(line, DirState::Sharers { mask: m });
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Drop the entry entirely (L2 eviction invalidated all L1 copies).
+    pub fn purge(&mut self, line: u64) {
+        self.map.remove(&line);
+    }
+
+    /// Import a line's ownership (fast-forward warm-state rebuild): the
+    /// warmed L1 holds the line M/E (`writable`) or S.
+    pub fn note_import(&mut self, line: u64, core: u8, writable: bool) {
+        if writable {
+            self.map.insert(line, DirState::Owned { core });
+            return;
+        }
+        let mask = match self.state(line) {
+            DirState::Sharers { mask } => mask | (1u64 << core),
+            DirState::Owned { core: o } => (1u64 << o) | (1u64 << core),
+            DirState::Uncached => 1u64 << core,
+        };
+        self.map.insert(line, DirState::Sharers { mask });
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    pub fn tracked_lines(&self) -> usize {
+        self.map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_reader_gets_exclusive() {
+        let mut d = Directory::new();
+        assert_eq!(d.read_req(100, 0), DirAction::Grant);
+        assert!(d.note_read(100, 0));
+        assert_eq!(d.state(100), DirState::Owned { core: 0 });
+    }
+
+    #[test]
+    fn second_reader_downgrades_owner() {
+        let mut d = Directory::new();
+        d.read_req(1, 0);
+        d.note_read(1, 0);
+        assert_eq!(d.read_req(1, 1), DirAction::DowngradeOwner { core: 0 });
+        assert!(!d.note_read(1, 1));
+        assert_eq!(d.state(1), DirState::Sharers { mask: 0b11 });
+        assert_eq!(d.downgrades_sent, 1);
+    }
+
+    #[test]
+    fn writer_invalidates_sharers() {
+        let mut d = Directory::new();
+        d.note_read(5, 0);
+        d.read_req(5, 1);
+        d.note_read(5, 1);
+        d.read_req(5, 2);
+        d.note_read(5, 2);
+        match d.write_req(5, 1) {
+            DirAction::Invalidate { mask } => {
+                assert_eq!(mask, (1 << 0) | (1 << 2));
+            }
+            a => panic!("expected invalidate, got {a:?}"),
+        }
+        d.note_write(5, 1);
+        assert_eq!(d.state(5), DirState::Owned { core: 1 });
+    }
+
+    #[test]
+    fn sole_sharer_upgrades_free() {
+        let mut d = Directory::new();
+        d.note_read(9, 0);
+        d.read_req(9, 1); // downgrade 0
+        d.note_read(9, 1);
+        d.note_evict(9, 0);
+        assert_eq!(d.write_req(9, 1), DirAction::Grant);
+    }
+
+    #[test]
+    fn evictions_clean_up() {
+        let mut d = Directory::new();
+        d.note_read(7, 0);
+        d.note_evict(7, 0);
+        assert_eq!(d.state(7), DirState::Uncached);
+        assert_eq!(d.tracked_lines(), 0);
+
+        d.note_read(8, 0);
+        d.read_req(8, 1);
+        d.note_read(8, 1);
+        d.note_evict(8, 0);
+        assert_eq!(d.state(8), DirState::Sharers { mask: 0b10 });
+        d.purge(8);
+        assert_eq!(d.state(8), DirState::Uncached);
+    }
+}

@@ -1,0 +1,129 @@
+//! Miss Status Holding Registers.
+//!
+//! Tracks outstanding line fetches so that (a) secondary misses to an
+//! in-flight line merge instead of re-requesting, and (b) the cache
+//! back-pressures when all registers are busy (the CPU models see this
+//! as a structural stall).
+
+use crate::sim::ReqId;
+
+#[derive(Clone, Debug)]
+pub struct Mshr {
+    pub line_addr: u64,
+    /// Requests (by id) waiting on this line; first is the primary miss.
+    pub waiters: Vec<ReqId>,
+    /// True if any merged request is a write (fill must be exclusive).
+    pub wants_exclusive: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct MshrFile {
+    capacity: usize,
+    entries: Vec<Mshr>,
+    pub merged: u64,
+    pub full_stalls: u64,
+}
+
+/// Result of registering a miss.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MshrAlloc {
+    /// New entry created — caller must send the fetch downstream.
+    Primary,
+    /// Merged into an existing in-flight fetch.
+    Secondary,
+    /// No free register — caller must stall and retry.
+    Full,
+}
+
+impl MshrFile {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        MshrFile { capacity, entries: Vec::new(), merged: 0, full_stalls: 0 }
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.entries.len() >= self.capacity
+    }
+
+    pub fn contains(&self, line_addr: u64) -> bool {
+        self.entries.iter().any(|m| m.line_addr == line_addr)
+    }
+
+    /// Register a miss for `line_addr` by request `id`.
+    pub fn allocate(
+        &mut self,
+        line_addr: u64,
+        id: ReqId,
+        is_write: bool,
+    ) -> MshrAlloc {
+        if let Some(m) =
+            self.entries.iter_mut().find(|m| m.line_addr == line_addr)
+        {
+            m.waiters.push(id);
+            m.wants_exclusive |= is_write;
+            self.merged += 1;
+            return MshrAlloc::Secondary;
+        }
+        if self.is_full() {
+            self.full_stalls += 1;
+            return MshrAlloc::Full;
+        }
+        self.entries.push(Mshr {
+            line_addr,
+            waiters: vec![id],
+            wants_exclusive: is_write,
+        });
+        MshrAlloc::Primary
+    }
+
+    /// Fill arrived: pop the entry, returning all waiters.
+    pub fn complete(&mut self, line_addr: u64) -> Option<Mshr> {
+        let i = self
+            .entries
+            .iter()
+            .position(|m| m.line_addr == line_addr)?;
+        Some(self.entries.swap_remove(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primary_secondary_full() {
+        let mut f = MshrFile::new(2);
+        assert_eq!(f.allocate(10, 1, false), MshrAlloc::Primary);
+        assert_eq!(f.allocate(10, 2, true), MshrAlloc::Secondary);
+        assert_eq!(f.allocate(20, 3, false), MshrAlloc::Primary);
+        assert_eq!(f.allocate(30, 4, false), MshrAlloc::Full);
+        assert_eq!(f.outstanding(), 2);
+        assert_eq!(f.merged, 1);
+        assert_eq!(f.full_stalls, 1);
+    }
+
+    #[test]
+    fn complete_returns_waiters_and_exclusivity() {
+        let mut f = MshrFile::new(4);
+        f.allocate(10, 1, false);
+        f.allocate(10, 2, true);
+        let m = f.complete(10).unwrap();
+        assert_eq!(m.waiters, vec![1, 2]);
+        assert!(m.wants_exclusive);
+        assert!(!f.contains(10));
+        assert!(f.complete(10).is_none());
+    }
+
+    #[test]
+    fn freeing_makes_room() {
+        let mut f = MshrFile::new(1);
+        assert_eq!(f.allocate(1, 1, false), MshrAlloc::Primary);
+        assert_eq!(f.allocate(2, 2, false), MshrAlloc::Full);
+        f.complete(1);
+        assert_eq!(f.allocate(2, 2, false), MshrAlloc::Primary);
+    }
+}

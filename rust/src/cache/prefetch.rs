@@ -1,0 +1,230 @@
+//! L2 stride prefetcher (region-based, gem5 `StridePrefetcher`-like).
+//!
+//! Trains on the L2 access stream per 4 KiB region: when consecutive
+//! accesses within a region exhibit a stable line stride, issues
+//! prefetches `degree` lines ahead. Prefetch *timeliness* is the
+//! mechanism that makes Fig.-5-style sweeps latency-sensitive: a
+//! prefetch covers a future demand miss only if memory returns it
+//! before the demand arrives — so the same workload shows different
+//! *demand* miss rates on DRAM vs CXL even though the cache geometry
+//! never changes. This is the "cache pollution / latency interaction"
+//! effect the paper's abstract calls out, made measurable.
+
+use crate::stats::{Counter, StatDump};
+
+/// Training entry for one 4 KiB region.
+#[derive(Clone, Copy, Debug)]
+struct RegionEntry {
+    region: u64,
+    last_line: u64,
+    stride: i64,
+    confidence: u8,
+    valid: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PrefetchStats {
+    pub trained: Counter,
+    pub issued: Counter,
+    pub useful: Counter,
+    pub late: Counter,
+}
+
+/// Stride detector + prefetch address generator.
+#[derive(Clone, Debug)]
+pub struct StridePrefetcher {
+    table: Vec<RegionEntry>,
+    /// Lines to run ahead once confident.
+    pub degree: usize,
+    /// Confidence needed before issuing (2 = two stride confirmations).
+    pub threshold: u8,
+    pub stats: PrefetchStats,
+}
+
+impl StridePrefetcher {
+    pub fn new(entries: usize, degree: usize) -> Self {
+        StridePrefetcher {
+            table: vec![
+                RegionEntry {
+                    region: 0,
+                    last_line: 0,
+                    stride: 0,
+                    confidence: 0,
+                    valid: false,
+                };
+                entries.max(1)
+            ],
+            degree: degree.max(1),
+            threshold: 2,
+            stats: PrefetchStats::default(),
+        }
+    }
+
+    /// Observe a demand access to `line_addr`; returns the line
+    /// addresses to prefetch (possibly empty).
+    pub fn train(&mut self, line_addr: u64) -> Vec<u64> {
+        let region = line_addr >> 6; // 64 lines = 4 KiB region
+        let idx = (region as usize) % self.table.len();
+        let e = &mut self.table[idx];
+
+        if !e.valid || e.region != region {
+            *e = RegionEntry {
+                region,
+                last_line: line_addr,
+                stride: 0,
+                confidence: 0,
+                valid: true,
+            };
+            return Vec::new();
+        }
+        let new_stride = line_addr as i64 - e.last_line as i64;
+        if new_stride == 0 {
+            return Vec::new(); // same line (MSHR merge territory)
+        }
+        if new_stride == e.stride {
+            e.confidence = e.confidence.saturating_add(1);
+        } else {
+            e.stride = new_stride;
+            e.confidence = 1;
+        }
+        e.last_line = line_addr;
+        self.stats.trained.inc();
+        if e.confidence < self.threshold {
+            return Vec::new();
+        }
+        let stride = e.stride;
+        let degree = self.degree;
+        (1..=degree as i64)
+            .filter_map(|k| {
+                let target = line_addr as i64 + stride * k;
+                (target > 0).then_some(target as u64)
+            })
+            .collect()
+    }
+}
+
+/// Per-cache prefetch outcome bookkeeping (who brought the line in).
+#[derive(Clone, Debug, Default)]
+pub struct PrefetchBook {
+    /// Lines currently resident because of a prefetch, not yet touched
+    /// by demand. (Line-address keyed; pruned on eviction/demand.)
+    resident: crate::util::fxhash::FxHashSet<u64>,
+    /// Prefetches still in flight.
+    inflight: crate::util::fxhash::FxHashSet<u64>,
+}
+
+impl PrefetchBook {
+    pub fn note_issued(&mut self, line: u64) {
+        self.inflight.insert(line);
+    }
+
+    pub fn is_inflight(&self, line: u64) -> bool {
+        self.inflight.contains(&line)
+    }
+
+    pub fn note_fill(&mut self, line: u64) {
+        if self.inflight.remove(&line) {
+            self.resident.insert(line);
+        }
+    }
+
+    /// Demand touched the line: returns true if a prefetch covered it.
+    pub fn note_demand(&mut self, line: u64) -> bool {
+        self.resident.remove(&line)
+    }
+
+    /// Demand missed while the prefetch was still in flight ("late").
+    pub fn note_demand_miss(&mut self, line: u64) -> bool {
+        self.inflight.contains(&line)
+    }
+
+    pub fn note_evict(&mut self, line: u64) {
+        self.resident.remove(&line);
+    }
+
+    pub fn inflight_count(&self) -> usize {
+        self.inflight.len()
+    }
+}
+
+pub fn dump(p: &StridePrefetcher, path: &str, d: &mut StatDump) {
+    d.counter(&format!("{path}.trained"), &p.stats.trained);
+    d.counter(&format!("{path}.issued"), &p.stats.issued);
+    d.counter(&format!("{path}.useful"), &p.stats.useful);
+    d.counter(&format!("{path}.late"), &p.stats.late);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_stride_detected_after_threshold() {
+        let mut p = StridePrefetcher::new(64, 4);
+        assert!(p.train(100).is_empty()); // allocate
+        assert!(p.train(101).is_empty()); // conf 1
+        let pf = p.train(102); // conf 2 -> fire
+        assert_eq!(pf, vec![103, 104, 105, 106]);
+    }
+
+    #[test]
+    fn negative_stride_supported() {
+        let mut p = StridePrefetcher::new(64, 2);
+        p.train(200);
+        p.train(198);
+        let pf = p.train(196);
+        assert_eq!(pf, vec![194, 192]);
+    }
+
+    #[test]
+    fn stride_change_resets_confidence() {
+        let mut p = StridePrefetcher::new(64, 2);
+        p.train(10);
+        p.train(11);
+        assert!(!p.train(12).is_empty());
+        assert!(p.train(20).is_empty()); // stride jumped: conf resets to 1
+        assert_eq!(p.train(28), vec![36, 44]); // stride 8 confirmed
+        assert_eq!(p.train(36), vec![44, 52]);
+    }
+
+    #[test]
+    fn regions_do_not_interfere() {
+        let mut p = StridePrefetcher::new(64, 1);
+        // Interleave two regions with unit strides.
+        p.train(0);
+        p.train(64 * 100);
+        p.train(1);
+        p.train(64 * 100 + 1);
+        let a = p.train(2);
+        let b = p.train(64 * 100 + 2);
+        assert_eq!(a, vec![3]);
+        assert_eq!(b, vec![64 * 100 + 3]);
+    }
+
+    #[test]
+    fn same_line_repeats_ignored() {
+        let mut p = StridePrefetcher::new(64, 2);
+        p.train(5);
+        assert!(p.train(5).is_empty());
+        assert!(p.train(5).is_empty());
+        // Still trains cleanly afterwards.
+        p.train(6);
+        assert!(!p.train(7).is_empty());
+    }
+
+    #[test]
+    fn book_tracks_outcomes() {
+        let mut b = PrefetchBook::default();
+        b.note_issued(10);
+        assert!(b.is_inflight(10));
+        assert!(b.note_demand_miss(10)); // late
+        b.note_fill(10);
+        assert!(!b.is_inflight(10));
+        assert!(b.note_demand(10)); // useful
+        assert!(!b.note_demand(10)); // only counted once
+        b.note_issued(11);
+        b.note_fill(11);
+        b.note_evict(11);
+        assert!(!b.note_demand(11)); // evicted before use
+    }
+}

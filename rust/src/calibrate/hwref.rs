@@ -1,0 +1,109 @@
+//! Synthetic "vendor silicon" loaded-latency curves.
+//!
+//! Substitutes the real CXL expander cards the paper calibrates against
+//! (hardware gate — DESIGN.md §1). Curves have the empirically observed
+//! shape of MLC/Mess-style loaded-latency measurements on CXL devices:
+//! a flat unloaded region, a gentle queueing slope, and a sharp knee as
+//! the link saturates; plus vendor-to-vendor variation and measurement
+//! noise.
+
+use crate::util::rng::Rng;
+
+/// A synthetic vendor card's ground-truth characteristics.
+#[derive(Clone, Copy, Debug)]
+pub struct VendorCard {
+    pub name: &'static str,
+    pub idle_lat_ns: f32,
+    pub sat_bw_gbps: f32,
+    pub knee_sharpness: f32,
+}
+
+/// Representative cards (shapes inspired by published CXL-expander
+/// measurements: ~170-250 ns idle, 20-28 GB/s x8 saturating).
+pub const CARDS: [VendorCard; 3] = [
+    VendorCard {
+        name: "vendor-A-ddr5",
+        idle_lat_ns: 180.0,
+        sat_bw_gbps: 26.0,
+        knee_sharpness: 35.0,
+    },
+    VendorCard {
+        name: "vendor-B-ddr4",
+        idle_lat_ns: 240.0,
+        sat_bw_gbps: 20.0,
+        knee_sharpness: 55.0,
+    },
+    VendorCard {
+        name: "vendor-C-optimized",
+        idle_lat_ns: 150.0,
+        sat_bw_gbps: 28.0,
+        knee_sharpness: 25.0,
+    },
+];
+
+/// "Measure" the card: loaded latency at the given offered loads, with
+/// multiplicative measurement noise of `noise` (e.g. 0.02 = 2%).
+pub fn measure(
+    card: &VendorCard,
+    loads: &[f32],
+    noise: f32,
+    seed: u64,
+) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    loads
+        .iter()
+        .map(|&l| {
+            let x = (card.sat_bw_gbps - l) as f64;
+            let headroom = x.exp().ln_1p() as f32 + 1e-3;
+            let lat = card.idle_lat_ns
+                + card.knee_sharpness * l / headroom;
+            let jitter = 1.0 + noise * (2.0 * rng.f64() as f32 - 1.0);
+            lat * jitter
+        })
+        .collect()
+}
+
+/// The load grid a user would sweep (fraction of nominal link bw).
+pub fn load_grid(points: usize, max_gbps: f32) -> Vec<f32> {
+    (0..points)
+        .map(|i| 0.25 + (i as f32 / points as f32) * (max_gbps - 0.5))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unloaded_latency_near_idle() {
+        let m = measure(&CARDS[0], &[0.3], 0.0, 1);
+        assert!((m[0] - CARDS[0].idle_lat_ns).abs() < 2.0, "{}", m[0]);
+    }
+
+    #[test]
+    fn latency_explodes_past_saturation() {
+        let loads = [5.0, CARDS[0].sat_bw_gbps + 2.0];
+        let m = measure(&CARDS[0], &loads, 0.0, 1);
+        assert!(m[1] > m[0] * 3.0, "no knee: {m:?}");
+    }
+
+    #[test]
+    fn noise_is_bounded_and_seeded() {
+        let loads = load_grid(32, 26.0);
+        let a = measure(&CARDS[1], &loads, 0.02, 7);
+        let b = measure(&CARDS[1], &loads, 0.02, 7);
+        let clean = measure(&CARDS[1], &loads, 0.0, 7);
+        assert_eq!(a, b, "same seed must reproduce");
+        for (x, c) in a.iter().zip(&clean) {
+            assert!((x - c).abs() / c <= 0.021);
+        }
+    }
+
+    #[test]
+    fn grid_spans_range() {
+        let g = load_grid(32, 26.0);
+        assert_eq!(g.len(), 32);
+        assert!(g[0] < 1.0);
+        assert!(*g.last().unwrap() > 24.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Latency-bandwidth calibration (paper §III-B.2 / §V).
+//!
+//! "The bandwidth-latency characteristics of the CXL memory is highly
+//! vendor specific. Hence, we provide a user-friendly mechanism to
+//! calibrate the latency of the CXL interconnects to match the
+//! latency/bandwidth of the actual CXL memory."
+//!
+//! * [`hwref`] generates synthetic "vendor silicon" loaded-latency
+//!   curves (the hardware-gated measurement the paper takes on a real
+//!   expander — substituted per DESIGN.md §1).
+//! * [`Fitter`] runs the AOT-compiled fwd+grad step
+//!   ([`crate::runtime::XlaRuntime::calib_step`]) until the model curve
+//!   matches, then maps fitted parameters back onto [`CxlConfig`]
+//!   knobs (pkt/link/media latencies, link bandwidth).
+
+pub mod hwref;
+
+use anyhow::Result;
+
+use crate::config::CxlConfig;
+use crate::runtime::XlaRuntime;
+
+/// Parameter vector layout (matches python/compile/model.py):
+/// [base, pkt, media, bw, k].
+pub type Params = [f32; 5];
+
+#[derive(Clone, Debug)]
+pub struct FitReport {
+    pub initial: Params,
+    pub fitted: Params,
+    pub initial_loss: f32,
+    pub final_loss: f32,
+    pub iterations: usize,
+    /// RMS latency error (ns) of the fitted curve on the measurements.
+    pub rms_ns: f32,
+}
+
+pub struct Fitter {
+    /// Initial per-parameter step sizes (the artifact applies sign-SGD;
+    /// see python/compile/model.py::calib_step for why not raw SGD).
+    pub lr: [f32; 5],
+    /// Halve the step sizes every this many iterations.
+    pub decay_every: usize,
+    pub max_iters: usize,
+    pub target_loss: f32,
+}
+
+impl Default for Fitter {
+    fn default() -> Self {
+        Fitter {
+            // ns-scale steps for the latency params; GB/s-scale for bw/k.
+            lr: [2.0, 2.0, 2.0, 0.5, 0.5],
+            decay_every: 400,
+            max_iters: 3000,
+            target_loss: 4.0, // MSE in ns^2 => rms ~2 ns
+        }
+    }
+}
+
+impl Fitter {
+    /// Fit the model to measured (load, latency) points.
+    pub fn fit(
+        &self,
+        rt: &XlaRuntime,
+        init: Params,
+        loads: &[f32],
+        lat_meas: &[f32],
+    ) -> Result<FitReport> {
+        let mut p = init;
+        let mut lr = self.lr;
+        let mut initial_loss = f32::INFINITY;
+        let mut loss = f32::INFINITY;
+        let mut iters = 0;
+        for i in 0..self.max_iters {
+            let (np, l) = rt.calib_step(&p, loads, lat_meas, &lr)?;
+            if i == 0 {
+                initial_loss = l;
+            }
+            p = np;
+            loss = l;
+            iters = i + 1;
+            if loss < self.target_loss {
+                break;
+            }
+            if (i + 1) % self.decay_every == 0 {
+                for x in &mut lr {
+                    *x *= 0.5;
+                }
+            }
+        }
+        Ok(FitReport {
+            initial: init,
+            fitted: p,
+            initial_loss,
+            final_loss: loss,
+            iterations: iters,
+            rms_ns: loss.max(0.0).sqrt(),
+        })
+    }
+
+    /// Seed the fit from the current config (what a user would do:
+    /// start from the datasheet, fit to their card).
+    pub fn seed_from(cfg: &CxlConfig) -> Params {
+        [
+            10.0, // base: RC/IOBus traversal guess
+            cfg.pkt_lat_ns as f32,
+            cfg.media.t_rcd_ns as f32 + cfg.media.t_cas_ns as f32,
+            cfg.link_bw_gbps as f32,
+            20.0, // queueing sensitivity guess
+        ]
+    }
+
+    /// Write fitted parameters back onto the config knobs the simulator
+    /// exposes (the user-facing calibration the paper describes).
+    pub fn apply(fitted: &Params, cfg: &mut CxlConfig) {
+        cfg.pkt_lat_ns = fitted[1].max(0.0) as f64;
+        cfg.depkt_lat_ns = fitted[1].max(0.0) as f64;
+        // media = tRCD + tCAS split evenly.
+        let media = fitted[2].max(1.0) as f64;
+        cfg.media.t_rcd_ns = media / 2.0;
+        cfg.media.t_cas_ns = media / 2.0;
+        cfg.link_bw_gbps = fitted[3].max(1.0) as f64;
+        // base + k have no direct knob: base folds into link latency.
+        cfg.link_lat_ns = (fitted[0].max(0.0) as f64 / 2.0).max(1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn seed_uses_config_values() {
+        let cfg = SimConfig::default().cxl;
+        let s = Fitter::seed_from(&cfg);
+        assert_eq!(s[1], cfg.pkt_lat_ns as f32);
+        assert_eq!(s[3], cfg.link_bw_gbps as f32);
+    }
+
+    #[test]
+    fn apply_roundtrips_onto_config() {
+        let mut cfg = SimConfig::default().cxl;
+        let fitted: Params = [40.0, 30.0, 36.0, 24.0, 55.0];
+        Fitter::apply(&fitted, &mut cfg);
+        assert_eq!(cfg.pkt_lat_ns, 30.0);
+        assert_eq!(cfg.media.t_rcd_ns, 18.0);
+        assert_eq!(cfg.link_bw_gbps, 24.0);
+        assert_eq!(cfg.link_lat_ns, 20.0);
+    }
+}

@@ -1,0 +1,411 @@
+//! CLI front end (hand-rolled — no clap in this offline environment).
+//!
+//! Subcommands:
+//!   boot                          boot + print the guest's view
+//!   run                           run a workload (stream|random|chase|kv)
+//!   sweep                         Fig.-5 style WSS x interleave sweep
+//!   calibrate                     fit link params to a vendor curve
+//!   table1                        print the Table-I configuration
+//!   stats                         run + full stat dump
+//!
+//! Common flags: --config <file.toml>, --set key=value (repeatable),
+//! --policy <local|bind:N|preferred:N|interleave:SPEC>, --cpu <inorder|o3>,
+//! --workload <name>, --wss-mult <N>, --attach <iobus|membus>,
+//! --prog-model <znuma|flat>, --artifacts <dir>.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SimConfig;
+use crate::guestos::{MemPolicy, ProgModel};
+use crate::system::Machine;
+use crate::util::bench::Table;
+use crate::workloads::{
+    PointerChase, RandomAccess, Stream, StreamKernel, TieredKv, Workload,
+};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    pub config_path: Option<String>,
+    pub sets: Vec<String>,
+    pub policy: String,
+    pub workload: String,
+    pub wss_mult: u64,
+    pub prog_model: ProgModel,
+    pub artifacts: String,
+    pub verify: bool,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args {
+            cmd: argv.first().cloned().unwrap_or_else(|| "help".into()),
+            policy: "local".into(),
+            workload: "stream-triad".into(),
+            wss_mult: 4,
+            prog_model: ProgModel::Znuma,
+            artifacts: "artifacts".into(),
+            verify: false,
+            ..Default::default()
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let flag = argv[i].clone();
+            let val = |i: &mut usize| -> Result<String> {
+                *i += 1;
+                argv.get(*i)
+                    .cloned()
+                    .with_context(|| format!("{flag} needs a value"))
+            };
+            match flag.as_str() {
+                "--config" => a.config_path = Some(val(&mut i)?),
+                "--set" => {
+                    let v = val(&mut i)?;
+                    a.sets.push(v);
+                }
+                "--policy" => a.policy = val(&mut i)?,
+                "--workload" => a.workload = val(&mut i)?,
+                "--wss-mult" => {
+                    a.wss_mult = val(&mut i)?.parse().context("--wss-mult")?
+                }
+                "--cpu" => {
+                    let v = val(&mut i)?;
+                    a.sets.push(format!("system.cpu=\"{v}\""));
+                }
+                "--attach" => {
+                    let v = val(&mut i)?;
+                    a.sets.push(format!("cxl.attach=\"{v}\""));
+                }
+                "--prog-model" => {
+                    a.prog_model = match val(&mut i)?.as_str() {
+                        "znuma" => ProgModel::Znuma,
+                        "flat" => ProgModel::Flat,
+                        other => bail!("unknown prog model '{other}'"),
+                    }
+                }
+                "--artifacts" => a.artifacts = val(&mut i)?,
+                "--verify" => a.verify = true,
+                other => bail!("unknown flag '{other}' (see `cxlramsim help`)"),
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn config(&self) -> Result<SimConfig> {
+        let text = match &self.config_path {
+            Some(p) => std::fs::read_to_string(p)
+                .with_context(|| format!("reading {p}"))?,
+            None => String::new(),
+        };
+        SimConfig::from_toml(&text, &self.sets)
+    }
+
+    pub fn mem_policy(&self) -> Result<MemPolicy> {
+        MemPolicy::parse(&self.policy)
+    }
+
+    pub fn make_workload(&self, cfg: &SimConfig) -> Result<Box<dyn Workload>> {
+        let w: Box<dyn Workload> = match self.workload.as_str() {
+            "stream-copy" => Box::new(Stream::for_wss(
+                StreamKernel::Copy,
+                cfg.l2.size,
+                self.wss_mult,
+            )),
+            "stream-scale" => Box::new(Stream::for_wss(
+                StreamKernel::Scale,
+                cfg.l2.size,
+                self.wss_mult,
+            )),
+            "stream-add" => Box::new(Stream::for_wss(
+                StreamKernel::Add,
+                cfg.l2.size,
+                self.wss_mult,
+            )),
+            "stream-triad" => Box::new(Stream::for_wss(
+                StreamKernel::Triad,
+                cfg.l2.size,
+                self.wss_mult,
+            )),
+            "random" => Box::new(RandomAccess::new(
+                cfg.l2.size * self.wss_mult,
+                50_000,
+                0.2,
+                cfg.seed,
+            )),
+            "chase" => Box::new(PointerChase::new(
+                cfg.l2.size * self.wss_mult / 64,
+                20_000,
+                cfg.seed,
+            )),
+            "kv" => Box::new(TieredKv::new(4096, 256, 20_000, cfg.seed)),
+            other => bail!("unknown workload '{other}'"),
+        };
+        Ok(w)
+    }
+}
+
+pub fn print_help() {
+    println!(
+        "cxlramsim — full-system CXL memory expander simulation\n\
+         \n\
+         USAGE: cxlramsim <boot|run|sweep|calibrate|table1|stats|help> [flags]\n\
+         \n\
+         FLAGS:\n\
+           --config <file.toml>   load configuration\n\
+           --set key=value        override a config key (repeatable)\n\
+           --cpu inorder|o3       CPU model\n\
+           --attach iobus|membus  CXL attach point (membus = baseline)\n\
+           --policy P             local | bind:N | preferred:N |\n\
+                                  interleave:0=3,1=1\n\
+           --workload W           stream-{{copy,scale,add,triad}} | random |\n\
+                                  chase | kv\n\
+           --wss-mult N           working set = N x L2 size (default 4)\n\
+           --prog-model M         znuma | flat\n\
+           --artifacts DIR        AOT artifact directory\n\
+           --verify               functional verification after the run"
+    );
+}
+
+pub fn cmd_boot(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let mut m = Machine::new(cfg)?;
+    m.boot(args.prog_model)?;
+    {
+        let g = m.guest.as_ref().unwrap();
+        for line in &g.boot_log {
+            println!("[guest] {line}");
+        }
+        println!("\nNUMA topology:");
+        for n in &g.alloc.nodes {
+            println!(
+                "  node {}: {:#x}..{:#x} {} {}",
+                n.id,
+                n.base,
+                n.base + n.size,
+                if n.has_cpus { "cpus" } else { "CPU-LESS (zNUMA)" },
+                if n.online { "online" } else { "offline" }
+            );
+        }
+    }
+    let memdev = m.guest.as_ref().unwrap().memdev.clone();
+    if let Some(md) = memdev {
+        println!("\ncxl list:");
+        let mut world = crate::system::MmioWorld {
+            ecam: &mut m.ecam,
+            cxl_dev: &mut m.cxl_dev,
+            hb_component: &mut m.hb_component,
+            chbs_base: crate::bios::layout::CHBS_BASE,
+            chbs_size: crate::bios::layout::CHBS_SIZE,
+            ep_bdf: m.ep_bdf,
+        };
+        println!("  {}", crate::guestos::cxlcli::cxl_list(&mut world, &md)?);
+    }
+    Ok(())
+}
+
+pub fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let mut m = Machine::new(cfg.clone())?;
+    m.boot(args.prog_model)?;
+    let wl = args.make_workload(&cfg)?;
+    let name = wl.name();
+    m.attach_workloads(vec![wl], &args.mem_policy()?)?;
+    let s = m.run(None);
+    println!("workload: {name}");
+    println!("policy:   {}", args.policy);
+    println!(
+        "time: {:.3} ms   bandwidth: {:.2} GB/s",
+        s.seconds * 1e3,
+        s.bandwidth_gbps
+    );
+    println!(
+        "L1 miss rate: {:.4}   L2 (LLC) miss rate: {:.4}",
+        s.l1_miss_rate, s.l2_miss_rate
+    );
+    println!(
+        "memory: {} DRAM fills, {} CXL fills (lat {:.0} / {:.0} ns)",
+        s.dram_accesses, s.cxl_accesses, s.avg_lat_dram_ns, s.avg_lat_cxl_ns
+    );
+    println!(
+        "CXL.mem: M2S Req {}  RwD {}  |  S2M NDR {}  DRS {}",
+        s.m2s_req, s.m2s_rwd, s.s2m_ndr, s.s2m_drs
+    );
+    if args.verify {
+        m.verify().map_err(|e| anyhow::anyhow!(e))?;
+        println!("functional verification: OK");
+    }
+    Ok(())
+}
+
+pub fn cmd_table1(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let mut t = Table::new(
+        "TABLE I — SIMULATION CONFIGURATION",
+        &["Component", "Specification"],
+    );
+    for (k, v) in cfg.table1_rows() {
+        t.row(&[k, v]);
+    }
+    t.print();
+    Ok(())
+}
+
+pub fn cmd_stats(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let mut m = Machine::new(cfg.clone())?;
+    m.boot(args.prog_model)?;
+    let wl = args.make_workload(&cfg)?;
+    m.attach_workloads(vec![wl], &args.mem_policy()?)?;
+    m.run(None);
+    print!("{}", m.dump_stats().to_text());
+    Ok(())
+}
+
+pub fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let ratios: [(&str, Vec<(u32, u32)>); 5] = [
+        ("100:0", vec![(0, 1)]),
+        ("75:25", vec![(0, 3), (1, 1)]),
+        ("50:50", vec![(0, 1), (1, 1)]),
+        ("25:75", vec![(0, 1), (1, 3)]),
+        ("0:100", vec![(1, 1)]),
+    ];
+    let mut t = Table::new(
+        "STREAM LLC MISS-RATE SWEEP (Fig. 5 axes)",
+        &["wss(xL2)", "ratio", "L2 miss", "GB/s", "CXL fills"],
+    );
+    for mult in [2u64, 4, 6, 8] {
+        for (label, weights) in &ratios {
+            let mut m = Machine::new(cfg.clone())?;
+            m.boot(args.prog_model)?;
+            let wl = Stream::for_wss(StreamKernel::Triad, cfg.l2.size, mult);
+            m.attach_workloads(
+                vec![Box::new(wl)],
+                &MemPolicy::Interleave { weights: weights.clone() },
+            )?;
+            let s = m.run(None);
+            t.row(&[
+                mult.to_string(),
+                label.to_string(),
+                format!("{:.4}", s.l2_miss_rate),
+                format!("{:.2}", s.bandwidth_gbps),
+                s.cxl_accesses.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+pub fn cmd_calibrate(args: &Args) -> Result<()> {
+    use crate::calibrate::{hwref, Fitter};
+    let cfg = args.config()?;
+    let rt = crate::runtime::XlaRuntime::load(std::path::Path::new(
+        &args.artifacts,
+    ))?;
+    println!("PJRT platform: {}", rt.platform());
+    let card = &hwref::CARDS[0];
+    let loads = hwref::load_grid(rt.manifest.calib_points, card.sat_bw_gbps);
+    let meas = hwref::measure(card, &loads, 0.02, cfg.seed);
+    let fitter = Fitter::default();
+    let seed = Fitter::seed_from(&cfg.cxl);
+    let report = fitter.fit(&rt, seed, &loads, &meas)?;
+    println!(
+        "card {}: loss {:.1} -> {:.3} in {} iters (rms {:.2} ns)",
+        card.name,
+        report.initial_loss,
+        report.final_loss,
+        report.iterations,
+        report.rms_ns
+    );
+    println!("fitted params [base, pkt, media, bw, k] = {:?}", report.fitted);
+    let mut cxl = cfg.cxl.clone();
+    Fitter::apply(&report.fitted, &mut cxl);
+    println!(
+        "calibrated config: pkt {:.1} ns, link {:.1} ns, media tRCD/tCAS \
+         {:.1}/{:.1} ns, bw {:.1} GB/s",
+        cxl.pkt_lat_ns,
+        cxl.link_lat_ns,
+        cxl.media.t_rcd_ns,
+        cxl.media.t_cas_ns,
+        cxl.link_bw_gbps
+    );
+    Ok(())
+}
+
+/// Entry point used by main.rs.
+pub fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(&argv)?;
+    match args.cmd.as_str() {
+        "boot" => cmd_boot(&args),
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "table1" => cmd_table1(&args),
+        "stats" => cmd_stats(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command '{other}'")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CpuModel;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags() {
+        let a = Args::parse(&sv(&[
+            "run",
+            "--policy",
+            "interleave:0=3,1=1",
+            "--cpu",
+            "inorder",
+            "--wss-mult",
+            "6",
+            "--verify",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "run");
+        assert_eq!(a.wss_mult, 6);
+        assert!(a.verify);
+        let cfg = a.config().unwrap();
+        assert_eq!(cfg.cpu_model, CpuModel::InOrder);
+        assert!(a.mem_policy().is_ok());
+    }
+
+    #[test]
+    fn rejects_unknown_flag_and_workload() {
+        assert!(Args::parse(&sv(&["run", "--bogus"])).is_err());
+        let a = Args::parse(&sv(&["run", "--workload", "doom"])).unwrap();
+        assert!(a.make_workload(&SimConfig::default()).is_err());
+    }
+
+    #[test]
+    fn workload_factory_builds_all() {
+        let cfg = SimConfig::default();
+        for w in [
+            "stream-copy",
+            "stream-scale",
+            "stream-add",
+            "stream-triad",
+            "random",
+            "chase",
+            "kv",
+        ] {
+            let a = Args::parse(&sv(&["run", "--workload", w])).unwrap();
+            assert!(a.make_workload(&cfg).is_ok(), "{w}");
+        }
+    }
+}

@@ -1,0 +1,431 @@
+//! Simulation configuration (Table I surface).
+//!
+//! `SimConfig` is the single schema for the whole machine; it can be
+//! loaded from a TOML file, overridden from the CLI (`--set key=value`)
+//! and printed in the paper's Table-I format (`bench table1_config`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::toml::TomlDoc;
+use crate::util::{human_bytes, is_pow2};
+
+/// CPU model selector (paper Table I: In-order, Out-of-Order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CpuModel {
+    /// gem5 "TimingSimpleCPU" analogue: one outstanding memory op.
+    InOrder,
+    /// gem5 "O3CPU" analogue: ROB/LSQ, multiple outstanding misses.
+    OutOfOrder,
+}
+
+impl CpuModel {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "inorder" | "timing" => Ok(CpuModel::InOrder),
+            "o3" | "ooo" | "out-of-order" => Ok(CpuModel::OutOfOrder),
+            _ => bail!("unknown cpu model '{s}' (inorder|o3)"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            CpuModel::InOrder => "In-order (Timing)",
+            CpuModel::OutOfOrder => "Out-of-Order (O3)",
+        }
+    }
+}
+
+/// Where the CXL expander is attached — the paper's core architectural
+/// point (Fig. 1). `IoBus` is CXLRAMSim; `MemBus` reproduces the
+/// CXL-DMSim / SimCXL shortcut for the E3 ablation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CxlAttach {
+    IoBus,
+    MemBus,
+}
+
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    pub size: u64,
+    pub assoc: usize,
+    pub line: u64,
+    /// Hit latency in CPU cycles.
+    pub lat_cycles: u64,
+    pub mshrs: usize,
+    /// Stride prefetcher at this level (modeled for L2 only).
+    pub prefetch: bool,
+    /// Prefetch run-ahead distance in lines.
+    pub pf_degree: usize,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        (self.size / (self.line * self.assoc as u64)) as usize
+    }
+    fn validate(&self, name: &str) -> Result<()> {
+        if !is_pow2(self.line) || self.line < 16 {
+            bail!("{name}: line size must be pow2 >= 16");
+        }
+        if self.size % (self.line * self.assoc as u64) != 0 {
+            bail!("{name}: size not divisible by line*assoc");
+        }
+        if !is_pow2(self.sets() as u64) {
+            bail!("{name}: set count must be a power of two");
+        }
+        if self.mshrs == 0 {
+            bail!("{name}: need at least one MSHR");
+        }
+        Ok(())
+    }
+}
+
+/// DRAM timing (applies to both system DRAM and the expander's media,
+/// with independent values).
+#[derive(Clone, Debug)]
+pub struct DramConfig {
+    pub banks: usize,
+    /// Row-hit access latency (ns).
+    pub t_cas_ns: f64,
+    /// Row activation (ns) added on row miss.
+    pub t_rcd_ns: f64,
+    /// Precharge (ns) added on row conflict.
+    pub t_rp_ns: f64,
+    /// Row-buffer size in bytes.
+    pub row_bytes: u64,
+    /// Peak data bus bandwidth (GB/s) of the channel.
+    pub bw_gbps: f64,
+}
+
+/// CXL link + protocol parameters (paper §III-B.2: all user-calibratable).
+#[derive(Clone, Debug)]
+pub struct CxlConfig {
+    /// Expander capacity.
+    pub mem_size: u64,
+    /// M2S/S2M packetization latency at the root complex (ns).
+    pub pkt_lat_ns: f64,
+    /// De-packetization latency at the endpoint (ns).
+    pub depkt_lat_ns: f64,
+    /// Link propagation latency one way (ns).
+    pub link_lat_ns: f64,
+    /// Link bandwidth (GB/s) — x8 CXL 2.0 ~ 32 GB/s raw.
+    pub link_bw_gbps: f64,
+    /// Flit size in bytes (CXL 2.0: 68B flit carrying 64B payload).
+    pub flit_bytes: u64,
+    /// Request credits per channel (M2S / S2M).
+    pub credits: usize,
+    /// Device media timing.
+    pub media: DramConfig,
+    pub attach: CxlAttach,
+}
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub cores: usize,
+    pub cpu_model: CpuModel,
+    pub freq_ghz: f64,
+    /// O3 parameters (ignored by InOrder).
+    pub rob_entries: usize,
+    pub lsq_entries: usize,
+    pub issue_width: usize,
+    pub l1: CacheConfig,
+    pub l2: CacheConfig,
+    pub sys_mem_size: u64,
+    pub sys_dram: DramConfig,
+    pub membus_lat_ns: f64,
+    pub membus_bw_gbps: f64,
+    pub iobus_lat_ns: f64,
+    pub iobus_bw_gbps: f64,
+    pub cxl: CxlConfig,
+    pub page_size: u64,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            cores: 4,
+            cpu_model: CpuModel::OutOfOrder,
+            freq_ghz: 3.0,
+            rob_entries: 192,
+            lsq_entries: 48,
+            issue_width: 4,
+            l1: CacheConfig {
+                size: 32 << 10,
+                assoc: 8,
+                line: 64,
+                lat_cycles: 4,
+                mshrs: 8,
+                prefetch: false,
+                pf_degree: 0,
+            },
+            l2: CacheConfig {
+                size: 1 << 20,
+                assoc: 16,
+                line: 64,
+                lat_cycles: 30,
+                mshrs: 32,
+                prefetch: true,
+                // Run-ahead 16 lines: covers the 2-stream STREAM kernels'
+                // demand rate (deg 8 turns late for copy/scale — see the
+                // pf-depth ablation in EXPERIMENTS.md §E2).
+                pf_degree: 16,
+            },
+            sys_mem_size: 2 << 30,
+            sys_dram: DramConfig {
+                banks: 16,
+                t_cas_ns: 14.0,
+                t_rcd_ns: 14.0,
+                t_rp_ns: 14.0,
+                row_bytes: 8192,
+                bw_gbps: 25.6,
+            },
+            membus_lat_ns: 4.0,
+            membus_bw_gbps: 51.2,
+            iobus_lat_ns: 8.0,
+            iobus_bw_gbps: 32.0,
+            cxl: CxlConfig {
+                mem_size: 4 << 30,
+                pkt_lat_ns: 25.0,
+                depkt_lat_ns: 25.0,
+                link_lat_ns: 20.0,
+                link_bw_gbps: 32.0,
+                flit_bytes: 68,
+                credits: 32,
+                media: DramConfig {
+                    banks: 16,
+                    t_cas_ns: 16.0,
+                    t_rcd_ns: 16.0,
+                    t_rp_ns: 16.0,
+                    row_bytes: 8192,
+                    bw_gbps: 19.2,
+                },
+                attach: CxlAttach::IoBus,
+            },
+            page_size: 4096,
+            seed: 1,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn cycle_ns(&self) -> f64 {
+        1.0 / self.freq_ghz
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.cores == 0 || self.cores > 64 {
+            bail!("cores must be 1..=64 (paper evaluates up to 4)");
+        }
+        self.l1.validate("l1")?;
+        self.l2.validate("l2")?;
+        if self.l1.line != self.l2.line {
+            bail!("l1/l2 line sizes must match");
+        }
+        if !is_pow2(self.page_size) || self.page_size < self.l1.line {
+            bail!("page size must be pow2 >= line size");
+        }
+        if self.sys_mem_size % self.page_size != 0
+            || self.cxl.mem_size % self.page_size != 0
+        {
+            bail!("memory sizes must be page-aligned");
+        }
+        if self.cxl.link_bw_gbps <= 0.0 || self.cxl.credits == 0 {
+            bail!("cxl link parameters must be positive");
+        }
+        // CXL 2.0 mailbox capacity fields are in 256 MiB multiples; a
+        // smaller expander would IDENTIFY as zero capacity.
+        if self.cxl.mem_size % (256 << 20) != 0 || self.cxl.mem_size == 0 {
+            bail!("cxl.size must be a non-zero multiple of 256 MiB");
+        }
+        if self.issue_width == 0 || self.lsq_entries == 0 {
+            bail!("o3 parameters must be positive");
+        }
+        Ok(())
+    }
+
+    /// Load from TOML text plus `key=value` overrides.
+    pub fn from_toml(text: &str, overrides: &[String]) -> Result<Self> {
+        let mut doc = TomlDoc::parse(text).context("parsing config")?;
+        for ov in overrides {
+            doc.set_override(ov)
+                .map_err(|e| anyhow::anyhow!("bad --set '{ov}': {e}"))?;
+        }
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let mut c = SimConfig::default();
+        let known = |_k: &str| {};
+        macro_rules! get {
+            ($key:expr, $slot:expr, u64) => {
+                if let Some(v) = doc.get($key) {
+                    known($key);
+                    $slot = v
+                        .as_u64()
+                        .with_context(|| format!("{} must be int", $key))?;
+                }
+            };
+            ($key:expr, $slot:expr, usize) => {
+                if let Some(v) = doc.get($key) {
+                    known($key);
+                    $slot = v
+                        .as_u64()
+                        .with_context(|| format!("{} must be int", $key))?
+                        as usize;
+                }
+            };
+            ($key:expr, $slot:expr, f64) => {
+                if let Some(v) = doc.get($key) {
+                    known($key);
+                    $slot = v
+                        .as_f64()
+                        .with_context(|| format!("{} must be number", $key))?;
+                }
+            };
+        }
+        get!("system.cores", c.cores, usize);
+        get!("system.freq_ghz", c.freq_ghz, f64);
+        get!("system.rob", c.rob_entries, usize);
+        get!("system.lsq", c.lsq_entries, usize);
+        get!("system.issue_width", c.issue_width, usize);
+        get!("system.page_size", c.page_size, u64);
+        get!("system.seed", c.seed, u64);
+        if let Some(v) = doc.get("system.cpu") {
+            c.cpu_model = CpuModel::parse(
+                v.as_str().context("system.cpu must be string")?,
+            )?;
+        }
+        get!("l1.size", c.l1.size, u64);
+        get!("l1.assoc", c.l1.assoc, usize);
+        get!("l1.line", c.l1.line, u64);
+        get!("l1.lat_cycles", c.l1.lat_cycles, u64);
+        get!("l1.mshrs", c.l1.mshrs, usize);
+        get!("l2.size", c.l2.size, u64);
+        get!("l2.assoc", c.l2.assoc, usize);
+        get!("l2.line", c.l2.line, u64);
+        get!("l2.lat_cycles", c.l2.lat_cycles, u64);
+        get!("l2.mshrs", c.l2.mshrs, usize);
+        get!("l2.pf_degree", c.l2.pf_degree, usize);
+        if let Some(v) = doc.get("l2.prefetch") {
+            c.l2.prefetch =
+                v.as_bool().context("l2.prefetch must be bool")?;
+        }
+        get!("mem.size", c.sys_mem_size, u64);
+        get!("mem.banks", c.sys_dram.banks, usize);
+        get!("mem.t_cas_ns", c.sys_dram.t_cas_ns, f64);
+        get!("mem.t_rcd_ns", c.sys_dram.t_rcd_ns, f64);
+        get!("mem.t_rp_ns", c.sys_dram.t_rp_ns, f64);
+        get!("mem.bw_gbps", c.sys_dram.bw_gbps, f64);
+        get!("bus.mem_lat_ns", c.membus_lat_ns, f64);
+        get!("bus.mem_bw_gbps", c.membus_bw_gbps, f64);
+        get!("bus.io_lat_ns", c.iobus_lat_ns, f64);
+        get!("bus.io_bw_gbps", c.iobus_bw_gbps, f64);
+        get!("cxl.size", c.cxl.mem_size, u64);
+        get!("cxl.pkt_lat_ns", c.cxl.pkt_lat_ns, f64);
+        get!("cxl.depkt_lat_ns", c.cxl.depkt_lat_ns, f64);
+        get!("cxl.link_lat_ns", c.cxl.link_lat_ns, f64);
+        get!("cxl.link_bw_gbps", c.cxl.link_bw_gbps, f64);
+        get!("cxl.flit_bytes", c.cxl.flit_bytes, u64);
+        get!("cxl.credits", c.cxl.credits, usize);
+        get!("cxl.media_t_cas_ns", c.cxl.media.t_cas_ns, f64);
+        get!("cxl.media_t_rcd_ns", c.cxl.media.t_rcd_ns, f64);
+        get!("cxl.media_t_rp_ns", c.cxl.media.t_rp_ns, f64);
+        get!("cxl.media_bw_gbps", c.cxl.media.bw_gbps, f64);
+        if let Some(v) = doc.get("cxl.attach") {
+            c.cxl.attach = match v.as_str() {
+                Some("iobus") => CxlAttach::IoBus,
+                Some("membus") => CxlAttach::MemBus,
+                _ => bail!("cxl.attach must be \"iobus\" or \"membus\""),
+            };
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Paper Table I rows, generated from the live schema.
+    pub fn table1_rows(&self) -> Vec<(String, String)> {
+        vec![
+            (
+                "CPU Models".into(),
+                "In-order, Out-of-Order".into(),
+            ),
+            (
+                "Cores".into(),
+                format!("Up to {} cores (x86 ISA)", self.cores),
+            ),
+            (
+                "Cache Coherence".into(),
+                "MESI (Two-level, Directory-based)".into(),
+            ),
+            (
+                "System Memory".into(),
+                format!(
+                    "Configurable (Unbounded) — {}",
+                    human_bytes(self.sys_mem_size)
+                ),
+            ),
+            (
+                "CXL Memory".into(),
+                format!(
+                    "Configurable Extension (Unbounded) — {}",
+                    human_bytes(self.cxl.mem_size)
+                ),
+            ),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cache_sets_derived() {
+        let c = SimConfig::default();
+        assert_eq!(c.l1.sets(), 64);
+        assert_eq!(c.l2.sets(), 1024);
+    }
+
+    #[test]
+    fn from_toml_and_overrides() {
+        let cfg = SimConfig::from_toml(
+            "[system]\ncores = 2\ncpu = \"inorder\"\n[l2]\nsize = 2 MiB\n",
+            &["cxl.attach=\"membus\"".to_string()],
+        )
+        .unwrap();
+        assert_eq!(cfg.cores, 2);
+        assert_eq!(cfg.cpu_model, CpuModel::InOrder);
+        assert_eq!(cfg.l2.size, 2 << 20);
+        assert_eq!(cfg.cxl.attach, CxlAttach::MemBus);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = SimConfig::default();
+        c.cores = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::default();
+        c.l1.line = 48;
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::default();
+        c.l2.line = 128; // mismatch with l1
+        assert!(c.validate().is_err());
+
+        assert!(SimConfig::from_toml("[system]\ncpu = \"riscv\"", &[])
+            .is_err());
+    }
+
+    #[test]
+    fn table1_mentions_mesi_and_sizes() {
+        let rows = SimConfig::default().table1_rows();
+        assert_eq!(rows.len(), 5);
+        assert!(rows[2].1.contains("MESI"));
+        assert!(rows[4].1.contains("4 GiB"));
+    }
+}

@@ -1,0 +1,244 @@
+//! The hybrid coordinator: fast-forward warming + detailed simulation,
+//! and the multi-threaded sweep runner behind the benches.
+//!
+//! gem5 runs hour-long boots by fast-forwarding with a functional CPU
+//! and switching to the detailed model at the region of interest.
+//! CXLRAMSim-rs does the same with its Layer-1/2 artifact: the init
+//! phase's access trace is pushed through the AOT-compiled Pallas cache
+//! model ([`crate::runtime::XlaRuntime::cache_warm`]) at vectorized
+//! speed, the resulting tag/LRU/dirty state is imported into the
+//! detailed caches, and only the measurement region runs event-driven.
+
+use anyhow::{bail, Result};
+
+use crate::cpu::WlOp;
+use crate::guestos::MemPolicy;
+use crate::runtime::{CacheState, XlaRuntime};
+use crate::system::Machine;
+use crate::trace::Trace;
+use crate::workloads::Workload;
+
+/// Wraps a workload so its init phase runs as *timed* stores through
+/// the detailed model — the "no fast-forward" baseline for the E7
+/// bench (everything simulated event-by-event).
+pub struct WithTimedInit<W: Workload> {
+    inner: W,
+    pairs: Vec<(u64, u64)>,
+    i: usize,
+    in_init: bool,
+    last_bits: u64,
+}
+
+impl<W: Workload> WithTimedInit<W> {
+    pub fn new(inner: W) -> Self {
+        WithTimedInit {
+            inner,
+            pairs: Vec::new(),
+            i: 0,
+            in_init: true,
+            last_bits: 0,
+        }
+    }
+}
+
+impl<W: Workload> Workload for WithTimedInit<W> {
+    fn name(&self) -> String {
+        format!("{}+timed-init", self.inner.name())
+    }
+    fn setup(
+        &mut self,
+        asp: &mut crate::guestos::AddressSpace,
+        policy: &MemPolicy,
+    ) {
+        self.inner.setup(asp, policy);
+        self.pairs = self.inner.init_data();
+    }
+    // No functional pre-init: the stores below do the initialization.
+    fn init_data(&self) -> Vec<(u64, u64)> {
+        Vec::new()
+    }
+    fn next_op(&mut self) -> Option<WlOp> {
+        if self.in_init {
+            if let Some(&(va, bits)) = self.pairs.get(self.i) {
+                self.i += 1;
+                self.last_bits = bits;
+                return Some(WlOp::Store { va, size: 8 });
+            }
+            self.in_init = false;
+        }
+        self.inner.next_op()
+    }
+    fn bytes_moved(&self) -> u64 {
+        self.inner.bytes_moved() + self.pairs.len() as u64 * 8
+    }
+    fn load_done(&mut self, va: u64, bits: u64) {
+        if !self.in_init {
+            self.inner.load_done(va, bits);
+        }
+    }
+    fn store_value(&mut self, va: u64) -> u64 {
+        if self.in_init {
+            self.last_bits
+        } else {
+            self.inner.store_value(va)
+        }
+    }
+    fn verify(
+        &self,
+        asp: &mut crate::guestos::AddressSpace,
+        alloc: &mut crate::guestos::PageAlloc,
+        mem: &crate::mem::PhysMem,
+    ) -> Result<(), String> {
+        self.inner.verify(asp, alloc, mem)
+    }
+}
+
+/// Capture the physical-line trace of a machine's init phase (per core).
+/// Must be called after `attach_workloads` (pages are faulted by then).
+pub fn capture_init_trace(m: &mut Machine, core: usize) -> Result<Trace> {
+    let pairs = m
+        .workload(core)
+        .map(|w| w.init_data())
+        .unwrap_or_default();
+    let line = m.cfg.l1.line;
+    let Some(guest) = m.guest.as_mut() else {
+        bail!("machine not booted");
+    };
+    let mut t = Trace::default();
+    for (va, _) in pairs {
+        let pa = m.spaces[core].translate(va, &mut guest.alloc)?;
+        t.push((pa / line) as i32, true);
+    }
+    Ok(t)
+}
+
+/// Outcome of a warming pass.
+#[derive(Clone, Debug)]
+pub struct WarmStats {
+    pub accesses: usize,
+    pub windows: usize,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub l1_occupancy: usize,
+    pub l2_occupancy: usize,
+}
+
+/// Fast-forward: push `trace` through the XLA cache model and import
+/// the warmed state into core `core`'s L1 and the shared L2.
+pub fn warm_machine(
+    m: &mut Machine,
+    rt: &XlaRuntime,
+    core: usize,
+    trace: &Trace,
+) -> Result<WarmStats> {
+    let man = &rt.manifest;
+    if m.l1s[core].sets != man.l1_sets
+        || m.l1s[core].ways != man.l1_ways
+        || m.l2.sets != man.l2_sets
+        || m.l2.ways != man.l2_ways
+    {
+        bail!(
+            "machine cache geometry (l1 {}x{}, l2 {}x{}) does not match \
+             the AOT artifact ({}x{}, {}x{}) — re-run `make artifacts` \
+             after changing python/compile/model.py",
+            m.l1s[core].sets,
+            m.l1s[core].ways,
+            m.l2.sets,
+            m.l2.ways,
+            man.l1_sets,
+            man.l1_ways,
+            man.l2_sets,
+            man.l2_ways
+        );
+    }
+    // Export current detailed state into kernel layout.
+    let (t, v, d, l) = m.l1s[core].export_state();
+    let mut l1 = CacheState { sets: man.l1_sets, ways: man.l1_ways, tags: t, valid: v, dirty: d, lru: l };
+    let (t, v, d, l) = m.l2.export_state();
+    let mut l2 = CacheState { sets: man.l2_sets, ways: man.l2_ways, tags: t, valid: v, dirty: d, lru: l };
+
+    let mut stats = WarmStats {
+        accesses: trace.len(),
+        windows: 0,
+        l1_hits: 0,
+        l2_hits: 0,
+        l1_occupancy: 0,
+        l2_occupancy: 0,
+    };
+    let mut t0 = 1i32;
+    for (addrs, writes) in trace.windows(man.window) {
+        let r = rt.cache_warm(addrs, writes, t0, &l1, &l2)?;
+        stats.windows += 1;
+        stats.l1_hits += r.hit1.iter().filter(|&&h| h == 1).count() as u64;
+        stats.l2_hits += r.hit2.iter().filter(|&&h| h == 1).count() as u64;
+        l1 = r.l1;
+        l2 = r.l2;
+        t0 = t0.wrapping_add(man.window as i32);
+    }
+    stats.l1_occupancy = l1.occupancy();
+    stats.l2_occupancy = l2.occupancy();
+
+    m.l1s[core].import_state(&l1.tags, &l1.valid, &l1.dirty, &l1.lru);
+    m.l2.import_state(&l2.tags, &l2.valid, &l2.dirty, &l2.lru);
+    // Rebuild the directory for the imported L1 lines so inclusion and
+    // coherence bookkeeping stay exact after the fast-forward boundary.
+    for (line, state) in m.l1s[core].valid_lines() {
+        m.dir.note_import(line, core as u8, state.writable());
+    }
+    Ok(stats)
+}
+
+/// Multi-threaded sweep runner: runs `points` through `f` on worker
+/// threads (each worker builds its own machine — nothing is shared),
+/// preserving input order in the output.
+pub fn run_sweep<P, R, F>(points: Vec<P>, threads: usize, f: F) -> Vec<R>
+where
+    P: Send + 'static,
+    R: Send + 'static,
+    F: Fn(P) -> R + Send + Sync + 'static,
+{
+    let threads = threads.max(1);
+    let f = std::sync::Arc::new(f);
+    let work: Vec<(usize, P)> = points.into_iter().enumerate().collect();
+    let queue = std::sync::Arc::new(std::sync::Mutex::new(work));
+    let results = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    let mut handles = Vec::new();
+    for _ in 0..threads {
+        let q = queue.clone();
+        let r = results.clone();
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let item = q.lock().unwrap().pop();
+            let Some((idx, p)) = item else { break };
+            let out = f(p);
+            r.lock().unwrap().push((idx, out));
+        }));
+    }
+    for h in handles {
+        h.join().expect("sweep worker panicked");
+    }
+    let mut out = std::sync::Arc::try_unwrap(results)
+        .ok()
+        .expect("workers done")
+        .into_inner()
+        .unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_preserves_order_and_runs_all() {
+        let out = run_sweep((0..50u64).collect(), 4, |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sweep_single_thread_works() {
+        let out = run_sweep(vec![3u64, 1, 4], 1, |x| x + 1);
+        assert_eq!(out, vec![4, 2, 5]);
+    }
+}

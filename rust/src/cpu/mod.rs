@@ -1,0 +1,233 @@
+//! CPU models (paper Table I: In-order and Out-of-Order).
+//!
+//! Both models consume a workload's operation stream and differ in how
+//! much memory-level parallelism they extract:
+//!
+//! * **InOrder** ("Timing"-CPU analogue): one outstanding memory
+//!   operation; `Work` advances the issue clock; every miss fully
+//!   serializes. MLP = 1.
+//! * **OutOfOrder** (O3 analogue): up to `issue_width` ops issued per
+//!   cycle into an LSQ of `lsq_entries`; memory ops occupy an LSQ slot
+//!   until their response returns; the core stalls only when the LSQ
+//!   (or ROB occupancy proxy) is exhausted. Retirement is in-order.
+//!
+//! The microarchitectural simplification (no rename/bypass modeling) is
+//! documented in DESIGN.md §S9: what Fig. 5 needs is the contrast in
+//! outstanding-miss behaviour between the two models, which this
+//! captures; absolute IPC is calibratable via `issue_width`.
+
+use crate::config::{CpuModel, SimConfig};
+use crate::sim::{ReqId, Tick};
+use crate::stats::{Counter, Histogram, StatDump};
+
+/// One workload operation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WlOp {
+    /// Load `size` bytes at VA.
+    Load { va: u64, size: u32 },
+    /// Store `size` bytes at VA.
+    Store { va: u64, size: u32 },
+    /// Pure compute for `cycles`.
+    Work { cycles: u64 },
+}
+
+/// A memory op in flight from this core.
+#[derive(Clone, Copy, Debug)]
+pub struct InFlight {
+    pub req: ReqId,
+    pub issued_at: Tick,
+    pub is_store: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CoreStats {
+    pub loads: Counter,
+    pub stores: Counter,
+    pub work_cycles: Counter,
+    pub lsq_full_stalls: Counter,
+    pub mem_latency: Histogram,
+    pub finished_at: Tick,
+}
+
+/// Per-core issue state machine. The system layer drives it:
+/// `can_issue` -> pull an op from the workload -> `begin_mem`/`do_work`;
+/// responses come back via `complete_mem`.
+#[derive(Clone, Debug)]
+pub struct Core {
+    pub id: u8,
+    pub model: CpuModel,
+    cycle_ticks: Tick,
+    issue_width: usize,
+    lsq_cap: usize,
+    inflight: Vec<InFlight>,
+    /// Next tick at which the front-end may issue (advanced by Work and
+    /// by issue-width accounting).
+    pub next_issue: Tick,
+    /// Ops issued in the current cycle window.
+    issued_this_cycle: usize,
+    pub done: bool,
+    pub stats: CoreStats,
+}
+
+impl Core {
+    pub fn new(id: u8, cfg: &SimConfig) -> Self {
+        let (issue_width, lsq_cap) = match cfg.cpu_model {
+            CpuModel::InOrder => (1, 1),
+            CpuModel::OutOfOrder => (cfg.issue_width, cfg.lsq_entries),
+        };
+        Core {
+            id,
+            model: cfg.cpu_model,
+            cycle_ticks: crate::sim::ns_to_ticks(cfg.cycle_ns()).max(1),
+            issue_width,
+            lsq_cap,
+            inflight: Vec::new(),
+            next_issue: 0,
+            issued_this_cycle: 0,
+            done: false,
+            stats: CoreStats::default(),
+        }
+    }
+
+    pub fn lsq_free(&self) -> bool {
+        self.inflight.len() < self.lsq_cap
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Can the front-end issue at `now`?
+    pub fn can_issue(&self, now: Tick) -> bool {
+        !self.done && now >= self.next_issue && self.lsq_free()
+    }
+
+    fn charge_issue_slot(&mut self, now: Tick) {
+        self.issued_this_cycle += 1;
+        if self.issued_this_cycle >= self.issue_width {
+            self.issued_this_cycle = 0;
+            self.next_issue = now + self.cycle_ticks;
+        }
+    }
+
+    /// Record a memory op entering the machine.
+    pub fn begin_mem(&mut self, now: Tick, req: ReqId, is_store: bool) {
+        debug_assert!(self.lsq_free());
+        if is_store {
+            self.stats.stores.inc();
+        } else {
+            self.stats.loads.inc();
+        }
+        self.inflight.push(InFlight { req, issued_at: now, is_store });
+        self.charge_issue_slot(now);
+    }
+
+    /// Record pure compute: advances the issue clock.
+    pub fn do_work(&mut self, now: Tick, cycles: u64) {
+        self.stats.work_cycles.add(cycles);
+        self.next_issue =
+            self.next_issue.max(now) + cycles * self.cycle_ticks;
+        self.issued_this_cycle = 0;
+    }
+
+    /// A response arrived; returns the original issue tick.
+    pub fn complete_mem(&mut self, now: Tick, req: ReqId) -> Option<Tick> {
+        let idx = self.inflight.iter().position(|f| f.req == req)?;
+        // Order is irrelevant (lookup is by id): avoid the O(n) shift.
+        let f = self.inflight.swap_remove(idx);
+        self.stats.mem_latency.sample(now - f.issued_at);
+        // In-order core blocks the front-end on the outstanding op.
+        if self.model == CpuModel::InOrder {
+            self.next_issue = self.next_issue.max(now);
+        }
+        Some(f.issued_at)
+    }
+
+    pub fn note_lsq_stall(&mut self) {
+        self.stats.lsq_full_stalls.inc();
+    }
+
+    pub fn finish(&mut self, now: Tick) {
+        self.done = true;
+        self.stats.finished_at = now;
+    }
+
+    pub fn dump(&self, path: &str, d: &mut StatDump) {
+        d.counter(&format!("{path}.loads"), &self.stats.loads);
+        d.counter(&format!("{path}.stores"), &self.stats.stores);
+        d.counter(&format!("{path}.work_cycles"), &self.stats.work_cycles);
+        d.counter(
+            &format!("{path}.lsq_full_stalls"),
+            &self.stats.lsq_full_stalls,
+        );
+        d.hist(&format!("{path}.mem_latency"), &self.stats.mem_latency);
+        d.push(&format!("{path}.finished_at"), self.stats.finished_at as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(model: CpuModel) -> SimConfig {
+        let mut c = SimConfig::default();
+        c.cpu_model = model;
+        c
+    }
+
+    #[test]
+    fn inorder_single_outstanding() {
+        let mut c = Core::new(0, &cfg(CpuModel::InOrder));
+        assert!(c.can_issue(0));
+        c.begin_mem(0, 1, false);
+        assert!(!c.lsq_free());
+        assert!(!c.can_issue(1000));
+        c.complete_mem(5000, 1);
+        assert!(c.can_issue(5000));
+        assert_eq!(c.stats.mem_latency.stats.mean(), 5000.0);
+    }
+
+    #[test]
+    fn o3_extracts_mlp() {
+        let mut c = Core::new(0, &cfg(CpuModel::OutOfOrder));
+        let mut t = 0;
+        let mut n = 0;
+        // Issue until LSQ fills.
+        while c.can_issue(t) {
+            c.begin_mem(t, n, false);
+            n += 1;
+            if c.issued_this_cycle == 0 {
+                t = c.next_issue;
+            }
+        }
+        assert_eq!(c.outstanding(), 48); // default lsq_entries
+        // 4-wide: 48 ops take 12 cycles of issue.
+        assert!(t >= 11 * c.cycle_ticks);
+    }
+
+    #[test]
+    fn issue_width_paces_front_end() {
+        let mut c = Core::new(0, &cfg(CpuModel::OutOfOrder));
+        for i in 0..4 {
+            assert!(c.can_issue(0), "op {i} should fit in cycle 0");
+            c.begin_mem(0, i, false);
+        }
+        assert!(!c.can_issue(0), "5th op must wait a cycle");
+        assert!(c.can_issue(c.next_issue));
+    }
+
+    #[test]
+    fn work_advances_clock() {
+        let mut c = Core::new(0, &cfg(CpuModel::InOrder));
+        c.do_work(0, 10);
+        assert!(!c.can_issue(0));
+        assert!(c.can_issue(10 * c.cycle_ticks));
+        assert_eq!(c.stats.work_cycles.get(), 10);
+    }
+
+    #[test]
+    fn complete_unknown_req_is_none() {
+        let mut c = Core::new(0, &cfg(CpuModel::OutOfOrder));
+        assert!(c.complete_mem(0, 99).is_none());
+    }
+}

@@ -1,0 +1,312 @@
+//! CXL mailbox + doorbell command engine (Set 3 of Fig. 3).
+//!
+//! The host writes opcode + payload into the BAR-mapped mailbox
+//! registers and rings the doorbell (MB_CTRL bit 0); the device executes
+//! the command, clears the doorbell and posts a return code in
+//! MB_STATUS. The paper highlights this as the mechanism that lets the
+//! unmodified CXL-CLI/ndctl user-space toolchain talk to the modeled
+//! device ("Doorbell mechanism", §III-B.1) — our `guestos::cxlcli`
+//! drives exactly this surface.
+
+use super::regs::dev;
+
+/// Memory-device command opcodes (CXL 2.0 §8.2.9.5).
+pub mod opcode {
+    pub const IDENTIFY_MEMORY_DEVICE: u16 = 0x4000;
+    pub const GET_PARTITION_INFO: u16 = 0x4100;
+    pub const SET_PARTITION_INFO: u16 = 0x4101;
+    pub const GET_HEALTH_INFO: u16 = 0x4200;
+}
+
+/// Mailbox return codes (§8.2.8.4.5.1).
+pub mod retcode {
+    pub const SUCCESS: u16 = 0x0000;
+    pub const INVALID_INPUT: u16 = 0x0002;
+    pub const UNSUPPORTED: u16 = 0x0003;
+    pub const BUSY: u16 = 0x0006;
+}
+
+/// Multiple of capacity used by partition registers (256 MiB units).
+pub const CAP_MULTIPLE: u64 = 256 << 20;
+
+/// Device-side state the commands operate on.
+#[derive(Clone, Debug)]
+pub struct MemdevState {
+    pub total_capacity: u64,
+    /// Volatile-only SLD: active volatile capacity (rest is unprovisioned
+    /// until SET_PARTITION_INFO — gives the partition commands teeth).
+    pub volatile_capacity: u64,
+    pub serial: u64,
+    pub fw_revision: [u8; 16],
+}
+
+impl MemdevState {
+    pub fn new(total_capacity: u64, serial: u64) -> Self {
+        let mut fw = [0u8; 16];
+        fw[..9].copy_from_slice(b"cxlrs-1.0");
+        MemdevState {
+            total_capacity,
+            volatile_capacity: total_capacity,
+            serial,
+            fw_revision: fw,
+        }
+    }
+}
+
+/// The mailbox register file + execution engine.
+#[derive(Clone, Debug)]
+pub struct Mailbox {
+    regs: std::collections::BTreeMap<u64, u64>,
+    payload: Vec<u8>,
+    pub state: MemdevState,
+    pub commands_executed: u64,
+}
+
+impl Mailbox {
+    pub fn new(state: MemdevState) -> Self {
+        let mut mb = Mailbox {
+            regs: Default::default(),
+            payload: vec![0u8; dev::MB_PAYLOAD_BYTES],
+            state,
+            commands_executed: 0,
+        };
+        // Payload size: log2(512) = 9.
+        mb.regs.insert(dev::MB_CAPS, 9);
+        // Capabilities array: id 0, 1 entry (primary mailbox).
+        mb.regs.insert(dev::CAP_ARRAY, 1u64 << 32);
+        mb.regs.insert(dev::MEMDEV_STATUS, dev::MEDIA_READY);
+        mb
+    }
+
+    // ---- MMIO surface ---------------------------------------------------
+    pub fn read64(&self, off: u64) -> u64 {
+        if (dev::MB_PAYLOAD..dev::MB_PAYLOAD + dev::MB_PAYLOAD_BYTES as u64)
+            .contains(&off)
+        {
+            let i = (off - dev::MB_PAYLOAD) as usize;
+            let mut b = [0u8; 8];
+            let n = (self.payload.len() - i).min(8);
+            b[..n].copy_from_slice(&self.payload[i..i + n]);
+            return u64::from_le_bytes(b);
+        }
+        *self.regs.get(&off).unwrap_or(&0)
+    }
+
+    pub fn write64(&mut self, off: u64, v: u64) {
+        if (dev::MB_PAYLOAD..dev::MB_PAYLOAD + dev::MB_PAYLOAD_BYTES as u64)
+            .contains(&off)
+        {
+            let i = (off - dev::MB_PAYLOAD) as usize;
+            let n = (self.payload.len() - i).min(8);
+            self.payload[i..i + n].copy_from_slice(&v.to_le_bytes()[..n]);
+            return;
+        }
+        match off {
+            dev::MB_CTRL => {
+                self.regs.insert(dev::MB_CTRL, v);
+                if v & 1 != 0 {
+                    self.execute();
+                }
+            }
+            dev::MB_CAPS | dev::MB_STATUS | dev::CAP_ARRAY
+            | dev::MEMDEV_STATUS => { /* RO */ }
+            _ => {
+                self.regs.insert(off, v);
+            }
+        }
+    }
+
+    pub fn doorbell_busy(&self) -> bool {
+        self.read64(dev::MB_CTRL) & 1 != 0
+    }
+
+    pub fn status_code(&self) -> u16 {
+        ((self.read64(dev::MB_STATUS) >> 32) & 0xFFFF) as u16
+    }
+
+    // ---- command execution ----------------------------------------------
+    fn finish(&mut self, code: u16, resp: &[u8]) {
+        self.payload[..resp.len()].copy_from_slice(resp);
+        // Encode response length back into MB_CMD's length field.
+        let cmd = self.read64(dev::MB_CMD) & 0xFFFF;
+        self.regs
+            .insert(dev::MB_CMD, cmd | ((resp.len() as u64) << 16));
+        self.regs.insert(dev::MB_STATUS, (code as u64) << 32);
+        // Clear the doorbell: command complete.
+        self.regs.insert(dev::MB_CTRL, 0);
+        self.commands_executed += 1;
+    }
+
+    fn execute(&mut self) {
+        let cmd = self.read64(dev::MB_CMD);
+        let op = (cmd & 0xFFFF) as u16;
+        let len = ((cmd >> 16) & 0x1F_FFFF) as usize;
+        if len > self.payload.len() {
+            self.finish(retcode::INVALID_INPUT, &[]);
+            return;
+        }
+        match op {
+            opcode::IDENTIFY_MEMORY_DEVICE => {
+                // §8.2.9.5.1.1 layout (prefix): fw_revision[16],
+                // total_capacity (256MiB units, u64), volatile_only u64,
+                // persistent u64, partition alignment u64, serial at +63.
+                let mut r = vec![0u8; 80];
+                r[..16].copy_from_slice(&self.state.fw_revision);
+                let caps = self.state.total_capacity / CAP_MULTIPLE;
+                r[16..24].copy_from_slice(&caps.to_le_bytes());
+                let vol = self.state.volatile_capacity / CAP_MULTIPLE;
+                r[24..32].copy_from_slice(&vol.to_le_bytes());
+                // persistent = 0 (volatile SLD)
+                r[40..48]
+                    .copy_from_slice(&1u64.to_le_bytes()); // align: 256MiB
+                r[64..72].copy_from_slice(&self.state.serial.to_le_bytes());
+                self.finish(retcode::SUCCESS, &r);
+            }
+            opcode::GET_PARTITION_INFO => {
+                let mut r = vec![0u8; 32];
+                let vol = self.state.volatile_capacity / CAP_MULTIPLE;
+                r[0..8].copy_from_slice(&vol.to_le_bytes());
+                // next_volatile = active (no pending change)
+                r[8..16].copy_from_slice(&vol.to_le_bytes());
+                self.finish(retcode::SUCCESS, &r);
+            }
+            opcode::SET_PARTITION_INFO => {
+                if len < 8 {
+                    self.finish(retcode::INVALID_INPUT, &[]);
+                    return;
+                }
+                let units =
+                    u64::from_le_bytes(self.payload[..8].try_into().unwrap());
+                let bytes = units.saturating_mul(CAP_MULTIPLE);
+                if bytes > self.state.total_capacity {
+                    self.finish(retcode::INVALID_INPUT, &[]);
+                    return;
+                }
+                self.state.volatile_capacity = bytes;
+                self.finish(retcode::SUCCESS, &[]);
+            }
+            opcode::GET_HEALTH_INFO => {
+                let r = vec![0u8; 16]; // all-healthy
+                self.finish(retcode::SUCCESS, &r);
+            }
+            _ => self.finish(retcode::UNSUPPORTED, &[]),
+        }
+    }
+
+    /// Host-side convenience used by the cxl-cli emulation: run a
+    /// command through the real register surface (write payload, write
+    /// cmd, ring doorbell, poll, read response).
+    pub fn run_command(&mut self, op: u16, payload: &[u8]) -> (u16, Vec<u8>) {
+        for (i, chunk) in payload.chunks(8).enumerate() {
+            let mut b = [0u8; 8];
+            b[..chunk.len()].copy_from_slice(chunk);
+            self.write64(
+                dev::MB_PAYLOAD + (i * 8) as u64,
+                u64::from_le_bytes(b),
+            );
+        }
+        self.write64(
+            dev::MB_CMD,
+            (op as u64) | ((payload.len() as u64) << 16),
+        );
+        self.write64(dev::MB_CTRL, 1); // doorbell
+        // Poll the doorbell exactly like user space would.
+        let mut spins = 0;
+        while self.doorbell_busy() {
+            spins += 1;
+            assert!(spins < 1000, "device hung");
+        }
+        let code = self.status_code();
+        let resp_len =
+            ((self.read64(dev::MB_CMD) >> 16) & 0x1F_FFFF) as usize;
+        let mut resp = vec![0u8; resp_len];
+        for i in 0..resp_len.div_ceil(8) {
+            let v = self.read64(dev::MB_PAYLOAD + (i * 8) as u64);
+            let at = i * 8;
+            let n = (resp_len - at).min(8);
+            resp[at..at + n].copy_from_slice(&v.to_le_bytes()[..n]);
+        }
+        (code, resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mb() -> Mailbox {
+        Mailbox::new(MemdevState::new(4 << 30, 0xC0FFEE))
+    }
+
+    #[test]
+    fn identify_reports_capacity_and_serial() {
+        let mut m = mb();
+        let (code, resp) =
+            m.run_command(opcode::IDENTIFY_MEMORY_DEVICE, &[]);
+        assert_eq!(code, retcode::SUCCESS);
+        let total =
+            u64::from_le_bytes(resp[16..24].try_into().unwrap());
+        assert_eq!(total * CAP_MULTIPLE, 4 << 30);
+        let serial = u64::from_le_bytes(resp[64..72].try_into().unwrap());
+        assert_eq!(serial, 0xC0FFEE);
+        assert!(resp[..9].starts_with(b"cxlrs"));
+    }
+
+    #[test]
+    fn partition_get_set_roundtrip() {
+        let mut m = mb();
+        let (code, resp) = m.run_command(opcode::GET_PARTITION_INFO, &[]);
+        assert_eq!(code, retcode::SUCCESS);
+        let vol = u64::from_le_bytes(resp[0..8].try_into().unwrap());
+        assert_eq!(vol * CAP_MULTIPLE, 4 << 30);
+
+        // Shrink to 2 GiB.
+        let units = (2u64 << 30) / CAP_MULTIPLE;
+        let (code, _) =
+            m.run_command(opcode::SET_PARTITION_INFO, &units.to_le_bytes());
+        assert_eq!(code, retcode::SUCCESS);
+        let (_, resp) = m.run_command(opcode::GET_PARTITION_INFO, &[]);
+        let vol = u64::from_le_bytes(resp[0..8].try_into().unwrap());
+        assert_eq!(vol * CAP_MULTIPLE, 2 << 30);
+    }
+
+    #[test]
+    fn set_partition_beyond_capacity_rejected() {
+        let mut m = mb();
+        let units = (8u64 << 30) / CAP_MULTIPLE;
+        let (code, _) =
+            m.run_command(opcode::SET_PARTITION_INFO, &units.to_le_bytes());
+        assert_eq!(code, retcode::INVALID_INPUT);
+        assert_eq!(m.state.volatile_capacity, 4 << 30);
+    }
+
+    #[test]
+    fn unsupported_opcode() {
+        let mut m = mb();
+        let (code, _) = m.run_command(0x9999, &[]);
+        assert_eq!(code, retcode::UNSUPPORTED);
+    }
+
+    #[test]
+    fn doorbell_clears_after_execution() {
+        let mut m = mb();
+        m.write64(dev::MB_CMD, opcode::GET_HEALTH_INFO as u64);
+        m.write64(dev::MB_CTRL, 1);
+        assert!(!m.doorbell_busy());
+        assert_eq!(m.status_code(), retcode::SUCCESS);
+        assert_eq!(m.commands_executed, 1);
+    }
+
+    #[test]
+    fn media_ready_bit_set() {
+        let m = mb();
+        assert!(m.read64(dev::MEMDEV_STATUS) & dev::MEDIA_READY != 0);
+    }
+
+    #[test]
+    fn ro_registers_ignore_writes() {
+        let mut m = mb();
+        m.write64(dev::MB_CAPS, 0);
+        assert_eq!(m.read64(dev::MB_CAPS), 9);
+    }
+}

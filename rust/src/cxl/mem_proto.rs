@@ -1,0 +1,214 @@
+//! CXL.mem transaction layer (paper Fig. 4).
+//!
+//! Host-to-device traffic travels on the **M2S** (Master-to-Subordinate)
+//! channels, device-to-host on **S2M**:
+//!
+//! * M2S **Req**        — MemRd* reads (no data)           -> 1 flit
+//! * M2S **RwD**        — MemWr writes (request with data) -> header + 64B
+//! * S2M **NDR**        — No-Data Response: write completions (Cmp)
+//! * S2M **DRS**        — Data Response: read data (MemData), hdr + 64B
+//!
+//! The root complex *packetizes* host cache-line requests into these
+//! packets (opcode in the header), the endpoint *de-packetizes* and
+//! hands them to its media controller; responses take the reverse path.
+//! Opcodes and the packet header layout follow CXL 2.0 §3.3.
+
+use crate::sim::{MemCmd, Packet};
+
+/// M2S request opcodes (CXL 2.0 table 3-22; subset an SLD sees).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum M2SOpcode {
+    /// MemRd — read request, expects DRS MemData.
+    MemRd,
+    /// MemRdData — read, data-only semantics (no metadata).
+    MemRdData,
+    /// MemInv — invalidate (metadata only; used by back-invalidate
+    /// flows; carried for completeness).
+    MemInv,
+    /// MemWr — full-line write (travels on RwD with 64 B payload).
+    MemWr,
+    /// MemWrPtl — partial write (RwD + byte-enables).
+    MemWrPtl,
+}
+
+impl M2SOpcode {
+    /// Encoding per spec table (3-bit MemOpcode field).
+    pub fn encode(&self) -> u8 {
+        match self {
+            M2SOpcode::MemInv => 0b000,
+            M2SOpcode::MemRd => 0b001,
+            M2SOpcode::MemRdData => 0b010,
+            M2SOpcode::MemWr => 0b001, // RwD namespace
+            M2SOpcode::MemWrPtl => 0b010,
+        }
+    }
+
+    pub fn carries_data(&self) -> bool {
+        matches!(self, M2SOpcode::MemWr | M2SOpcode::MemWrPtl)
+    }
+}
+
+/// S2M response opcodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum S2MOpcode {
+    /// NDR Cmp — completion for writes (and MemInv).
+    Cmp,
+    /// DRS MemData — read data return.
+    MemData,
+}
+
+impl S2MOpcode {
+    pub fn carries_data(&self) -> bool {
+        matches!(self, S2MOpcode::MemData)
+    }
+}
+
+/// Direction + channel classification for stats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Channel {
+    M2SReq,
+    M2SRwD,
+    S2MNdr,
+    S2MDrs,
+}
+
+/// One CXL.mem protocol packet as carried over the link.
+#[derive(Clone, Debug)]
+pub struct CxlMemPacket {
+    pub channel: Channel,
+    pub m2s: Option<M2SOpcode>,
+    pub s2m: Option<S2MOpcode>,
+    /// Host physical address (line-aligned).
+    pub addr: u64,
+    /// Tag correlating request and response (CXL tag field).
+    pub tag: u16,
+    /// Total wire bytes: header + optional 64 B data slots.
+    pub wire_bytes: u64,
+    /// Original simulator request id (correlation only, not on wire).
+    pub req_id: u64,
+}
+
+/// CXL.mem header size on the wire: we charge one 16-byte slot
+/// (a 528-bit flit carries 4 slots; header occupies one).
+pub const HEADER_BYTES: u64 = 16;
+pub const DATA_BYTES: u64 = 64;
+
+/// Packetizer (root-complex side): host request -> M2S packet.
+/// Returns `None` for host commands that never cross the link
+/// (coherence-internal traffic stays above the RC).
+pub fn packetize(pkt: &Packet, tag: u16) -> Option<CxlMemPacket> {
+    let (channel, op, bytes) = match pkt.cmd {
+        MemCmd::ReadReq => {
+            (Channel::M2SReq, M2SOpcode::MemRd, HEADER_BYTES)
+        }
+        MemCmd::WriteReq | MemCmd::WritebackDirty => (
+            Channel::M2SRwD,
+            M2SOpcode::MemWr,
+            HEADER_BYTES + DATA_BYTES,
+        ),
+        _ => return None,
+    };
+    Some(CxlMemPacket {
+        channel,
+        m2s: Some(op),
+        s2m: None,
+        addr: pkt.addr,
+        tag,
+        wire_bytes: bytes,
+        req_id: pkt.id,
+    })
+}
+
+/// De-packetizer (endpoint side): M2S packet -> media operation.
+/// Returns (is_write, addr).
+pub fn depacketize(p: &CxlMemPacket) -> (bool, u64) {
+    let op = p.m2s.expect("depacketize on non-M2S packet");
+    (op.carries_data(), p.addr)
+}
+
+/// Build the S2M response for an M2S request.
+pub fn make_response(req: &CxlMemPacket) -> CxlMemPacket {
+    let op = req.m2s.expect("response to non-M2S packet");
+    let (channel, s2m, bytes) = if op.carries_data() {
+        // Writes complete with NDR Cmp (paper: "S2M No Data Response
+        // (NDR): completion of Write Requests").
+        (Channel::S2MNdr, S2MOpcode::Cmp, HEADER_BYTES)
+    } else {
+        // Reads return DRS MemData.
+        (Channel::S2MDrs, S2MOpcode::MemData, HEADER_BYTES + DATA_BYTES)
+    };
+    CxlMemPacket {
+        channel,
+        m2s: None,
+        s2m: Some(s2m),
+        addr: req.addr,
+        tag: req.tag,
+        wire_bytes: bytes,
+        req_id: req.req_id,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(cmd: MemCmd) -> Packet {
+        Packet::new(7, cmd, 0x1000, 64, 0, 0)
+    }
+
+    #[test]
+    fn read_packetizes_to_m2s_req() {
+        let p = packetize(&req(MemCmd::ReadReq), 3).unwrap();
+        assert_eq!(p.channel, Channel::M2SReq);
+        assert_eq!(p.m2s, Some(M2SOpcode::MemRd));
+        assert_eq!(p.wire_bytes, HEADER_BYTES);
+        assert_eq!(p.tag, 3);
+    }
+
+    #[test]
+    fn write_packetizes_to_rwd_with_data() {
+        let p = packetize(&req(MemCmd::WriteReq), 1).unwrap();
+        assert_eq!(p.channel, Channel::M2SRwD);
+        assert!(p.m2s.unwrap().carries_data());
+        assert_eq!(p.wire_bytes, HEADER_BYTES + DATA_BYTES);
+    }
+
+    #[test]
+    fn writeback_also_crosses_as_memwr() {
+        let p = packetize(&req(MemCmd::WritebackDirty), 1).unwrap();
+        assert_eq!(p.channel, Channel::M2SRwD);
+    }
+
+    #[test]
+    fn coherence_traffic_stays_local() {
+        assert!(packetize(&req(MemCmd::InvalidateReq), 0).is_none());
+        assert!(packetize(&req(MemCmd::UpgradeReq), 0).is_none());
+    }
+
+    #[test]
+    fn read_response_is_drs_with_data() {
+        let p = packetize(&req(MemCmd::ReadReq), 9).unwrap();
+        let r = make_response(&p);
+        assert_eq!(r.channel, Channel::S2MDrs);
+        assert_eq!(r.s2m, Some(S2MOpcode::MemData));
+        assert_eq!(r.wire_bytes, HEADER_BYTES + DATA_BYTES);
+        assert_eq!(r.tag, 9);
+    }
+
+    #[test]
+    fn write_response_is_ndr_cmp() {
+        let p = packetize(&req(MemCmd::WriteReq), 2).unwrap();
+        let r = make_response(&p);
+        assert_eq!(r.channel, Channel::S2MNdr);
+        assert_eq!(r.s2m, Some(S2MOpcode::Cmp));
+        assert!(!r.s2m.unwrap().carries_data());
+    }
+
+    #[test]
+    fn depacketize_extracts_media_op() {
+        let p = packetize(&req(MemCmd::WriteReq), 0).unwrap();
+        assert_eq!(depacketize(&p), (true, 0x1000));
+        let p = packetize(&req(MemCmd::ReadReq), 0).unwrap();
+        assert_eq!(depacketize(&p), (false, 0x1000));
+    }
+}

@@ -1,0 +1,26 @@
+//! CXL protocol + device models (the paper's §III-B).
+//!
+//! * [`regs`] — the three register sets of Fig. 3: DVSEC payloads
+//!   (Set 1: RC — GPF / Flexbus / Port / Register Locator), host-bridge
+//!   component registers incl. HDM decoders (Set 2), and the device
+//!   block with Mailbox + Status (Set 3).
+//! * [`mailbox`] — the doorbell-driven mailbox command engine the
+//!   CXL-CLI/ndctl emulations drive from "user space".
+//! * [`mem_proto`] — the CXL.mem transaction layer of Fig. 4: M2S
+//!   Req / RwD and S2M NDR / DRS with opcode-bearing headers,
+//!   packetization at the root complex, de-packetization at the device.
+//! * [`link`] — credit-based flit link with latency + bandwidth.
+//! * [`device`] — the Type-3 SLD endpoint: register surface + media.
+//! * [`root_complex`] — host side: HDM routing + packetizer.
+
+pub mod regs;
+pub mod mailbox;
+pub mod mem_proto;
+pub mod link;
+pub mod device;
+pub mod root_complex;
+
+pub use device::CxlDevice;
+pub use link::CxlLink;
+pub use mem_proto::{M2SOpcode, S2MOpcode};
+pub use root_complex::CxlRootComplex;

@@ -1,0 +1,309 @@
+//! CXL register surfaces (CXL 2.0+), Fig. 3's three register sets.
+//!
+//! Set 1 — Root-Complex DVSECs carried in PCIe config space:
+//!   GPF, Flexbus Port, CXL Device, and the Register Locator that points
+//!   the driver at the memory-mapped blocks below.
+//! Set 2 — Host-bridge / component registers (BAR-mapped, 64 KiB):
+//!   capability directory + the **HDM decoders** that place the device's
+//!   memory into the host physical address map.
+//! Set 3 — Device registers (BAR-mapped, 4 KiB): capabilities array,
+//!   **mailbox** (+ doorbell) and the memory-device status register.
+//!
+//! Layouts follow CXL 2.0 §8.1/§8.2 in structure (field packing inside a
+//! register is faithful where the guest driver reads it; unused fields
+//! are present but zero). Deviations are noted inline.
+
+/// ---- Component register block (Set 2) --------------------------------
+/// Offsets inside the 64 KiB component block (BAR0 of the endpoint /
+/// host-bridge window). CXL 2.0 puts CXL.cache/CXL.mem registers in the
+/// 0x1000-0x2000 range discovered via a capability directory at 0x0;
+/// we model the directory with one entry pointing at the HDM block.
+pub mod comp {
+    /// Capability directory header: [15:0] id=0x0001 (CXL cap), [23:16]
+    /// version, [31:24] entry count.
+    pub const CAP_HDR: u64 = 0x0000;
+    /// Directory entry 0: points at the HDM decoder capability block.
+    pub const CAP_ENTRY0: u64 = 0x0004;
+
+    /// HDM decoder capability block (CXL 2.0 §8.2.5.12).
+    pub const HDM_BASE: u64 = 0x1000;
+    /// [3:0] decoder count (encoded: 0 => 1 decoder, 1 => 2, ...).
+    pub const HDM_CAP: u64 = HDM_BASE;
+    /// bit[1] enable.
+    pub const HDM_GLOBAL_CTRL: u64 = HDM_BASE + 0x04;
+    /// Per-decoder stride and register offsets.
+    pub const HDM_DEC_STRIDE: u64 = 0x20;
+    pub const HDM_DEC0: u64 = HDM_BASE + 0x10;
+    pub const DEC_BASE_LO: u64 = 0x00;
+    pub const DEC_BASE_HI: u64 = 0x04;
+    pub const DEC_SIZE_LO: u64 = 0x08;
+    pub const DEC_SIZE_HI: u64 = 0x0C;
+    /// bit[9] commit (W), bit[10] committed (RO), bits[3:0] IG/IW=0 (no
+    /// device-side interleave for an SLD).
+    pub const DEC_CTRL: u64 = 0x10;
+
+    pub const CTRL_COMMIT: u32 = 1 << 9;
+    pub const CTRL_COMMITTED: u32 = 1 << 10;
+
+    pub const BLOCK_SIZE: u64 = 0x10000;
+}
+
+/// ---- Device register block (Set 3) ------------------------------------
+pub mod dev {
+    /// Device capabilities array header (§8.2.8.1): [15:0] cap-array id
+    /// 0x0000, [47:32] entry count. One entry: the primary mailbox.
+    pub const CAP_ARRAY: u64 = 0x0000;
+    pub const CAP_ENTRY0: u64 = 0x0010;
+
+    /// Mailbox registers (§8.2.8.4).
+    pub const MB_BASE: u64 = 0x0020;
+    /// [4:0] payload size as log2 (we expose 2^9 = 512 B).
+    pub const MB_CAPS: u64 = MB_BASE;
+    /// bit[0] doorbell.
+    pub const MB_CTRL: u64 = MB_BASE + 0x04;
+    /// [15:0] opcode, [36:16] payload length. 64-bit register.
+    pub const MB_CMD: u64 = MB_BASE + 0x08;
+    /// [47:32] return code. 64-bit register.
+    pub const MB_STATUS: u64 = MB_BASE + 0x10;
+    /// Background-op status (unused by SLD commands; present).
+    pub const MB_BG_STATUS: u64 = MB_BASE + 0x18;
+    /// Payload area.
+    pub const MB_PAYLOAD: u64 = MB_BASE + 0x20;
+    pub const MB_PAYLOAD_BYTES: usize = 512;
+
+    /// Memory-device status register (§8.2.8.3): bit[1] media ready.
+    pub const MEMDEV_STATUS: u64 = 0x0400;
+    pub const MEDIA_READY: u64 = 1 << 1;
+
+    pub const BLOCK_SIZE: u64 = 0x1000;
+}
+
+/// ---- DVSEC payload builders (Set 1) ------------------------------------
+/// Payload bytes begin *after* the 12-byte DVSEC header that
+/// `ConfigSpace::add_dvsec` emits, i.e. payload offset 0 == DVSEC+12.
+pub mod dvsec_payload {
+    /// PCIe DVSEC for CXL Devices (§8.1.3): capability + control +
+    /// status (+ capability2 with mem size multiplier).
+    /// cap bit2 = mem_capable, bit4 = HDM count (1 decoder), bit14 =
+    /// mailbox ready reporting.
+    pub fn cxl_device(mem_size: u64) -> Vec<u8> {
+        let mut p = vec![0u8; 0x24];
+        let cap: u16 = (1 << 2) | (1 << 4) | (1 << 14);
+        p[0..2].copy_from_slice(&cap.to_le_bytes());
+        let ctrl: u16 = 1 << 2; // mem_enable
+        p[2..4].copy_from_slice(&ctrl.to_le_bytes());
+        // Range 1 Size High/Low at payload +0x0C/+0x10 (spec DVSEC+0x18):
+        // size in 256 MiB multiples per spec; low dword carries
+        // memory_info_valid (bit0) and memory_active (bit1).
+        let hi = (mem_size >> 32) as u32;
+        let lo_flags: u32 = (mem_size as u32 & 0xF000_0000) | 0b11;
+        p[0x0C..0x10].copy_from_slice(&hi.to_le_bytes());
+        p[0x10..0x14].copy_from_slice(&lo_flags.to_le_bytes());
+        p
+    }
+
+    /// GPF (Global Persistent Flush) Device DVSEC (§8.1.7): phase
+    /// timeouts. Volatile expander: zeros are architecturally fine, but
+    /// the block must exist for the driver's feature walk.
+    pub fn gpf_device() -> Vec<u8> {
+        let mut p = vec![0u8; 0x10];
+        p[0] = 0x0F; // phase-2 duration scale/values (benign defaults)
+        p
+    }
+
+    /// Flex Bus Port DVSEC (§8.1.5): negotiated link state.
+    /// cap bit2 = mem_capable; status bit2 = mem_enabled.
+    pub fn flexbus_port() -> Vec<u8> {
+        let mut p = vec![0u8; 0x10];
+        let cap: u16 = 1 << 2;
+        p[0..2].copy_from_slice(&cap.to_le_bytes());
+        let status: u16 = 1 << 2;
+        p[8..10].copy_from_slice(&status.to_le_bytes());
+        p
+    }
+
+    /// Register Locator DVSEC (§8.1.9): entries of (BAR index, block id,
+    /// offset within BAR). Entry = 2 dwords: lo = bar[2:0] | id[15:8] |
+    /// offset_lo[31:16]; hi = offset_hi.
+    pub fn register_locator(entries: &[(u8, u8, u64)]) -> Vec<u8> {
+        let mut p = Vec::with_capacity(entries.len() * 8);
+        for &(bar, block_id, offset) in entries {
+            assert_eq!(offset & 0xFFFF, offset & 0xFFFF); // 64K aligned use
+            let lo: u32 = (bar as u32 & 0x7)
+                | ((block_id as u32) << 8)
+                | ((offset as u32 & 0xFFFF_0000) >> 0);
+            let hi: u32 = (offset >> 32) as u32;
+            p.extend_from_slice(&lo.to_le_bytes());
+            p.extend_from_slice(&hi.to_le_bytes());
+        }
+        p
+    }
+
+    /// Parse a register-locator payload (driver side).
+    pub fn parse_register_locator(p: &[u8]) -> Vec<(u8, u8, u64)> {
+        p.chunks_exact(8)
+            .map(|c| {
+                let lo = u32::from_le_bytes(c[0..4].try_into().unwrap());
+                let hi = u32::from_le_bytes(c[4..8].try_into().unwrap());
+                let bar = (lo & 0x7) as u8;
+                let id = ((lo >> 8) & 0xFF) as u8;
+                let off = ((hi as u64) << 32) | (lo as u64 & 0xFFFF_0000);
+                (bar, id, off)
+            })
+            .collect()
+    }
+}
+
+/// The component register block state machine (HDM decoders).
+#[derive(Clone, Debug)]
+pub struct ComponentRegs {
+    words: std::collections::BTreeMap<u64, u32>,
+    pub decoder_count: usize,
+}
+
+impl ComponentRegs {
+    pub fn new(decoder_count: usize) -> Self {
+        assert!((1..=10).contains(&decoder_count));
+        let mut r = ComponentRegs {
+            words: Default::default(),
+            decoder_count,
+        };
+        // Directory: id 0x0001, version 1, 1 entry; entry points at HDM.
+        r.words.insert(comp::CAP_HDR, 0x0001 | (1 << 16) | (1 << 24));
+        r.words
+            .insert(comp::CAP_ENTRY0, (0x0005 << 0) | ((comp::HDM_BASE as u32) << 8));
+        r.words
+            .insert(comp::HDM_CAP, (decoder_count as u32 - 1) & 0xF);
+        r.words.insert(comp::HDM_GLOBAL_CTRL, 0);
+        r
+    }
+
+    fn dec_reg(&self, i: usize, off: u64) -> u64 {
+        comp::HDM_DEC0 + (i as u64) * comp::HDM_DEC_STRIDE + off
+    }
+
+    pub fn read32(&self, off: u64) -> u32 {
+        *self.words.get(&off).unwrap_or(&0)
+    }
+
+    pub fn write32(&mut self, off: u64, v: u32) {
+        // Commit handling: setting COMMIT latches COMMITTED if the
+        // decoder programming is sane (non-zero size, aligned base).
+        for i in 0..self.decoder_count {
+            if off == self.dec_reg(i, comp::DEC_CTRL) {
+                let mut val = v & !comp::CTRL_COMMITTED;
+                if v & comp::CTRL_COMMIT != 0 {
+                    let (base, size) = self.decoder_range(i);
+                    if size > 0 && base % 4096 == 0 && size % 4096 == 0 {
+                        val |= comp::CTRL_COMMITTED;
+                    }
+                }
+                self.words.insert(off, val);
+                return;
+            }
+        }
+        self.words.insert(off, v);
+    }
+
+    pub fn decoder_range(&self, i: usize) -> (u64, u64) {
+        let base = (self.read32(self.dec_reg(i, comp::DEC_BASE_LO)) as u64)
+            | ((self.read32(self.dec_reg(i, comp::DEC_BASE_HI)) as u64) << 32);
+        let size = (self.read32(self.dec_reg(i, comp::DEC_SIZE_LO)) as u64)
+            | ((self.read32(self.dec_reg(i, comp::DEC_SIZE_HI)) as u64) << 32);
+        (base, size)
+    }
+
+    pub fn decoder_committed(&self, i: usize) -> bool {
+        self.read32(self.dec_reg(i, comp::DEC_CTRL)) & comp::CTRL_COMMITTED
+            != 0
+    }
+
+    pub fn hdm_enabled(&self) -> bool {
+        self.read32(comp::HDM_GLOBAL_CTRL) & 0b10 != 0
+    }
+
+    /// The committed, enabled address ranges (host physical -> device).
+    pub fn committed_ranges(&self) -> Vec<(u64, u64)> {
+        if !self.hdm_enabled() {
+            return vec![];
+        }
+        (0..self.decoder_count)
+            .filter(|&i| self.decoder_committed(i))
+            .map(|i| self.decoder_range(i))
+            .filter(|&(_, s)| s > 0)
+            .collect()
+    }
+
+    /// Driver-side helper: program decoder i to [base, base+size).
+    pub fn program_decoder(&mut self, i: usize, base: u64, size: u64) {
+        self.write32(self.dec_reg(i, comp::DEC_BASE_LO), base as u32);
+        self.write32(self.dec_reg(i, comp::DEC_BASE_HI), (base >> 32) as u32);
+        self.write32(self.dec_reg(i, comp::DEC_SIZE_LO), size as u32);
+        self.write32(self.dec_reg(i, comp::DEC_SIZE_HI), (size >> 32) as u32);
+        self.write32(self.dec_reg(i, comp::DEC_CTRL), comp::CTRL_COMMIT);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directory_points_at_hdm() {
+        let r = ComponentRegs::new(1);
+        let hdr = r.read32(comp::CAP_HDR);
+        assert_eq!(hdr & 0xFFFF, 0x0001);
+        assert_eq!(hdr >> 24, 1); // one entry
+        let e0 = r.read32(comp::CAP_ENTRY0);
+        assert_eq!((e0 >> 8) as u64, comp::HDM_BASE);
+    }
+
+    #[test]
+    fn decoder_commit_flow() {
+        let mut r = ComponentRegs::new(2);
+        assert!(!r.decoder_committed(0));
+        r.program_decoder(0, 0x1_0000_0000, 4 << 30);
+        assert!(r.decoder_committed(0));
+        assert_eq!(r.decoder_range(0), (0x1_0000_0000, 4 << 30));
+        // Not globally enabled yet -> no ranges.
+        assert!(r.committed_ranges().is_empty());
+        r.write32(comp::HDM_GLOBAL_CTRL, 0b10);
+        assert_eq!(r.committed_ranges(), vec![(0x1_0000_0000, 4 << 30)]);
+    }
+
+    #[test]
+    fn commit_rejects_unaligned() {
+        let mut r = ComponentRegs::new(1);
+        r.write32(comp::HDM_DEC0 + comp::DEC_BASE_LO, 123); // unaligned
+        r.write32(comp::HDM_DEC0 + comp::DEC_SIZE_LO, 4096);
+        r.write32(comp::HDM_DEC0 + comp::DEC_CTRL, comp::CTRL_COMMIT);
+        assert!(!r.decoder_committed(0));
+    }
+
+    #[test]
+    fn register_locator_roundtrip() {
+        let entries = vec![
+            (0u8, super::super::regs::dev_block_ids::COMPONENT, 0u64),
+            (2u8, super::super::regs::dev_block_ids::DEVICE, 0x1_0000u64),
+        ];
+        let p = dvsec_payload::register_locator(&entries);
+        assert_eq!(dvsec_payload::parse_register_locator(&p), entries);
+    }
+
+    #[test]
+    fn cxl_device_dvsec_flags() {
+        let p = dvsec_payload::cxl_device(4 << 30);
+        let cap = u16::from_le_bytes(p[0..2].try_into().unwrap());
+        assert!(cap & (1 << 2) != 0, "mem_capable");
+        let lo = u32::from_le_bytes(p[0x10..0x14].try_into().unwrap());
+        assert!(lo & 0b11 == 0b11, "info valid + active");
+    }
+}
+
+/// Register-block ids used in the Register Locator (re-export for
+/// convenience alongside `pcie::config_space`).
+pub mod dev_block_ids {
+    pub const COMPONENT: u8 = 0x01;
+    pub const BAR_VIRT: u8 = 0x02;
+    pub const DEVICE: u8 = 0x03;
+}

@@ -1,0 +1,207 @@
+//! The guest's CXL driver stack (cxl_acpi + cxl_pci + cxl_mem in one).
+//!
+//! Everything happens through architectural surfaces:
+//!   1. CEDT (CHBS/CFMWS) from ACPI tells it where the host-bridge
+//!      component registers and the fixed memory window live.
+//!   2. The memdev endpoint is matched by class code 0502xx from the
+//!      PCI scan; its DVSECs are walked via config MMIO; the Register
+//!      Locator DVSEC yields the BAR-relative component/device blocks.
+//!   3. The mailbox (doorbell poll) runs IDENTIFY to learn capacity.
+//!   4. HDM decoders are programmed + committed on BOTH the host bridge
+//!      and the endpoint, mapping the CFMWS window onto the device.
+
+use anyhow::{bail, Context, Result};
+
+use crate::cxl::regs::{comp, dev, dev_block_ids};
+use crate::cxl::mailbox::{opcode, retcode, CAP_MULTIPLE};
+use crate::pcie::config_space::{CXL_VENDOR_ID, DVSEC_CXL_DEVICE,
+                                DVSEC_REGISTER_LOCATOR};
+use crate::pcie::Bdf;
+
+use super::acpi_parse::AcpiInfo;
+use super::pci_scan::{self, PciDev};
+use super::Platform;
+
+/// What the driver bound and where.
+#[derive(Clone, Debug)]
+pub struct CxlMemdev {
+    pub bdf: Bdf,
+    pub serial: u64,
+    pub capacity: u64,
+    /// Host-physical window the HDM decoders map.
+    pub hpa_base: u64,
+    pub hpa_size: u64,
+    pub component_block: u64, // absolute MMIO base (endpoint)
+    pub device_block: u64,    // absolute MMIO base (mailbox)
+    pub hb_component_block: u64,
+}
+
+/// Run a mailbox command through the device block MMIO (doorbell poll —
+/// the same loop user-space CXL-CLI ends up in via the kernel ioctl).
+pub fn mailbox_command(
+    p: &mut dyn Platform,
+    devblk: u64,
+    op: u16,
+    payload: &[u8],
+) -> Result<(u16, Vec<u8>)> {
+    if p.mmio_read64(devblk + dev::MB_CTRL) & 1 != 0 {
+        bail!("mailbox busy before command");
+    }
+    for (i, chunk) in payload.chunks(8).enumerate() {
+        let mut b = [0u8; 8];
+        b[..chunk.len()].copy_from_slice(chunk);
+        p.mmio_write64(
+            devblk + dev::MB_PAYLOAD + (i * 8) as u64,
+            u64::from_le_bytes(b),
+        );
+    }
+    p.mmio_write64(
+        devblk + dev::MB_CMD,
+        (op as u64) | ((payload.len() as u64) << 16),
+    );
+    p.mmio_write64(devblk + dev::MB_CTRL, 1);
+    let mut spins = 0u32;
+    while p.mmio_read64(devblk + dev::MB_CTRL) & 1 != 0 {
+        spins += 1;
+        if spins > 10_000 {
+            bail!("mailbox doorbell stuck");
+        }
+    }
+    let code = ((p.mmio_read64(devblk + dev::MB_STATUS) >> 32) & 0xFFFF) as u16;
+    let rlen =
+        ((p.mmio_read64(devblk + dev::MB_CMD) >> 16) & 0x1F_FFFF) as usize;
+    let mut resp = vec![0u8; rlen];
+    for i in 0..rlen.div_ceil(8) {
+        let v = p.mmio_read64(devblk + dev::MB_PAYLOAD + (i * 8) as u64);
+        let at = i * 8;
+        let n = (rlen - at).min(8);
+        resp[at..at + n].copy_from_slice(&v.to_le_bytes()[..n]);
+    }
+    Ok((code, resp))
+}
+
+/// Program and commit decoder 0 of a component block at `blk` to map
+/// `[base, base+size)`.
+fn commit_decoder(
+    p: &mut dyn Platform,
+    blk: u64,
+    base: u64,
+    size: u64,
+) -> Result<()> {
+    let dec = blk + comp::HDM_DEC0;
+    p.mmio_write32((dec + comp::DEC_BASE_LO) as u64, base as u32);
+    p.mmio_write32(dec + comp::DEC_BASE_HI, (base >> 32) as u32);
+    p.mmio_write32(dec + comp::DEC_SIZE_LO, size as u32);
+    p.mmio_write32(dec + comp::DEC_SIZE_HI, (size >> 32) as u32);
+    p.mmio_write32(dec + comp::DEC_CTRL, comp::CTRL_COMMIT);
+    let ctrl = p.mmio_read32(dec + comp::DEC_CTRL);
+    if ctrl & comp::CTRL_COMMITTED == 0 {
+        bail!("HDM decoder refused commit (ctrl={ctrl:#x})");
+    }
+    // Global enable (bit 1).
+    p.mmio_write32(blk + comp::HDM_GLOBAL_CTRL, 0b10);
+    Ok(())
+}
+
+/// Bind the CXL stack: locate, identify, map. `pci_devs` comes from the
+/// earlier enumeration pass.
+pub fn bind(
+    p: &mut dyn Platform,
+    acpi: &AcpiInfo,
+    pci_devs: &[PciDev],
+) -> Result<CxlMemdev> {
+    // 1. ACPI side: host bridge + window.
+    let chbs = acpi
+        .chbs
+        .first()
+        .context("no CHBS in CEDT — BIOS did not describe a CXL host bridge")?;
+    let cfmws = acpi
+        .cfmws
+        .iter()
+        .find(|w| w.targets.contains(&chbs.uid))
+        .context("no CFMWS targeting the host bridge")?;
+    if chbs.cxl_version == 0 {
+        bail!("CXL 1.1 host bridges unsupported (RCD mode)");
+    }
+
+    // 2. PCI side: the Type-3 memdev (class 0502).
+    let ep = pci_devs
+        .iter()
+        .find(|d| !d.is_bridge && d.class[0] == 0x05 && d.class[1] == 0x02)
+        .context("no CXL memory device on the PCIe bus")?;
+    let (ecam, ..) = acpi.ecam.context("no MCFG")?;
+
+    // 3. DVSEC walk: confirm CXL device + register locator.
+    let cxl_dvsec =
+        pci_scan::find_dvsec(p, ecam, ep.bdf, CXL_VENDOR_ID, DVSEC_CXL_DEVICE)
+            .context("endpoint lacks CXL Device DVSEC")?;
+    let caps = pci_scan::read_cfg_bytes(p, ecam, ep.bdf, cxl_dvsec + 12, 2);
+    let cap = u16::from_le_bytes(caps.try_into().unwrap());
+    if cap & (1 << 2) == 0 {
+        bail!("device is not mem_capable");
+    }
+    let rl = pci_scan::find_dvsec(
+        p,
+        ecam,
+        ep.bdf,
+        CXL_VENDOR_ID,
+        DVSEC_REGISTER_LOCATOR,
+    )
+    .context("endpoint lacks Register Locator DVSEC")?;
+    // Register locator payload: walk entries until both blocks found.
+    let payload = pci_scan::read_cfg_bytes(p, ecam, ep.bdf, rl + 12, 24);
+    let entries =
+        crate::cxl::regs::dvsec_payload::parse_register_locator(&payload);
+    let mut comp_off = None;
+    let mut dev_off = None;
+    for (bar, id, offset) in entries {
+        let base = ep
+            .bars
+            .iter()
+            .find(|b| b.index == bar as usize)
+            .map(|b| b.base + offset);
+        match id {
+            x if x == dev_block_ids::COMPONENT => comp_off = base,
+            x if x == dev_block_ids::DEVICE => dev_off = base,
+            _ => {}
+        }
+    }
+    let component_block =
+        comp_off.context("register locator lacks component block")?;
+    let device_block =
+        dev_off.context("register locator lacks device block")?;
+
+    // 4. Wait for media, then IDENTIFY through the mailbox.
+    if p.mmio_read64(device_block + dev::MEMDEV_STATUS) & dev::MEDIA_READY == 0
+    {
+        bail!("media not ready");
+    }
+    let (code, ident) =
+        mailbox_command(p, device_block, opcode::IDENTIFY_MEMORY_DEVICE, &[])?;
+    if code != retcode::SUCCESS {
+        bail!("IDENTIFY failed with code {code:#x}");
+    }
+    let capacity =
+        u64::from_le_bytes(ident[16..24].try_into().unwrap()) * CAP_MULTIPLE;
+    let serial = u64::from_le_bytes(ident[64..72].try_into().unwrap());
+    if capacity == 0 {
+        bail!("device reports zero capacity");
+    }
+    let map_size = capacity.min(cfmws.window_size);
+
+    // 5. HDM decoders: endpoint first, then host bridge (commit order
+    // matters on real hardware: leaf before root).
+    commit_decoder(p, component_block, cfmws.base_hpa, map_size)?;
+    commit_decoder(p, chbs.base, cfmws.base_hpa, map_size)?;
+
+    Ok(CxlMemdev {
+        bdf: ep.bdf,
+        serial,
+        capacity,
+        hpa_base: cfmws.base_hpa,
+        hpa_size: map_size,
+        component_block,
+        device_block,
+        hb_component_block: chbs.base,
+    })
+}

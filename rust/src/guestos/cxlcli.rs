@@ -1,0 +1,159 @@
+//! User-space tool emulations: `cxl list`, `cxl create-region`,
+//! `ndctl`-style onlining and `numactl`.
+//!
+//! The paper: "the CXL Command Line Interface (CXL-CLI) toolchain
+//! [..] in conjunction with numactl is used to 'online' and expose the
+//! CXL memory as CPU-less NUMA node". These commands operate strictly
+//! through the bound driver state and the mailbox register surface —
+//! the same layering as ndctl-on-ioctl-on-mailbox in a real system.
+
+use anyhow::{bail, Context, Result};
+
+use crate::cxl::mailbox::{opcode, retcode, CAP_MULTIPLE};
+
+use super::cxl_driver::{mailbox_command, CxlMemdev};
+use super::numa::{MemPolicy, NumaNode, PageAlloc};
+use super::Platform;
+
+/// `cxl list` — JSON-ish description of the bound memdev.
+pub fn cxl_list(p: &mut dyn Platform, md: &CxlMemdev) -> Result<String> {
+    let (code, resp) =
+        mailbox_command(p, md.device_block, opcode::GET_PARTITION_INFO, &[])?;
+    if code != retcode::SUCCESS {
+        bail!("GET_PARTITION_INFO failed: {code:#x}");
+    }
+    let vol = u64::from_le_bytes(resp[0..8].try_into().unwrap()) * CAP_MULTIPLE;
+    Ok(format!(
+        "{{\"memdev\":\"mem0\",\"pci\":\"{}\",\"serial\":\"{:#x}\",\
+         \"ram_size\":{},\"volatile\":{},\"host_window\":\"{:#x}\"}}",
+        md.bdf, md.serial, md.capacity, vol, md.hpa_base
+    ))
+}
+
+/// A created (but not yet onlined) region — `cxl create-region` output.
+#[derive(Clone, Debug)]
+pub struct CxlRegion {
+    pub base: u64,
+    pub size: u64,
+    pub node: u32,
+}
+
+/// `cxl create-region -t ram` — carve a RAM region out of the memdev's
+/// HDM-decoded window. `size` of 0 means "whole window".
+pub fn cxl_create_region(
+    p: &mut dyn Platform,
+    md: &CxlMemdev,
+    size: u64,
+    node: u32,
+) -> Result<CxlRegion> {
+    let size = if size == 0 { md.hpa_size } else { size };
+    if size > md.hpa_size {
+        bail!(
+            "region {size:#x} exceeds decoded window {:#x}",
+            md.hpa_size
+        );
+    }
+    // Sanity-check the device still responds (health check).
+    let (code, _) =
+        mailbox_command(p, md.device_block, opcode::GET_HEALTH_INFO, &[])?;
+    if code != retcode::SUCCESS {
+        bail!("device unhealthy: {code:#x}");
+    }
+    Ok(CxlRegion { base: md.hpa_base, size, node })
+}
+
+/// `daxctl online-memory` / `ndctl` equivalent: register the region as
+/// a CPU-less NUMA node and mark it online in the page allocator.
+pub fn online_region(
+    alloc: &mut PageAlloc,
+    region: &CxlRegion,
+) -> Result<u32> {
+    let id = region.node;
+    if (id as usize) < alloc.nodes.len() {
+        // Node exists (SRAT pre-declared it): just online.
+        if alloc.nodes[id as usize].online {
+            bail!("node {id} already online");
+        }
+    } else {
+        if id as usize != alloc.nodes.len() {
+            bail!("non-dense node id {id}");
+        }
+        alloc.add_node(NumaNode::new(id, region.base, region.size, false));
+    }
+    alloc.online(id);
+    Ok(id)
+}
+
+/// `numactl --interleave=.. / --membind=.. ./workload` — just resolves
+/// the policy string; the workload's address space carries it.
+pub fn numactl(policy: &str) -> Result<MemPolicy> {
+    MemPolicy::parse(policy).context("numactl: bad policy")
+}
+
+/// Flat-memory mode (paper §IV): the CXL capacity joins the *same*
+/// node as system DRAM — the OS sees one big pool. Implemented by
+/// growing node 0's range bookkeeping with a second extent.
+/// (Allocator-visible effect: node 0 gains the window's pages.)
+pub fn online_flat(
+    alloc: &mut PageAlloc,
+    region: &CxlRegion,
+) -> Result<()> {
+    // Represent the extra extent as a node that *reports* as node 0.
+    // PageAlloc requires dense ids, so flat mode adds the extent as the
+    // next node but flags it CPU-having (same affinity as node 0) —
+    // policies of "local" will spill into it naturally.
+    let id = alloc.nodes.len() as u32;
+    let mut n = NumaNode::new(id, region.base, region.size, true);
+    n.online = true;
+    alloc.add_node(n);
+    alloc.online(id);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::guestos::numa::NumaNode;
+
+    fn alloc_with_dram() -> PageAlloc {
+        let mut pa = PageAlloc::new(4096);
+        pa.add_node(NumaNode::new(0, 0, 1 << 20, true));
+        pa.online(0);
+        pa
+    }
+
+    #[test]
+    fn online_region_creates_znuma_node() {
+        let mut pa = alloc_with_dram();
+        let r = CxlRegion { base: 4 << 30, size: 1 << 20, node: 1 };
+        let id = online_region(&mut pa, &r).unwrap();
+        assert_eq!(id, 1);
+        assert!(pa.nodes[1].online);
+        assert!(!pa.nodes[1].has_cpus, "zNUMA node must be CPU-less");
+        // Double online fails.
+        assert!(online_region(&mut pa, &r).is_err());
+    }
+
+    #[test]
+    fn flat_mode_extends_local_allocation() {
+        let mut pa = alloc_with_dram();
+        let r = CxlRegion { base: 4 << 30, size: 1 << 20, node: 0 };
+        online_flat(&mut pa, &r).unwrap();
+        // Exhaust node 0 (256 pages) + spill into the flat extent.
+        let pol = MemPolicy::Local { home: 0 };
+        let mut spilled = false;
+        for seq in 0..300u64 {
+            let p = pa.alloc_page(&pol, seq).unwrap();
+            if p >= 4 << 30 {
+                spilled = true;
+            }
+        }
+        assert!(spilled, "flat mode must absorb overflow");
+    }
+
+    #[test]
+    fn numactl_parses() {
+        assert!(numactl("interleave:0=3,1=1").is_ok());
+        assert!(numactl("garbage").is_err());
+    }
+}

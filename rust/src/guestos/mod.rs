@@ -1,0 +1,170 @@
+//! Guest software stack model.
+//!
+//! The paper's headline claim is that CXLRAMSim needs **no kernel or
+//! driver patches** because the modeled firmware + device surfaces are
+//! architecturally correct. We substantiate the same claim structurally:
+//! this module consumes only (a) bytes in simulated physical memory
+//! (BIOS tables) and (b) MMIO through the [`Platform`] trait (ECAM
+//! config space, BAR-mapped CXL register blocks). It never reaches into
+//! simulator internals.
+//!
+//! Boot flow ([`GuestOs::boot`]):
+//!   E820 -> ACPI parse (incl. AML) -> NUMA init from SRAT ->
+//!   PCIe enumeration -> CXL driver bind (DVSEC walk, mailbox IDENTIFY,
+//!   HDM decoder programming) -> `cxl create-region` + online ->
+//!   zNUMA node 1 visible to the allocator.
+
+pub mod acpi_parse;
+pub mod cxl_driver;
+pub mod cxlcli;
+pub mod numa;
+pub mod pci_scan;
+pub mod vm;
+
+use anyhow::{Context, Result};
+
+use crate::bios::layout;
+use crate::mem::PhysMem;
+
+pub use acpi_parse::AcpiInfo;
+pub use cxl_driver::CxlMemdev;
+pub use cxlcli::CxlRegion;
+pub use numa::{MemPolicy, NumaNode, PageAlloc};
+pub use pci_scan::{MmioAllocator, PciDev};
+pub use vm::AddressSpace;
+
+/// MMIO access surface the guest drives (implemented by the machine:
+/// routes to ECAM, CXL component/device blocks, host-bridge block).
+pub trait Platform {
+    fn mmio_read32(&mut self, addr: u64) -> u32;
+    fn mmio_write32(&mut self, addr: u64, v: u32);
+    fn mmio_read64(&mut self, addr: u64) -> u64;
+    fn mmio_write64(&mut self, addr: u64, v: u64);
+}
+
+/// Memory-exposure programming model (paper §IV).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ProgModel {
+    #[default]
+    /// CXL memory as CPU-less NUMA node (zNUMA) — the default.
+    Znuma,
+    /// Flat mode: CXL capacity merged with system memory.
+    Flat,
+}
+
+/// The booted guest's state.
+pub struct GuestOs {
+    pub acpi: AcpiInfo,
+    pub pci_devs: Vec<PciDev>,
+    pub memdev: Option<CxlMemdev>,
+    pub alloc: PageAlloc,
+    pub cxl_node: Option<u32>,
+    pub boot_log: Vec<String>,
+}
+
+impl GuestOs {
+    /// Full boot. `mem` carries the BIOS tables; `p` is the MMIO world.
+    pub fn boot(
+        p: &mut dyn Platform,
+        mem: &PhysMem,
+        page_size: u64,
+        model: ProgModel,
+    ) -> Result<GuestOs> {
+        let mut log = Vec::new();
+
+        // --- firmware tables -------------------------------------------
+        let acpi = acpi_parse::parse(mem, layout::RSDP_ADDR & !0xFFFF)
+            .context("ACPI parse failed")?;
+        log.push(format!(
+            "acpi: {} cpus, {} memory affinities, {} CHBS, {} CFMWS",
+            acpi.cpu_apic_ids.len(),
+            acpi.mem_affinity.len(),
+            acpi.chbs.len(),
+            acpi.cfmws.len()
+        ));
+
+        // --- NUMA init from SRAT ----------------------------------------
+        let mut alloc = PageAlloc::new(page_size);
+        let mut srat_nodes: Vec<_> = acpi.mem_affinity.clone();
+        srat_nodes.sort_by_key(|m| m.domain);
+        for m in &srat_nodes {
+            let has_cpus = m.domain == 0; // SRAT cpu entries are domain 0
+            alloc.add_node(NumaNode::new(m.domain, m.base, m.length, has_cpus));
+            if m.enabled && !m.hotplug {
+                alloc.online(m.domain);
+                log.push(format!(
+                    "numa: node {} online ({} MiB)",
+                    m.domain,
+                    m.length >> 20
+                ));
+            } else {
+                log.push(format!(
+                    "numa: node {} deferred (hotplug)",
+                    m.domain
+                ));
+            }
+        }
+
+        // --- PCIe enumeration --------------------------------------------
+        let (ecam, _b0, b1) = acpi.ecam.context("no MCFG/ECAM")?;
+        // BAR window: host bridge _CRS second window, minus the CHBS
+        // block the BIOS reserved at its base.
+        let hb = acpi
+            .devices
+            .iter()
+            .find(|d| d.hid.as_deref() == Some("PNP0A08"))
+            .context("no PCIe host bridge in DSDT")?;
+        let (mmio_base, mmio_size) =
+            *hb.crs.get(1).context("host bridge lacks MMIO window")?;
+        let mut bar_alloc = MmioAllocator::new(
+            mmio_base + layout::CHBS_SIZE,
+            mmio_size - layout::CHBS_SIZE,
+        );
+        let pci_devs = pci_scan::enumerate(p, ecam, b1, &mut bar_alloc);
+        log.push(format!("pci: {} functions enumerated", pci_devs.len()));
+
+        // --- CXL driver -----------------------------------------------------
+        let memdev = match cxl_driver::bind(p, &acpi, &pci_devs) {
+            Ok(md) => {
+                log.push(format!(
+                    "cxl: mem0 bound at {} — {} MiB, window {:#x}",
+                    md.bdf,
+                    md.capacity >> 20,
+                    md.hpa_base
+                ));
+                Some(md)
+            }
+            Err(e) => {
+                log.push(format!("cxl: no memdev ({e})"));
+                None
+            }
+        };
+
+        // --- region creation + onlining ------------------------------------
+        let mut cxl_node = None;
+        if let Some(md) = &memdev {
+            match model {
+                ProgModel::Znuma => {
+                    let region = cxlcli::cxl_create_region(p, md, 0, 1)?;
+                    let id = cxlcli::online_region(&mut alloc, &region)?;
+                    cxl_node = Some(id);
+                    log.push(format!(
+                        "cxl-cli: region onlined as zNUMA node {id}"
+                    ));
+                }
+                ProgModel::Flat => {
+                    let region = cxlcli::cxl_create_region(p, md, 0, 0)?;
+                    cxlcli::online_flat(&mut alloc, &region)?;
+                    log.push("cxl-cli: region onlined in flat mode".into());
+                }
+            }
+        }
+
+        Ok(GuestOs { acpi, pci_devs, memdev, alloc, cxl_node, boot_log: log })
+    }
+
+    /// The zNUMA node id, if one was onlined.
+    pub fn znuma_node(&self) -> Option<u32> {
+        self.cxl_node
+    }
+}

@@ -1,0 +1,313 @@
+//! Guest NUMA topology + page allocator + memory policies.
+//!
+//! The SRAT gives node 0 (system DRAM, has CPUs) and — once the CXL
+//! driver onlines the expander — node 1 (the CPU-less **zNUMA** node).
+//! The page allocator hands out physical pages per policy; `numactl`'s
+//! `--interleave` / `--membind` / `--preferred` map 1:1 onto
+//! [`MemPolicy`], including the *weighted* interleave ratios the paper's
+//! Fig. 5 sweeps (e.g. 3:1 DRAM:CXL).
+
+use anyhow::{bail, Result};
+
+/// A memory policy for an allocation context (mirrors Linux mempolicy).
+#[derive(Clone, Debug, PartialEq)]
+pub enum MemPolicy {
+    /// Node-local (default): allocate from `home` until exhausted, then
+    /// fall back to any node with free pages.
+    Local { home: u32 },
+    /// Strict bind: only these nodes, OOM otherwise.
+    Bind { nodes: Vec<u32> },
+    /// Preferred node with fallback.
+    Preferred { node: u32 },
+    /// Weighted round-robin page interleave: `(node, weight)` pairs.
+    /// `numactl --interleave=0,1` == weights 1:1; HMSDK/SMDK-style
+    /// weighted tiering (e.g. 3:1) uses unequal weights.
+    Interleave { weights: Vec<(u32, u32)> },
+}
+
+impl MemPolicy {
+    /// Parse the numactl-ish syntax used by the CLI:
+    /// "local", "bind:0", "preferred:1", "interleave:0=3,1=1".
+    pub fn parse(s: &str) -> Result<MemPolicy> {
+        if s == "local" {
+            return Ok(MemPolicy::Local { home: 0 });
+        }
+        if let Some(rest) = s.strip_prefix("bind:") {
+            let nodes = rest
+                .split(',')
+                .map(|n| n.trim().parse::<u32>())
+                .collect::<Result<Vec<_>, _>>()?;
+            if nodes.is_empty() {
+                bail!("bind needs nodes");
+            }
+            return Ok(MemPolicy::Bind { nodes });
+        }
+        if let Some(rest) = s.strip_prefix("preferred:") {
+            return Ok(MemPolicy::Preferred { node: rest.trim().parse()? });
+        }
+        if let Some(rest) = s.strip_prefix("interleave:") {
+            let mut weights = Vec::new();
+            for part in rest.split(',') {
+                let part = part.trim();
+                if let Some((n, w)) = part.split_once('=') {
+                    weights.push((n.parse()?, w.parse()?));
+                } else {
+                    weights.push((part.parse()?, 1));
+                }
+            }
+            if weights.is_empty() || weights.iter().any(|&(_, w)| w == 0) {
+                bail!("bad interleave weights");
+            }
+            return Ok(MemPolicy::Interleave { weights });
+        }
+        bail!("unknown policy '{s}'")
+    }
+}
+
+/// One NUMA node's physical memory.
+#[derive(Clone, Debug)]
+pub struct NumaNode {
+    pub id: u32,
+    pub base: u64,
+    pub size: u64,
+    pub has_cpus: bool,
+    pub online: bool,
+    next_free: u64,
+    free_list: Vec<u64>,
+}
+
+impl NumaNode {
+    pub fn new(id: u32, base: u64, size: u64, has_cpus: bool) -> Self {
+        NumaNode {
+            id,
+            base,
+            size,
+            has_cpus,
+            online: false,
+            next_free: base,
+            free_list: Vec::new(),
+        }
+    }
+
+    pub fn free_pages(&self, page: u64) -> u64 {
+        (self.base + self.size - self.next_free) / page
+            + self.free_list.len() as u64
+    }
+
+    fn alloc(&mut self, page: u64) -> Option<u64> {
+        if !self.online {
+            return None;
+        }
+        if let Some(p) = self.free_list.pop() {
+            return Some(p);
+        }
+        if self.next_free + page <= self.base + self.size {
+            let p = self.next_free;
+            self.next_free += page;
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    fn free(&mut self, addr: u64) {
+        debug_assert!(addr >= self.base && addr < self.base + self.size);
+        self.free_list.push(addr);
+    }
+}
+
+/// The guest's physical page allocator across nodes.
+#[derive(Clone, Debug)]
+pub struct PageAlloc {
+    pub nodes: Vec<NumaNode>,
+    pub page: u64,
+    /// Interleave cursor state per policy instance is the caller's; the
+    /// allocator tracks per-node allocation counters for stats.
+    pub allocated: Vec<u64>,
+}
+
+impl PageAlloc {
+    pub fn new(page: u64) -> Self {
+        PageAlloc { nodes: Vec::new(), page, allocated: Vec::new() }
+    }
+
+    pub fn add_node(&mut self, node: NumaNode) {
+        assert_eq!(node.id as usize, self.nodes.len(), "ids must be dense");
+        self.nodes.push(node);
+        self.allocated.push(0);
+    }
+
+    pub fn online(&mut self, id: u32) {
+        self.nodes[id as usize].online = true;
+    }
+
+    pub fn node_of_addr(&self, addr: u64) -> Option<u32> {
+        self.nodes
+            .iter()
+            .find(|n| addr >= n.base && addr < n.base + n.size)
+            .map(|n| n.id)
+    }
+
+    fn alloc_on(&mut self, id: u32) -> Option<u64> {
+        let p = self.page;
+        let got = self.nodes.get_mut(id as usize)?.alloc(p);
+        if got.is_some() {
+            self.allocated[id as usize] += 1;
+        }
+        got
+    }
+
+    /// Allocate one page under `policy`; `seq` is the caller's page
+    /// sequence number (drives interleave round-robin).
+    pub fn alloc_page(
+        &mut self,
+        policy: &MemPolicy,
+        seq: u64,
+    ) -> Result<u64> {
+        let pick = match policy {
+            MemPolicy::Local { home } | MemPolicy::Preferred { node: home } => {
+                if let Some(p) = self.alloc_on(*home) {
+                    return Ok(p);
+                }
+                // Fallback: first online node with space.
+                (0..self.nodes.len() as u32)
+                    .find_map(|id| self.alloc_on(id))
+            }
+            MemPolicy::Bind { nodes } => nodes
+                .iter()
+                .find_map(|&id| self.alloc_on(id)),
+            MemPolicy::Interleave { weights } => {
+                let total: u64 =
+                    weights.iter().map(|&(_, w)| w as u64).sum();
+                let mut slot = seq % total;
+                let mut chosen = weights[0].0;
+                for &(n, w) in weights {
+                    if slot < w as u64 {
+                        chosen = n;
+                        break;
+                    }
+                    slot -= w as u64;
+                }
+                match self.alloc_on(chosen) {
+                    Some(p) => return Ok(p),
+                    None => (0..self.nodes.len() as u32)
+                        .find_map(|id| self.alloc_on(id)),
+                }
+            }
+        };
+        pick.ok_or_else(|| anyhow::anyhow!("out of memory (policy {policy:?})"))
+    }
+
+    pub fn free_page(&mut self, addr: u64) {
+        if let Some(id) = self.node_of_addr(addr) {
+            self.allocated[id as usize] =
+                self.allocated[id as usize].saturating_sub(1);
+            self.nodes[id as usize].free(addr);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> PageAlloc {
+        let mut pa = PageAlloc::new(4096);
+        pa.add_node(NumaNode::new(0, 0, 1 << 20, true)); // 256 pages
+        pa.add_node(NumaNode::new(1, 4 << 30, 1 << 20, false));
+        pa.online(0);
+        pa
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(
+            MemPolicy::parse("local").unwrap(),
+            MemPolicy::Local { home: 0 }
+        );
+        assert_eq!(
+            MemPolicy::parse("bind:1").unwrap(),
+            MemPolicy::Bind { nodes: vec![1] }
+        );
+        assert_eq!(
+            MemPolicy::parse("interleave:0,1").unwrap(),
+            MemPolicy::Interleave { weights: vec![(0, 1), (1, 1)] }
+        );
+        assert_eq!(
+            MemPolicy::parse("interleave:0=3,1=1").unwrap(),
+            MemPolicy::Interleave { weights: vec![(0, 3), (1, 1)] }
+        );
+        assert!(MemPolicy::parse("chaos").is_err());
+        assert!(MemPolicy::parse("interleave:0=0").is_err());
+    }
+
+    #[test]
+    fn offline_node_never_allocates() {
+        let mut pa = setup();
+        let pol = MemPolicy::Bind { nodes: vec![1] };
+        assert!(pa.alloc_page(&pol, 0).is_err());
+        pa.online(1);
+        assert!(pa.alloc_page(&pol, 0).is_ok());
+    }
+
+    #[test]
+    fn weighted_interleave_ratio_respected() {
+        // Bigger nodes so the 3:1 split fits without fallback.
+        let mut pa = PageAlloc::new(4096);
+        pa.add_node(NumaNode::new(0, 0, 4 << 20, true));
+        pa.add_node(NumaNode::new(1, 4 << 30, 4 << 20, false));
+        pa.online(0);
+        pa.online(1);
+        let pol = MemPolicy::Interleave { weights: vec![(0, 3), (1, 1)] };
+        for seq in 0..400u64 {
+            pa.alloc_page(&pol, seq).unwrap();
+        }
+        assert_eq!(pa.allocated[0], 300);
+        assert_eq!(pa.allocated[1], 100);
+    }
+
+    #[test]
+    fn local_falls_back_when_exhausted() {
+        let mut pa = setup();
+        pa.online(1);
+        let pol = MemPolicy::Local { home: 0 };
+        // Node 0 has 256 pages; allocate 300.
+        let mut on1 = 0;
+        for seq in 0..300u64 {
+            let p = pa.alloc_page(&pol, seq).unwrap();
+            if pa.node_of_addr(p) == Some(1) {
+                on1 += 1;
+            }
+        }
+        assert_eq!(on1, 44);
+    }
+
+    #[test]
+    fn bind_strict_oom() {
+        let mut pa = setup();
+        let pol = MemPolicy::Bind { nodes: vec![0] };
+        for seq in 0..256u64 {
+            pa.alloc_page(&pol, seq).unwrap();
+        }
+        assert!(pa.alloc_page(&pol, 999).is_err());
+    }
+
+    #[test]
+    fn free_recycles() {
+        let mut pa = setup();
+        let pol = MemPolicy::Local { home: 0 };
+        let p = pa.alloc_page(&pol, 0).unwrap();
+        pa.free_page(p);
+        // Freed page is reused.
+        let q = pa.alloc_page(&pol, 1).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn node_of_addr_maps_ranges() {
+        let pa = setup();
+        assert_eq!(pa.node_of_addr(0), Some(0));
+        assert_eq!(pa.node_of_addr(4 << 30), Some(1));
+        assert_eq!(pa.node_of_addr(2 << 30), None);
+    }
+}

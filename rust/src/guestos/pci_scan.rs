@@ -1,0 +1,218 @@
+//! Guest-side PCIe enumeration through ECAM MMIO.
+//!
+//! The guest only gets the ECAM base (from MCFG) and the MMIO window
+//! (from the host bridge's _CRS); everything else is discovered by
+//! config-space probing: vendor-id scan, header type, BAR sizing via the
+//! all-ones protocol, BAR assignment from a bump allocator over the
+//! window, and bridge secondary-bus walks — the same dance as a real
+//! kernel's `pci_scan_root_bus`.
+
+use crate::pcie::config_space::{off, CMD_BUS_MASTER, CMD_MEM_ENABLE};
+use crate::pcie::Bdf;
+
+use super::Platform;
+
+#[derive(Clone, Debug)]
+pub struct PciBar {
+    pub index: usize,
+    pub base: u64,
+    pub size: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct PciDev {
+    pub bdf: Bdf,
+    pub vendor: u16,
+    pub device: u16,
+    pub class: [u8; 3], // base, sub, prog-if
+    pub is_bridge: bool,
+    pub secondary_bus: u8,
+    pub bars: Vec<PciBar>,
+}
+
+/// Bump allocator over the MMIO window.
+#[derive(Clone, Debug)]
+pub struct MmioAllocator {
+    cursor: u64,
+    end: u64,
+}
+
+impl MmioAllocator {
+    pub fn new(base: u64, size: u64) -> Self {
+        MmioAllocator { cursor: base, end: base + size }
+    }
+
+    pub fn alloc(&mut self, size: u64) -> Option<u64> {
+        let align = size.max(4096);
+        let base = self.cursor.div_ceil(align) * align;
+        if base + size > self.end {
+            return None;
+        }
+        self.cursor = base + size;
+        Some(base)
+    }
+}
+
+fn cfg_addr(ecam: u64, bdf: Bdf, reg: usize) -> u64 {
+    ecam + bdf.ecam_offset() + reg as u64
+}
+
+fn cfg_r32(p: &mut dyn Platform, ecam: u64, bdf: Bdf, reg: usize) -> u32 {
+    p.mmio_read32(cfg_addr(ecam, bdf, reg))
+}
+
+fn cfg_w32(p: &mut dyn Platform, ecam: u64, bdf: Bdf, reg: usize, v: u32) {
+    p.mmio_write32(cfg_addr(ecam, bdf, reg), v);
+}
+
+fn cfg_r16(p: &mut dyn Platform, ecam: u64, bdf: Bdf, reg: usize) -> u16 {
+    let d = cfg_r32(p, ecam, bdf, reg & !3);
+    ((d >> ((reg & 2) * 8)) & 0xFFFF) as u16
+}
+
+/// Size and assign the BARs of one function.
+fn setup_bars(
+    p: &mut dyn Platform,
+    ecam: u64,
+    bdf: Bdf,
+    alloc: &mut MmioAllocator,
+) -> Vec<PciBar> {
+    let mut bars = Vec::new();
+    let mut idx = 0;
+    while idx < 6 {
+        let reg = off::BAR0 + idx * 4;
+        let orig = cfg_r32(p, ecam, bdf, reg);
+        cfg_w32(p, ecam, bdf, reg, 0xFFFF_FFFF);
+        let mask = cfg_r32(p, ecam, bdf, reg);
+        if mask == 0 || mask == 0xFFFF_FFFF {
+            cfg_w32(p, ecam, bdf, reg, orig);
+            idx += 1;
+            continue;
+        }
+        let is64 = mask & 0b110 == 0b100;
+        let size_mask = (mask & 0xFFFF_FFF0) as u64;
+        let size = (!size_mask).wrapping_add(1) & 0xFFFF_FFFF;
+        if let Some(base) = alloc.alloc(size) {
+            cfg_w32(p, ecam, bdf, reg, base as u32 | (mask & 0xF));
+            if is64 {
+                cfg_w32(p, ecam, bdf, reg + 4, (base >> 32) as u32);
+            }
+            bars.push(PciBar { index: idx, base, size });
+        }
+        idx += if is64 { 2 } else { 1 };
+    }
+    // Enable memory decoding + bus mastering.
+    let cmd = cfg_r32(p, ecam, bdf, off::COMMAND & !3);
+    cfg_w32(
+        p,
+        ecam,
+        bdf,
+        off::COMMAND & !3,
+        cmd | (CMD_MEM_ENABLE | CMD_BUS_MASTER) as u32,
+    );
+    bars
+}
+
+/// Enumerate buses `0..=last_bus`, sizing and assigning BARs.
+pub fn enumerate(
+    p: &mut dyn Platform,
+    ecam: u64,
+    last_bus: u8,
+    alloc: &mut MmioAllocator,
+) -> Vec<PciDev> {
+    let mut found = Vec::new();
+    for bus in 0..=last_bus {
+        for dev in 0..32u8 {
+            let bdf = Bdf::new(bus, dev, 0);
+            let id = cfg_r32(p, ecam, bdf, off::VENDOR_ID);
+            if id == 0xFFFF_FFFF {
+                continue;
+            }
+            let vendor = (id & 0xFFFF) as u16;
+            let device = (id >> 16) as u16;
+            let class_dword = cfg_r32(p, ecam, bdf, 0x08);
+            let class = [
+                (class_dword >> 24) as u8,
+                (class_dword >> 16) as u8,
+                (class_dword >> 8) as u8,
+            ];
+            let hdr = (cfg_r32(p, ecam, bdf, 0x0C) >> 16) as u8 & 0x7F;
+            let is_bridge = hdr == 0x01;
+            let secondary_bus = if is_bridge {
+                (cfg_r32(p, ecam, bdf, off::PRIMARY_BUS) >> 8) as u8
+            } else {
+                0
+            };
+            let bars = if is_bridge {
+                Vec::new()
+            } else {
+                setup_bars(p, ecam, bdf, alloc)
+            };
+            found.push(PciDev {
+                bdf,
+                vendor,
+                device,
+                class,
+                is_bridge,
+                secondary_bus,
+                bars,
+            });
+        }
+    }
+    found
+}
+
+/// Guest-side DVSEC walk over config space MMIO (mirrors
+/// `pci_find_dvsec_capability`).
+pub fn find_dvsec(
+    p: &mut dyn Platform,
+    ecam: u64,
+    bdf: Bdf,
+    vendor: u16,
+    dvsec_id: u16,
+) -> Option<usize> {
+    let mut ptr = 0x100usize;
+    loop {
+        let hdr = cfg_r32(p, ecam, bdf, ptr);
+        if hdr == 0 || hdr == 0xFFFF_FFFF {
+            return None;
+        }
+        if hdr & 0xFFFF == 0x0023 {
+            let v = cfg_r16(p, ecam, bdf, ptr + 4);
+            let id = cfg_r16(p, ecam, bdf, ptr + 8);
+            if v == vendor && id == dvsec_id {
+                return Some(ptr);
+            }
+        }
+        let next = (hdr >> 20) as usize & 0xFFC;
+        if next == 0 {
+            return None;
+        }
+        ptr = next;
+    }
+}
+
+/// Read a chunk of config space (for DVSEC payload parsing).
+pub fn read_cfg_bytes(
+    p: &mut dyn Platform,
+    ecam: u64,
+    bdf: Bdf,
+    reg: usize,
+    len: usize,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(len);
+    let mut r = reg;
+    while out.len() < len {
+        let d = cfg_r32(p, ecam, bdf, r & !3);
+        let b = d.to_le_bytes();
+        let start = r & 3;
+        for &x in &b[start..] {
+            if out.len() == len {
+                break;
+            }
+            out.push(x);
+        }
+        r = (r & !3) + 4;
+    }
+    out
+}

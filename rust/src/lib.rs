@@ -1,0 +1,46 @@
+//! # CXLRAMSim
+//!
+//! Full-system simulation of CXL memory-expander cards with the expander
+//! at its architecturally correct position: **on the I/O bus, behind a CXL
+//! Root Complex** — not on the memory bus (the shortcut taken by
+//! CXL-DMSim / SimCXL, reproduced here as the `baseline` module for the
+//! Fig.-1 ablation).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — discrete-event full-system simulator: CPU
+//!   models (in-order + O3), two-level MESI directory-coherent caches,
+//!   memory bus, I/O bus, PCIe hierarchy + ECAM config space, CXL.io
+//!   register sets (DVSEC, HDM decoders, mailbox/doorbell), the CXL.mem
+//!   transaction layer (M2S Req/RwD, S2M NDR/DRS) with packetization at
+//!   the root complex and de-packetization at the endpoint, an x86 BIOS
+//!   builder (E820/MADT/MCFG/SRAT/CEDT/DSDT) and a guest-OS model that
+//!   consumes those tables exactly as a real kernel would.
+//! * **L2/L1 (python/, build time only)** — JAX graphs + Pallas kernels,
+//!   AOT-lowered to `artifacts/*.hlo.txt`, executed from [`runtime`] via
+//!   the PJRT C API: functional cache warming (fast-forward) and the
+//!   differentiable latency-bandwidth calibration model.
+//!
+//! Start with [`system::System`] (topology + boot) or the
+//! `examples/quickstart.rs` end-to-end driver.
+
+pub mod util;
+pub mod stats;
+pub mod config;
+pub mod sim;
+pub mod mem;
+pub mod cache;
+pub mod bus;
+pub mod pcie;
+pub mod cxl;
+pub mod bios;
+pub mod guestos;
+pub mod cpu;
+pub mod workloads;
+pub mod system;
+pub mod baseline;
+pub mod runtime;
+pub mod coordinator;
+pub mod calibrate;
+pub mod trace;
+pub mod cli;

@@ -1,0 +1,10 @@
+//! cxlramsim — leader binary.
+
+fn main() {
+    cxlramsim::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = cxlramsim::cli::dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,8 @@
+//! Memory backends: DRAM timing model, memory controller queue and the
+//! sparse functional backing store.
+
+pub mod dram;
+pub mod physmem;
+
+pub use dram::{DramTiming, MemCtrl};
+pub use physmem::PhysMem;

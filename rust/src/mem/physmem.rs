@@ -1,0 +1,150 @@
+//! Sparse functional backing store.
+//!
+//! The simulator is functional-first: loads and stores actually move
+//! data, so STREAM can verify its results and the guest's page tables /
+//! BIOS tables are real bytes in simulated physical memory. Backed by a
+//! page-granular hash map so multi-GiB address spaces cost only what is
+//! touched.
+
+use crate::util::fxhash::FxHashMap;
+
+const PAGE: u64 = 4096;
+
+#[derive(Default)]
+pub struct PhysMem {
+    pages: FxHashMap<u64, Box<[u8; PAGE as usize]>>,
+}
+
+impl PhysMem {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn page_mut(&mut self, pfn: u64) -> &mut [u8; PAGE as usize] {
+        self.pages
+            .entry(pfn)
+            .or_insert_with(|| Box::new([0u8; PAGE as usize]))
+    }
+
+    pub fn write(&mut self, addr: u64, data: &[u8]) {
+        let mut off = 0usize;
+        while off < data.len() {
+            let a = addr + off as u64;
+            let pfn = a / PAGE;
+            let po = (a % PAGE) as usize;
+            let n = (PAGE as usize - po).min(data.len() - off);
+            self.page_mut(pfn)[po..po + n]
+                .copy_from_slice(&data[off..off + n]);
+            off += n;
+        }
+    }
+
+    pub fn read(&self, addr: u64, out: &mut [u8]) {
+        let mut off = 0usize;
+        while off < out.len() {
+            let a = addr + off as u64;
+            let pfn = a / PAGE;
+            let po = (a % PAGE) as usize;
+            let n = (PAGE as usize - po).min(out.len() - off);
+            match self.pages.get(&pfn) {
+                Some(p) => out[off..off + n].copy_from_slice(&p[po..po + n]),
+                None => out[off..off + n].fill(0),
+            }
+            off += n;
+        }
+    }
+
+    /// 8-byte read — the simulator's per-operation functional access.
+    /// Fast path for the (overwhelmingly common) page-internal case;
+    /// perf-pass change #2 (EXPERIMENTS.md §Perf).
+    pub fn read_u64(&self, addr: u64) -> u64 {
+        let po = (addr % PAGE) as usize;
+        if po <= PAGE as usize - 8 {
+            return match self.pages.get(&(addr / PAGE)) {
+                Some(p) => u64::from_le_bytes(
+                    p[po..po + 8].try_into().unwrap(),
+                ),
+                None => 0,
+            };
+        }
+        let mut b = [0u8; 8];
+        self.read(addr, &mut b);
+        u64::from_le_bytes(b)
+    }
+
+    pub fn write_u64(&mut self, addr: u64, v: u64) {
+        let po = (addr % PAGE) as usize;
+        if po <= PAGE as usize - 8 {
+            let p = self.page_mut(addr / PAGE);
+            p[po..po + 8].copy_from_slice(&v.to_le_bytes());
+            return;
+        }
+        self.write(addr, &v.to_le_bytes());
+    }
+
+    pub fn read_u32(&self, addr: u64) -> u32 {
+        let mut b = [0u8; 4];
+        self.read(addr, &mut b);
+        u32::from_le_bytes(b)
+    }
+
+    pub fn write_u32(&mut self, addr: u64, v: u32) {
+        self.write(addr, &v.to_le_bytes());
+    }
+
+    pub fn read_f64(&self, addr: u64) -> f64 {
+        f64::from_bits(self.read_u64(addr))
+    }
+
+    pub fn write_f64(&mut self, addr: u64, v: f64) {
+        self.write_u64(addr, v.to_bits());
+    }
+
+    /// Number of materialized pages (footprint accounting).
+    pub fn resident_pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_fill_default() {
+        let m = PhysMem::new();
+        let mut b = [1u8; 16];
+        m.read(0xdead_0000, &mut b);
+        assert_eq!(b, [0u8; 16]);
+    }
+
+    #[test]
+    fn rw_roundtrip_cross_page() {
+        let mut m = PhysMem::new();
+        let addr = PAGE - 3; // straddles two pages
+        m.write(addr, &[1, 2, 3, 4, 5, 6]);
+        let mut b = [0u8; 6];
+        m.read(addr, &mut b);
+        assert_eq!(b, [1, 2, 3, 4, 5, 6]);
+        assert_eq!(m.resident_pages(), 2);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let mut m = PhysMem::new();
+        m.write_u64(8, 0x0123456789abcdef);
+        assert_eq!(m.read_u64(8), 0x0123456789abcdef);
+        m.write_u32(100, 42);
+        assert_eq!(m.read_u32(100), 42);
+        m.write_f64(200, 3.5);
+        assert_eq!(m.read_f64(200), 3.5);
+    }
+
+    #[test]
+    fn sparse_footprint() {
+        let mut m = PhysMem::new();
+        m.write_u64(0, 1);
+        m.write_u64(1 << 40, 2); // a terabyte away
+        assert_eq!(m.resident_pages(), 2);
+    }
+}

@@ -1,0 +1,372 @@
+//! PCIe configuration space (4 KiB per function, PCIe ECAM-addressable).
+//!
+//! Real binary layout: Type-0/Type-1 headers, the classic capability
+//! list at 0x34, and PCIe *extended* capabilities from offset 0x100 —
+//! including the Designated Vendor-Specific Extended Capabilities
+//! (DVSEC) that CXL 2.0 §8.1 builds its discovery on. The guest's
+//! enumeration and CXL driver read these bytes exactly as Linux would
+//! (`pci_find_ext_capability`, DVSEC walk), which is the paper's "no
+//! kernel patches" claim in miniature.
+
+/// Classic header offsets (PCI 3.0 / PCIe).
+pub mod off {
+    pub const VENDOR_ID: usize = 0x00;
+    pub const DEVICE_ID: usize = 0x02;
+    pub const COMMAND: usize = 0x04;
+    pub const STATUS: usize = 0x06;
+    pub const REVISION: usize = 0x08;
+    pub const CLASS_PROG: usize = 0x09;
+    pub const CLASS_SUB: usize = 0x0A;
+    pub const CLASS_BASE: usize = 0x0B;
+    pub const HEADER_TYPE: usize = 0x0E;
+    pub const BAR0: usize = 0x10;
+    // Type 1 (bridge) specifics:
+    pub const PRIMARY_BUS: usize = 0x18;
+    pub const SECONDARY_BUS: usize = 0x19;
+    pub const SUBORDINATE_BUS: usize = 0x1A;
+    pub const MEM_BASE: usize = 0x20;
+    pub const MEM_LIMIT: usize = 0x22;
+    pub const CAP_PTR: usize = 0x34;
+    pub const EXT_CAP_START: usize = 0x100;
+}
+
+/// Status-register bit: capabilities list present.
+pub const STATUS_CAP_LIST: u16 = 1 << 4;
+/// Command-register bits.
+pub const CMD_MEM_ENABLE: u16 = 1 << 1;
+pub const CMD_BUS_MASTER: u16 = 1 << 2;
+
+/// PCIe extended capability IDs we emit.
+pub const EXTCAP_DVSEC: u16 = 0x0023;
+
+/// CXL DVSEC vendor ID (CXL consortium) and DVSEC IDs (CXL 2.0 §8.1).
+pub const CXL_VENDOR_ID: u16 = 0x1E98;
+pub const DVSEC_CXL_DEVICE: u16 = 0x0000; // §8.1.3 PCIe DVSEC for CXL devices
+pub const DVSEC_NON_CXL_FUNC: u16 = 0x0002;
+pub const DVSEC_GPF_PORT: u16 = 0x0003; // §8.1.6
+pub const DVSEC_GPF_DEVICE: u16 = 0x0004; // §8.1.7
+pub const DVSEC_FLEXBUS_PORT: u16 = 0x0007; // §8.1.5
+pub const DVSEC_REGISTER_LOCATOR: u16 = 0x0008; // §8.1.9
+
+/// Register-block identifiers inside the Register Locator DVSEC
+/// (CXL 2.0 table 8-22).
+pub const BLOCK_COMPONENT: u8 = 0x01;
+pub const BLOCK_BAR_VIRT: u8 = 0x02;
+pub const BLOCK_DEVICE: u8 = 0x03; // device registers (mailbox lives here)
+
+const CFG_SIZE: usize = 4096;
+
+/// One function's 4 KiB configuration space with BAR-sizing semantics.
+#[derive(Clone)]
+pub struct ConfigSpace {
+    bytes: Vec<u8>,
+    /// BAR size masks (0 = BAR not implemented). Index 0..6.
+    bar_size: [u64; 6],
+    /// Shadow of programmed BAR values.
+    bar_val: [u64; 6],
+    /// Next free offset for classic capabilities.
+    cap_tail: usize,
+    /// Next free offset for extended capabilities (0 = none yet).
+    ext_tail: usize,
+}
+
+impl ConfigSpace {
+    /// Type-0 (endpoint) header.
+    pub fn endpoint(vendor: u16, device: u16, class: [u8; 3]) -> Self {
+        let mut c = ConfigSpace {
+            bytes: vec![0; CFG_SIZE],
+            bar_size: [0; 6],
+            bar_val: [0; 6],
+            cap_tail: 0x40,
+            ext_tail: 0,
+        };
+        c.w16(off::VENDOR_ID, vendor);
+        c.w16(off::DEVICE_ID, device);
+        c.bytes[off::HEADER_TYPE] = 0x00;
+        c.bytes[off::CLASS_PROG] = class[2];
+        c.bytes[off::CLASS_SUB] = class[1];
+        c.bytes[off::CLASS_BASE] = class[0];
+        c
+    }
+
+    /// Type-1 (bridge / root port) header.
+    pub fn bridge(vendor: u16, device: u16) -> Self {
+        let mut c = Self::endpoint(vendor, device, [0x06, 0x04, 0x00]);
+        c.bytes[off::HEADER_TYPE] = 0x01;
+        c
+    }
+
+    pub fn is_bridge(&self) -> bool {
+        self.bytes[off::HEADER_TYPE] & 0x7F == 0x01
+    }
+
+    // -- raw accessors ---------------------------------------------------
+    pub fn r8(&self, o: usize) -> u8 {
+        self.bytes[o]
+    }
+    pub fn r16(&self, o: usize) -> u16 {
+        u16::from_le_bytes([self.bytes[o], self.bytes[o + 1]])
+    }
+    pub fn r32(&self, o: usize) -> u32 {
+        u32::from_le_bytes(self.bytes[o..o + 4].try_into().unwrap())
+    }
+    pub fn w8(&mut self, o: usize, v: u8) {
+        self.bytes[o] = v;
+    }
+    pub fn w16(&mut self, o: usize, v: u16) {
+        self.bytes[o..o + 2].copy_from_slice(&v.to_le_bytes());
+    }
+    pub fn w32(&mut self, o: usize, v: u32) {
+        self.bytes[o..o + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    // -- BARs --------------------------------------------------------------
+    /// Declare a 64-bit memory BAR of `size` bytes at BAR index `idx`
+    /// (consumes idx and idx+1).
+    pub fn add_bar64(&mut self, idx: usize, size: u64) {
+        assert!(idx < 5, "64-bit BAR needs two slots");
+        assert!(size.is_power_of_two() && size >= 4096);
+        self.bar_size[idx] = size;
+        // Type bits: 64-bit (0b10 << 1), non-prefetchable.
+        self.w32(off::BAR0 + idx * 4, 0b100);
+        self.w32(off::BAR0 + (idx + 1) * 4, 0);
+    }
+
+    /// Config write that honors BAR sizing protocol.
+    pub fn cfg_write32(&mut self, o: usize, v: u32) {
+        if (off::BAR0..off::BAR0 + 24).contains(&o) && (o - off::BAR0) % 4 == 0 {
+            let idx = (o - off::BAR0) / 4;
+            // Which BAR does this dword belong to?
+            let (base_idx, is_high) = if idx > 0 && self.bar_size[idx - 1] != 0
+                && self.bar_size[idx] == 0
+            {
+                (idx - 1, true)
+            } else {
+                (idx, false)
+            };
+            let size = self.bar_size[base_idx];
+            if size == 0 {
+                return; // unimplemented BAR: writes ignored, reads 0
+            }
+            let mask = !(size - 1);
+            let cur = self.bar_val[base_idx];
+            let new = if is_high {
+                (cur & 0xFFFF_FFFF) | ((v as u64) << 32)
+            } else {
+                (cur & !0xFFFF_FFFF) | (v as u64)
+            } & mask;
+            self.bar_val[base_idx] = new;
+            // Readback: low dword carries type bits; all-ones write reads
+            // back the size mask per the sizing protocol.
+            let lo = (new as u32 & mask as u32) | 0b100;
+            self.w32(off::BAR0 + base_idx * 4, lo);
+            self.w32(off::BAR0 + (base_idx + 1) * 4, (new >> 32) as u32);
+            if v == 0xFFFF_FFFF {
+                if is_high {
+                    self.w32(off::BAR0 + idx * 4, (mask >> 32) as u32);
+                } else {
+                    self.w32(
+                        off::BAR0 + base_idx * 4,
+                        (mask as u32) | 0b100,
+                    );
+                }
+            }
+            return;
+        }
+        self.w32(o, v);
+    }
+
+    pub fn bar_addr(&self, idx: usize) -> Option<u64> {
+        (self.bar_size[idx] != 0 && self.bar_val[idx] != 0)
+            .then_some(self.bar_val[idx])
+    }
+
+    pub fn bar_size(&self, idx: usize) -> u64 {
+        self.bar_size[idx]
+    }
+
+    /// Set BAR base directly (BIOS-side assignment).
+    pub fn assign_bar(&mut self, idx: usize, base: u64) {
+        assert!(self.bar_size[idx] != 0);
+        self.bar_val[idx] = base;
+        self.w32(off::BAR0 + idx * 4, (base as u32) | 0b100);
+        self.w32(off::BAR0 + idx * 4 + 4, (base >> 32) as u32);
+    }
+
+    // -- classic capabilities ----------------------------------------------
+    /// Append a classic capability; returns its offset.
+    pub fn add_capability(&mut self, cap_id: u8, body: &[u8]) -> usize {
+        let at = self.cap_tail;
+        let total = 2 + body.len();
+        assert!(at + total <= 0x100, "classic cap area overflow");
+        // Link into the list.
+        let status = self.r16(off::STATUS) | STATUS_CAP_LIST;
+        self.w16(off::STATUS, status);
+        if self.bytes[off::CAP_PTR] == 0 {
+            self.bytes[off::CAP_PTR] = at as u8;
+        } else {
+            // walk to the end
+            let mut p = self.bytes[off::CAP_PTR] as usize;
+            while self.bytes[p + 1] != 0 {
+                p = self.bytes[p + 1] as usize;
+            }
+            self.bytes[p + 1] = at as u8;
+        }
+        self.bytes[at] = cap_id;
+        self.bytes[at + 1] = 0;
+        self.bytes[at + 2..at + 2 + body.len()].copy_from_slice(body);
+        self.cap_tail = (at + total + 3) & !3;
+        at
+    }
+
+    // -- extended capabilities ----------------------------------------------
+    /// Append an extended capability; returns its offset.
+    pub fn add_ext_capability(&mut self, cap_id: u16, version: u8, body: &[u8]) -> usize {
+        let at = if self.ext_tail == 0 {
+            off::EXT_CAP_START
+        } else {
+            self.ext_tail
+        };
+        let total = 4 + body.len();
+        assert!(at + total <= CFG_SIZE, "ext cap overflow");
+        // Fix previous header's next pointer.
+        if at != off::EXT_CAP_START {
+            let mut p = off::EXT_CAP_START;
+            loop {
+                let hdr = self.r32(p);
+                let next = (hdr >> 20) as usize & 0xFFC;
+                if next == 0 {
+                    self.w32(p, (hdr & 0x000F_FFFF) | ((at as u32) << 20));
+                    break;
+                }
+                p = next;
+            }
+        }
+        let hdr = (cap_id as u32) | ((version as u32) << 16);
+        self.w32(at, hdr);
+        self.bytes[at + 4..at + 4 + body.len()].copy_from_slice(body);
+        self.ext_tail = (at + total + 3) & !3;
+        at
+    }
+
+    /// DVSEC: extended cap 0x23 wrapping (vendor, revision, id) + payload.
+    /// Layout per PCIe 5.0 §7.9.6: hdr1 @ +4 (vendor | rev<<16 | len<<20),
+    /// hdr2 @ +8 (DVSEC id in low 16 bits).
+    pub fn add_dvsec(&mut self, dvsec_id: u16, payload: &[u8]) -> usize {
+        let len = (12 + payload.len()) as u32;
+        let mut body = Vec::with_capacity(8 + payload.len());
+        let hdr1 = (CXL_VENDOR_ID as u32) | (1 << 16) | (len << 20);
+        body.extend_from_slice(&hdr1.to_le_bytes());
+        body.extend_from_slice(&(dvsec_id as u32).to_le_bytes());
+        body.extend_from_slice(payload);
+        self.add_ext_capability(EXTCAP_DVSEC, 1, &body)
+    }
+
+    /// Walk extended caps, returning offsets of DVSECs with our vendor
+    /// and the given id (guest-driver-side helper mirrors Linux's
+    /// `pci_find_dvsec_capability`).
+    pub fn find_dvsec(&self, dvsec_id: u16) -> Option<usize> {
+        let mut p = off::EXT_CAP_START;
+        loop {
+            let hdr = self.r32(p);
+            if hdr == 0 {
+                return None;
+            }
+            let cap = (hdr & 0xFFFF) as u16;
+            if cap == EXTCAP_DVSEC {
+                let vendor = self.r16(p + 4);
+                let id = self.r16(p + 8);
+                if vendor == CXL_VENDOR_ID && id == dvsec_id {
+                    return Some(p);
+                }
+            }
+            let next = (hdr >> 20) as usize & 0xFFC;
+            if next == 0 {
+                return None;
+            }
+            p = next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_header_layout() {
+        let c = ConfigSpace::endpoint(0x8086, 0x0d93, [0x05, 0x02, 0x10]);
+        assert_eq!(c.r16(off::VENDOR_ID), 0x8086);
+        assert_eq!(c.r16(off::DEVICE_ID), 0x0d93);
+        assert_eq!(c.r8(off::CLASS_BASE), 0x05); // memory controller
+        assert_eq!(c.r8(off::CLASS_SUB), 0x02); // CXL
+        assert!(!c.is_bridge());
+    }
+
+    #[test]
+    fn bridge_header() {
+        let mut c = ConfigSpace::bridge(0x8086, 0x7075);
+        assert!(c.is_bridge());
+        c.w8(off::SECONDARY_BUS, 1);
+        c.w8(off::SUBORDINATE_BUS, 2);
+        assert_eq!(c.r8(off::SECONDARY_BUS), 1);
+    }
+
+    #[test]
+    fn bar_sizing_protocol() {
+        let mut c = ConfigSpace::endpoint(1, 2, [0, 0, 0]);
+        c.add_bar64(0, 1 << 20); // 1 MiB
+        // Write all-ones, read back size mask.
+        c.cfg_write32(off::BAR0, 0xFFFF_FFFF);
+        let lo = c.r32(off::BAR0);
+        assert_eq!(lo & 0xFFFF_F000, 0xFFF0_0000); // low 20 bits clear
+        assert_eq!(lo & 0b111, 0b100); // 64-bit memory type
+        // Program a base.
+        c.cfg_write32(off::BAR0, 0xFE00_0000);
+        c.cfg_write32(off::BAR0 + 4, 0x0000_0012);
+        assert_eq!(c.bar_addr(0), Some(0x12_FE00_0000));
+    }
+
+    #[test]
+    fn unimplemented_bar_reads_zero() {
+        let mut c = ConfigSpace::endpoint(1, 2, [0, 0, 0]);
+        c.cfg_write32(off::BAR0 + 8, 0xFFFF_FFFF);
+        assert_eq!(c.r32(off::BAR0 + 8), 0);
+        assert_eq!(c.bar_addr(2), None);
+    }
+
+    #[test]
+    fn classic_capability_chain() {
+        let mut c = ConfigSpace::endpoint(1, 2, [0, 0, 0]);
+        let a = c.add_capability(0x10, &[0; 14]); // PCIe cap
+        let b = c.add_capability(0x05, &[0; 10]); // MSI
+        assert_eq!(c.r8(off::CAP_PTR) as usize, a);
+        assert_eq!(c.r8(a + 1) as usize, b);
+        assert_eq!(c.r8(b + 1), 0);
+        assert!(c.r16(off::STATUS) & STATUS_CAP_LIST != 0);
+    }
+
+    #[test]
+    fn dvsec_walk_finds_by_id() {
+        let mut c = ConfigSpace::endpoint(1, 2, [0, 0, 0]);
+        c.add_dvsec(DVSEC_CXL_DEVICE, &[0xAA; 16]);
+        c.add_dvsec(DVSEC_GPF_DEVICE, &[0xBB; 8]);
+        c.add_dvsec(DVSEC_REGISTER_LOCATOR, &[0xCC; 24]);
+        assert!(c.find_dvsec(DVSEC_CXL_DEVICE).is_some());
+        assert!(c.find_dvsec(DVSEC_REGISTER_LOCATOR).is_some());
+        assert!(c.find_dvsec(DVSEC_FLEXBUS_PORT).is_none());
+        // Payload is where we expect (after the 12-byte DVSEC header).
+        let p = c.find_dvsec(DVSEC_GPF_DEVICE).unwrap();
+        assert_eq!(c.r8(p + 12), 0xBB);
+    }
+
+    #[test]
+    fn ext_cap_chain_links() {
+        let mut c = ConfigSpace::endpoint(1, 2, [0, 0, 0]);
+        let a = c.add_ext_capability(0x0001, 1, &[0; 4]); // AER-ish
+        let b = c.add_dvsec(DVSEC_CXL_DEVICE, &[0; 4]);
+        assert_eq!(a, off::EXT_CAP_START);
+        let next = (c.r32(a) >> 20) as usize & 0xFFC;
+        assert_eq!(next, b);
+    }
+}

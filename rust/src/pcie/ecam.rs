@@ -1,0 +1,155 @@
+//! ECAM — Enhanced Configuration Access Mechanism.
+//!
+//! The MCFG ACPI table points the OS at a memory-mapped window where
+//! `address = base + (bus << 20 | dev << 15 | func << 12 | offset)`.
+//! This module provides the BDF<->address math and the dispatch from an
+//! ECAM MMIO access to the right function's [`ConfigSpace`].
+
+use std::collections::BTreeMap;
+
+use super::config_space::ConfigSpace;
+
+/// Bus/Device/Function address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Bdf {
+    pub bus: u8,
+    pub dev: u8,
+    pub func: u8,
+}
+
+impl Bdf {
+    pub fn new(bus: u8, dev: u8, func: u8) -> Self {
+        assert!(dev < 32 && func < 8);
+        Bdf { bus, dev, func }
+    }
+
+    pub fn ecam_offset(&self) -> u64 {
+        ((self.bus as u64) << 20)
+            | ((self.dev as u64) << 15)
+            | ((self.func as u64) << 12)
+    }
+
+    pub fn from_ecam_offset(off: u64) -> (Bdf, usize) {
+        let bus = ((off >> 20) & 0xFF) as u8;
+        let dev = ((off >> 15) & 0x1F) as u8;
+        let func = ((off >> 12) & 0x7) as u8;
+        (Bdf { bus, dev, func }, (off & 0xFFF) as usize)
+    }
+}
+
+impl std::fmt::Display for Bdf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:02x}:{:02x}.{}", self.bus, self.dev, self.func)
+    }
+}
+
+/// The ECAM region: owns every function's config space.
+pub struct Ecam {
+    pub base: u64,
+    pub buses: u8,
+    devices: BTreeMap<Bdf, ConfigSpace>,
+}
+
+impl Ecam {
+    pub fn new(base: u64, buses: u8) -> Self {
+        Ecam { base, buses, devices: BTreeMap::new() }
+    }
+
+    pub fn size(&self) -> u64 {
+        (self.buses as u64) << 20
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.base && addr < self.base + self.size()
+    }
+
+    pub fn attach(&mut self, bdf: Bdf, cfg: ConfigSpace) {
+        assert!(
+            self.devices.insert(bdf, cfg).is_none(),
+            "duplicate function at {bdf}"
+        );
+    }
+
+    pub fn function(&self, bdf: Bdf) -> Option<&ConfigSpace> {
+        self.devices.get(&bdf)
+    }
+
+    pub fn function_mut(&mut self, bdf: Bdf) -> Option<&mut ConfigSpace> {
+        self.devices.get_mut(&bdf)
+    }
+
+    pub fn functions(&self) -> impl Iterator<Item = (&Bdf, &ConfigSpace)> {
+        self.devices.iter()
+    }
+
+    /// MMIO read (guest-visible behaviour: absent functions float high —
+    /// all-ones — exactly how enumeration detects emptiness).
+    pub fn mmio_read32(&self, addr: u64) -> u32 {
+        debug_assert!(self.contains(addr));
+        let (bdf, off) = Bdf::from_ecam_offset(addr - self.base);
+        match self.devices.get(&bdf) {
+            Some(cfg) => cfg.r32(off & !3),
+            None => 0xFFFF_FFFF,
+        }
+    }
+
+    pub fn mmio_write32(&mut self, addr: u64, v: u32) {
+        debug_assert!(self.contains(addr));
+        let (bdf, off) = Bdf::from_ecam_offset(addr - self.base);
+        if let Some(cfg) = self.devices.get_mut(&bdf) {
+            cfg.cfg_write32(off & !3, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcie::config_space::off;
+
+    #[test]
+    fn bdf_ecam_math_roundtrip() {
+        let b = Bdf::new(3, 17, 2);
+        let off = b.ecam_offset() + 0x0F4;
+        let (back, reg) = Bdf::from_ecam_offset(off);
+        assert_eq!(back, b);
+        assert_eq!(reg, 0x0F4);
+    }
+
+    #[test]
+    fn absent_function_reads_ffffffff() {
+        let e = Ecam::new(0xE000_0000, 4);
+        assert_eq!(e.mmio_read32(0xE000_0000), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn attached_function_readable_through_mmio() {
+        let mut e = Ecam::new(0xE000_0000, 4);
+        let cfg = ConfigSpace::endpoint(0x1E98, 0x0100, [5, 2, 0]);
+        let bdf = Bdf::new(1, 0, 0);
+        e.attach(bdf, cfg);
+        let addr = 0xE000_0000 + bdf.ecam_offset() + off::VENDOR_ID as u64;
+        assert_eq!(e.mmio_read32(addr) & 0xFFFF, 0x1E98);
+    }
+
+    #[test]
+    fn mmio_write_reaches_config() {
+        let mut e = Ecam::new(0xE000_0000, 2);
+        let mut cfg = ConfigSpace::endpoint(1, 2, [0, 0, 0]);
+        cfg.add_bar64(0, 1 << 16);
+        let bdf = Bdf::new(0, 3, 0);
+        e.attach(bdf, cfg);
+        let bar0 = 0xE000_0000 + bdf.ecam_offset() + off::BAR0 as u64;
+        e.mmio_write32(bar0, 0xFFFF_FFFF);
+        let mask = e.mmio_read32(bar0);
+        assert_eq!(mask & 0xFFFF_0000, 0xFFFF_0000);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_attach_panics() {
+        let mut e = Ecam::new(0, 1);
+        e.attach(Bdf::new(0, 0, 0), ConfigSpace::endpoint(1, 1, [0; 3]));
+        e.attach(Bdf::new(0, 0, 0), ConfigSpace::endpoint(1, 1, [0; 3]));
+    }
+}

@@ -1,0 +1,85 @@
+//! PCIe hierarchy substrate.
+//!
+//! CXLRAMSim's architectural-correctness claim rests on modeling the full
+//! PCIe plumbing the CXL stack rides on: per-function 4 KiB config
+//! spaces ([`config_space`]), the ECAM window the MCFG table advertises
+//! ([`ecam`]), and a hierarchy of root complex -> root port (type-1
+//! bridge) -> endpoint that the guest enumerates bus-by-bus.
+
+pub mod config_space;
+pub mod ecam;
+
+pub use config_space::ConfigSpace;
+pub use ecam::{Bdf, Ecam};
+
+/// Well-known IDs used by the modeled hardware.
+pub mod ids {
+    /// Our root-port / host-bridge "silicon".
+    pub const VENDOR_SIM: u16 = 0x1AF4;
+    pub const DEV_ROOT_PORT: u16 = 0x0C01;
+    /// CXL Type-3 memory expander function.
+    pub const VENDOR_CXL_DEV: u16 = 0x1E98;
+    pub const DEV_CXL_MEMDEV: u16 = 0x0D93;
+    /// Class code for a CXL memory device (base 05h memory, sub 02h CXL,
+    /// prog-if 10h — what Linux's cxl_pci driver matches).
+    pub const CLASS_CXL_MEM: [u8; 3] = [0x05, 0x02, 0x10];
+}
+
+/// Build the standard topology used by the simulator:
+/// bus 0: dev 0 = host bridge (RC), dev 1 = CXL root port (bridge to bus 1)
+/// bus 1: dev 0 = CXL Type-3 memory expander endpoint.
+/// The caller (machine builder) then adds DVSECs/BARs to the endpoint.
+pub fn build_topology(ecam: &mut Ecam) -> (Bdf, Bdf, Bdf) {
+    let host_bridge = Bdf::new(0, 0, 0);
+    let root_port = Bdf::new(0, 1, 0);
+    let endpoint = Bdf::new(1, 0, 0);
+
+    let hb = ConfigSpace::endpoint(
+        ids::VENDOR_SIM,
+        0x0C00,
+        [0x06, 0x00, 0x00], // host bridge class
+    );
+    ecam.attach(host_bridge, hb);
+
+    let mut rp = ConfigSpace::bridge(ids::VENDOR_SIM, ids::DEV_ROOT_PORT);
+    rp.w8(config_space::off::PRIMARY_BUS, 0);
+    rp.w8(config_space::off::SECONDARY_BUS, 1);
+    rp.w8(config_space::off::SUBORDINATE_BUS, 1);
+    ecam.attach(root_port, rp);
+
+    let ep = ConfigSpace::endpoint(
+        ids::VENDOR_CXL_DEV,
+        ids::DEV_CXL_MEMDEV,
+        ids::CLASS_CXL_MEM,
+    );
+    ecam.attach(endpoint, ep);
+
+    (host_bridge, root_port, endpoint)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use config_space::off;
+
+    #[test]
+    fn topology_has_three_functions() {
+        let mut e = Ecam::new(0xE000_0000, 8);
+        let (hb, rp, ep) = build_topology(&mut e);
+        assert_eq!(e.functions().count(), 3);
+        assert!(e.function(hb).is_some());
+        assert!(e.function(rp).unwrap().is_bridge());
+        let epc = e.function(ep).unwrap();
+        assert_eq!(epc.r8(off::CLASS_BASE), 0x05);
+        assert_eq!(epc.r8(off::CLASS_SUB), 0x02);
+    }
+
+    #[test]
+    fn root_port_routes_bus1() {
+        let mut e = Ecam::new(0xE000_0000, 8);
+        let (_, rp, _) = build_topology(&mut e);
+        let c = e.function(rp).unwrap();
+        assert_eq!(c.r8(off::SECONDARY_BUS), 1);
+        assert_eq!(c.r8(off::SUBORDINATE_BUS), 1);
+    }
+}

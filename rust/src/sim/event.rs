@@ -1,0 +1,177 @@
+//! Deterministic event queue.
+//!
+//! Generic over the machine's event type `E`. Ordering: (tick, seq) where
+//! seq is the global insertion counter — equal-tick events fire in the
+//! order they were scheduled, which makes whole-machine runs
+//! bit-reproducible (a property the determinism tests assert).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::Tick;
+
+#[derive(Debug)]
+pub struct Scheduled<E> {
+    pub tick: Tick,
+    pub seq: u64,
+    pub ev: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, o: &Self) -> bool {
+        self.tick == o.tick && self.seq == o.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // Reverse for min-heap behaviour inside BinaryHeap (max-heap).
+        (o.tick, o.seq).cmp(&(self.tick, self.seq))
+    }
+}
+
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    seq: u64,
+    now: Tick,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0, processed: 0 }
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> Tick {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `ev` at absolute tick `at` (>= now).
+    pub fn schedule_at(&mut self, at: Tick, ev: E) {
+        debug_assert!(at >= self.now, "scheduling into the past");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { tick: at.max(self.now), seq, ev });
+    }
+
+    /// Schedule `ev` after `delay` ticks.
+    pub fn schedule(&mut self, delay: Tick, ev: E) {
+        self.schedule_at(self.now + delay, ev);
+    }
+
+    /// Pop the next event, advancing `now`.
+    pub fn pop(&mut self) -> Option<(Tick, E)> {
+        let s = self.heap.pop()?;
+        self.now = s.tick;
+        self.processed += 1;
+        Some((s.tick, s.ev))
+    }
+
+    /// Peek at the next event time.
+    pub fn next_tick(&self) -> Option<Tick> {
+        self.heap.peek().map(|s| s.tick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fifo_order_for_equal_ticks() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10, "a");
+        q.schedule_at(10, "b");
+        q.schedule_at(5, "c");
+        q.schedule_at(10, "d");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| e)
+            .collect();
+        assert_eq!(order, vec!["c", "a", "b", "d"]);
+    }
+
+    #[test]
+    fn now_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3, 0);
+        q.schedule_at(1, 1);
+        q.schedule_at(2, 2);
+        let mut last = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(q.now(), 3);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn schedule_relative() {
+        let mut q = EventQueue::new();
+        q.schedule_at(100, 1);
+        q.pop();
+        q.schedule(50, 2);
+        assert_eq!(q.pop(), Some((150, 2)));
+    }
+
+    #[test]
+    fn property_pops_sorted_stable() {
+        check(
+            "eventq-sorted",
+            200,
+            |r: &mut Rng| {
+                (0..r.range(1, 60))
+                    .map(|_| r.below(100))
+                    .collect::<Vec<u64>>()
+            },
+            |ticks| {
+                let mut q = EventQueue::new();
+                for (i, &t) in ticks.iter().enumerate() {
+                    q.schedule_at(t, i);
+                }
+                let mut prev: Option<(Tick, usize)> = None;
+                while let Some((t, idx)) = q.pop() {
+                    if ticks[idx] != t {
+                        return Err("tick mangled".into());
+                    }
+                    if let Some((pt, pidx)) = prev {
+                        if t < pt {
+                            return Err("out of order".into());
+                        }
+                        if t == pt && idx < pidx {
+                            return Err("unstable for equal ticks".into());
+                        }
+                    }
+                    prev = Some((t, idx));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! Discrete-event simulation core (the gem5-engine substitute).
+//!
+//! * [`Tick`] — picosecond time base (1 tick = 1 ps, like gem5).
+//! * [`EventQueue`] — deterministic priority queue; ties break by
+//!   insertion order so runs are bit-reproducible.
+//! * [`packet`] — memory request/response representation shared by the
+//!   caches, buses, DRAM and the CXL transaction layer.
+
+pub mod event;
+pub mod packet;
+
+pub use event::{EventQueue, Scheduled};
+pub use packet::{MemCmd, Packet, ReqId};
+
+/// Simulation time in picoseconds.
+pub type Tick = u64;
+
+/// Convert nanoseconds (f64 config values) to ticks.
+#[inline]
+pub fn ns_to_ticks(ns: f64) -> Tick {
+    (ns * 1000.0).round() as Tick
+}
+
+/// Convert ticks back to nanoseconds.
+#[inline]
+pub fn ticks_to_ns(t: Tick) -> f64 {
+    t as f64 / 1000.0
+}
+
+/// Serialization delay of `bytes` over a link of `gbps` GB/s, in ticks.
+/// (1 GB/s == 1 byte/ns.)
+#[inline]
+pub fn ser_ticks(bytes: u64, gbps: f64) -> Tick {
+    if gbps <= 0.0 {
+        return 0;
+    }
+    ns_to_ticks(bytes as f64 / gbps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tick_conversions_roundtrip() {
+        assert_eq!(ns_to_ticks(1.0), 1000);
+        assert_eq!(ns_to_ticks(0.5), 500);
+        assert!((ticks_to_ns(2500) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serialization_delay() {
+        // 64 B at 32 GB/s = 2 ns = 2000 ticks.
+        assert_eq!(ser_ticks(64, 32.0), 2000);
+        assert_eq!(ser_ticks(64, 0.0), 0);
+    }
+}

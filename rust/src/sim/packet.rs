@@ -1,0 +1,147 @@
+//! Memory packets — the request/response currency of the machine.
+//!
+//! One [`Packet`] represents a line-granular memory transaction as it
+//! moves CPU -> L1 -> L2 -> (DRAM | IOBus -> CXL). Timing annotations
+//! accumulate on the packet so end-to-end latency histograms can be
+//! split by memory class (system DRAM vs CXL).
+
+use super::Tick;
+
+pub type ReqId = u64;
+
+/// Command, deliberately close to gem5's MemCmd vocabulary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemCmd {
+    ReadReq,
+    ReadResp,
+    WriteReq,
+    WriteResp,
+    /// Write-back of a dirty line from a cache to the next level.
+    WritebackDirty,
+    /// Coherence: invalidate a line in a peer cache (directory-issued).
+    InvalidateReq,
+    InvalidateResp,
+    /// Coherence: upgrade S -> M without data transfer.
+    UpgradeReq,
+    UpgradeResp,
+}
+
+impl MemCmd {
+    pub fn is_read(&self) -> bool {
+        matches!(self, MemCmd::ReadReq | MemCmd::ReadResp)
+    }
+    pub fn is_write(&self) -> bool {
+        matches!(
+            self,
+            MemCmd::WriteReq | MemCmd::WriteResp | MemCmd::WritebackDirty
+        )
+    }
+    pub fn is_request(&self) -> bool {
+        matches!(
+            self,
+            MemCmd::ReadReq
+                | MemCmd::WriteReq
+                | MemCmd::WritebackDirty
+                | MemCmd::InvalidateReq
+                | MemCmd::UpgradeReq
+        )
+    }
+    pub fn response(&self) -> Option<MemCmd> {
+        match self {
+            MemCmd::ReadReq => Some(MemCmd::ReadResp),
+            MemCmd::WriteReq => Some(MemCmd::WriteResp),
+            MemCmd::InvalidateReq => Some(MemCmd::InvalidateResp),
+            MemCmd::UpgradeReq => Some(MemCmd::UpgradeResp),
+            MemCmd::WritebackDirty => None, // posted
+            _ => None,
+        }
+    }
+}
+
+/// Which physical memory class a physical address belongs to.
+/// Determined by the system address map / HDM decoders.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemClass {
+    SysDram,
+    CxlExpander,
+    Mmio,
+}
+
+#[derive(Clone, Debug)]
+pub struct Packet {
+    pub id: ReqId,
+    pub cmd: MemCmd,
+    /// Physical byte address (line-aligned for cache traffic).
+    pub addr: u64,
+    pub size: u32,
+    /// Issuing core (coherence needs the origin).
+    pub core: u8,
+    /// Tick at which the CPU issued the original request.
+    pub issued_at: Tick,
+    /// Filled by the address map when the packet is routed.
+    pub class: MemClass,
+}
+
+impl Packet {
+    pub fn new(
+        id: ReqId,
+        cmd: MemCmd,
+        addr: u64,
+        size: u32,
+        core: u8,
+        issued_at: Tick,
+    ) -> Self {
+        Packet { id, cmd, addr, size, core, issued_at, class: MemClass::SysDram }
+    }
+
+    /// Line address for a given line size.
+    #[inline]
+    pub fn line_addr(&self, line: u64) -> u64 {
+        self.addr & !(line - 1)
+    }
+
+    /// Turn a request into its response in place.
+    pub fn make_response(&mut self) {
+        if let Some(r) = self.cmd.response() {
+            self.cmd = r;
+        } else {
+            panic!("no response form for {:?}", self.cmd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmd_classification() {
+        assert!(MemCmd::ReadReq.is_read());
+        assert!(MemCmd::ReadReq.is_request());
+        assert!(!MemCmd::ReadResp.is_request());
+        assert!(MemCmd::WritebackDirty.is_write());
+        assert_eq!(MemCmd::WriteReq.response(), Some(MemCmd::WriteResp));
+        assert_eq!(MemCmd::WritebackDirty.response(), None);
+    }
+
+    #[test]
+    fn line_alignment() {
+        let p = Packet::new(1, MemCmd::ReadReq, 0x12345, 8, 0, 0);
+        assert_eq!(p.line_addr(64), 0x12340);
+        assert_eq!(p.line_addr(4096), 0x12000);
+    }
+
+    #[test]
+    fn response_conversion() {
+        let mut p = Packet::new(1, MemCmd::ReadReq, 0x1000, 64, 0, 5);
+        p.make_response();
+        assert_eq!(p.cmd, MemCmd::ReadResp);
+    }
+
+    #[test]
+    #[should_panic(expected = "no response form")]
+    fn writeback_has_no_response() {
+        let mut p = Packet::new(1, MemCmd::WritebackDirty, 0, 64, 0, 0);
+        p.make_response();
+    }
+}

@@ -1,0 +1,248 @@
+//! Statistics framework (gem5-style, minimal).
+//!
+//! Components own concrete stat structs made of [`Counter`],
+//! [`Histogram`] and [`RunningStats`]; the machine aggregates them into a
+//! [`StatDump`] (name -> value tree rendered as JSON or text). Keeping
+//! stats as plain fields (not a string-keyed registry) keeps the hot path
+//! allocation-free; naming happens only at dump time.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// Monotonic event counter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Counter(pub u64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&mut self) {
+        self.0 += 1;
+    }
+    #[inline]
+    pub fn add(&mut self, n: u64) {
+        self.0 += n;
+    }
+    pub fn get(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Mean/min/max tracker for latencies etc.
+#[derive(Clone, Copy, Debug)]
+pub struct RunningStats {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    sum_sq: f64,
+}
+
+impl Default for RunningStats {
+    fn default() -> Self {
+        RunningStats {
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum_sq: 0.0,
+        }
+    }
+}
+
+impl RunningStats {
+    #[inline]
+    pub fn sample(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        ((self.sum_sq / self.n as f64) - m * m).max(0.0).sqrt()
+    }
+}
+
+/// Power-of-two bucketed histogram (bucket i covers [2^i, 2^(i+1))).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub buckets: Vec<u64>,
+    pub underflow: u64, // value == 0
+    pub stats: RunningStats,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: vec![0; 40], underflow: 0, stats: RunningStats::default() }
+    }
+}
+
+impl Histogram {
+    #[inline]
+    pub fn sample(&mut self, v: u64) {
+        self.stats.sample(v as f64);
+        if v == 0 {
+            self.underflow += 1;
+            return;
+        }
+        let b = (63 - v.leading_zeros()) as usize;
+        let b = b.min(self.buckets.len() - 1);
+        self.buckets[b] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.underflow + self.buckets.iter().sum::<u64>()
+    }
+
+    /// Approximate percentile from bucket boundaries (upper edge).
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return 0;
+        }
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// A flat named dump of stats: `(path, value)` pairs.
+#[derive(Clone, Debug, Default)]
+pub struct StatDump {
+    pub entries: Vec<(String, f64)>,
+}
+
+impl StatDump {
+    pub fn push(&mut self, path: &str, v: f64) {
+        self.entries.push((path.to_string(), v));
+    }
+
+    pub fn counter(&mut self, path: &str, c: &Counter) {
+        self.push(path, c.get() as f64);
+    }
+
+    pub fn running(&mut self, path: &str, r: &RunningStats) {
+        self.push(&format!("{path}.n"), r.n as f64);
+        self.push(&format!("{path}.mean"), r.mean());
+        if r.n > 0 {
+            self.push(&format!("{path}.min"), r.min);
+            self.push(&format!("{path}.max"), r.max);
+        }
+    }
+
+    pub fn hist(&mut self, path: &str, h: &Histogram) {
+        self.push(&format!("{path}.count"), h.count() as f64);
+        self.push(&format!("{path}.mean"), h.stats.mean());
+        self.push(&format!("{path}.p50"), h.percentile(0.5) as f64);
+        self.push(&format!("{path}.p99"), h.percentile(0.99) as f64);
+    }
+
+    pub fn get(&self, path: &str) -> Option<f64> {
+        self.entries.iter().find(|(k, _)| k == path).map(|(_, v)| *v)
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        let width = self
+            .entries
+            .iter()
+            .map(|(k, _)| k.len())
+            .max()
+            .unwrap_or(0);
+        for (k, v) in &self.entries {
+            if v.fract() == 0.0 && v.abs() < 1e15 {
+                let _ = writeln!(s, "{k:<width$}  {}", *v as i64);
+            } else {
+                let _ = writeln!(s, "{k:<width$}  {v:.6}");
+            }
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.entries
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let mut c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn running_stats_moments() {
+        let mut r = RunningStats::default();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            r.sample(v);
+        }
+        assert_eq!(r.n, 4);
+        assert!((r.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 4.0);
+        assert!((r.stddev() - 1.118033988749895).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let mut h = Histogram::default();
+        for v in [0u64, 1, 1, 2, 3, 4, 100, 1000] {
+            h.sample(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.underflow, 1);
+        assert!(h.percentile(0.5) <= 8);
+        assert!(h.percentile(1.0) >= 1000);
+    }
+
+    #[test]
+    fn dump_text_and_json() {
+        let mut d = StatDump::default();
+        d.push("a.b", 1.0);
+        d.push("a.c", 2.5);
+        let txt = d.to_text();
+        assert!(txt.contains("a.b"));
+        assert!(txt.contains("2.5"));
+        assert_eq!(d.get("a.c"), Some(2.5));
+        let j = d.to_json();
+        assert_eq!(j.get("a.b").unwrap().as_f64(), Some(1.0));
+    }
+}

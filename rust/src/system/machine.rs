@@ -1,0 +1,1036 @@
+//! The machine: topology + boot + the event-driven memory system.
+
+
+use anyhow::{Context, Result};
+
+use crate::bios::{self, layout, BiosInfo};
+use crate::bus::Bus;
+use crate::cache::prefetch::{PrefetchBook, StridePrefetcher};
+use crate::cache::{Access, CacheArray, Directory, MesiState, MshrAlloc,
+                   MshrFile, Victim};
+use crate::config::{CxlAttach, SimConfig};
+use crate::cpu::{Core, WlOp};
+use crate::cxl::regs::ComponentRegs;
+use crate::cxl::{CxlDevice, CxlRootComplex};
+use crate::guestos::{AddressSpace, GuestOs, MemPolicy, ProgModel};
+use crate::mem::{MemCtrl, PhysMem};
+use crate::pcie::{self, config_space as cs, Bdf, Ecam};
+use crate::sim::{ns_to_ticks, EventQueue, MemCmd, Packet, ReqId, Tick};
+use crate::stats::{Counter, Histogram, StatDump};
+use crate::workloads::Workload;
+
+use super::mmio::MmioWorld;
+
+/// Machine events (only async points become events — see module docs).
+#[derive(Debug)]
+enum Ev {
+    /// Core front-end tries to issue.
+    Issue(u8),
+    /// A request completed without a line fill (L1 hit / upgrade).
+    Hit { core: u8, req: ReqId },
+    /// A line fill arrived at a core's L1.
+    LineFill { core: u8, line_pa: u64 },
+    /// DRAM controller queue was full — retry the fetch.
+    DramRetry { core: u8, line_pa: u64, wants_excl: bool },
+    /// CXL M2S credit stall — retry packetization.
+    CxlRetry { core: u8, line_pa: u64, wants_excl: bool },
+}
+
+/// Sentinel "core" marking an L2-prefetch fetch: the fill stops at L2.
+const PF_CORE: u8 = u8::MAX;
+
+/// Per-L2-line in-flight memory fetch (cores waiting on it).
+#[derive(Debug, Default)]
+struct L2Pending {
+    cores: Vec<u8>,
+    wants_excl: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MachineStats {
+    pub dram_reads: Counter,
+    pub cxl_reads: Counter,
+    pub lat_dram: Histogram,
+    pub lat_cxl: Histogram,
+    pub page_faults: Counter,
+    pub upgrades: Counter,
+    pub coherence_invals: Counter,
+    pub writebacks_dram: Counter,
+    pub writebacks_cxl: Counter,
+}
+
+/// End-of-run digest used by benches and examples.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub ticks: Tick,
+    pub seconds: f64,
+    pub bytes_moved: u64,
+    pub bandwidth_gbps: f64,
+    pub l1_miss_rate: f64,
+    pub l2_miss_rate: f64,
+    pub dram_accesses: u64,
+    pub cxl_accesses: u64,
+    pub avg_lat_dram_ns: f64,
+    pub avg_lat_cxl_ns: f64,
+    pub m2s_req: u64,
+    pub m2s_rwd: u64,
+    pub s2m_ndr: u64,
+    pub s2m_drs: u64,
+    pub events: u64,
+}
+
+pub struct Machine {
+    pub cfg: SimConfig,
+    pub mem: PhysMem,
+    pub ecam: Ecam,
+    pub ep_bdf: Bdf,
+    pub bios: BiosInfo,
+    pub hb_component: ComponentRegs,
+    pub rc: CxlRootComplex,
+    pub cxl_dev: CxlDevice,
+    pub guest: Option<GuestOs>,
+
+    pub cores: Vec<Core>,
+    pub l1s: Vec<CacheArray>,
+    pub l1_mshrs: Vec<MshrFile>,
+    pub l2: CacheArray,
+    pub dir: Directory,
+    pub membus: Bus,
+    pub iobus: Bus,
+    pub dram: MemCtrl,
+
+    queue: EventQueue<Ev>,
+    issue_scheduled: Vec<bool>,
+    pending_op: Vec<Option<WlOp>>,
+    workloads: Vec<Box<dyn Workload>>,
+    pub spaces: Vec<AddressSpace>,
+    l2_pending: crate::util::fxhash::FxHashMap<u64, L2Pending>,
+    next_req: ReqId,
+    l1_lat: Tick,
+    l2_lat: Tick,
+    fault_ticks: Tick,
+    pub prefetcher: Option<StridePrefetcher>,
+    pub pf_book: PrefetchBook,
+    pub stats: MachineStats,
+}
+
+impl Machine {
+    /// Build the hardware: BIOS tables in memory, PCIe topology with the
+    /// CXL endpoint fully described (DVSECs, BARs), RC + device models.
+    pub fn new(cfg: SimConfig) -> Result<Self> {
+        cfg.validate()?;
+        let mut mem = PhysMem::new();
+        let bios = bios::build(&cfg, &mut mem);
+
+        let mut ecam = Ecam::new(bios.ecam_base, layout::ECAM_BUSES);
+        let (_hb, _rp, ep_bdf) = pcie::build_topology(&mut ecam);
+        {
+            let epc = ecam.function_mut(ep_bdf).unwrap();
+            epc.add_bar64(0, 1 << 16); // component registers
+            epc.add_bar64(2, 1 << 12); // device registers (mailbox)
+            epc.add_dvsec(
+                cs::DVSEC_CXL_DEVICE,
+                &crate::cxl::regs::dvsec_payload::cxl_device(cfg.cxl.mem_size),
+            );
+            epc.add_dvsec(
+                cs::DVSEC_GPF_DEVICE,
+                &crate::cxl::regs::dvsec_payload::gpf_device(),
+            );
+            epc.add_dvsec(
+                cs::DVSEC_FLEXBUS_PORT,
+                &crate::cxl::regs::dvsec_payload::flexbus_port(),
+            );
+            epc.add_dvsec(
+                cs::DVSEC_REGISTER_LOCATOR,
+                &crate::cxl::regs::dvsec_payload::register_locator(&[
+                    (0, crate::cxl::regs::dev_block_ids::COMPONENT, 0),
+                    (2, crate::cxl::regs::dev_block_ids::DEVICE, 0),
+                ]),
+            );
+        }
+
+        let cores = (0..cfg.cores).map(|i| Core::new(i as u8, &cfg)).collect();
+        let l1s = (0..cfg.cores).map(|_| CacheArray::new(&cfg.l1)).collect();
+        let l1_mshrs =
+            (0..cfg.cores).map(|_| MshrFile::new(cfg.l1.mshrs)).collect();
+        let l2 = CacheArray::new(&cfg.l2);
+        let membus =
+            Bus::new("membus", cfg.membus_lat_ns, cfg.membus_bw_gbps, 2);
+        let iobus = Bus::new("iobus", cfg.iobus_lat_ns, cfg.iobus_bw_gbps, 1);
+        let dram = MemCtrl::new(&cfg.sys_dram, 64);
+        let rc = CxlRootComplex::new(&cfg.cxl);
+        let cxl_dev = CxlDevice::new(&cfg.cxl, 0xC0FFEE);
+        let hb_component = ComponentRegs::new(1);
+
+        let l1_lat = ns_to_ticks(cfg.l1.lat_cycles as f64 * cfg.cycle_ns());
+        let l2_lat = ns_to_ticks(cfg.l2.lat_cycles as f64 * cfg.cycle_ns());
+        let prefetcher = cfg
+            .l2
+            .prefetch
+            .then(|| StridePrefetcher::new(256, cfg.l2.pf_degree));
+        Ok(Machine {
+            issue_scheduled: vec![false; cfg.cores],
+            pending_op: vec![None; cfg.cores],
+            spaces: Vec::new(),
+            cfg,
+            mem,
+            ecam,
+            ep_bdf,
+            bios,
+            hb_component,
+            rc,
+            cxl_dev,
+            guest: None,
+            cores,
+            l1s,
+            l1_mshrs,
+            l2,
+            dir: Directory::new(),
+            membus,
+            iobus,
+            dram,
+            queue: EventQueue::new(),
+            workloads: Vec::new(),
+            l2_pending: Default::default(),
+            next_req: 1,
+            l1_lat,
+            l2_lat,
+            fault_ticks: ns_to_ticks(300.0),
+            prefetcher,
+            pf_book: PrefetchBook::default(),
+            stats: MachineStats::default(),
+        })
+    }
+
+    /// Boot the guest: ACPI parse, enumeration, CXL bind, onlining.
+    pub fn boot(&mut self, model: ProgModel) -> Result<()> {
+        let mut world = MmioWorld {
+            ecam: &mut self.ecam,
+            cxl_dev: &mut self.cxl_dev,
+            hb_component: &mut self.hb_component,
+            chbs_base: layout::CHBS_BASE,
+            chbs_size: layout::CHBS_SIZE,
+            ep_bdf: self.ep_bdf,
+        };
+        let guest =
+            GuestOs::boot(&mut world, &self.mem, self.cfg.page_size, model)
+                .context("guest boot failed")?;
+        // Mirror committed host-bridge decoders into the RC's routing.
+        for (base, size) in self.hb_component.committed_ranges() {
+            self.rc.set_hdm_range(base, size);
+        }
+        self.guest = Some(guest);
+        Ok(())
+    }
+
+    /// Attach one workload per core (fewer workloads than cores is fine)
+    /// and perform the functional init phase (untimed, like a
+    /// fast-forwarded boot+init in gem5).
+    pub fn attach_workloads(
+        &mut self,
+        mut wls: Vec<Box<dyn Workload>>,
+        policy: &MemPolicy,
+    ) -> Result<()> {
+        let guest = self.guest.as_mut().context("boot first")?;
+        assert!(wls.len() <= self.cores.len());
+        self.spaces.clear();
+        for wl in wls.iter_mut() {
+            let mut asp = AddressSpace::new(self.cfg.page_size);
+            wl.setup(&mut asp, policy);
+            for (va, bits) in wl.init_data() {
+                let pa = asp.translate(va, &mut guest.alloc)?;
+                self.mem.write_u64(pa, bits);
+            }
+            self.spaces.push(asp);
+        }
+        self.workloads = wls;
+        for c in 0..self.workloads.len() {
+            self.queue.schedule_at(0, Ev::Issue(c as u8));
+            self.issue_scheduled[c] = true;
+        }
+        Ok(())
+    }
+
+    fn alloc_req(&mut self) -> ReqId {
+        let r = self.next_req;
+        self.next_req += 1;
+        r
+    }
+
+    fn is_cxl_addr(&self, pa: u64) -> bool {
+        self.rc.routes(pa)
+            || (self.cfg.cxl.attach == CxlAttach::MemBus
+                && pa >= self.bios.cxl_window_base
+                && pa < self.bios.cxl_window_base + self.bios.cxl_window_size)
+    }
+
+    // ---- the memory path --------------------------------------------------
+
+    /// A core issues a load/store to `pa` at `now`. Returns the request
+    /// id the core should track.
+    fn access(&mut self, core: u8, pa: u64, is_write: bool, now: Tick) {
+        let req = self.alloc_req();
+        self.cores[core as usize].begin_mem(now, req, is_write);
+        let c = core as usize;
+        let probe = self.l1s[c].probe(pa, is_write);
+        match probe.access {
+            Access::Hit if !probe.needs_upgrade => {
+                self.queue
+                    .schedule_at(now + self.l1_lat, Ev::Hit { core, req });
+            }
+            Access::Hit => {
+                // Write hit on Shared: directory upgrade.
+                self.stats.upgrades.inc();
+                let line = self.l1s[c].line_addr(pa);
+                let act = self.dir.write_req(line, core);
+                let mut extra = 0;
+                if let crate::cache::directory::DirAction::Invalidate { mask } =
+                    act
+                {
+                    extra = self.invalidate_peers(mask, pa, now);
+                }
+                self.l1s[c].finish_upgrade(pa);
+                self.dir.note_write(line, core);
+                // Upgrade = L1 + membus round trip (+ peer inval time).
+                let t = now
+                    + self.l1_lat
+                    + self.membus.transfer(now, 16)
+                    .saturating_sub(now)
+                    + extra;
+                self.queue.schedule_at(t, Ev::Hit { core, req });
+            }
+            Access::Miss => {
+                let line = self.l1s[c].line_addr(pa);
+                match self.l1_mshrs[c].allocate(line, req, is_write) {
+                    MshrAlloc::Secondary => { /* ride the primary */ }
+                    MshrAlloc::Full => {
+                        // Unreachable: try_issue parks the op when the
+                        // MSHR file is full. Degrade gracefully anyway.
+                        debug_assert!(false, "MSHR full past the pre-check");
+                        self.cores[c].complete_mem(now, req);
+                        self.cores[c].note_lsq_stall();
+                        self.schedule_issue(core, now + self.l1_lat * 4);
+                    }
+                    MshrAlloc::Primary => {
+                        self.l1_primary_miss(core, pa, is_write, now);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Handle coherence + L2 for a primary L1 miss.
+    fn l1_primary_miss(&mut self, core: u8, pa: u64, is_write: bool, now: Tick) {
+        use crate::cache::directory::DirState;
+        let line = self.l1s[core as usize].line_addr(pa);
+        // Timing estimate for directory traffic; the *state* actions are
+        // applied at fill time (complete_line_fill), which keeps SWMR
+        // intact when multiple fills race.
+        let coh_extra: Tick = match self.dir.state(line) {
+            DirState::Owned { core: o } if o != core => {
+                ns_to_ticks(2.0 * self.cfg.membus_lat_ns)
+            }
+            DirState::Sharers { .. } if is_write => {
+                ns_to_ticks(2.0 * self.cfg.membus_lat_ns)
+            }
+            _ => 0,
+        };
+
+        // To L2 over the membus.
+        let at_l2 = self.membus.transfer(now + self.l1_lat, 16) + self.l2_lat
+            + coh_extra;
+        // Train the prefetcher on the demand stream reaching L2.
+        self.train_prefetcher(pa, at_l2);
+        let l2_probe = self.l2.probe(pa, false);
+        match l2_probe.access {
+            Access::Hit => {
+                if self.pf_book.note_demand(line) {
+                    if let Some(p) = &mut self.prefetcher {
+                        p.stats.useful.inc();
+                    }
+                }
+                // Data back over the membus.
+                let back = self.membus.transfer(at_l2, 64);
+                self.queue.schedule_at(
+                    back,
+                    Ev::LineFill { core, line_pa: pa },
+                );
+            }
+            Access::Miss => {
+                let key = self.l2.line_addr(pa);
+                if self.pf_book.note_demand_miss(key) {
+                    // Prefetch in flight but not home yet: the demand
+                    // merges onto it — a *late* prefetch.
+                    if let Some(p) = &mut self.prefetcher {
+                        p.stats.late.inc();
+                    }
+                }
+                if let Some(p) = self.l2_pending.get_mut(&key) {
+                    p.cores.push(core);
+                    p.wants_excl |= is_write;
+                    return;
+                }
+                self.l2_pending.insert(
+                    key,
+                    L2Pending { cores: vec![core], wants_excl: is_write },
+                );
+                self.fetch_from_memory(core, pa, is_write, at_l2);
+            }
+        }
+    }
+
+    /// Feed the L2 prefetcher and launch predicted fetches.
+    fn train_prefetcher(&mut self, pa: u64, now: Tick) {
+        let line = self.l2.line_addr(pa);
+        let Some(p) = &mut self.prefetcher else { return };
+        let predictions = p.train(line);
+        for target_line in predictions {
+            let target_pa = target_line * self.cfg.l2.line;
+            // Skip resident / in-flight lines and unmapped space.
+            if self.l2.find(target_pa).is_some()
+                || self.l2_pending.contains_key(&target_line)
+                || self.pf_book.is_inflight(target_line)
+            {
+                continue;
+            }
+            let in_dram = target_pa < self.cfg.sys_mem_size;
+            let in_cxl = self.is_cxl_addr(target_pa);
+            if !in_dram && !in_cxl {
+                continue;
+            }
+            if let Some(pp) = &mut self.prefetcher {
+                pp.stats.issued.inc();
+            }
+            self.pf_book.note_issued(target_line);
+            self.l2_pending.insert(
+                target_line,
+                L2Pending { cores: Vec::new(), wants_excl: false },
+            );
+            self.fetch_from_memory(PF_CORE, target_pa, false, now);
+        }
+    }
+
+    /// L2 miss -> system DRAM or CXL expander.
+    fn fetch_from_memory(
+        &mut self,
+        core: u8,
+        pa: u64,
+        wants_excl: bool,
+        now: Tick,
+    ) {
+        if self.is_cxl_addr(pa) {
+            self.fetch_from_cxl(core, pa, wants_excl, now);
+        } else {
+            self.fetch_from_dram(core, pa, wants_excl, now);
+        }
+    }
+
+    fn fetch_from_dram(
+        &mut self,
+        core: u8,
+        pa: u64,
+        wants_excl: bool,
+        now: Tick,
+    ) {
+        let t = self.membus.transfer(now, 16);
+        match self.dram.enqueue(t, pa, self.cfg.l1.line, false) {
+            Some(done) => {
+                self.stats.dram_reads.inc();
+                let back = self.membus.transfer(done, 64);
+                self.queue
+                    .schedule_at(back, Ev::LineFill { core, line_pa: pa });
+            }
+            None => {
+                self.queue.schedule_at(
+                    now + ns_to_ticks(100.0),
+                    Ev::DramRetry { core, line_pa: pa, wants_excl },
+                );
+            }
+        }
+    }
+
+    fn fetch_from_cxl(
+        &mut self,
+        core: u8,
+        pa: u64,
+        wants_excl: bool,
+        now: Tick,
+    ) {
+        if self.cfg.cxl.attach == CxlAttach::MemBus {
+            // Baseline (CXL-DMSim/SimCXL style): expander hangs off the
+            // membus; protocol costs collapse into a fixed adder (both
+            // directions' pack+unpack + wire), no flit framing, no
+            // credits, no IOBus contention.
+            let t = self.membus.transfer(now, 16);
+            let fixed = ns_to_ticks(
+                2.0 * (self.cfg.cxl.pkt_lat_ns + self.cfg.cxl.depkt_lat_ns)
+                    + 2.0 * self.cfg.cxl.link_lat_ns,
+            );
+            let dpa = pa - self.bios.cxl_window_base;
+            let done =
+                self.cxl_dev.media.access(t + fixed, dpa, self.cfg.l1.line, false);
+            self.stats.cxl_reads.inc();
+            let back = self.membus.transfer(done, 64);
+            self.queue
+                .schedule_at(back, Ev::LineFill { core, line_pa: pa });
+            return;
+        }
+        // Architecturally correct path: membus -> IOBus -> RC -> link.
+        let t = self.membus.transfer(now, 16);
+        let t = self.iobus.transfer(t, 16);
+        let host_pkt =
+            Packet::new(0, MemCmd::ReadReq, pa & !(self.cfg.l1.line - 1), 64, core, now);
+        match self.rc.packetize_and_send(t, &host_pkt) {
+            Ok((m2s, arrival)) => {
+                self.stats.cxl_reads.inc();
+                let (resp, ready) = self.cxl_dev.handle_m2s(arrival, &m2s);
+                let host_done = self.rc.receive_s2m(ready, &resp, now);
+                let t = self.iobus.transfer(host_done, 64);
+                let back = self.membus.transfer(t, 64);
+                self.queue
+                    .schedule_at(back, Ev::LineFill { core, line_pa: pa });
+            }
+            Err(retry_at) => {
+                self.queue.schedule_at(
+                    retry_at,
+                    Ev::CxlRetry { core, line_pa: pa, wants_excl },
+                );
+            }
+        }
+    }
+
+    /// Invalidate peer L1 copies per the directory mask; returns the
+    /// added coherence latency.
+    fn invalidate_peers(&mut self, mask: u64, pa: u64, now: Tick) -> Tick {
+        let mut extra = 0;
+        for peer in 0..self.cores.len() as u8 {
+            if mask & (1 << peer) != 0 {
+                self.stats.coherence_invals.inc();
+                if let Some(_wb) = self.l1s[peer as usize].invalidate(pa) {
+                    // Dirty copy flushes to L2 on the way out.
+                    self.l2.fill(pa, MesiState::Modified);
+                }
+                self.dir
+                    .note_evict(self.l1s[peer as usize].line_addr(pa), peer);
+                extra = ns_to_ticks(2.0 * self.cfg.membus_lat_ns);
+            }
+        }
+        let _ = now;
+        extra
+    }
+
+    /// A line arrived at L2 from memory: fill L2, then distribute to the
+    /// waiting cores' L1s. L2-*hit* fills carry no pending entry and
+    /// must not touch L2 state (it could lose a dirty bit).
+    fn memory_fill_arrived(&mut self, pa: u64, now: Tick) -> Vec<u8> {
+        let key = self.l2.line_addr(pa);
+        let Some(pending) = self.l2_pending.remove(&key) else {
+            return Vec::new();
+        };
+        self.pf_book.note_fill(key);
+        match self.l2.fill(pa, MesiState::Exclusive) {
+            Victim::Dirty(victim_pa) => {
+                self.pf_book.note_evict(self.l2.line_addr(victim_pa));
+                self.writeback(victim_pa, now);
+                self.inclusive_purge(victim_pa);
+            }
+            Victim::Clean(victim_pa) => {
+                self.pf_book.note_evict(self.l2.line_addr(victim_pa));
+                self.inclusive_purge(victim_pa);
+            }
+            Victim::None => {}
+        }
+        pending.cores
+    }
+
+    /// Inclusive hierarchy: an L2 eviction kills L1 copies above.
+    /// The directory tells us exactly which L1s can hold the line, so
+    /// this is O(sharers) rather than O(cores) (perf-pass change #3).
+    fn inclusive_purge(&mut self, victim_pa: u64) {
+        use crate::cache::directory::DirState;
+        let line = self.l2.line_addr(victim_pa);
+        let mask: u64 = match self.dir.state(line) {
+            DirState::Uncached => 0,
+            DirState::Owned { core } => 1 << core,
+            DirState::Sharers { mask } => mask,
+        };
+        let mut m = mask;
+        while m != 0 {
+            let c = m.trailing_zeros() as usize;
+            m &= m - 1;
+            if let Some(_wb) = self.l1s[c].invalidate(victim_pa) {
+                // Dirty L1 data above a dying L2 line goes to memory.
+                self.writeback(victim_pa, self.queue.now());
+            }
+        }
+        self.dir.purge(line);
+    }
+
+    /// Posted write-back of a dirty line to its memory class.
+    fn writeback(&mut self, pa: u64, now: Tick) {
+        if self.is_cxl_addr(pa) {
+            self.stats.writebacks_cxl.inc();
+            if self.cfg.cxl.attach == CxlAttach::MemBus {
+                let t = self.membus.transfer(now, 64 + 16);
+                let dpa = pa - self.bios.cxl_window_base;
+                self.cxl_dev.media.access(t, dpa, self.cfg.l1.line, true);
+                return;
+            }
+            let t = self.membus.transfer(now, 64 + 16);
+            let t = self.iobus.transfer(t, 64 + 16);
+            let host_pkt = Packet::new(
+                0,
+                MemCmd::WritebackDirty,
+                pa & !(self.cfg.l1.line - 1),
+                64,
+                0,
+                now,
+            );
+            if let Ok((m2s, arrival)) = self.rc.packetize_and_send(t, &host_pkt)
+            {
+                let (resp, ready) = self.cxl_dev.handle_m2s(arrival, &m2s);
+                // NDR completion retires the credit.
+                self.rc.receive_s2m(ready, &resp, now);
+            }
+            // On credit exhaustion the posted write is dropped from the
+            // timing model (data is already functionally in physmem);
+            // counted so the approximation is visible.
+        } else {
+            self.stats.writebacks_dram.inc();
+            let t = self.membus.transfer(now, 64 + 16);
+            // Posted: force-accept into the controller (write queue
+            // drains are not modeled with retries).
+            self.dram.timing.access(t, pa, self.cfg.l1.line, true);
+        }
+    }
+
+    // ---- the issue engine ---------------------------------------------------
+
+    fn schedule_issue(&mut self, core: u8, at: Tick) {
+        if !self.issue_scheduled[core as usize] {
+            self.issue_scheduled[core as usize] = true;
+            self.queue.schedule_at(at.max(self.queue.now()), Ev::Issue(core));
+        }
+    }
+
+    fn next_op_for(&mut self, core: usize) -> Option<WlOp> {
+        if let Some(op) = self.pending_op[core].take() {
+            return Some(op);
+        }
+        self.workloads.get_mut(core).and_then(|w| w.next_op())
+    }
+
+    fn try_issue(&mut self, core: u8, now: Tick) {
+        let c = core as usize;
+        if c >= self.workloads.len() || self.cores[c].done {
+            return;
+        }
+        loop {
+            if !self.cores[c].can_issue(now) {
+                if !self.cores[c].done
+                    && self.cores[c].lsq_free()
+                    && self.cores[c].next_issue > now
+                {
+                    let at = self.cores[c].next_issue;
+                    self.schedule_issue(core, at);
+                }
+                // Else: waiting on a response; completions re-trigger.
+                return;
+            }
+            let Some(op) = self.next_op_for(c) else {
+                if self.cores[c].outstanding() == 0 {
+                    self.cores[c].finish(now);
+                }
+                return;
+            };
+            match op {
+                WlOp::Work { cycles } => {
+                    self.cores[c].do_work(now, cycles);
+                }
+                WlOp::Load { va, .. } | WlOp::Store { va, .. } => {
+                    let is_write = matches!(op, WlOp::Store { .. });
+                    // L1 MSHR structural hazard check happens in
+                    // `access`; check capacity here to park the op.
+                    if self.l1_mshrs[c].is_full() {
+                        self.pending_op[c] = Some(op);
+                        self.cores[c].note_lsq_stall();
+                        return; // a LineFill will re-trigger issue
+                    }
+                    // Translate (may fault).
+                    let guest = self.guest.as_mut().expect("booted");
+                    let faults_before = self.spaces[c].stats.faults;
+                    let pa = match self.spaces[c].translate(va, &mut guest.alloc)
+                    {
+                        Ok(pa) => pa,
+                        Err(e) => {
+                            log::error!("core {core}: {e}");
+                            self.cores[c].finish(now);
+                            return;
+                        }
+                    };
+                    if self.spaces[c].stats.faults > faults_before {
+                        self.stats.page_faults.inc();
+                        self.cores[c].do_work(
+                            now,
+                            self.fault_ticks
+                                / ns_to_ticks(self.cfg.cycle_ns()).max(1),
+                        );
+                    }
+                    // Functional execution in program order.
+                    if is_write {
+                        let bits = self.workloads[c].store_value(va);
+                        self.mem.write_u64(pa & !7, bits);
+                    } else {
+                        let bits = self.mem.read_u64(pa & !7);
+                        self.workloads[c].load_done(va, bits);
+                    }
+                    self.access(core, pa, is_write, now);
+                }
+            }
+        }
+    }
+
+    fn complete_line_fill(&mut self, core: u8, pa: u64, now: Tick) {
+        let c = core as usize;
+        let line = self.l1s[c].line_addr(pa);
+        let Some(mshr) = self.l1_mshrs[c].complete(line) else {
+            return; // duplicate fill (e.g. L2-hit raced a retry)
+        };
+        // Directory actions + fill state (applied here, at fill time).
+        use crate::cache::directory::DirAction;
+        let state = if mshr.wants_exclusive {
+            if let DirAction::Invalidate { mask } =
+                self.dir.write_req(line, core)
+            {
+                self.invalidate_peers(mask, pa, now);
+            }
+            self.dir.note_write(line, core);
+            MesiState::Modified
+        } else {
+            if let DirAction::DowngradeOwner { core: owner } =
+                self.dir.read_req(line, core)
+            {
+                let was_m = self.l1s[owner as usize].downgrade(pa);
+                if was_m {
+                    self.l2.fill(pa, MesiState::Modified);
+                }
+            }
+            if self.dir.note_read(line, core) {
+                MesiState::Exclusive
+            } else {
+                MesiState::Shared
+            }
+        };
+        match self.l1s[c].fill(pa, state) {
+            Victim::Dirty(victim_pa) => {
+                // L1 dirty victim folds into L2.
+                self.l2.fill(victim_pa, MesiState::Modified);
+                self.dir.note_evict(self.l1s[c].line_addr(victim_pa), core);
+            }
+            Victim::Clean(victim_pa) => {
+                self.dir.note_evict(self.l1s[c].line_addr(victim_pa), core);
+            }
+            Victim::None => {}
+        }
+        for req in mshr.waiters {
+            self.cores[c].complete_mem(now, req);
+        }
+        self.try_issue(core, now);
+    }
+
+    // ---- the event loop -------------------------------------------------------
+
+    /// Run until all attached workloads finish (or `max_ticks`).
+    pub fn run(&mut self, max_ticks: Option<Tick>) -> RunSummary {
+        while let Some((t, ev)) = self.queue.pop() {
+            crate::util::logger::set_tick(t);
+            if let Some(m) = max_ticks {
+                if t > m {
+                    break;
+                }
+            }
+            match ev {
+                Ev::Issue(core) => {
+                    self.issue_scheduled[core as usize] = false;
+                    self.try_issue(core, t);
+                }
+                Ev::Hit { core, req } => {
+                    self.cores[core as usize].complete_mem(t, req);
+                    self.try_issue(core, t);
+                }
+                Ev::LineFill { core, line_pa } => {
+                    let cores = self.memory_fill_arrived(line_pa, t);
+                    // First deliver to the requester on this event, then
+                    // to any cores that merged at L2. PF_CORE marks a
+                    // prefetch fill: it stops at L2 unless demand merged.
+                    if core != PF_CORE {
+                        self.complete_line_fill(core, line_pa, t);
+                    }
+                    for other in cores {
+                        if other != core && other != PF_CORE {
+                            self.complete_line_fill(other, line_pa, t);
+                        }
+                    }
+                }
+                Ev::DramRetry { core, line_pa, wants_excl } => {
+                    self.fetch_from_dram(core, line_pa, wants_excl, t);
+                }
+                Ev::CxlRetry { core, line_pa, wants_excl } => {
+                    self.fetch_from_cxl(core, line_pa, wants_excl, t);
+                }
+            }
+        }
+        self.summary()
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        let ticks = self
+            .cores
+            .iter()
+            .map(|c| c.stats.finished_at)
+            .max()
+            .unwrap_or(self.queue.now())
+            .max(1);
+        let seconds = ticks as f64 * 1e-12;
+        let bytes: u64 =
+            self.workloads.iter().map(|w| w.bytes_moved()).sum();
+        let l1_hits: u64 = self.l1s.iter().map(|l| l.stats.hits.get()).sum();
+        let l1_miss: u64 =
+            self.l1s.iter().map(|l| l.stats.misses.get()).sum();
+        let link = &self.rc.link.stats;
+        RunSummary {
+            ticks,
+            seconds,
+            bytes_moved: bytes,
+            bandwidth_gbps: bytes as f64 / seconds / 1e9,
+            l1_miss_rate: if l1_hits + l1_miss == 0 {
+                0.0
+            } else {
+                l1_miss as f64 / (l1_hits + l1_miss) as f64
+            },
+            l2_miss_rate: self.l2.stats.miss_rate(),
+            dram_accesses: self.stats.dram_reads.get(),
+            cxl_accesses: self.stats.cxl_reads.get(),
+            avg_lat_dram_ns: self.dram.timing.stats.latency.stats.mean()
+                / 1000.0,
+            avg_lat_cxl_ns: self.cxl_dev.stats.media_latency.stats.mean()
+                / 1000.0
+                + 2.0 * (self.cfg.cxl.pkt_lat_ns + self.cfg.cxl.depkt_lat_ns)
+                + 2.0 * self.cfg.cxl.link_lat_ns,
+            m2s_req: link.m2s_req.get(),
+            m2s_rwd: link.m2s_rwd.get(),
+            s2m_ndr: link.s2m_ndr.get(),
+            s2m_drs: link.s2m_drs.get(),
+            events: self.queue.processed(),
+        }
+    }
+
+    /// Read access to an attached workload (coordinator hooks).
+    pub fn workload(&self, i: usize) -> Option<&dyn Workload> {
+        self.workloads.get(i).map(|b| b.as_ref())
+    }
+
+    /// Verify all workloads' functional results.
+    pub fn verify(&mut self) -> Result<(), String> {
+        let guest = self.guest.as_mut().ok_or("not booted")?;
+        for (i, w) in self.workloads.iter().enumerate() {
+            w.verify(&mut self.spaces[i], &mut guest.alloc, &self.mem)?;
+        }
+        Ok(())
+    }
+
+    pub fn dump_stats(&self) -> StatDump {
+        let mut d = StatDump::default();
+        for (i, c) in self.cores.iter().enumerate() {
+            c.dump(&format!("core{i}"), &mut d);
+        }
+        for (i, l) in self.l1s.iter().enumerate() {
+            l.stats.dump(&format!("l1.{i}"), &mut d);
+        }
+        self.l2.stats.dump("l2", &mut d);
+        self.membus.dump("membus", &mut d);
+        self.iobus.dump("iobus", &mut d);
+        self.dram.timing.dump("dram", &mut d);
+        self.rc.dump("cxl.rc", &mut d);
+        self.cxl_dev.dump("cxl.dev", &mut d);
+        if let Some(p) = &self.prefetcher {
+            crate::cache::prefetch::dump(p, "l2.pf", &mut d);
+        }
+        d.counter("sys.page_faults", &self.stats.page_faults);
+        d.counter("sys.coherence_invals", &self.stats.coherence_invals);
+        d.counter("sys.writebacks_dram", &self.stats.writebacks_dram);
+        d.counter("sys.writebacks_cxl", &self.stats.writebacks_cxl);
+        d.push("sys.events", self.queue.processed() as f64);
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CpuModel;
+    use crate::workloads::{Stream, StreamKernel};
+
+    fn small_cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.cores = 2;
+        c.sys_mem_size = 256 << 20;
+        c.cxl.mem_size = 256 << 20;
+        c
+    }
+
+    fn booted(cfg: SimConfig) -> Machine {
+        let mut m = Machine::new(cfg).unwrap();
+        m.boot(ProgModel::Znuma).unwrap();
+        m
+    }
+
+    #[test]
+    fn boot_onlines_znuma_node() {
+        let m = booted(small_cfg());
+        let g = m.guest.as_ref().unwrap();
+        assert_eq!(g.znuma_node(), Some(1));
+        assert!(g.alloc.nodes[1].online);
+        assert!(!g.alloc.nodes[1].has_cpus);
+        assert!(g.memdev.is_some());
+        // RC routing mirrors the committed decoder.
+        assert!(m.rc.routes(m.bios.cxl_window_base));
+    }
+
+    #[test]
+    fn stream_on_dram_runs_and_verifies() {
+        let mut m = booted(small_cfg());
+        let wl = Stream::new(StreamKernel::Copy, 4096, 1);
+        m.attach_workloads(
+            vec![Box::new(wl)],
+            &MemPolicy::Bind { nodes: vec![0] },
+        )
+        .unwrap();
+        let s = m.run(None);
+        assert!(s.ticks > 0);
+        assert!(s.cxl_accesses == 0, "bind:0 must not touch CXL");
+        assert!(s.dram_accesses > 0);
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn stream_on_cxl_goes_through_link() {
+        let mut m = booted(small_cfg());
+        let wl = Stream::new(StreamKernel::Copy, 4096, 1);
+        m.attach_workloads(
+            vec![Box::new(wl)],
+            &MemPolicy::Bind { nodes: vec![1] },
+        )
+        .unwrap();
+        let s = m.run(None);
+        assert!(s.cxl_accesses > 0);
+        assert!(s.m2s_req > 0, "M2S requests must cross the link");
+        assert!(s.s2m_drs > 0, "read data must return on DRS");
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn cxl_slower_than_dram() {
+        let run = |node: u32| {
+            let mut m = booted(small_cfg());
+            let wl = Stream::new(StreamKernel::Triad, 8192, 1);
+            m.attach_workloads(
+                vec![Box::new(wl)],
+                &MemPolicy::Bind { nodes: vec![node] },
+            )
+            .unwrap();
+            m.run(None).ticks
+        };
+        let dram = run(0);
+        let cxl = run(1);
+        assert!(
+            cxl > dram * 11 / 10,
+            "CXL ({cxl}) must be slower than DRAM ({dram})"
+        );
+    }
+
+    #[test]
+    fn interleave_splits_traffic() {
+        let mut m = booted(small_cfg());
+        let wl = Stream::new(StreamKernel::Copy, 16384, 1);
+        m.attach_workloads(
+            vec![Box::new(wl)],
+            &MemPolicy::Interleave { weights: vec![(0, 1), (1, 1)] },
+        )
+        .unwrap();
+        let s = m.run(None);
+        assert!(s.dram_accesses > 0 && s.cxl_accesses > 0);
+        let ratio = s.dram_accesses as f64 / s.cxl_accesses as f64;
+        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let go = || {
+            let mut m = booted(small_cfg());
+            let wl = Stream::new(StreamKernel::Add, 2048, 1);
+            m.attach_workloads(
+                vec![Box::new(wl)],
+                &MemPolicy::Interleave { weights: vec![(0, 3), (1, 1)] },
+            )
+            .unwrap();
+            let s = m.run(None);
+            (s.ticks, s.events, s.dram_accesses, s.cxl_accesses)
+        };
+        assert_eq!(go(), go());
+    }
+
+    #[test]
+    fn two_cores_share_l2() {
+        let mut m = booted(small_cfg());
+        let a = Stream::new(StreamKernel::Copy, 2048, 1);
+        let b = Stream::new(StreamKernel::Copy, 2048, 1);
+        m.attach_workloads(
+            vec![Box::new(a), Box::new(b)],
+            &MemPolicy::Bind { nodes: vec![0] },
+        )
+        .unwrap();
+        let s = m.run(None);
+        assert!(s.ticks > 0);
+        assert!(m.cores.iter().all(|c| c.done));
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn membus_attach_baseline_skips_protocol() {
+        let mut cfg = small_cfg();
+        cfg.cxl.attach = CxlAttach::MemBus;
+        let mut m = booted(cfg);
+        let wl = Stream::new(StreamKernel::Copy, 4096, 1);
+        m.attach_workloads(
+            vec![Box::new(wl)],
+            &MemPolicy::Bind { nodes: vec![1] },
+        )
+        .unwrap();
+        let s = m.run(None);
+        assert!(s.cxl_accesses > 0);
+        assert_eq!(s.m2s_req, 0, "baseline must bypass the CXL.mem layer");
+    }
+
+    #[test]
+    fn o3_faster_than_inorder_on_misses() {
+        let run = |model: CpuModel| {
+            let mut cfg = small_cfg();
+            cfg.cpu_model = model;
+            let mut m = booted(cfg);
+            let wl = Stream::new(StreamKernel::Copy, 8192, 1);
+            m.attach_workloads(
+                vec![Box::new(wl)],
+                &MemPolicy::Bind { nodes: vec![0] },
+            )
+            .unwrap();
+            m.run(None).ticks
+        };
+        let o3 = run(CpuModel::OutOfOrder);
+        let inorder = run(CpuModel::InOrder);
+        assert!(
+            o3 < inorder,
+            "O3 ({o3}) must beat in-order ({inorder}) via MLP"
+        );
+    }
+}

@@ -1,0 +1,173 @@
+//! MMIO routing: the machine's physical-address decode for device
+//! registers, exposed to the guest as [`crate::guestos::Platform`].
+//!
+//! Routes:
+//!   * ECAM window -> per-function config spaces,
+//!   * CHBS block  -> host-bridge (RC) component registers,
+//!   * endpoint BARs (after assignment) -> device component / mailbox
+//!     blocks.
+
+use crate::cxl::regs::ComponentRegs;
+use crate::cxl::CxlDevice;
+use crate::guestos::Platform;
+use crate::pcie::{Bdf, Ecam};
+
+pub struct MmioWorld<'a> {
+    pub ecam: &'a mut Ecam,
+    pub cxl_dev: &'a mut CxlDevice,
+    pub hb_component: &'a mut ComponentRegs,
+    pub chbs_base: u64,
+    pub chbs_size: u64,
+    pub ep_bdf: Bdf,
+}
+
+impl<'a> MmioWorld<'a> {
+    /// Resolve the endpoint's currently-programmed BARs (the guest may
+    /// have just written them through ECAM).
+    fn ep_bar(&self, idx: usize) -> Option<(u64, u64)> {
+        let cfg = self.ecam.function(self.ep_bdf)?;
+        let base = cfg.bar_addr(idx)?;
+        Some((base, cfg.bar_size(idx)))
+    }
+
+    /// Route an address: 0 = ECAM, 1 = CHBS, 2 = BAR0 (component),
+    /// 3 = BAR2 (device block).
+    fn route(&self, addr: u64) -> Option<(u8, u64)> {
+        if self.ecam.contains(addr) {
+            return Some((0, addr));
+        }
+        if addr >= self.chbs_base && addr < self.chbs_base + self.chbs_size {
+            return Some((1, addr - self.chbs_base));
+        }
+        if let Some((b, s)) = self.ep_bar(0) {
+            if addr >= b && addr < b + s {
+                return Some((2, addr - b));
+            }
+        }
+        if let Some((b, s)) = self.ep_bar(2) {
+            if addr >= b && addr < b + s {
+                return Some((3, addr - b));
+            }
+        }
+        None
+    }
+}
+
+impl<'a> Platform for MmioWorld<'a> {
+    fn mmio_read32(&mut self, addr: u64) -> u32 {
+        match self.route(addr) {
+            Some((0, a)) => self.ecam.mmio_read32(a),
+            Some((1, off)) => self.hb_component.read32(off),
+            Some((2, off)) => self.cxl_dev.mmio_read(0, off) as u32,
+            Some((3, off)) => {
+                // 32-bit view of the 64-bit device registers.
+                let v = self.cxl_dev.mmio_read(2, off & !7);
+                (v >> ((addr & 4) * 8)) as u32
+            }
+            _ => 0xFFFF_FFFF,
+        }
+    }
+
+    fn mmio_write32(&mut self, addr: u64, v: u32) {
+        match self.route(addr) {
+            Some((0, a)) => self.ecam.mmio_write32(a, v),
+            Some((1, off)) => self.hb_component.write32(off, v),
+            Some((2, off)) => self.cxl_dev.mmio_write(0, off, v as u64),
+            Some((3, off)) => {
+                let old = self.cxl_dev.mmio_read(2, off & !7);
+                let sh = (addr & 4) * 8;
+                let nv =
+                    (old & !(0xFFFF_FFFFu64 << sh)) | ((v as u64) << sh);
+                self.cxl_dev.mmio_write(2, off & !7, nv);
+            }
+            _ => {}
+        }
+    }
+
+    fn mmio_read64(&mut self, addr: u64) -> u64 {
+        match self.route(addr) {
+            Some((3, off)) => self.cxl_dev.mmio_read(2, off),
+            _ => {
+                let lo = self.mmio_read32(addr) as u64;
+                let hi = self.mmio_read32(addr + 4) as u64;
+                lo | (hi << 32)
+            }
+        }
+    }
+
+    fn mmio_write64(&mut self, addr: u64, v: u64) {
+        match self.route(addr) {
+            Some((3, off)) => self.cxl_dev.mmio_write(2, off, v),
+            _ => {
+                self.mmio_write32(addr, v as u32);
+                self.mmio_write32(addr + 4, (v >> 32) as u32);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bios::layout;
+    use crate::config::SimConfig;
+    use crate::cxl::regs::dev;
+    use crate::pcie;
+
+    fn world() -> (Ecam, CxlDevice, ComponentRegs, Bdf) {
+        let cfg = SimConfig::default();
+        let mut ecam = Ecam::new(layout::ECAM_BASE, layout::ECAM_BUSES);
+        let (_, _, ep) = pcie::build_topology(&mut ecam);
+        // Endpoint BARs: BAR0 = 64 KiB component, BAR2 = 4 KiB device.
+        let epc = ecam.function_mut(ep).unwrap();
+        epc.add_bar64(0, 1 << 16);
+        epc.add_bar64(2, 1 << 12);
+        epc.assign_bar(0, 0xF010_0000);
+        epc.assign_bar(2, 0xF012_0000);
+        let dev = CxlDevice::new(&cfg.cxl, 42);
+        let hb = ComponentRegs::new(1);
+        (ecam, dev, hb, ep)
+    }
+
+    #[test]
+    fn routes_all_four_surfaces() {
+        let (mut ecam, mut dev, mut hb, ep) = world();
+        let mut w = MmioWorld {
+            ecam: &mut ecam,
+            cxl_dev: &mut dev,
+            hb_component: &mut hb,
+            chbs_base: layout::CHBS_BASE,
+            chbs_size: layout::CHBS_SIZE,
+            ep_bdf: ep,
+        };
+        // ECAM: endpoint vendor id.
+        let vid = w.mmio_read32(layout::ECAM_BASE + ep.ecam_offset());
+        assert_eq!(vid & 0xFFFF, pcie::ids::VENDOR_CXL_DEV as u32);
+        // CHBS: capability header.
+        assert_eq!(w.mmio_read32(layout::CHBS_BASE) & 0xFFFF, 0x0001);
+        // BAR0: component header.
+        assert_eq!(w.mmio_read32(0xF010_0000) & 0xFFFF, 0x0001);
+        // BAR2: mailbox caps (64-bit reg).
+        assert_eq!(w.mmio_read64(0xF012_0000 + dev::MB_CAPS), 9);
+        // Unmapped floats high.
+        assert_eq!(w.mmio_read32(0x1234_5678), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn split_32bit_access_to_64bit_regs() {
+        let (mut ecam, mut dev, mut hb, ep) = world();
+        let mut w = MmioWorld {
+            ecam: &mut ecam,
+            cxl_dev: &mut dev,
+            hb_component: &mut hb,
+            chbs_base: layout::CHBS_BASE,
+            chbs_size: layout::CHBS_SIZE,
+            ep_bdf: ep,
+        };
+        let cmd = 0xF012_0000 + dev::MB_CMD;
+        w.mmio_write32(cmd, 0x4000);
+        w.mmio_write32(cmd + 4, 0x1);
+        assert_eq!(w.mmio_read64(cmd), 0x1_0000_4000);
+        assert_eq!(w.mmio_read32(cmd + 4), 1);
+    }
+}

@@ -1,0 +1,18 @@
+//! The full-system machine: topology construction, boot, and the
+//! event-driven memory system (Fig. 1B).
+//!
+//! Timing methodology (DESIGN.md §S20): components keep *stateful
+//! occupancy* (bus layers, DRAM banks, link flits, credits), so a miss's
+//! end-to-end latency is composed synchronously at miss time by walking
+//! the path CPU -> L1 -> (dir) -> L2 -> {membus -> DRAM | membus ->
+//! IOBus -> RC -> link -> device}; only genuinely asynchronous points
+//! (responses, credit stalls, DRAM-queue-full retries) become events.
+//! This is the classic latency-composition DES style: contention and
+//! queueing are modeled by the components' occupancy state, event count
+//! stays proportional to misses, and runs are bit-deterministic.
+
+pub mod machine;
+pub mod mmio;
+
+pub use machine::{Machine, RunSummary};
+pub use mmio::MmioWorld;

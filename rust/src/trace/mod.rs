@@ -1,0 +1,121 @@
+//! Access traces: capture, binary (de)serialization and replay.
+//!
+//! The fast-forward coordinator feeds traces to the XLA cache-warm
+//! artifact; benches use saved traces for reproducible inputs. Format:
+//! magic "CXLT", version u32, count u64, then per record packed
+//! (line_addr: i32, is_write: u8).
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub line_addrs: Vec<i32>,
+    pub is_write: Vec<i32>,
+}
+
+impl Trace {
+    pub fn push(&mut self, line_addr: i32, is_write: bool) {
+        self.line_addrs.push(line_addr);
+        self.is_write.push(is_write as i32);
+    }
+
+    pub fn len(&self) -> usize {
+        self.line_addrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.line_addrs.is_empty()
+    }
+
+    /// Iterate fixed-size windows (last may be short).
+    pub fn windows(&self, n: usize) -> impl Iterator<Item = (&[i32], &[i32])> {
+        self.line_addrs
+            .chunks(n)
+            .zip(self.is_write.chunks(n))
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.len() * 5);
+        out.extend_from_slice(b"CXLT");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(self.len() as u64).to_le_bytes());
+        for i in 0..self.len() {
+            out.extend_from_slice(&self.line_addrs[i].to_le_bytes());
+            out.push(self.is_write[i] as u8);
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Trace> {
+        if b.len() < 16 || &b[0..4] != b"CXLT" {
+            bail!("not a CXLT trace");
+        }
+        let ver = u32::from_le_bytes(b[4..8].try_into().unwrap());
+        if ver != 1 {
+            bail!("unsupported trace version {ver}");
+        }
+        let n = u64::from_le_bytes(b[8..16].try_into().unwrap()) as usize;
+        if b.len() != 16 + n * 5 {
+            bail!("trace length mismatch");
+        }
+        let mut t = Trace::default();
+        for i in 0..n {
+            let at = 16 + i * 5;
+            t.line_addrs.push(i32::from_le_bytes(
+                b[at..at + 4].try_into().unwrap(),
+            ));
+            t.is_write.push(b[at + 4] as i32);
+        }
+        Ok(t)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Trace> {
+        Trace::from_bytes(
+            &std::fs::read(path)
+                .with_context(|| format!("reading {}", path.display()))?,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let mut t = Trace::default();
+        for i in 0..1000 {
+            t.push(i * 3, i % 7 == 0);
+        }
+        let b = t.to_bytes();
+        assert_eq!(Trace::from_bytes(&b).unwrap(), t);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Trace::from_bytes(b"nope").is_err());
+        assert!(Trace::from_bytes(b"CXLT\x02\x00\x00\x00").is_err());
+        let mut good = Trace::default();
+        good.push(1, false);
+        let mut b = good.to_bytes();
+        b.pop();
+        assert!(Trace::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn windows_chunking() {
+        let mut t = Trace::default();
+        for i in 0..10 {
+            t.push(i, false);
+        }
+        let w: Vec<_> = t.windows(4).collect();
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[0].0.len(), 4);
+        assert_eq!(w[2].0.len(), 2);
+    }
+}

@@ -1,0 +1,207 @@
+//! Criterion-style bench harness (offline — no criterion).
+//!
+//! Each `benches/*.rs` is a `harness = false` binary that uses
+//! [`BenchRunner`] for wall-clock measurement (warmup + N samples,
+//! median/p10/p90) and [`Table`] to print the paper's tables/series in a
+//! stable, diffable format. Results are also appended as JSON lines so
+//! EXPERIMENTS.md numbers are regenerable.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over samples.
+#[derive(Clone, Copy, Debug)]
+pub struct Samples {
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+    pub iters: u64,
+}
+
+impl Samples {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+}
+
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub samples: usize,
+    pub min_sample_time: Duration,
+    results: Vec<(String, Samples)>,
+    suite: String,
+}
+
+impl BenchRunner {
+    pub fn new(suite: &str) -> Self {
+        // Honor the same quick-run env knob our CI uses.
+        let quick = std::env::var("CXLRAMSIM_BENCH_QUICK").is_ok();
+        BenchRunner {
+            warmup: if quick { 1 } else { 3 },
+            samples: if quick { 3 } else { 10 },
+            min_sample_time: Duration::from_millis(if quick { 10 } else { 50 }),
+            results: Vec::new(),
+            suite: suite.to_string(),
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Samples {
+        for _ in 0..self.warmup {
+            f();
+        }
+        // Choose an iteration count so each sample runs >= min_sample_time.
+        let t = Instant::now();
+        f();
+        let one = t.elapsed().max(Duration::from_nanos(100));
+        let iters = (self.min_sample_time.as_nanos() / one.as_nanos())
+            .clamp(1, 1_000_000) as u64;
+
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| {
+            let idx = ((per_iter.len() - 1) as f64 * p).round() as usize;
+            per_iter[idx]
+        };
+        let s = Samples {
+            median_ns: pct(0.5),
+            p10_ns: pct(0.1),
+            p90_ns: pct(0.9),
+            mean_ns: per_iter.iter().sum::<f64>() / per_iter.len() as f64,
+            iters,
+        };
+        println!(
+            "{}/{}: median {:>12} (p10 {}, p90 {}) x{}",
+            self.suite,
+            name,
+            fmt_ns(s.median_ns),
+            fmt_ns(s.p10_ns),
+            fmt_ns(s.p90_ns),
+            iters
+        );
+        self.results.push((name.to_string(), s));
+        s
+    }
+
+    /// Write accumulated results to `target/bench-results/<suite>.jsonl`.
+    pub fn finish(&self) {
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let mut out = String::new();
+        for (name, s) in &self.results {
+            out.push_str(&format!(
+                "{{\"suite\":\"{}\",\"bench\":\"{}\",\"median_ns\":{:.1},\
+                 \"p10_ns\":{:.1},\"p90_ns\":{:.1},\"iters\":{}}}\n",
+                self.suite, name, s.median_ns, s.p10_ns, s.p90_ns, s.iters
+            ));
+        }
+        let _ = std::fs::write(dir.join(format!("{}.jsonl", self.suite)), out);
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Fixed-width table printer for paper tables/series.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line: String = w
+            .iter()
+            .map(|n| "-".repeat(n + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        println!("\n== {} ==", self.title);
+        println!("{line}");
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<width$} ", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{line}");
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+        println!("{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("CXLRAMSIM_BENCH_QUICK", "1");
+        let mut r = BenchRunner::new("selftest");
+        let mut acc = 0u64;
+        let s = r.bench("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(s.median_ns > 0.0);
+        assert!(s.p10_ns <= s.p90_ns);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 us");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.0e9), "3.000 s");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["x".into()]);
+    }
+}

@@ -1,0 +1,100 @@
+//! Fast non-cryptographic hasher for hot-path maps (FxHash-style).
+//!
+//! The simulator's inner loop does several `HashMap<u64, _>` lookups per
+//! memory operation (physical page store, page tables, the L2 pending
+//! table, the directory). std's default SipHash is DoS-resistant but
+//! ~5x slower than a multiplicative hash for integer keys; none of these
+//! maps are attacker-facing. Swapping the hasher was perf-pass change #1
+//! (EXPERIMENTS.md §Perf).
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, v: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut b = [0u8; 8];
+            b[..chunk.len()].copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(b));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works_and_distributes() {
+        let mut m: FxHashMap<u64, u64> = FxHashMap::default();
+        for i in 0..10_000u64 {
+            m.insert(i * 4096, i);
+        }
+        assert_eq!(m.len(), 10_000);
+        for i in (0..10_000u64).step_by(7) {
+            assert_eq!(m.get(&(i * 4096)), Some(&i));
+        }
+    }
+
+    #[test]
+    fn hash_differs_for_nearby_keys() {
+        let h = |v: u64| {
+            let mut hh = FxHasher::default();
+            hh.write_u64(v);
+            hh.finish()
+        };
+        // Page-aligned keys (low bits zero) must still spread.
+        let a = h(0x1000);
+        let b = h(0x2000);
+        let c = h(0x3000);
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert_ne!(a & 0xFFFF, b & 0xFFFF, "low bits must differ");
+    }
+
+    #[test]
+    fn set_dedups() {
+        let mut s: FxHashSet<u64> = FxHashSet::default();
+        s.insert(5);
+        s.insert(5);
+        assert_eq!(s.len(), 1);
+    }
+}

@@ -1,0 +1,73 @@
+//! Tiny `log`-facade backend: level from `CXLRAMSIM_LOG` (error..trace),
+//! writes to stderr with the simulated tick when available.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static CURRENT_TICK: AtomicU64 = AtomicU64::new(0);
+
+/// Event loops publish the current tick so log lines carry sim time.
+pub fn set_tick(t: u64) {
+    CURRENT_TICK.store(t, Ordering::Relaxed);
+}
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let tick = CURRENT_TICK.load(Ordering::Relaxed);
+            eprintln!(
+                "[{:>5} t={}] {}: {}",
+                level_str(record.level()),
+                tick,
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+fn level_str(l: Level) -> &'static str {
+    match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN",
+        Level::Info => "INFO",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    }
+}
+
+/// Install the logger once; safe to call repeatedly.
+pub fn init() {
+    static LOGGER: StderrLogger = StderrLogger;
+    let filter = match std::env::var("CXLRAMSIM_LOG").as_deref() {
+        Ok("trace") => LevelFilter::Trace,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("info") => LevelFilter::Info,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("error") => LevelFilter::Error,
+        _ => LevelFilter::Warn,
+    };
+    if log::set_logger(&LOGGER).is_ok() {
+        log::set_max_level(filter);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        super::set_tick(123);
+        log::warn!("logger self-test line");
+    }
+}

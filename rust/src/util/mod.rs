@@ -1,0 +1,85 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is fully offline (only the `xla` crate's vendored
+//! dependency closure is available), so the pieces a project would
+//! normally pull from crates.io — PRNG, JSON/TOML parsing, property
+//! testing, a criterion-style bench harness, a logger — are implemented
+//! here from scratch and tested like any other module.
+
+pub mod rng;
+pub mod json;
+pub mod toml;
+pub mod prop;
+pub mod bench;
+pub mod logger;
+pub mod fxhash;
+
+/// Integer ceil-div.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// `true` iff `x` is a power of two (and nonzero).
+#[inline]
+pub fn is_pow2(x: u64) -> bool {
+    x != 0 && (x & (x - 1)) == 0
+}
+
+/// log2 of a power of two.
+#[inline]
+pub fn log2(x: u64) -> u32 {
+    debug_assert!(is_pow2(x));
+    x.trailing_zeros()
+}
+
+/// Pretty-print a byte size (`1572864` -> `"1.5 MiB"`).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else if (v - v.round()).abs() < 1e-9 {
+        format!("{} {}", v.round() as u64, UNITS[u])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn pow2_and_log2() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(64));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(12));
+        assert_eq!(log2(1), 0);
+        assert_eq!(log2(4096), 12);
+    }
+
+    #[test]
+    fn human_bytes_format() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1024), "1 KiB");
+        assert_eq!(human_bytes(1536), "1.5 KiB");
+        assert_eq!(human_bytes(1 << 20), "1 MiB");
+        assert_eq!(human_bytes(3 * (1 << 30) / 2), "1.5 GiB");
+    }
+}

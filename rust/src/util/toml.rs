@@ -1,0 +1,313 @@
+//! TOML-subset parser for simulator config files (offline — no serde).
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / integer (dec, hex `0x`, underscores, size suffixes `KiB MiB
+//! GiB` and `K M G`) / float / bool / homogeneous arrays, `#` comments.
+//! Unsupported (rejected, not silently ignored): arrays-of-tables,
+//! multi-line strings, dotted keys on the LHS, datetimes.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_int().and_then(|i| u64::try_from(i).ok())
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: flat map of `"section.key"` -> value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = ln + 1;
+            let err = |msg: &str| TomlError { line, msg: msg.into() };
+            let s = strip_comment(raw).trim();
+            if s.is_empty() {
+                continue;
+            }
+            if let Some(rest) = s.strip_prefix('[') {
+                if s.starts_with("[[") {
+                    return Err(err("arrays-of-tables unsupported"));
+                }
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header"))?
+                    .trim();
+                if name.is_empty()
+                    || !name.chars().all(|c| {
+                        c.is_ascii_alphanumeric() || c == '_' || c == '.'
+                            || c == '-'
+                    })
+                {
+                    return Err(err("bad section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = s.find('=').ok_or_else(|| err("expected key = value"))?;
+            let key = s[..eq].trim();
+            if key.is_empty()
+                || !key
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                return Err(err("bad key"));
+            }
+            let val = parse_value(s[eq + 1..].trim())
+                .map_err(|m| err(&m))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if doc.entries.insert(full.clone(), val).is_some() {
+                return Err(err(&format!("duplicate key '{full}'")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    /// Apply a `key=value` CLI override (same value grammar).
+    pub fn set_override(&mut self, kv: &str) -> Result<(), String> {
+        let eq = kv.find('=').ok_or("override must be key=value")?;
+        let key = kv[..eq].trim().to_string();
+        let val = parse_value(kv[eq + 1..].trim())?;
+        self.entries.insert(key, val);
+        Ok(())
+    }
+}
+
+fn strip_comment(s: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &s[..i],
+            _ => {}
+        }
+    }
+    s
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let end = body.find('"').ok_or("unterminated string")?;
+        if !body[end + 1..].trim().is_empty() {
+            return Err("trailing garbage after string".into());
+        }
+        return Ok(TomlValue::Str(body[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let mut out = Vec::new();
+        let body = body.trim();
+        if !body.is_empty() {
+            for part in split_top(body) {
+                out.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    parse_scalar(s)
+}
+
+/// Split an array body on top-level commas (no nested arrays-of-arrays
+/// with strings containing commas are used in our configs, but strings
+/// are respected).
+fn split_top(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn parse_scalar(s: &str) -> Result<TomlValue, String> {
+    // Size suffixes first: "64 KiB", "1GiB", "2M".
+    for (suf, mult) in [
+        ("KiB", 1u64 << 10),
+        ("MiB", 1u64 << 20),
+        ("GiB", 1u64 << 30),
+        ("TiB", 1u64 << 40),
+        ("K", 1u64 << 10),
+        ("M", 1u64 << 20),
+        ("G", 1u64 << 30),
+    ] {
+        if let Some(num) = s.strip_suffix(suf) {
+            let num = num.trim();
+            if let Ok(v) = parse_int(num) {
+                let r = (v as u64)
+                    .checked_mul(mult)
+                    .ok_or("size overflow")?;
+                return i64::try_from(r)
+                    .map(TomlValue::Int)
+                    .map_err(|_| "size overflow".into());
+            }
+        }
+    }
+    if let Ok(v) = parse_int(s) {
+        return Ok(TomlValue::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+fn parse_int(s: &str) -> Result<i64, ()> {
+    let clean: String = s.chars().filter(|c| *c != '_').collect();
+    if let Some(hex) = clean.strip_prefix("0x") {
+        return i64::from_str_radix(hex, 16).map_err(|_| ());
+    }
+    clean.parse::<i64>().map_err(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_doc() {
+        let doc = TomlDoc::parse(
+            r#"
+# comment
+title = "cxl"
+[system]
+cores = 4
+freq_ghz = 3.0
+o3 = true
+[system.l2]
+size = 1 MiB
+assoc = 16
+sizes = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("title").unwrap().as_str(), Some("cxl"));
+        assert_eq!(doc.get("system.cores").unwrap().as_int(), Some(4));
+        assert_eq!(doc.get("system.freq_ghz").unwrap().as_f64(), Some(3.0));
+        assert_eq!(doc.get("system.o3").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            doc.get("system.l2.size").unwrap().as_int(),
+            Some(1 << 20)
+        );
+        assert_eq!(
+            doc.get("system.l2.sizes").unwrap(),
+            &TomlValue::Arr(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ])
+        );
+    }
+
+    #[test]
+    fn size_suffixes_and_hex() {
+        let doc =
+            TomlDoc::parse("a = 64KiB\nb = 0x1000\nc = 2G\nd = 1_000_000")
+                .unwrap();
+        assert_eq!(doc.get("a").unwrap().as_int(), Some(64 << 10));
+        assert_eq!(doc.get("b").unwrap().as_int(), Some(4096));
+        assert_eq!(doc.get("c").unwrap().as_int(), Some(2 << 30));
+        assert_eq!(doc.get("d").unwrap().as_int(), Some(1_000_000));
+    }
+
+    #[test]
+    fn rejects_bad_docs() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("x 1").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2").is_err());
+        assert!(TomlDoc::parse("[[t]]").is_err());
+    }
+
+    #[test]
+    fn comments_in_strings() {
+        let doc = TomlDoc::parse("k = \"a#b\" # real comment").unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn overrides() {
+        let mut doc = TomlDoc::parse("a = 1").unwrap();
+        doc.set_override("a=2").unwrap();
+        doc.set_override("sys.new=\"x\"").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_int(), Some(2));
+        assert_eq!(doc.get("sys.new").unwrap().as_str(), Some("x"));
+        assert!(doc.set_override("nope").is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Workload generators.
+//!
+//! Each generator yields a stream of [`WlOp`]s over virtual addresses
+//! inside VMAs it mmap'd at setup time; the system layer translates,
+//! times and (for loads/stores) functionally moves the data. STREAM is
+//! the paper's characterization workload (§IV); the others drive the
+//! ablations and programming-model benches.
+
+pub mod stream;
+pub mod random;
+pub mod pointer_chase;
+pub mod tiered_kv;
+
+pub use pointer_chase::PointerChase;
+pub use random::RandomAccess;
+pub use stream::{Stream, StreamKernel};
+pub use tiered_kv::TieredKv;
+
+use crate::cpu::WlOp;
+use crate::guestos::{AddressSpace, MemPolicy};
+
+/// A workload bound to one core.
+pub trait Workload {
+    fn name(&self) -> String;
+
+    /// Reserve VMAs under `policy`. Called once before the run.
+    fn setup(&mut self, asp: &mut AddressSpace, policy: &MemPolicy);
+
+    /// Next operation, or `None` when finished.
+    fn next_op(&mut self) -> Option<WlOp>;
+
+    /// Total bytes the workload intends to move (for bandwidth math).
+    fn bytes_moved(&self) -> u64;
+
+    /// Initial memory contents: (va, bits) pairs written functionally
+    /// before the timed run (the array-init phase the coordinator can
+    /// fast-forward through).
+    fn init_data(&self) -> Vec<(u64, u64)> {
+        Vec::new()
+    }
+
+    /// Functional execution: a load completed with these bits.
+    fn load_done(&mut self, _va: u64, _bits: u64) {}
+
+    /// Functional execution: produce the bits a store writes.
+    fn store_value(&mut self, _va: u64) -> u64 {
+        0
+    }
+
+    /// Optional end-of-run functional verification against physical
+    /// memory contents (returns Err description on corruption).
+    fn verify(
+        &self,
+        _asp: &mut AddressSpace,
+        _alloc: &mut crate::guestos::PageAlloc,
+        _mem: &crate::mem::PhysMem,
+    ) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::guestos::{NumaNode, PageAlloc};
+
+    /// Drain a workload, returning its ops (with a sanity cap).
+    pub fn drain(w: &mut dyn Workload, cap: usize) -> Vec<WlOp> {
+        let mut out = Vec::new();
+        while let Some(op) = w.next_op() {
+            out.push(op);
+            assert!(out.len() <= cap, "workload never terminates");
+        }
+        out
+    }
+
+    pub fn world() -> (AddressSpace, PageAlloc) {
+        let mut pa = PageAlloc::new(4096);
+        pa.add_node(NumaNode::new(0, 0, 256 << 20, true));
+        pa.online(0);
+        (AddressSpace::new(4096), pa)
+    }
+}

@@ -1,0 +1,122 @@
+//! Pointer-chase workload: fully dependent loads.
+//!
+//! A random Hamiltonian cycle over `nodes` cache lines; each load's
+//! address is the previous load's value, so memory-level parallelism is
+//! exactly 1 regardless of CPU model. This isolates the *unloaded*
+//! latency of the memory class it lands on — the classic idle-latency
+//! probe for CXL-vs-DRAM comparisons.
+
+use crate::cpu::WlOp;
+use crate::guestos::{AddressSpace, MemPolicy};
+use crate::util::rng::Rng;
+
+use super::Workload;
+
+pub struct PointerChase {
+    pub nodes: u64,
+    pub hops: u64,
+    base: u64,
+    /// The cycle's successor table (index -> next index), fixed at
+    /// construction so runs are reproducible.
+    order: Vec<u64>,
+    cur: u64,
+    emitted: u64,
+}
+
+impl PointerChase {
+    pub fn new(nodes: u64, hops: u64, seed: u64) -> Self {
+        assert!(nodes >= 2);
+        // Build a random cycle: shuffle 1..n then close the loop.
+        let mut rng = Rng::new(seed);
+        let mut perm: Vec<u64> = (0..nodes).collect();
+        rng.shuffle(&mut perm);
+        let mut order = vec![0u64; nodes as usize];
+        for w in perm.windows(2) {
+            order[w[0] as usize] = w[1];
+        }
+        order[perm[nodes as usize - 1] as usize] = perm[0];
+        PointerChase { nodes, hops, base: 0, order, cur: 0, emitted: 0 }
+    }
+
+    /// The VA of node `i` (one per cache line).
+    fn node_va(&self, i: u64) -> u64 {
+        self.base + i * 64
+    }
+
+    /// The successor chain as (va, next_va) pairs — used by the system
+    /// layer to initialize memory so the chase is functionally real.
+    pub fn pointer_inits(&self) -> Vec<(u64, u64)> {
+        (0..self.nodes)
+            .map(|i| (self.node_va(i), self.node_va(self.order[i as usize])))
+            .collect()
+    }
+}
+
+impl Workload for PointerChase {
+    fn name(&self) -> String {
+        format!("chase-{}n", self.nodes)
+    }
+
+    fn setup(&mut self, asp: &mut AddressSpace, policy: &MemPolicy) {
+        self.base = asp.mmap(self.nodes * 64, policy.clone());
+        self.cur = 0;
+    }
+
+    fn next_op(&mut self) -> Option<WlOp> {
+        if self.emitted >= self.hops {
+            return None;
+        }
+        self.emitted += 1;
+        let va = self.node_va(self.cur);
+        self.cur = self.order[self.cur as usize];
+        Some(WlOp::Load { va, size: 8 })
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.hops * 64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::testutil::{drain, world};
+
+    #[test]
+    fn chase_visits_all_nodes_once_per_cycle() {
+        let (mut asp, _) = world();
+        let mut w = PointerChase::new(16, 16, 1);
+        w.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        let ops = drain(&mut w, 64);
+        let mut seen = std::collections::HashSet::new();
+        for op in &ops {
+            if let WlOp::Load { va, .. } = op {
+                seen.insert(*va);
+            }
+        }
+        assert_eq!(seen.len(), 16, "must be a Hamiltonian cycle");
+    }
+
+    #[test]
+    fn successor_table_is_permutation() {
+        let w = PointerChase::new(64, 1, 5);
+        let mut targets: Vec<u64> = w.order.clone();
+        targets.sort_unstable();
+        assert_eq!(targets, (0..64).collect::<Vec<_>>());
+        // No self-loop.
+        assert!(w.order.iter().enumerate().all(|(i, &n)| i as u64 != n));
+    }
+
+    #[test]
+    fn inits_match_order() {
+        let (mut asp, _) = world();
+        let mut w = PointerChase::new(8, 8, 2);
+        w.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        let inits = w.pointer_inits();
+        assert_eq!(inits.len(), 8);
+        for (va, next) in inits {
+            assert_eq!((va - w.base) % 64, 0);
+            assert_eq!((next - w.base) % 64, 0);
+        }
+    }
+}

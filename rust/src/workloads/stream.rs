@@ -1,0 +1,316 @@
+//! STREAM (McCalpin) — the paper's characterization micro-benchmark.
+//!
+//! Four kernels over three f64 arrays of `n` elements:
+//!   Copy:  c[i] = a[i]             (16 B/iter moved)
+//!   Scale: b[i] = s * c[i]         (16 B/iter)
+//!   Add:   c[i] = a[i] + b[i]      (24 B/iter)
+//!   Triad: a[i] = b[i] + s * c[i]  (24 B/iter)
+//!
+//! The paper runs STREAM at working sets of 2/4/6/8x the L2 size to
+//! stress the CXL memory (§IV); `Stream::for_wss` builds exactly that.
+//! Stores are preceded by the loads the kernel semantics require, and a
+//! small `Work` op models the FP pipeline between iterations.
+
+use crate::cpu::WlOp;
+use crate::guestos::{AddressSpace, MemPolicy};
+
+use super::Workload;
+
+pub const SCALAR: f64 = 3.0;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamKernel {
+    Copy,
+    Scale,
+    Add,
+    Triad,
+}
+
+impl StreamKernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamKernel::Copy => "copy",
+            StreamKernel::Scale => "scale",
+            StreamKernel::Add => "add",
+            StreamKernel::Triad => "triad",
+        }
+    }
+
+    pub fn all() -> [StreamKernel; 4] {
+        [
+            StreamKernel::Copy,
+            StreamKernel::Scale,
+            StreamKernel::Add,
+            StreamKernel::Triad,
+        ]
+    }
+
+    /// Bytes moved per iteration (loads + stores of f64).
+    pub fn bytes_per_iter(&self) -> u64 {
+        match self {
+            StreamKernel::Copy | StreamKernel::Scale => 16,
+            StreamKernel::Add | StreamKernel::Triad => 24,
+        }
+    }
+}
+
+pub struct Stream {
+    pub kernel: StreamKernel,
+    pub n: u64,
+    /// Iterations of the kernel (STREAM's NTIMES; default 1 pass for
+    /// simulation-speed reasons, sweeps override).
+    pub passes: u32,
+    a: u64,
+    b: u64,
+    c: u64,
+    i: u64,
+    pass: u32,
+    phase: u8,
+    /// Compute cycles charged between iterations.
+    pub work_cycles: u64,
+    /// Operand latches for functional execution (program order).
+    op1: f64,
+    op2: f64,
+}
+
+impl Stream {
+    pub fn new(kernel: StreamKernel, n: u64, passes: u32) -> Self {
+        assert!(n > 0 && passes > 0);
+        Stream {
+            kernel,
+            n,
+            passes,
+            a: 0,
+            b: 0,
+            c: 0,
+            i: 0,
+            pass: 0,
+            phase: 0,
+            work_cycles: 2,
+            op1: 0.0,
+            op2: 0.0,
+        }
+    }
+
+    /// Working set = `mult` x l2_size across the three arrays.
+    ///
+    /// Two passes (STREAM's NTIMES spirit): the first streams cold, the
+    /// second exposes the capacity effect Fig. 5 plots — it re-hits the
+    /// LLC when WSS fits and misses again when WSS >> L2.
+    pub fn for_wss(kernel: StreamKernel, l2_size: u64, mult: u64) -> Self {
+        let total = l2_size * mult;
+        let n = total / (3 * 8);
+        Stream::new(kernel, n.max(64), 2)
+    }
+
+    pub fn array_bytes(&self) -> u64 {
+        self.n * 8
+    }
+
+    fn idx(&self, base: u64) -> u64 {
+        base + self.i * 8
+    }
+}
+
+impl Workload for Stream {
+    fn name(&self) -> String {
+        format!("stream-{}-n{}", self.kernel.name(), self.n)
+    }
+
+    fn setup(&mut self, asp: &mut AddressSpace, policy: &MemPolicy) {
+        self.a = asp.mmap(self.array_bytes(), policy.clone());
+        self.b = asp.mmap(self.array_bytes(), policy.clone());
+        self.c = asp.mmap(self.array_bytes(), policy.clone());
+    }
+
+    fn next_op(&mut self) -> Option<WlOp> {
+        if self.pass >= self.passes {
+            return None;
+        }
+        // Phase machine per iteration: loads -> store -> work.
+        use StreamKernel::*;
+        let op = match (self.kernel, self.phase) {
+            (Copy, 0) => WlOp::Load { va: self.idx(self.a), size: 8 },
+            (Copy, 1) => WlOp::Store { va: self.idx(self.c), size: 8 },
+            (Scale, 0) => WlOp::Load { va: self.idx(self.c), size: 8 },
+            (Scale, 1) => WlOp::Store { va: self.idx(self.b), size: 8 },
+            (Add, 0) => WlOp::Load { va: self.idx(self.a), size: 8 },
+            (Add, 1) => WlOp::Load { va: self.idx(self.b), size: 8 },
+            (Add, 2) => WlOp::Store { va: self.idx(self.c), size: 8 },
+            (Triad, 0) => WlOp::Load { va: self.idx(self.b), size: 8 },
+            (Triad, 1) => WlOp::Load { va: self.idx(self.c), size: 8 },
+            (Triad, 2) => WlOp::Store { va: self.idx(self.a), size: 8 },
+            (_, p) => {
+                debug_assert_eq!(p, self.final_phase());
+                let w = WlOp::Work { cycles: self.work_cycles };
+                self.phase = 0;
+                self.i += 1;
+                if self.i == self.n {
+                    self.i = 0;
+                    self.pass += 1;
+                }
+                return Some(w);
+            }
+        };
+        self.phase += 1;
+        Some(op)
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.kernel.bytes_per_iter() * self.n * self.passes as u64
+    }
+
+    fn init_data(&self) -> Vec<(u64, u64)> {
+        // STREAM's canonical init: a=1.0, b=2.0, c=0.0.
+        let mut v = Vec::with_capacity(3 * self.n as usize);
+        for i in 0..self.n {
+            v.push((self.a + i * 8, 1.0f64.to_bits()));
+            v.push((self.b + i * 8, 2.0f64.to_bits()));
+            v.push((self.c + i * 8, 0.0f64.to_bits()));
+        }
+        v
+    }
+
+    fn load_done(&mut self, _va: u64, bits: u64) {
+        // Operands arrive in phase order; shift the latch chain.
+        self.op2 = self.op1;
+        self.op1 = f64::from_bits(bits);
+    }
+
+    fn store_value(&mut self, _va: u64) -> u64 {
+        use StreamKernel::*;
+        let v = match self.kernel {
+            Copy => self.op1,
+            Scale => SCALAR * self.op1,
+            // op2 holds the first load, op1 the second.
+            Add => self.op2 + self.op1,
+            Triad => self.op2 + SCALAR * self.op1,
+        };
+        v.to_bits()
+    }
+
+    fn verify(
+        &self,
+        asp: &mut AddressSpace,
+        alloc: &mut crate::guestos::PageAlloc,
+        mem: &crate::mem::PhysMem,
+    ) -> Result<(), String> {
+        use StreamKernel::*;
+        // After `passes` runs from the canonical init, the destination
+        // array holds a closed-form value (each pass recomputes from the
+        // same sources, so passes > 1 are idempotent for Copy/Scale/Add;
+        // Triad feeds back into a).
+        let (arr, expect): (u64, Box<dyn Fn(u32) -> f64>) = match self.kernel {
+            Copy => (self.c, Box::new(|_| 1.0)),
+            Scale => (self.b, Box::new(|_| SCALAR * 0.0)),
+            Add => (self.c, Box::new(|_| 1.0 + 2.0)),
+            Triad => (
+                self.a,
+                Box::new(|p| {
+                    // a_{k+1} = b + s*c, b=2, c=0 constant => a=2 after
+                    // one pass and stays 2.
+                    let _ = p;
+                    2.0
+                }),
+            ),
+        };
+        // Scale reads c (0.0) so b becomes 0; Copy writes c=1.
+        for i in (0..self.n).step_by((self.n / 16).max(1) as usize) {
+            let va = arr + i * 8;
+            let pa = asp
+                .translate(va, alloc)
+                .map_err(|e| format!("verify translate: {e}"))?;
+            let got = mem.read_f64(pa);
+            let want = expect(self.passes);
+            if (got - want).abs() > 1e-12 {
+                return Err(format!(
+                    "stream {} verify failed at [{}]: got {got}, want {want}",
+                    self.kernel.name(),
+                    i
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Stream {
+    fn final_phase(&self) -> u8 {
+        match self.kernel {
+            StreamKernel::Copy | StreamKernel::Scale => 2,
+            StreamKernel::Add | StreamKernel::Triad => 3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::testutil::{drain, world};
+
+    #[test]
+    fn copy_emits_load_store_work_per_iter() {
+        let (mut asp, _) = world();
+        let mut s = Stream::new(StreamKernel::Copy, 4, 1);
+        s.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        let ops = drain(&mut s, 100);
+        assert_eq!(ops.len(), 3 * 4);
+        assert!(matches!(ops[0], WlOp::Load { .. }));
+        assert!(matches!(ops[1], WlOp::Store { .. }));
+        assert!(matches!(ops[2], WlOp::Work { .. }));
+    }
+
+    #[test]
+    fn triad_two_loads_one_store() {
+        let (mut asp, _) = world();
+        let mut s = Stream::new(StreamKernel::Triad, 2, 1);
+        s.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        let ops = drain(&mut s, 100);
+        let loads = ops.iter().filter(|o| matches!(o, WlOp::Load { .. })).count();
+        let stores =
+            ops.iter().filter(|o| matches!(o, WlOp::Store { .. })).count();
+        assert_eq!(loads, 4);
+        assert_eq!(stores, 2);
+    }
+
+    #[test]
+    fn wss_sizing_matches_multiplier() {
+        let l2 = 1u64 << 20;
+        for mult in [2u64, 4, 6, 8] {
+            let s = Stream::for_wss(StreamKernel::Copy, l2, mult);
+            let total = 3 * s.array_bytes();
+            let target = l2 * mult;
+            assert!(
+                (total as i64 - target as i64).unsigned_abs() < 64,
+                "wss {total} vs target {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn addresses_stride_sequentially() {
+        let (mut asp, _) = world();
+        let mut s = Stream::new(StreamKernel::Copy, 3, 1);
+        s.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        let ops = drain(&mut s, 100);
+        let loads: Vec<u64> = ops
+            .iter()
+            .filter_map(|o| match o {
+                WlOp::Load { va, .. } => Some(*va),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(loads[1] - loads[0], 8);
+        assert_eq!(loads[2] - loads[1], 8);
+    }
+
+    #[test]
+    fn multi_pass_repeats() {
+        let (mut asp, _) = world();
+        let mut s = Stream::new(StreamKernel::Scale, 2, 3);
+        s.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        let ops = drain(&mut s, 100);
+        assert_eq!(ops.len(), 3 * 2 * 3);
+        assert_eq!(s.bytes_moved(), 16 * 2 * 3);
+    }
+}

@@ -1,0 +1,164 @@
+//! Tiered key-value workload — the LLM-KV-cache-shaped motivation from
+//! the paper's introduction ("distribute the KV-cache across several
+//! nodes when it does not fit a single server instance").
+//!
+//! `entries` fixed-size values; a Zipf-like hot set served from a
+//! DRAM-bound VMA and a cold majority on a CXL-bound VMA (the tiering
+//! decision a real KV layer would take). GETs dominate, PUTs rewrite
+//! values. Used by the programming-model bench (E5).
+
+use crate::cpu::WlOp;
+use crate::guestos::{AddressSpace, MemPolicy};
+use crate::util::rng::Rng;
+
+use super::Workload;
+
+pub struct TieredKv {
+    pub entries: u64,
+    pub value_bytes: u64,
+    pub ops: u64,
+    pub hot_frac: f64,
+    pub hot_hit_prob: f64,
+    pub put_frac: f64,
+    /// Policies for the two tiers (set before `setup`).
+    pub hot_policy: MemPolicy,
+    pub cold_policy: MemPolicy,
+    hot_base: u64,
+    cold_base: u64,
+    emitted: u64,
+    in_value: u64, // remaining lines of current value access
+    cur_va: u64,
+    cur_store: bool,
+    rng: Rng,
+}
+
+impl TieredKv {
+    pub fn new(entries: u64, value_bytes: u64, ops: u64, seed: u64) -> Self {
+        assert!(value_bytes % 64 == 0 && value_bytes >= 64);
+        TieredKv {
+            entries,
+            value_bytes,
+            ops,
+            hot_frac: 0.1,
+            hot_hit_prob: 0.8,
+            put_frac: 0.1,
+            hot_policy: MemPolicy::Bind { nodes: vec![0] },
+            cold_policy: MemPolicy::Bind { nodes: vec![1] },
+            hot_base: 0,
+            cold_base: 0,
+            emitted: 0,
+            in_value: 0,
+            cur_va: 0,
+            cur_store: false,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn hot_entries(&self) -> u64 {
+        ((self.entries as f64 * self.hot_frac) as u64).max(1)
+    }
+}
+
+impl Workload for TieredKv {
+    fn name(&self) -> String {
+        format!("tiered-kv-{}e", self.entries)
+    }
+
+    fn setup(&mut self, asp: &mut AddressSpace, _policy: &MemPolicy) {
+        // The workload's own tier policies deliberately override the
+        // run-wide default — tiering IS the policy decision here.
+        let hot = self.hot_entries();
+        self.hot_base =
+            asp.mmap(hot * self.value_bytes, self.hot_policy.clone());
+        self.cold_base = asp
+            .mmap((self.entries - hot) * self.value_bytes, self.cold_policy.clone());
+    }
+
+    fn next_op(&mut self) -> Option<WlOp> {
+        // Stream the lines of the current value first.
+        if self.in_value > 0 {
+            self.in_value -= 1;
+            let va = self.cur_va;
+            self.cur_va += 64;
+            return Some(if self.cur_store {
+                WlOp::Store { va, size: 8 }
+            } else {
+                WlOp::Load { va, size: 8 }
+            });
+        }
+        if self.emitted >= self.ops {
+            return None;
+        }
+        self.emitted += 1;
+        let hot = self.rng.chance(self.hot_hit_prob);
+        let (base, count) = if hot {
+            (self.hot_base, self.hot_entries())
+        } else {
+            (self.cold_base, self.entries - self.hot_entries())
+        };
+        let key = self.rng.below(count);
+        self.cur_va = base + key * self.value_bytes;
+        self.cur_store = self.rng.chance(self.put_frac);
+        self.in_value = self.value_bytes / 64;
+        self.next_op()
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.ops * self.value_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::testutil::{drain, world};
+
+    #[test]
+    fn values_stream_whole_lines() {
+        let (mut asp, _) = world();
+        let mut w = TieredKv::new(100, 256, 10, 1);
+        w.hot_policy = MemPolicy::Local { home: 0 };
+        w.cold_policy = MemPolicy::Local { home: 0 };
+        w.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        let ops = drain(&mut w, 1000);
+        // 10 ops x 4 lines each.
+        assert_eq!(ops.len(), 40);
+    }
+
+    #[test]
+    fn hot_set_dominates_accesses() {
+        let (mut asp, _) = world();
+        let mut w = TieredKv::new(1000, 64, 2000, 2);
+        w.hot_policy = MemPolicy::Local { home: 0 };
+        w.cold_policy = MemPolicy::Local { home: 0 };
+        w.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        let hot_lo = w.hot_base;
+        let hot_hi = hot_lo + w.hot_entries() * 64;
+        let ops = drain(&mut w, 10_000);
+        let hot_hits = ops
+            .iter()
+            .filter(|o| match o {
+                WlOp::Load { va, .. } | WlOp::Store { va, .. } => {
+                    *va >= hot_lo && *va < hot_hi
+                }
+                _ => false,
+            })
+            .count();
+        let frac = hot_hits as f64 / ops.len() as f64;
+        assert!((frac - 0.8).abs() < 0.05, "hot frac {frac}");
+    }
+
+    #[test]
+    fn put_fraction_approximate() {
+        let (mut asp, _) = world();
+        let mut w = TieredKv::new(500, 64, 3000, 3);
+        w.hot_policy = MemPolicy::Local { home: 0 };
+        w.cold_policy = MemPolicy::Local { home: 0 };
+        w.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        let ops = drain(&mut w, 20_000);
+        let stores =
+            ops.iter().filter(|o| matches!(o, WlOp::Store { .. })).count();
+        let frac = stores as f64 / ops.len() as f64;
+        assert!((frac - 0.1).abs() < 0.03, "put frac {frac}");
+    }
+}

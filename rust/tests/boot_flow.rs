@@ -1,0 +1,161 @@
+//! Integration: the unmodified-guest boot contract, end to end.
+
+use cxlramsim::bios;
+use cxlramsim::config::SimConfig;
+use cxlramsim::guestos::{self, ProgModel};
+use cxlramsim::mem::PhysMem;
+use cxlramsim::system::Machine;
+
+#[test]
+fn full_boot_produces_znuma_node() {
+    let mut m = Machine::new(SimConfig::default()).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let g = m.guest.as_ref().unwrap();
+    assert_eq!(g.znuma_node(), Some(1));
+    let n1 = &g.alloc.nodes[1];
+    assert!(n1.online && !n1.has_cpus);
+    assert_eq!(n1.base, m.bios.cxl_window_base);
+    assert_eq!(n1.size, SimConfig::default().cxl.mem_size);
+}
+
+#[test]
+fn boot_log_records_every_stage() {
+    let mut m = Machine::new(SimConfig::default()).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let log = m.guest.as_ref().unwrap().boot_log.join("\n");
+    for needle in ["acpi:", "numa:", "pci:", "cxl: mem0 bound", "zNUMA"] {
+        assert!(log.contains(needle), "boot log missing '{needle}':\n{log}");
+    }
+}
+
+#[test]
+fn guest_discovers_only_what_bios_described() {
+    let cfg = SimConfig { cores: 2, ..SimConfig::default() };
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let g = m.guest.as_ref().unwrap();
+    assert_eq!(g.acpi.cpu_apic_ids, vec![0, 1]);
+    // Exactly one memdev-class function.
+    let memdevs = g
+        .pci_devs
+        .iter()
+        .filter(|d| d.class[0] == 0x05 && d.class[1] == 0x02)
+        .count();
+    assert_eq!(memdevs, 1);
+}
+
+#[test]
+fn bars_land_inside_the_dsdt_window() {
+    let mut m = Machine::new(SimConfig::default()).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let g = m.guest.as_ref().unwrap();
+    let ep = g
+        .pci_devs
+        .iter()
+        .find(|d| d.class[0] == 0x05 && d.class[1] == 0x02)
+        .unwrap();
+    assert_eq!(ep.bars.len(), 2);
+    for bar in &ep.bars {
+        assert!(bar.base >= bios::layout::MMIO_BASE + bios::layout::CHBS_SIZE);
+        assert!(
+            bar.base + bar.size
+                <= bios::layout::MMIO_BASE + bios::layout::MMIO_SIZE
+        );
+        assert_eq!(bar.base % bar.size.max(4096), 0, "BAR alignment");
+    }
+}
+
+#[test]
+fn hdm_decoders_committed_on_both_ends() {
+    let mut m = Machine::new(SimConfig::default()).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    assert!(m.cxl_dev.component.decoder_committed(0));
+    assert!(m.hb_component.decoder_committed(0));
+    let (base, size) = m.cxl_dev.component.decoder_range(0);
+    assert_eq!(base, m.bios.cxl_window_base);
+    assert_eq!(size, SimConfig::default().cxl.mem_size);
+    // End-to-end HPA->DPA translation works at the window edges.
+    assert_eq!(m.cxl_dev.hpa_to_dpa(base), 0);
+    assert_eq!(m.cxl_dev.hpa_to_dpa(base + size - 64), size - 64);
+}
+
+#[test]
+fn flat_mode_merges_capacity_instead_of_znuma() {
+    let mut m = Machine::new(SimConfig::default()).unwrap();
+    m.boot(ProgModel::Flat).unwrap();
+    let g = m.guest.as_ref().unwrap();
+    assert_eq!(g.znuma_node(), None);
+    // The flat extent exists and is online.
+    let extra: u64 = g.alloc.nodes.iter().skip(2).map(|n| n.size).sum();
+    let n1 = &g.alloc.nodes[1];
+    // Node 1 (SRAT-declared, hotplug) stays offline in flat mode; the
+    // extent was added as a new node with CPU affinity.
+    assert!(!n1.online);
+    assert_eq!(extra, SimConfig::default().cxl.mem_size);
+}
+
+#[test]
+fn corrupted_acpi_fails_boot_loudly() {
+    // Build a machine, corrupt the XSDT in guest-visible memory, and
+    // check the guest refuses to boot rather than limping on.
+    let cfg = SimConfig::default();
+    let mut mem = PhysMem::new();
+    let info = cxlramsim::bios::build(&cfg, &mut mem);
+    // Corrupt one byte of every table in the pool; at least one parse
+    // must fail (checksums catch it).
+    let mut failures = 0;
+    for off in (0..(info.tables_end - bios::layout::ACPI_POOL)).step_by(64) {
+        let a = bios::layout::ACPI_POOL + off;
+        let orig = mem.read_u32(a);
+        mem.write_u32(a, orig ^ 0x5A);
+        if guestos::acpi_parse::parse(&mem, 0xE0000 & !0xFFFF).is_err() {
+            failures += 1;
+        }
+        mem.write_u32(a, orig);
+    }
+    assert!(failures > 0, "checksum corruption never detected");
+}
+
+#[test]
+fn shipped_default_config_matches_schema_defaults() {
+    // configs/default.toml documents every knob; it must parse and
+    // reproduce the built-in defaults exactly so docs never drift.
+    let text = std::fs::read_to_string("configs/default.toml").unwrap();
+    let from_file = SimConfig::from_toml(&text, &[]).unwrap();
+    let builtin = SimConfig::default();
+    assert_eq!(from_file.cores, builtin.cores);
+    assert_eq!(from_file.cpu_model, builtin.cpu_model);
+    assert_eq!(from_file.l1.size, builtin.l1.size);
+    assert_eq!(from_file.l2.size, builtin.l2.size);
+    assert_eq!(from_file.l2.pf_degree, builtin.l2.pf_degree);
+    assert_eq!(from_file.l2.prefetch, builtin.l2.prefetch);
+    assert_eq!(from_file.sys_mem_size, builtin.sys_mem_size);
+    assert_eq!(from_file.cxl.mem_size, builtin.cxl.mem_size);
+    assert_eq!(from_file.cxl.pkt_lat_ns, builtin.cxl.pkt_lat_ns);
+    assert_eq!(from_file.cxl.link_bw_gbps, builtin.cxl.link_bw_gbps);
+    assert_eq!(from_file.cxl.credits, builtin.cxl.credits);
+    assert_eq!(from_file.cxl.attach, builtin.cxl.attach);
+    // And it boots.
+    let mut m = Machine::new(from_file).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    assert_eq!(m.guest.as_ref().unwrap().znuma_node(), Some(1));
+}
+
+#[test]
+fn cxl_cli_surface_reports_the_device() {
+    let mut m = Machine::new(SimConfig::default()).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let md = m.guest.as_ref().unwrap().memdev.clone().unwrap();
+    let mut world = cxlramsim::system::MmioWorld {
+        ecam: &mut m.ecam,
+        cxl_dev: &mut m.cxl_dev,
+        hb_component: &mut m.hb_component,
+        chbs_base: bios::layout::CHBS_BASE,
+        chbs_size: bios::layout::CHBS_SIZE,
+        ep_bdf: m.ep_bdf,
+    };
+    let listing =
+        cxlramsim::guestos::cxlcli::cxl_list(&mut world, &md).unwrap();
+    assert!(listing.contains("\"memdev\":\"mem0\""));
+    assert!(listing.contains("4294967296"));
+}

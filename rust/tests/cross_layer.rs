@@ -1,0 +1,148 @@
+//! Cross-layer consistency: the Rust detailed cache model vs the
+//! AOT-compiled Pallas kernel (L3 vs L1), through the PJRT runtime.
+//!
+//! These tests are skipped (pass vacuously, with a notice) when
+//! `artifacts/` has not been built.
+
+use std::path::Path;
+
+use cxlramsim::cache::CacheArray;
+use cxlramsim::config::SimConfig;
+use cxlramsim::coordinator::{capture_init_trace, warm_machine};
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::runtime::{CacheState, XlaRuntime};
+use cxlramsim::system::Machine;
+use cxlramsim::util::rng::Rng;
+use cxlramsim::workloads::{Stream, StreamKernel};
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("cross_layer: artifacts/ not built — skipping");
+        return None;
+    }
+    Some(XlaRuntime::load(dir).expect("artifacts unloadable"))
+}
+
+/// Drive the detailed CacheArray and the Pallas kernel with the same
+/// single-level access stream; final tag state must agree exactly.
+#[test]
+fn detailed_and_kernel_agree_on_final_state() {
+    let Some(rt) = runtime() else { return };
+    let cfg = SimConfig::default();
+    let man = &rt.manifest;
+
+    let mut rust_l1 = CacheArray::new(&cfg.l1);
+    // L2 "sink" kernel state stays cold by masking: use a stream that
+    // always L1-misses? Simpler: compare the *L1* state after a stream
+    // where L2 effects don't feed back into L1 (they don't: L1 state
+    // evolves only on probe/fill).
+    let l1 = CacheState::cold(man.l1_sets, man.l1_ways);
+    let l2 = CacheState::cold(man.l2_sets, man.l2_ways);
+
+    let mut rng = Rng::new(42);
+    let n = 1024;
+    let addrs: Vec<i32> =
+        (0..n).map(|_| rng.below(4096) as i32).collect();
+    let writes: Vec<i32> =
+        (0..n).map(|_| rng.chance(0.3) as i32).collect();
+
+    // Kernel side (one window is enough: n <= window).
+    let r = rt.cache_warm(&addrs, &writes, 1, &l1, &l2).unwrap();
+
+    // Rust side: probe + fill on miss, write-allocate (same policy).
+    for (&a, &w) in addrs.iter().zip(&writes) {
+        let pa = (a as u64) * cfg.l1.line;
+        let is_w = w == 1;
+        let pr = rust_l1.probe(pa, is_w);
+        if pr.access == cxlramsim::cache::Access::Miss {
+            let st = if is_w {
+                cxlramsim::cache::MesiState::Modified
+            } else {
+                cxlramsim::cache::MesiState::Exclusive
+            };
+            rust_l1.fill(pa, st);
+        } else if pr.needs_upgrade {
+            rust_l1.finish_upgrade(pa);
+        }
+    }
+
+    // Compare resident sets + dirty bits (LRU stamps differ in value
+    // but induce the same order, checked via victim agreement below).
+    let (tags, valid, dirty, _lru) = rust_l1.export_state();
+    assert_eq!(valid, r.l1.valid, "valid maps diverge");
+    for i in 0..tags.len() {
+        if valid[i] == 1 {
+            assert_eq!(tags[i], r.l1.tags[i], "tag diverges at {i}");
+            assert_eq!(dirty[i], r.l1.dirty[i], "dirty diverges at {i}");
+        }
+    }
+
+    // Victim agreement: import kernel state into a fresh array and
+    // evict from every set — both must choose the same victim.
+    let mut imported = CacheArray::new(&cfg.l1);
+    imported.import_state(&r.l1.tags, &r.l1.valid, &r.l1.dirty, &r.l1.lru);
+    for set in 0..man.l1_sets {
+        // Address mapping to this set with a brand-new tag.
+        let line = (10_000 * man.l1_sets + set) as u64;
+        let pa = line * cfg.l1.line;
+        let va = rust_l1.fill(pa, cxlramsim::cache::MesiState::Exclusive);
+        let vb = imported.fill(pa, cxlramsim::cache::MesiState::Exclusive);
+        assert_eq!(va, vb, "victim choice diverges in set {set}");
+    }
+}
+
+/// Warming a machine through the runtime then running the measured
+/// region must (a) keep functional correctness and (b) start warm.
+#[test]
+fn warmed_machine_starts_hot_and_verifies() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = SimConfig::default();
+    cfg.cores = 1;
+    let mut m = Machine::new(cfg.clone()).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    // WSS well under L2: after warming, the measured pass re-hits L2.
+    let wl = Stream::new(StreamKernel::Copy, 8192, 1);
+    m.attach_workloads(
+        vec![Box::new(wl)],
+        &MemPolicy::Bind { nodes: vec![0] },
+    )
+    .unwrap();
+    let trace = capture_init_trace(&mut m, 0).unwrap();
+    assert_eq!(trace.len(), 3 * 8192, "init touches all three arrays");
+    let warm = warm_machine(&mut m, &rt, 0, &trace).unwrap();
+    assert!(warm.l2_occupancy > 0);
+
+    let before_l2_miss = m.l2.stats.misses.get();
+    let s = m.run(None);
+    m.verify().unwrap();
+    let run_misses = m.l2.stats.misses.get() - before_l2_miss;
+    // All three arrays (192 KiB) fit the warmed 1 MiB L2: the measured
+    // region's L2 misses must be a small fraction of its accesses.
+    let run_accesses = run_misses + m.l2.stats.hits.get();
+    assert!(
+        (run_misses as f64) < 0.1 * run_accesses as f64,
+        "warm start should mostly hit L2: {run_misses}/{run_accesses}"
+    );
+    assert!(s.ticks > 0);
+}
+
+/// Geometry mismatch must be rejected loudly, not silently mis-warm.
+#[test]
+fn geometry_mismatch_is_an_error() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = SimConfig::default();
+    cfg.l2.size = 2 << 20; // 2 MiB != artifact geometry
+    cfg.cores = 1;
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let wl = Stream::new(StreamKernel::Copy, 256, 1);
+    m.attach_workloads(
+        vec![Box::new(wl)],
+        &MemPolicy::Bind { nodes: vec![0] },
+    )
+    .unwrap();
+    let trace = capture_init_trace(&mut m, 0).unwrap();
+    let err = warm_machine(&mut m, &rt, 0, &trace).unwrap_err();
+    assert!(err.to_string().contains("geometry"), "{err}");
+}
