@@ -35,20 +35,23 @@ fn main() {
     assert_eq!(g.acpi.chbs.len(), 1, "CEDT CHBS");
     assert_eq!(g.acpi.cfmws.len(), 1, "CEDT CFMWS");
     assert_eq!(g.pci_devs.len(), 3, "host bridge + root port + endpoint");
-    let md = g.memdev.as_ref().expect("CXL memdev bound");
+    let md = g.memdevs.first().expect("CXL memdev bound");
     assert_eq!(md.capacity, SimConfig::default().cxl.mem_size);
     assert_eq!(g.znuma_node(), Some(1), "zNUMA node onlined");
     assert!(!g.alloc.nodes[1].has_cpus, "node 1 is CPU-less");
     assert!(m.rc.routes(md.hpa_base), "RC routes the HDM window");
     assert!(
-        m.cxl_dev.component.decoder_committed(0),
+        m.cxl_devs[0].component.decoder_committed(0),
         "endpoint decoder committed"
     );
     assert!(
-        m.hb_component.decoder_committed(0),
+        m.hb_components[0].decoder_committed(0),
         "host-bridge decoder committed"
     );
-    assert!(m.cxl_dev.mailbox.commands_executed >= 2, "IDENTIFY + health");
+    assert!(
+        m.cxl_devs[0].mailbox.commands_executed >= 2,
+        "IDENTIFY + health"
+    );
 
     // Flat mode boots too.
     let mut mf = Machine::new(SimConfig::default()).unwrap();

@@ -103,7 +103,6 @@ def _probe_body(i, refs, num_sets):
     wb_out = jnp.where(keep, wb_line, jnp.int32(-1))
     pl.store(hit_ref, (pl.dslice(i, 1),), hit_out[None])
     pl.store(wb_ref, (pl.dslice(i, 1),), wb_out[None])
-    return refs
 
 
 def _cache_kernel(addr_ref, wr_ref, mask_ref, t0_ref,
@@ -120,9 +119,15 @@ def _cache_kernel(addr_ref, wr_ref, mask_ref, t0_ref,
     n = addr_ref.shape[0]
     refs = (addr_ref, wr_ref, mask_ref, t0_ref,
             tags_ref, valid_ref, dirty_ref, lru_ref, hit_ref, wb_ref)
-    jax.lax.fori_loop(
-        0, n, functools.partial(_probe_body, num_sets=num_sets), refs
-    )
+
+    # The refs are closed over, NOT threaded through the loop carry:
+    # jax's scan/fori state-discharge supports refs as loop *consts*
+    # only — a ref in the carry trips its discharge assertion.
+    def body(i, carry):
+        _probe_body(i, refs, num_sets=num_sets)
+        return carry
+
+    jax.lax.fori_loop(0, n, body, jnp.int32(0))
 
 
 def cache_probe(addrs, is_write, mask, t0, tags, valid, dirty, lru,

@@ -6,8 +6,9 @@ here would silently corrupt the Rust coordinator's warmed cache state.
 
 import numpy as np
 import jax.numpy as jnp
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401  (fixtures/marks)
+
+from _hypothesis_compat import given, settings, st
 
 from compile.kernels.cache_probe import cache_probe
 from compile.kernels.ref import cache_probe_ref

@@ -2,8 +2,9 @@
 
 import numpy as np
 import jax.numpy as jnp
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401  (fixtures/marks)
+
+from _hypothesis_compat import given, settings, st
 
 from compile import model
 from compile.kernels.latency_model import latency_curve

@@ -3,8 +3,9 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401  (fixtures/marks)
+
+from _hypothesis_compat import given, settings, st
 
 from compile import model
 from compile.kernels.ref import (calib_loss_ref, latency_curve_ref,

@@ -153,10 +153,13 @@ pub struct Chbs {
 pub struct Cfmws {
     pub base_hpa: u64,
     pub window_size: u64,
-    /// Host-bridge UIDs participating (SLD: one entry).
+    /// Host-bridge UIDs participating (SLD: one entry; an N-way
+    /// interleave set lists its N bridges in slot order).
     pub targets: Vec<u32>,
-    /// HBIG: interleave granularity encoding (0 = 256 B).
+    /// HBIG: interleave granularity encoding (0 = 256 B, log2(G) - 8).
     pub granularity: u16,
+    /// Interleave arithmetic: 0 = modulo, 1 = XOR.
+    pub arith: u8,
     /// Restrictions bitfield: bit2 = volatile, bit3 = persistent.
     pub restrictions: u16,
     pub qtg_id: u16,
@@ -185,7 +188,7 @@ pub fn cedt(chbs: &[Chbs], cfmws: &[Cfmws]) -> Vec<u8> {
         p.extend_from_slice(&w.base_hpa.to_le_bytes());
         p.extend_from_slice(&w.window_size.to_le_bytes());
         p.push((niw as f64).log2() as u8); // ENIW encoding
-        p.push(0); // interleave arithmetic: modulo
+        p.push(w.arith); // interleave arithmetic: 0 modulo, 1 XOR
         p.extend_from_slice(&[0u8; 2]);
         p.extend_from_slice(&(w.granularity as u32).to_le_bytes());
         p.extend_from_slice(&w.restrictions.to_le_bytes());
@@ -195,6 +198,70 @@ pub fn cedt(chbs: &[Chbs], cfmws: &[Cfmws]) -> Vec<u8> {
         }
     }
     sdt(b"CEDT", 1, &p)
+}
+
+/// HMAT — Heterogeneous Memory Attribute Table (ACPI 6.4 §5.2.27).
+/// One latency + one bandwidth "System Locality Latency and Bandwidth
+/// Information" structure (type 1), initiator domain 0 against every
+/// memory domain — what Linux's memory-tiering policy consumes.
+pub struct HmatEntry {
+    pub target_domain: u32,
+    pub read_lat_ns: f64,
+    pub bw_gbps: f64,
+}
+
+/// Entry base units: latency in 100 ps, bandwidth in 100 MB/s. The
+/// u16 entries then cover 6.5 us and 6.5 TB/s — comfortably above any
+/// aggregate interleave-set bandwidth — without saturating.
+const HMAT_LAT_BASE_PS: u64 = 100;
+const HMAT_BW_BASE_MBPS: u64 = 100;
+
+fn hmat_sllbi(
+    data_type: u8,
+    base_unit: u64,
+    entries: &[HmatEntry],
+    value: impl Fn(&HmatEntry) -> u16,
+) -> Vec<u8> {
+    let t = entries.len();
+    // type(2) res(2) len(4) flags(1) dtype(1) minxfer(1) res(1)
+    // n_init(4) n_tgt(4) res(4) base_unit(8) + 4*1 + 4*t + 2*1*t
+    let len = 32 + 4 + 4 * t + 2 * t;
+    let mut s = Vec::with_capacity(len);
+    s.extend_from_slice(&1u16.to_le_bytes()); // type 1
+    s.extend_from_slice(&[0u8; 2]);
+    s.extend_from_slice(&(len as u32).to_le_bytes());
+    s.push(0); // flags: memory
+    s.push(data_type); // 0 = access latency, 3 = access bandwidth
+    s.push(0); // min transfer size
+    s.push(0);
+    s.extend_from_slice(&1u32.to_le_bytes()); // one initiator (domain 0)
+    s.extend_from_slice(&(t as u32).to_le_bytes());
+    s.extend_from_slice(&[0u8; 4]);
+    s.extend_from_slice(&base_unit.to_le_bytes());
+    s.extend_from_slice(&0u32.to_le_bytes()); // initiator domain list
+    for e in entries {
+        s.extend_from_slice(&e.target_domain.to_le_bytes());
+    }
+    for e in entries {
+        s.extend_from_slice(&value(e).to_le_bytes());
+    }
+    debug_assert_eq!(s.len(), len);
+    s
+}
+
+pub fn hmat(entries: &[HmatEntry]) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&[0u8; 4]); // reserved
+    p.extend(hmat_sllbi(0, HMAT_LAT_BASE_PS, entries, |e| {
+        ((e.read_lat_ns * 1000.0 / HMAT_LAT_BASE_PS as f64).round()
+            as u64)
+            .min(u16::MAX as u64) as u16
+    }));
+    p.extend(hmat_sllbi(3, HMAT_BW_BASE_MBPS, entries, |e| {
+        ((e.bw_gbps * 1000.0 / HMAT_BW_BASE_MBPS as f64).round() as u64)
+            .min(u16::MAX as u64) as u16
+    }));
+    sdt(b"HMAT", 2, &p)
 }
 
 #[cfg(test)]
@@ -281,6 +348,7 @@ mod tests {
                 window_size: 4 << 30,
                 targets: vec![7],
                 granularity: 0,
+                arith: 0,
                 restrictions: 1 << 2,
                 qtg_id: 0,
             }],
@@ -295,5 +363,63 @@ mod tests {
         let base =
             u64::from_le_bytes(t[68 + 8..68 + 16].try_into().unwrap());
         assert_eq!(base, 4 << 30);
+    }
+
+    #[test]
+    fn cedt_multiway_cfmws_lists_all_targets() {
+        let t = cedt(
+            &[],
+            &[Cfmws {
+                base_hpa: 4 << 30,
+                window_size: 8 << 30,
+                targets: vec![7, 8, 9, 10],
+                granularity: 2, // 1 KiB
+                arith: 1,
+                restrictions: 1 << 2,
+                qtg_id: 0,
+            }],
+        );
+        assert!(table_checksum_ok(&t));
+        // CFMWS at 36: ENIW = log2(4) = 2, arith = XOR.
+        assert_eq!(t[36], 1);
+        assert_eq!(t[36 + 24], 2);
+        assert_eq!(t[36 + 25], 1);
+        let rec_len =
+            u16::from_le_bytes(t[38..40].try_into().unwrap()) as usize;
+        assert_eq!(rec_len, 36 + 4 * 4);
+        let tgt1 = u32::from_le_bytes(
+            t[36 + 36 + 4..36 + 36 + 8].try_into().unwrap(),
+        );
+        assert_eq!(tgt1, 8);
+    }
+
+    #[test]
+    fn hmat_structures_checksum_and_count() {
+        let t = hmat(&[
+            HmatEntry { target_domain: 0, read_lat_ns: 90.0, bw_gbps: 25.6 },
+            HmatEntry {
+                target_domain: 1,
+                read_lat_ns: 250.0,
+                bw_gbps: 19.2,
+            },
+        ]);
+        assert!(table_checksum_ok(&t));
+        assert_eq!(&t[0..4], b"HMAT");
+        // Two type-1 structures after header + 4 reserved bytes.
+        let s1 = 36 + 4;
+        assert_eq!(u16::from_le_bytes(t[s1..s1 + 2].try_into().unwrap()), 1);
+        let l1 =
+            u32::from_le_bytes(t[s1 + 4..s1 + 8].try_into().unwrap())
+                as usize;
+        let s2 = s1 + l1;
+        assert_eq!(u16::from_le_bytes(t[s2..s2 + 2].try_into().unwrap()), 1);
+        assert_eq!(t[s1 + 9], 0, "first struct carries access latency");
+        assert_eq!(t[s2 + 9], 3, "second struct carries bandwidth");
+        // Latency entry for domain 1: 250 ns / 100 ps = 2500.
+        let entries1 = s1 + 32 + 4 + 8;
+        let v = u16::from_le_bytes(
+            t[entries1 + 2..entries1 + 4].try_into().unwrap(),
+        );
+        assert_eq!(v, 2500);
     }
 }

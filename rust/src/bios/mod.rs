@@ -19,9 +19,11 @@ pub mod e820;
 use crate::config::SimConfig;
 use crate::mem::PhysMem;
 
-use acpi::{Cfmws, Chbs, SratMem};
+use acpi::{Cfmws, Chbs, HmatEntry, SratMem};
 use aml::{AmlData, AmlObj};
 use e820::{E820Map, E820Type};
+
+use crate::config::InterleaveArith;
 
 /// Fixed platform addresses (the "motherboard wiring").
 pub mod layout {
@@ -37,11 +39,17 @@ pub mod layout {
     /// MMIO window for BAR assignment.
     pub const MMIO_BASE: u64 = 0xF000_0000;
     pub const MMIO_SIZE: u64 = 0x0800_0000;
-    /// CXL host-bridge component register block (CHBS target).
+    /// CXL host-bridge component register blocks (CHBS targets): one
+    /// block of `CHBS_SIZE` per host bridge, packed from `CHBS_BASE`.
     pub const CHBS_BASE: u64 = 0xF000_0000;
     pub const CHBS_SIZE: u64 = 0x1_0000;
-    /// CXL host bridge ACPI UID.
+    /// First CXL host bridge ACPI UID (bridge `i` gets `CHB_UID + i`).
     pub const CHB_UID: u32 = 7;
+
+    /// CHBS block base for host bridge `i`.
+    pub fn chbs_base(i: usize) -> u64 {
+        CHBS_BASE + (i as u64) * CHBS_SIZE
+    }
 }
 
 /// Everything the BIOS decided, for the machine builder's benefit
@@ -52,8 +60,13 @@ pub struct BiosInfo {
     pub e820_addr: u64,
     pub e820_len: usize,
     pub ecam_base: u64,
+    /// Base of the first CXL fixed window (span start).
     pub cxl_window_base: u64,
+    /// Span from the first window's base to the last window's end
+    /// (may include alignment gaps between windows).
     pub cxl_window_size: u64,
+    /// One `(base, size)` per interleave set, in set order.
+    pub cxl_windows: Vec<(u64, u64)>,
     pub tables_end: u64,
 }
 
@@ -68,8 +81,23 @@ pub fn cxl_window_base(sys_mem_size: u64) -> u64 {
 
 /// Build the BIOS into `mem` per `cfg`. Returns the placement info.
 pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
-    let cxl_base = cxl_window_base(cfg.sys_mem_size);
-    let cxl_size = cfg.cxl.mem_size;
+    let n_dev = cfg.cxl.devices;
+    let sets = cfg.cxl.interleave_sets();
+
+    // One fixed window per interleave set, 1 GiB-aligned, packed above
+    // system DRAM.
+    let mut windows = Vec::with_capacity(sets);
+    let mut next_base = cxl_window_base(cfg.sys_mem_size);
+    for set in 0..sets {
+        let size = cfg.cxl.set_size(set);
+        windows.push((next_base, size));
+        next_base = (next_base + size).div_ceil(1 << 30) * (1 << 30);
+    }
+    let span_base = windows[0].0;
+    let span_size = {
+        let &(last_base, last_size) = windows.last().unwrap();
+        last_base + last_size - span_base
+    };
 
     // ---- E820 -----------------------------------------------------------
     let mut e820 = E820Map::default();
@@ -82,100 +110,141 @@ pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
     mem.write(layout::E820_ADDR, &e820_bytes);
 
     // ---- DSDT (AML) -------------------------------------------------------
-    let dsdt_aml = aml::encode(&[AmlObj::Scope(
-        "\\_SB".into(),
+    let mut sb_devices = vec![AmlObj::Device(
+        "PC00".into(),
         vec![
-            AmlObj::Device(
-                "PC00".into(),
-                vec![
-                    AmlObj::Name(
-                        "_HID".into(),
-                        AmlData::DWord(aml::eisa_id("PNP0A08")),
-                    ),
-                    AmlObj::Name("_UID".into(), AmlData::DWord(0)),
-                    AmlObj::Name("_CRS".into(), AmlData::Buffer({
-                        let mut b = aml::qword_memory(
-                            layout::ECAM_BASE,
-                            (layout::ECAM_BUSES as u64) << 20,
-                        );
-                        b.extend(aml::qword_memory(
-                            layout::MMIO_BASE,
-                            layout::MMIO_SIZE,
-                        ));
-                        b.extend(aml::end_tag());
-                        b
-                    })),
-                ],
+            AmlObj::Name(
+                "_HID".into(),
+                AmlData::DWord(aml::eisa_id("PNP0A08")),
             ),
-            AmlObj::Device(
-                "CXL0".into(),
-                vec![
-                    // ACPI0016 — CXL host bridge (what linux's cxl_acpi
-                    // binds to).
-                    AmlObj::Name(
-                        "_HID".into(),
-                        AmlData::Str("ACPI0016".into()),
-                    ),
-                    AmlObj::Name(
-                        "_CID".into(),
-                        AmlData::DWord(aml::eisa_id("PNP0A08")),
-                    ),
-                    AmlObj::Name(
-                        "_UID".into(),
-                        AmlData::DWord(layout::CHB_UID),
-                    ),
-                    AmlObj::Name("_CRS".into(), AmlData::Buffer({
-                        let mut b = aml::qword_memory(
-                            layout::CHBS_BASE,
-                            layout::CHBS_SIZE,
-                        );
-                        b.extend(aml::end_tag());
-                        b
-                    })),
-                ],
-            ),
+            AmlObj::Name("_UID".into(), AmlData::DWord(0)),
+            AmlObj::Name("_CRS".into(), AmlData::Buffer({
+                let mut b = aml::qword_memory(
+                    layout::ECAM_BASE,
+                    (layout::ECAM_BUSES as u64) << 20,
+                );
+                b.extend(aml::qword_memory(
+                    layout::MMIO_BASE,
+                    layout::MMIO_SIZE,
+                ));
+                b.extend(aml::end_tag());
+                b
+            })),
         ],
-    )]);
+    )];
+    for i in 0..n_dev {
+        // ACPI0016 — CXL host bridge (what linux's cxl_acpi binds to);
+        // one per expander card, each with its own CHBS block.
+        sb_devices.push(AmlObj::Device(
+            format!("CXL{i}"),
+            vec![
+                AmlObj::Name("_HID".into(), AmlData::Str("ACPI0016".into())),
+                AmlObj::Name(
+                    "_CID".into(),
+                    AmlData::DWord(aml::eisa_id("PNP0A08")),
+                ),
+                AmlObj::Name(
+                    "_UID".into(),
+                    AmlData::DWord(layout::CHB_UID + i as u32),
+                ),
+                AmlObj::Name("_CRS".into(), AmlData::Buffer({
+                    let mut b = aml::qword_memory(
+                        layout::chbs_base(i),
+                        layout::CHBS_SIZE,
+                    );
+                    b.extend(aml::end_tag());
+                    b
+                })),
+            ],
+        ));
+    }
+    let dsdt_aml =
+        aml::encode(&[AmlObj::Scope("\\_SB".into(), sb_devices)]);
     let dsdt = acpi::sdt(b"DSDT", 2, &dsdt_aml);
 
     // ---- fixed tables ------------------------------------------------------
     let madt = acpi::madt(cfg.cores);
     let mcfg = acpi::mcfg(layout::ECAM_BASE, 0, layout::ECAM_BUSES - 1);
-    let srat = acpi::srat(
-        cfg.cores,
-        &[
-            SratMem {
-                domain: 0,
-                base: 0,
-                length: cfg.sys_mem_size,
-                flags: acpi::SRAT_MEM_ENABLED,
-            },
-            // The zNUMA (CPU-less) domain for CXL memory: enabled +
-            // hot-pluggable, no processor affinity entries reference it.
-            SratMem {
-                domain: 1,
-                base: cxl_base,
-                length: cxl_size,
-                flags: acpi::SRAT_MEM_ENABLED | acpi::SRAT_MEM_HOTPLUG,
-            },
-        ],
-    );
-    let cedt = acpi::cedt(
-        &[Chbs {
-            uid: layout::CHB_UID,
+    let mut srat_mems = vec![SratMem {
+        domain: 0,
+        base: 0,
+        length: cfg.sys_mem_size,
+        flags: acpi::SRAT_MEM_ENABLED,
+    }];
+    for (set, &(base, size)) in windows.iter().enumerate() {
+        // One zNUMA (CPU-less) domain per interleave set: enabled +
+        // hot-pluggable, no processor affinity entries reference it.
+        srat_mems.push(SratMem {
+            domain: 1 + set as u32,
+            base,
+            length: size,
+            flags: acpi::SRAT_MEM_ENABLED | acpi::SRAT_MEM_HOTPLUG,
+        });
+    }
+    let srat = acpi::srat(cfg.cores, &srat_mems);
+
+    let chbs: Vec<Chbs> = (0..n_dev)
+        .map(|i| Chbs {
+            uid: layout::CHB_UID + i as u32,
             cxl_version: 1, // CXL 2.0: block is component registers
-            base: layout::CHBS_BASE,
+            base: layout::chbs_base(i),
             length: layout::CHBS_SIZE,
-        }],
-        &[Cfmws {
-            base_hpa: cxl_base,
-            window_size: cxl_size,
-            targets: vec![layout::CHB_UID],
-            granularity: 0,          // 256 B
-            restrictions: 1 << 2,    // volatile
+        })
+        .collect();
+    let hbig =
+        (cfg.cxl.interleave_granularity.trailing_zeros() - 8) as u16;
+    let arith = match cfg.cxl.interleave_arith {
+        InterleaveArith::Modulo => 0u8,
+        InterleaveArith::Xor => 1,
+    };
+    let cfmws: Vec<Cfmws> = windows
+        .iter()
+        .enumerate()
+        .map(|(set, &(base, size))| Cfmws {
+            base_hpa: base,
+            window_size: size,
+            targets: cfg
+                .cxl
+                .set_members(set)
+                .map(|i| layout::CHB_UID + i as u32)
+                .collect(),
+            granularity: hbig,
+            arith,
+            restrictions: 1 << 2, // volatile
             qtg_id: 0,
-        }],
-    );
+        })
+        .collect();
+    let cedt = acpi::cedt(&chbs, &cfmws);
+
+    // HMAT: access latency/bandwidth from initiator domain 0 to every
+    // memory domain — DRAM from the channel timing, each CXL set from
+    // its first member's link + media parameters.
+    let mut hmat_entries = vec![HmatEntry {
+        target_domain: 0,
+        read_lat_ns: cfg.sys_dram.t_rcd_ns + cfg.sys_dram.t_cas_ns,
+        bw_gbps: cfg.sys_dram.bw_gbps,
+    }];
+    for set in 0..sets {
+        let members = cfg.cxl.set_members(set);
+        let d0 = cfg.cxl.device(members.start);
+        let bw: f64 = members
+            .map(|i| {
+                let d = cfg.cxl.device(i);
+                d.link_bw_gbps.min(d.media.bw_gbps)
+            })
+            .sum();
+        hmat_entries.push(HmatEntry {
+            target_domain: 1 + set as u32,
+            read_lat_ns: 2.0
+                * (cfg.cxl.pkt_lat_ns
+                    + cfg.cxl.depkt_lat_ns
+                    + d0.link_lat_ns)
+                + d0.media.t_rcd_ns
+                + d0.media.t_cas_ns,
+            bw_gbps: bw,
+        });
+    }
+    let hmat = acpi::hmat(&hmat_entries);
 
     // ---- pack tables & pointers -----------------------------------------
     let mut cursor = layout::ACPI_POOL;
@@ -192,8 +261,9 @@ pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
     let mcfg_addr = place(mem, &mcfg);
     let srat_addr = place(mem, &srat);
     let cedt_addr = place(mem, &cedt);
+    let hmat_addr = place(mem, &hmat);
     let xsdt = acpi::xsdt(&[
-        fadt_addr, madt_addr, mcfg_addr, srat_addr, cedt_addr,
+        fadt_addr, madt_addr, mcfg_addr, srat_addr, cedt_addr, hmat_addr,
     ]);
     let xsdt_addr = place(mem, &xsdt);
     mem.write(layout::RSDP_ADDR, &acpi::rsdp(xsdt_addr));
@@ -203,8 +273,9 @@ pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
         e820_addr: layout::E820_ADDR,
         e820_len: e820_bytes.len(),
         ecam_base: layout::ECAM_BASE,
-        cxl_window_base: cxl_base,
-        cxl_window_size: cxl_size,
+        cxl_window_base: span_base,
+        cxl_window_size: span_size,
+        cxl_windows: windows,
         tables_end: cursor,
     }
 }
@@ -240,7 +311,7 @@ mod tests {
         mem.read(xsdt_addr, &mut x);
         assert_eq!(&x[0..4], b"XSDT");
         assert!(acpi::table_checksum_ok(&x));
-        assert_eq!((len - 36) / 8, 5); // five tables
+        assert_eq!((len - 36) / 8, 6); // six tables (incl. HMAT)
 
         // E820 parses and covers system memory.
         let mut e = vec![0u8; info.e820_len];
@@ -256,12 +327,32 @@ mod tests {
         let info = build(&cfg, &mut mem);
         let mut blob = vec![0u8; (info.tables_end - layout::ACPI_POOL) as usize];
         mem.read(layout::ACPI_POOL, &mut blob);
-        for sig in [b"FACP", b"APIC", b"MCFG", b"SRAT", b"CEDT", b"DSDT"] {
+        for sig in
+            [b"FACP", b"APIC", b"MCFG", b"SRAT", b"CEDT", b"DSDT", b"HMAT"]
+        {
             let count = blob
                 .windows(4)
                 .filter(|w| w == sig)
                 .count();
             assert_eq!(count, 1, "{}", String::from_utf8_lossy(sig));
         }
+    }
+
+    #[test]
+    fn multi_device_windows_and_domains() {
+        let mut cfg = SimConfig::default();
+        cfg.cxl.devices = 4;
+        cfg.cxl.interleave_ways = 2; // two sets of two devices
+        cfg.cxl.mem_size = 512 << 20;
+        let mut mem = PhysMem::new();
+        let info = build(&cfg, &mut mem);
+        assert_eq!(info.cxl_windows.len(), 2);
+        assert_eq!(info.cxl_windows[0].1, 1 << 30, "2 x 512 MiB per set");
+        // Windows are disjoint and 1 GiB-aligned.
+        let (b0, s0) = info.cxl_windows[0];
+        let (b1, _) = info.cxl_windows[1];
+        assert!(b1 >= b0 + s0);
+        assert_eq!(b1 % (1 << 30), 0);
+        assert_eq!(info.cxl_window_base, b0);
     }
 }

@@ -76,6 +76,18 @@ impl Args {
                     let v = val(&mut i)?;
                     a.sets.push(format!("cxl.attach=\"{v}\""));
                 }
+                "--devices" => {
+                    let v = val(&mut i)?;
+                    a.sets.push(format!("cxl.devices={v}"));
+                }
+                "--ways" => {
+                    let v = val(&mut i)?;
+                    a.sets.push(format!("cxl.interleave_ways={v}"));
+                }
+                "--granularity" => {
+                    let v = val(&mut i)?;
+                    a.sets.push(format!("cxl.interleave_granularity={v}"));
+                }
                 "--prog-model" => {
                     a.prog_model = match val(&mut i)?.as_str() {
                         "znuma" => ProgModel::Znuma,
@@ -156,6 +168,9 @@ pub fn print_help() {
            --set key=value        override a config key (repeatable)\n\
            --cpu inorder|o3       CPU model\n\
            --attach iobus|membus  CXL attach point (membus = baseline)\n\
+           --devices N            number of CXL expander cards\n\
+           --ways W               interleave ways across devices (0=auto)\n\
+           --granularity B        interleave granularity in bytes\n\
            --policy P             local | bind:N | preferred:N |\n\
                                   interleave:0=3,1=1\n\
            --workload W           stream-{{copy,scale,add,triad}} | random |\n\
@@ -188,18 +203,23 @@ pub fn cmd_boot(args: &Args) -> Result<()> {
             );
         }
     }
-    let memdev = m.guest.as_ref().unwrap().memdev.clone();
-    if let Some(md) = memdev {
+    let memdevs = m.guest.as_ref().unwrap().memdevs.clone();
+    if !memdevs.is_empty() {
         println!("\ncxl list:");
         let mut world = crate::system::MmioWorld {
             ecam: &mut m.ecam,
-            cxl_dev: &mut m.cxl_dev,
-            hb_component: &mut m.hb_component,
+            cxl_devs: &mut m.cxl_devs,
+            hb_components: &mut m.hb_components,
             chbs_base: crate::bios::layout::CHBS_BASE,
-            chbs_size: crate::bios::layout::CHBS_SIZE,
-            ep_bdf: m.ep_bdf,
+            chbs_stride: crate::bios::layout::CHBS_SIZE,
+            ep_bdfs: &m.ep_bdfs,
         };
-        println!("  {}", crate::guestos::cxlcli::cxl_list(&mut world, &md)?);
+        for (i, md) in memdevs.iter().enumerate() {
+            println!(
+                "  {}",
+                crate::guestos::cxlcli::cxl_list(&mut world, md, i)?
+            );
+        }
     }
     Ok(())
 }
@@ -227,6 +247,15 @@ pub fn cmd_run(args: &Args) -> Result<()> {
         "memory: {} DRAM fills, {} CXL fills (lat {:.0} / {:.0} ns)",
         s.dram_accesses, s.cxl_accesses, s.avg_lat_dram_ns, s.avg_lat_cxl_ns
     );
+    if s.cxl_dev_fills.len() > 1 {
+        let per: Vec<String> = s
+            .cxl_dev_fills
+            .iter()
+            .enumerate()
+            .map(|(i, f)| format!("dev{i}={f}"))
+            .collect();
+        println!("per-device fills: {}", per.join("  "));
+    }
     println!(
         "CXL.mem: M2S Req {}  RwD {}  |  S2M NDR {}  DRS {}",
         s.m2s_req, s.m2s_rwd, s.s2m_ndr, s.s2m_drs
@@ -383,6 +412,24 @@ mod tests {
         let cfg = a.config().unwrap();
         assert_eq!(cfg.cpu_model, CpuModel::InOrder);
         assert!(a.mem_policy().is_ok());
+    }
+
+    #[test]
+    fn multi_device_flags_reach_config() {
+        let a = Args::parse(&sv(&[
+            "run",
+            "--devices",
+            "2",
+            "--ways",
+            "2",
+            "--granularity",
+            "1024",
+        ]))
+        .unwrap();
+        let cfg = a.config().unwrap();
+        assert_eq!(cfg.cxl.devices, 2);
+        assert_eq!(cfg.cxl.ways(), 2);
+        assert_eq!(cfg.cxl.interleave_granularity, 1024);
     }
 
     #[test]

@@ -95,10 +95,84 @@ pub struct DramConfig {
     pub bw_gbps: f64,
 }
 
+/// Media latency class of an expander card — scales the shared media
+/// timing so heterogeneous fleets (near/baseline/far devices) can be
+/// described without repeating every DRAM knob per device.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LatencyClass {
+    /// DDR5-class media: 25% faster than the shared baseline timing.
+    Near,
+    #[default]
+    Baseline,
+    /// Capacity-optimized / far media: 50% slower than baseline.
+    Far,
+}
+
+impl LatencyClass {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "near" => Ok(LatencyClass::Near),
+            "baseline" | "default" => Ok(LatencyClass::Baseline),
+            "far" => Ok(LatencyClass::Far),
+            _ => bail!("unknown latency class '{s}' (near|baseline|far)"),
+        }
+    }
+
+    pub fn media_scale(&self) -> f64 {
+        match self {
+            LatencyClass::Near => 0.75,
+            LatencyClass::Baseline => 1.0,
+            LatencyClass::Far => 1.5,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LatencyClass::Near => "near",
+            LatencyClass::Baseline => "baseline",
+            LatencyClass::Far => "far",
+        }
+    }
+}
+
+/// Interleave arithmetic used by the window decoders (CFMWS byte 25:
+/// 0 = modulo, 1 = XOR of the target-selection bit groups).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum InterleaveArith {
+    #[default]
+    Modulo,
+    Xor,
+}
+
+/// Sparse per-device override of the shared `[cxl]` parameters, loaded
+/// from `[cxl.devN]` TOML sections (or `--set cxl.devN.key=value`).
+#[derive(Clone, Debug, Default)]
+pub struct CxlDevOverride {
+    pub mem_size: Option<u64>,
+    pub link_lat_ns: Option<f64>,
+    pub link_bw_gbps: Option<f64>,
+    /// Link width in lanes (default x8). Without an explicit bandwidth
+    /// override, bandwidth scales linearly with width.
+    pub link_width: Option<u32>,
+    pub latency_class: Option<LatencyClass>,
+}
+
+/// Fully-resolved parameters of one expander card: the shared `[cxl]`
+/// values with this device's override applied.
+#[derive(Clone, Debug)]
+pub struct CxlDeviceCfg {
+    pub mem_size: u64,
+    pub link_lat_ns: f64,
+    pub link_bw_gbps: f64,
+    pub link_width: u32,
+    pub latency_class: LatencyClass,
+    pub media: DramConfig,
+}
+
 /// CXL link + protocol parameters (paper §III-B.2: all user-calibratable).
 #[derive(Clone, Debug)]
 pub struct CxlConfig {
-    /// Expander capacity.
+    /// Per-expander capacity (shared default; `[cxl.devN] size` overrides).
     pub mem_size: u64,
     /// M2S/S2M packetization latency at the root complex (ns).
     pub pkt_lat_ns: f64,
@@ -115,6 +189,78 @@ pub struct CxlConfig {
     /// Device media timing.
     pub media: DramConfig,
     pub attach: CxlAttach,
+    /// Number of expander cards on the I/O bus (each behind its own
+    /// host bridge + root port, on its own PCIe bus).
+    pub devices: usize,
+    /// Interleave ways across devices. 0 = auto: all devices form one
+    /// interleave set when the count is a power of two, else one
+    /// single-device window per card.
+    pub interleave_ways: usize,
+    /// Interleave granularity in bytes (power of two, 256..=16384).
+    pub interleave_granularity: u64,
+    pub interleave_arith: InterleaveArith,
+    /// Sparse per-device overrides, indexed by device.
+    pub dev_overrides: Vec<CxlDevOverride>,
+}
+
+impl CxlConfig {
+    /// Effective interleave ways (resolves the `0 = auto` encoding).
+    pub fn ways(&self) -> usize {
+        if self.interleave_ways != 0 {
+            return self.interleave_ways;
+        }
+        if self.devices.is_power_of_two() {
+            self.devices
+        } else {
+            1
+        }
+    }
+
+    /// Number of interleave sets (each set = one CFMWS window = one
+    /// guest NUMA domain).
+    pub fn interleave_sets(&self) -> usize {
+        self.devices / self.ways()
+    }
+
+    /// Device indices participating in interleave set `set`.
+    pub fn set_members(&self, set: usize) -> std::ops::Range<usize> {
+        let w = self.ways();
+        set * w..(set + 1) * w
+    }
+
+    /// Resolved parameters for device `i`.
+    pub fn device(&self, i: usize) -> CxlDeviceCfg {
+        let ov = self.dev_overrides.get(i).cloned().unwrap_or_default();
+        let class = ov.latency_class.unwrap_or_default();
+        let mut media = self.media.clone();
+        let s = class.media_scale();
+        media.t_cas_ns *= s;
+        media.t_rcd_ns *= s;
+        media.t_rp_ns *= s;
+        let width = ov.link_width.unwrap_or(8);
+        let bw = ov
+            .link_bw_gbps
+            .unwrap_or(self.link_bw_gbps * width as f64 / 8.0);
+        CxlDeviceCfg {
+            mem_size: ov.mem_size.unwrap_or(self.mem_size),
+            link_lat_ns: ov.link_lat_ns.unwrap_or(self.link_lat_ns),
+            link_bw_gbps: bw,
+            link_width: width,
+            latency_class: class,
+            media,
+        }
+    }
+
+    /// Host-physical size of interleave set `set`'s window (the sum of
+    /// its member capacities; members are validated equal-sized).
+    pub fn set_size(&self, set: usize) -> u64 {
+        self.set_members(set).map(|i| self.device(i).mem_size).sum()
+    }
+
+    /// Total expander capacity across all devices.
+    pub fn total_size(&self) -> u64 {
+        (0..self.devices).map(|i| self.device(i).mem_size).sum()
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -199,6 +345,11 @@ impl Default for SimConfig {
                     bw_gbps: 19.2,
                 },
                 attach: CxlAttach::IoBus,
+                devices: 1,
+                interleave_ways: 0,
+                interleave_granularity: 256,
+                interleave_arith: InterleaveArith::Modulo,
+                dev_overrides: Vec::new(),
             },
             page_size: 4096,
             seed: 1,
@@ -231,10 +382,59 @@ impl SimConfig {
         if self.cxl.link_bw_gbps <= 0.0 || self.cxl.credits == 0 {
             bail!("cxl link parameters must be positive");
         }
-        // CXL 2.0 mailbox capacity fields are in 256 MiB multiples; a
-        // smaller expander would IDENTIFY as zero capacity.
-        if self.cxl.mem_size % (256 << 20) != 0 || self.cxl.mem_size == 0 {
-            bail!("cxl.size must be a non-zero multiple of 256 MiB");
+        // Multi-device topology: one PCIe bus (and host bridge) per
+        // expander; bus 0 plus up to 6 expander buses fit the ECAM.
+        if self.cxl.devices == 0 || self.cxl.devices > 6 {
+            bail!("cxl.devices must be 1..=6");
+        }
+        let ways = self.cxl.ways();
+        if !ways.is_power_of_two() || ways > 16 {
+            bail!("cxl.interleave_ways must be a power of two <= 16");
+        }
+        if self.cxl.devices % ways != 0 {
+            bail!(
+                "cxl.devices ({}) must be a multiple of the interleave \
+                 ways ({ways})",
+                self.cxl.devices
+            );
+        }
+        let gran = self.cxl.interleave_granularity;
+        if !is_pow2(gran) || !(256..=16384).contains(&gran) {
+            bail!(
+                "cxl.interleave_granularity must be a power of two in \
+                 256..=16384 (CFMWS HBIG encodings)"
+            );
+        }
+        if gran < self.l1.line {
+            bail!("interleave granularity must cover a full cache line");
+        }
+        for i in 0..self.cxl.devices {
+            let d = self.cxl.device(i);
+            // CXL 2.0 mailbox capacity fields are in 256 MiB multiples;
+            // a smaller expander would IDENTIFY as zero capacity.
+            if d.mem_size % (256 << 20) != 0 || d.mem_size == 0 {
+                bail!(
+                    "cxl.dev{i}: capacity must be a non-zero multiple of \
+                     256 MiB"
+                );
+            }
+            if d.link_bw_gbps <= 0.0 {
+                bail!("cxl.dev{i}: link bandwidth must be positive");
+            }
+            if !(1..=16u32).contains(&d.link_width) {
+                bail!("cxl.dev{i}: link width must be 1..=16 lanes");
+            }
+        }
+        for set in 0..self.cxl.interleave_sets() {
+            let members = self.cxl.set_members(set);
+            let cap0 = self.cxl.device(members.start).mem_size;
+            if members.clone().any(|i| self.cxl.device(i).mem_size != cap0)
+            {
+                bail!(
+                    "interleave set {set}: member capacities must match \
+                     (hardware-style N-way interleave)"
+                );
+            }
         }
         if self.issue_width == 0 || self.lsq_entries == 0 {
             bail!("o3 parameters must be positive");
@@ -337,6 +537,71 @@ impl SimConfig {
                 _ => bail!("cxl.attach must be \"iobus\" or \"membus\""),
             };
         }
+        get!("cxl.devices", c.cxl.devices, usize);
+        get!("cxl.interleave_ways", c.cxl.interleave_ways, usize);
+        get!(
+            "cxl.interleave_granularity",
+            c.cxl.interleave_granularity,
+            u64
+        );
+        if let Some(v) = doc.get("cxl.interleave_arith") {
+            c.cxl.interleave_arith = match v.as_str() {
+                Some("modulo") => InterleaveArith::Modulo,
+                Some("xor") => InterleaveArith::Xor,
+                _ => bail!(
+                    "cxl.interleave_arith must be \"modulo\" or \"xor\""
+                ),
+            };
+        }
+        // Per-device overrides from [cxl.devN] sections.
+        c.cxl.dev_overrides =
+            vec![CxlDevOverride::default(); c.cxl.devices.max(1)];
+        for i in 0..c.cxl.devices.max(1) {
+            let pre = format!("cxl.dev{i}");
+            let ov = &mut c.cxl.dev_overrides[i];
+            if let Some(v) = doc.get(&format!("{pre}.size")) {
+                ov.mem_size = Some(v.as_u64().with_context(|| {
+                    format!("{pre}.size must be int")
+                })?);
+            }
+            if let Some(v) = doc.get(&format!("{pre}.link_lat_ns")) {
+                ov.link_lat_ns = Some(v.as_f64().with_context(|| {
+                    format!("{pre}.link_lat_ns must be number")
+                })?);
+            }
+            if let Some(v) = doc.get(&format!("{pre}.link_bw_gbps")) {
+                ov.link_bw_gbps = Some(v.as_f64().with_context(|| {
+                    format!("{pre}.link_bw_gbps must be number")
+                })?);
+            }
+            if let Some(v) = doc.get(&format!("{pre}.link_width")) {
+                ov.link_width = Some(v.as_u64().with_context(|| {
+                    format!("{pre}.link_width must be int")
+                })? as u32);
+            }
+            if let Some(v) = doc.get(&format!("{pre}.latency_class")) {
+                let s = v.as_str().with_context(|| {
+                    format!("{pre}.latency_class must be string")
+                })?;
+                ov.latency_class = Some(LatencyClass::parse(s)?);
+            }
+        }
+        // Reject overrides for devices that don't exist rather than
+        // silently dropping them (a likely off-by-one in configs).
+        for key in doc.entries.keys() {
+            if let Some(rest) = key.strip_prefix("cxl.dev") {
+                if let Some((idx, _)) = rest.split_once('.') {
+                    match idx.parse::<usize>() {
+                        Ok(i) if i < c.cxl.devices => {}
+                        _ => bail!(
+                            "'{key}' targets a device outside \
+                             cxl.devices = {}",
+                            c.cxl.devices
+                        ),
+                    }
+                }
+            }
+        }
         c.validate()?;
         Ok(c)
     }
@@ -366,8 +631,12 @@ impl SimConfig {
             (
                 "CXL Memory".into(),
                 format!(
-                    "Configurable Extension (Unbounded) — {}",
-                    human_bytes(self.cxl.mem_size)
+                    "Configurable Extension (Unbounded) — {} across {} \
+                     device(s), {}-way interleave @ {} B",
+                    human_bytes(self.cxl.total_size()),
+                    self.cxl.devices,
+                    self.cxl.ways(),
+                    self.cxl.interleave_granularity
                 ),
             ),
         ]
@@ -427,5 +696,90 @@ mod tests {
         assert_eq!(rows.len(), 5);
         assert!(rows[2].1.contains("MESI"));
         assert!(rows[4].1.contains("4 GiB"));
+    }
+
+    #[test]
+    fn multi_device_defaults_and_auto_ways() {
+        let mut c = SimConfig::default();
+        c.cxl.devices = 4;
+        c.validate().unwrap();
+        assert_eq!(c.cxl.ways(), 4, "pow2 count auto-interleaves fully");
+        assert_eq!(c.cxl.interleave_sets(), 1);
+        assert_eq!(c.cxl.set_size(0), 4 * c.cxl.mem_size);
+
+        c.cxl.devices = 3;
+        c.validate().unwrap();
+        assert_eq!(c.cxl.ways(), 1, "non-pow2 auto falls back to 1 way");
+        assert_eq!(c.cxl.interleave_sets(), 3);
+    }
+
+    #[test]
+    fn per_device_overrides_from_toml() {
+        let cfg = SimConfig::from_toml(
+            "[cxl]\ndevices = 2\ninterleave_ways = 1\n\
+             interleave_granularity = 1024\n\
+             [cxl.dev1]\nsize = 512 MiB\nlatency_class = \"far\"\n\
+             link_width = 4\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.cxl.devices, 2);
+        assert_eq!(cfg.cxl.interleave_granularity, 1024);
+        let d0 = cfg.cxl.device(0);
+        let d1 = cfg.cxl.device(1);
+        assert_eq!(d0.mem_size, 4 << 30);
+        assert_eq!(d1.mem_size, 512 << 20);
+        assert_eq!(d1.latency_class, LatencyClass::Far);
+        assert!(d1.media.t_cas_ns > d0.media.t_cas_ns);
+        assert_eq!(d1.link_width, 4);
+        assert!((d1.link_bw_gbps - d0.link_bw_gbps / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn out_of_range_device_override_rejected() {
+        // [cxl.dev2] with only 2 devices: index is out of range.
+        let err = SimConfig::from_toml(
+            "[cxl]\ndevices = 2\ninterleave_ways = 1\n\
+             [cxl.dev2]\nsize = 512 MiB\n",
+            &[],
+        );
+        assert!(err.is_err());
+        // The same via --set.
+        let err = SimConfig::from_toml(
+            "",
+            &["cxl.dev1.size=512 MiB".to_string()],
+        );
+        assert!(err.is_err(), "default has one device; dev1 is invalid");
+    }
+
+    #[test]
+    fn interleave_validation_rejects_bad_shapes() {
+        let mut c = SimConfig::default();
+        c.cxl.devices = 3;
+        c.cxl.interleave_ways = 2; // 3 % 2 != 0
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::default();
+        c.cxl.interleave_granularity = 100; // not pow2
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::default();
+        c.cxl.devices = 7;
+        assert!(c.validate().is_err());
+
+        // Mismatched capacities inside one interleave set.
+        let mut c = SimConfig::default();
+        c.cxl.devices = 2;
+        c.cxl.dev_overrides = vec![
+            CxlDevOverride::default(),
+            CxlDevOverride {
+                mem_size: Some(512 << 20),
+                ..Default::default()
+            },
+        ];
+        assert!(c.validate().is_err());
+        // Same capacities but in separate 1-way sets: fine.
+        c.cxl.interleave_ways = 1;
+        c.validate().unwrap();
     }
 }

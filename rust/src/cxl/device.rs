@@ -41,11 +41,19 @@ pub struct CxlDevice {
 }
 
 impl CxlDevice {
+    /// Device 0 with the shared `[cxl]` parameters (single-card setups).
     pub fn new(cfg: &CxlConfig, serial: u64) -> Self {
+        Self::new_at(cfg, 0, serial)
+    }
+
+    /// Expander card `idx`, with its per-device capacity / link /
+    /// latency-class overrides resolved.
+    pub fn new_at(cfg: &CxlConfig, idx: usize, serial: u64) -> Self {
+        let dev = cfg.device(idx);
         CxlDevice {
             component: ComponentRegs::new(1),
-            mailbox: Mailbox::new(MemdevState::new(cfg.mem_size, serial)),
-            media: DramTiming::new(&cfg.media),
+            mailbox: Mailbox::new(MemdevState::new(dev.mem_size, serial)),
+            media: DramTiming::new(&dev.media),
             depkt_ticks: ns_to_ticks(cfg.depkt_lat_ns),
             pkt_ticks: ns_to_ticks(cfg.pkt_lat_ns),
             stats: DeviceStats::default(),
@@ -83,12 +91,28 @@ impl CxlDevice {
     }
 
     /// Translate host physical -> device physical via the committed
-    /// decoder. Addresses outside any committed range map to DPA 0
-    /// (poison in real hardware; we count them).
+    /// decoder, honouring the decoder's interleave fields: for an N-way
+    /// window the device sees every N-th granule, so the target-select
+    /// bits are stripped — DPA = (off / (G*N)) * G + off % G (the CXL
+    /// 2.0 §8.2.4.19 decode; the device never needs its slot index).
+    /// Addresses outside any committed range map to DPA 0 (poison in
+    /// real hardware; we count them).
     pub fn hpa_to_dpa(&self, hpa: u64) -> u64 {
-        for (base, size) in self.component.committed_ranges() {
-            if hpa >= base && hpa < base + size {
-                return hpa - base;
+        if self.component.hdm_enabled() {
+            for i in 0..self.component.decoder_count {
+                if !self.component.decoder_committed(i) {
+                    continue;
+                }
+                let (base, size) = self.component.decoder_range(i);
+                if size == 0 || hpa < base || hpa >= base + size {
+                    continue;
+                }
+                let off = hpa - base;
+                let (ways, gran) = self.component.decoder_interleave(i);
+                if ways == 1 {
+                    return off;
+                }
+                return (off / (gran * ways as u64)) * gran + off % gran;
             }
         }
         // Pre-commit traffic (BIOS probing) or bad routing.
@@ -172,6 +196,23 @@ mod tests {
         let d = device();
         assert_eq!(d.hpa_to_dpa(2 << 30), 0);
         assert_eq!(d.hpa_to_dpa((2 << 30) + 4096), 4096);
+    }
+
+    #[test]
+    fn interleaved_decoder_strips_target_bits() {
+        let cfg = SimConfig::default().cxl;
+        let mut d = CxlDevice::new(&cfg, 1);
+        // 2-way @ 256 B over an 8 GiB window: this device holds every
+        // other 256 B granule, packed densely in DPA space.
+        d.component.program_decoder_interleaved(0, 4 << 30, 8 << 30, 0, 1);
+        d.component
+            .write32(super::super::regs::comp::HDM_GLOBAL_CTRL, 0b10);
+        let base = 4u64 << 30;
+        assert_eq!(d.hpa_to_dpa(base), 0);
+        assert_eq!(d.hpa_to_dpa(base + 100), 100);
+        // Skipping the peer's granule: HPA +512 lands at DPA +256.
+        assert_eq!(d.hpa_to_dpa(base + 512), 256);
+        assert_eq!(d.hpa_to_dpa(base + 512 + 60), 316);
     }
 
     #[test]

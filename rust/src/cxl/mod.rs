@@ -23,4 +23,4 @@ pub mod root_complex;
 pub use device::CxlDevice;
 pub use link::CxlLink;
 pub use mem_proto::{M2SOpcode, S2MOpcode};
-pub use root_complex::CxlRootComplex;
+pub use root_complex::{CxlRootComplex, HdmWindow};

@@ -38,12 +38,26 @@ pub mod comp {
     pub const DEC_BASE_HI: u64 = 0x04;
     pub const DEC_SIZE_LO: u64 = 0x08;
     pub const DEC_SIZE_HI: u64 = 0x0C;
-    /// bit[9] commit (W), bit[10] committed (RO), bits[3:0] IG/IW=0 (no
-    /// device-side interleave for an SLD).
+    /// bit[9] commit (W), bit[10] committed (RO), bits[3:0] IG
+    /// (granularity = 256 << IG), bits[7:4] IW (ways = 1 << IW) — the
+    /// CXL 2.0 §8.2.5.12.7 interleave fields, programmed non-zero when
+    /// the decoder participates in a multi-device window.
     pub const DEC_CTRL: u64 = 0x10;
 
     pub const CTRL_COMMIT: u32 = 1 << 9;
     pub const CTRL_COMMITTED: u32 = 1 << 10;
+    pub const CTRL_IG_MASK: u32 = 0xF;
+    pub const CTRL_IW_SHIFT: u32 = 4;
+    pub const CTRL_IW_MASK: u32 = 0xF << CTRL_IW_SHIFT;
+
+    /// The DEC_CTRL commit value with interleave fields packed — the
+    /// single encoding shared by the guest driver and device-side
+    /// helpers.
+    pub fn dec_ctrl_commit(ig: u8, eniw: u8) -> u32 {
+        CTRL_COMMIT
+            | (ig as u32 & CTRL_IG_MASK)
+            | (((eniw as u32) << CTRL_IW_SHIFT) & CTRL_IW_MASK)
+    }
 
     pub const BLOCK_SIZE: u64 = 0x10000;
 }
@@ -236,11 +250,36 @@ impl ComponentRegs {
 
     /// Driver-side helper: program decoder i to [base, base+size).
     pub fn program_decoder(&mut self, i: usize, base: u64, size: u64) {
+        self.program_decoder_interleaved(i, base, size, 0, 0);
+    }
+
+    /// Program decoder i with interleave fields: granularity 256 << ig,
+    /// ways 1 << eniw (0/0 = the plain SLD decode).
+    pub fn program_decoder_interleaved(
+        &mut self,
+        i: usize,
+        base: u64,
+        size: u64,
+        ig: u8,
+        eniw: u8,
+    ) {
         self.write32(self.dec_reg(i, comp::DEC_BASE_LO), base as u32);
         self.write32(self.dec_reg(i, comp::DEC_BASE_HI), (base >> 32) as u32);
         self.write32(self.dec_reg(i, comp::DEC_SIZE_LO), size as u32);
         self.write32(self.dec_reg(i, comp::DEC_SIZE_HI), (size >> 32) as u32);
-        self.write32(self.dec_reg(i, comp::DEC_CTRL), comp::CTRL_COMMIT);
+        self.write32(
+            self.dec_reg(i, comp::DEC_CTRL),
+            comp::dec_ctrl_commit(ig, eniw),
+        );
+    }
+
+    /// The committed interleave parameters of decoder i:
+    /// `(ways, granularity_bytes)`.
+    pub fn decoder_interleave(&self, i: usize) -> (usize, u64) {
+        let ctrl = self.read32(self.dec_reg(i, comp::DEC_CTRL));
+        let ig = ctrl & comp::CTRL_IG_MASK;
+        let eniw = (ctrl & comp::CTRL_IW_MASK) >> comp::CTRL_IW_SHIFT;
+        (1usize << eniw, 256u64 << ig)
     }
 }
 
@@ -269,6 +308,19 @@ mod tests {
         assert!(r.committed_ranges().is_empty());
         r.write32(comp::HDM_GLOBAL_CTRL, 0b10);
         assert_eq!(r.committed_ranges(), vec![(0x1_0000_0000, 4 << 30)]);
+    }
+
+    #[test]
+    fn interleave_fields_roundtrip_through_commit() {
+        let mut r = ComponentRegs::new(1);
+        // 2-way @ 1 KiB: ig = 2 (256 << 2), eniw = 1.
+        r.program_decoder_interleaved(0, 4 << 30, 8 << 30, 2, 1);
+        assert!(r.decoder_committed(0));
+        assert_eq!(r.decoder_interleave(0), (2, 1024));
+        // Plain decoder reads back as 1-way / 256 B.
+        let mut p = ComponentRegs::new(1);
+        p.program_decoder(0, 4 << 30, 4 << 30);
+        assert_eq!(p.decoder_interleave(0), (1, 256));
     }
 
     #[test]

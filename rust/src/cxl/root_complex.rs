@@ -1,16 +1,20 @@
 //! CXL Root Complex — the host-side protocol entity (paper Fig. 1B/4).
 //!
 //! Sits on the I/O bus. Converts host load/store packets targeting a
-//! committed HDM range into CXL.mem M2S packets (**packetization**, with
-//! its configurable latency), drives them through the credit-controlled
-//! link, and converts S2M responses back. Also owns the RC-side DVSEC
-//! surface (Set 1 of Fig. 3) that the guest driver binds against.
+//! committed HDM window into CXL.mem M2S packets (**packetization**, with
+//! its configurable latency), drives them through the per-device
+//! credit-controlled links, and converts S2M responses back. The
+//! **interleave decoder** lives here: each window carries the CFMWS
+//! interleave parameters (ways, granularity, modulo/XOR arithmetic) and
+//! every line address resolves to exactly one target device. Also owns
+//! the RC-side DVSEC surface (Set 1 of Fig. 3) that the guest driver
+//! binds against.
 
 use crate::config::CxlConfig;
 use crate::sim::{ns_to_ticks, Packet, Tick};
 use crate::stats::{Counter, Histogram, StatDump};
 
-use super::link::CxlLink;
+use super::link::{CxlLink, LinkStats};
 use super::mem_proto::{self, CxlMemPacket};
 
 #[derive(Clone, Debug, Default)]
@@ -21,64 +25,177 @@ pub struct RcStats {
     pub round_trip: Histogram,
 }
 
+/// One committed routing window with its interleave decode parameters
+/// (mirrors a CFMWS + the committed host-bridge decoders beneath it).
+#[derive(Clone, Debug)]
+pub struct HdmWindow {
+    pub base: u64,
+    pub size: u64,
+    /// Interleave granularity in bytes (power of two).
+    pub granularity: u64,
+    /// Device indices in CFMWS target-slot order (len = ways).
+    pub targets: Vec<usize>,
+    /// XOR target-selection arithmetic instead of modulo.
+    pub xor: bool,
+}
+
+impl HdmWindow {
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.base && addr < self.base + self.size
+    }
+
+    /// CFMWS target slot for `addr`. Modulo: the granule index mod
+    /// ways. XOR: successive log2(ways)-bit fields of the granule index
+    /// folded together — decorrelates strided streams from the target
+    /// selection (both arithmetics are CXL 2.0 CFMWS options).
+    pub fn slot(&self, addr: u64) -> usize {
+        let ways = self.targets.len() as u64;
+        if ways == 1 {
+            return 0;
+        }
+        let chunk = (addr - self.base) / self.granularity;
+        if self.xor {
+            let bits = ways.trailing_zeros();
+            let mut c = chunk;
+            let mut s = 0u64;
+            while c != 0 {
+                s ^= c & (ways - 1);
+                c >>= bits;
+            }
+            s as usize
+        } else {
+            (chunk % ways) as usize
+        }
+    }
+
+    /// The device index owning `addr`.
+    pub fn target(&self, addr: u64) -> usize {
+        self.targets[self.slot(addr)]
+    }
+
+    /// Strip the interleave bits: window-relative HPA -> device DPA.
+    /// Valid for modulo arithmetic; XOR permutes targets within each
+    /// ways-sized granule group, so the dense packing is identical.
+    pub fn dpa(&self, addr: u64) -> u64 {
+        let off = addr - self.base;
+        let ways = self.targets.len() as u64;
+        if ways == 1 {
+            return off;
+        }
+        (off / (self.granularity * ways)) * self.granularity
+            + off % self.granularity
+    }
+}
+
 pub struct CxlRootComplex {
     pkt_ticks: Tick,
     depkt_ticks: Tick,
-    pub link: CxlLink,
+    /// One physical link per expander device, indexed by device.
+    pub links: Vec<CxlLink>,
     next_tag: u16,
     pub stats: RcStats,
-    /// Host address ranges routed to the expander (mirrors the committed
-    /// HDM decoders; programmed by the guest driver via
-    /// [`set_hdm_range`]).
-    hdm_ranges: Vec<(u64, u64)>,
+    /// Committed HDM windows (mirrors the host-bridge decoders;
+    /// programmed by the guest driver via [`CxlRootComplex::add_window`]
+    /// / [`CxlRootComplex::set_hdm_range`]).
+    windows: Vec<HdmWindow>,
 }
 
 impl CxlRootComplex {
     pub fn new(cfg: &CxlConfig) -> Self {
+        let links = (0..cfg.devices.max(1))
+            .map(|i| {
+                let d = cfg.device(i);
+                CxlLink::new(
+                    d.link_lat_ns,
+                    d.link_bw_gbps,
+                    cfg.flit_bytes,
+                    cfg.credits,
+                )
+            })
+            .collect();
         CxlRootComplex {
             pkt_ticks: ns_to_ticks(cfg.pkt_lat_ns),
             depkt_ticks: ns_to_ticks(cfg.depkt_lat_ns),
-            link: CxlLink::new(
-                cfg.link_lat_ns,
-                cfg.link_bw_gbps,
-                cfg.flit_bytes,
-                cfg.credits,
-            ),
+            links,
             next_tag: 0,
             stats: RcStats::default(),
-            hdm_ranges: Vec::new(),
+            windows: Vec::new(),
         }
     }
 
     /// Driver hook: HDM decoder committed on the device — mirror the
-    /// routing window here (real RCs snoop the same programming).
+    /// routing window here (real RCs snoop the same programming). The
+    /// single-target convenience form routes everything to device 0.
     pub fn set_hdm_range(&mut self, base: u64, size: u64) {
-        self.hdm_ranges.push((base, size));
+        self.add_window(HdmWindow {
+            base,
+            size,
+            granularity: 256,
+            targets: vec![0],
+            xor: false,
+        });
+    }
+
+    /// Mirror a committed interleave-set window.
+    pub fn add_window(&mut self, w: HdmWindow) {
+        assert!(w.targets.len().is_power_of_two());
+        assert!(w.granularity.is_power_of_two() && w.granularity >= 256);
+        assert!(
+            w.targets.iter().all(|&t| t < self.links.len()),
+            "window targets a device without a link"
+        );
+        self.windows.push(w);
+    }
+
+    pub fn windows(&self) -> &[HdmWindow] {
+        &self.windows
     }
 
     pub fn routes(&self, addr: u64) -> bool {
-        self.hdm_ranges
+        self.windows.iter().any(|w| w.contains(addr))
+    }
+
+    /// Interleave decode: the device index owning `addr`.
+    pub fn route(&self, addr: u64) -> Option<usize> {
+        self.windows
             .iter()
-            .any(|&(b, s)| addr >= b && addr < b + s)
+            .find(|w| w.contains(addr))
+            .map(|w| w.target(addr))
     }
 
-    pub fn hdm_ranges(&self) -> &[(u64, u64)] {
-        &self.hdm_ranges
+    /// Decode to `(device, device-physical address)` in one step — the
+    /// baseline membus path uses this where no protocol flows.
+    pub fn route_dpa(&self, addr: u64) -> Option<(usize, u64)> {
+        self.windows
+            .iter()
+            .find(|w| w.contains(addr))
+            .map(|w| (w.target(addr), w.dpa(addr)))
     }
 
-    /// Packetize a host request at `now`. Returns:
+    pub fn hdm_ranges(&self) -> Vec<(u64, u64)> {
+        self.windows.iter().map(|w| (w.base, w.size)).collect()
+    }
+
+    /// Sum a per-link statistic across every device link.
+    pub fn agg_link(&self, f: impl Fn(&LinkStats) -> u64) -> u64 {
+        self.links.iter().map(|l| f(&l.stats)).sum()
+    }
+
+    /// Packetize a host request at `now` onto device `dev`'s link:
     /// * `Ok((pkt, device_arrival))` — entered the link.
     /// * `Err(retry_at)` — no M2S credit; retry at the given tick.
     pub fn packetize_and_send(
         &mut self,
         now: Tick,
         host_pkt: &Packet,
+        dev: usize,
     ) -> Result<(CxlMemPacket, Tick), Tick> {
         let after_pkt = now + self.pkt_ticks;
-        match self.link.credit_available_at(after_pkt) {
+        let link = &mut self.links[dev];
+        match link.credit_available_at(after_pkt) {
             Some(t) if t <= after_pkt => {}
             Some(t) => {
-                self.link.note_credit_stall(after_pkt, t);
+                link.note_credit_stall(after_pkt, t);
                 return Err(t);
             }
             None => panic!("zero-credit link"),
@@ -89,22 +206,23 @@ impl CxlRootComplex {
             .expect("unroutable command reached the RC");
         self.stats.packetized.inc();
         self.stats.packetize_ticks.add(self.pkt_ticks);
-        let arrival = self.link.send_m2s(after_pkt, &pkt);
+        let arrival = self.links[dev].send_m2s(after_pkt, &pkt);
         Ok((pkt, arrival))
     }
 
-    /// The device's S2M response enters the link at `ready`; returns the
-    /// tick at which the host-side response is available (after link +
-    /// RC-side de-packetization).
+    /// Device `dev`'s S2M response enters its link at `ready`; returns
+    /// the tick at which the host-side response is available (after
+    /// link + RC-side de-packetization).
     pub fn receive_s2m(
         &mut self,
         ready: Tick,
         resp: &CxlMemPacket,
         issued_at: Tick,
+        dev: usize,
     ) -> Tick {
-        let rc_arrival = self.link.send_s2m(ready, resp);
+        let rc_arrival = self.links[dev].send_s2m(ready, resp);
         let done = rc_arrival + self.depkt_ticks; // RC-side unpack
-        self.link.retire(done);
+        self.links[dev].retire(done);
         self.stats.responses.inc();
         self.stats.round_trip.sample(done.saturating_sub(issued_at));
         done
@@ -114,7 +232,9 @@ impl CxlRootComplex {
         d.counter(&format!("{path}.packetized"), &self.stats.packetized);
         d.counter(&format!("{path}.responses"), &self.stats.responses);
         d.hist(&format!("{path}.round_trip"), &self.stats.round_trip);
-        self.link.dump(&format!("{path}.link"), d);
+        for (i, l) in self.links.iter().enumerate() {
+            l.dump(&format!("{path}.link{i}"), d);
+        }
     }
 }
 
@@ -141,13 +261,16 @@ mod tests {
         assert!(r.routes((6u64 << 30) - 64));
         assert!(!r.routes(6 << 30));
         assert!(!r.routes(0x1000));
+        assert_eq!(r.route(2 << 30), Some(0));
     }
 
     #[test]
     fn packetize_adds_latency_and_tags() {
         let mut r = rc();
-        let (p1, a1) = r.packetize_and_send(0, &pkt(MemCmd::ReadReq)).unwrap();
-        let (p2, _) = r.packetize_and_send(0, &pkt(MemCmd::ReadReq)).unwrap();
+        let (p1, a1) =
+            r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
+        let (p2, _) =
+            r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
         assert_ne!(p1.tag, p2.tag);
         // pkt_lat 25ns + ser (68B @ 32GB/s = 2.125ns) + link 20ns.
         assert_eq!(a1, ns_to_ticks(25.0) + 2125 + ns_to_ticks(20.0));
@@ -159,28 +282,86 @@ mod tests {
         cfg.credits = 1;
         let mut r = CxlRootComplex::new(&cfg);
         r.set_hdm_range(0, 4 << 30);
-        let (p, arr) = r
-            .packetize_and_send(0, &pkt(MemCmd::ReadReq))
-            .unwrap();
+        let (p, arr) =
+            r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
         // Second request has no credit.
-        let e = r.packetize_and_send(0, &pkt(MemCmd::ReadReq));
+        let e = r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0);
         assert!(e.is_err());
         // Retire the first: response path frees the credit.
         let resp = mem_proto::make_response(&p);
-        let done = r.receive_s2m(arr + 100, &resp, 0);
-        let retry = r.packetize_and_send(done, &pkt(MemCmd::ReadReq));
+        let done = r.receive_s2m(arr + 100, &resp, 0, 0);
+        let retry = r.packetize_and_send(done, &pkt(MemCmd::ReadReq), 0);
         assert!(retry.is_ok());
-        assert_eq!(r.link.stats.credit_stalls.get(), 1);
+        assert_eq!(r.links[0].stats.credit_stalls.get(), 1);
     }
 
     #[test]
     fn round_trip_recorded() {
         let mut r = rc();
-        let (p, arr) = r.packetize_and_send(0, &pkt(MemCmd::WriteReq)).unwrap();
+        let (p, arr) =
+            r.packetize_and_send(0, &pkt(MemCmd::WriteReq), 0).unwrap();
         let resp = mem_proto::make_response(&p);
-        let done = r.receive_s2m(arr + 50_000, &resp, 0);
+        let done = r.receive_s2m(arr + 50_000, &resp, 0, 0);
         assert!(done > arr);
         assert_eq!(r.stats.round_trip.count(), 1);
         assert!(r.stats.round_trip.stats.mean() >= done as f64 * 0.9);
+    }
+
+    #[test]
+    fn per_device_links_are_independent() {
+        let mut cfg = SimConfig::default().cxl;
+        cfg.devices = 2;
+        cfg.credits = 1;
+        let mut r = CxlRootComplex::new(&cfg);
+        assert_eq!(r.links.len(), 2);
+        r.add_window(HdmWindow {
+            base: 4 << 30,
+            size: 8 << 30,
+            granularity: 256,
+            targets: vec![0, 1],
+            xor: false,
+        });
+        // Exhausting device 0's credit leaves device 1 usable.
+        r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
+        assert!(r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).is_err());
+        assert!(r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 1).is_ok());
+    }
+
+    #[test]
+    fn modulo_interleave_alternates_targets() {
+        let w = HdmWindow {
+            base: 4 << 30,
+            size: 8 << 30,
+            granularity: 1024,
+            targets: vec![0, 1],
+            xor: false,
+        };
+        let b = 4u64 << 30;
+        assert_eq!(w.target(b), 0);
+        assert_eq!(w.target(b + 1023), 0);
+        assert_eq!(w.target(b + 1024), 1);
+        assert_eq!(w.target(b + 2048), 0);
+        // DPA packs densely per device.
+        assert_eq!(w.dpa(b), 0);
+        assert_eq!(w.dpa(b + 1024), 0);
+        assert_eq!(w.dpa(b + 2048), 1024);
+        assert_eq!(w.dpa(b + 2048 + 7), 1024 + 7);
+    }
+
+    #[test]
+    fn xor_interleave_covers_all_targets() {
+        let w = HdmWindow {
+            base: 0,
+            size: 1 << 20,
+            granularity: 256,
+            targets: vec![0, 1, 2, 3],
+            xor: true,
+        };
+        let mut seen = [0u64; 4];
+        for line in (0..(1u64 << 20)).step_by(256) {
+            seen[w.slot(line)] += 1;
+        }
+        // Perfectly balanced across the 4 targets.
+        assert!(seen.iter().all(|&c| c == seen[0]), "{seen:?}");
     }
 }

@@ -49,7 +49,19 @@ pub struct CfmwsInfo {
     pub base_hpa: u64,
     pub window_size: u64,
     pub targets: Vec<u32>,
+    /// Interleave granularity in bytes (decoded from HBIG).
+    pub granularity: u64,
+    /// Interleave arithmetic: 0 = modulo, 1 = XOR.
+    pub arith: u8,
     pub restrictions: u16,
+}
+
+/// HMAT type-1 access attributes from initiator domain 0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HmatAttr {
+    pub target_domain: u32,
+    pub read_lat_ns: f64,
+    pub bw_gbps: f64,
 }
 
 /// Everything the guest kernel learned from ACPI.
@@ -60,6 +72,7 @@ pub struct AcpiInfo {
     pub mem_affinity: Vec<MemAffinity>,
     pub chbs: Vec<ChbsInfo>,
     pub cfmws: Vec<CfmwsInfo>,
+    pub hmat: Vec<HmatAttr>,
     pub devices: Vec<AcpiDevice>,
 }
 
@@ -113,6 +126,7 @@ pub fn parse(mem: &PhysMem, rsdp_scan_base: u64) -> Result<AcpiInfo> {
             "MCFG" => parse_mcfg(&t, &mut info),
             "SRAT" => parse_srat(&t, &mut info),
             "CEDT" => parse_cedt(&t, &mut info),
+            "HMAT" => parse_hmat(&t, &mut info),
             "FACP" => {
                 let dsdt_addr =
                     u64::from_le_bytes(t[140..148].try_into().unwrap());
@@ -211,16 +225,91 @@ fn parse_cedt(t: &[u8], info: &mut AcpiInfo) {
                 for k in 0..niw {
                     targets.push(g32(36 + 4 * k));
                 }
+                let hbig = g32(28);
                 info.cfmws.push(CfmwsInfo {
                     base_hpa: g64(8),
                     window_size: g64(16),
                     targets,
+                    granularity: 256u64 << hbig,
+                    arith: t[i + 25],
                     restrictions: u16::from_le_bytes(
                         t[i + 32..i + 34].try_into().unwrap(),
                     ),
                 });
             }
             _ => {}
+        }
+        i += len;
+    }
+}
+
+/// HMAT: type-1 System Locality Latency and Bandwidth structures with
+/// one initiator (domain 0). Latency (data type 0) and bandwidth (data
+/// type 3) rows are merged per target domain.
+fn parse_hmat(t: &[u8], info: &mut AcpiInfo) {
+    let mut i = 36 + 4;
+    while i + 8 <= t.len() {
+        let typ = u16::from_le_bytes(t[i..i + 2].try_into().unwrap());
+        let len =
+            u32::from_le_bytes(t[i + 4..i + 8].try_into().unwrap()) as usize;
+        if len < 8 || i + len > t.len() {
+            break;
+        }
+        if typ == 1 && len >= 32 {
+            let data_type = t[i + 9];
+            let n_init = u32::from_le_bytes(
+                t[i + 12..i + 16].try_into().unwrap(),
+            ) as usize;
+            let n_tgt = u32::from_le_bytes(
+                t[i + 16..i + 20].try_into().unwrap(),
+            ) as usize;
+            let base_unit = u64::from_le_bytes(
+                t[i + 24..i + 32].try_into().unwrap(),
+            );
+            let tgt_list = i + 32 + 4 * n_init;
+            let entries = tgt_list + 4 * n_tgt;
+            if n_init == 1 && entries + 2 * n_tgt <= i + len {
+                for k in 0..n_tgt {
+                    let dom = u32::from_le_bytes(
+                        t[tgt_list + 4 * k..tgt_list + 4 * k + 4]
+                            .try_into()
+                            .unwrap(),
+                    );
+                    let raw = u16::from_le_bytes(
+                        t[entries + 2 * k..entries + 2 * k + 2]
+                            .try_into()
+                            .unwrap(),
+                    ) as u64;
+                    let attr = match info
+                        .hmat
+                        .iter_mut()
+                        .find(|a| a.target_domain == dom)
+                    {
+                        Some(a) => a,
+                        None => {
+                            info.hmat.push(HmatAttr {
+                                target_domain: dom,
+                                read_lat_ns: 0.0,
+                                bw_gbps: 0.0,
+                            });
+                            info.hmat.last_mut().unwrap()
+                        }
+                    };
+                    match data_type {
+                        // Latency entries scale by base unit in ps.
+                        0 => {
+                            attr.read_lat_ns =
+                                (raw * base_unit) as f64 / 1000.0
+                        }
+                        // Bandwidth entries scale by base unit in MB/s.
+                        3 => {
+                            attr.bw_gbps =
+                                (raw * base_unit) as f64 / 1000.0
+                        }
+                        _ => {}
+                    }
+                }
+            }
         }
         i += len;
     }
@@ -529,6 +618,58 @@ mod tests {
             cxl.crs,
             vec![(bios::layout::CHBS_BASE, bios::layout::CHBS_SIZE)]
         );
+    }
+
+    #[test]
+    fn cfmws_carries_interleave_parameters() {
+        let info = parsed();
+        assert_eq!(info.cfmws[0].granularity, 256);
+        assert_eq!(info.cfmws[0].arith, 0);
+    }
+
+    #[test]
+    fn hmat_ranks_cxl_behind_dram() {
+        let info = parsed();
+        assert_eq!(info.hmat.len(), 2);
+        let dram = info.hmat.iter().find(|a| a.target_domain == 0).unwrap();
+        let cxl = info.hmat.iter().find(|a| a.target_domain == 1).unwrap();
+        assert!(cxl.read_lat_ns > dram.read_lat_ns);
+        assert!(cxl.bw_gbps > 0.0 && dram.bw_gbps > 0.0);
+    }
+
+    #[test]
+    fn four_device_bios_parses_to_four_bridges() {
+        let mut cfg = SimConfig::default();
+        cfg.cxl.devices = 4;
+        cfg.cxl.mem_size = 512 << 20;
+        cfg.cxl.interleave_granularity = 1024;
+        let mut mem = PhysMem::new();
+        bios::build(&cfg, &mut mem);
+        let info = parse(&mem, bios::layout::RSDP_ADDR & !0xFFFF).unwrap();
+        assert_eq!(info.chbs.len(), 4);
+        assert_eq!(info.cfmws.len(), 1, "one window for the 4-way set");
+        assert_eq!(info.cfmws[0].targets.len(), 4);
+        assert_eq!(info.cfmws[0].granularity, 1024);
+        assert_eq!(info.cfmws[0].window_size, 2 << 30);
+        // Four ACPI0016 bridges in the namespace, distinct UIDs + CHBS.
+        let bridges: Vec<_> = info
+            .devices
+            .iter()
+            .filter(|d| d.hid.as_deref() == Some("ACPI0016"))
+            .collect();
+        assert_eq!(bridges.len(), 4);
+        for (i, b) in bridges.iter().enumerate() {
+            assert_eq!(b.uid, Some(bios::layout::CHB_UID + i as u32));
+            assert_eq!(
+                b.crs,
+                vec![(
+                    bios::layout::chbs_base(i),
+                    bios::layout::CHBS_SIZE
+                )]
+            );
+        }
+        // SRAT: DRAM domain + one zNUMA domain for the set.
+        assert_eq!(info.mem_affinity.len(), 2);
     }
 
     #[test]

@@ -28,12 +28,21 @@ pub struct CxlMemdev {
     pub bdf: Bdf,
     pub serial: u64,
     pub capacity: u64,
-    /// Host-physical window the HDM decoders map.
+    /// Host-physical window the HDM decoders map (the full CFMWS
+    /// window; an interleaved device holds every `ways`-th granule).
     pub hpa_base: u64,
     pub hpa_size: u64,
+    /// Interleave parameters of the window this device participates in.
+    pub window_ways: usize,
+    pub window_granularity: u64,
+    /// 0 = modulo, 1 = XOR target selection.
+    pub window_arith: u8,
+    /// This device's slot in the CFMWS target list.
+    pub position: usize,
     pub component_block: u64, // absolute MMIO base (endpoint)
     pub device_block: u64,    // absolute MMIO base (mailbox)
     pub hb_component_block: u64,
+    pub hb_uid: u32,
 }
 
 /// Run a mailbox command through the device block MMIO (doorbell poll —
@@ -81,19 +90,22 @@ pub fn mailbox_command(
 }
 
 /// Program and commit decoder 0 of a component block at `blk` to map
-/// `[base, base+size)`.
+/// `[base, base+size)` with the given interleave encodings (IG:
+/// granularity = 256 << ig; IW: ways = 1 << eniw).
 fn commit_decoder(
     p: &mut dyn Platform,
     blk: u64,
     base: u64,
     size: u64,
+    ig: u8,
+    eniw: u8,
 ) -> Result<()> {
     let dec = blk + comp::HDM_DEC0;
-    p.mmio_write32((dec + comp::DEC_BASE_LO) as u64, base as u32);
+    p.mmio_write32(dec + comp::DEC_BASE_LO, base as u32);
     p.mmio_write32(dec + comp::DEC_BASE_HI, (base >> 32) as u32);
     p.mmio_write32(dec + comp::DEC_SIZE_LO, size as u32);
     p.mmio_write32(dec + comp::DEC_SIZE_HI, (size >> 32) as u32);
-    p.mmio_write32(dec + comp::DEC_CTRL, comp::CTRL_COMMIT);
+    p.mmio_write32(dec + comp::DEC_CTRL, comp::dec_ctrl_commit(ig, eniw));
     let ctrl = p.mmio_read32(dec + comp::DEC_CTRL);
     if ctrl & comp::CTRL_COMMITTED == 0 {
         bail!("HDM decoder refused commit (ctrl={ctrl:#x})");
@@ -103,32 +115,64 @@ fn commit_decoder(
     Ok(())
 }
 
-/// Bind the CXL stack: locate, identify, map. `pci_devs` comes from the
-/// earlier enumeration pass.
-pub fn bind(
+/// Bind every CXL memdev: endpoints (class 0502, BDF order) pair with
+/// the CEDT host bridges (UID order) — the simulator wires root port
+/// `i` beneath host bridge `i`, so order-pairing mirrors the ACPI
+/// namespace association a full _PRT walk would produce.
+pub fn bind_all(
     p: &mut dyn Platform,
     acpi: &AcpiInfo,
     pci_devs: &[PciDev],
+) -> Result<Vec<CxlMemdev>> {
+    let mut chbs = acpi.chbs.clone();
+    chbs.sort_by_key(|c| c.uid);
+    if chbs.is_empty() {
+        bail!("no CHBS in CEDT — BIOS did not describe a CXL host bridge");
+    }
+    let mut eps: Vec<&PciDev> = pci_devs
+        .iter()
+        .filter(|d| {
+            !d.is_bridge && d.class[0] == 0x05 && d.class[1] == 0x02
+        })
+        .collect();
+    eps.sort_by_key(|d| d.bdf);
+    if eps.is_empty() {
+        bail!("no CXL memory device on the PCIe bus");
+    }
+    if eps.len() != chbs.len() {
+        bail!(
+            "{} memdev endpoints but {} CXL host bridges",
+            eps.len(),
+            chbs.len()
+        );
+    }
+    eps.iter()
+        .zip(&chbs)
+        .map(|(ep, hb)| bind_one(p, acpi, ep, hb))
+        .collect()
+}
+
+/// Bind one endpoint beneath its host bridge: locate, identify, map.
+fn bind_one(
+    p: &mut dyn Platform,
+    acpi: &AcpiInfo,
+    ep: &PciDev,
+    chbs: &super::acpi_parse::ChbsInfo,
 ) -> Result<CxlMemdev> {
-    // 1. ACPI side: host bridge + window.
-    let chbs = acpi
-        .chbs
-        .first()
-        .context("no CHBS in CEDT — BIOS did not describe a CXL host bridge")?;
+    // 1. ACPI side: the window this bridge participates in.
     let cfmws = acpi
         .cfmws
         .iter()
         .find(|w| w.targets.contains(&chbs.uid))
         .context("no CFMWS targeting the host bridge")?;
+    let position = cfmws
+        .targets
+        .iter()
+        .position(|&u| u == chbs.uid)
+        .unwrap();
     if chbs.cxl_version == 0 {
         bail!("CXL 1.1 host bridges unsupported (RCD mode)");
     }
-
-    // 2. PCI side: the Type-3 memdev (class 0502).
-    let ep = pci_devs
-        .iter()
-        .find(|d| !d.is_bridge && d.class[0] == 0x05 && d.class[1] == 0x02)
-        .context("no CXL memory device on the PCIe bus")?;
     let (ecam, ..) = acpi.ecam.context("no MCFG")?;
 
     // 3. DVSEC walk: confirm CXL device + register locator.
@@ -187,12 +231,20 @@ pub fn bind(
     if capacity == 0 {
         bail!("device reports zero capacity");
     }
-    let map_size = capacity.min(cfmws.window_size);
+    let ways = cfmws.targets.len();
+    // An N-way window spreads every member across the whole window;
+    // each decoder maps the full window with the interleave fields set.
+    let map_size = cfmws.window_size.min(capacity * ways as u64);
+    if !cfmws.granularity.is_power_of_two() || cfmws.granularity < 256 {
+        bail!("bad CFMWS granularity {:#x}", cfmws.granularity);
+    }
+    let ig = (cfmws.granularity.trailing_zeros() - 8) as u8;
+    let eniw = ways.trailing_zeros() as u8;
 
     // 5. HDM decoders: endpoint first, then host bridge (commit order
     // matters on real hardware: leaf before root).
-    commit_decoder(p, component_block, cfmws.base_hpa, map_size)?;
-    commit_decoder(p, chbs.base, cfmws.base_hpa, map_size)?;
+    commit_decoder(p, component_block, cfmws.base_hpa, map_size, ig, eniw)?;
+    commit_decoder(p, chbs.base, cfmws.base_hpa, map_size, ig, eniw)?;
 
     Ok(CxlMemdev {
         bdf: ep.bdf,
@@ -200,8 +252,13 @@ pub fn bind(
         capacity,
         hpa_base: cfmws.base_hpa,
         hpa_size: map_size,
+        window_ways: ways,
+        window_granularity: cfmws.granularity,
+        window_arith: cfmws.arith,
+        position,
         component_block,
         device_block,
         hb_component_block: chbs.base,
+        hb_uid: chbs.uid,
     })
 }

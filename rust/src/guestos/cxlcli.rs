@@ -15,8 +15,12 @@ use super::cxl_driver::{mailbox_command, CxlMemdev};
 use super::numa::{MemPolicy, NumaNode, PageAlloc};
 use super::Platform;
 
-/// `cxl list` — JSON-ish description of the bound memdev.
-pub fn cxl_list(p: &mut dyn Platform, md: &CxlMemdev) -> Result<String> {
+/// `cxl list` — JSON-ish description of one bound memdev (`mem{idx}`).
+pub fn cxl_list(
+    p: &mut dyn Platform,
+    md: &CxlMemdev,
+    idx: usize,
+) -> Result<String> {
     let (code, resp) =
         mailbox_command(p, md.device_block, opcode::GET_PARTITION_INFO, &[])?;
     if code != retcode::SUCCESS {
@@ -24,9 +28,18 @@ pub fn cxl_list(p: &mut dyn Platform, md: &CxlMemdev) -> Result<String> {
     }
     let vol = u64::from_le_bytes(resp[0..8].try_into().unwrap()) * CAP_MULTIPLE;
     Ok(format!(
-        "{{\"memdev\":\"mem0\",\"pci\":\"{}\",\"serial\":\"{:#x}\",\
-         \"ram_size\":{},\"volatile\":{},\"host_window\":\"{:#x}\"}}",
-        md.bdf, md.serial, md.capacity, vol, md.hpa_base
+        "{{\"memdev\":\"mem{}\",\"pci\":\"{}\",\"serial\":\"{:#x}\",\
+         \"ram_size\":{},\"volatile\":{},\"host_window\":\"{:#x}\",\
+         \"interleave\":{{\"ways\":{},\"granularity\":{},\"position\":{}}}}}",
+        idx,
+        md.bdf,
+        md.serial,
+        md.capacity,
+        vol,
+        md.hpa_base,
+        md.window_ways,
+        md.window_granularity,
+        md.position
     ))
 }
 
@@ -38,14 +51,26 @@ pub struct CxlRegion {
     pub node: u32,
 }
 
-/// `cxl create-region -t ram` — carve a RAM region out of the memdev's
-/// HDM-decoded window. `size` of 0 means "whole window".
+/// `cxl create-region -t ram` — assemble a RAM region out of the
+/// memdevs decoded into one interleave-set window (an SLD region passes
+/// a single-element slice). `size` of 0 means "whole window".
 pub fn cxl_create_region(
     p: &mut dyn Platform,
-    md: &CxlMemdev,
+    group: &[&CxlMemdev],
     size: u64,
     node: u32,
 ) -> Result<CxlRegion> {
+    let md = *group.first().context("region needs at least one memdev")?;
+    if group.iter().any(|m| m.hpa_base != md.hpa_base) {
+        bail!("region members must share one window");
+    }
+    if group.len() != md.window_ways {
+        bail!(
+            "window is {}-way but {} memdevs were assembled",
+            md.window_ways,
+            group.len()
+        );
+    }
     let size = if size == 0 { md.hpa_size } else { size };
     if size > md.hpa_size {
         bail!(
@@ -53,11 +78,13 @@ pub fn cxl_create_region(
             md.hpa_size
         );
     }
-    // Sanity-check the device still responds (health check).
-    let (code, _) =
-        mailbox_command(p, md.device_block, opcode::GET_HEALTH_INFO, &[])?;
-    if code != retcode::SUCCESS {
-        bail!("device unhealthy: {code:#x}");
+    // Sanity-check every member still responds (health check).
+    for m in group {
+        let (code, _) =
+            mailbox_command(p, m.device_block, opcode::GET_HEALTH_INFO, &[])?;
+        if code != retcode::SUCCESS {
+            bail!("device {} unhealthy: {code:#x}", m.bdf);
+        }
     }
     Ok(CxlRegion { base: md.hpa_base, size, node })
 }

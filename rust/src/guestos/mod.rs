@@ -56,9 +56,13 @@ pub enum ProgModel {
 pub struct GuestOs {
     pub acpi: AcpiInfo,
     pub pci_devs: Vec<PciDev>,
-    pub memdev: Option<CxlMemdev>,
+    /// Every bound expander, in host-bridge UID order (`mem0`, `mem1`…).
+    pub memdevs: Vec<CxlMemdev>,
+    /// One region per interleave-set window, in window order.
+    pub regions: Vec<CxlRegion>,
     pub alloc: PageAlloc,
-    pub cxl_node: Option<u32>,
+    /// zNUMA node ids onlined for the regions (empty in flat mode).
+    pub cxl_nodes: Vec<u32>,
     pub boot_log: Vec<String>,
 }
 
@@ -108,7 +112,8 @@ impl GuestOs {
         // --- PCIe enumeration --------------------------------------------
         let (ecam, _b0, b1) = acpi.ecam.context("no MCFG/ECAM")?;
         // BAR window: host bridge _CRS second window, minus the CHBS
-        // block the BIOS reserved at its base.
+        // blocks the BIOS reserved at its base (one per CXL bridge,
+        // discovered from their _CRS entries).
         let hb = acpi
             .devices
             .iter()
@@ -116,55 +121,98 @@ impl GuestOs {
             .context("no PCIe host bridge in DSDT")?;
         let (mmio_base, mmio_size) =
             *hb.crs.get(1).context("host bridge lacks MMIO window")?;
+        let reserved_end = acpi
+            .chbs
+            .iter()
+            .filter(|c| c.base >= mmio_base)
+            .map(|c| c.base + c.length)
+            .fold(mmio_base + layout::CHBS_SIZE, u64::max);
         let mut bar_alloc = MmioAllocator::new(
-            mmio_base + layout::CHBS_SIZE,
-            mmio_size - layout::CHBS_SIZE,
+            reserved_end,
+            mmio_base + mmio_size - reserved_end,
         );
         let pci_devs = pci_scan::enumerate(p, ecam, b1, &mut bar_alloc);
         log.push(format!("pci: {} functions enumerated", pci_devs.len()));
 
         // --- CXL driver -----------------------------------------------------
-        let memdev = match cxl_driver::bind(p, &acpi, &pci_devs) {
-            Ok(md) => {
-                log.push(format!(
-                    "cxl: mem0 bound at {} — {} MiB, window {:#x}",
-                    md.bdf,
-                    md.capacity >> 20,
-                    md.hpa_base
-                ));
-                Some(md)
+        let memdevs = match cxl_driver::bind_all(p, &acpi, &pci_devs) {
+            Ok(mds) => {
+                for (i, md) in mds.iter().enumerate() {
+                    log.push(format!(
+                        "cxl: mem{i} bound at {} — {} MiB, window {:#x} \
+                         ({}-way @ {} B, slot {})",
+                        md.bdf,
+                        md.capacity >> 20,
+                        md.hpa_base,
+                        md.window_ways,
+                        md.window_granularity,
+                        md.position
+                    ));
+                }
+                mds
             }
             Err(e) => {
                 log.push(format!("cxl: no memdev ({e})"));
-                None
+                Vec::new()
             }
         };
 
         // --- region creation + onlining ------------------------------------
-        let mut cxl_node = None;
-        if let Some(md) = &memdev {
+        // Group memdevs by window: each interleave set becomes one
+        // region. Its NUMA domain comes from the SRAT entry covering
+        // the window base — the same association Linux derives.
+        let mut windows: Vec<u64> = memdevs.iter().map(|m| m.hpa_base).collect();
+        windows.sort_unstable();
+        windows.dedup();
+        let mut regions = Vec::new();
+        let mut cxl_nodes = Vec::new();
+        for base in windows {
+            let group: Vec<&CxlMemdev> =
+                memdevs.iter().filter(|m| m.hpa_base == base).collect();
+            let domain = acpi
+                .mem_affinity
+                .iter()
+                .find(|m| m.base == base)
+                .map(|m| m.domain)
+                .context("window has no SRAT domain")?;
             match model {
                 ProgModel::Znuma => {
-                    let region = cxlcli::cxl_create_region(p, md, 0, 1)?;
+                    let region =
+                        cxlcli::cxl_create_region(p, &group, 0, domain)?;
                     let id = cxlcli::online_region(&mut alloc, &region)?;
-                    cxl_node = Some(id);
+                    cxl_nodes.push(id);
                     log.push(format!(
-                        "cxl-cli: region onlined as zNUMA node {id}"
+                        "cxl-cli: region @{base:#x} ({} memdevs) onlined \
+                         as zNUMA node {id}",
+                        group.len()
                     ));
+                    regions.push(region);
                 }
                 ProgModel::Flat => {
-                    let region = cxlcli::cxl_create_region(p, md, 0, 0)?;
+                    let region =
+                        cxlcli::cxl_create_region(p, &group, 0, 0)?;
                     cxlcli::online_flat(&mut alloc, &region)?;
-                    log.push("cxl-cli: region onlined in flat mode".into());
+                    log.push(format!(
+                        "cxl-cli: region @{base:#x} onlined in flat mode"
+                    ));
+                    regions.push(region);
                 }
             }
         }
 
-        Ok(GuestOs { acpi, pci_devs, memdev, alloc, cxl_node, boot_log: log })
+        Ok(GuestOs {
+            acpi,
+            pci_devs,
+            memdevs,
+            regions,
+            alloc,
+            cxl_nodes,
+            boot_log: log,
+        })
     }
 
-    /// The zNUMA node id, if one was onlined.
+    /// The first zNUMA node id, if one was onlined.
     pub fn znuma_node(&self) -> Option<u32> {
-        self.cxl_node
+        self.cxl_nodes.first().copied()
     }
 }

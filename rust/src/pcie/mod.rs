@@ -25,15 +25,24 @@ pub mod ids {
     pub const CLASS_CXL_MEM: [u8; 3] = [0x05, 0x02, 0x10];
 }
 
-/// Build the standard topology used by the simulator:
-/// bus 0: dev 0 = host bridge (RC), dev 1 = CXL root port (bridge to bus 1)
-/// bus 1: dev 0 = CXL Type-3 memory expander endpoint.
-/// The caller (machine builder) then adds DVSECs/BARs to the endpoint.
-pub fn build_topology(ecam: &mut Ecam) -> (Bdf, Bdf, Bdf) {
+/// Build an N-expander topology:
+/// bus 0: dev 0 = host bridge (RC), dev 1+i = CXL root port i (a type-1
+/// bridge to bus 1+i); bus 1+i: dev 0 = CXL Type-3 expander endpoint i.
+/// Every endpoint gets a distinct BDF and its own 4 KiB config space;
+/// the caller (machine builder) then adds DVSECs/BARs per endpoint.
+pub fn build_topology_n(
+    ecam: &mut Ecam,
+    n: usize,
+) -> (Bdf, Vec<Bdf>, Vec<Bdf>) {
+    assert!(n >= 1, "need at least one expander");
+    assert!(
+        n < ecam.buses as usize,
+        "ECAM window has {} buses; {} expanders need {}",
+        ecam.buses,
+        n,
+        n + 1
+    );
     let host_bridge = Bdf::new(0, 0, 0);
-    let root_port = Bdf::new(0, 1, 0);
-    let endpoint = Bdf::new(1, 0, 0);
-
     let hb = ConfigSpace::endpoint(
         ids::VENDOR_SIM,
         0x0C00,
@@ -41,20 +50,35 @@ pub fn build_topology(ecam: &mut Ecam) -> (Bdf, Bdf, Bdf) {
     );
     ecam.attach(host_bridge, hb);
 
-    let mut rp = ConfigSpace::bridge(ids::VENDOR_SIM, ids::DEV_ROOT_PORT);
-    rp.w8(config_space::off::PRIMARY_BUS, 0);
-    rp.w8(config_space::off::SECONDARY_BUS, 1);
-    rp.w8(config_space::off::SUBORDINATE_BUS, 1);
-    ecam.attach(root_port, rp);
+    let mut root_ports = Vec::with_capacity(n);
+    let mut endpoints = Vec::with_capacity(n);
+    for i in 0..n {
+        let bus = (1 + i) as u8;
+        let root_port = Bdf::new(0, bus, 0);
+        let mut rp =
+            ConfigSpace::bridge(ids::VENDOR_SIM, ids::DEV_ROOT_PORT);
+        rp.w8(config_space::off::PRIMARY_BUS, 0);
+        rp.w8(config_space::off::SECONDARY_BUS, bus);
+        rp.w8(config_space::off::SUBORDINATE_BUS, bus);
+        ecam.attach(root_port, rp);
 
-    let ep = ConfigSpace::endpoint(
-        ids::VENDOR_CXL_DEV,
-        ids::DEV_CXL_MEMDEV,
-        ids::CLASS_CXL_MEM,
-    );
-    ecam.attach(endpoint, ep);
+        let endpoint = Bdf::new(bus, 0, 0);
+        let ep = ConfigSpace::endpoint(
+            ids::VENDOR_CXL_DEV,
+            ids::DEV_CXL_MEMDEV,
+            ids::CLASS_CXL_MEM,
+        );
+        ecam.attach(endpoint, ep);
+        root_ports.push(root_port);
+        endpoints.push(endpoint);
+    }
+    (host_bridge, root_ports, endpoints)
+}
 
-    (host_bridge, root_port, endpoint)
+/// Single-expander convenience wrapper (the original topology).
+pub fn build_topology(ecam: &mut Ecam) -> (Bdf, Bdf, Bdf) {
+    let (hb, rps, eps) = build_topology_n(ecam, 1);
+    (hb, rps[0], eps[0])
 }
 
 #[cfg(test)]
@@ -81,5 +105,23 @@ mod tests {
         let c = e.function(rp).unwrap();
         assert_eq!(c.r8(off::SECONDARY_BUS), 1);
         assert_eq!(c.r8(off::SUBORDINATE_BUS), 1);
+    }
+
+    #[test]
+    fn n_way_topology_assigns_distinct_buses() {
+        let mut e = Ecam::new(0xE000_0000, 8);
+        let (hb, rps, eps) = build_topology_n(&mut e, 3);
+        assert_eq!(e.functions().count(), 1 + 3 + 3);
+        assert!(e.function(hb).is_some());
+        for (i, (rp, ep)) in rps.iter().zip(&eps).enumerate() {
+            let bus = (1 + i) as u8;
+            assert_eq!(ep.bus, bus);
+            assert_eq!(ep.dev, 0);
+            let c = e.function(*rp).unwrap();
+            assert!(c.is_bridge());
+            assert_eq!(c.r8(off::SECONDARY_BUS), bus);
+            let epc = e.function(*ep).unwrap();
+            assert_eq!(epc.r8(off::CLASS_BASE), 0x05);
+        }
     }
 }

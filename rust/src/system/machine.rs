@@ -8,10 +8,10 @@ use crate::bus::Bus;
 use crate::cache::prefetch::{PrefetchBook, StridePrefetcher};
 use crate::cache::{Access, CacheArray, Directory, MesiState, MshrAlloc,
                    MshrFile, Victim};
-use crate::config::{CxlAttach, SimConfig};
+use crate::config::{CxlAttach, InterleaveArith, SimConfig};
 use crate::cpu::{Core, WlOp};
 use crate::cxl::regs::ComponentRegs;
-use crate::cxl::{CxlDevice, CxlRootComplex};
+use crate::cxl::{CxlDevice, CxlRootComplex, HdmWindow};
 use crate::guestos::{AddressSpace, GuestOs, MemPolicy, ProgModel};
 use crate::mem::{MemCtrl, PhysMem};
 use crate::pcie::{self, config_space as cs, Bdf, Ecam};
@@ -57,6 +57,10 @@ pub struct MachineStats {
     pub coherence_invals: Counter,
     pub writebacks_dram: Counter,
     pub writebacks_cxl: Counter,
+    /// Per-device line fills served (indexed by device).
+    pub cxl_dev_reads: Vec<Counter>,
+    /// Per-device write-backs absorbed.
+    pub cxl_dev_writebacks: Vec<Counter>,
 }
 
 /// End-of-run digest used by benches and examples.
@@ -70,6 +74,8 @@ pub struct RunSummary {
     pub l2_miss_rate: f64,
     pub dram_accesses: u64,
     pub cxl_accesses: u64,
+    /// Line fills per expander device.
+    pub cxl_dev_fills: Vec<u64>,
     pub avg_lat_dram_ns: f64,
     pub avg_lat_cxl_ns: f64,
     pub m2s_req: u64,
@@ -83,11 +89,14 @@ pub struct Machine {
     pub cfg: SimConfig,
     pub mem: PhysMem,
     pub ecam: Ecam,
-    pub ep_bdf: Bdf,
+    /// Endpoint BDFs, one per expander device.
+    pub ep_bdfs: Vec<Bdf>,
     pub bios: BiosInfo,
-    pub hb_component: ComponentRegs,
+    /// Host-bridge component blocks, one per device.
+    pub hb_components: Vec<ComponentRegs>,
     pub rc: CxlRootComplex,
-    pub cxl_dev: CxlDevice,
+    /// Expander device models, indexed like `ep_bdfs`.
+    pub cxl_devs: Vec<CxlDevice>,
     pub guest: Option<GuestOs>,
 
     pub cores: Vec<Core>,
@@ -108,6 +117,9 @@ pub struct Machine {
     next_req: ReqId,
     l1_lat: Tick,
     l2_lat: Tick,
+    /// MemBus-baseline fixed protocol adder per device (pack + unpack
+    /// both ways + wire), precomputed so the hot path is an index.
+    dev_fixed_ticks: Vec<Tick>,
     fault_ticks: Tick,
     pub prefetcher: Option<StridePrefetcher>,
     pub pf_book: PrefetchBook,
@@ -123,14 +135,17 @@ impl Machine {
         let bios = bios::build(&cfg, &mut mem);
 
         let mut ecam = Ecam::new(bios.ecam_base, layout::ECAM_BUSES);
-        let (_hb, _rp, ep_bdf) = pcie::build_topology(&mut ecam);
-        {
+        let n_dev = cfg.cxl.devices;
+        let (_hb, _rps, ep_bdfs) =
+            pcie::build_topology_n(&mut ecam, n_dev);
+        for (i, &ep_bdf) in ep_bdfs.iter().enumerate() {
+            let dev_size = cfg.cxl.device(i).mem_size;
             let epc = ecam.function_mut(ep_bdf).unwrap();
             epc.add_bar64(0, 1 << 16); // component registers
             epc.add_bar64(2, 1 << 12); // device registers (mailbox)
             epc.add_dvsec(
                 cs::DVSEC_CXL_DEVICE,
-                &crate::cxl::regs::dvsec_payload::cxl_device(cfg.cxl.mem_size),
+                &crate::cxl::regs::dvsec_payload::cxl_device(dev_size),
             );
             epc.add_dvsec(
                 cs::DVSEC_GPF_DEVICE,
@@ -159,11 +174,22 @@ impl Machine {
         let iobus = Bus::new("iobus", cfg.iobus_lat_ns, cfg.iobus_bw_gbps, 1);
         let dram = MemCtrl::new(&cfg.sys_dram, 64);
         let rc = CxlRootComplex::new(&cfg.cxl);
-        let cxl_dev = CxlDevice::new(&cfg.cxl, 0xC0FFEE);
-        let hb_component = ComponentRegs::new(1);
+        let cxl_devs: Vec<CxlDevice> = (0..n_dev)
+            .map(|i| CxlDevice::new_at(&cfg.cxl, i, 0xC0FFEE + i as u64))
+            .collect();
+        let hb_components =
+            (0..n_dev).map(|_| ComponentRegs::new(1)).collect();
 
         let l1_lat = ns_to_ticks(cfg.l1.lat_cycles as f64 * cfg.cycle_ns());
         let l2_lat = ns_to_ticks(cfg.l2.lat_cycles as f64 * cfg.cycle_ns());
+        let dev_fixed_ticks = (0..n_dev)
+            .map(|i| {
+                ns_to_ticks(
+                    2.0 * (cfg.cxl.pkt_lat_ns + cfg.cxl.depkt_lat_ns)
+                        + 2.0 * cfg.cxl.device(i).link_lat_ns,
+                )
+            })
+            .collect();
         let prefetcher = cfg
             .l2
             .prefetch
@@ -172,14 +198,19 @@ impl Machine {
             issue_scheduled: vec![false; cfg.cores],
             pending_op: vec![None; cfg.cores],
             spaces: Vec::new(),
+            stats: MachineStats {
+                cxl_dev_reads: vec![Counter::default(); n_dev],
+                cxl_dev_writebacks: vec![Counter::default(); n_dev],
+                ..Default::default()
+            },
             cfg,
             mem,
             ecam,
-            ep_bdf,
+            ep_bdfs,
             bios,
-            hb_component,
+            hb_components,
             rc,
-            cxl_dev,
+            cxl_devs,
             guest: None,
             cores,
             l1s,
@@ -195,10 +226,10 @@ impl Machine {
             next_req: 1,
             l1_lat,
             l2_lat,
+            dev_fixed_ticks,
             fault_ticks: ns_to_ticks(300.0),
             prefetcher,
             pf_book: PrefetchBook::default(),
-            stats: MachineStats::default(),
         })
     }
 
@@ -206,18 +237,39 @@ impl Machine {
     pub fn boot(&mut self, model: ProgModel) -> Result<()> {
         let mut world = MmioWorld {
             ecam: &mut self.ecam,
-            cxl_dev: &mut self.cxl_dev,
-            hb_component: &mut self.hb_component,
+            cxl_devs: &mut self.cxl_devs,
+            hb_components: &mut self.hb_components,
             chbs_base: layout::CHBS_BASE,
-            chbs_size: layout::CHBS_SIZE,
-            ep_bdf: self.ep_bdf,
+            chbs_stride: layout::CHBS_SIZE,
+            ep_bdfs: &self.ep_bdfs,
         };
         let guest =
             GuestOs::boot(&mut world, &self.mem, self.cfg.page_size, model)
                 .context("guest boot failed")?;
-        // Mirror committed host-bridge decoders into the RC's routing.
-        for (base, size) in self.hb_component.committed_ranges() {
-            self.rc.set_hdm_range(base, size);
+        // Mirror the committed host-bridge decoders into the RC's
+        // interleave decoder: one window per set, carrying the set's
+        // member devices in CFMWS slot order, provided every member's
+        // bridge actually committed.
+        let xor = self.cfg.cxl.interleave_arith == InterleaveArith::Xor;
+        let windows = self.bios.cxl_windows.clone();
+        for (set, &(base, size)) in windows.iter().enumerate() {
+            let members: Vec<usize> =
+                self.cfg.cxl.set_members(set).collect();
+            let all_committed = members.iter().all(|&i| {
+                self.hb_components[i]
+                    .committed_ranges()
+                    .iter()
+                    .any(|&(b, s)| b == base && s == size)
+            });
+            if all_committed {
+                self.rc.add_window(HdmWindow {
+                    base,
+                    size,
+                    granularity: self.cfg.cxl.interleave_granularity,
+                    targets: members,
+                    xor,
+                });
+            }
         }
         self.guest = Some(guest);
         Ok(())
@@ -460,31 +512,45 @@ impl Machine {
             // Baseline (CXL-DMSim/SimCXL style): expander hangs off the
             // membus; protocol costs collapse into a fixed adder (both
             // directions' pack+unpack + wire), no flit framing, no
-            // credits, no IOBus contention.
+            // credits, no IOBus contention. The interleave decode still
+            // applies — the baseline shortcut is about the attach point,
+            // not the window routing.
             let t = self.membus.transfer(now, 16);
-            let fixed = ns_to_ticks(
-                2.0 * (self.cfg.cxl.pkt_lat_ns + self.cfg.cxl.depkt_lat_ns)
-                    + 2.0 * self.cfg.cxl.link_lat_ns,
+            let (dev, dpa) = self
+                .rc
+                .route_dpa(pa)
+                .unwrap_or((0, pa - self.bios.cxl_window_base));
+            let fixed = self.dev_fixed_ticks[dev];
+            let done = self.cxl_devs[dev].media.access(
+                t + fixed,
+                dpa,
+                self.cfg.l1.line,
+                false,
             );
-            let dpa = pa - self.bios.cxl_window_base;
-            let done =
-                self.cxl_dev.media.access(t + fixed, dpa, self.cfg.l1.line, false);
             self.stats.cxl_reads.inc();
+            self.stats.cxl_dev_reads[dev].inc();
             let back = self.membus.transfer(done, 64);
             self.queue
                 .schedule_at(back, Ev::LineFill { core, line_pa: pa });
             return;
         }
-        // Architecturally correct path: membus -> IOBus -> RC -> link.
+        // Architecturally correct path: membus -> IOBus -> RC interleave
+        // decode -> that device's link. On the IOBus attach
+        // `is_cxl_addr` is exactly `rc.routes(pa)`, so the decode always
+        // resolves; keep device 0 as the pre-commit fallback (never a
+        // dropped request) should a future caller widen the predicate.
         let t = self.membus.transfer(now, 16);
         let t = self.iobus.transfer(t, 16);
+        let dev = self.rc.route(pa).unwrap_or(0);
         let host_pkt =
             Packet::new(0, MemCmd::ReadReq, pa & !(self.cfg.l1.line - 1), 64, core, now);
-        match self.rc.packetize_and_send(t, &host_pkt) {
+        match self.rc.packetize_and_send(t, &host_pkt, dev) {
             Ok((m2s, arrival)) => {
                 self.stats.cxl_reads.inc();
-                let (resp, ready) = self.cxl_dev.handle_m2s(arrival, &m2s);
-                let host_done = self.rc.receive_s2m(ready, &resp, now);
+                self.stats.cxl_dev_reads[dev].inc();
+                let (resp, ready) =
+                    self.cxl_devs[dev].handle_m2s(arrival, &m2s);
+                let host_done = self.rc.receive_s2m(ready, &resp, now, dev);
                 let t = self.iobus.transfer(host_done, 64);
                 let back = self.membus.transfer(t, 64);
                 self.queue
@@ -572,10 +638,21 @@ impl Machine {
             self.stats.writebacks_cxl.inc();
             if self.cfg.cxl.attach == CxlAttach::MemBus {
                 let t = self.membus.transfer(now, 64 + 16);
-                let dpa = pa - self.bios.cxl_window_base;
-                self.cxl_dev.media.access(t, dpa, self.cfg.l1.line, true);
+                let (dev, dpa) = self
+                    .rc
+                    .route_dpa(pa)
+                    .unwrap_or((0, pa - self.bios.cxl_window_base));
+                self.stats.cxl_dev_writebacks[dev].inc();
+                self.cxl_devs[dev].media.access(
+                    t,
+                    dpa,
+                    self.cfg.l1.line,
+                    true,
+                );
                 return;
             }
+            let Some(dev) = self.rc.route(pa) else { return };
+            self.stats.cxl_dev_writebacks[dev].inc();
             let t = self.membus.transfer(now, 64 + 16);
             let t = self.iobus.transfer(t, 64 + 16);
             let host_pkt = Packet::new(
@@ -586,11 +663,13 @@ impl Machine {
                 0,
                 now,
             );
-            if let Ok((m2s, arrival)) = self.rc.packetize_and_send(t, &host_pkt)
+            if let Ok((m2s, arrival)) =
+                self.rc.packetize_and_send(t, &host_pkt, dev)
             {
-                let (resp, ready) = self.cxl_dev.handle_m2s(arrival, &m2s);
+                let (resp, ready) =
+                    self.cxl_devs[dev].handle_m2s(arrival, &m2s);
                 // NDR completion retires the credit.
-                self.rc.receive_s2m(ready, &resp, now);
+                self.rc.receive_s2m(ready, &resp, now, dev);
             }
             // On credit exhaustion the posted write is dropped from the
             // timing model (data is already functionally in physmem);
@@ -797,7 +876,38 @@ impl Machine {
         let l1_hits: u64 = self.l1s.iter().map(|l| l.stats.hits.get()).sum();
         let l1_miss: u64 =
             self.l1s.iter().map(|l| l.stats.misses.get()).sum();
-        let link = &self.rc.link.stats;
+        // Media latency averaged over every device's samples.
+        let (media_sum, media_n) = self
+            .cxl_devs
+            .iter()
+            .fold((0.0f64, 0u64), |(s, n), d| {
+                let st = &d.stats.media_latency.stats;
+                (s + st.sum, n + st.n)
+            });
+        let media_mean =
+            if media_n == 0 { 0.0 } else { media_sum / media_n as f64 };
+        // Protocol adder per fill, weighted by each device's share of
+        // the traffic (per-device link latency may differ).
+        let total_fills: u64 =
+            self.stats.cxl_dev_reads.iter().map(|c| c.get()).sum();
+        let proto_ns = if total_fills == 0 {
+            2.0 * (self.cfg.cxl.pkt_lat_ns + self.cfg.cxl.depkt_lat_ns)
+                + 2.0 * self.cfg.cxl.link_lat_ns
+        } else {
+            self.stats
+                .cxl_dev_reads
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    c.get() as f64
+                        * (2.0
+                            * (self.cfg.cxl.pkt_lat_ns
+                                + self.cfg.cxl.depkt_lat_ns)
+                            + 2.0 * self.cfg.cxl.device(i).link_lat_ns)
+                })
+                .sum::<f64>()
+                / total_fills as f64
+        };
         RunSummary {
             ticks,
             seconds,
@@ -811,16 +921,19 @@ impl Machine {
             l2_miss_rate: self.l2.stats.miss_rate(),
             dram_accesses: self.stats.dram_reads.get(),
             cxl_accesses: self.stats.cxl_reads.get(),
+            cxl_dev_fills: self
+                .stats
+                .cxl_dev_reads
+                .iter()
+                .map(|c| c.get())
+                .collect(),
             avg_lat_dram_ns: self.dram.timing.stats.latency.stats.mean()
                 / 1000.0,
-            avg_lat_cxl_ns: self.cxl_dev.stats.media_latency.stats.mean()
-                / 1000.0
-                + 2.0 * (self.cfg.cxl.pkt_lat_ns + self.cfg.cxl.depkt_lat_ns)
-                + 2.0 * self.cfg.cxl.link_lat_ns,
-            m2s_req: link.m2s_req.get(),
-            m2s_rwd: link.m2s_rwd.get(),
-            s2m_ndr: link.s2m_ndr.get(),
-            s2m_drs: link.s2m_drs.get(),
+            avg_lat_cxl_ns: media_mean / 1000.0 + proto_ns,
+            m2s_req: self.rc.agg_link(|s| s.m2s_req.get()),
+            m2s_rwd: self.rc.agg_link(|s| s.m2s_rwd.get()),
+            s2m_ndr: self.rc.agg_link(|s| s.s2m_ndr.get()),
+            s2m_drs: self.rc.agg_link(|s| s.s2m_drs.get()),
             events: self.queue.processed(),
         }
     }
@@ -852,7 +965,17 @@ impl Machine {
         self.iobus.dump("iobus", &mut d);
         self.dram.timing.dump("dram", &mut d);
         self.rc.dump("cxl.rc", &mut d);
-        self.cxl_dev.dump("cxl.dev", &mut d);
+        for (i, dev) in self.cxl_devs.iter().enumerate() {
+            dev.dump(&format!("cxl.dev{i}"), &mut d);
+            d.counter(
+                &format!("cxl.dev{i}.fills"),
+                &self.stats.cxl_dev_reads[i],
+            );
+            d.counter(
+                &format!("cxl.dev{i}.writebacks"),
+                &self.stats.cxl_dev_writebacks[i],
+            );
+        }
         if let Some(p) = &self.prefetcher {
             crate::cache::prefetch::dump(p, "l2.pf", &mut d);
         }
@@ -892,9 +1015,60 @@ mod tests {
         assert_eq!(g.znuma_node(), Some(1));
         assert!(g.alloc.nodes[1].online);
         assert!(!g.alloc.nodes[1].has_cpus);
-        assert!(g.memdev.is_some());
+        assert_eq!(g.memdevs.len(), 1);
         // RC routing mirrors the committed decoder.
         assert!(m.rc.routes(m.bios.cxl_window_base));
+    }
+
+    #[test]
+    fn two_device_interleave_routes_across_both() {
+        let mut cfg = small_cfg();
+        cfg.cxl.devices = 2;
+        let mut m = booted(cfg);
+        let g = m.guest.as_ref().unwrap();
+        assert_eq!(g.memdevs.len(), 2);
+        assert_eq!(g.cxl_nodes, vec![1], "one interleaved zNUMA node");
+        assert_eq!(g.alloc.nodes[1].size, 512 << 20, "2 x 256 MiB window");
+        let wl = Stream::new(StreamKernel::Copy, 16384, 1);
+        m.attach_workloads(
+            vec![Box::new(wl)],
+            &MemPolicy::Bind { nodes: vec![1] },
+        )
+        .unwrap();
+        let s = m.run(None);
+        assert!(s.cxl_accesses > 0);
+        assert_eq!(s.cxl_dev_fills.len(), 2);
+        assert!(
+            s.cxl_dev_fills.iter().all(|&f| f > 0),
+            "every device must serve fills: {:?}",
+            s.cxl_dev_fills
+        );
+        // 256 B granules over 64 B lines: near-even split.
+        let (a, b) = (s.cxl_dev_fills[0] as f64, s.cxl_dev_fills[1] as f64);
+        assert!((a / b - 1.0).abs() < 0.2, "split {a} vs {b}");
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn separate_windows_expose_separate_znuma_nodes() {
+        let mut cfg = small_cfg();
+        cfg.cxl.devices = 2;
+        cfg.cxl.interleave_ways = 1; // two single-device windows
+        let mut m = booted(cfg);
+        let g = m.guest.as_ref().unwrap();
+        assert_eq!(g.cxl_nodes, vec![1, 2]);
+        assert!(g.alloc.nodes[2].online && !g.alloc.nodes[2].has_cpus);
+        // Binding to node 2 exercises only device 1.
+        let wl = Stream::new(StreamKernel::Copy, 4096, 1);
+        m.attach_workloads(
+            vec![Box::new(wl)],
+            &MemPolicy::Bind { nodes: vec![2] },
+        )
+        .unwrap();
+        let s = m.run(None);
+        assert!(s.cxl_dev_fills[1] > 0);
+        assert_eq!(s.cxl_dev_fills[0], 0);
+        m.verify().unwrap();
     }
 
     #[test]

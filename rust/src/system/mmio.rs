@@ -3,9 +3,10 @@
 //!
 //! Routes:
 //!   * ECAM window -> per-function config spaces,
-//!   * CHBS block  -> host-bridge (RC) component registers,
-//!   * endpoint BARs (after assignment) -> device component / mailbox
-//!     blocks.
+//!   * CHBS blocks -> per-host-bridge (RC) component registers
+//!     (`chbs_base + i * chbs_stride` for host bridge `i`),
+//!   * endpoint BARs (after assignment) -> that device's component /
+//!     mailbox blocks.
 
 use crate::cxl::regs::ComponentRegs;
 use crate::cxl::CxlDevice;
@@ -14,39 +15,59 @@ use crate::pcie::{Bdf, Ecam};
 
 pub struct MmioWorld<'a> {
     pub ecam: &'a mut Ecam,
-    pub cxl_dev: &'a mut CxlDevice,
-    pub hb_component: &'a mut ComponentRegs,
+    /// One device model per endpoint, same order as `ep_bdfs`.
+    pub cxl_devs: &'a mut [CxlDevice],
+    /// One host-bridge component block per device.
+    pub hb_components: &'a mut [ComponentRegs],
     pub chbs_base: u64,
-    pub chbs_size: u64,
-    pub ep_bdf: Bdf,
+    /// Stride between consecutive CHBS blocks (= block size).
+    pub chbs_stride: u64,
+    pub ep_bdfs: &'a [Bdf],
+}
+
+/// A decoded MMIO target.
+enum Route {
+    Ecam(u64),
+    /// (host bridge index, offset)
+    Chbs(usize, u64),
+    /// (device index, offset) into BAR0 = component registers.
+    Bar0(usize, u64),
+    /// (device index, offset) into BAR2 = device/mailbox registers.
+    Bar2(usize, u64),
 }
 
 impl<'a> MmioWorld<'a> {
-    /// Resolve the endpoint's currently-programmed BARs (the guest may
-    /// have just written them through ECAM).
-    fn ep_bar(&self, idx: usize) -> Option<(u64, u64)> {
-        let cfg = self.ecam.function(self.ep_bdf)?;
+    /// Resolve endpoint `i`'s currently-programmed BAR (the guest may
+    /// have just written it through ECAM).
+    fn ep_bar(&self, i: usize, idx: usize) -> Option<(u64, u64)> {
+        let cfg = self.ecam.function(self.ep_bdfs[i])?;
         let base = cfg.bar_addr(idx)?;
         Some((base, cfg.bar_size(idx)))
     }
 
-    /// Route an address: 0 = ECAM, 1 = CHBS, 2 = BAR0 (component),
-    /// 3 = BAR2 (device block).
-    fn route(&self, addr: u64) -> Option<(u8, u64)> {
+    fn route(&self, addr: u64) -> Option<Route> {
         if self.ecam.contains(addr) {
-            return Some((0, addr));
+            return Some(Route::Ecam(addr));
         }
-        if addr >= self.chbs_base && addr < self.chbs_base + self.chbs_size {
-            return Some((1, addr - self.chbs_base));
+        let n = self.hb_components.len();
+        let chbs_end = self.chbs_base + self.chbs_stride * n as u64;
+        if addr >= self.chbs_base && addr < chbs_end {
+            let off = addr - self.chbs_base;
+            return Some(Route::Chbs(
+                (off / self.chbs_stride) as usize,
+                off % self.chbs_stride,
+            ));
         }
-        if let Some((b, s)) = self.ep_bar(0) {
-            if addr >= b && addr < b + s {
-                return Some((2, addr - b));
+        for i in 0..self.ep_bdfs.len() {
+            if let Some((b, s)) = self.ep_bar(i, 0) {
+                if addr >= b && addr < b + s {
+                    return Some(Route::Bar0(i, addr - b));
+                }
             }
-        }
-        if let Some((b, s)) = self.ep_bar(2) {
-            if addr >= b && addr < b + s {
-                return Some((3, addr - b));
+            if let Some((b, s)) = self.ep_bar(i, 2) {
+                if addr >= b && addr < b + s {
+                    return Some(Route::Bar2(i, addr - b));
+                }
             }
         }
         None
@@ -56,37 +77,43 @@ impl<'a> MmioWorld<'a> {
 impl<'a> Platform for MmioWorld<'a> {
     fn mmio_read32(&mut self, addr: u64) -> u32 {
         match self.route(addr) {
-            Some((0, a)) => self.ecam.mmio_read32(a),
-            Some((1, off)) => self.hb_component.read32(off),
-            Some((2, off)) => self.cxl_dev.mmio_read(0, off) as u32,
-            Some((3, off)) => {
+            Some(Route::Ecam(a)) => self.ecam.mmio_read32(a),
+            Some(Route::Chbs(i, off)) => self.hb_components[i].read32(off),
+            Some(Route::Bar0(i, off)) => {
+                self.cxl_devs[i].mmio_read(0, off) as u32
+            }
+            Some(Route::Bar2(i, off)) => {
                 // 32-bit view of the 64-bit device registers.
-                let v = self.cxl_dev.mmio_read(2, off & !7);
+                let v = self.cxl_devs[i].mmio_read(2, off & !7);
                 (v >> ((addr & 4) * 8)) as u32
             }
-            _ => 0xFFFF_FFFF,
+            None => 0xFFFF_FFFF,
         }
     }
 
     fn mmio_write32(&mut self, addr: u64, v: u32) {
         match self.route(addr) {
-            Some((0, a)) => self.ecam.mmio_write32(a, v),
-            Some((1, off)) => self.hb_component.write32(off, v),
-            Some((2, off)) => self.cxl_dev.mmio_write(0, off, v as u64),
-            Some((3, off)) => {
-                let old = self.cxl_dev.mmio_read(2, off & !7);
+            Some(Route::Ecam(a)) => self.ecam.mmio_write32(a, v),
+            Some(Route::Chbs(i, off)) => {
+                self.hb_components[i].write32(off, v)
+            }
+            Some(Route::Bar0(i, off)) => {
+                self.cxl_devs[i].mmio_write(0, off, v as u64)
+            }
+            Some(Route::Bar2(i, off)) => {
+                let old = self.cxl_devs[i].mmio_read(2, off & !7);
                 let sh = (addr & 4) * 8;
                 let nv =
                     (old & !(0xFFFF_FFFFu64 << sh)) | ((v as u64) << sh);
-                self.cxl_dev.mmio_write(2, off & !7, nv);
+                self.cxl_devs[i].mmio_write(2, off & !7, nv);
             }
-            _ => {}
+            None => {}
         }
     }
 
     fn mmio_read64(&mut self, addr: u64) -> u64 {
         match self.route(addr) {
-            Some((3, off)) => self.cxl_dev.mmio_read(2, off),
+            Some(Route::Bar2(i, off)) => self.cxl_devs[i].mmio_read(2, off),
             _ => {
                 let lo = self.mmio_read32(addr) as u64;
                 let hi = self.mmio_read32(addr + 4) as u64;
@@ -97,7 +124,9 @@ impl<'a> Platform for MmioWorld<'a> {
 
     fn mmio_write64(&mut self, addr: u64, v: u64) {
         match self.route(addr) {
-            Some((3, off)) => self.cxl_dev.mmio_write(2, off, v),
+            Some(Route::Bar2(i, off)) => {
+                self.cxl_devs[i].mmio_write(2, off, v)
+            }
             _ => {
                 self.mmio_write32(addr, v as u32);
                 self.mmio_write32(addr + 4, (v >> 32) as u32);
@@ -114,7 +143,7 @@ mod tests {
     use crate::cxl::regs::dev;
     use crate::pcie;
 
-    fn world() -> (Ecam, CxlDevice, ComponentRegs, Bdf) {
+    fn world() -> (Ecam, Vec<CxlDevice>, Vec<ComponentRegs>, Vec<Bdf>) {
         let cfg = SimConfig::default();
         let mut ecam = Ecam::new(layout::ECAM_BASE, layout::ECAM_BUSES);
         let (_, _, ep) = pcie::build_topology(&mut ecam);
@@ -124,24 +153,24 @@ mod tests {
         epc.add_bar64(2, 1 << 12);
         epc.assign_bar(0, 0xF010_0000);
         epc.assign_bar(2, 0xF012_0000);
-        let dev = CxlDevice::new(&cfg.cxl, 42);
-        let hb = ComponentRegs::new(1);
-        (ecam, dev, hb, ep)
+        let devs = vec![CxlDevice::new(&cfg.cxl, 42)];
+        let hbs = vec![ComponentRegs::new(1)];
+        (ecam, devs, hbs, vec![ep])
     }
 
     #[test]
     fn routes_all_four_surfaces() {
-        let (mut ecam, mut dev, mut hb, ep) = world();
+        let (mut ecam, mut devs, mut hbs, eps) = world();
         let mut w = MmioWorld {
             ecam: &mut ecam,
-            cxl_dev: &mut dev,
-            hb_component: &mut hb,
+            cxl_devs: &mut devs,
+            hb_components: &mut hbs,
             chbs_base: layout::CHBS_BASE,
-            chbs_size: layout::CHBS_SIZE,
-            ep_bdf: ep,
+            chbs_stride: layout::CHBS_SIZE,
+            ep_bdfs: &eps,
         };
         // ECAM: endpoint vendor id.
-        let vid = w.mmio_read32(layout::ECAM_BASE + ep.ecam_offset());
+        let vid = w.mmio_read32(layout::ECAM_BASE + eps[0].ecam_offset());
         assert_eq!(vid & 0xFFFF, pcie::ids::VENDOR_CXL_DEV as u32);
         // CHBS: capability header.
         assert_eq!(w.mmio_read32(layout::CHBS_BASE) & 0xFFFF, 0x0001);
@@ -155,19 +184,54 @@ mod tests {
 
     #[test]
     fn split_32bit_access_to_64bit_regs() {
-        let (mut ecam, mut dev, mut hb, ep) = world();
+        let (mut ecam, mut devs, mut hbs, eps) = world();
         let mut w = MmioWorld {
             ecam: &mut ecam,
-            cxl_dev: &mut dev,
-            hb_component: &mut hb,
+            cxl_devs: &mut devs,
+            hb_components: &mut hbs,
             chbs_base: layout::CHBS_BASE,
-            chbs_size: layout::CHBS_SIZE,
-            ep_bdf: ep,
+            chbs_stride: layout::CHBS_SIZE,
+            ep_bdfs: &eps,
         };
         let cmd = 0xF012_0000 + dev::MB_CMD;
         w.mmio_write32(cmd, 0x4000);
         w.mmio_write32(cmd + 4, 0x1);
         assert_eq!(w.mmio_read64(cmd), 0x1_0000_4000);
         assert_eq!(w.mmio_read32(cmd + 4), 1);
+    }
+
+    #[test]
+    fn second_device_surfaces_route_independently() {
+        let cfg = SimConfig::default();
+        let mut ecam = Ecam::new(layout::ECAM_BASE, layout::ECAM_BUSES);
+        let (_, _, eps) = pcie::build_topology_n(&mut ecam, 2);
+        for (i, ep) in eps.iter().enumerate() {
+            let epc = ecam.function_mut(*ep).unwrap();
+            epc.add_bar64(0, 1 << 16);
+            epc.add_bar64(2, 1 << 12);
+            epc.assign_bar(0, 0xF020_0000 + (i as u64) * 0x4_0000);
+            epc.assign_bar(2, 0xF022_0000 + (i as u64) * 0x4_0000);
+        }
+        let mut devs =
+            vec![CxlDevice::new(&cfg.cxl, 1), CxlDevice::new(&cfg.cxl, 2)];
+        let mut hbs = vec![ComponentRegs::new(1), ComponentRegs::new(1)];
+        let mut w = MmioWorld {
+            ecam: &mut ecam,
+            cxl_devs: &mut devs,
+            hb_components: &mut hbs,
+            chbs_base: layout::CHBS_BASE,
+            chbs_stride: layout::CHBS_SIZE,
+            ep_bdfs: &eps,
+        };
+        // Both CHBS blocks answer with the capability header.
+        assert_eq!(w.mmio_read32(layout::chbs_base(0)) & 0xFFFF, 0x0001);
+        assert_eq!(w.mmio_read32(layout::chbs_base(1)) & 0xFFFF, 0x0001);
+        // A doorbell ring on device 1's mailbox leaves device 0 idle.
+        let mb1 = 0xF022_0000 + 0x4_0000;
+        w.mmio_write64(mb1 + dev::MB_CMD, 0x4000);
+        w.mmio_write64(mb1 + dev::MB_CTRL, 1);
+        drop(w);
+        assert_eq!(devs[1].mailbox.commands_executed, 1);
+        assert_eq!(devs[0].mailbox.commands_executed, 0);
     }
 }

@@ -1,0 +1,167 @@
+//! ACPI publication integration tests (in the spirit of aero's
+//! `machine_acpi_publication`): read RSDP/XSDT/CEDT/SRAT straight out
+//! of guest physical memory after machine construction and verify
+//! signatures, header lengths and checksums for 1-, 2- and 4-device
+//! configurations. Nothing here uses the builder's return values beyond
+//! the fixed RSDP scan region — everything is discovered from bytes,
+//! like a real kernel.
+
+use cxlramsim::bios::layout;
+use cxlramsim::config::SimConfig;
+use cxlramsim::mem::PhysMem;
+use cxlramsim::system::Machine;
+
+fn checksum_ok(bytes: &[u8]) -> bool {
+    bytes.iter().fold(0u8, |a, b| a.wrapping_add(*b)) == 0
+}
+
+/// Scan the BIOS window for the RSDP, validating both checksums.
+fn find_rsdp(mem: &PhysMem) -> u64 {
+    let base = layout::RSDP_ADDR & !0xFFFF;
+    for off in (0..0x2_0000u64).step_by(16) {
+        let mut sig = [0u8; 8];
+        mem.read(base + off, &mut sig);
+        if &sig != b"RSD PTR " {
+            continue;
+        }
+        let addr = base + off;
+        let mut rsdp = vec![0u8; 36];
+        mem.read(addr, &mut rsdp);
+        assert!(checksum_ok(&rsdp[..20]), "RSDP v1 checksum");
+        assert!(checksum_ok(&rsdp), "RSDP extended checksum");
+        return addr;
+    }
+    panic!("RSDP not found in BIOS scan window");
+}
+
+/// Read one SDT: signature, length sanity, checksum.
+fn read_sdt(mem: &PhysMem, addr: u64) -> (String, Vec<u8>) {
+    let len = mem.read_u32(addr + 4) as usize;
+    assert!((36..1 << 20).contains(&len), "SDT length {len} at {addr:#x}");
+    let mut t = vec![0u8; len];
+    mem.read(addr, &mut t);
+    assert!(
+        checksum_ok(&t),
+        "checksum failed for {:?} at {addr:#x}",
+        &t[0..4]
+    );
+    (String::from_utf8_lossy(&t[0..4]).into_owned(), t)
+}
+
+fn machine(devices: usize) -> Machine {
+    let mut cfg = SimConfig::default();
+    cfg.cxl.devices = devices;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.sys_mem_size = 512 << 20;
+    Machine::new(cfg).unwrap()
+}
+
+fn walk(devices: usize) {
+    let m = machine(devices);
+    let rsdp_addr = find_rsdp(&m.mem);
+    let mut rsdp = vec![0u8; 36];
+    m.mem.read(rsdp_addr, &mut rsdp);
+    let xsdt_addr = u64::from_le_bytes(rsdp[24..32].try_into().unwrap());
+    let (sig, xsdt) = read_sdt(&m.mem, xsdt_addr);
+    assert_eq!(sig, "XSDT");
+
+    let mut seen = Vec::new();
+    let mut srat = None;
+    let mut cedt = None;
+    for chunk in xsdt[36..].chunks_exact(8) {
+        let addr = u64::from_le_bytes(chunk.try_into().unwrap());
+        let (sig, table) = read_sdt(&m.mem, addr);
+        match sig.as_str() {
+            "SRAT" => srat = Some(table.clone()),
+            "CEDT" => cedt = Some(table.clone()),
+            _ => {}
+        }
+        seen.push(sig);
+    }
+    for want in ["FACP", "APIC", "MCFG", "SRAT", "CEDT", "HMAT"] {
+        assert!(seen.contains(&want.to_string()), "missing {want}: {seen:?}");
+    }
+
+    // CEDT: one CHBS per device, ENIW matches the auto interleave.
+    let cedt = cedt.unwrap();
+    let mut i = 36;
+    let mut chbs = 0;
+    let mut cfmws = 0;
+    while i + 4 <= cedt.len() {
+        let len = u16::from_le_bytes(cedt[i + 2..i + 4].try_into().unwrap())
+            as usize;
+        assert!(len >= 4 && i + len <= cedt.len(), "CEDT record length");
+        match cedt[i] {
+            0 => {
+                assert_eq!(len, 32, "CHBS record length");
+                chbs += 1;
+            }
+            1 => {
+                let eniw = cedt[i + 24] as usize;
+                assert_eq!(1 << eniw, devices, "full-width auto interleave");
+                assert_eq!(len, 36 + 4 * devices, "CFMWS record length");
+                cfmws += 1;
+            }
+            _ => panic!("unknown CEDT record {}", cedt[i]),
+        }
+        i += len;
+    }
+    assert_eq!(chbs, devices);
+    assert_eq!(cfmws, 1, "power-of-two counts form one interleave set");
+
+    // SRAT: processor entries + DRAM domain + one hotplug CXL domain.
+    let srat = srat.unwrap();
+    let mut i = 36 + 12;
+    let mut mem_domains = Vec::new();
+    while i + 2 <= srat.len() {
+        let len = srat[i + 1] as usize;
+        assert!(len >= 2 && i + len <= srat.len());
+        if srat[i] == 1 {
+            let dom = u32::from_le_bytes(
+                srat[i + 2..i + 6].try_into().unwrap(),
+            );
+            let flags = u32::from_le_bytes(
+                srat[i + 28..i + 32].try_into().unwrap(),
+            );
+            mem_domains.push((dom, flags));
+        }
+        i += len;
+    }
+    assert_eq!(mem_domains.len(), 2);
+    assert_eq!(mem_domains[0], (0, 1), "DRAM domain enabled");
+    assert_eq!(mem_domains[1].0, 1, "CXL set domain");
+    assert_eq!(mem_domains[1].1 & 0b11, 0b11, "enabled + hotplug");
+}
+
+#[test]
+fn acpi_tables_valid_one_device() {
+    walk(1);
+}
+
+#[test]
+fn acpi_tables_valid_two_devices() {
+    walk(2);
+}
+
+#[test]
+fn acpi_tables_valid_four_devices() {
+    walk(4);
+}
+
+#[test]
+fn acpi_tables_valid_after_boot_too() {
+    // Booting must not corrupt the published tables (the guest only
+    // reads them; decoders live in MMIO, not in the ACPI pool).
+    let mut m = machine(2);
+    m.boot(cxlramsim::guestos::ProgModel::Znuma).unwrap();
+    let rsdp_addr = find_rsdp(&m.mem);
+    let mut rsdp = vec![0u8; 36];
+    m.mem.read(rsdp_addr, &mut rsdp);
+    let xsdt_addr = u64::from_le_bytes(rsdp[24..32].try_into().unwrap());
+    let (sig, xsdt) = read_sdt(&m.mem, xsdt_addr);
+    assert_eq!(sig, "XSDT");
+    for chunk in xsdt[36..].chunks_exact(8) {
+        let addr = u64::from_le_bytes(chunk.try_into().unwrap());
+        read_sdt(&m.mem, addr); // signature + checksum assertions inside
+    }
+}

@@ -69,14 +69,48 @@ fn bars_land_inside_the_dsdt_window() {
 fn hdm_decoders_committed_on_both_ends() {
     let mut m = Machine::new(SimConfig::default()).unwrap();
     m.boot(ProgModel::Znuma).unwrap();
-    assert!(m.cxl_dev.component.decoder_committed(0));
-    assert!(m.hb_component.decoder_committed(0));
-    let (base, size) = m.cxl_dev.component.decoder_range(0);
+    assert!(m.cxl_devs[0].component.decoder_committed(0));
+    assert!(m.hb_components[0].decoder_committed(0));
+    let (base, size) = m.cxl_devs[0].component.decoder_range(0);
     assert_eq!(base, m.bios.cxl_window_base);
     assert_eq!(size, SimConfig::default().cxl.mem_size);
     // End-to-end HPA->DPA translation works at the window edges.
-    assert_eq!(m.cxl_dev.hpa_to_dpa(base), 0);
-    assert_eq!(m.cxl_dev.hpa_to_dpa(base + size - 64), size - 64);
+    assert_eq!(m.cxl_devs[0].hpa_to_dpa(base), 0);
+    assert_eq!(m.cxl_devs[0].hpa_to_dpa(base + size - 64), size - 64);
+}
+
+#[test]
+fn four_device_boot_enumerates_every_endpoint() {
+    let mut cfg = SimConfig::default();
+    cfg.cxl.devices = 4;
+    cfg.cxl.mem_size = 512 << 20;
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let g = m.guest.as_ref().unwrap();
+    // 1 host bridge + 4 root ports + 4 endpoints.
+    assert_eq!(g.pci_devs.len(), 9);
+    let memdev_bdfs: Vec<String> = g
+        .memdevs
+        .iter()
+        .map(|m| m.bdf.to_string())
+        .collect();
+    assert_eq!(memdev_bdfs.len(), 4);
+    // Distinct BDFs, one per bus.
+    let mut uniq = memdev_bdfs.clone();
+    uniq.dedup();
+    assert_eq!(uniq.len(), 4, "{memdev_bdfs:?}");
+    // All four decoders committed over the same 4-way window.
+    let window = g.memdevs[0].hpa_base;
+    for (i, md) in g.memdevs.iter().enumerate() {
+        assert_eq!(md.hpa_base, window);
+        assert_eq!(md.window_ways, 4);
+        assert_eq!(md.position, i);
+        assert!(m.cxl_devs[i].component.decoder_committed(0));
+        assert!(m.hb_components[i].decoder_committed(0));
+    }
+    // One interleaved zNUMA node covering the whole set.
+    assert_eq!(g.cxl_nodes, vec![1]);
+    assert_eq!(g.alloc.nodes[1].size, 2 << 30);
 }
 
 #[test]
@@ -142,20 +176,26 @@ fn shipped_default_config_matches_schema_defaults() {
 }
 
 #[test]
-fn cxl_cli_surface_reports_the_device() {
-    let mut m = Machine::new(SimConfig::default()).unwrap();
+fn cxl_cli_surface_reports_every_device() {
+    let mut cfg = SimConfig::default();
+    cfg.cxl.devices = 2;
+    let mut m = Machine::new(cfg).unwrap();
     m.boot(ProgModel::Znuma).unwrap();
-    let md = m.guest.as_ref().unwrap().memdev.clone().unwrap();
+    let mds = m.guest.as_ref().unwrap().memdevs.clone();
     let mut world = cxlramsim::system::MmioWorld {
         ecam: &mut m.ecam,
-        cxl_dev: &mut m.cxl_dev,
-        hb_component: &mut m.hb_component,
+        cxl_devs: &mut m.cxl_devs,
+        hb_components: &mut m.hb_components,
         chbs_base: bios::layout::CHBS_BASE,
-        chbs_size: bios::layout::CHBS_SIZE,
-        ep_bdf: m.ep_bdf,
+        chbs_stride: bios::layout::CHBS_SIZE,
+        ep_bdfs: &m.ep_bdfs,
     };
-    let listing =
-        cxlramsim::guestos::cxlcli::cxl_list(&mut world, &md).unwrap();
-    assert!(listing.contains("\"memdev\":\"mem0\""));
-    assert!(listing.contains("4294967296"));
+    for (i, md) in mds.iter().enumerate() {
+        let listing =
+            cxlramsim::guestos::cxlcli::cxl_list(&mut world, md, i)
+                .unwrap();
+        assert!(listing.contains(&format!("\"memdev\":\"mem{i}\"")));
+        assert!(listing.contains("4294967296"));
+        assert!(listing.contains(&format!("\"position\":{i}")));
+    }
 }
