@@ -1,0 +1,134 @@
+//! Switch fan-out exploration: the same endpoints, direct-attached vs
+//! behind one CXL switch — the question a pooling architect asks before
+//! hanging N expanders off a single root port.
+//!
+//! Direct attach gives every card its own root-port link (private
+//! bandwidth + private M2S credit pool). Behind a switch, all cards
+//! share the *upstream* link's wire and credits, so concurrent streams
+//! contend: bandwidth drops, credit stalls appear, and every access
+//! pays the extra hop (`us link + fwd_lat_ns`). Config walkthrough:
+//!
+//! ```toml
+//! [cxl]
+//! devices = 4
+//! switches = 1               # 0 = direct attach
+//!
+//! [cxl.switch0]
+//! fanout = 4                 # downstream ports
+//! link_lat_ns = 20.0         # upstream link (shared by all 4)
+//! link_bw_gbps = 32.0
+//! fwd_lat_ns = 25.0          # store-and-forward per hop
+//!
+//! [cxl.dev3]
+//! lds = 2                    # MLD: two LDs -> two zNUMA nodes
+//! ```
+//!
+//! Upstream-port stats land in `cxl.swN.us_link.*`; per-LD traffic in
+//! `cxl.devN.ldK.*`.
+//!
+//! Run: `cargo run --release --example switch_sweep`
+
+use cxlramsim::config::SimConfig;
+use cxlramsim::coordinator::run_sweep;
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::system::Machine;
+use cxlramsim::util::bench::Table;
+use cxlramsim::workloads::{Stream, StreamKernel};
+
+#[derive(Clone)]
+struct Point {
+    devices: usize,
+    switched: bool,
+}
+
+fn main() -> anyhow::Result<()> {
+    cxlramsim::util::logger::init();
+    let mut points = Vec::new();
+    for devices in [2usize, 4] {
+        for switched in [false, true] {
+            points.push(Point { devices, switched });
+        }
+    }
+
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8);
+    let rows = run_sweep(points, threads, |p: Point| {
+        let mut cfg = SimConfig::default();
+        cfg.cores = p.devices;
+        cfg.sys_mem_size = 256 << 20;
+        cfg.cxl.mem_size = 256 << 20; // per device
+        cfg.cxl.devices = p.devices;
+        cfg.cxl.interleave_ways = 1; // one window per endpoint
+        if p.switched {
+            cfg.cxl.switches = 1; // default fanout covers all devices
+        }
+        let mut m = Machine::new(cfg.clone()).expect("machine");
+        m.boot(ProgModel::Znuma).expect("boot");
+        // One stream per endpoint, each bound to its own zNUMA node:
+        // direct attach runs them on private links; switched funnels
+        // everything through the shared upstream port.
+        let wls: Vec<Box<dyn cxlramsim::workloads::Workload>> = (0
+            ..p.devices)
+            .map(|_| {
+                Box::new(Stream::for_wss(
+                    StreamKernel::Triad,
+                    cfg.l2.size,
+                    4,
+                )) as Box<dyn cxlramsim::workloads::Workload>
+            })
+            .collect();
+        let policies: Vec<u32> = (1..=p.devices as u32).collect();
+        // attach_workloads takes one shared policy; emulate per-core
+        // binding by interleaving with equal weights across all nodes —
+        // every node (device) still sees an even share of the traffic.
+        let weights: Vec<(u32, u32)> =
+            policies.iter().map(|&n| (n, 1)).collect();
+        m.attach_workloads(wls, &MemPolicy::Interleave { weights })
+            .expect("attach");
+        let s = m.run(None);
+        let d = m.dump_stats();
+        let stalls = if p.switched {
+            d.get("cxl.sw0.us_link.credit_stalls").unwrap_or(0.0)
+        } else {
+            (0..p.devices)
+                .map(|i| {
+                    d.get(&format!("cxl.rc.link{i}.credit_stalls"))
+                        .unwrap_or(0.0)
+                })
+                .sum()
+        };
+        vec![
+            p.devices.to_string(),
+            if p.switched { "1 switch".into() } else { "direct".into() },
+            format!("{:.2}", s.bandwidth_gbps),
+            format!("{:.0}", s.avg_lat_cxl_ns),
+            s.cxl_accesses.to_string(),
+            format!("{stalls:.0}"),
+        ]
+    });
+
+    let mut t = Table::new(
+        "STREAM triad x N endpoints: direct attach vs switch fan-out",
+        &[
+            "endpoints",
+            "topology",
+            "GB/s",
+            "CXL lat ns",
+            "CXL fills",
+            "credit stalls",
+        ],
+    );
+    for r in rows {
+        t.row(&r);
+    }
+    t.print();
+    println!(
+        "\nBehind the switch every endpoint shares one upstream link \
+         (wire + M2S credits),\nso concurrent streams stall on credits \
+         and pay the forwarding hop — the contention\ndisappears when \
+         the same cards are direct-attached."
+    );
+    Ok(())
+}

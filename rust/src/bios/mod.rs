@@ -33,9 +33,11 @@ pub mod layout {
     pub const ACPI_POOL: u64 = 0xE_1000;
     /// E820 map bytes (as the bootloader would pass them).
     pub const E820_ADDR: u64 = 0x9_0000;
-    /// ECAM window (8 buses x 1 MiB).
+    /// ECAM window (16 buses x 1 MiB — besides bus 0, switched
+    /// topologies burn two buses per switch (upstream-bridge bus +
+    /// internal bus) plus one leaf bus per endpoint).
     pub const ECAM_BASE: u64 = 0xE000_0000;
-    pub const ECAM_BUSES: u8 = 8;
+    pub const ECAM_BUSES: u8 = 16;
     /// MMIO window for BAR assignment.
     pub const MMIO_BASE: u64 = 0xF000_0000;
     pub const MMIO_SIZE: u64 = 0x0800_0000;
@@ -81,17 +83,16 @@ pub fn cxl_window_base(sys_mem_size: u64) -> u64 {
 
 /// Build the BIOS into `mem` per `cfg`. Returns the placement info.
 pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
-    let n_dev = cfg.cxl.devices;
-    let sets = cfg.cxl.interleave_sets();
+    let n_bridges = cfg.cxl.bridges();
+    let window_defs = cfg.cxl.window_defs();
 
-    // One fixed window per interleave set, 1 GiB-aligned, packed above
-    // system DRAM.
-    let mut windows = Vec::with_capacity(sets);
+    // One fixed window per definition (interleave set or MLD logical-
+    // device slice), 1 GiB-aligned, packed above system DRAM.
+    let mut windows = Vec::with_capacity(window_defs.len());
     let mut next_base = cxl_window_base(cfg.sys_mem_size);
-    for set in 0..sets {
-        let size = cfg.cxl.set_size(set);
-        windows.push((next_base, size));
-        next_base = (next_base + size).div_ceil(1 << 30) * (1 << 30);
+    for def in &window_defs {
+        windows.push((next_base, def.size));
+        next_base = (next_base + def.size).div_ceil(1 << 30) * (1 << 30);
     }
     let span_base = windows[0].0;
     let span_size = {
@@ -132,9 +133,10 @@ pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
             })),
         ],
     )];
-    for i in 0..n_dev {
+    for i in 0..n_bridges {
         // ACPI0016 — CXL host bridge (what linux's cxl_acpi binds to);
-        // one per expander card, each with its own CHBS block.
+        // one per root port — per switch when switches are configured,
+        // else per expander card — each with its own CHBS block.
         sb_devices.push(AmlObj::Device(
             format!("CXL{i}"),
             vec![
@@ -171,11 +173,11 @@ pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
         length: cfg.sys_mem_size,
         flags: acpi::SRAT_MEM_ENABLED,
     }];
-    for (set, &(base, size)) in windows.iter().enumerate() {
-        // One zNUMA (CPU-less) domain per interleave set: enabled +
-        // hot-pluggable, no processor affinity entries reference it.
+    for (w, &(base, size)) in windows.iter().enumerate() {
+        // One zNUMA (CPU-less) domain per window: enabled + hot-
+        // pluggable, no processor affinity entries reference it.
         srat_mems.push(SratMem {
-            domain: 1 + set as u32,
+            domain: 1 + w as u32,
             base,
             length: size,
             flags: acpi::SRAT_MEM_ENABLED | acpi::SRAT_MEM_HOTPLUG,
@@ -183,7 +185,7 @@ pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
     }
     let srat = acpi::srat(cfg.cores, &srat_mems);
 
-    let chbs: Vec<Chbs> = (0..n_dev)
+    let chbs: Vec<Chbs> = (0..n_bridges)
         .map(|i| Chbs {
             uid: layout::CHB_UID + i as u32,
             cxl_version: 1, // CXL 2.0: block is component registers
@@ -199,14 +201,17 @@ pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
     };
     let cfmws: Vec<Cfmws> = windows
         .iter()
-        .enumerate()
-        .map(|(set, &(base, size))| Cfmws {
+        .zip(&window_defs)
+        .map(|(&(base, size), def)| Cfmws {
             base_hpa: base,
             window_size: size,
-            targets: cfg
-                .cxl
-                .set_members(set)
-                .map(|i| layout::CHB_UID + i as u32)
+            // Targets are host-bridge UIDs: the bridge owning each
+            // member device (per-LD windows of one MLD all target the
+            // same bridge, in consecutive CFMWS records).
+            targets: def
+                .targets
+                .iter()
+                .map(|&i| layout::CHB_UID + cfg.cxl.bridge_of(i) as u32)
                 .collect(),
             granularity: hbig,
             arith,
@@ -217,28 +222,34 @@ pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
     let cedt = acpi::cedt(&chbs, &cfmws);
 
     // HMAT: access latency/bandwidth from initiator domain 0 to every
-    // memory domain — DRAM from the channel timing, each CXL set from
-    // its first member's link + media parameters.
+    // memory domain — DRAM from the channel timing, each CXL window
+    // from its first member's path (link + switch hops) + media.
     let mut hmat_entries = vec![HmatEntry {
         target_domain: 0,
         read_lat_ns: cfg.sys_dram.t_rcd_ns + cfg.sys_dram.t_cas_ns,
         bw_gbps: cfg.sys_dram.bw_gbps,
     }];
-    for set in 0..sets {
-        let members = cfg.cxl.set_members(set);
-        let d0 = cfg.cxl.device(members.start);
-        let bw: f64 = members
-            .map(|i| {
+    for (w, def) in window_defs.iter().enumerate() {
+        let d0 = cfg.cxl.device(def.targets[0]);
+        let bw: f64 = def
+            .targets
+            .iter()
+            .map(|&i| {
                 let d = cfg.cxl.device(i);
-                d.link_bw_gbps.min(d.media.bw_gbps)
+                let mut b = d.link_bw_gbps.min(d.media.bw_gbps);
+                if let Some(j) = cfg.cxl.switch_of(i) {
+                    // The shared upstream link caps a switched path.
+                    b = b.min(cfg.cxl.switch(j).link_bw_gbps);
+                }
+                b
             })
             .sum();
         hmat_entries.push(HmatEntry {
-            target_domain: 1 + set as u32,
+            target_domain: 1 + w as u32,
             read_lat_ns: 2.0
                 * (cfg.cxl.pkt_lat_ns
                     + cfg.cxl.depkt_lat_ns
-                    + d0.link_lat_ns)
+                    + cfg.cxl.path_lat_ns(def.targets[0]))
                 + d0.media.t_rcd_ns
                 + d0.media.t_cas_ns,
             bw_gbps: bw,
@@ -336,6 +347,57 @@ mod tests {
                 .count();
             assert_eq!(count, 1, "{}", String::from_utf8_lossy(sig));
         }
+    }
+
+    #[test]
+    fn switched_bios_publishes_one_bridge_per_switch() {
+        let mut cfg = SimConfig::default();
+        cfg.cxl.devices = 4;
+        cfg.cxl.switches = 1;
+        cfg.cxl.mem_size = 512 << 20;
+        cfg.validate().unwrap();
+        let mut mem = PhysMem::new();
+        let info = build(&cfg, &mut mem);
+        // One window per device (switched auto = 1-way).
+        assert_eq!(info.cxl_windows.len(), 4);
+        // The CEDT carries exactly one CHBS (one root port / bridge).
+        let parsed = crate::guestos::acpi_parse::parse(
+            &mem,
+            layout::RSDP_ADDR & !0xFFFF,
+        )
+        .unwrap();
+        assert_eq!(parsed.chbs.len(), 1);
+        assert_eq!(parsed.cfmws.len(), 4);
+        for w in &parsed.cfmws {
+            assert_eq!(w.targets, vec![layout::CHB_UID]);
+        }
+    }
+
+    #[test]
+    fn mld_bios_publishes_per_ld_windows() {
+        let mut cfg = SimConfig::default();
+        cfg.cxl.interleave_ways = 1;
+        cfg.cxl.dev_overrides =
+            vec![crate::config::CxlDevOverride {
+                lds: Some(2),
+                ..Default::default()
+            }];
+        cfg.validate().unwrap();
+        let mut mem = PhysMem::new();
+        let info = build(&cfg, &mut mem);
+        assert_eq!(info.cxl_windows.len(), 2, "one window per LD");
+        assert_eq!(info.cxl_windows[0].1, 2 << 30);
+        assert_eq!(info.cxl_windows[1].1, 2 << 30);
+        let parsed = crate::guestos::acpi_parse::parse(
+            &mem,
+            layout::RSDP_ADDR & !0xFFFF,
+        )
+        .unwrap();
+        // Both slice windows target the same (single) host bridge and
+        // get their own SRAT domains.
+        assert_eq!(parsed.cfmws.len(), 2);
+        assert_eq!(parsed.cfmws[0].targets, parsed.cfmws[1].targets);
+        assert_eq!(parsed.mem_affinity.len(), 3);
     }
 
     #[test]

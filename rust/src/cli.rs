@@ -80,6 +80,10 @@ impl Args {
                     let v = val(&mut i)?;
                     a.sets.push(format!("cxl.devices={v}"));
                 }
+                "--switches" => {
+                    let v = val(&mut i)?;
+                    a.sets.push(format!("cxl.switches={v}"));
+                }
                 "--ways" => {
                     let v = val(&mut i)?;
                     a.sets.push(format!("cxl.interleave_ways={v}"));
@@ -169,6 +173,8 @@ pub fn print_help() {
            --cpu inorder|o3       CPU model\n\
            --attach iobus|membus  CXL attach point (membus = baseline)\n\
            --devices N            number of CXL expander cards\n\
+           --switches M           CXL switches between root ports and\n\
+                                  endpoints (0 = direct attach)\n\
            --ways W               interleave ways across devices (0=auto)\n\
            --granularity B        interleave granularity in bytes\n\
            --policy P             local | bind:N | preferred:N |\n\
@@ -430,6 +436,17 @@ mod tests {
         assert_eq!(cfg.cxl.devices, 2);
         assert_eq!(cfg.cxl.ways(), 2);
         assert_eq!(cfg.cxl.interleave_granularity, 1024);
+    }
+
+    #[test]
+    fn switch_flag_reaches_config() {
+        let a = Args::parse(&sv(&[
+            "run", "--devices", "4", "--switches", "1",
+        ]))
+        .unwrap();
+        let cfg = a.config().unwrap();
+        assert_eq!(cfg.cxl.switches, 1);
+        assert_eq!(cfg.cxl.switch(0).ndev, 4);
     }
 
     #[test]

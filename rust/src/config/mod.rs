@@ -155,6 +155,9 @@ pub struct CxlDevOverride {
     /// override, bandwidth scales linearly with width.
     pub link_width: Option<u32>,
     pub latency_class: Option<LatencyClass>,
+    /// Logical devices (MLD pooling): the card's capacity splits into
+    /// `lds` equal slices, each with its own HDM decoder and window.
+    pub lds: Option<usize>,
 }
 
 /// Fully-resolved parameters of one expander card: the shared `[cxl]`
@@ -167,6 +170,55 @@ pub struct CxlDeviceCfg {
     pub link_width: u32,
     pub latency_class: LatencyClass,
     pub media: DramConfig,
+    /// Logical devices exposed (1 = plain SLD).
+    pub lds: usize,
+}
+
+/// Default store-and-forward latency of a virtual switch hop (ns) when
+/// `[cxl.switchN] fwd_lat_ns` is not given. Real CXL 2.0 switch parts
+/// add a few tens of ns port-to-port.
+pub const SWITCH_FWD_LAT_NS: f64 = 25.0;
+
+/// Sparse per-switch override of the shared link parameters, loaded
+/// from `[cxl.switchN]` TOML sections (or `--set cxl.switchN.key=v`).
+#[derive(Clone, Debug, Default)]
+pub struct CxlSwitchOverride {
+    /// Downstream ports on this switch (devices assigned consecutively).
+    pub fanout: Option<usize>,
+    /// Upstream-link propagation latency (ns).
+    pub link_lat_ns: Option<f64>,
+    /// Upstream-link bandwidth (GB/s) — shared by every endpoint below.
+    pub link_bw_gbps: Option<f64>,
+    /// Store-and-forward latency per switch hop (ns).
+    pub fwd_lat_ns: Option<f64>,
+}
+
+/// Fully-resolved parameters of one virtual CXL switch, including its
+/// consecutive slice of the device list.
+#[derive(Clone, Debug)]
+pub struct CxlSwitchCfg {
+    pub fanout: usize,
+    pub link_lat_ns: f64,
+    pub link_bw_gbps: f64,
+    pub fwd_lat_ns: f64,
+    /// First device index behind this switch.
+    pub first_dev: usize,
+    /// Devices actually attached (`<= fanout`).
+    pub ndev: usize,
+}
+
+/// One host-physical fixed memory window (one CEDT CFMWS, one SRAT
+/// domain, one guest zNUMA node): either an interleave set of SLD
+/// devices or a single logical-device capacity slice of an MLD.
+#[derive(Clone, Debug)]
+pub struct CxlWindowDef {
+    /// Member device indices in CFMWS target-slot order.
+    pub targets: Vec<usize>,
+    /// Logical-device index within the (single) target for MLD slice
+    /// windows; 0 for SLD windows.
+    pub ld: u16,
+    /// Window size in bytes.
+    pub size: u64,
 }
 
 /// CXL link + protocol parameters (paper §III-B.2: all user-calibratable).
@@ -201,13 +253,26 @@ pub struct CxlConfig {
     pub interleave_arith: InterleaveArith,
     /// Sparse per-device overrides, indexed by device.
     pub dev_overrides: Vec<CxlDevOverride>,
+    /// Virtual CXL switches between root ports and endpoints. 0 =
+    /// direct attach (every device on its own root port); M > 0 places
+    /// M switches, each with one upstream port to its own root port and
+    /// `fanout` downstream ports, devices assigned consecutively.
+    pub switches: usize,
+    /// Sparse per-switch overrides, indexed by switch.
+    pub switch_overrides: Vec<CxlSwitchOverride>,
 }
 
 impl CxlConfig {
     /// Effective interleave ways (resolves the `0 = auto` encoding).
+    /// See `docs/CONFIG.md` for the full auto-width rule.
     pub fn ways(&self) -> usize {
         if self.interleave_ways != 0 {
             return self.interleave_ways;
+        }
+        if self.switches > 0 {
+            // Switched topologies decode per endpoint (each device —
+            // or LD — is its own window); auto resolves to 1.
+            return 1;
         }
         if self.devices.is_power_of_two() {
             self.devices
@@ -248,7 +313,104 @@ impl CxlConfig {
             link_width: width,
             latency_class: class,
             media,
+            lds: ov.lds.unwrap_or(1),
         }
+    }
+
+    /// Resolved parameters of switch `j`, including the consecutive
+    /// device slice it fans out to.
+    pub fn switch(&self, j: usize) -> CxlSwitchCfg {
+        assert!(j < self.switches, "switch {j} out of range");
+        let default_fanout = self.devices.div_ceil(self.switches.max(1));
+        let fanout_of = |k: usize| {
+            self.switch_overrides
+                .get(k)
+                .and_then(|o| o.fanout)
+                .unwrap_or(default_fanout)
+        };
+        let first: usize = (0..j).map(|k| fanout_of(k)).sum();
+        let first_dev = first.min(self.devices);
+        let fanout = fanout_of(j);
+        let ndev = fanout.min(self.devices - first_dev);
+        let ov = self.switch_overrides.get(j).cloned().unwrap_or_default();
+        CxlSwitchCfg {
+            fanout,
+            link_lat_ns: ov.link_lat_ns.unwrap_or(self.link_lat_ns),
+            link_bw_gbps: ov.link_bw_gbps.unwrap_or(self.link_bw_gbps),
+            fwd_lat_ns: ov.fwd_lat_ns.unwrap_or(SWITCH_FWD_LAT_NS),
+            first_dev,
+            ndev,
+        }
+    }
+
+    /// The switch device `i` sits behind, if any.
+    pub fn switch_of(&self, dev: usize) -> Option<usize> {
+        (0..self.switches).find(|&j| {
+            let s = self.switch(j);
+            dev >= s.first_dev && dev < s.first_dev + s.ndev
+        })
+    }
+
+    /// Number of CXL host bridges (ACPI0016 devices / CHBS blocks /
+    /// root ports): one per switch when switches are configured, else
+    /// one per device (the PR-1 direct-attach topology).
+    pub fn bridges(&self) -> usize {
+        if self.switches == 0 {
+            self.devices
+        } else {
+            self.switches
+        }
+    }
+
+    /// Host-bridge index owning device `i`.
+    pub fn bridge_of(&self, dev: usize) -> usize {
+        match self.switch_of(dev) {
+            Some(j) => j,
+            None => dev,
+        }
+    }
+
+    /// One-way propagation from root port to device `i`'s endpoint (ns),
+    /// including the switch hop when the device is switch-attached.
+    pub fn path_lat_ns(&self, i: usize) -> f64 {
+        let d = self.device(i);
+        match self.switch_of(i) {
+            None => d.link_lat_ns,
+            Some(j) => {
+                let s = self.switch(j);
+                s.link_lat_ns + s.fwd_lat_ns + d.link_lat_ns
+            }
+        }
+    }
+
+    /// The host-physical fixed windows this topology publishes, in
+    /// CEDT/SRAT order: one per interleave set, except that a
+    /// single-device set whose device is an MLD (`lds = K`) expands into
+    /// K per-LD slice windows.
+    pub fn window_defs(&self) -> Vec<CxlWindowDef> {
+        let mut out = Vec::new();
+        for set in 0..self.interleave_sets() {
+            let members: Vec<usize> = self.set_members(set).collect();
+            if members.len() == 1 {
+                let i = members[0];
+                let d = self.device(i);
+                let slice = d.mem_size / d.lds as u64;
+                for ld in 0..d.lds {
+                    out.push(CxlWindowDef {
+                        targets: vec![i],
+                        ld: ld as u16,
+                        size: slice,
+                    });
+                }
+            } else {
+                out.push(CxlWindowDef {
+                    targets: members,
+                    ld: 0,
+                    size: self.set_size(set),
+                });
+            }
+        }
+        out
     }
 
     /// Host-physical size of interleave set `set`'s window (the sum of
@@ -350,6 +512,8 @@ impl Default for SimConfig {
                 interleave_granularity: 256,
                 interleave_arith: InterleaveArith::Modulo,
                 dev_overrides: Vec::new(),
+                switches: 0,
+                switch_overrides: Vec::new(),
             },
             page_size: 4096,
             seed: 1,
@@ -423,6 +587,88 @@ impl SimConfig {
             }
             if !(1..=16u32).contains(&d.link_width) {
                 bail!("cxl.dev{i}: link width must be 1..=16 lanes");
+            }
+            if !(1..=4).contains(&d.lds) {
+                bail!("cxl.dev{i}: lds must be 1..=4");
+            }
+            if d.lds > 1 {
+                if ways != 1 {
+                    bail!(
+                        "cxl.dev{i}: MLD devices (lds > 1) require 1-way \
+                         windows (set cxl.interleave_ways = 1)"
+                    );
+                }
+                if d.mem_size % (d.lds as u64 * (256u64 << 20)) != 0 {
+                    bail!(
+                        "cxl.dev{i}: capacity must split into lds equal \
+                         256 MiB-multiple slices"
+                    );
+                }
+            }
+        }
+        if self.cxl.switches > 6 {
+            bail!("cxl.switches must be 0..=6");
+        }
+        if self.cxl.switches > 0 {
+            if ways != 1 {
+                bail!(
+                    "interleaving across switched endpoints is not \
+                     modeled; use cxl.interleave_ways = 1 (or 0 = auto) \
+                     with cxl.switches > 0"
+                );
+            }
+            let mut covered = 0usize;
+            // bus 0 + per switch: upstream-bridge bus, internal bus and
+            // one leaf bus per attached endpoint — must fit the ECAM.
+            let mut buses = 1usize;
+            for j in 0..self.cxl.switches {
+                let s = self.cxl.switch(j);
+                if !(1..=16).contains(&s.fanout) {
+                    bail!("cxl.switch{j}: fanout must be 1..=16");
+                }
+                if s.ndev == 0 {
+                    bail!(
+                        "cxl.switch{j} has no devices behind it (the \
+                         preceding switches' fanout already covers all \
+                         {} devices)",
+                        self.cxl.devices
+                    );
+                }
+                if s.link_bw_gbps <= 0.0 {
+                    bail!("cxl.switch{j}: link bandwidth must be positive");
+                }
+                if s.link_lat_ns < 0.0 || s.fwd_lat_ns < 0.0 {
+                    bail!("cxl.switch{j}: latencies must be non-negative");
+                }
+                covered += s.ndev;
+                buses += 2 + s.ndev;
+            }
+            if covered < self.cxl.devices {
+                bail!(
+                    "cxl.devices ({}) exceeds the total switch fanout \
+                     ({covered})",
+                    self.cxl.devices
+                );
+            }
+            if buses > crate::bios::layout::ECAM_BUSES as usize {
+                bail!(
+                    "switched topology needs {buses} PCIe buses; the ECAM \
+                     window has {}",
+                    crate::bios::layout::ECAM_BUSES
+                );
+            }
+        }
+        // Every window a bridge decodes needs an HDM decoder on it.
+        for b in 0..self.cxl.bridges() {
+            let decoders: usize = (0..self.cxl.devices)
+                .filter(|&i| self.cxl.bridge_of(i) == b)
+                .map(|i| self.cxl.device(i).lds)
+                .sum();
+            if decoders > 10 {
+                bail!(
+                    "CXL host bridge {b} would need {decoders} HDM \
+                     decoders (max 10 modeled); reduce fanout or lds"
+                );
             }
         }
         for set in 0..self.cxl.interleave_sets() {
@@ -538,6 +784,7 @@ impl SimConfig {
             };
         }
         get!("cxl.devices", c.cxl.devices, usize);
+        get!("cxl.switches", c.cxl.switches, usize);
         get!("cxl.interleave_ways", c.cxl.interleave_ways, usize);
         get!(
             "cxl.interleave_granularity",
@@ -585,12 +832,45 @@ impl SimConfig {
                 })?;
                 ov.latency_class = Some(LatencyClass::parse(s)?);
             }
+            if let Some(v) = doc.get(&format!("{pre}.lds")) {
+                ov.lds = Some(v.as_u64().with_context(|| {
+                    format!("{pre}.lds must be int")
+                })? as usize);
+            }
         }
-        // Reject overrides for devices that don't exist rather than
-        // silently dropping them (a likely off-by-one in configs).
+        // Per-switch overrides from [cxl.switchN] sections.
+        c.cxl.switch_overrides =
+            vec![CxlSwitchOverride::default(); c.cxl.switches];
+        for j in 0..c.cxl.switches {
+            let pre = format!("cxl.switch{j}");
+            let ov = &mut c.cxl.switch_overrides[j];
+            if let Some(v) = doc.get(&format!("{pre}.fanout")) {
+                ov.fanout = Some(v.as_u64().with_context(|| {
+                    format!("{pre}.fanout must be int")
+                })? as usize);
+            }
+            if let Some(v) = doc.get(&format!("{pre}.link_lat_ns")) {
+                ov.link_lat_ns = Some(v.as_f64().with_context(|| {
+                    format!("{pre}.link_lat_ns must be number")
+                })?);
+            }
+            if let Some(v) = doc.get(&format!("{pre}.link_bw_gbps")) {
+                ov.link_bw_gbps = Some(v.as_f64().with_context(|| {
+                    format!("{pre}.link_bw_gbps must be number")
+                })?);
+            }
+            if let Some(v) = doc.get(&format!("{pre}.fwd_lat_ns")) {
+                ov.fwd_lat_ns = Some(v.as_f64().with_context(|| {
+                    format!("{pre}.fwd_lat_ns must be number")
+                })?);
+            }
+        }
+        // Reject overrides for devices/switches that don't exist, and
+        // unknown keys inside valid sections, rather than silently
+        // dropping them (a likely off-by-one or typo in configs).
         for key in doc.entries.keys() {
             if let Some(rest) = key.strip_prefix("cxl.dev") {
-                if let Some((idx, _)) = rest.split_once('.') {
+                if let Some((idx, field)) = rest.split_once('.') {
                     match idx.parse::<usize>() {
                         Ok(i) if i < c.cxl.devices => {}
                         _ => bail!(
@@ -598,6 +878,44 @@ impl SimConfig {
                              cxl.devices = {}",
                             c.cxl.devices
                         ),
+                    }
+                    const DEV_KEYS: [&str; 6] = [
+                        "size",
+                        "link_lat_ns",
+                        "link_bw_gbps",
+                        "link_width",
+                        "latency_class",
+                        "lds",
+                    ];
+                    if !DEV_KEYS.contains(&field) {
+                        bail!(
+                            "unknown key '{key}' (cxl.devN keys: \
+                             {DEV_KEYS:?})"
+                        );
+                    }
+                }
+            }
+            if let Some(rest) = key.strip_prefix("cxl.switch") {
+                if let Some((idx, field)) = rest.split_once('.') {
+                    match idx.parse::<usize>() {
+                        Ok(j) if j < c.cxl.switches => {}
+                        _ => bail!(
+                            "'{key}' targets a switch outside \
+                             cxl.switches = {}",
+                            c.cxl.switches
+                        ),
+                    }
+                    const SW_KEYS: [&str; 4] = [
+                        "fanout",
+                        "link_lat_ns",
+                        "link_bw_gbps",
+                        "fwd_lat_ns",
+                    ];
+                    if !SW_KEYS.contains(&field) {
+                        bail!(
+                            "unknown key '{key}' (cxl.switchN keys: \
+                             {SW_KEYS:?})"
+                        );
                     }
                 }
             }
@@ -632,11 +950,16 @@ impl SimConfig {
                 "CXL Memory".into(),
                 format!(
                     "Configurable Extension (Unbounded) — {} across {} \
-                     device(s), {}-way interleave @ {} B",
+                     device(s), {}-way interleave @ {} B{}",
                     human_bytes(self.cxl.total_size()),
                     self.cxl.devices,
                     self.cxl.ways(),
-                    self.cxl.interleave_granularity
+                    self.cxl.interleave_granularity,
+                    if self.cxl.switches > 0 {
+                        format!(", behind {} switch(es)", self.cxl.switches)
+                    } else {
+                        String::new()
+                    }
                 ),
             ),
         ]
@@ -750,6 +1073,148 @@ mod tests {
             &["cxl.dev1.size=512 MiB".to_string()],
         );
         assert!(err.is_err(), "default has one device; dev1 is invalid");
+    }
+
+    #[test]
+    fn switch_config_resolves_and_validates() {
+        let cfg = SimConfig::from_toml(
+            "[cxl]\ndevices = 4\nswitches = 1\n\
+             [cxl.switch0]\nfanout = 4\nlink_lat_ns = 30.0\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.cxl.switches, 1);
+        assert_eq!(cfg.cxl.ways(), 1, "switched auto resolves to 1-way");
+        let s = cfg.cxl.switch(0);
+        assert_eq!(s.fanout, 4);
+        assert_eq!((s.first_dev, s.ndev), (0, 4));
+        assert_eq!(s.link_lat_ns, 30.0);
+        assert_eq!(s.fwd_lat_ns, SWITCH_FWD_LAT_NS);
+        assert_eq!(cfg.cxl.bridges(), 1);
+        for i in 0..4 {
+            assert_eq!(cfg.cxl.switch_of(i), Some(0));
+            assert_eq!(cfg.cxl.bridge_of(i), 0);
+        }
+        // Path latency includes the switch hop both ways of the tree.
+        let direct = SimConfig::default();
+        assert!(cfg.cxl.path_lat_ns(0) > direct.cxl.path_lat_ns(0));
+    }
+
+    #[test]
+    fn switch_default_fanout_splits_devices() {
+        let mut c = SimConfig::default();
+        c.cxl.devices = 4;
+        c.cxl.switches = 2;
+        c.validate().unwrap();
+        assert_eq!(c.cxl.switch(0).ndev, 2);
+        assert_eq!(c.cxl.switch(1).first_dev, 2);
+        assert_eq!(c.cxl.switch(1).ndev, 2);
+        assert_eq!(c.cxl.bridge_of(3), 1);
+    }
+
+    #[test]
+    fn switch_validation_rejects_bad_shapes() {
+        // Explicit multi-way interleave behind a switch: unsupported.
+        let mut c = SimConfig::default();
+        c.cxl.devices = 4;
+        c.cxl.switches = 1;
+        c.cxl.interleave_ways = 4;
+        assert!(c.validate().is_err());
+
+        // More switches than devices: some switch is empty.
+        let mut c = SimConfig::default();
+        c.cxl.devices = 2;
+        c.cxl.switches = 3;
+        assert!(c.validate().is_err());
+
+        // Fanout too small to cover every device.
+        let err = SimConfig::from_toml(
+            "[cxl]\ndevices = 4\nswitches = 1\n[cxl.switch0]\nfanout = 2\n",
+            &[],
+        );
+        assert!(err.is_err());
+
+        // Override targeting a switch that doesn't exist.
+        let err = SimConfig::from_toml(
+            "[cxl]\ndevices = 2\nswitches = 1\n[cxl.switch1]\nfanout = 2\n",
+            &[],
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn unknown_override_keys_rejected() {
+        // Typo'd key in an in-range section must fail loudly, not
+        // silently run with the default.
+        let err = SimConfig::from_toml(
+            "[cxl]\ndevices = 2\nswitches = 1\n\
+             [cxl.switch0]\nfwd_lat = 5.0\n",
+            &[],
+        );
+        assert!(err.is_err(), "typo'd switch key must be rejected");
+        let err = SimConfig::from_toml(
+            "[cxl]\ndevices = 2\ninterleave_ways = 1\n\
+             [cxl.dev1]\nlatency = \"far\"\n",
+            &[],
+        );
+        assert!(err.is_err(), "typo'd device key must be rejected");
+    }
+
+    #[test]
+    fn mld_windows_expand_per_ld() {
+        let cfg = SimConfig::from_toml(
+            "[cxl]\ndevices = 2\ninterleave_ways = 1\n\
+             [cxl.dev1]\nlds = 2\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.cxl.device(1).lds, 2);
+        let defs = cfg.cxl.window_defs();
+        assert_eq!(defs.len(), 3, "one SLD window + two LD slices");
+        assert_eq!(defs[0].targets, vec![0]);
+        assert_eq!((defs[1].ld, defs[2].ld), (0, 1));
+        assert_eq!(defs[1].size, 2 << 30, "4 GiB MLD splits in half");
+        assert_eq!(defs[1].targets, defs[2].targets);
+    }
+
+    #[test]
+    fn mld_validation_rejects_bad_shapes() {
+        // MLD inside a multi-way interleave set.
+        let mut c = SimConfig::default();
+        c.cxl.devices = 2;
+        c.cxl.dev_overrides = vec![
+            CxlDevOverride { lds: Some(2), ..Default::default() },
+            CxlDevOverride::default(),
+        ];
+        assert!(c.validate().is_err(), "2-way auto set rejects MLD");
+        c.cxl.interleave_ways = 1;
+        c.validate().unwrap();
+
+        // lds out of range.
+        let mut c = SimConfig::default();
+        c.cxl.dev_overrides =
+            vec![CxlDevOverride { lds: Some(5), ..Default::default() }];
+        assert!(c.validate().is_err());
+
+        // Capacity not splittable into 256 MiB-multiple slices.
+        let mut c = SimConfig::default();
+        c.cxl.interleave_ways = 1;
+        c.cxl.mem_size = 768 << 20;
+        c.cxl.dev_overrides =
+            vec![CxlDevOverride { lds: Some(2), ..Default::default() }];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sld_window_defs_match_sets() {
+        let mut c = SimConfig::default();
+        c.cxl.devices = 4;
+        c.validate().unwrap();
+        let defs = c.cxl.window_defs();
+        assert_eq!(defs.len(), 1);
+        assert_eq!(defs[0].targets, vec![0, 1, 2, 3]);
+        assert_eq!(defs[0].size, c.cxl.set_size(0));
+        assert_eq!(defs[0].ld, 0);
     }
 
     #[test]

@@ -1,9 +1,15 @@
-//! The CXL Type-3 memory expander endpoint (Single Logic Device).
+//! The CXL Type-3 memory expander endpoint.
 //!
 //! Owns the register blocks (component + device, BAR-mapped), the
 //! mailbox engine and the media (expander DRAM) timing model. The
 //! de-packetizer lives here: M2S packets arriving over the link become
 //! media operations; completions go back as S2M NDR/DRS.
+//!
+//! A device with `lds > 1` is a **multi-logical-device** (MLD): its
+//! capacity splits into `lds` equal slices, each with its own HDM
+//! decoder (DPA-skip based) and per-LD traffic counters, while the
+//! link, mailbox and media remain shared — the pooling granularity of
+//! CXL 2.0.
 
 use crate::config::CxlConfig;
 use crate::mem::DramTiming;
@@ -21,10 +27,13 @@ pub struct DeviceStats {
     pub writes: Counter,
     pub media_latency: Histogram,
     pub depacketize_ticks: Counter,
+    /// Per-logical-device traffic (len = lds; index by DPA slice).
+    pub ld_reads: Vec<Counter>,
+    pub ld_writes: Vec<Counter>,
 }
 
 pub struct CxlDevice {
-    /// Component registers (HDM decoders) — BAR0.
+    /// Component registers (HDM decoders, one per LD) — BAR0.
     pub component: ComponentRegs,
     /// Device registers + mailbox — BAR2.
     pub mailbox: Mailbox,
@@ -34,6 +43,10 @@ pub struct CxlDevice {
     /// Device-side S2M packetization cost (responses are packed here and
     /// unpacked at the RC — symmetric with the M2S direction, Fig. 4).
     pkt_ticks: Tick,
+    /// Logical devices exposed (1 = SLD).
+    pub lds: usize,
+    /// Capacity of one LD slice (= capacity / lds).
+    ld_slice: u64,
     pub stats: DeviceStats,
     /// Where BARs were assigned (filled by BIOS/guest enumeration).
     pub bar0_base: Option<u64>,
@@ -47,16 +60,27 @@ impl CxlDevice {
     }
 
     /// Expander card `idx`, with its per-device capacity / link /
-    /// latency-class overrides resolved.
+    /// latency-class / LD-count overrides resolved.
     pub fn new_at(cfg: &CxlConfig, idx: usize, serial: u64) -> Self {
         let dev = cfg.device(idx);
+        let lds = dev.lds.max(1);
         CxlDevice {
-            component: ComponentRegs::new(1),
-            mailbox: Mailbox::new(MemdevState::new(dev.mem_size, serial)),
+            component: ComponentRegs::new(lds),
+            mailbox: Mailbox::new(MemdevState::new_mld(
+                dev.mem_size,
+                serial,
+                lds as u16,
+            )),
             media: DramTiming::new(&dev.media),
             depkt_ticks: ns_to_ticks(cfg.depkt_lat_ns),
             pkt_ticks: ns_to_ticks(cfg.pkt_lat_ns),
-            stats: DeviceStats::default(),
+            lds,
+            ld_slice: dev.mem_size / lds as u64,
+            stats: DeviceStats {
+                ld_reads: vec![Counter::default(); lds],
+                ld_writes: vec![Counter::default(); lds],
+                ..Default::default()
+            },
             bar0_base: None,
             bar2_base: None,
         }
@@ -81,10 +105,14 @@ impl CxlDevice {
         let done =
             self.media.access(after_depkt, dpa, mem_proto::DATA_BYTES, is_write);
         self.stats.media_latency.sample(done - after_depkt);
+        // The DPA slice identifies the logical device served.
+        let ld = ((dpa / self.ld_slice) as usize).min(self.lds - 1);
         if is_write {
             self.stats.writes.inc();
+            self.stats.ld_writes[ld].inc();
         } else {
             self.stats.reads.inc();
+            self.stats.ld_reads[ld].inc();
         }
         // Pack the S2M response before it can enter the link.
         (mem_proto::make_response(pkt), done + self.pkt_ticks)
@@ -95,6 +123,7 @@ impl CxlDevice {
     /// window the device sees every N-th granule, so the target-select
     /// bits are stripped — DPA = (off / (G*N)) * G + off % G (the CXL
     /// 2.0 §8.2.4.19 decode; the device never needs its slot index).
+    /// The decoder's DPA skip relocates the result into its LD slice.
     /// Addresses outside any committed range map to DPA 0 (poison in
     /// real hardware; we count them).
     pub fn hpa_to_dpa(&self, hpa: u64) -> u64 {
@@ -108,11 +137,14 @@ impl CxlDevice {
                     continue;
                 }
                 let off = hpa - base;
+                let skip = self.component.decoder_dpa_skip(i);
                 let (ways, gran) = self.component.decoder_interleave(i);
                 if ways == 1 {
-                    return off;
+                    return skip + off;
                 }
-                return (off / (gran * ways as u64)) * gran + off % gran;
+                return skip
+                    + (off / (gran * ways as u64)) * gran
+                    + off % gran;
             }
         }
         // Pre-commit traffic (BIOS probing) or bad routing.
@@ -149,6 +181,18 @@ impl CxlDevice {
         d.counter(&format!("{path}.reads"), &self.stats.reads);
         d.counter(&format!("{path}.writes"), &self.stats.writes);
         d.hist(&format!("{path}.media_latency"), &self.stats.media_latency);
+        if self.lds > 1 {
+            for k in 0..self.lds {
+                d.counter(
+                    &format!("{path}.ld{k}.reads"),
+                    &self.stats.ld_reads[k],
+                );
+                d.counter(
+                    &format!("{path}.ld{k}.writes"),
+                    &self.stats.ld_writes[k],
+                );
+            }
+        }
         self.media.dump(&format!("{path}.media"), d);
     }
 }
@@ -213,6 +257,35 @@ mod tests {
         // Skipping the peer's granule: HPA +512 lands at DPA +256.
         assert_eq!(d.hpa_to_dpa(base + 512), 256);
         assert_eq!(d.hpa_to_dpa(base + 512 + 60), 316);
+    }
+
+    #[test]
+    fn mld_slices_translate_and_count_per_ld() {
+        let mut cfg = SimConfig::default().cxl;
+        cfg.dev_overrides = vec![crate::config::CxlDevOverride {
+            lds: Some(2),
+            ..Default::default()
+        }];
+        let mut d = CxlDevice::new(&cfg, 1);
+        assert_eq!(d.lds, 2);
+        assert_eq!(d.mailbox.state.lds, 2);
+        // Two LD windows: [4 GiB, 6 GiB) -> DPA [0, 2 GiB) and
+        // [6 GiB, 8 GiB) -> DPA [2 GiB, 4 GiB) via decoder DPA skip.
+        d.component.program_decoder_at(0, 4 << 30, 2 << 30, 0);
+        d.component.program_decoder_at(1, 6 << 30, 2 << 30, 2 << 30);
+        d.component
+            .write32(super::super::regs::comp::HDM_GLOBAL_CTRL, 0b10);
+        assert_eq!(d.hpa_to_dpa(4 << 30), 0);
+        assert_eq!(d.hpa_to_dpa(6 << 30), 2 << 30);
+        assert_eq!(d.hpa_to_dpa((6u64 << 30) + 4096), (2u64 << 30) + 4096);
+        // Traffic lands in the right LD counter.
+        d.handle_m2s(0, &m2s(MemCmd::ReadReq, 4 << 30));
+        d.handle_m2s(0, &m2s(MemCmd::ReadReq, 6 << 30));
+        d.handle_m2s(0, &m2s(MemCmd::WriteReq, 6 << 30));
+        assert_eq!(d.stats.ld_reads[0].get(), 1);
+        assert_eq!(d.stats.ld_reads[1].get(), 1);
+        assert_eq!(d.stats.ld_writes[1].get(), 1);
+        assert_eq!(d.stats.reads.get(), 2);
     }
 
     #[test]

@@ -86,9 +86,9 @@ impl CxlLink {
     }
 
     /// Send an M2S packet at `now`. Consumes a credit (caller must have
-    /// confirmed availability via [`credit_available_at`]). Returns the
-    /// arrival tick at the device and registers the credit to free at
-    /// `response_retires` (filled in by `complete_m2s` later).
+    /// confirmed availability via [`CxlLink::credit_available_at`]).
+    /// Returns the arrival tick at the device and registers the credit
+    /// to free when [`CxlLink::retire`] is called later.
     pub fn send_m2s(&mut self, now: Tick, pkt: &CxlMemPacket) -> Tick {
         self.reclaim(now);
         assert!(self.credits_free > 0, "send_m2s without credit");
@@ -96,11 +96,17 @@ impl CxlLink {
         // Placeholder: the credit returns when the response retires; we
         // record u64::MAX and fix it up in `retire`.
         self.returns.push(Tick::MAX);
+        self.forward_m2s(now, pkt)
+    }
 
+    /// Move an M2S packet across the wire without touching the credit
+    /// pool — the downstream hop of a switched path, where flow control
+    /// lives at the shared upstream link.
+    pub fn forward_m2s(&mut self, now: Tick, pkt: &CxlMemPacket) -> Tick {
         match pkt.channel {
             Channel::M2SReq => self.stats.m2s_req.inc(),
             Channel::M2SRwD => self.stats.m2s_rwd.inc(),
-            _ => panic!("send_m2s with S2M packet"),
+            _ => panic!("forward_m2s with S2M packet"),
         }
         let (flits, bytes) = self.framed(pkt.wire_bytes);
         self.stats.flits.add(flits);
@@ -219,6 +225,15 @@ mod tests {
         // After that tick passes, a credit is free.
         assert_eq!(l.credit_available_at(60_000), Some(60_000));
         assert_eq!(l.credits_in_use(), 1);
+    }
+
+    #[test]
+    fn forward_does_not_consume_credits() {
+        let mut l = link();
+        let arr = l.forward_m2s(0, &read_pkt(1));
+        assert_eq!(arr, 2125 + 20_000, "same wire timing as send_m2s");
+        assert_eq!(l.credits_in_use(), 0, "forwarding is uncredited");
+        assert_eq!(l.stats.m2s_req.get(), 1);
     }
 
     #[test]

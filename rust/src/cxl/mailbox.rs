@@ -10,12 +10,14 @@
 
 use super::regs::dev;
 
-/// Memory-device command opcodes (CXL 2.0 §8.2.9.5).
+/// Memory-device command opcodes (CXL 2.0 §8.2.9.5; GET_LD_INFO is the
+/// FM-API §7.6.7.1 command MLD-capable devices answer).
 pub mod opcode {
     pub const IDENTIFY_MEMORY_DEVICE: u16 = 0x4000;
     pub const GET_PARTITION_INFO: u16 = 0x4100;
     pub const SET_PARTITION_INFO: u16 = 0x4101;
     pub const GET_HEALTH_INFO: u16 = 0x4200;
+    pub const GET_LD_INFO: u16 = 0x5400;
 }
 
 /// Mailbox return codes (§8.2.8.4.5.1).
@@ -38,10 +40,17 @@ pub struct MemdevState {
     pub volatile_capacity: u64,
     pub serial: u64,
     pub fw_revision: [u8; 16],
+    /// Logical devices exposed (1 = SLD; > 1 = MLD pooling).
+    pub lds: u16,
 }
 
 impl MemdevState {
     pub fn new(total_capacity: u64, serial: u64) -> Self {
+        Self::new_mld(total_capacity, serial, 1)
+    }
+
+    /// An MLD exposing `lds` equal capacity slices.
+    pub fn new_mld(total_capacity: u64, serial: u64, lds: u16) -> Self {
         let mut fw = [0u8; 16];
         fw[..9].copy_from_slice(b"cxlrs-1.0");
         MemdevState {
@@ -49,6 +58,7 @@ impl MemdevState {
             volatile_capacity: total_capacity,
             serial,
             fw_revision: fw,
+            lds: lds.max(1),
         }
     }
 }
@@ -189,6 +199,17 @@ impl Mailbox {
                 let r = vec![0u8; 16]; // all-healthy
                 self.finish(retcode::SUCCESS, &r);
             }
+            opcode::GET_LD_INFO => {
+                // FM-API Get LD Info: total memory size (u64) + LD
+                // count (u16). SLDs answer with 1 so the driver probes
+                // uniformly.
+                let mut r = vec![0u8; 16];
+                r[0..8].copy_from_slice(
+                    &self.state.total_capacity.to_le_bytes(),
+                );
+                r[8..10].copy_from_slice(&self.state.lds.to_le_bytes());
+                self.finish(retcode::SUCCESS, &r);
+            }
             _ => self.finish(retcode::UNSUPPORTED, &[]),
         }
     }
@@ -278,6 +299,24 @@ mod tests {
             m.run_command(opcode::SET_PARTITION_INFO, &units.to_le_bytes());
         assert_eq!(code, retcode::INVALID_INPUT);
         assert_eq!(m.state.volatile_capacity, 4 << 30);
+    }
+
+    #[test]
+    fn get_ld_info_reports_ld_count() {
+        let mut sld = mb();
+        let (code, resp) = sld.run_command(opcode::GET_LD_INFO, &[]);
+        assert_eq!(code, retcode::SUCCESS);
+        assert_eq!(
+            u64::from_le_bytes(resp[0..8].try_into().unwrap()),
+            4 << 30
+        );
+        assert_eq!(u16::from_le_bytes(resp[8..10].try_into().unwrap()), 1);
+
+        let mut mld =
+            Mailbox::new(MemdevState::new_mld(4 << 30, 0xC0FFEE, 2));
+        let (code, resp) = mld.run_command(opcode::GET_LD_INFO, &[]);
+        assert_eq!(code, retcode::SUCCESS);
+        assert_eq!(u16::from_le_bytes(resp[8..10].try_into().unwrap()), 2);
     }
 
     #[test]

@@ -10,13 +10,19 @@
 //!   Req / RwD and S2M NDR / DRS with opcode-bearing headers,
 //!   packetization at the root complex, de-packetization at the device.
 //! * [`link`] — credit-based flit link with latency + bandwidth.
-//! * [`device`] — the Type-3 SLD endpoint: register surface + media.
-//! * [`root_complex`] — host side: HDM routing + packetizer.
+//! * [`switch`] — virtual CXL switch: shared upstream link + per-hop
+//!   forwarding latency between a root port and its fanned-out
+//!   endpoints.
+//! * [`device`] — the Type-3 endpoint: register surface + media, with
+//!   multi-logical-device (MLD) capacity slicing.
+//! * [`root_complex`] — host side: HDM routing + packetizer, routing
+//!   by topology (direct links and switched paths).
 
 pub mod regs;
 pub mod mailbox;
 pub mod mem_proto;
 pub mod link;
+pub mod switch;
 pub mod device;
 pub mod root_complex;
 
@@ -24,3 +30,4 @@ pub use device::CxlDevice;
 pub use link::CxlLink;
 pub use mem_proto::{M2SOpcode, S2MOpcode};
 pub use root_complex::{CxlRootComplex, HdmWindow};
+pub use switch::CxlSwitch;

@@ -43,6 +43,12 @@ pub mod comp {
     /// CXL 2.0 §8.2.5.12.7 interleave fields, programmed non-zero when
     /// the decoder participates in a multi-device window.
     pub const DEC_CTRL: u64 = 0x10;
+    /// Decoder DPA base ("DPA skip" in CXL 2.0 device decoders,
+    /// compacted into two dwords at +0x14/+0x18 of the stride): the
+    /// device-physical address this decoder's window maps onto —
+    /// non-zero for the upper logical-device slices of an MLD.
+    pub const DEC_DPA_LO: u64 = 0x14;
+    pub const DEC_DPA_HI: u64 = 0x18;
 
     pub const CTRL_COMMIT: u32 = 1 << 9;
     pub const CTRL_COMMITTED: u32 = 1 << 10;
@@ -273,6 +279,28 @@ impl ComponentRegs {
         );
     }
 
+    /// The device-physical base decoder i maps onto (0 unless the
+    /// decoder carries an MLD slice).
+    pub fn decoder_dpa_skip(&self, i: usize) -> u64 {
+        (self.read32(self.dec_reg(i, comp::DEC_DPA_LO)) as u64)
+            | ((self.read32(self.dec_reg(i, comp::DEC_DPA_HI)) as u64)
+                << 32)
+    }
+
+    /// Program decoder i as a logical-device slice: a plain 1-way decode
+    /// of `[base, base+size)` onto device-physical `[dpa, dpa+size)`.
+    pub fn program_decoder_at(
+        &mut self,
+        i: usize,
+        base: u64,
+        size: u64,
+        dpa: u64,
+    ) {
+        self.write32(self.dec_reg(i, comp::DEC_DPA_LO), dpa as u32);
+        self.write32(self.dec_reg(i, comp::DEC_DPA_HI), (dpa >> 32) as u32);
+        self.program_decoder(i, base, size);
+    }
+
     /// The committed interleave parameters of decoder i:
     /// `(ways, granularity_bytes)`.
     pub fn decoder_interleave(&self, i: usize) -> (usize, u64) {
@@ -321,6 +349,17 @@ mod tests {
         let mut p = ComponentRegs::new(1);
         p.program_decoder(0, 4 << 30, 4 << 30);
         assert_eq!(p.decoder_interleave(0), (1, 256));
+    }
+
+    #[test]
+    fn dpa_skip_roundtrips_per_decoder() {
+        let mut r = ComponentRegs::new(2);
+        r.program_decoder_at(0, 4 << 30, 2 << 30, 0);
+        r.program_decoder_at(1, 8 << 30, 2 << 30, 2 << 30);
+        assert!(r.decoder_committed(0) && r.decoder_committed(1));
+        assert_eq!(r.decoder_dpa_skip(0), 0);
+        assert_eq!(r.decoder_dpa_skip(1), 2 << 30);
+        assert_eq!(r.decoder_range(1), (8 << 30, 2 << 30));
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::stats::{Counter, Histogram, StatDump};
 
 use super::link::{CxlLink, LinkStats};
 use super::mem_proto::{self, CxlMemPacket};
+use super::switch::CxlSwitch;
 
 #[derive(Clone, Debug, Default)]
 pub struct RcStats {
@@ -37,6 +38,9 @@ pub struct HdmWindow {
     pub targets: Vec<usize>,
     /// XOR target-selection arithmetic instead of modulo.
     pub xor: bool,
+    /// Device-physical base the window maps onto (mirrors the endpoint
+    /// decoder's DPA skip): non-zero for the upper LD slices of an MLD.
+    pub dpa_base: u64,
 }
 
 impl HdmWindow {
@@ -73,16 +77,18 @@ impl HdmWindow {
         self.targets[self.slot(addr)]
     }
 
-    /// Strip the interleave bits: window-relative HPA -> device DPA.
-    /// Valid for modulo arithmetic; XOR permutes targets within each
-    /// ways-sized granule group, so the dense packing is identical.
+    /// Strip the interleave bits: window-relative HPA -> device DPA
+    /// (offset into the window's LD slice via `dpa_base`). Valid for
+    /// modulo arithmetic; XOR permutes targets within each ways-sized
+    /// granule group, so the dense packing is identical.
     pub fn dpa(&self, addr: u64) -> u64 {
         let off = addr - self.base;
         let ways = self.targets.len() as u64;
         if ways == 1 {
-            return off;
+            return self.dpa_base + off;
         }
-        (off / (self.granularity * ways)) * self.granularity
+        self.dpa_base
+            + (off / (self.granularity * ways)) * self.granularity
             + off % self.granularity
     }
 }
@@ -90,8 +96,16 @@ impl HdmWindow {
 pub struct CxlRootComplex {
     pkt_ticks: Tick,
     depkt_ticks: Tick,
-    /// One physical link per expander device, indexed by device.
+    /// One leaf link per expander device: the root-port link when the
+    /// device is direct-attached, the switch downstream-port link when
+    /// it sits behind a switch.
     pub links: Vec<CxlLink>,
+    /// Virtual switches between root ports and endpoints.
+    pub switches: Vec<CxlSwitch>,
+    /// Route table: the switch (if any) on device i's path. Routing is
+    /// by hierarchy — flow control and the extra hops follow this
+    /// table, not a flat device index.
+    dev_switch: Vec<Option<usize>>,
     next_tag: u16,
     pub stats: RcStats,
     /// Committed HDM windows (mirrors the host-bridge decoders;
@@ -113,10 +127,28 @@ impl CxlRootComplex {
                 )
             })
             .collect();
+        let switches = (0..cfg.switches)
+            .map(|j| {
+                let s = cfg.switch(j);
+                CxlSwitch::new(
+                    s.link_lat_ns,
+                    s.link_bw_gbps,
+                    s.fwd_lat_ns,
+                    cfg.flit_bytes,
+                    cfg.credits,
+                    (s.first_dev..s.first_dev + s.ndev).collect(),
+                )
+            })
+            .collect();
+        let dev_switch = (0..cfg.devices.max(1))
+            .map(|i| cfg.switch_of(i))
+            .collect();
         CxlRootComplex {
             pkt_ticks: ns_to_ticks(cfg.pkt_lat_ns),
             depkt_ticks: ns_to_ticks(cfg.depkt_lat_ns),
             links,
+            switches,
+            dev_switch,
             next_tag: 0,
             stats: RcStats::default(),
             windows: Vec::new(),
@@ -133,6 +165,7 @@ impl CxlRootComplex {
             granularity: 256,
             targets: vec![0],
             xor: false,
+            dpa_base: 0,
         });
     }
 
@@ -181,9 +214,13 @@ impl CxlRootComplex {
         self.links.iter().map(|l| f(&l.stats)).sum()
     }
 
-    /// Packetize a host request at `now` onto device `dev`'s link:
-    /// * `Ok((pkt, device_arrival))` — entered the link.
+    /// Packetize a host request at `now` onto device `dev`'s path:
+    /// * `Ok((pkt, device_arrival))` — entered the link(s).
     /// * `Err(retry_at)` — no M2S credit; retry at the given tick.
+    ///
+    /// For a direct-attached device the credit pool is its root-port
+    /// link; behind a switch it is the switch's *shared* upstream link,
+    /// so siblings contend for both credits and upstream wire time.
     pub fn packetize_and_send(
         &mut self,
         now: Tick,
@@ -191,11 +228,14 @@ impl CxlRootComplex {
         dev: usize,
     ) -> Result<(CxlMemPacket, Tick), Tick> {
         let after_pkt = now + self.pkt_ticks;
-        let link = &mut self.links[dev];
-        match link.credit_available_at(after_pkt) {
+        let credit_link = match self.dev_switch[dev] {
+            Some(s) => &mut self.switches[s].us_link,
+            None => &mut self.links[dev],
+        };
+        match credit_link.credit_available_at(after_pkt) {
             Some(t) if t <= after_pkt => {}
             Some(t) => {
-                link.note_credit_stall(after_pkt, t);
+                credit_link.note_credit_stall(after_pkt, t);
                 return Err(t);
             }
             None => panic!("zero-credit link"),
@@ -206,13 +246,21 @@ impl CxlRootComplex {
             .expect("unroutable command reached the RC");
         self.stats.packetized.inc();
         self.stats.packetize_ticks.add(self.pkt_ticks);
-        let arrival = self.links[dev].send_m2s(after_pkt, &pkt);
+        let arrival = match self.dev_switch[dev] {
+            None => self.links[dev].send_m2s(after_pkt, &pkt),
+            Some(s) => {
+                // Upstream hop (consumes the shared credit), then the
+                // uncredited downstream hop to the endpoint.
+                let at_dsp = self.switches[s].forward_m2s(after_pkt, &pkt);
+                self.links[dev].forward_m2s(at_dsp, &pkt)
+            }
+        };
         Ok((pkt, arrival))
     }
 
-    /// Device `dev`'s S2M response enters its link at `ready`; returns
-    /// the tick at which the host-side response is available (after
-    /// link + RC-side de-packetization).
+    /// Device `dev`'s S2M response enters its leaf link at `ready`;
+    /// returns the tick at which the host-side response is available
+    /// (after the path's link hops + RC-side de-packetization).
     pub fn receive_s2m(
         &mut self,
         ready: Tick,
@@ -220,9 +268,18 @@ impl CxlRootComplex {
         issued_at: Tick,
         dev: usize,
     ) -> Tick {
-        let rc_arrival = self.links[dev].send_s2m(ready, resp);
+        let rc_arrival = match self.dev_switch[dev] {
+            None => self.links[dev].send_s2m(ready, resp),
+            Some(s) => {
+                let at_sw = self.links[dev].send_s2m(ready, resp);
+                self.switches[s].forward_s2m(at_sw, resp)
+            }
+        };
         let done = rc_arrival + self.depkt_ticks; // RC-side unpack
-        self.links[dev].retire(done);
+        match self.dev_switch[dev] {
+            Some(s) => self.switches[s].us_link.retire(done),
+            None => self.links[dev].retire(done),
+        }
         self.stats.responses.inc();
         self.stats.round_trip.sample(done.saturating_sub(issued_at));
         done
@@ -320,10 +377,58 @@ mod tests {
             granularity: 256,
             targets: vec![0, 1],
             xor: false,
+            dpa_base: 0,
         });
         // Exhausting device 0's credit leaves device 1 usable.
         r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
         assert!(r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).is_err());
+        assert!(r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 1).is_ok());
+    }
+
+    #[test]
+    fn switched_path_adds_hops_and_shares_credits() {
+        let mut cfg = SimConfig::default().cxl;
+        cfg.devices = 2;
+        cfg.interleave_ways = 1;
+        cfg.switches = 1;
+        cfg.credits = 1;
+        let mut r = CxlRootComplex::new(&cfg);
+        assert_eq!(r.switches.len(), 1);
+        assert_eq!(r.switches[0].devices, vec![0, 1]);
+        r.add_window(HdmWindow {
+            base: 4 << 30,
+            size: 4 << 30,
+            granularity: 256,
+            targets: vec![0],
+            xor: false,
+            dpa_base: 0,
+        });
+        let (p, arr) =
+            r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
+        // Direct default: pkt 25 ns + ser 2.125 + link 20 ns. Switched
+        // adds the upstream hop (ser 2.125 + 20 ns) and 25 ns forward.
+        let direct = ns_to_ticks(25.0) + 2125 + ns_to_ticks(20.0);
+        assert_eq!(arr, direct + 2125 + ns_to_ticks(20.0 + 25.0));
+        // The shared upstream pool back-pressures the *sibling* device.
+        let e = r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 1);
+        assert!(e.is_err(), "sibling must stall on the shared credit");
+        assert_eq!(r.switches[0].us_link.stats.credit_stalls.get(), 1);
+        // Retiring the first response frees the pool for the sibling.
+        let resp = mem_proto::make_response(&p);
+        let done = r.receive_s2m(arr + 100, &resp, 0, 0);
+        assert!(r.packetize_and_send(done, &pkt(MemCmd::ReadReq), 1).is_ok());
+    }
+
+    #[test]
+    fn direct_devices_keep_independent_credit_pools() {
+        let mut cfg = SimConfig::default().cxl;
+        cfg.devices = 2;
+        cfg.interleave_ways = 1;
+        cfg.credits = 1;
+        let mut r = CxlRootComplex::new(&cfg);
+        assert!(r.switches.is_empty());
+        r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
+        // Without a switch, device 1's pool is untouched.
         assert!(r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 1).is_ok());
     }
 
@@ -335,6 +440,7 @@ mod tests {
             granularity: 1024,
             targets: vec![0, 1],
             xor: false,
+            dpa_base: 0,
         };
         let b = 4u64 << 30;
         assert_eq!(w.target(b), 0);
@@ -356,6 +462,7 @@ mod tests {
             granularity: 256,
             targets: vec![0, 1, 2, 3],
             xor: true,
+            dpa_base: 0,
         };
         let mut seen = [0u64; 4];
         for line in (0..(1u64 << 20)).step_by(256) {

@@ -2,13 +2,18 @@
 //!
 //! Everything happens through architectural surfaces:
 //!   1. CEDT (CHBS/CFMWS) from ACPI tells it where the host-bridge
-//!      component registers and the fixed memory window live.
-//!   2. The memdev endpoint is matched by class code 0502xx from the
-//!      PCI scan; its DVSECs are walked via config MMIO; the Register
-//!      Locator DVSEC yields the BAR-relative component/device blocks.
-//!   3. The mailbox (doorbell poll) runs IDENTIFY to learn capacity.
-//!   4. HDM decoders are programmed + committed on BOTH the host bridge
-//!      and the endpoint, mapping the CFMWS window onto the device.
+//!      component registers and the fixed memory windows live.
+//!   2. Memdev endpoints are matched by class code 0502xx from the PCI
+//!      scan and placed under their root port by walking the bridge
+//!      secondary/subordinate bus ranges — one level deep for direct
+//!      attach, through upstream/downstream switch bridges otherwise.
+//!      DVSECs are walked via config MMIO; the Register Locator DVSEC
+//!      yields the BAR-relative component/device blocks.
+//!   3. The mailbox (doorbell poll) runs IDENTIFY to learn capacity and
+//!      the FM-API Get LD Info to learn the logical-device count.
+//!   4. Per logical device, HDM decoders are programmed + committed on
+//!      BOTH the host bridge and the endpoint, mapping one CFMWS window
+//!      onto that LD's capacity slice (DPA skip).
 
 use anyhow::{bail, Context, Result};
 
@@ -18,15 +23,19 @@ use crate::pcie::config_space::{CXL_VENDOR_ID, DVSEC_CXL_DEVICE,
                                 DVSEC_REGISTER_LOCATOR};
 use crate::pcie::Bdf;
 
-use super::acpi_parse::AcpiInfo;
+use super::acpi_parse::{AcpiInfo, CfmwsInfo, ChbsInfo};
 use super::pci_scan::{self, PciDev};
 use super::Platform;
 
-/// What the driver bound and where.
+/// What the driver bound and where: one entry per *logical* device (an
+/// SLD contributes one, an MLD with `lds = K` contributes K sharing a
+/// BDF/mailbox but mapping distinct windows).
 #[derive(Clone, Debug)]
 pub struct CxlMemdev {
     pub bdf: Bdf,
     pub serial: u64,
+    /// Capacity this logical device contributes (the full card for an
+    /// SLD, one slice for an MLD LD).
     pub capacity: u64,
     /// Host-physical window the HDM decoders map (the full CFMWS
     /// window; an interleaved device holds every `ways`-th granule).
@@ -39,6 +48,10 @@ pub struct CxlMemdev {
     pub window_arith: u8,
     /// This device's slot in the CFMWS target list.
     pub position: usize,
+    /// Logical-device index within the endpoint (0 for SLDs).
+    pub ld: u16,
+    /// Logical devices the endpoint exposes.
+    pub lds: u16,
     pub component_block: u64, // absolute MMIO base (endpoint)
     pub device_block: u64,    // absolute MMIO base (mailbox)
     pub hb_component_block: u64,
@@ -89,36 +102,47 @@ pub fn mailbox_command(
     Ok((code, resp))
 }
 
-/// Program and commit decoder 0 of a component block at `blk` to map
-/// `[base, base+size)` with the given interleave encodings (IG:
-/// granularity = 256 << ig; IW: ways = 1 << eniw).
+/// Program and commit decoder `idx` of a component block at `blk` to
+/// map `[base, base+size)` onto device-physical `[dpa, dpa+size)` with
+/// the given interleave encodings (IG: granularity = 256 << ig; IW:
+/// ways = 1 << eniw).
+#[allow(clippy::too_many_arguments)]
 fn commit_decoder(
     p: &mut dyn Platform,
     blk: u64,
+    idx: usize,
     base: u64,
     size: u64,
     ig: u8,
     eniw: u8,
+    dpa: u64,
 ) -> Result<()> {
-    let dec = blk + comp::HDM_DEC0;
+    let dec = blk + comp::HDM_DEC0 + (idx as u64) * comp::HDM_DEC_STRIDE;
     p.mmio_write32(dec + comp::DEC_BASE_LO, base as u32);
     p.mmio_write32(dec + comp::DEC_BASE_HI, (base >> 32) as u32);
     p.mmio_write32(dec + comp::DEC_SIZE_LO, size as u32);
     p.mmio_write32(dec + comp::DEC_SIZE_HI, (size >> 32) as u32);
+    p.mmio_write32(dec + comp::DEC_DPA_LO, dpa as u32);
+    p.mmio_write32(dec + comp::DEC_DPA_HI, (dpa >> 32) as u32);
     p.mmio_write32(dec + comp::DEC_CTRL, comp::dec_ctrl_commit(ig, eniw));
     let ctrl = p.mmio_read32(dec + comp::DEC_CTRL);
     if ctrl & comp::CTRL_COMMITTED == 0 {
-        bail!("HDM decoder refused commit (ctrl={ctrl:#x})");
+        bail!("HDM decoder {idx} refused commit (ctrl={ctrl:#x})");
     }
     // Global enable (bit 1).
     p.mmio_write32(blk + comp::HDM_GLOBAL_CTRL, 0b10);
     Ok(())
 }
 
-/// Bind every CXL memdev: endpoints (class 0502, BDF order) pair with
-/// the CEDT host bridges (UID order) — the simulator wires root port
-/// `i` beneath host bridge `i`, so order-pairing mirrors the ACPI
-/// namespace association a full _PRT walk would produce.
+/// Bind every CXL memdev by walking the PCIe *hierarchy*: the type-1
+/// bridges on bus 0 are the CXL root ports; root port `i` (BDF order)
+/// pairs with CHBS entry `i` (UID order) — the simulator wires them in
+/// that order, mirroring the ACPI namespace association a full _PRT
+/// walk would produce. Every class-0502 endpoint whose bus falls in a
+/// root port's [secondary, subordinate] range belongs to that bridge,
+/// whether direct-attached or behind a switch's upstream/downstream
+/// bridges. Each bridge's CFMWS windows (CEDT order) are then consumed
+/// by its endpoints in BDF order, one window per logical device.
 pub fn bind_all(
     p: &mut dyn Platform,
     acpi: &AcpiInfo,
@@ -128,6 +152,18 @@ pub fn bind_all(
     chbs.sort_by_key(|c| c.uid);
     if chbs.is_empty() {
         bail!("no CHBS in CEDT — BIOS did not describe a CXL host bridge");
+    }
+    let mut root_ports: Vec<&PciDev> = pci_devs
+        .iter()
+        .filter(|d| d.is_bridge && d.bdf.bus == 0)
+        .collect();
+    root_ports.sort_by_key(|d| d.bdf);
+    if root_ports.len() != chbs.len() {
+        bail!(
+            "{} root ports but {} CXL host bridges",
+            root_ports.len(),
+            chbs.len()
+        );
     }
     let mut eps: Vec<&PciDev> = pci_devs
         .iter()
@@ -139,43 +175,65 @@ pub fn bind_all(
     if eps.is_empty() {
         bail!("no CXL memory device on the PCIe bus");
     }
-    if eps.len() != chbs.len() {
+    let mut out = Vec::new();
+    let mut claimed = 0usize;
+    for (rp, hb) in root_ports.iter().zip(&chbs) {
+        let under: Vec<&PciDev> = eps
+            .iter()
+            .filter(|e| {
+                e.bdf.bus >= rp.secondary_bus
+                    && e.bdf.bus <= rp.subordinate_bus
+            })
+            .copied()
+            .collect();
+        if under.is_empty() {
+            bail!(
+                "CXL host bridge uid {} has no memdev beneath its root \
+                 port {}",
+                hb.uid,
+                rp.bdf
+            );
+        }
+        claimed += under.len();
+        let wins: Vec<&CfmwsInfo> = acpi
+            .cfmws
+            .iter()
+            .filter(|w| w.targets.contains(&hb.uid))
+            .collect();
+        // Bridge decoder index == position in the bridge's window list.
+        let mut cursor = 0usize;
+        for ep in under {
+            bind_endpoint(p, acpi, ep, hb, &wins, &mut cursor, &mut out)?;
+        }
+    }
+    if claimed != eps.len() {
         bail!(
-            "{} memdev endpoints but {} CXL host bridges",
-            eps.len(),
-            chbs.len()
+            "{} memdev endpoint(s) not under any CXL root port",
+            eps.len() - claimed
         );
     }
-    eps.iter()
-        .zip(&chbs)
-        .map(|(ep, hb)| bind_one(p, acpi, ep, hb))
-        .collect()
+    Ok(out)
 }
 
-/// Bind one endpoint beneath its host bridge: locate, identify, map.
-fn bind_one(
+/// Bind one endpoint beneath its host bridge: locate register blocks,
+/// IDENTIFY, learn the LD count, then commit one endpoint + host-bridge
+/// HDM decoder pair per logical device, consuming the bridge's windows
+/// at `cursor`. Appends one [`CxlMemdev`] per LD to `out`.
+fn bind_endpoint(
     p: &mut dyn Platform,
     acpi: &AcpiInfo,
     ep: &PciDev,
-    chbs: &super::acpi_parse::ChbsInfo,
-) -> Result<CxlMemdev> {
-    // 1. ACPI side: the window this bridge participates in.
-    let cfmws = acpi
-        .cfmws
-        .iter()
-        .find(|w| w.targets.contains(&chbs.uid))
-        .context("no CFMWS targeting the host bridge")?;
-    let position = cfmws
-        .targets
-        .iter()
-        .position(|&u| u == chbs.uid)
-        .unwrap();
+    chbs: &ChbsInfo,
+    wins: &[&CfmwsInfo],
+    cursor: &mut usize,
+    out: &mut Vec<CxlMemdev>,
+) -> Result<()> {
     if chbs.cxl_version == 0 {
         bail!("CXL 1.1 host bridges unsupported (RCD mode)");
     }
     let (ecam, ..) = acpi.ecam.context("no MCFG")?;
 
-    // 3. DVSEC walk: confirm CXL device + register locator.
+    // DVSEC walk: confirm CXL device + register locator.
     let cxl_dvsec =
         pci_scan::find_dvsec(p, ecam, ep.bdf, CXL_VENDOR_ID, DVSEC_CXL_DEVICE)
             .context("endpoint lacks CXL Device DVSEC")?;
@@ -215,7 +273,7 @@ fn bind_one(
     let device_block =
         dev_off.context("register locator lacks device block")?;
 
-    // 4. Wait for media, then IDENTIFY through the mailbox.
+    // Wait for media, then IDENTIFY through the mailbox.
     if p.mmio_read64(device_block + dev::MEMDEV_STATUS) & dev::MEDIA_READY == 0
     {
         bail!("media not ready");
@@ -231,34 +289,90 @@ fn bind_one(
     if capacity == 0 {
         bail!("device reports zero capacity");
     }
-    let ways = cfmws.targets.len();
-    // An N-way window spreads every member across the whole window;
-    // each decoder maps the full window with the interleave fields set.
-    let map_size = cfmws.window_size.min(capacity * ways as u64);
-    if !cfmws.granularity.is_power_of_two() || cfmws.granularity < 256 {
-        bail!("bad CFMWS granularity {:#x}", cfmws.granularity);
+    // Logical-device count (FM-API Get LD Info); SLDs report 1 and an
+    // UNSUPPORTED return degrades to the SLD path.
+    let (code, ldinfo) =
+        mailbox_command(p, device_block, opcode::GET_LD_INFO, &[])?;
+    let lds = if code == retcode::SUCCESS && ldinfo.len() >= 10 {
+        u16::from_le_bytes(ldinfo[8..10].try_into().unwrap()).max(1)
+    } else {
+        1
+    };
+    if capacity % lds as u64 != 0 {
+        bail!("capacity does not split across {lds} logical devices");
     }
-    let ig = (cfmws.granularity.trailing_zeros() - 8) as u8;
-    let eniw = ways.trailing_zeros() as u8;
+    let slice = capacity / lds as u64;
 
-    // 5. HDM decoders: endpoint first, then host bridge (commit order
-    // matters on real hardware: leaf before root).
-    commit_decoder(p, component_block, cfmws.base_hpa, map_size, ig, eniw)?;
-    commit_decoder(p, chbs.base, cfmws.base_hpa, map_size, ig, eniw)?;
+    for ld in 0..lds {
+        let cfmws = wins.get(*cursor).with_context(|| {
+            format!(
+                "host bridge uid {} has no CFMWS window left for {} LD {ld}",
+                chbs.uid, ep.bdf
+            )
+        })?;
+        let position = cfmws
+            .targets
+            .iter()
+            .position(|&u| u == chbs.uid)
+            .unwrap();
+        let ways = cfmws.targets.len();
+        // An N-way window spreads every member across the whole window
+        // (each decoder maps the full window with the interleave fields
+        // set); a 1-way window maps onto one LD slice via DPA skip.
+        let map_size = if ways == 1 {
+            cfmws.window_size.min(slice)
+        } else {
+            cfmws.window_size.min(capacity * ways as u64)
+        };
+        if !cfmws.granularity.is_power_of_two() || cfmws.granularity < 256 {
+            bail!("bad CFMWS granularity {:#x}", cfmws.granularity);
+        }
+        let ig = (cfmws.granularity.trailing_zeros() - 8) as u8;
+        let eniw = ways.trailing_zeros() as u8;
+        let dpa = ld as u64 * slice;
 
-    Ok(CxlMemdev {
-        bdf: ep.bdf,
-        serial,
-        capacity,
-        hpa_base: cfmws.base_hpa,
-        hpa_size: map_size,
-        window_ways: ways,
-        window_granularity: cfmws.granularity,
-        window_arith: cfmws.arith,
-        position,
-        component_block,
-        device_block,
-        hb_component_block: chbs.base,
-        hb_uid: chbs.uid,
-    })
+        // HDM decoders: endpoint first, then host bridge (commit order
+        // matters on real hardware: leaf before root). The endpoint
+        // uses decoder `ld`; the bridge uses its running window index.
+        commit_decoder(
+            p,
+            component_block,
+            ld as usize,
+            cfmws.base_hpa,
+            map_size,
+            ig,
+            eniw,
+            dpa,
+        )?;
+        commit_decoder(
+            p,
+            chbs.base,
+            *cursor,
+            cfmws.base_hpa,
+            map_size,
+            ig,
+            eniw,
+            0,
+        )?;
+
+        out.push(CxlMemdev {
+            bdf: ep.bdf,
+            serial,
+            capacity: slice,
+            hpa_base: cfmws.base_hpa,
+            hpa_size: map_size,
+            window_ways: ways,
+            window_granularity: cfmws.granularity,
+            window_arith: cfmws.arith,
+            position,
+            ld,
+            lds,
+            component_block,
+            device_block,
+            hb_component_block: chbs.base,
+            hb_uid: chbs.uid,
+        });
+        *cursor += 1;
+    }
+    Ok(())
 }

@@ -138,9 +138,14 @@ impl GuestOs {
         let memdevs = match cxl_driver::bind_all(p, &acpi, &pci_devs) {
             Ok(mds) => {
                 for (i, md) in mds.iter().enumerate() {
+                    let ld = if md.lds > 1 {
+                        format!(", LD {}/{}", md.ld, md.lds)
+                    } else {
+                        String::new()
+                    };
                     log.push(format!(
                         "cxl: mem{i} bound at {} — {} MiB, window {:#x} \
-                         ({}-way @ {} B, slot {})",
+                         ({}-way @ {} B, slot {}{ld})",
                         md.bdf,
                         md.capacity >> 20,
                         md.hpa_base,

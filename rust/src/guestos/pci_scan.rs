@@ -27,6 +27,10 @@ pub struct PciDev {
     pub class: [u8; 3], // base, sub, prog-if
     pub is_bridge: bool,
     pub secondary_bus: u8,
+    /// Highest bus number reachable below this bridge (type-1 header;
+    /// 0 for endpoints). The CXL driver uses [secondary, subordinate]
+    /// to place endpoints under their root port across switch levels.
+    pub subordinate_bus: u8,
     pub bars: Vec<PciBar>,
 }
 
@@ -138,10 +142,11 @@ pub fn enumerate(
             ];
             let hdr = (cfg_r32(p, ecam, bdf, 0x0C) >> 16) as u8 & 0x7F;
             let is_bridge = hdr == 0x01;
-            let secondary_bus = if is_bridge {
-                (cfg_r32(p, ecam, bdf, off::PRIMARY_BUS) >> 8) as u8
+            let (secondary_bus, subordinate_bus) = if is_bridge {
+                let v = cfg_r32(p, ecam, bdf, off::PRIMARY_BUS);
+                (((v >> 8) & 0xFF) as u8, ((v >> 16) & 0xFF) as u8)
             } else {
-                0
+                (0, 0)
             };
             let bars = if is_bridge {
                 Vec::new()
@@ -155,6 +160,7 @@ pub fn enumerate(
                 class,
                 is_bridge,
                 secondary_bus,
+                subordinate_bus,
                 bars,
             });
         }

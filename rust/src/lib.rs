@@ -21,8 +21,9 @@
 //!   the PJRT C API: functional cache warming (fast-forward) and the
 //!   differentiable latency-bandwidth calibration model.
 //!
-//! Start with [`system::System`] (topology + boot) or the
-//! `examples/quickstart.rs` end-to-end driver.
+//! Start with [`system::Machine`] (topology + boot + run) or the
+//! `examples/quickstart.rs` end-to-end driver; `README.md` has the
+//! layer map and `docs/CONFIG.md` the configuration reference.
 
 pub mod util;
 pub mod stats;

@@ -17,6 +17,9 @@ pub mod ids {
     /// Our root-port / host-bridge "silicon".
     pub const VENDOR_SIM: u16 = 0x1AF4;
     pub const DEV_ROOT_PORT: u16 = 0x0C01;
+    /// CXL switch upstream / downstream port bridges.
+    pub const DEV_SWITCH_USP: u16 = 0x0C02;
+    pub const DEV_SWITCH_DSP: u16 = 0x0C03;
     /// CXL Type-3 memory expander function.
     pub const VENDOR_CXL_DEV: u16 = 0x1E98;
     pub const DEV_CXL_MEMDEV: u16 = 0x0D93;
@@ -81,6 +84,97 @@ pub fn build_topology(ecam: &mut Ecam) -> (Bdf, Bdf, Bdf) {
     (hb, rps[0], eps[0])
 }
 
+/// The ECAM functions of one modeled switch.
+pub struct SwitchBdfs {
+    pub root_port: Bdf,
+    /// Upstream switch port (type-1 bridge below the root port).
+    pub upstream: Bdf,
+    /// One downstream port bridge per attached endpoint, in port order.
+    pub downstream: Vec<Bdf>,
+}
+
+/// Build a switched topology: bus 0 carries the host bridge plus one
+/// CXL root port per switch; each root port's secondary bus holds the
+/// switch's upstream bridge, whose internal bus carries one downstream
+/// bridge per attached endpoint; every endpoint sits alone on a leaf
+/// bus. `groups[j]` = endpoints behind switch j (assigned
+/// consecutively). The guest's flat bus scan discovers the full
+/// 3-bridge-deep hierarchy from the type-1 secondary/subordinate
+/// registers alone. Returns (host bridge, per-switch ports, endpoint
+/// BDFs flattened in device order).
+pub fn build_topology_switched(
+    ecam: &mut Ecam,
+    groups: &[usize],
+) -> (Bdf, Vec<SwitchBdfs>, Vec<Bdf>) {
+    let total: usize = groups.iter().sum();
+    assert!(total >= 1, "need at least one expander");
+    let buses_needed = 1 + groups.iter().map(|n| 2 + n).sum::<usize>();
+    assert!(
+        buses_needed <= ecam.buses as usize,
+        "ECAM window has {} buses; this switched topology needs \
+         {buses_needed}",
+        ecam.buses
+    );
+    let host_bridge = Bdf::new(0, 0, 0);
+    let hb = ConfigSpace::endpoint(
+        ids::VENDOR_SIM,
+        0x0C00,
+        [0x06, 0x00, 0x00], // host bridge class
+    );
+    ecam.attach(host_bridge, hb);
+
+    let mut switches = Vec::with_capacity(groups.len());
+    let mut endpoints = Vec::with_capacity(total);
+    let mut next_bus = 1u8;
+    for (j, &n) in groups.iter().enumerate() {
+        assert!(n >= 1 && n <= 30, "switch fanout out of range");
+        let usp_bus = next_bus;
+        let int_bus = usp_bus + 1;
+        let sub_bus = int_bus + n as u8;
+
+        let root_port = Bdf::new(0, (1 + j) as u8, 0);
+        let mut rp =
+            ConfigSpace::bridge(ids::VENDOR_SIM, ids::DEV_ROOT_PORT);
+        rp.w8(config_space::off::PRIMARY_BUS, 0);
+        rp.w8(config_space::off::SECONDARY_BUS, usp_bus);
+        rp.w8(config_space::off::SUBORDINATE_BUS, sub_bus);
+        ecam.attach(root_port, rp);
+
+        let upstream = Bdf::new(usp_bus, 0, 0);
+        let mut us =
+            ConfigSpace::bridge(ids::VENDOR_SIM, ids::DEV_SWITCH_USP);
+        us.w8(config_space::off::PRIMARY_BUS, usp_bus);
+        us.w8(config_space::off::SECONDARY_BUS, int_bus);
+        us.w8(config_space::off::SUBORDINATE_BUS, sub_bus);
+        ecam.attach(upstream, us);
+
+        let mut downstream = Vec::with_capacity(n);
+        for k in 0..n {
+            let leaf = int_bus + 1 + k as u8;
+            let dsp = Bdf::new(int_bus, k as u8, 0);
+            let mut ds =
+                ConfigSpace::bridge(ids::VENDOR_SIM, ids::DEV_SWITCH_DSP);
+            ds.w8(config_space::off::PRIMARY_BUS, int_bus);
+            ds.w8(config_space::off::SECONDARY_BUS, leaf);
+            ds.w8(config_space::off::SUBORDINATE_BUS, leaf);
+            ecam.attach(dsp, ds);
+
+            let ep_bdf = Bdf::new(leaf, 0, 0);
+            let ep = ConfigSpace::endpoint(
+                ids::VENDOR_CXL_DEV,
+                ids::DEV_CXL_MEMDEV,
+                ids::CLASS_CXL_MEM,
+            );
+            ecam.attach(ep_bdf, ep);
+            downstream.push(dsp);
+            endpoints.push(ep_bdf);
+        }
+        switches.push(SwitchBdfs { root_port, upstream, downstream });
+        next_bus = sub_bus + 1;
+    }
+    (host_bridge, switches, endpoints)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,6 +199,48 @@ mod tests {
         let c = e.function(rp).unwrap();
         assert_eq!(c.r8(off::SECONDARY_BUS), 1);
         assert_eq!(c.r8(off::SUBORDINATE_BUS), 1);
+    }
+
+    #[test]
+    fn switched_topology_builds_two_level_hierarchy() {
+        let mut e = Ecam::new(0xE000_0000, 16);
+        let (hb, sws, eps) = build_topology_switched(&mut e, &[4]);
+        // 1 HB + 1 RP + 1 USP + 4 DSP + 4 EP = 11 functions.
+        assert_eq!(e.functions().count(), 11);
+        assert!(e.function(hb).is_some());
+        assert_eq!(sws.len(), 1);
+        assert_eq!(eps.len(), 4);
+        let rp = e.function(sws[0].root_port).unwrap();
+        assert!(rp.is_bridge());
+        assert_eq!(rp.r8(off::SECONDARY_BUS), 1);
+        assert_eq!(rp.r8(off::SUBORDINATE_BUS), 6);
+        let us = e.function(sws[0].upstream).unwrap();
+        assert_eq!(us.r8(off::SECONDARY_BUS), 2);
+        assert_eq!(us.r8(off::SUBORDINATE_BUS), 6);
+        // Endpoints on leaf buses 3..=6, each behind its own DSP.
+        for (k, ep) in eps.iter().enumerate() {
+            assert_eq!(ep.bus, 3 + k as u8);
+            let ds = e.function(sws[0].downstream[k]).unwrap();
+            assert_eq!(ds.r8(off::SECONDARY_BUS), ep.bus);
+            assert_eq!(ds.r8(off::SUBORDINATE_BUS), ep.bus);
+            let epc = e.function(*ep).unwrap();
+            assert_eq!(epc.r8(off::CLASS_BASE), 0x05);
+        }
+    }
+
+    #[test]
+    fn two_switch_topology_keeps_bus_ranges_disjoint() {
+        let mut e = Ecam::new(0xE000_0000, 16);
+        let (_, sws, eps) = build_topology_switched(&mut e, &[2, 2]);
+        assert_eq!(eps.len(), 4);
+        let rp0 = e.function(sws[0].root_port).unwrap();
+        let rp1 = e.function(sws[1].root_port).unwrap();
+        assert!(
+            rp0.r8(off::SUBORDINATE_BUS) < rp1.r8(off::SECONDARY_BUS),
+            "bus ranges must not overlap"
+        );
+        // Device order follows switch order.
+        assert!(eps[1].bus < eps[2].bus);
     }
 
     #[test]

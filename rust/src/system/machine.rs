@@ -136,8 +136,18 @@ impl Machine {
 
         let mut ecam = Ecam::new(bios.ecam_base, layout::ECAM_BUSES);
         let n_dev = cfg.cxl.devices;
-        let (_hb, _rps, ep_bdfs) =
-            pcie::build_topology_n(&mut ecam, n_dev);
+        let n_bridges = cfg.cxl.bridges();
+        let ep_bdfs = if cfg.cxl.switches > 0 {
+            let groups: Vec<usize> = (0..cfg.cxl.switches)
+                .map(|j| cfg.cxl.switch(j).ndev)
+                .collect();
+            let (_hb, _sw, eps) =
+                pcie::build_topology_switched(&mut ecam, &groups);
+            eps
+        } else {
+            let (_hb, _rps, eps) = pcie::build_topology_n(&mut ecam, n_dev);
+            eps
+        };
         for (i, &ep_bdf) in ep_bdfs.iter().enumerate() {
             let dev_size = cfg.cxl.device(i).mem_size;
             let epc = ecam.function_mut(ep_bdf).unwrap();
@@ -177,8 +187,17 @@ impl Machine {
         let cxl_devs: Vec<CxlDevice> = (0..n_dev)
             .map(|i| CxlDevice::new_at(&cfg.cxl, i, 0xC0FFEE + i as u64))
             .collect();
-        let hb_components =
-            (0..n_dev).map(|_| ComponentRegs::new(1)).collect();
+        // One component block per host bridge, with one HDM decoder per
+        // window it decodes (one per LD of each device beneath it).
+        let hb_components = (0..n_bridges)
+            .map(|b| {
+                let decoders: usize = (0..n_dev)
+                    .filter(|&i| cfg.cxl.bridge_of(i) == b)
+                    .map(|i| cfg.cxl.device(i).lds)
+                    .sum();
+                ComponentRegs::new(decoders.max(1))
+            })
+            .collect();
 
         let l1_lat = ns_to_ticks(cfg.l1.lat_cycles as f64 * cfg.cycle_ns());
         let l2_lat = ns_to_ticks(cfg.l2.lat_cycles as f64 * cfg.cycle_ns());
@@ -186,7 +205,7 @@ impl Machine {
             .map(|i| {
                 ns_to_ticks(
                     2.0 * (cfg.cxl.pkt_lat_ns + cfg.cxl.depkt_lat_ns)
-                        + 2.0 * cfg.cxl.device(i).link_lat_ns,
+                        + 2.0 * cfg.cxl.path_lat_ns(i),
                 )
             })
             .collect();
@@ -247,16 +266,16 @@ impl Machine {
             GuestOs::boot(&mut world, &self.mem, self.cfg.page_size, model)
                 .context("guest boot failed")?;
         // Mirror the committed host-bridge decoders into the RC's
-        // interleave decoder: one window per set, carrying the set's
-        // member devices in CFMWS slot order, provided every member's
-        // bridge actually committed.
+        // interleave decoder: one window per definition (interleave set
+        // or MLD slice), carrying the member devices in CFMWS slot
+        // order, provided every member's *bridge* actually committed
+        // the range (routing is by hierarchy: device -> bridge).
         let xor = self.cfg.cxl.interleave_arith == InterleaveArith::Xor;
         let windows = self.bios.cxl_windows.clone();
-        for (set, &(base, size)) in windows.iter().enumerate() {
-            let members: Vec<usize> =
-                self.cfg.cxl.set_members(set).collect();
-            let all_committed = members.iter().all(|&i| {
-                self.hb_components[i]
+        let defs = self.cfg.cxl.window_defs();
+        for (def, &(base, size)) in defs.iter().zip(windows.iter()) {
+            let all_committed = def.targets.iter().all(|&i| {
+                self.hb_components[self.cfg.cxl.bridge_of(i)]
                     .committed_ranges()
                     .iter()
                     .any(|&(b, s)| b == base && s == size)
@@ -266,8 +285,10 @@ impl Machine {
                     base,
                     size,
                     granularity: self.cfg.cxl.interleave_granularity,
-                    targets: members,
+                    targets: def.targets.clone(),
                     xor,
+                    // 1-way LD slices relocate densely by slice size.
+                    dpa_base: def.ld as u64 * size,
                 });
             }
         }
@@ -903,7 +924,7 @@ impl Machine {
                         * (2.0
                             * (self.cfg.cxl.pkt_lat_ns
                                 + self.cfg.cxl.depkt_lat_ns)
-                            + 2.0 * self.cfg.cxl.device(i).link_lat_ns)
+                            + 2.0 * self.cfg.cxl.path_lat_ns(i))
                 })
                 .sum::<f64>()
                 / total_fills as f64
@@ -965,6 +986,9 @@ impl Machine {
         self.iobus.dump("iobus", &mut d);
         self.dram.timing.dump("dram", &mut d);
         self.rc.dump("cxl.rc", &mut d);
+        for (j, sw) in self.rc.switches.iter().enumerate() {
+            sw.dump(&format!("cxl.sw{j}"), &mut d);
+        }
         for (i, dev) in self.cxl_devs.iter().enumerate() {
             dev.dump(&format!("cxl.dev{i}"), &mut d);
             d.counter(
@@ -1068,6 +1092,75 @@ mod tests {
         let s = m.run(None);
         assert!(s.cxl_dev_fills[1] > 0);
         assert_eq!(s.cxl_dev_fills[0], 0);
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn switched_topology_boots_and_contends_upstream() {
+        let mut cfg = small_cfg();
+        cfg.cxl.devices = 2;
+        cfg.cxl.switches = 1;
+        let mut m = booted(cfg);
+        {
+            let g = m.guest.as_ref().unwrap();
+            assert_eq!(g.memdevs.len(), 2);
+            assert_eq!(g.cxl_nodes, vec![1, 2], "one node per endpoint");
+            // Both endpoints bound to the same (single) host bridge.
+            assert_eq!(g.memdevs[0].hb_uid, g.memdevs[1].hb_uid);
+        }
+        let a = Stream::new(StreamKernel::Copy, 8192, 1);
+        let b = Stream::new(StreamKernel::Copy, 8192, 1);
+        m.attach_workloads(
+            vec![Box::new(a), Box::new(b)],
+            &MemPolicy::Interleave { weights: vec![(1, 1), (2, 1)] },
+        )
+        .unwrap();
+        let s = m.run(None);
+        assert!(s.cxl_dev_fills.iter().all(|&f| f > 0));
+        // Every flit crossed the shared upstream link.
+        let sw = &m.rc.switches[0];
+        assert_eq!(
+            sw.stats.m2s_forwarded.get(),
+            s.m2s_req + s.m2s_rwd,
+            "all M2S traffic must be forwarded upstream"
+        );
+        let d = m.dump_stats();
+        assert!(d.get("cxl.sw0.us_link.flits").unwrap() > 0.0);
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn mld_onlines_one_node_per_ld() {
+        let mut cfg = small_cfg();
+        cfg.cxl.mem_size = 512 << 20;
+        cfg.cxl.dev_overrides =
+            vec![crate::config::CxlDevOverride {
+                lds: Some(2),
+                ..Default::default()
+            }];
+        let mut m = booted(cfg);
+        {
+            let g = m.guest.as_ref().unwrap();
+            assert_eq!(g.memdevs.len(), 2, "one memdev per LD");
+            assert_eq!(g.memdevs[0].bdf, g.memdevs[1].bdf);
+            assert_eq!((g.memdevs[0].ld, g.memdevs[1].ld), (0, 1));
+            assert_eq!(g.cxl_nodes, vec![1, 2]);
+            assert_eq!(g.alloc.nodes[1].size, 256 << 20);
+            assert_eq!(g.alloc.nodes[2].size, 256 << 20);
+        }
+        // Traffic bound to node 2 exercises only LD 1's slice.
+        let wl = Stream::new(StreamKernel::Copy, 4096, 1);
+        m.attach_workloads(
+            vec![Box::new(wl)],
+            &MemPolicy::Bind { nodes: vec![2] },
+        )
+        .unwrap();
+        let s = m.run(None);
+        assert!(s.cxl_accesses > 0);
+        assert_eq!(m.cxl_devs[0].stats.ld_reads[0].get(), 0);
+        assert!(m.cxl_devs[0].stats.ld_reads[1].get() > 0);
+        let d = m.dump_stats();
+        assert!(d.get("cxl.dev0.ld1.reads").unwrap() > 0.0);
         m.verify().unwrap();
     }
 

@@ -148,6 +148,149 @@ fn acpi_tables_valid_four_devices() {
     walk(4);
 }
 
+/// Parse the CEDT into (CHBS count, per-CFMWS target lists) and the
+/// SRAT into (domain, flags) memory entries — shared by the switched
+/// and MLD walks below.
+fn cedt_srat(m: &Machine) -> (usize, Vec<Vec<u32>>, Vec<(u32, u32)>) {
+    let rsdp_addr = find_rsdp(&m.mem);
+    let mut rsdp = vec![0u8; 36];
+    m.mem.read(rsdp_addr, &mut rsdp);
+    let xsdt_addr = u64::from_le_bytes(rsdp[24..32].try_into().unwrap());
+    let (_, xsdt) = read_sdt(&m.mem, xsdt_addr);
+    let mut chbs = 0usize;
+    let mut cfmws_targets = Vec::new();
+    let mut mem_domains = Vec::new();
+    for chunk in xsdt[36..].chunks_exact(8) {
+        let addr = u64::from_le_bytes(chunk.try_into().unwrap());
+        let (sig, t) = read_sdt(&m.mem, addr);
+        if sig == "CEDT" {
+            let mut i = 36;
+            while i + 4 <= t.len() {
+                let len = u16::from_le_bytes(
+                    t[i + 2..i + 4].try_into().unwrap(),
+                ) as usize;
+                match t[i] {
+                    0 => chbs += 1,
+                    1 => {
+                        let eniw = t[i + 24] as usize;
+                        let targets: Vec<u32> = (0..1usize << eniw)
+                            .map(|k| {
+                                u32::from_le_bytes(
+                                    t[i + 36 + 4 * k..i + 40 + 4 * k]
+                                        .try_into()
+                                        .unwrap(),
+                                )
+                            })
+                            .collect();
+                        cfmws_targets.push(targets);
+                    }
+                    _ => panic!("unknown CEDT record {}", t[i]),
+                }
+                i += len;
+            }
+        }
+        if sig == "SRAT" {
+            let mut i = 36 + 12;
+            while i + 2 <= t.len() {
+                let len = t[i + 1] as usize;
+                if t[i] == 1 {
+                    mem_domains.push((
+                        u32::from_le_bytes(
+                            t[i + 2..i + 6].try_into().unwrap(),
+                        ),
+                        u32::from_le_bytes(
+                            t[i + 28..i + 32].try_into().unwrap(),
+                        ),
+                    ));
+                }
+                i += len;
+            }
+        }
+    }
+    (chbs, cfmws_targets, mem_domains)
+}
+
+#[test]
+fn acpi_tables_switched_one_bridge_four_windows() {
+    // 1 switch x 4 endpoints: one root port / CHBS, four 1-way CFMWS
+    // windows all targeting it, and four hotplug SRAT domains.
+    let mut cfg = SimConfig::default();
+    cfg.cxl.devices = 4;
+    cfg.cxl.switches = 1;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.sys_mem_size = 512 << 20;
+    let m = Machine::new(cfg).unwrap();
+    let (chbs, cfmws, mem_domains) = cedt_srat(&m);
+    assert_eq!(chbs, 1, "one host bridge for the switch's root port");
+    assert_eq!(cfmws.len(), 4, "one window per endpoint");
+    for t in &cfmws {
+        assert_eq!(t, &vec![7u32], "every window targets bridge UID 7");
+    }
+    assert_eq!(mem_domains.len(), 5, "DRAM + 4 zNUMA domains");
+    for (dom, flags) in &mem_domains[1..] {
+        assert!(*dom >= 1 && *dom <= 4);
+        assert_eq!(flags & 0b11, 0b11, "enabled + hotplug");
+    }
+}
+
+#[test]
+fn acpi_tables_mld_per_ld_windows() {
+    // One MLD with lds = 2: two CFMWS windows targeting the same
+    // bridge, two hotplug SRAT domains.
+    let mut cfg = SimConfig::default();
+    cfg.cxl.interleave_ways = 1;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.sys_mem_size = 512 << 20;
+    cfg.cxl.dev_overrides = vec![cxlramsim::config::CxlDevOverride {
+        lds: Some(2),
+        ..Default::default()
+    }];
+    let m = Machine::new(cfg).unwrap();
+    let (chbs, cfmws, mem_domains) = cedt_srat(&m);
+    assert_eq!(chbs, 1);
+    assert_eq!(cfmws.len(), 2, "one window per logical device");
+    assert_eq!(cfmws[0], cfmws[1], "both slices target the same bridge");
+    assert_eq!(mem_domains.len(), 3, "DRAM + one domain per LD");
+}
+
+#[test]
+fn switched_boot_discovers_two_level_hierarchy() {
+    // The guest's flat scan must see the root port -> upstream bridge
+    // -> downstream bridge chain above every endpoint (depth 3), and
+    // online one zNUMA node per endpoint.
+    let mut cfg = SimConfig::default();
+    cfg.cxl.devices = 4;
+    cfg.cxl.switches = 1;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.sys_mem_size = 512 << 20;
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(cxlramsim::guestos::ProgModel::Znuma).unwrap();
+    let g = m.guest.as_ref().unwrap();
+    // 1 HB + 1 RP + 1 USP + 4 DSP + 4 EP.
+    assert_eq!(g.pci_devs.len(), 11);
+    let eps: Vec<_> = g
+        .pci_devs
+        .iter()
+        .filter(|d| d.class[0] == 0x05 && d.class[1] == 0x02)
+        .collect();
+    assert_eq!(eps.len(), 4);
+    for ep in &eps {
+        let depth = g
+            .pci_devs
+            .iter()
+            .filter(|b| {
+                b.is_bridge
+                    && ep.bdf.bus >= b.secondary_bus
+                    && ep.bdf.bus <= b.subordinate_bus
+            })
+            .count();
+        assert_eq!(depth, 3, "RP + USP + DSP above endpoint {}", ep.bdf);
+    }
+    assert_eq!(g.cxl_nodes, vec![1, 2, 3, 4]);
+    assert_eq!(g.memdevs.len(), 4);
+    assert!(g.memdevs.iter().all(|md| md.hb_uid == 7));
+}
+
 #[test]
 fn acpi_tables_valid_after_boot_too() {
     // Booting must not corrupt the published tables (the guest only

@@ -58,6 +58,7 @@ fn window(ways: usize, granularity: u64, xor: bool) -> HdmWindow {
         granularity,
         targets: (0..ways).collect(),
         xor,
+        dpa_base: 0,
     }
 }
 
@@ -185,4 +186,134 @@ fn golden_two_device_runs_are_bitwise_identical() {
     assert_eq!(a.5, b.5, "full stat dump diverged");
     // And the interleave actually engaged: both devices served fills.
     assert!(a.4.iter().all(|&f| f > 0), "fills {:?}", a.4);
+}
+
+// ---- switched topology + MLD pooling -----------------------------------
+
+/// The acceptance scenario: 1 switch x fanout 4, with one MLD exposing
+/// 2 LDs — boots through the unmodified guest path and onlines
+/// fanout + 1 zNUMA nodes (the per-LD nodes included).
+fn switched_mld_machine() -> Machine {
+    let mut cfg = SimConfig::default();
+    cfg.cores = 2;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.cxl.devices = 4;
+    cfg.cxl.switches = 1;
+    cfg.seed = 11;
+    // Device 3 is an MLD pooling two logical devices.
+    cfg.cxl.dev_overrides = vec![
+        Default::default(),
+        Default::default(),
+        Default::default(),
+        cxlramsim::config::CxlDevOverride {
+            lds: Some(2),
+            ..Default::default()
+        },
+    ];
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    m
+}
+
+#[test]
+fn switched_mld_onlines_fanout_plus_one_nodes() {
+    let m = switched_mld_machine();
+    let g = m.guest.as_ref().unwrap();
+    // fanout = 4 endpoints, one of which splits into 2 LDs: 5 nodes.
+    assert_eq!(g.cxl_nodes, vec![1, 2, 3, 4, 5]);
+    assert_eq!(g.memdevs.len(), 5, "one memdev per logical device");
+    // The two LD memdevs share a BDF but map distinct windows.
+    let mld: Vec<_> =
+        g.memdevs.iter().filter(|md| md.lds == 2).collect();
+    assert_eq!(mld.len(), 2);
+    assert_eq!(mld[0].bdf, mld[1].bdf);
+    assert_ne!(mld[0].hpa_base, mld[1].hpa_base);
+    assert_eq!(mld[0].capacity, 256 << 20, "512 MiB splits per LD");
+    // All endpoints hang off the single switch's host bridge.
+    assert!(g.memdevs.iter().all(|md| md.hb_uid == 7));
+}
+
+fn run_switched_mld_stream() -> (u64, u64, u64, Vec<u64>, String) {
+    let mut m = switched_mld_machine();
+    let a = Stream::new(StreamKernel::Triad, 8192, 1);
+    let b = Stream::new(StreamKernel::Copy, 8192, 1);
+    // Spread across an SLD node (2) and both MLD LD nodes (4, 5).
+    m.attach_workloads(
+        vec![Box::new(a), Box::new(b)],
+        &MemPolicy::Interleave { weights: vec![(2, 1), (4, 1), (5, 1)] },
+    )
+    .unwrap();
+    let s = m.run(None);
+    m.verify().unwrap();
+    (
+        s.ticks,
+        s.events,
+        s.cxl_accesses,
+        s.cxl_dev_fills.clone(),
+        m.dump_stats().to_text(),
+    )
+}
+
+#[test]
+fn golden_switched_mld_runs_are_bitwise_identical() {
+    let a = run_switched_mld_stream();
+    let b = run_switched_mld_stream();
+    assert_eq!(a.0, b.0, "ticks diverged");
+    assert_eq!(a.1, b.1, "event counts diverged");
+    assert_eq!(a.2, b.2, "cxl accesses diverged");
+    assert_eq!(a.3, b.3, "per-device fills diverged");
+    assert_eq!(a.4, b.4, "full stat dump diverged");
+    // The switch and both MLD LDs actually saw traffic.
+    assert!(a.4.contains("cxl.sw0.us_link.flits"));
+    assert!(a.3[1] > 0 && a.3[3] > 0, "fills {:?}", a.3);
+}
+
+#[test]
+fn switched_mld_reports_switch_and_ld_stats() {
+    let r = run_switched_mld_stream();
+    let dump = &r.4;
+    for key in [
+        "cxl.sw0.us_link.flits",
+        "cxl.sw0.m2s_forwarded",
+        "cxl.dev3.ld0.reads",
+        "cxl.dev3.ld1.reads",
+    ] {
+        assert!(dump.contains(key), "stat dump missing {key}");
+    }
+}
+
+#[test]
+fn upstream_contention_slows_switched_attach() {
+    // Two endpoints streaming concurrently: behind one switch they
+    // share the upstream link; direct-attached they do not. Same
+    // workload, measurably more ticks when switched.
+    let run = |switched: bool| {
+        let mut cfg = SimConfig::default();
+        cfg.cores = 2;
+        cfg.sys_mem_size = 256 << 20;
+        cfg.cxl.mem_size = 256 << 20;
+        cfg.cxl.devices = 2;
+        cfg.cxl.interleave_ways = 1;
+        if switched {
+            cfg.cxl.switches = 1;
+        }
+        let mut m = Machine::new(cfg).unwrap();
+        m.boot(ProgModel::Znuma).unwrap();
+        let a = Stream::new(StreamKernel::Triad, 16384, 1);
+        let b = Stream::new(StreamKernel::Triad, 16384, 1);
+        m.attach_workloads(
+            vec![Box::new(a), Box::new(b)],
+            &MemPolicy::Interleave { weights: vec![(1, 1), (2, 1)] },
+        )
+        .unwrap();
+        m.run(None).ticks
+    };
+    let direct = run(false);
+    let switched = run(true);
+    assert!(
+        switched > direct * 105 / 100,
+        "shared upstream link must cost time: direct {direct} vs \
+         switched {switched}"
+    );
 }
