@@ -41,7 +41,7 @@ fn main() {
     assert!(!g.alloc.nodes[1].has_cpus, "node 1 is CPU-less");
     assert!(m.rc.routes(md.hpa_base), "RC routes the HDM window");
     assert!(
-        m.cxl_devs[0].component.decoder_committed(0),
+        m.fabric.devices[0].component.decoder_committed(0),
         "endpoint decoder committed"
     );
     assert!(
@@ -49,7 +49,7 @@ fn main() {
         "host-bridge decoder committed"
     );
     assert!(
-        m.cxl_devs[0].mailbox.commands_executed >= 2,
+        m.fabric.devices[0].mailbox.commands_executed >= 2,
         "IDENTIFY + health"
     );
 

@@ -1,0 +1,112 @@
+//! Simulator-hosting throughput: events/second on the standard
+//! 4-device STREAM configuration — the number that tracks whether the
+//! event loop is getting faster or slower across PRs.
+//!
+//! Non-gating: CI runs it with `CXLRAMSIM_BENCH_QUICK=1` and uploads
+//! `BENCH_sim_throughput.json` (written to the repo root) as an
+//! artifact, so the perf trajectory is recorded without failing builds
+//! on noisy runners.
+//!
+//! Run: `cargo bench --bench sim_throughput`
+
+use cxlramsim::config::SimConfig;
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::system::Machine;
+use cxlramsim::util::bench::BenchRunner;
+use cxlramsim::workloads::{Stream, StreamKernel};
+
+fn standard_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.cores = 4;
+    cfg.sys_mem_size = 512 << 20;
+    cfg.cxl.devices = 4;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg
+}
+
+/// Build + boot the standard machine with 4 STREAM triad cores
+/// attached, split across DRAM and the 4-way interleaved CXL window —
+/// everything up to (but not including) the event loop.
+fn build_attached() -> Machine {
+    let cfg = standard_cfg();
+    let mut m = Machine::new(cfg.clone()).expect("machine");
+    m.boot(ProgModel::Znuma).expect("boot");
+    let wls: Vec<Box<dyn cxlramsim::workloads::Workload>> = (0..4)
+        .map(|_| {
+            Box::new(Stream::for_wss(StreamKernel::Triad, cfg.l2.size, 4))
+                as Box<dyn cxlramsim::workloads::Workload>
+        })
+        .collect();
+    m.attach_workloads(
+        wls,
+        &MemPolicy::Interleave { weights: vec![(0, 1), (1, 1)] },
+    )
+    .expect("attach");
+    m
+}
+
+/// One end-to-end iteration. Returns (events, ticks).
+fn run_once() -> (u64, u64) {
+    let s = build_attached().run(None);
+    (s.events, s.ticks)
+}
+
+/// Measure ONLY the event loop (`Machine::run`): boot/attach happen
+/// outside the timed region, so the headline metric tracks the loop
+/// and not ACPI-table construction cost. Returns (events, ticks,
+/// median loop ns over `samples` runs).
+fn measure_loop(samples: usize) -> (u64, u64, f64) {
+    let mut per_run = Vec::with_capacity(samples);
+    let mut events = 0;
+    let mut ticks = 0;
+    for _ in 0..samples {
+        let mut m = build_attached();
+        let t = std::time::Instant::now();
+        let s = m.run(None);
+        per_run.push(t.elapsed().as_nanos() as f64);
+        events = s.events;
+        ticks = s.ticks;
+    }
+    per_run.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (events, ticks, per_run[per_run.len() / 2])
+}
+
+fn main() {
+    let quick = std::env::var("CXLRAMSIM_BENCH_QUICK").is_ok();
+    let mut r = BenchRunner::new("sim_throughput");
+
+    // Event-loop-only timing: the perf-trajectory headline.
+    let (events, ticks, loop_ns) = measure_loop(if quick { 3 } else { 7 });
+    assert!(events > 0 && ticks > 0);
+    let events_per_sec = events as f64 * 1e9 / loop_ns;
+    let sim_ns = ticks as f64 / 1000.0; // ticks are ps
+    println!(
+        "sim_throughput: {events} events in {:.1} ms -> {:.0} events/s \
+         (host/sim time ratio {:.0}x, loop only)",
+        loop_ns / 1e6,
+        events_per_sec,
+        loop_ns / sim_ns
+    );
+
+    // End-to-end (new + boot + attach + run) for context.
+    let s = r.bench("stream4x_4dev_end_to_end", || {
+        std::hint::black_box(run_once());
+    });
+    r.finish();
+
+    // The perf-trajectory artifact, at the repo root where the driver
+    // (and CI artifact upload) expects BENCH_*.json files.
+    let json = format!(
+        "{{\"bench\":\"sim_throughput\",\"config\":\"stream-triad x4 \
+         cores, 4 devices, 4-way interleave\",\"events\":{events},\
+         \"sim_ticks\":{ticks},\"loop_median_ns\":{loop_ns:.1},\
+         \"events_per_sec\":{events_per_sec:.1},\
+         \"end_to_end_median_ns\":{:.1},\"end_to_end_p90_ns\":{:.1}}}\n",
+        s.median_ns, s.p90_ns
+    );
+    if let Err(e) = std::fs::write("BENCH_sim_throughput.json", &json) {
+        eprintln!("sim_throughput: could not write BENCH file: {e}");
+    } else {
+        println!("wrote BENCH_sim_throughput.json");
+    }
+}

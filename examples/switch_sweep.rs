@@ -94,7 +94,7 @@ fn main() -> anyhow::Result<()> {
         } else {
             (0..p.devices)
                 .map(|i| {
-                    d.get(&format!("cxl.rc.link{i}.credit_stalls"))
+                    d.get(&format!("cxl.link{i}.credit_stalls"))
                         .unwrap_or(0.0)
                 })
                 .sum()

@@ -67,8 +67,18 @@ pub struct BiosInfo {
     /// Span from the first window's base to the last window's end
     /// (may include alignment gaps between windows).
     pub cxl_window_size: u64,
-    /// One `(base, size)` per interleave set, in set order.
+    /// One `(base, size)` per published window, in window order.
     pub cxl_windows: Vec<(u64, u64)>,
+    /// For each published window, the index of its definition in
+    /// `cfg.cxl.window_defs()` — the identity the machine needs to
+    /// mirror routing windows when a host publishes only the subset of
+    /// windows the fabric manager bound to it.
+    pub cxl_window_defs: Vec<usize>,
+    /// First 1 GiB-aligned address after the last published window —
+    /// the next host's BIOS starts here so fabric-wide host physical
+    /// window bases stay globally unique (what keeps a shared MLD's
+    /// per-LD decoders unambiguous across hosts).
+    pub next_free_base: u64,
     pub tables_end: u64,
 }
 
@@ -81,23 +91,42 @@ pub fn cxl_window_base(sys_mem_size: u64) -> u64 {
     top.div_ceil(align) * align
 }
 
-/// Build the BIOS into `mem` per `cfg`. Returns the placement info.
+/// Build the BIOS into `mem` per `cfg`, publishing every CXL window
+/// (the single-host view). Returns the placement info.
 pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
-    let n_bridges = cfg.cxl.bridges();
-    let window_defs = cfg.cxl.window_defs();
+    let all: Vec<usize> = (0..cfg.cxl.window_defs().len()).collect();
+    build_with(cfg, mem, &all, cxl_window_base(cfg.sys_mem_size))
+}
 
-    // One fixed window per definition (interleave set or MLD logical-
-    // device slice), 1 GiB-aligned, packed above system DRAM.
+/// Build the BIOS into `mem`, publishing only the window definitions in
+/// `def_indices` (indices into `cfg.cxl.window_defs()`), with the first
+/// window placed at `first_base` (clamped above system DRAM / 4 GiB).
+/// This is the multi-host entry point: host N's firmware describes only
+/// the logical devices the fabric manager bound to it, at host physical
+/// bases disjoint from every other host's.
+pub fn build_with(
+    cfg: &SimConfig,
+    mem: &mut PhysMem,
+    def_indices: &[usize],
+    first_base: u64,
+) -> BiosInfo {
+    let n_bridges = cfg.cxl.bridges();
+    let all_defs = cfg.cxl.window_defs();
+    let window_defs: Vec<&crate::config::CxlWindowDef> =
+        def_indices.iter().map(|&i| &all_defs[i]).collect();
+
+    // One fixed window per published definition (interleave set or MLD
+    // logical-device slice), 1 GiB-aligned, packed upward.
     let mut windows = Vec::with_capacity(window_defs.len());
-    let mut next_base = cxl_window_base(cfg.sys_mem_size);
+    let mut next_base = first_base.max(cxl_window_base(cfg.sys_mem_size));
     for def in &window_defs {
         windows.push((next_base, def.size));
         next_base = (next_base + def.size).div_ceil(1 << 30) * (1 << 30);
     }
-    let span_base = windows[0].0;
-    let span_size = {
-        let &(last_base, last_size) = windows.last().unwrap();
-        last_base + last_size - span_base
+    let span_base = windows.first().map(|w| w.0).unwrap_or(next_base);
+    let span_size = match windows.last() {
+        Some(&(last_base, last_size)) => last_base + last_size - span_base,
+        None => 0,
     };
 
     // ---- E820 -----------------------------------------------------------
@@ -287,6 +316,8 @@ pub fn build(cfg: &SimConfig, mem: &mut PhysMem) -> BiosInfo {
         cxl_window_base: span_base,
         cxl_window_size: span_size,
         cxl_windows: windows,
+        cxl_window_defs: def_indices.to_vec(),
+        next_free_base: next_base,
         tables_end: cursor,
     }
 }
@@ -398,6 +429,69 @@ mod tests {
         assert_eq!(parsed.cfmws.len(), 2);
         assert_eq!(parsed.cfmws[0].targets, parsed.cfmws[1].targets);
         assert_eq!(parsed.mem_affinity.len(), 3);
+    }
+
+    #[test]
+    fn per_host_bios_publishes_subset_at_disjoint_bases() {
+        // An MLD with two LDs parceled to two hosts: each host's BIOS
+        // publishes one window, and the second host's base continues
+        // above the first host's span.
+        let mut cfg = SimConfig::default();
+        cfg.hosts = 2;
+        cfg.cxl.interleave_ways = 1;
+        cfg.cxl.dev_overrides = vec![crate::config::CxlDevOverride {
+            lds: Some(2),
+            ..Default::default()
+        }];
+        cfg.validate().unwrap();
+        let mut mem0 = PhysMem::new();
+        let info0 = build_with(
+            &cfg,
+            &mut mem0,
+            &[0],
+            cxl_window_base(cfg.sys_mem_size),
+        );
+        let mut mem1 = PhysMem::new();
+        let info1 =
+            build_with(&cfg, &mut mem1, &[1], info0.next_free_base);
+        assert_eq!(info0.cxl_windows.len(), 1);
+        assert_eq!(info1.cxl_windows.len(), 1);
+        assert_eq!(info0.cxl_window_defs, vec![0]);
+        assert_eq!(info1.cxl_window_defs, vec![1]);
+        let (b0, s0) = info0.cxl_windows[0];
+        let (b1, _) = info1.cxl_windows[0];
+        assert!(b1 >= b0 + s0, "host windows must not overlap");
+        // Each host's tables parse and carry exactly one CXL domain.
+        for mem in [&mem0, &mem1] {
+            let parsed = crate::guestos::acpi_parse::parse(
+                mem,
+                layout::RSDP_ADDR & !0xFFFF,
+            )
+            .unwrap();
+            assert_eq!(parsed.cfmws.len(), 1);
+            assert_eq!(parsed.mem_affinity.len(), 2);
+        }
+    }
+
+    #[test]
+    fn host_without_windows_gets_dram_only_tables() {
+        let cfg = SimConfig::default();
+        let mut mem = PhysMem::new();
+        let info = build_with(
+            &cfg,
+            &mut mem,
+            &[],
+            cxl_window_base(cfg.sys_mem_size),
+        );
+        assert!(info.cxl_windows.is_empty());
+        assert_eq!(info.cxl_window_size, 0);
+        let parsed = crate::guestos::acpi_parse::parse(
+            &mem,
+            layout::RSDP_ADDR & !0xFFFF,
+        )
+        .unwrap();
+        assert!(parsed.cfmws.is_empty());
+        assert_eq!(parsed.mem_affinity.len(), 1, "DRAM domain only");
     }
 
     #[test]

@@ -80,6 +80,10 @@ impl Args {
                     let v = val(&mut i)?;
                     a.sets.push(format!("cxl.devices={v}"));
                 }
+                "--hosts" => {
+                    let v = val(&mut i)?;
+                    a.sets.push(format!("system.hosts={v}"));
+                }
                 "--switches" => {
                     let v = val(&mut i)?;
                     a.sets.push(format!("cxl.switches={v}"));
@@ -172,6 +176,8 @@ pub fn print_help() {
            --set key=value        override a config key (repeatable)\n\
            --cpu inorder|o3       CPU model\n\
            --attach iobus|membus  CXL attach point (membus = baseline)\n\
+           --hosts H              simulated hosts sharing the fabric\n\
+                                  (LD pooling via [host.N] lds lists)\n\
            --devices N            number of CXL expander cards\n\
            --switches M           CXL switches between root ports and\n\
                                   endpoints (0 = direct attach)\n\
@@ -192,39 +198,38 @@ pub fn cmd_boot(args: &Args) -> Result<()> {
     let cfg = args.config()?;
     let mut m = Machine::new(cfg)?;
     m.boot(args.prog_model)?;
-    {
-        let g = m.guest.as_ref().unwrap();
-        for line in &g.boot_log {
-            println!("[guest] {line}");
+    let nhosts = m.hosts.len();
+    for h in 0..nhosts {
+        if nhosts > 1 {
+            println!("\n===== host {h} =====");
         }
-        println!("\nNUMA topology:");
-        for n in &g.alloc.nodes {
-            println!(
-                "  node {}: {:#x}..{:#x} {} {}",
-                n.id,
-                n.base,
-                n.base + n.size,
-                if n.has_cpus { "cpus" } else { "CPU-LESS (zNUMA)" },
-                if n.online { "online" } else { "offline" }
-            );
-        }
-    }
-    let memdevs = m.guest.as_ref().unwrap().memdevs.clone();
-    if !memdevs.is_empty() {
-        println!("\ncxl list:");
-        let mut world = crate::system::MmioWorld {
-            ecam: &mut m.ecam,
-            cxl_devs: &mut m.cxl_devs,
-            hb_components: &mut m.hb_components,
-            chbs_base: crate::bios::layout::CHBS_BASE,
-            chbs_stride: crate::bios::layout::CHBS_SIZE,
-            ep_bdfs: &m.ep_bdfs,
+        let memdevs = {
+            let g = m.hosts[h].guest.as_ref().unwrap();
+            for line in &g.boot_log {
+                println!("[guest] {line}");
+            }
+            println!("\nNUMA topology:");
+            for n in &g.alloc.nodes {
+                println!(
+                    "  node {}: {:#x}..{:#x} {} {}",
+                    n.id,
+                    n.base,
+                    n.base + n.size,
+                    if n.has_cpus { "cpus" } else { "CPU-LESS (zNUMA)" },
+                    if n.online { "online" } else { "offline" }
+                );
+            }
+            g.memdevs.clone()
         };
-        for (i, md) in memdevs.iter().enumerate() {
-            println!(
-                "  {}",
-                crate::guestos::cxlcli::cxl_list(&mut world, md, i)?
-            );
+        if !memdevs.is_empty() {
+            println!("\ncxl list:");
+            let mut world = m.mmio_world(h);
+            for (i, md) in memdevs.iter().enumerate() {
+                println!(
+                    "  {}",
+                    crate::guestos::cxlcli::cxl_list(&mut world, md, i)?
+                );
+            }
         }
     }
     Ok(())
@@ -234,9 +239,23 @@ pub fn cmd_run(args: &Args) -> Result<()> {
     let cfg = args.config()?;
     let mut m = Machine::new(cfg.clone())?;
     m.boot(args.prog_model)?;
-    let wl = args.make_workload(&cfg)?;
-    let name = wl.name();
-    m.attach_workloads(vec![wl], &args.mem_policy()?)?;
+    // Every host runs the same workload/policy concurrently (policy
+    // node ids are host-local), so a --hosts N run actually measures
+    // the N-host contention scenario rather than idling hosts 1..N.
+    let policy = args.mem_policy()?;
+    let name = args.make_workload(&cfg)?.name();
+    for h in 0..m.hosts.len() {
+        let wl = args.make_workload(&cfg)?;
+        m.attach_workloads_to(h, vec![wl], &policy).with_context(
+            || {
+                format!(
+                    "host {h}: attaching workload (the policy's NUMA \
+                     node ids are host-local — does this host own a \
+                     matching node?)"
+                )
+            },
+        )?;
+    }
     let s = m.run(None);
     println!("workload: {name}");
     println!("policy:   {}", args.policy);
@@ -290,8 +309,12 @@ pub fn cmd_stats(args: &Args) -> Result<()> {
     let cfg = args.config()?;
     let mut m = Machine::new(cfg.clone())?;
     m.boot(args.prog_model)?;
-    let wl = args.make_workload(&cfg)?;
-    m.attach_workloads(vec![wl], &args.mem_policy()?)?;
+    let policy = args.mem_policy()?;
+    for h in 0..m.hosts.len() {
+        let wl = args.make_workload(&cfg)?;
+        m.attach_workloads_to(h, vec![wl], &policy)
+            .with_context(|| format!("host {h}: attaching workload"))?;
+    }
     m.run(None);
     print!("{}", m.dump_stats().to_text());
     Ok(())
@@ -436,6 +459,13 @@ mod tests {
         assert_eq!(cfg.cxl.devices, 2);
         assert_eq!(cfg.cxl.ways(), 2);
         assert_eq!(cfg.cxl.interleave_granularity, 1024);
+    }
+
+    #[test]
+    fn hosts_flag_reaches_config() {
+        let a = Args::parse(&sv(&["boot", "--hosts", "2"])).unwrap();
+        let cfg = a.config().unwrap();
+        assert_eq!(cfg.hosts, 2);
     }
 
     #[test]

@@ -6,8 +6,46 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::util::toml::TomlDoc;
+use crate::util::toml::{TomlDoc, TomlValue};
 use crate::util::{human_bytes, is_pow2};
+
+/// Maximum simulated hosts sharing one CXL fabric (`system.hosts`).
+pub const MAX_HOSTS: usize = 4;
+
+/// Reference to one logical device, written `"devN.ldK"` (or just
+/// `"devN"` for LD 0) in `[host.N] lds` lists. CXL windows are keyed by
+/// their first member device and LD index, so an interleave-set window
+/// is named by its first member with `ld0`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LdRef {
+    pub dev: usize,
+    pub ld: u16,
+}
+
+impl LdRef {
+    pub fn parse(s: &str) -> Result<Self> {
+        let rest = s
+            .strip_prefix("dev")
+            .with_context(|| format!("LD ref '{s}' must look like devN.ldK"))?;
+        let (d, l) = match rest.split_once(".ld") {
+            Some((d, l)) => (d, l),
+            None => (rest, "0"),
+        };
+        let dev = d
+            .parse::<usize>()
+            .with_context(|| format!("bad device index in LD ref '{s}'"))?;
+        let ld = l
+            .parse::<u16>()
+            .with_context(|| format!("bad LD index in LD ref '{s}'"))?;
+        Ok(LdRef { dev, ld })
+    }
+}
+
+impl std::fmt::Display for LdRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dev{}.ld{}", self.dev, self.ld)
+    }
+}
 
 /// CPU model selector (paper Table I: In-order, Out-of-Order).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -394,8 +432,9 @@ impl CxlConfig {
             if members.len() == 1 {
                 let i = members[0];
                 let d = self.device(i);
-                let slice = d.mem_size / d.lds as u64;
-                for ld in 0..d.lds {
+                let lds = d.lds.max(1);
+                let slice = d.mem_size / lds as u64;
+                for ld in 0..lds {
                     out.push(CxlWindowDef {
                         targets: vec![i],
                         ld: ld as u16,
@@ -427,6 +466,15 @@ impl CxlConfig {
 
 #[derive(Clone, Debug)]
 pub struct SimConfig {
+    /// Simulated hosts sharing the CXL fabric (1..=MAX_HOSTS). Each
+    /// host gets its own cores/caches/DRAM/BIOS/guest; the expanders,
+    /// switches and links are shared. LD ownership comes from
+    /// `[host.N] lds` lists, or round-robin over the windows when none
+    /// are given.
+    pub hosts: usize,
+    /// Explicit per-host LD assignments (`[host.N] lds = ["dev0.ld1"]`);
+    /// empty inner lists everywhere = automatic round-robin.
+    pub host_lds: Vec<Vec<LdRef>>,
     pub cores: usize,
     pub cpu_model: CpuModel,
     pub freq_ghz: f64,
@@ -450,6 +498,8 @@ pub struct SimConfig {
 impl Default for SimConfig {
     fn default() -> Self {
         SimConfig {
+            hosts: 1,
+            host_lds: Vec::new(),
             cores: 4,
             cpu_model: CpuModel::OutOfOrder,
             freq_ghz: 3.0,
@@ -526,9 +576,83 @@ impl SimConfig {
         1.0 / self.freq_ghz
     }
 
+    /// The `devN.ldK` key of every CXL window definition, in
+    /// [`CxlConfig::window_defs`] order.
+    pub fn window_keys(&self) -> Vec<LdRef> {
+        self.cxl
+            .window_defs()
+            .iter()
+            .map(|d| LdRef { dev: d.targets[0], ld: d.ld })
+            .collect()
+    }
+
+    /// The host owning each CXL window definition, in
+    /// [`CxlConfig::window_defs`] order: explicit `[host.N] lds` lists
+    /// when given, else round-robin over the windows. With one host
+    /// everything lands on host 0 (the pre-pooling behaviour).
+    pub fn window_hosts(&self) -> Vec<usize> {
+        let keys = self.window_keys();
+        if self.host_lds.iter().all(|l| l.is_empty()) {
+            return (0..keys.len()).map(|i| i % self.hosts).collect();
+        }
+        keys.iter()
+            .map(|k| {
+                self.host_lds
+                    .iter()
+                    .position(|lds| lds.contains(k))
+                    .expect("validated: explicit assignments are total")
+            })
+            .collect()
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.cores == 0 || self.cores > 64 {
             bail!("cores must be 1..=64 (paper evaluates up to 4)");
+        }
+        if self.hosts == 0 || self.hosts > MAX_HOSTS {
+            bail!("system.hosts must be 1..={MAX_HOSTS}");
+        }
+        if !self.host_lds.is_empty() && self.host_lds.len() != self.hosts {
+            bail!(
+                "host_lds has {} entries for {} hosts",
+                self.host_lds.len(),
+                self.hosts
+            );
+        }
+        if self.host_lds.iter().any(|l| !l.is_empty()) {
+            // Explicit assignment: every window must be named exactly
+            // once, and every name must denote an existing window.
+            let keys = self.window_keys();
+            let mut seen = std::collections::BTreeSet::new();
+            for (h, lds) in self.host_lds.iter().enumerate() {
+                for r in lds {
+                    if !keys.contains(r) {
+                        bail!(
+                            "host.{h}: '{r}' does not name a CXL window \
+                             (windows are keyed by first member device + \
+                             LD; this topology has: {})",
+                            keys.iter()
+                                .map(|k| k.to_string())
+                                .collect::<Vec<_>>()
+                                .join(", ")
+                        );
+                    }
+                    if !seen.insert(*r) {
+                        bail!(
+                            "'{r}' is assigned to more than one host \
+                             (LD ownership is exclusive)"
+                        );
+                    }
+                }
+            }
+            for k in &keys {
+                if !seen.contains(k) {
+                    bail!(
+                        "window '{k}' is not assigned to any host \
+                         (explicit [host.N] lds lists must be total)"
+                    );
+                }
+            }
         }
         self.l1.validate("l1")?;
         self.l2.validate("l2")?;
@@ -611,11 +735,27 @@ impl SimConfig {
         }
         if self.cxl.switches > 0 {
             if ways != 1 {
-                bail!(
-                    "interleaving across switched endpoints is not \
-                     modeled; use cxl.interleave_ways = 1 (or 0 = auto) \
-                     with cxl.switches > 0"
-                );
+                // Interleaving across switched endpoints is modeled for
+                // sets living entirely under ONE switch (the shared
+                // upstream link then carries the whole set's traffic);
+                // sets spanning switches or mixing direct/switched
+                // attach points are not.
+                for set in 0..self.cxl.interleave_sets() {
+                    let members: Vec<usize> =
+                        self.cxl.set_members(set).collect();
+                    let sw0 = self.cxl.switch_of(members[0]);
+                    if sw0.is_none()
+                        || members
+                            .iter()
+                            .any(|&i| self.cxl.switch_of(i) != sw0)
+                    {
+                        bail!(
+                            "interleave set {set} spans switch \
+                             boundaries; all members of a multi-way set \
+                             must sit behind the same switch"
+                        );
+                    }
+                }
             }
             let mut covered = 0usize;
             // bus 0 + per switch: upstream-bridge bus, internal bus and
@@ -727,6 +867,12 @@ impl SimConfig {
                         .with_context(|| format!("{} must be number", $key))?;
                 }
             };
+        }
+        get!("system.hosts", c.hosts, usize);
+        // Bound before the per-host allocation/lookup loop below runs
+        // off this value (validate() re-checks for programmatic use).
+        if c.hosts == 0 || c.hosts > MAX_HOSTS {
+            bail!("system.hosts must be 1..={MAX_HOSTS}");
         }
         get!("system.cores", c.cores, usize);
         get!("system.freq_ghz", c.freq_ghz, f64);
@@ -865,10 +1011,54 @@ impl SimConfig {
                 })?);
             }
         }
-        // Reject overrides for devices/switches that don't exist, and
-        // unknown keys inside valid sections, rather than silently
+        // Per-host LD assignments from [host.N] sections.
+        c.host_lds = vec![Vec::new(); c.hosts];
+        for h in 0..c.hosts {
+            if let Some(v) = doc.get(&format!("host.{h}.lds")) {
+                let items = match v {
+                    TomlValue::Arr(items) => items,
+                    _ => bail!(
+                        "host.{h}.lds must be an array of \"devN.ldK\" \
+                         strings"
+                    ),
+                };
+                for it in items {
+                    let s = it.as_str().with_context(|| {
+                        format!("host.{h}.lds entries must be strings")
+                    })?;
+                    c.host_lds[h].push(LdRef::parse(s)?);
+                }
+            }
+        }
+        // Reject overrides for devices/switches/hosts that don't exist,
+        // and unknown keys inside valid sections, rather than silently
         // dropping them (a likely off-by-one or typo in configs).
         for key in doc.entries.keys() {
+            if let Some(rest) = key.strip_prefix("host.") {
+                // `[host]` without an index (key = "host.lds") is a
+                // likely typo for `[host.0]` — reject it too, rather
+                // than silently dropping the assignment.
+                let Some((idx, field)) = rest.split_once('.') else {
+                    bail!(
+                        "'{key}': host sections must be indexed \
+                         ([host.N] with N in 0..{})",
+                        c.hosts
+                    );
+                };
+                match idx.parse::<usize>() {
+                    Ok(h) if h < c.hosts => {}
+                    _ => bail!(
+                        "'{key}' targets a host outside \
+                         system.hosts = {}",
+                        c.hosts
+                    ),
+                }
+                if field != "lds" {
+                    bail!(
+                        "unknown key '{key}' ([host.N] keys: [\"lds\"])"
+                    );
+                }
+            }
             if let Some(rest) = key.strip_prefix("cxl.dev") {
                 if let Some((idx, field)) = rest.split_once('.') {
                     match idx.parse::<usize>() {
@@ -933,7 +1123,14 @@ impl SimConfig {
             ),
             (
                 "Cores".into(),
-                format!("Up to {} cores (x86 ISA)", self.cores),
+                if self.hosts > 1 {
+                    format!(
+                        "{} hosts x up to {} cores (x86 ISA)",
+                        self.hosts, self.cores
+                    )
+                } else {
+                    format!("Up to {} cores (x86 ISA)", self.cores)
+                },
             ),
             (
                 "Cache Coherence".into(),
@@ -1113,14 +1310,134 @@ mod tests {
     }
 
     #[test]
-    fn switch_validation_rejects_bad_shapes() {
-        // Explicit multi-way interleave behind a switch: unsupported.
+    fn same_switch_interleave_now_allowed() {
+        // PR-3 lifts the 1-way restriction when the whole set sits
+        // behind ONE switch.
         let mut c = SimConfig::default();
         c.cxl.devices = 4;
         c.cxl.switches = 1;
         c.cxl.interleave_ways = 4;
+        c.validate().unwrap();
+        assert_eq!(c.cxl.interleave_sets(), 1);
+        assert_eq!(c.cxl.window_defs()[0].targets, vec![0, 1, 2, 3]);
+
+        // Two switches x two devices each: 2-way sets align per switch.
+        let mut c = SimConfig::default();
+        c.cxl.devices = 4;
+        c.cxl.switches = 2;
+        c.cxl.interleave_ways = 2;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn cross_switch_interleave_still_rejected() {
+        // A 4-way set over two 2-device switches spans the boundary.
+        let mut c = SimConfig::default();
+        c.cxl.devices = 4;
+        c.cxl.switches = 2;
+        c.cxl.interleave_ways = 4;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn hosts_and_ld_assignment_parse_and_validate() {
+        let cfg = SimConfig::from_toml(
+            "[system]\nhosts = 2\n[cxl]\ninterleave_ways = 1\n\
+             [cxl.dev0]\nlds = 2\n\
+             [host.0]\nlds = [\"dev0.ld0\"]\n\
+             [host.1]\nlds = [\"dev0.ld1\"]\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.hosts, 2);
+        assert_eq!(cfg.host_lds[0], vec![LdRef { dev: 0, ld: 0 }]);
+        assert_eq!(cfg.window_hosts(), vec![0, 1]);
+
+        // Auto round-robin when no [host.N] lists are given.
+        let cfg = SimConfig::from_toml(
+            "[system]\nhosts = 2\n[cxl]\ndevices = 2\n\
+             interleave_ways = 1\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.window_hosts(), vec![0, 1]);
+
+        // Single host: everything on host 0.
+        assert_eq!(SimConfig::default().window_hosts(), vec![0]);
+    }
+
+    #[test]
+    fn ld_assignment_rejects_bad_shapes() {
+        // Duplicate assignment (exclusivity).
+        let err = SimConfig::from_toml(
+            "[system]\nhosts = 2\n[cxl]\ndevices = 2\n\
+             interleave_ways = 1\n\
+             [host.0]\nlds = [\"dev0\"]\n\
+             [host.1]\nlds = [\"dev0\", \"dev1\"]\n",
+            &[],
+        );
+        assert!(err.is_err(), "duplicate LD assignment must fail");
+
+        // Partial assignment (totality).
+        let err = SimConfig::from_toml(
+            "[system]\nhosts = 2\n[cxl]\ndevices = 2\n\
+             interleave_ways = 1\n\
+             [host.0]\nlds = [\"dev0\"]\n",
+            &[],
+        );
+        assert!(err.is_err(), "partial explicit assignment must fail");
+
+        // Nonexistent window key.
+        let err = SimConfig::from_toml(
+            "[system]\nhosts = 2\n\
+             [host.0]\nlds = [\"dev0.ld3\"]\n\
+             [host.1]\nlds = [\"dev0.ld0\"]\n",
+            &[],
+        );
+        assert!(err.is_err(), "unknown LD ref must fail");
+
+        // [host.N] section outside system.hosts.
+        let err = SimConfig::from_toml(
+            "[host.1]\nlds = [\"dev0\"]\n",
+            &[],
+        );
+        assert!(err.is_err(), "host.1 with hosts = 1 must fail");
+
+        // Index-less [host] section (typo for [host.0]).
+        let err = SimConfig::from_toml(
+            "[host]\nlds = [\"dev0\"]\n",
+            &[],
+        );
+        assert!(err.is_err(), "[host] without an index must fail");
+
+        // hosts out of range.
+        let mut c = SimConfig::default();
+        c.hosts = MAX_HOSTS + 1;
         assert!(c.validate().is_err());
 
+        // Absurd hosts value in TOML fails cleanly (bounded before the
+        // per-host section loop allocates off it).
+        let err =
+            SimConfig::from_toml("[system]\nhosts = 1000000000\n", &[]);
+        assert!(err.is_err(), "huge hosts value must be rejected");
+        let err = SimConfig::from_toml("[system]\nhosts = 0\n", &[]);
+        assert!(err.is_err(), "hosts = 0 must be rejected");
+    }
+
+    #[test]
+    fn ld_ref_parses_both_forms() {
+        assert_eq!(
+            LdRef::parse("dev2.ld1").unwrap(),
+            LdRef { dev: 2, ld: 1 }
+        );
+        assert_eq!(LdRef::parse("dev0").unwrap(), LdRef { dev: 0, ld: 0 });
+        assert!(LdRef::parse("ld1").is_err());
+        assert!(LdRef::parse("dev.ld").is_err());
+        assert_eq!(LdRef { dev: 1, ld: 2 }.to_string(), "dev1.ld2");
+    }
+
+    #[test]
+    fn switch_validation_rejects_bad_shapes() {
         // More switches than devices: some switch is empty.
         let mut c = SimConfig::default();
         c.cxl.devices = 2;

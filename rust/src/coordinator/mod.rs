@@ -93,20 +93,22 @@ impl<W: Workload> Workload for WithTimedInit<W> {
     }
 }
 
-/// Capture the physical-line trace of a machine's init phase (per core).
-/// Must be called after `attach_workloads` (pages are faulted by then).
+/// Capture the physical-line trace of a machine's init phase (per core
+/// of host 0). Must be called after `attach_workloads` (pages are
+/// faulted by then).
 pub fn capture_init_trace(m: &mut Machine, core: usize) -> Result<Trace> {
-    let pairs = m
+    let line = m.cfg.l1.line;
+    let host = &mut m.hosts[0];
+    let pairs = host
         .workload(core)
         .map(|w| w.init_data())
         .unwrap_or_default();
-    let line = m.cfg.l1.line;
-    let Some(guest) = m.guest.as_mut() else {
+    let Some(guest) = host.guest.as_mut() else {
         bail!("machine not booted");
     };
     let mut t = Trace::default();
     for (va, _) in pairs {
-        let pa = m.spaces[core].translate(va, &mut guest.alloc)?;
+        let pa = host.spaces[core].translate(va, &mut guest.alloc)?;
         t.push((pa / line) as i32, true);
     }
     Ok(t)

@@ -30,6 +30,11 @@ pub struct DeviceStats {
     /// Per-logical-device traffic (len = lds; index by DPA slice).
     pub ld_reads: Vec<Counter>,
     pub ld_writes: Vec<Counter>,
+    /// Per-LD traffic attributed to the issuing host
+    /// (`[ld][host]`, host < [`crate::config::MAX_HOSTS`]) — makes
+    /// cross-host contention on a pooled MLD's media measurable.
+    pub ld_host_reads: Vec<[Counter; crate::config::MAX_HOSTS]>,
+    pub ld_host_writes: Vec<[Counter; crate::config::MAX_HOSTS]>,
 }
 
 pub struct CxlDevice {
@@ -79,6 +84,8 @@ impl CxlDevice {
             stats: DeviceStats {
                 ld_reads: vec![Counter::default(); lds],
                 ld_writes: vec![Counter::default(); lds],
+                ld_host_reads: vec![Default::default(); lds],
+                ld_host_writes: vec![Default::default(); lds],
                 ..Default::default()
             },
             bar0_base: None,
@@ -86,8 +93,9 @@ impl CxlDevice {
         }
     }
 
-    /// Handle an M2S packet arriving at `at`; returns (response packet,
-    /// tick at which it is ready to enter the S2M channel).
+    /// Handle an M2S packet arriving at `at` from host `host`; returns
+    /// (response packet, tick at which it is ready to enter the S2M
+    /// channel). Single-host setups pass host 0.
     ///
     /// `hpa_to_dpa` translation: the committed HDM decoder maps a host
     /// physical range onto device physical addresses starting at 0.
@@ -95,6 +103,7 @@ impl CxlDevice {
         &mut self,
         at: Tick,
         pkt: &CxlMemPacket,
+        host: u8,
     ) -> (CxlMemPacket, Tick) {
         self.stats.m2s_received.inc();
         let (is_write, hpa) = mem_proto::depacketize(pkt);
@@ -107,12 +116,15 @@ impl CxlDevice {
         self.stats.media_latency.sample(done - after_depkt);
         // The DPA slice identifies the logical device served.
         let ld = ((dpa / self.ld_slice) as usize).min(self.lds - 1);
+        let h = (host as usize).min(crate::config::MAX_HOSTS - 1);
         if is_write {
             self.stats.writes.inc();
             self.stats.ld_writes[ld].inc();
+            self.stats.ld_host_writes[ld][h].inc();
         } else {
             self.stats.reads.inc();
             self.stats.ld_reads[ld].inc();
+            self.stats.ld_host_reads[ld][h].inc();
         }
         // Pack the S2M response before it can enter the link.
         (mem_proto::make_response(pkt), done + self.pkt_ticks)
@@ -193,6 +205,22 @@ impl CxlDevice {
                 );
             }
         }
+        // Host attribution: which host's traffic each LD served (rows
+        // appear once a host has actually touched the LD).
+        for k in 0..self.lds {
+            for h in 0..crate::config::MAX_HOSTS {
+                let (r, w) = (
+                    &self.stats.ld_host_reads[k][h],
+                    &self.stats.ld_host_writes[k][h],
+                );
+                if r.get() > 0 {
+                    d.counter(&format!("{path}.ld{k}.host{h}_reads"), r);
+                }
+                if w.get() > 0 {
+                    d.counter(&format!("{path}.ld{k}.host{h}_writes"), w);
+                }
+            }
+        }
         self.media.dump(&format!("{path}.media"), d);
     }
 }
@@ -220,7 +248,7 @@ mod tests {
     #[test]
     fn read_returns_drs_after_depkt_plus_media() {
         let mut d = device();
-        let (resp, done) = d.handle_m2s(1000, &m2s(MemCmd::ReadReq, 2 << 30));
+        let (resp, done) = d.handle_m2s(1000, &m2s(MemCmd::ReadReq, 2 << 30), 0);
         assert_eq!(resp.channel, mem_proto::Channel::S2MDrs);
         // depkt = 25 ns; media >= tRCD+tCAS = 32 ns.
         assert!(done >= 1000 + ns_to_ticks(25.0 + 32.0));
@@ -230,7 +258,7 @@ mod tests {
     #[test]
     fn write_returns_ndr() {
         let mut d = device();
-        let (resp, _) = d.handle_m2s(0, &m2s(MemCmd::WriteReq, 2 << 30));
+        let (resp, _) = d.handle_m2s(0, &m2s(MemCmd::WriteReq, 2 << 30), 0);
         assert_eq!(resp.channel, mem_proto::Channel::S2MNdr);
         assert_eq!(d.stats.writes.get(), 1);
     }
@@ -279,13 +307,23 @@ mod tests {
         assert_eq!(d.hpa_to_dpa(6 << 30), 2 << 30);
         assert_eq!(d.hpa_to_dpa((6u64 << 30) + 4096), (2u64 << 30) + 4096);
         // Traffic lands in the right LD counter.
-        d.handle_m2s(0, &m2s(MemCmd::ReadReq, 4 << 30));
-        d.handle_m2s(0, &m2s(MemCmd::ReadReq, 6 << 30));
-        d.handle_m2s(0, &m2s(MemCmd::WriteReq, 6 << 30));
+        d.handle_m2s(0, &m2s(MemCmd::ReadReq, 4 << 30), 0);
+        d.handle_m2s(0, &m2s(MemCmd::ReadReq, 6 << 30), 1);
+        d.handle_m2s(0, &m2s(MemCmd::WriteReq, 6 << 30), 1);
         assert_eq!(d.stats.ld_reads[0].get(), 1);
         assert_eq!(d.stats.ld_reads[1].get(), 1);
         assert_eq!(d.stats.ld_writes[1].get(), 1);
         assert_eq!(d.stats.reads.get(), 2);
+        // Host attribution: host 0 read LD 0; host 1 owns LD 1 traffic.
+        assert_eq!(d.stats.ld_host_reads[0][0].get(), 1);
+        assert_eq!(d.stats.ld_host_reads[1][1].get(), 1);
+        assert_eq!(d.stats.ld_host_writes[1][1].get(), 1);
+        assert_eq!(d.stats.ld_host_reads[1][0].get(), 0);
+        let mut dump = crate::stats::StatDump::default();
+        d.dump("cxl.dev0", &mut dump);
+        assert_eq!(dump.get("cxl.dev0.ld1.host1_reads"), Some(1.0));
+        assert_eq!(dump.get("cxl.dev0.ld0.host0_reads"), Some(1.0));
+        assert!(dump.get("cxl.dev0.ld0.host1_reads").is_none());
     }
 
     #[test]
@@ -309,8 +347,8 @@ mod tests {
     #[test]
     fn row_locality_visible_through_device() {
         let mut d = device();
-        let (_, t1) = d.handle_m2s(0, &m2s(MemCmd::ReadReq, 2 << 30));
-        let (_, t2) = d.handle_m2s(t1, &m2s(MemCmd::ReadReq, (2 << 30) + 64));
+        let (_, t1) = d.handle_m2s(0, &m2s(MemCmd::ReadReq, 2 << 30), 0);
+        let (_, t2) = d.handle_m2s(t1, &m2s(MemCmd::ReadReq, (2 << 30) + 64), 0);
         // Second access is a row hit: strictly faster.
         assert!(t2 - t1 < t1);
     }

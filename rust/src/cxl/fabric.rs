@@ -1,0 +1,235 @@
+//! The shared CXL fabric: everything *below* the hosts' root complexes.
+//!
+//! A fabric owns the expander devices (SLDs and MLDs), the virtual
+//! switches, and the leaf links that connect them — the hardware that is
+//! physically shared when several simulated hosts pool the same MLD.
+//! Host-side state (HDM routing windows, packetizer, tags) stays in each
+//! host's [`super::CxlRootComplex`]; the fabric is where their traffic
+//! meets, so cross-host contention on a switch's upstream link or an
+//! MLD's media falls out of the shared occupancy state.
+//!
+//! The fabric also plays **Fabric Manager**: logical-device ownership is
+//! established by driving the FM-API bind commands through each device's
+//! real mailbox register surface ([`Fabric::bind_from_config`]), exactly
+//! the state the guests later query with Get LD Allocations.
+
+use anyhow::{bail, Result};
+
+use crate::config::CxlConfig;
+use crate::sim::Tick;
+use crate::stats::StatDump;
+
+use super::device::CxlDevice;
+use super::link::{CxlLink, LinkStats};
+use super::mailbox::{opcode, retcode};
+use super::mem_proto::CxlMemPacket;
+use super::switch::CxlSwitch;
+
+pub struct Fabric {
+    /// One leaf link per expander device: the root-port link when the
+    /// device is direct-attached, the switch downstream-port link when
+    /// it sits behind a switch.
+    pub links: Vec<CxlLink>,
+    /// Virtual switches between root ports and endpoints.
+    pub switches: Vec<CxlSwitch>,
+    /// Route table: the switch (if any) on device i's path. Routing is
+    /// by hierarchy — flow control and the extra hops follow this
+    /// table, not a flat device index.
+    dev_switch: Vec<Option<usize>>,
+    /// Expander device models, in config order.
+    pub devices: Vec<CxlDevice>,
+}
+
+impl Fabric {
+    pub fn new(cfg: &CxlConfig) -> Self {
+        let links = (0..cfg.devices.max(1))
+            .map(|i| {
+                let d = cfg.device(i);
+                CxlLink::new(
+                    d.link_lat_ns,
+                    d.link_bw_gbps,
+                    cfg.flit_bytes,
+                    cfg.credits,
+                )
+            })
+            .collect();
+        let switches = (0..cfg.switches)
+            .map(|j| {
+                let s = cfg.switch(j);
+                CxlSwitch::new(
+                    s.link_lat_ns,
+                    s.link_bw_gbps,
+                    s.fwd_lat_ns,
+                    cfg.flit_bytes,
+                    cfg.credits,
+                    (s.first_dev..s.first_dev + s.ndev).collect(),
+                )
+            })
+            .collect();
+        let dev_switch =
+            (0..cfg.devices.max(1)).map(|i| cfg.switch_of(i)).collect();
+        let devices = (0..cfg.devices.max(1))
+            .map(|i| CxlDevice::new_at(cfg, i, 0xC0FFEE + i as u64))
+            .collect();
+        Fabric { links, switches, dev_switch, devices }
+    }
+
+    /// Number of expander devices on the fabric.
+    pub fn ndev(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// The credit pool governing M2S flow control toward device `dev`:
+    /// its private root-port link when direct-attached, the *shared*
+    /// upstream link of its switch otherwise (so siblings — and other
+    /// hosts — back-pressure each other).
+    pub fn credit_link(&mut self, dev: usize) -> &mut CxlLink {
+        match self.dev_switch[dev] {
+            Some(s) => &mut self.switches[s].us_link,
+            None => &mut self.links[dev],
+        }
+    }
+
+    /// Carry an M2S packet from a root port down to device `dev`'s
+    /// endpoint; returns the endpoint arrival tick. The caller has
+    /// confirmed (and thereby consumed) a credit on
+    /// [`Fabric::credit_link`].
+    pub fn send_m2s(
+        &mut self,
+        at: Tick,
+        pkt: &CxlMemPacket,
+        dev: usize,
+    ) -> Tick {
+        match self.dev_switch[dev] {
+            None => self.links[dev].send_m2s(at, pkt),
+            Some(s) => {
+                // Upstream hop (consumes the shared credit), then the
+                // uncredited downstream hop to the endpoint.
+                let at_dsp = self.switches[s].forward_m2s(at, pkt);
+                self.links[dev].forward_m2s(at_dsp, pkt)
+            }
+        }
+    }
+
+    /// Carry device `dev`'s S2M response up to its root port; returns
+    /// the root-complex arrival tick (before RC-side de-packetization).
+    pub fn send_s2m(
+        &mut self,
+        ready: Tick,
+        resp: &CxlMemPacket,
+        dev: usize,
+    ) -> Tick {
+        match self.dev_switch[dev] {
+            None => self.links[dev].send_s2m(ready, resp),
+            Some(s) => {
+                let at_sw = self.links[dev].send_s2m(ready, resp);
+                self.switches[s].forward_s2m(at_sw, resp)
+            }
+        }
+    }
+
+    /// A response retired on the host side at `done`: free the credit on
+    /// device `dev`'s flow-control pool.
+    pub fn retire(&mut self, dev: usize, done: Tick) {
+        self.credit_link(dev).retire(done);
+    }
+
+    /// Sum a per-link statistic across every device leaf link.
+    pub fn agg_link(&self, f: impl Fn(&LinkStats) -> u64) -> u64 {
+        self.links.iter().map(|l| f(&l.stats)).sum()
+    }
+
+    /// Fabric-manager role: drive the FM-API `BIND_LD` command through
+    /// every device's mailbox so each window definition's logical
+    /// device(s) belong to the host `window_hosts` assigns. The guests
+    /// later read exactly this state back with `GET_LD_ALLOCATIONS`.
+    pub fn bind_from_config(
+        &mut self,
+        cfg: &CxlConfig,
+        window_hosts: &[usize],
+    ) -> Result<()> {
+        let defs = cfg.window_defs();
+        assert_eq!(defs.len(), window_hosts.len());
+        for (def, &host) in defs.iter().zip(window_hosts) {
+            for &dev in &def.targets {
+                let mut payload = [0u8; 4];
+                payload[0..2].copy_from_slice(&def.ld.to_le_bytes());
+                payload[2..4]
+                    .copy_from_slice(&(host as u16).to_le_bytes());
+                let (code, _) = self.devices[dev]
+                    .mailbox
+                    .run_command(opcode::BIND_LD, &payload);
+                if code != retcode::SUCCESS {
+                    bail!(
+                        "FM BIND_LD dev{dev}.ld{} -> host{host} failed \
+                         with code {code:#x}",
+                        def.ld
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fabric-wide stats: devices (with per-LD host attribution),
+    /// switches and per-device leaf links.
+    pub fn dump(&self, d: &mut StatDump) {
+        for (j, sw) in self.switches.iter().enumerate() {
+            sw.dump(&format!("cxl.sw{j}"), d);
+        }
+        for (i, l) in self.links.iter().enumerate() {
+            l.dump(&format!("cxl.link{i}"), d);
+        }
+        for (i, dev) in self.devices.iter().enumerate() {
+            dev.dump(&format!("cxl.dev{i}"), d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn new_builds_links_switches_devices() {
+        let mut cfg = SimConfig::default().cxl;
+        cfg.devices = 4;
+        cfg.interleave_ways = 1;
+        cfg.switches = 1;
+        let f = Fabric::new(&cfg);
+        assert_eq!(f.links.len(), 4);
+        assert_eq!(f.switches.len(), 1);
+        assert_eq!(f.devices.len(), 4);
+        assert_eq!(f.switches[0].devices, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bind_from_config_sets_owners() {
+        let mut cfg = SimConfig::default().cxl;
+        cfg.interleave_ways = 1;
+        cfg.dev_overrides = vec![crate::config::CxlDevOverride {
+            lds: Some(2),
+            ..Default::default()
+        }];
+        let mut f = Fabric::new(&cfg);
+        // Two LD windows round-robined over two hosts.
+        f.bind_from_config(&cfg, &[0, 1]).unwrap();
+        assert_eq!(f.devices[0].mailbox.state.ld_owner, vec![0, 1]);
+        // Re-binding an owned LD must fail (exclusive ownership).
+        assert!(f.bind_from_config(&cfg, &[0, 1]).is_err());
+    }
+
+    #[test]
+    fn credit_link_routes_by_hierarchy() {
+        let mut cfg = SimConfig::default().cxl;
+        cfg.devices = 2;
+        cfg.interleave_ways = 1;
+        cfg.switches = 1;
+        let mut f = Fabric::new(&cfg);
+        // Both devices share the switch's upstream pool.
+        let c0 = f.credit_link(0) as *const CxlLink;
+        let c1 = f.credit_link(1) as *const CxlLink;
+        assert_eq!(c0, c1, "switched siblings share one credit pool");
+    }
+}

@@ -10,15 +10,28 @@
 
 use super::regs::dev;
 
-/// Memory-device command opcodes (CXL 2.0 §8.2.9.5; GET_LD_INFO is the
-/// FM-API §7.6.7.1 command MLD-capable devices answer).
+/// Memory-device command opcodes (CXL 2.0 §8.2.9.5; the 0x52xx/0x54xx
+/// range carries the FM-API commands MLD-capable devices answer:
+/// Get LD Info §7.6.7.1, Get LD Allocations, and the vPPB bind pair the
+/// fabric manager uses to parcel LDs out to hosts — collapsed here to
+/// per-LD ownership on the device, the first-order pooling semantic).
 pub mod opcode {
     pub const IDENTIFY_MEMORY_DEVICE: u16 = 0x4000;
     pub const GET_PARTITION_INFO: u16 = 0x4100;
     pub const SET_PARTITION_INFO: u16 = 0x4101;
     pub const GET_HEALTH_INFO: u16 = 0x4200;
+    /// FM-API Bind vPPB: payload = LD index (u16) + host id (u16).
+    pub const BIND_LD: u16 = 0x5201;
+    /// FM-API Unbind vPPB: payload = LD index (u16).
+    pub const UNBIND_LD: u16 = 0x5202;
     pub const GET_LD_INFO: u16 = 0x5400;
+    /// FM-API Get LD Allocations: LD count (u16) + per-LD owner host
+    /// id (u16 each, [`super::UNBOUND`] when unassigned).
+    pub const GET_LD_ALLOCATIONS: u16 = 0x5401;
 }
+
+/// Owner value of a logical device no host has been bound to.
+pub const UNBOUND: u16 = 0xFFFF;
 
 /// Mailbox return codes (§8.2.8.4.5.1).
 pub mod retcode {
@@ -42,6 +55,9 @@ pub struct MemdevState {
     pub fw_revision: [u8; 16],
     /// Logical devices exposed (1 = SLD; > 1 = MLD pooling).
     pub lds: u16,
+    /// Per-LD owner host id ([`UNBOUND`] until the FM binds it); the
+    /// state BIND_LD / UNBIND_LD mutate and GET_LD_ALLOCATIONS reports.
+    pub ld_owner: Vec<u16>,
 }
 
 impl MemdevState {
@@ -53,12 +69,14 @@ impl MemdevState {
     pub fn new_mld(total_capacity: u64, serial: u64, lds: u16) -> Self {
         let mut fw = [0u8; 16];
         fw[..9].copy_from_slice(b"cxlrs-1.0");
+        let lds = lds.max(1);
         MemdevState {
             total_capacity,
             volatile_capacity: total_capacity,
             serial,
             fw_revision: fw,
-            lds: lds.max(1),
+            lds,
+            ld_owner: vec![UNBOUND; lds as usize],
         }
     }
 }
@@ -199,6 +217,58 @@ impl Mailbox {
                 let r = vec![0u8; 16]; // all-healthy
                 self.finish(retcode::SUCCESS, &r);
             }
+            opcode::BIND_LD => {
+                // FM-API bind: give logical device `ld` to host `host`.
+                // Ownership is exclusive — a bound LD must be unbound
+                // before it can move (the property the pooling tests
+                // assert under random bind/unbind sequences).
+                if len < 4 {
+                    self.finish(retcode::INVALID_INPUT, &[]);
+                    return;
+                }
+                let ld =
+                    u16::from_le_bytes(self.payload[0..2].try_into().unwrap());
+                let host =
+                    u16::from_le_bytes(self.payload[2..4].try_into().unwrap());
+                if ld >= self.state.lds
+                    || host as usize >= crate::config::MAX_HOSTS
+                {
+                    self.finish(retcode::INVALID_INPUT, &[]);
+                    return;
+                }
+                if self.state.ld_owner[ld as usize] != UNBOUND {
+                    self.finish(retcode::BUSY, &[]);
+                    return;
+                }
+                self.state.ld_owner[ld as usize] = host;
+                self.finish(retcode::SUCCESS, &[]);
+            }
+            opcode::UNBIND_LD => {
+                if len < 2 {
+                    self.finish(retcode::INVALID_INPUT, &[]);
+                    return;
+                }
+                let ld =
+                    u16::from_le_bytes(self.payload[0..2].try_into().unwrap());
+                if ld >= self.state.lds
+                    || self.state.ld_owner[ld as usize] == UNBOUND
+                {
+                    self.finish(retcode::INVALID_INPUT, &[]);
+                    return;
+                }
+                self.state.ld_owner[ld as usize] = UNBOUND;
+                self.finish(retcode::SUCCESS, &[]);
+            }
+            opcode::GET_LD_ALLOCATIONS => {
+                // LD count + the owner host of each LD, in LD order.
+                let mut r = vec![0u8; 2 + 2 * self.state.lds as usize];
+                r[0..2].copy_from_slice(&self.state.lds.to_le_bytes());
+                for (k, &o) in self.state.ld_owner.iter().enumerate() {
+                    r[2 + 2 * k..4 + 2 * k]
+                        .copy_from_slice(&o.to_le_bytes());
+                }
+                self.finish(retcode::SUCCESS, &r);
+            }
             opcode::GET_LD_INFO => {
                 // FM-API Get LD Info: total memory size (u64) + LD
                 // count (u16). SLDs answer with 1 so the driver probes
@@ -317,6 +387,53 @@ mod tests {
         let (code, resp) = mld.run_command(opcode::GET_LD_INFO, &[]);
         assert_eq!(code, retcode::SUCCESS);
         assert_eq!(u16::from_le_bytes(resp[8..10].try_into().unwrap()), 2);
+    }
+
+    #[test]
+    fn bind_unbind_ld_lifecycle() {
+        let mut m =
+            Mailbox::new(MemdevState::new_mld(4 << 30, 0xC0FFEE, 2));
+        let (code, resp) = m.run_command(opcode::GET_LD_ALLOCATIONS, &[]);
+        assert_eq!(code, retcode::SUCCESS);
+        assert_eq!(
+            u16::from_le_bytes(resp[2..4].try_into().unwrap()),
+            UNBOUND
+        );
+        // Bind LD 1 to host 2.
+        let (code, _) =
+            m.run_command(opcode::BIND_LD, &[1, 0, 2, 0]);
+        assert_eq!(code, retcode::SUCCESS);
+        assert_eq!(m.state.ld_owner, vec![UNBOUND, 2]);
+        // Exclusive: re-binding a bound LD fails with BUSY.
+        let (code, _) =
+            m.run_command(opcode::BIND_LD, &[1, 0, 0, 0]);
+        assert_eq!(code, retcode::BUSY);
+        // Unbind frees it for a new owner.
+        let (code, _) = m.run_command(opcode::UNBIND_LD, &[1, 0]);
+        assert_eq!(code, retcode::SUCCESS);
+        let (code, _) =
+            m.run_command(opcode::BIND_LD, &[1, 0, 0, 0]);
+        assert_eq!(code, retcode::SUCCESS);
+        let (_, resp) = m.run_command(opcode::GET_LD_ALLOCATIONS, &[]);
+        assert_eq!(u16::from_le_bytes(resp[2..4].try_into().unwrap()), 0);
+    }
+
+    #[test]
+    fn bind_ld_rejects_bad_inputs() {
+        let mut m = mb(); // SLD: one LD
+        // LD out of range.
+        let (code, _) = m.run_command(opcode::BIND_LD, &[5, 0, 0, 0]);
+        assert_eq!(code, retcode::INVALID_INPUT);
+        // Host out of range.
+        let (code, _) =
+            m.run_command(opcode::BIND_LD, &[0, 0, 0xFF, 0xFF]);
+        assert_eq!(code, retcode::INVALID_INPUT);
+        // Unbinding an unbound LD.
+        let (code, _) = m.run_command(opcode::UNBIND_LD, &[0, 0]);
+        assert_eq!(code, retcode::INVALID_INPUT);
+        // Short payloads.
+        let (code, _) = m.run_command(opcode::BIND_LD, &[0]);
+        assert_eq!(code, retcode::INVALID_INPUT);
     }
 
     #[test]

@@ -15,8 +15,10 @@
 //!   endpoints.
 //! * [`device`] — the Type-3 endpoint: register surface + media, with
 //!   multi-logical-device (MLD) capacity slicing.
-//! * [`root_complex`] — host side: HDM routing + packetizer, routing
-//!   by topology (direct links and switched paths).
+//! * [`fabric`] — the shared tree below the hosts: devices, switches
+//!   and leaf links, plus the fabric-manager LD-ownership role.
+//! * [`root_complex`] — host side (one per simulated host): HDM routing
+//!   windows + packetizer, driving traffic into the fabric.
 
 pub mod regs;
 pub mod mailbox;
@@ -24,9 +26,11 @@ pub mod mem_proto;
 pub mod link;
 pub mod switch;
 pub mod device;
+pub mod fabric;
 pub mod root_complex;
 
 pub use device::CxlDevice;
+pub use fabric::Fabric;
 pub use link::CxlLink;
 pub use mem_proto::{M2SOpcode, S2MOpcode};
 pub use root_complex::{CxlRootComplex, HdmWindow};

@@ -1,22 +1,25 @@
 //! CXL Root Complex — the host-side protocol entity (paper Fig. 1B/4).
 //!
-//! Sits on the I/O bus. Converts host load/store packets targeting a
-//! committed HDM window into CXL.mem M2S packets (**packetization**, with
-//! its configurable latency), drives them through the per-device
-//! credit-controlled links, and converts S2M responses back. The
-//! **interleave decoder** lives here: each window carries the CFMWS
-//! interleave parameters (ways, granularity, modulo/XOR arithmetic) and
-//! every line address resolves to exactly one target device. Also owns
-//! the RC-side DVSEC surface (Set 1 of Fig. 3) that the guest driver
-//! binds against.
+//! Sits on one host's I/O bus. Converts that host's load/store packets
+//! targeting a committed HDM window into CXL.mem M2S packets
+//! (**packetization**, with its configurable latency), drives them into
+//! the shared [`super::Fabric`] (per-device credit-controlled links,
+//! switch hops), and converts S2M responses back. The **interleave
+//! decoder** lives here: each window carries the CFMWS interleave
+//! parameters (ways, granularity, modulo/XOR arithmetic) and every line
+//! address resolves to exactly one target device. Also owns the RC-side
+//! DVSEC surface (Set 1 of Fig. 3) that the guest driver binds against.
+//!
+//! One `CxlRootComplex` exists per simulated host; the links, switches
+//! and devices they all talk to live in the fabric — that split is what
+//! makes multi-host pooling contention observable.
 
 use crate::config::CxlConfig;
 use crate::sim::{ns_to_ticks, Packet, Tick};
 use crate::stats::{Counter, Histogram, StatDump};
 
-use super::link::{CxlLink, LinkStats};
+use super::fabric::Fabric;
 use super::mem_proto::{self, CxlMemPacket};
-use super::switch::CxlSwitch;
 
 #[derive(Clone, Debug, Default)]
 pub struct RcStats {
@@ -96,16 +99,8 @@ impl HdmWindow {
 pub struct CxlRootComplex {
     pkt_ticks: Tick,
     depkt_ticks: Tick,
-    /// One leaf link per expander device: the root-port link when the
-    /// device is direct-attached, the switch downstream-port link when
-    /// it sits behind a switch.
-    pub links: Vec<CxlLink>,
-    /// Virtual switches between root ports and endpoints.
-    pub switches: Vec<CxlSwitch>,
-    /// Route table: the switch (if any) on device i's path. Routing is
-    /// by hierarchy — flow control and the extra hops follow this
-    /// table, not a flat device index.
-    dev_switch: Vec<Option<usize>>,
+    /// Fabric device count, for window-target validation.
+    ndev: usize,
     next_tag: u16,
     pub stats: RcStats,
     /// Committed HDM windows (mirrors the host-bridge decoders;
@@ -116,39 +111,10 @@ pub struct CxlRootComplex {
 
 impl CxlRootComplex {
     pub fn new(cfg: &CxlConfig) -> Self {
-        let links = (0..cfg.devices.max(1))
-            .map(|i| {
-                let d = cfg.device(i);
-                CxlLink::new(
-                    d.link_lat_ns,
-                    d.link_bw_gbps,
-                    cfg.flit_bytes,
-                    cfg.credits,
-                )
-            })
-            .collect();
-        let switches = (0..cfg.switches)
-            .map(|j| {
-                let s = cfg.switch(j);
-                CxlSwitch::new(
-                    s.link_lat_ns,
-                    s.link_bw_gbps,
-                    s.fwd_lat_ns,
-                    cfg.flit_bytes,
-                    cfg.credits,
-                    (s.first_dev..s.first_dev + s.ndev).collect(),
-                )
-            })
-            .collect();
-        let dev_switch = (0..cfg.devices.max(1))
-            .map(|i| cfg.switch_of(i))
-            .collect();
         CxlRootComplex {
             pkt_ticks: ns_to_ticks(cfg.pkt_lat_ns),
             depkt_ticks: ns_to_ticks(cfg.depkt_lat_ns),
-            links,
-            switches,
-            dev_switch,
+            ndev: cfg.devices.max(1),
             next_tag: 0,
             stats: RcStats::default(),
             windows: Vec::new(),
@@ -174,8 +140,8 @@ impl CxlRootComplex {
         assert!(w.targets.len().is_power_of_two());
         assert!(w.granularity.is_power_of_two() && w.granularity >= 256);
         assert!(
-            w.targets.iter().all(|&t| t < self.links.len()),
-            "window targets a device without a link"
+            w.targets.iter().all(|&t| t < self.ndev),
+            "window targets a device outside the fabric"
         );
         self.windows.push(w);
     }
@@ -209,29 +175,24 @@ impl CxlRootComplex {
         self.windows.iter().map(|w| (w.base, w.size)).collect()
     }
 
-    /// Sum a per-link statistic across every device link.
-    pub fn agg_link(&self, f: impl Fn(&LinkStats) -> u64) -> u64 {
-        self.links.iter().map(|l| f(&l.stats)).sum()
-    }
-
-    /// Packetize a host request at `now` onto device `dev`'s path:
+    /// Packetize a host request at `now` onto device `dev`'s fabric
+    /// path:
     /// * `Ok((pkt, device_arrival))` — entered the link(s).
     /// * `Err(retry_at)` — no M2S credit; retry at the given tick.
     ///
     /// For a direct-attached device the credit pool is its root-port
     /// link; behind a switch it is the switch's *shared* upstream link,
-    /// so siblings contend for both credits and upstream wire time.
+    /// so siblings — including other hosts' traffic — contend for both
+    /// credits and upstream wire time.
     pub fn packetize_and_send(
         &mut self,
+        fabric: &mut Fabric,
         now: Tick,
         host_pkt: &Packet,
         dev: usize,
     ) -> Result<(CxlMemPacket, Tick), Tick> {
         let after_pkt = now + self.pkt_ticks;
-        let credit_link = match self.dev_switch[dev] {
-            Some(s) => &mut self.switches[s].us_link,
-            None => &mut self.links[dev],
-        };
+        let credit_link = fabric.credit_link(dev);
         match credit_link.credit_available_at(after_pkt) {
             Some(t) if t <= after_pkt => {}
             Some(t) => {
@@ -246,15 +207,7 @@ impl CxlRootComplex {
             .expect("unroutable command reached the RC");
         self.stats.packetized.inc();
         self.stats.packetize_ticks.add(self.pkt_ticks);
-        let arrival = match self.dev_switch[dev] {
-            None => self.links[dev].send_m2s(after_pkt, &pkt),
-            Some(s) => {
-                // Upstream hop (consumes the shared credit), then the
-                // uncredited downstream hop to the endpoint.
-                let at_dsp = self.switches[s].forward_m2s(after_pkt, &pkt);
-                self.links[dev].forward_m2s(at_dsp, &pkt)
-            }
-        };
+        let arrival = fabric.send_m2s(after_pkt, &pkt, dev);
         Ok((pkt, arrival))
     }
 
@@ -263,23 +216,15 @@ impl CxlRootComplex {
     /// (after the path's link hops + RC-side de-packetization).
     pub fn receive_s2m(
         &mut self,
+        fabric: &mut Fabric,
         ready: Tick,
         resp: &CxlMemPacket,
         issued_at: Tick,
         dev: usize,
     ) -> Tick {
-        let rc_arrival = match self.dev_switch[dev] {
-            None => self.links[dev].send_s2m(ready, resp),
-            Some(s) => {
-                let at_sw = self.links[dev].send_s2m(ready, resp);
-                self.switches[s].forward_s2m(at_sw, resp)
-            }
-        };
+        let rc_arrival = fabric.send_s2m(ready, resp, dev);
         let done = rc_arrival + self.depkt_ticks; // RC-side unpack
-        match self.dev_switch[dev] {
-            Some(s) => self.switches[s].us_link.retire(done),
-            None => self.links[dev].retire(done),
-        }
+        fabric.retire(dev, done);
         self.stats.responses.inc();
         self.stats.round_trip.sample(done.saturating_sub(issued_at));
         done
@@ -289,9 +234,6 @@ impl CxlRootComplex {
         d.counter(&format!("{path}.packetized"), &self.stats.packetized);
         d.counter(&format!("{path}.responses"), &self.stats.responses);
         d.hist(&format!("{path}.round_trip"), &self.stats.round_trip);
-        for (i, l) in self.links.iter().enumerate() {
-            l.dump(&format!("{path}.link{i}"), d);
-        }
     }
 }
 
@@ -301,10 +243,11 @@ mod tests {
     use crate::config::SimConfig;
     use crate::sim::MemCmd;
 
-    fn rc() -> CxlRootComplex {
-        let mut r = CxlRootComplex::new(&SimConfig::default().cxl);
+    fn rc_fab() -> (CxlRootComplex, Fabric) {
+        let cfg = SimConfig::default().cxl;
+        let mut r = CxlRootComplex::new(&cfg);
         r.set_hdm_range(2 << 30, 4 << 30);
-        r
+        (r, Fabric::new(&cfg))
     }
 
     fn pkt(cmd: MemCmd) -> Packet {
@@ -313,7 +256,7 @@ mod tests {
 
     #[test]
     fn routing_window() {
-        let r = rc();
+        let (r, _) = rc_fab();
         assert!(r.routes(2 << 30));
         assert!(r.routes((6u64 << 30) - 64));
         assert!(!r.routes(6 << 30));
@@ -323,11 +266,13 @@ mod tests {
 
     #[test]
     fn packetize_adds_latency_and_tags() {
-        let mut r = rc();
-        let (p1, a1) =
-            r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
-        let (p2, _) =
-            r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
+        let (mut r, mut f) = rc_fab();
+        let (p1, a1) = r
+            .packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 0)
+            .unwrap();
+        let (p2, _) = r
+            .packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 0)
+            .unwrap();
         assert_ne!(p1.tag, p2.tag);
         // pkt_lat 25ns + ser (68B @ 32GB/s = 2.125ns) + link 20ns.
         assert_eq!(a1, ns_to_ticks(25.0) + 2125 + ns_to_ticks(20.0));
@@ -338,27 +283,31 @@ mod tests {
         let mut cfg = SimConfig::default().cxl;
         cfg.credits = 1;
         let mut r = CxlRootComplex::new(&cfg);
+        let mut f = Fabric::new(&cfg);
         r.set_hdm_range(0, 4 << 30);
-        let (p, arr) =
-            r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
+        let (p, arr) = r
+            .packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 0)
+            .unwrap();
         // Second request has no credit.
-        let e = r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0);
+        let e = r.packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 0);
         assert!(e.is_err());
         // Retire the first: response path frees the credit.
         let resp = mem_proto::make_response(&p);
-        let done = r.receive_s2m(arr + 100, &resp, 0, 0);
-        let retry = r.packetize_and_send(done, &pkt(MemCmd::ReadReq), 0);
+        let done = r.receive_s2m(&mut f, arr + 100, &resp, 0, 0);
+        let retry =
+            r.packetize_and_send(&mut f, done, &pkt(MemCmd::ReadReq), 0);
         assert!(retry.is_ok());
-        assert_eq!(r.links[0].stats.credit_stalls.get(), 1);
+        assert_eq!(f.links[0].stats.credit_stalls.get(), 1);
     }
 
     #[test]
     fn round_trip_recorded() {
-        let mut r = rc();
-        let (p, arr) =
-            r.packetize_and_send(0, &pkt(MemCmd::WriteReq), 0).unwrap();
+        let (mut r, mut f) = rc_fab();
+        let (p, arr) = r
+            .packetize_and_send(&mut f, 0, &pkt(MemCmd::WriteReq), 0)
+            .unwrap();
         let resp = mem_proto::make_response(&p);
-        let done = r.receive_s2m(arr + 50_000, &resp, 0, 0);
+        let done = r.receive_s2m(&mut f, arr + 50_000, &resp, 0, 0);
         assert!(done > arr);
         assert_eq!(r.stats.round_trip.count(), 1);
         assert!(r.stats.round_trip.stats.mean() >= done as f64 * 0.9);
@@ -368,9 +317,11 @@ mod tests {
     fn per_device_links_are_independent() {
         let mut cfg = SimConfig::default().cxl;
         cfg.devices = 2;
+        cfg.interleave_ways = 1;
         cfg.credits = 1;
         let mut r = CxlRootComplex::new(&cfg);
-        assert_eq!(r.links.len(), 2);
+        let mut f = Fabric::new(&cfg);
+        assert_eq!(f.links.len(), 2);
         r.add_window(HdmWindow {
             base: 4 << 30,
             size: 8 << 30,
@@ -380,9 +331,13 @@ mod tests {
             dpa_base: 0,
         });
         // Exhausting device 0's credit leaves device 1 usable.
-        r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
-        assert!(r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).is_err());
-        assert!(r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 1).is_ok());
+        r.packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 0).unwrap();
+        assert!(r
+            .packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 0)
+            .is_err());
+        assert!(r
+            .packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 1)
+            .is_ok());
     }
 
     #[test]
@@ -393,8 +348,9 @@ mod tests {
         cfg.switches = 1;
         cfg.credits = 1;
         let mut r = CxlRootComplex::new(&cfg);
-        assert_eq!(r.switches.len(), 1);
-        assert_eq!(r.switches[0].devices, vec![0, 1]);
+        let mut f = Fabric::new(&cfg);
+        assert_eq!(f.switches.len(), 1);
+        assert_eq!(f.switches[0].devices, vec![0, 1]);
         r.add_window(HdmWindow {
             base: 4 << 30,
             size: 4 << 30,
@@ -403,20 +359,48 @@ mod tests {
             xor: false,
             dpa_base: 0,
         });
-        let (p, arr) =
-            r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
+        let (p, arr) = r
+            .packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 0)
+            .unwrap();
         // Direct default: pkt 25 ns + ser 2.125 + link 20 ns. Switched
         // adds the upstream hop (ser 2.125 + 20 ns) and 25 ns forward.
         let direct = ns_to_ticks(25.0) + 2125 + ns_to_ticks(20.0);
         assert_eq!(arr, direct + 2125 + ns_to_ticks(20.0 + 25.0));
         // The shared upstream pool back-pressures the *sibling* device.
-        let e = r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 1);
+        let e = r.packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 1);
         assert!(e.is_err(), "sibling must stall on the shared credit");
-        assert_eq!(r.switches[0].us_link.stats.credit_stalls.get(), 1);
+        assert_eq!(f.switches[0].us_link.stats.credit_stalls.get(), 1);
         // Retiring the first response frees the pool for the sibling.
         let resp = mem_proto::make_response(&p);
-        let done = r.receive_s2m(arr + 100, &resp, 0, 0);
-        assert!(r.packetize_and_send(done, &pkt(MemCmd::ReadReq), 1).is_ok());
+        let done = r.receive_s2m(&mut f, arr + 100, &resp, 0, 0);
+        assert!(r
+            .packetize_and_send(&mut f, done, &pkt(MemCmd::ReadReq), 1)
+            .is_ok());
+    }
+
+    #[test]
+    fn two_hosts_contend_on_one_shared_upstream_pool() {
+        // Two root complexes (two hosts) over ONE fabric: host B stalls
+        // on the credit host A consumed — the cross-host back-pressure
+        // that motivates the host/fabric split.
+        let mut cfg = SimConfig::default().cxl;
+        cfg.devices = 2;
+        cfg.interleave_ways = 1;
+        cfg.switches = 1;
+        cfg.credits = 1;
+        let mut ra = CxlRootComplex::new(&cfg);
+        let mut rb = CxlRootComplex::new(&cfg);
+        let mut f = Fabric::new(&cfg);
+        let (p, arr) = ra
+            .packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 0)
+            .unwrap();
+        let e = rb.packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 1);
+        assert!(e.is_err(), "host B must stall on host A's credit");
+        let resp = mem_proto::make_response(&p);
+        let done = ra.receive_s2m(&mut f, arr + 100, &resp, 0, 0);
+        assert!(rb
+            .packetize_and_send(&mut f, done, &pkt(MemCmd::ReadReq), 1)
+            .is_ok());
     }
 
     #[test]
@@ -426,10 +410,13 @@ mod tests {
         cfg.interleave_ways = 1;
         cfg.credits = 1;
         let mut r = CxlRootComplex::new(&cfg);
-        assert!(r.switches.is_empty());
-        r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 0).unwrap();
+        let mut f = Fabric::new(&cfg);
+        assert!(f.switches.is_empty());
+        r.packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 0).unwrap();
         // Without a switch, device 1's pool is untouched.
-        assert!(r.packetize_and_send(0, &pkt(MemCmd::ReadReq), 1).is_ok());
+        assert!(r
+            .packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 1)
+            .is_ok());
     }
 
     #[test]

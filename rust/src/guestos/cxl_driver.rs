@@ -9,16 +9,20 @@
 //!      attach, through upstream/downstream switch bridges otherwise.
 //!      DVSECs are walked via config MMIO; the Register Locator DVSEC
 //!      yields the BAR-relative component/device blocks.
-//!   3. The mailbox (doorbell poll) runs IDENTIFY to learn capacity and
-//!      the FM-API Get LD Info to learn the logical-device count.
-//!   4. Per logical device, HDM decoders are programmed + committed on
-//!      BOTH the host bridge and the endpoint, mapping one CFMWS window
-//!      onto that LD's capacity slice (DPA skip).
+//!   3. The mailbox (doorbell poll) runs IDENTIFY to learn capacity,
+//!      the FM-API Get LD Info to learn the logical-device count, and
+//!      the FM-API Get LD Allocations to learn which LDs the fabric
+//!      manager bound to *this* host (a pooled MLD parcels its LDs out
+//!      to different hosts; unbound LDs default to host 0 so FM-less
+//!      bring-up keeps working).
+//!   4. Per owned logical device, HDM decoders are programmed +
+//!      committed on BOTH the host bridge and the endpoint, mapping one
+//!      CFMWS window onto that LD's capacity slice (DPA skip).
 
 use anyhow::{bail, Context, Result};
 
+use crate::cxl::mailbox::{opcode, retcode, CAP_MULTIPLE, UNBOUND};
 use crate::cxl::regs::{comp, dev, dev_block_ids};
-use crate::cxl::mailbox::{opcode, retcode, CAP_MULTIPLE};
 use crate::pcie::config_space::{CXL_VENDOR_ID, DVSEC_CXL_DEVICE,
                                 DVSEC_REGISTER_LOCATOR};
 use crate::pcie::Bdf;
@@ -28,8 +32,9 @@ use super::pci_scan::{self, PciDev};
 use super::Platform;
 
 /// What the driver bound and where: one entry per *logical* device (an
-/// SLD contributes one, an MLD with `lds = K` contributes K sharing a
-/// BDF/mailbox but mapping distinct windows).
+/// SLD contributes one, an MLD with `lds = K` contributes up to K —
+/// only this host's share — sharing a BDF/mailbox but mapping distinct
+/// windows).
 #[derive(Clone, Debug)]
 pub struct CxlMemdev {
     pub bdf: Bdf,
@@ -134,6 +139,20 @@ fn commit_decoder(
     Ok(())
 }
 
+/// Per-bridge window consumption state: published windows are consumed
+/// in CEDT order by this host's logical devices in (endpoint BDF, LD)
+/// order; a multi-way window whose target list names this bridge
+/// several times (an interleave set behind one switch) is shared by
+/// that many endpoints, each taking the next target slot.
+struct BridgeCursor {
+    /// Index of the window currently being filled.
+    window: usize,
+    /// Target slots of the current window already claimed.
+    slot: usize,
+    /// Next free host-bridge HDM decoder.
+    decoder: usize,
+}
+
 /// Bind every CXL memdev by walking the PCIe *hierarchy*: the type-1
 /// bridges on bus 0 are the CXL root ports; root port `i` (BDF order)
 /// pairs with CHBS entry `i` (UID order) — the simulator wires them in
@@ -142,11 +161,13 @@ fn commit_decoder(
 /// root port's [secondary, subordinate] range belongs to that bridge,
 /// whether direct-attached or behind a switch's upstream/downstream
 /// bridges. Each bridge's CFMWS windows (CEDT order) are then consumed
-/// by its endpoints in BDF order, one window per logical device.
+/// by its endpoints in BDF order, one window slot per logical device
+/// this host owns.
 pub fn bind_all(
     p: &mut dyn Platform,
     acpi: &AcpiInfo,
     pci_devs: &[PciDev],
+    host: u16,
 ) -> Result<Vec<CxlMemdev>> {
     let mut chbs = acpi.chbs.clone();
     chbs.sort_by_key(|c| c.uid);
@@ -200,10 +221,19 @@ pub fn bind_all(
             .iter()
             .filter(|w| w.targets.contains(&hb.uid))
             .collect();
-        // Bridge decoder index == position in the bridge's window list.
-        let mut cursor = 0usize;
+        let mut cursor = BridgeCursor { window: 0, slot: 0, decoder: 0 };
         for ep in under {
-            bind_endpoint(p, acpi, ep, hb, &wins, &mut cursor, &mut out)?;
+            bind_endpoint(p, acpi, ep, hb, &wins, &mut cursor, host, &mut out)?;
+        }
+        if cursor.window < wins.len() || cursor.slot != 0 {
+            bail!(
+                "host bridge uid {}: {} window(s) published but the \
+                 endpoints' bound LDs consumed only {} (FM binding and \
+                 firmware disagree)",
+                hb.uid,
+                wins.len(),
+                cursor.window
+            );
         }
     }
     if claimed != eps.len() {
@@ -216,16 +246,19 @@ pub fn bind_all(
 }
 
 /// Bind one endpoint beneath its host bridge: locate register blocks,
-/// IDENTIFY, learn the LD count, then commit one endpoint + host-bridge
-/// HDM decoder pair per logical device, consuming the bridge's windows
-/// at `cursor`. Appends one [`CxlMemdev`] per LD to `out`.
+/// IDENTIFY, learn the LD count and this host's LD allocations, then
+/// commit one endpoint + host-bridge HDM decoder pair per owned logical
+/// device, consuming the bridge's windows at `cursor`. Appends one
+/// [`CxlMemdev`] per owned LD to `out`.
+#[allow(clippy::too_many_arguments)]
 fn bind_endpoint(
     p: &mut dyn Platform,
     acpi: &AcpiInfo,
     ep: &PciDev,
     chbs: &ChbsInfo,
     wins: &[&CfmwsInfo],
-    cursor: &mut usize,
+    cursor: &mut BridgeCursor,
+    host: u16,
     out: &mut Vec<CxlMemdev>,
 ) -> Result<()> {
     if chbs.cxl_version == 0 {
@@ -303,18 +336,55 @@ fn bind_endpoint(
     }
     let slice = capacity / lds as u64;
 
+    // FM-API Get LD Allocations: which host owns each LD. LDs the
+    // fabric manager never bound default to host 0 (FM-less operation).
+    let (code, alloc) =
+        mailbox_command(p, device_block, opcode::GET_LD_ALLOCATIONS, &[])?;
+    let owners: Vec<u16> =
+        if code == retcode::SUCCESS && alloc.len() >= 2 + 2 * lds as usize {
+            (0..lds as usize)
+                .map(|k| {
+                    u16::from_le_bytes(
+                        alloc[2 + 2 * k..4 + 2 * k].try_into().unwrap(),
+                    )
+                })
+                .collect()
+        } else {
+            vec![UNBOUND; lds as usize]
+        };
+
     for ld in 0..lds {
-        let cfmws = wins.get(*cursor).with_context(|| {
+        let owner = owners[ld as usize];
+        if !(owner == host || (owner == UNBOUND && host == 0)) {
+            // Another host's logical device: not presented to us.
+            continue;
+        }
+        let cfmws = wins.get(cursor.window).with_context(|| {
             format!(
                 "host bridge uid {} has no CFMWS window left for {} LD {ld}",
                 chbs.uid, ep.bdf
             )
         })?;
-        let position = cfmws
+        // Target slots of this window that name our bridge: one slot
+        // per participating endpoint. Direct-attach interleave lists
+        // each bridge once; a same-switch set lists this bridge `ways`
+        // times and its endpoints claim consecutive slots in BDF order.
+        let my_slots: Vec<usize> = cfmws
             .targets
             .iter()
-            .position(|&u| u == chbs.uid)
-            .unwrap();
+            .enumerate()
+            .filter(|(_, &u)| u == chbs.uid)
+            .map(|(i, _)| i)
+            .collect();
+        let position = *my_slots.get(cursor.slot).with_context(|| {
+            format!(
+                "window {:#x}: all {} slot(s) of bridge uid {} already \
+                 claimed",
+                cfmws.base_hpa,
+                my_slots.len(),
+                chbs.uid
+            )
+        })?;
         let ways = cfmws.targets.len();
         // An N-way window spreads every member across the whole window
         // (each decoder maps the full window with the interleave fields
@@ -333,7 +403,7 @@ fn bind_endpoint(
 
         // HDM decoders: endpoint first, then host bridge (commit order
         // matters on real hardware: leaf before root). The endpoint
-        // uses decoder `ld`; the bridge uses its running window index.
+        // uses decoder `ld`; the bridge uses its running decoder index.
         commit_decoder(
             p,
             component_block,
@@ -347,13 +417,14 @@ fn bind_endpoint(
         commit_decoder(
             p,
             chbs.base,
-            *cursor,
+            cursor.decoder,
             cfmws.base_hpa,
             map_size,
             ig,
             eniw,
             0,
         )?;
+        cursor.decoder += 1;
 
         out.push(CxlMemdev {
             bdf: ep.bdf,
@@ -372,7 +443,11 @@ fn bind_endpoint(
             hb_component_block: chbs.base,
             hb_uid: chbs.uid,
         });
-        *cursor += 1;
+        cursor.slot += 1;
+        if cursor.slot >= my_slots.len() {
+            cursor.slot = 0;
+            cursor.window += 1;
+        }
     }
     Ok(())
 }

@@ -54,6 +54,10 @@ pub enum ProgModel {
 
 /// The booted guest's state.
 pub struct GuestOs {
+    /// Which simulated host this guest runs on (0 in single-host
+    /// machines). The driver hands it to the FM-API allocation query so
+    /// a pooled MLD presents only this host's logical devices.
+    pub host: u16,
     pub acpi: AcpiInfo,
     pub pci_devs: Vec<PciDev>,
     /// Every bound expander, in host-bridge UID order (`mem0`, `mem1`…).
@@ -67,12 +71,15 @@ pub struct GuestOs {
 }
 
 impl GuestOs {
-    /// Full boot. `mem` carries the BIOS tables; `p` is the MMIO world.
+    /// Full boot. `mem` carries the BIOS tables; `p` is the MMIO world;
+    /// `host` is this machine's identity on the CXL fabric (0 for
+    /// single-host setups).
     pub fn boot(
         p: &mut dyn Platform,
         mem: &PhysMem,
         page_size: u64,
         model: ProgModel,
+        host: u16,
     ) -> Result<GuestOs> {
         let mut log = Vec::new();
 
@@ -135,7 +142,7 @@ impl GuestOs {
         log.push(format!("pci: {} functions enumerated", pci_devs.len()));
 
         // --- CXL driver -----------------------------------------------------
-        let memdevs = match cxl_driver::bind_all(p, &acpi, &pci_devs) {
+        let memdevs = match cxl_driver::bind_all(p, &acpi, &pci_devs, host) {
             Ok(mds) => {
                 for (i, md) in mds.iter().enumerate() {
                     let ld = if md.lds > 1 {
@@ -206,6 +213,7 @@ impl GuestOs {
         }
 
         Ok(GuestOs {
+            host,
             acpi,
             pci_devs,
             memdevs,

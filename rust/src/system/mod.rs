@@ -1,18 +1,29 @@
-//! The full-system machine: topology construction, boot, and the
-//! event-driven memory system (Fig. 1B).
+//! The full-system machine: per-host stacks over a shared CXL fabric,
+//! boot, and the event-driven memory system (Fig. 1B).
+//!
+//! Since the multi-host split, [`machine::Machine`] is a thin shell:
+//! it owns `hosts` [`host::Host`] instances (cores, caches, directory,
+//! buses, DRAM, BIOS image, guest OS, root complex) plus one shared
+//! [`crate::cxl::Fabric`] (devices, switches, links, FM LD ownership)
+//! and a single unified event queue whose events are tagged by host —
+//! `(tick, seq)` ordering is global, so runs stay bit-deterministic.
 //!
 //! Timing methodology (DESIGN.md §S20): components keep *stateful
 //! occupancy* (bus layers, DRAM banks, link flits, credits), so a miss's
 //! end-to-end latency is composed synchronously at miss time by walking
 //! the path CPU -> L1 -> (dir) -> L2 -> {membus -> DRAM | membus ->
-//! IOBus -> RC -> link -> device}; only genuinely asynchronous points
-//! (responses, credit stalls, DRAM-queue-full retries) become events.
-//! This is the classic latency-composition DES style: contention and
-//! queueing are modeled by the components' occupancy state, event count
-//! stays proportional to misses, and runs are bit-deterministic.
+//! IOBus -> RC -> fabric -> device}; only genuinely asynchronous points
+//! (responses, credit stalls, DRAM-queue-full retries, MSHR-full parks)
+//! become events. This is the classic latency-composition DES style:
+//! contention and queueing are modeled by the components' occupancy
+//! state — shared fabric state is exactly how cross-host contention
+//! shows up — event count stays proportional to misses, and runs are
+//! bit-deterministic.
 
+pub mod host;
 pub mod machine;
 pub mod mmio;
 
+pub use host::{Host, MachineStats};
 pub use machine::{Machine, RunSummary};
 pub use mmio::MmioWorld;

@@ -234,6 +234,45 @@ fn acpi_tables_switched_one_bridge_four_windows() {
 }
 
 #[test]
+fn acpi_tables_two_way_window_behind_one_switch() {
+    // PR-3 lifts the switched 1-way restriction: a 2-way interleave set
+    // under ONE switch publishes a single CFMWS whose two target slots
+    // both name that switch's host bridge, one hotplug SRAT domain, and
+    // boots into one interleaved zNUMA node covering both endpoints.
+    let mut cfg = SimConfig::default();
+    cfg.cxl.devices = 2;
+    cfg.cxl.switches = 1;
+    cfg.cxl.interleave_ways = 2;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.sys_mem_size = 512 << 20;
+    let mut m = Machine::new(cfg).unwrap();
+    let (chbs, cfmws, mem_domains) = cedt_srat(&m);
+    assert_eq!(chbs, 1, "one host bridge for the switch's root port");
+    assert_eq!(cfmws.len(), 1, "one window for the whole set");
+    assert_eq!(
+        cfmws[0],
+        vec![7u32, 7u32],
+        "both target slots name bridge UID 7"
+    );
+    assert_eq!(mem_domains.len(), 2, "DRAM + one interleaved domain");
+    assert_eq!(mem_domains[1].1 & 0b11, 0b11, "enabled + hotplug");
+
+    // The unmodified guest walk consumes it: one node, both devices.
+    m.boot(cxlramsim::guestos::ProgModel::Znuma).unwrap();
+    let g = m.guest.as_ref().unwrap();
+    assert_eq!(g.cxl_nodes, vec![1]);
+    assert_eq!(g.alloc.nodes[1].size, 1 << 30, "2 x 512 MiB combined");
+    assert_eq!(g.memdevs.len(), 2);
+    assert_eq!(g.memdevs[0].window_ways, 2);
+    assert_eq!(
+        (g.memdevs[0].position, g.memdevs[1].position),
+        (0, 1),
+        "slots claimed in BDF order"
+    );
+    assert_eq!(g.memdevs[0].hpa_base, g.memdevs[1].hpa_base);
+}
+
+#[test]
 fn acpi_tables_mld_per_ld_windows() {
     // One MLD with lds = 2: two CFMWS windows targeting the same
     // bridge, two hotplug SRAT domains.

@@ -69,14 +69,14 @@ fn bars_land_inside_the_dsdt_window() {
 fn hdm_decoders_committed_on_both_ends() {
     let mut m = Machine::new(SimConfig::default()).unwrap();
     m.boot(ProgModel::Znuma).unwrap();
-    assert!(m.cxl_devs[0].component.decoder_committed(0));
+    assert!(m.fabric.devices[0].component.decoder_committed(0));
     assert!(m.hb_components[0].decoder_committed(0));
-    let (base, size) = m.cxl_devs[0].component.decoder_range(0);
+    let (base, size) = m.fabric.devices[0].component.decoder_range(0);
     assert_eq!(base, m.bios.cxl_window_base);
     assert_eq!(size, SimConfig::default().cxl.mem_size);
     // End-to-end HPA->DPA translation works at the window edges.
-    assert_eq!(m.cxl_devs[0].hpa_to_dpa(base), 0);
-    assert_eq!(m.cxl_devs[0].hpa_to_dpa(base + size - 64), size - 64);
+    assert_eq!(m.fabric.devices[0].hpa_to_dpa(base), 0);
+    assert_eq!(m.fabric.devices[0].hpa_to_dpa(base + size - 64), size - 64);
 }
 
 #[test]
@@ -105,7 +105,7 @@ fn four_device_boot_enumerates_every_endpoint() {
         assert_eq!(md.hpa_base, window);
         assert_eq!(md.window_ways, 4);
         assert_eq!(md.position, i);
-        assert!(m.cxl_devs[i].component.decoder_committed(0));
+        assert!(m.fabric.devices[i].component.decoder_committed(0));
         assert!(m.hb_components[i].decoder_committed(0));
     }
     // One interleaved zNUMA node covering the whole set.
@@ -182,14 +182,7 @@ fn cxl_cli_surface_reports_every_device() {
     let mut m = Machine::new(cfg).unwrap();
     m.boot(ProgModel::Znuma).unwrap();
     let mds = m.guest.as_ref().unwrap().memdevs.clone();
-    let mut world = cxlramsim::system::MmioWorld {
-        ecam: &mut m.ecam,
-        cxl_devs: &mut m.cxl_devs,
-        hb_components: &mut m.hb_components,
-        chbs_base: bios::layout::CHBS_BASE,
-        chbs_stride: bios::layout::CHBS_SIZE,
-        ep_bdfs: &m.ep_bdfs,
-    };
+    let mut world = m.mmio_world(0);
     for (i, md) in mds.iter().enumerate() {
         let listing =
             cxlramsim::guestos::cxlcli::cxl_list(&mut world, md, i)

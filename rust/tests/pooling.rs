@@ -1,0 +1,242 @@
+//! Multi-host MLD pooling: FM-API bind/unbind properties, 2-host boot
+//! isolation, and the 2-host golden bitwise-determinism run.
+
+use cxlramsim::config::{CxlDevOverride, LdRef, SimConfig, MAX_HOSTS};
+use cxlramsim::cxl::mailbox::{opcode, retcode, Mailbox, MemdevState,
+                              UNBOUND};
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::system::Machine;
+use cxlramsim::util::prop::check;
+use cxlramsim::util::rng::Rng;
+use cxlramsim::workloads::{Stream, StreamKernel};
+
+// ---- FM bind/unbind state machine --------------------------------------
+
+/// Random bind/unbind sequences against the mailbox surface must keep
+/// LD↔host ownership exclusive (a bound LD can't be re-bound until
+/// unbound) and exactly mirror a reference model.
+#[test]
+fn prop_bind_unbind_exclusive_under_random_sequences() {
+    const LDS: usize = 4;
+    check(
+        "fm-bind-exclusive",
+        200,
+        |r: &mut Rng| {
+            (0..r.range(1, 60))
+                .map(|_| (r.below(LDS as u64 + 2), r.below(6)))
+                .collect::<Vec<(u64, u64)>>()
+        },
+        |ops| {
+            let mut mb = Mailbox::new(MemdevState::new_mld(
+                (LDS as u64) * (256 << 20),
+                1,
+                LDS as u16,
+            ));
+            let mut model: Vec<Option<u16>> = vec![None; LDS];
+            for &(ld, action) in ops {
+                if action < 4 {
+                    // BIND_LD ld -> host `action`.
+                    let host = action as u16;
+                    let mut p = [0u8; 4];
+                    p[0..2].copy_from_slice(&(ld as u16).to_le_bytes());
+                    p[2..4].copy_from_slice(&host.to_le_bytes());
+                    let (code, _) = mb.run_command(opcode::BIND_LD, &p);
+                    let expect = if ld >= LDS as u64 {
+                        retcode::INVALID_INPUT
+                    } else if model[ld as usize].is_some() {
+                        retcode::BUSY // exclusivity
+                    } else {
+                        model[ld as usize] = Some(host);
+                        retcode::SUCCESS
+                    };
+                    if code != expect {
+                        return Err(format!(
+                            "bind(ld={ld}, host={host}): code {code:#x}, \
+                             expected {expect:#x}"
+                        ));
+                    }
+                } else {
+                    // UNBIND_LD ld.
+                    let p = (ld as u16).to_le_bytes();
+                    let (code, _) = mb.run_command(opcode::UNBIND_LD, &p);
+                    let expect = if ld >= LDS as u64
+                        || model[ld as usize].is_none()
+                    {
+                        retcode::INVALID_INPUT
+                    } else {
+                        model[ld as usize] = None;
+                        retcode::SUCCESS
+                    };
+                    if code != expect {
+                        return Err(format!(
+                            "unbind(ld={ld}): code {code:#x}, expected \
+                             {expect:#x}"
+                        ));
+                    }
+                }
+                // Device state must mirror the model after every op.
+                let device: Vec<Option<u16>> = mb
+                    .state
+                    .ld_owner
+                    .iter()
+                    .map(|&o| if o == UNBOUND { None } else { Some(o) })
+                    .collect();
+                if device != model {
+                    return Err(format!(
+                        "state diverged: device {device:?} vs model \
+                         {model:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Config-driven FM binding is total: after machine construction every
+/// logical device of every expander has exactly the owner the window
+/// assignment dictates.
+#[test]
+fn config_binding_is_total_and_matches_assignment() {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 1 << 30;
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(4), ..Default::default() }];
+    let hosts = cfg.window_hosts();
+    assert_eq!(hosts, vec![0, 1, 0, 1], "round-robin over 4 LD windows");
+    let m = Machine::new(cfg).unwrap();
+    let owners = &m.fabric.devices[0].mailbox.state.ld_owner;
+    assert_eq!(owners.len(), 4);
+    for (ld, &owner) in owners.iter().enumerate() {
+        assert_ne!(owner, UNBOUND, "ld{ld} unbound — binding not total");
+        assert_eq!(owner as usize, hosts[ld]);
+        assert!((owner as usize) < MAX_HOSTS);
+    }
+}
+
+// ---- 2-host boot isolation ---------------------------------------------
+
+fn pooled_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 2;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 1 << 30; // 4 x 256 MiB LD slices
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(4), ..Default::default() }];
+    cfg.seed = 13;
+    cfg
+}
+
+#[test]
+fn two_host_boot_onlines_exactly_its_bound_lds() {
+    let mut m = Machine::new(pooled_cfg()).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    // Round-robin: host 0 owns LDs {0, 2}, host 1 owns {1, 3}.
+    for (h, want_lds) in [(0usize, vec![0u16, 2]), (1, vec![1, 3])] {
+        let g = m.hosts[h].guest.as_ref().unwrap();
+        let got: Vec<u16> = g.memdevs.iter().map(|md| md.ld).collect();
+        assert_eq!(got, want_lds, "host {h} bound the wrong LDs");
+        assert!(g.memdevs.iter().all(|md| md.lds == 4));
+        assert_eq!(g.cxl_nodes, vec![1, 2], "two zNUMA nodes per host");
+        assert!(g.alloc.nodes[1].online && !g.alloc.nodes[1].has_cpus);
+        assert_eq!(g.alloc.nodes[1].size, 256 << 20);
+        // The guest knows which host it is (driver used it for the
+        // FM-API allocation query).
+        assert_eq!(g.host as usize, h);
+    }
+    // Every host's windows are disjoint from every other's — the
+    // property that keeps the shared device's decoders unambiguous.
+    let mut spans: Vec<(u64, u64)> = m
+        .hosts
+        .iter()
+        .flat_map(|h| h.bios.cxl_windows.iter().copied())
+        .collect();
+    spans.sort_unstable();
+    for pair in spans.windows(2) {
+        assert!(
+            pair[0].0 + pair[0].1 <= pair[1].0,
+            "windows overlap: {pair:?}"
+        );
+    }
+}
+
+#[test]
+fn explicit_ld_assignment_reaches_guests() {
+    let mut cfg = pooled_cfg();
+    // Invert the default round-robin via explicit lists.
+    cfg.host_lds = vec![
+        vec![
+            LdRef { dev: 0, ld: 1 },
+            LdRef { dev: 0, ld: 3 },
+        ],
+        vec![
+            LdRef { dev: 0, ld: 0 },
+            LdRef { dev: 0, ld: 2 },
+        ],
+    ];
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let lds_of = |h: usize| -> Vec<u16> {
+        m.hosts[h]
+            .guest
+            .as_ref()
+            .unwrap()
+            .memdevs
+            .iter()
+            .map(|md| md.ld)
+            .collect()
+    };
+    assert_eq!(lds_of(0), vec![1, 3]);
+    assert_eq!(lds_of(1), vec![0, 2]);
+}
+
+// ---- 2-host golden determinism -----------------------------------------
+
+fn run_two_host_pooled() -> (u64, u64, u64, u64, Vec<u64>, String) {
+    let mut m = Machine::new(pooled_cfg()).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    for h in 0..2 {
+        let a = Stream::new(StreamKernel::Triad, 8192, 1);
+        let b = Stream::new(StreamKernel::Copy, 4096, 1);
+        m.attach_workloads_to(
+            h,
+            vec![Box::new(a), Box::new(b)],
+            &MemPolicy::Interleave { weights: vec![(1, 1), (2, 1)] },
+        )
+        .unwrap();
+    }
+    let s = m.run(None);
+    m.verify().unwrap();
+    (
+        s.ticks,
+        s.events,
+        s.dram_accesses,
+        s.cxl_accesses,
+        s.cxl_dev_fills.clone(),
+        m.dump_stats().to_text(),
+    )
+}
+
+#[test]
+fn golden_two_host_runs_are_bitwise_identical() {
+    let a = run_two_host_pooled();
+    let b = run_two_host_pooled();
+    assert_eq!(a.0, b.0, "ticks diverged");
+    assert_eq!(a.1, b.1, "event counts diverged");
+    assert_eq!(a.2, b.2, "dram accesses diverged");
+    assert_eq!(a.3, b.3, "cxl accesses diverged");
+    assert_eq!(a.4, b.4, "per-device fills diverged");
+    assert_eq!(a.5, b.5, "full stat dump diverged");
+    // Both hosts really drove the shared device.
+    assert!(a.3 > 0);
+    assert!(a.5.contains("cxl.dev0.ld0.host0_reads"));
+    assert!(a.5.contains("cxl.dev0.ld1.host1_reads"));
+    assert!(a.5.contains("host0.l2.hits"));
+    assert!(a.5.contains("host1.l2.hits"));
+}
