@@ -1,0 +1,160 @@
+//! Elastic pooling: the Fabric Manager re-binds a logical device
+//! between two running hosts — host 0 *shrinks* while host 1 *grows*,
+//! mid-workload, through the unmodified enumeration/driver path.
+//!
+//! This is the scenario class (elastic memory for LLM serving, the
+//! CXL-ClusterSim motivation) a static-binding simulator cannot
+//! express: capacity follows demand across hosts at runtime, and the
+//! whole run stays bitwise-deterministic because FM actions are just
+//! events in the machine's unified `(tick, seq)` queue.
+//!
+//! Timeline:
+//!   * boot      — one 2-LD MLD behind a switch; the FM binds BOTH LDs
+//!     to host 0 (zNUMA nodes 1 and 2); host 1 boots with the same two
+//!     windows published but offline — its hot-plug pool.
+//!   * t = 0     — host 0 streams on node 1 (LD 0); host 1 streams with
+//!     `--preferred 2`, which falls back to DRAM while node 2 is
+//!     offline.
+//!   * t = 50 us — FM `UNBIND_LD` dev0.ld1: host 0's guest gets the
+//!     Event-Log doorbell, offlines node 2 (it is idle — hot-remove
+//!     refuses busy nodes), uncommits the HDM decoder pair, releases
+//!     the LD.
+//!   * t = 55 us — FM `BIND_LD` dev0.ld1 -> host 1: host 1's guest
+//!     commits the spare window's decoders, `cxl create-region`s it and
+//!     onlines node 2; from here its page faults land on CXL.
+//!
+//! Run: `cargo run --release --example rebind_sweep`
+
+use cxlramsim::config::{CxlDevOverride, FmEventDef, LdRef, SimConfig};
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::system::Machine;
+use cxlramsim::util::bench::Table;
+use cxlramsim::workloads::{Stream, StreamKernel};
+
+fn rebind_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 2;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 512 << 20; // 2 x 256 MiB LD slices
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(2), ..Default::default() }];
+    // FM boot binding: host 0 starts with both logical devices.
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }, LdRef { dev: 0, ld: 1 }],
+        vec![],
+    ];
+    cfg.fm_events = vec![
+        FmEventDef::parse("@50us unbind dev0.ld1").expect("event"),
+        FmEventDef::parse("@55us bind dev0.ld1 host1").expect("event"),
+    ];
+    cfg
+}
+
+struct RunOut {
+    ticks: u64,
+    host1_ld1_reads: u64,
+    offline0: u64,
+    online1: u64,
+    rebinds: u64,
+    dmesg: Vec<String>,
+    stats_text: String,
+}
+
+fn run_once() -> RunOut {
+    let mut m = Machine::new(rebind_cfg()).expect("machine");
+    m.boot(ProgModel::Znuma).expect("boot");
+    // Host 0: pinned to its first LD's node — node 2 stays idle so the
+    // hot-remove can take it cleanly mid-run.
+    let wl0 = Stream::for_wss(StreamKernel::Triad, m.cfg.l2.size, 2);
+    m.attach_workloads_to(
+        0,
+        vec![Box::new(wl0)],
+        &MemPolicy::Bind { nodes: vec![1] },
+    )
+    .expect("attach host 0");
+    // Host 1: prefers node 2 — DRAM fallback while it is offline, CXL
+    // as soon as the hot-add lands.
+    let wl1 = Stream::for_wss(StreamKernel::Triad, m.cfg.l2.size, 4);
+    m.attach_workloads_to(
+        1,
+        vec![Box::new(wl1)],
+        &MemPolicy::Preferred { node: 2 },
+    )
+    .expect("attach host 1");
+    let s = m.run(None);
+    m.verify().expect("verify");
+
+    let d = m.dump_stats();
+    let get = |k: &str| d.get(k).unwrap_or(0.0) as u64;
+    let mut dmesg = Vec::new();
+    for h in 0..2 {
+        let g = m.hosts[h].guest.as_ref().expect("guest");
+        for line in &g.boot_log {
+            if line.contains("hot-remove")
+                || line.contains("hot-add")
+                || line.contains("reserved for hot-plug")
+            {
+                dmesg.push(format!("[host{h}] {line}"));
+            }
+        }
+    }
+    RunOut {
+        ticks: s.ticks,
+        host1_ld1_reads: get("cxl.dev0.ld1.host1_reads"),
+        offline0: get("host0.sys.mem_offline_events"),
+        online1: get("host1.sys.mem_online_events"),
+        rebinds: get("cxl.dev0.ld1.rebinds"),
+        dmesg,
+        stats_text: d.to_text(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    cxlramsim::util::logger::init();
+
+    let a = run_once();
+
+    println!("guest kernel log (hot-plug lines):");
+    for line in &a.dmesg {
+        println!("  {line}");
+    }
+
+    let mut t = Table::new(
+        "FM-DRIVEN LD RE-BIND: host 0 shrinks, host 1 grows mid-run",
+        &["metric", "value"],
+    );
+    t.row(&["run length (ticks)".into(), a.ticks.to_string()]);
+    t.row(&[
+        "host1 reads served by dev0.ld1 (post-rebind)".into(),
+        a.host1_ld1_reads.to_string(),
+    ]);
+    t.row(&["host0 mem_offline_events".into(), a.offline0.to_string()]);
+    t.row(&["host1 mem_online_events".into(), a.online1.to_string()]);
+    t.row(&["cxl.dev0.ld1.rebinds".into(), a.rebinds.to_string()]);
+    t.print();
+
+    // The run is an event-queue program: repeat it and the FM actions
+    // land on the same ticks, in the same order, with the same stats.
+    let b = run_once();
+    let identical = a.stats_text == b.stats_text && a.ticks == b.ticks;
+    println!(
+        "\nbitwise deterministic across two runs: {}",
+        if identical { "yes" } else { "NO (bug!)" }
+    );
+    assert!(identical, "rebind run must be bit-deterministic");
+    assert!(a.rebinds == 1 && a.offline0 == 1 && a.online1 == 1);
+    assert!(
+        a.host1_ld1_reads > 0,
+        "host 1 must observe its new capacity mid-run"
+    );
+    println!(
+        "host 1 gained 256 MiB of CXL-backed zNUMA capacity mid-run \
+         ({} line fills served by the re-bound LD) while host 0 shrank \
+         by the same amount — all through GET_EVENT_RECORDS, HDM \
+         decoder re-commits and cxl-cli onlining, no simulator hooks.",
+        a.host1_ld1_reads
+    );
+    Ok(())
+}

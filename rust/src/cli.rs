@@ -34,6 +34,9 @@ pub struct Args {
     pub prog_model: ProgModel,
     pub artifacts: String,
     pub verify: bool,
+    /// Fabric-Manager event script: one `@<time> bind|unbind …` line
+    /// per scheduled action (appended to any `[fm] events` from TOML).
+    pub fm_script: Option<String>,
 }
 
 impl Args {
@@ -104,6 +107,7 @@ impl Args {
                     }
                 }
                 "--artifacts" => a.artifacts = val(&mut i)?,
+                "--fm-script" => a.fm_script = Some(val(&mut i)?),
                 "--verify" => a.verify = true,
                 other => bail!("unknown flag '{other}' (see `cxlramsim help`)"),
             }
@@ -118,7 +122,23 @@ impl Args {
                 .with_context(|| format!("reading {p}"))?,
             None => String::new(),
         };
-        SimConfig::from_toml(&text, &self.sets)
+        let mut cfg = SimConfig::from_toml(&text, &self.sets)?;
+        if let Some(p) = &self.fm_script {
+            let script = std::fs::read_to_string(p)
+                .with_context(|| format!("reading FM script {p}"))?;
+            for line in script.lines() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                cfg.fm_events
+                    .push(crate::config::FmEventDef::parse(line)?);
+            }
+            // The schedule changes the BIOS window layout and must
+            // replay cleanly against the boot-time LD assignment.
+            cfg.validate()?;
+        }
+        Ok(cfg)
     }
 
     pub fn mem_policy(&self) -> Result<MemPolicy> {
@@ -188,6 +208,10 @@ pub fn print_help() {
            --workload W           stream-{{copy,scale,add,triad}} | random |\n\
                                   chase | kv\n\
            --wss-mult N           working set = N x L2 size (default 4)\n\
+           --fm-script FILE       runtime Fabric-Manager schedule: one\n\
+                                  '@<time> unbind devN.ldK' or\n\
+                                  '@<time> bind devN.ldK hostH' per line\n\
+                                  (LD hot remove/add while guests run)\n\
            --prog-model M         znuma | flat\n\
            --artifacts DIR        AOT artifact directory\n\
            --verify               functional verification after the run"
@@ -477,6 +501,46 @@ mod tests {
         let cfg = a.config().unwrap();
         assert_eq!(cfg.cxl.switches, 1);
         assert_eq!(cfg.cxl.switch(0).ndev, 4);
+    }
+
+    #[test]
+    fn fm_script_flag_loads_schedule() {
+        let path = std::env::temp_dir().join("cxlramsim_fm_test.txt");
+        std::fs::write(
+            &path,
+            "# move LD 1 to host 1 mid-run\n\
+             @20us unbind dev0.ld1\n\n\
+             @25us bind dev0.ld1 host1\n",
+        )
+        .unwrap();
+        let a = Args::parse(&sv(&[
+            "run",
+            "--hosts",
+            "2",
+            "--set",
+            "cxl.dev0.lds=2",
+            "--set",
+            "cxl.interleave_ways=1",
+            "--fm-script",
+            path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let cfg = a.config().unwrap();
+        assert_eq!(cfg.fm_events.len(), 2, "comments/blank lines skipped");
+        assert_eq!(cfg.fm_events[0].at_ns, 20_000.0);
+        let _ = std::fs::remove_file(&path);
+
+        // A script that fails schedule validation is rejected.
+        let bad = std::env::temp_dir().join("cxlramsim_fm_bad.txt");
+        std::fs::write(&bad, "@20us bind dev0.ld0 host0\n").unwrap();
+        let a = Args::parse(&sv(&[
+            "run",
+            "--fm-script",
+            bad.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(a.config().is_err(), "bind of a bound LD must fail");
+        let _ = std::fs::remove_file(&bad);
     }
 
     #[test]

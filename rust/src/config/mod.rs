@@ -47,6 +47,95 @@ impl std::fmt::Display for LdRef {
     }
 }
 
+/// One scheduled Fabric-Manager action: at simulated time `at_ns` the
+/// FM issues a bind or unbind for one logical device, while guests are
+/// executing workloads. Written `"@<time> unbind devN.ldK"` /
+/// `"@<time> bind devN.ldK hostH"` in `[fm] events` lists and
+/// `--fm-script` files (time units: ns|us|ms|s).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FmEventDef {
+    /// Simulated time of the FM action, in nanoseconds.
+    pub at_ns: f64,
+    pub op: FmOp,
+}
+
+/// The FM-API action an [`FmEventDef`] performs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FmOp {
+    /// `BIND_LD`: give `ld` to `host` (must currently be unbound).
+    Bind { ld: LdRef, host: usize },
+    /// `UNBIND_LD`: take `ld` away from its current owner (the owning
+    /// guest offlines the zNUMA node through the hot-remove path first).
+    Unbind { ld: LdRef },
+}
+
+impl FmEventDef {
+    /// The logical device this event operates on.
+    pub fn ld(&self) -> LdRef {
+        match self.op {
+            FmOp::Bind { ld, .. } | FmOp::Unbind { ld } => ld,
+        }
+    }
+
+    /// Parse `"@50us unbind dev0.ld1"` / `"@1.5ms bind dev0.ld1 host1"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut it = s.split_whitespace();
+        let t = it
+            .next()
+            .with_context(|| format!("empty FM event '{s}'"))?;
+        let t = t.strip_prefix('@').with_context(|| {
+            format!("FM event '{s}' must start with @<time>")
+        })?;
+        let at_ns = parse_time_ns(t)
+            .with_context(|| format!("bad time in FM event '{s}'"))?;
+        let verb = it
+            .next()
+            .with_context(|| format!("FM event '{s}' lacks a verb"))?;
+        let ld = LdRef::parse(it.next().with_context(|| {
+            format!("FM event '{s}' lacks a devN.ldK target")
+        })?)?;
+        let op = match verb {
+            "unbind" => FmOp::Unbind { ld },
+            "bind" => {
+                let h = it.next().with_context(|| {
+                    format!("FM bind event '{s}' lacks a hostH target")
+                })?;
+                let host = h
+                    .strip_prefix("host")
+                    .and_then(|n| n.parse::<usize>().ok())
+                    .with_context(|| {
+                        format!("bad host '{h}' in FM event '{s}' \
+                                 (expected hostH)")
+                    })?;
+                FmOp::Bind { ld, host }
+            }
+            other => bail!(
+                "unknown FM verb '{other}' in '{s}' (bind|unbind)"
+            ),
+        };
+        if it.next().is_some() {
+            bail!("trailing tokens in FM event '{s}'");
+        }
+        Ok(FmEventDef { at_ns, op })
+    }
+}
+
+/// Parse a duration with a unit suffix into nanoseconds.
+fn parse_time_ns(s: &str) -> Result<f64> {
+    // Longest suffixes first: "s" would otherwise swallow "ns"/"us"/"ms".
+    for (suf, mult) in
+        [("ns", 1.0), ("us", 1e3), ("ms", 1e6), ("s", 1e9)]
+    {
+        if let Some(v) = s.strip_suffix(suf) {
+            let x: f64 = v
+                .parse()
+                .with_context(|| format!("bad number '{v}'"))?;
+            return Ok(x * mult);
+        }
+    }
+    bail!("time '{s}' needs a unit suffix (ns|us|ms|s)")
+}
+
 /// CPU model selector (paper Table I: In-order, Out-of-Order).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CpuModel {
@@ -491,6 +580,12 @@ pub struct SimConfig {
     pub iobus_lat_ns: f64,
     pub iobus_bw_gbps: f64,
     pub cxl: CxlConfig,
+    /// Scheduled runtime Fabric-Manager actions (`[fm] events` /
+    /// `--fm-script`). Non-empty schedules switch every host's BIOS to
+    /// the hot-plug window layout: all CXL windows are published to all
+    /// hosts (at per-host disjoint bases), unbound windows staying
+    /// offline as the hot-add pool.
+    pub fm_events: Vec<FmEventDef>,
     pub page_size: u64,
     pub seed: u64,
 }
@@ -565,6 +660,7 @@ impl Default for SimConfig {
                 switches: 0,
                 switch_overrides: Vec::new(),
             },
+            fm_events: Vec::new(),
             page_size: 4096,
             seed: 1,
         }
@@ -825,7 +921,88 @@ impl SimConfig {
         if self.issue_width == 0 || self.lsq_entries == 0 {
             bail!("o3 parameters must be positive");
         }
+        if !self.fm_events.is_empty() {
+            if ways != 1 {
+                bail!(
+                    "fm.events re-binds individual logical devices and \
+                     requires 1-way windows (set cxl.interleave_ways = 1)"
+                );
+            }
+            if self.cxl.attach == CxlAttach::MemBus {
+                bail!(
+                    "fm.events requires the architectural iobus attach: \
+                     the membus baseline bypasses the root complex's \
+                     routing windows, so hot-removed capacity cannot be \
+                     torn out of its path"
+                );
+            }
+            // Replay the schedule against the boot-time assignment:
+            // every unbind must target a bound LD, every bind an
+            // unbound one (ownership is exclusive), so a valid schedule
+            // can never fail at runtime for ownership reasons.
+            let keys = self.window_keys();
+            let mut owner: std::collections::BTreeMap<LdRef, Option<usize>> =
+                keys.iter()
+                    .copied()
+                    .zip(self.window_hosts().into_iter().map(Some))
+                    .collect();
+            for i in self.fm_events_in_time_order() {
+                let ev = &self.fm_events[i];
+                if !ev.at_ns.is_finite() || ev.at_ns < 0.0 {
+                    bail!("fm event {i}: time must be finite and >= 0");
+                }
+                let slot = owner.get_mut(&ev.ld()).with_context(|| {
+                    format!(
+                        "fm event {i}: '{}' does not name a CXL window",
+                        ev.ld()
+                    )
+                })?;
+                match ev.op {
+                    FmOp::Unbind { ld } => {
+                        if slot.is_none() {
+                            bail!(
+                                "fm event {i}: unbind of '{ld}' which is \
+                                 not bound at that point in the schedule"
+                            );
+                        }
+                        *slot = None;
+                    }
+                    FmOp::Bind { ld, host } => {
+                        if host >= self.hosts {
+                            bail!(
+                                "fm event {i}: bind of '{ld}' targets \
+                                 host{host} outside system.hosts = {}",
+                                self.hosts
+                            );
+                        }
+                        if slot.is_some() {
+                            bail!(
+                                "fm event {i}: bind of '{ld}' which is \
+                                 still bound — unbind it first \
+                                 (LD ownership is exclusive)"
+                            );
+                        }
+                        *slot = Some(host);
+                    }
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Indices of `fm_events` in execution order: by time, config order
+    /// breaking ties — the order the machine schedules (and validation
+    /// replays) them in.
+    pub fn fm_events_in_time_order(&self) -> Vec<usize> {
+        let mut idxs: Vec<usize> = (0..self.fm_events.len()).collect();
+        idxs.sort_by(|&a, &b| {
+            self.fm_events[a]
+                .at_ns
+                .partial_cmp(&self.fm_events[b].at_ns)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idxs
     }
 
     /// Load from TOML text plus `key=value` overrides.
@@ -1030,6 +1207,22 @@ impl SimConfig {
                 }
             }
         }
+        // Runtime Fabric-Manager schedule from the [fm] section.
+        if let Some(v) = doc.get("fm.events") {
+            let items = match v {
+                TomlValue::Arr(items) => items,
+                _ => bail!(
+                    "fm.events must be an array of \
+                     \"@<time> bind|unbind devN.ldK [hostH]\" strings"
+                ),
+            };
+            for it in items {
+                let s = it
+                    .as_str()
+                    .context("fm.events entries must be strings")?;
+                c.fm_events.push(FmEventDef::parse(s)?);
+            }
+        }
         // Reject overrides for devices/switches/hosts that don't exist,
         // and unknown keys inside valid sections, rather than silently
         // dropping them (a likely off-by-one or typo in configs).
@@ -1057,6 +1250,11 @@ impl SimConfig {
                     bail!(
                         "unknown key '{key}' ([host.N] keys: [\"lds\"])"
                     );
+                }
+            }
+            if let Some(rest) = key.strip_prefix("fm.") {
+                if rest != "events" {
+                    bail!("unknown key '{key}' ([fm] keys: [\"events\"])");
                 }
             }
             if let Some(rest) = key.strip_prefix("cxl.dev") {
@@ -1520,6 +1718,111 @@ mod tests {
         c.cxl.dev_overrides =
             vec![CxlDevOverride { lds: Some(2), ..Default::default() }];
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fm_event_parsing() {
+        let e = FmEventDef::parse("@50us unbind dev0.ld1").unwrap();
+        assert_eq!(e.at_ns, 50_000.0);
+        assert_eq!(e.op, FmOp::Unbind { ld: LdRef { dev: 0, ld: 1 } });
+        let e = FmEventDef::parse("@1.5ms bind dev2.ld0 host3").unwrap();
+        assert_eq!(e.at_ns, 1_500_000.0);
+        assert_eq!(
+            e.op,
+            FmOp::Bind { ld: LdRef { dev: 2, ld: 0 }, host: 3 }
+        );
+        // `dev1` is shorthand for `dev1.ld0`, matching [host.N] lists.
+        assert_eq!(
+            FmEventDef::parse("@1ns bind dev1 host0").unwrap().ld(),
+            LdRef { dev: 1, ld: 0 }
+        );
+        for bad in [
+            "50us unbind dev0.ld1",      // no @
+            "@50 unbind dev0.ld1",       // unitless time
+            "@50us detach dev0.ld1",     // unknown verb
+            "@50us bind dev0.ld1",       // bind without host
+            "@50us bind dev0.ld1 h1",    // malformed host
+            "@50us unbind dev0.ld1 x",   // trailing token
+        ] {
+            assert!(FmEventDef::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fm_schedule_validates_ownership_transitions() {
+        let base = "[system]\nhosts = 2\n[cxl]\ninterleave_ways = 1\n\
+                    [cxl.dev0]\nlds = 2\n";
+        // Legal: unbind then bind elsewhere.
+        let cfg = SimConfig::from_toml(
+            &format!(
+                "{base}[fm]\nevents = [\"@10us unbind dev0.ld1\", \
+                 \"@20us bind dev0.ld1 host0\"]\n"
+            ),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.fm_events.len(), 2);
+        assert_eq!(cfg.fm_events_in_time_order(), vec![0, 1]);
+
+        // Bind of a still-bound LD.
+        assert!(SimConfig::from_toml(
+            &format!("{base}[fm]\nevents = [\"@10us bind dev0.ld1 host0\"]\n"),
+            &[],
+        )
+        .is_err());
+        // Unbind of an LD unbound earlier in the schedule.
+        assert!(SimConfig::from_toml(
+            &format!(
+                "{base}[fm]\nevents = [\"@10us unbind dev0.ld0\", \
+                 \"@20us unbind dev0.ld0\"]\n"
+            ),
+            &[],
+        )
+        .is_err());
+        // Host out of range.
+        assert!(SimConfig::from_toml(
+            &format!(
+                "{base}[fm]\nevents = [\"@10us unbind dev0.ld0\", \
+                 \"@20us bind dev0.ld0 host5\"]\n"
+            ),
+            &[],
+        )
+        .is_err());
+        // Unknown window.
+        assert!(SimConfig::from_toml(
+            &format!("{base}[fm]\nevents = [\"@10us unbind dev3.ld0\"]\n"),
+            &[],
+        )
+        .is_err());
+        // Multi-way windows cannot be re-bound per-LD.
+        assert!(SimConfig::from_toml(
+            "[cxl]\ndevices = 2\ninterleave_ways = 2\n\
+             [fm]\nevents = [\"@10us unbind dev0.ld0\"]\n",
+            &[],
+        )
+        .is_err());
+        // The membus baseline has no RC routing windows to hot-remove.
+        assert!(SimConfig::from_toml(
+            "[system]\nhosts = 2\n\
+             [cxl]\ninterleave_ways = 1\nattach = \"membus\"\n\
+             [cxl.dev0]\nlds = 2\n\
+             [fm]\nevents = [\"@10us unbind dev0.ld1\"]\n",
+            &[],
+        )
+        .is_err());
+        // Typo'd [fm] key.
+        assert!(SimConfig::from_toml(
+            "[fm]\nevent = [\"@10us unbind dev0.ld0\"]\n",
+            &[],
+        )
+        .is_err());
+        // Events interleave by time, config order breaking ties.
+        let mut c = SimConfig::default();
+        c.fm_events = vec![
+            FmEventDef::parse("@20us unbind dev0.ld0").unwrap(),
+            FmEventDef::parse("@10us bind dev0.ld0 host0").unwrap(),
+        ];
+        assert_eq!(c.fm_events_in_time_order(), vec![1, 0]);
     }
 
     #[test]

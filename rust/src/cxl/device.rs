@@ -35,6 +35,9 @@ pub struct DeviceStats {
     /// cross-host contention on a pooled MLD's media measurable.
     pub ld_host_reads: Vec<[Counter; crate::config::MAX_HOSTS]>,
     pub ld_host_writes: Vec<[Counter; crate::config::MAX_HOSTS]>,
+    /// Successful runtime FM re-binds per logical device (boot-time
+    /// config binding is not counted).
+    pub ld_rebinds: Vec<Counter>,
 }
 
 pub struct CxlDevice {
@@ -86,6 +89,7 @@ impl CxlDevice {
                 ld_writes: vec![Counter::default(); lds],
                 ld_host_reads: vec![Default::default(); lds],
                 ld_host_writes: vec![Default::default(); lds],
+                ld_rebinds: vec![Counter::default(); lds],
                 ..Default::default()
             },
             bar0_base: None,
@@ -180,6 +184,11 @@ impl CxlDevice {
         }
     }
 
+    /// Record a successful runtime FM re-bind of logical device `ld`.
+    pub fn note_rebind(&mut self, ld: usize) {
+        self.stats.ld_rebinds[ld.min(self.lds - 1)].inc();
+    }
+
     pub fn capacity(&self) -> u64 {
         self.mailbox.state.total_capacity
     }
@@ -204,6 +213,9 @@ impl CxlDevice {
                     &self.stats.ld_writes[k],
                 );
             }
+        }
+        for (k, r) in self.stats.ld_rebinds.iter().enumerate() {
+            d.counter(&format!("{path}.ld{k}.rebinds"), r);
         }
         // Host attribution: which host's traffic each LD served (rows
         // appear once a host has actually touched the LD).

@@ -12,6 +12,15 @@
 //! established by driving the FM-API bind commands through each device's
 //! real mailbox register surface ([`Fabric::bind_from_config`]), exactly
 //! the state the guests later query with Get LD Allocations.
+//!
+//! Ownership is not fixed at boot: an `[fm] events` schedule makes the
+//! FM re-bind logical devices **at runtime** ([`Fabric::fm_unbind`] /
+//! [`Fabric::fm_bind`]). Each action goes through the same mailbox
+//! command the boot path uses, and the affected host is told via an
+//! Event-Log record ([`Fabric::post_fm_event`]) that its driver drains
+//! with `GET_EVENT_RECORDS` — the machine's FM event handler
+//! (`system::Machine`) sequences quiesce → notify → unbind so packets
+//! to a departing LD complete (or retry) deterministically first.
 
 use anyhow::{bail, Result};
 
@@ -21,7 +30,7 @@ use crate::stats::StatDump;
 
 use super::device::CxlDevice;
 use super::link::{CxlLink, LinkStats};
-use super::mailbox::{opcode, retcode};
+use super::mailbox::{opcode, retcode, EventRecord};
 use super::mem_proto::CxlMemPacket;
 use super::switch::CxlSwitch;
 
@@ -152,13 +161,7 @@ impl Fabric {
         assert_eq!(defs.len(), window_hosts.len());
         for (def, &host) in defs.iter().zip(window_hosts) {
             for &dev in &def.targets {
-                let mut payload = [0u8; 4];
-                payload[0..2].copy_from_slice(&def.ld.to_le_bytes());
-                payload[2..4]
-                    .copy_from_slice(&(host as u16).to_le_bytes());
-                let (code, _) = self.devices[dev]
-                    .mailbox
-                    .run_command(opcode::BIND_LD, &payload);
+                let code = self.fm_bind(dev, def.ld, host as u16);
                 if code != retcode::SUCCESS {
                     bail!(
                         "FM BIND_LD dev{dev}.ld{} -> host{host} failed \
@@ -169,6 +172,40 @@ impl Fabric {
             }
         }
         Ok(())
+    }
+
+    /// FM-API `BIND_LD` on device `dev`: give logical device `ld` to
+    /// `host`. Returns the mailbox return code (`retcode::BUSY` when
+    /// the LD is still owned — ownership is exclusive).
+    pub fn fm_bind(&mut self, dev: usize, ld: u16, host: u16) -> u16 {
+        let mut payload = [0u8; 4];
+        payload[0..2].copy_from_slice(&ld.to_le_bytes());
+        payload[2..4].copy_from_slice(&host.to_le_bytes());
+        self.devices[dev]
+            .mailbox
+            .run_command(opcode::BIND_LD, &payload)
+            .0
+    }
+
+    /// FM-API `UNBIND_LD` on device `dev`: release logical device `ld`.
+    /// Returns the mailbox return code.
+    pub fn fm_unbind(&mut self, dev: usize, ld: u16) -> u16 {
+        self.devices[dev]
+            .mailbox
+            .run_command(opcode::UNBIND_LD, &ld.to_le_bytes())
+            .0
+    }
+
+    /// Current owner of `dev`'s logical device `ld`
+    /// ([`super::mailbox::UNBOUND`] when unassigned).
+    pub fn ld_owner(&self, dev: usize, ld: u16) -> u16 {
+        self.devices[dev].mailbox.state.ld_owner[ld as usize]
+    }
+
+    /// FM side of the hot-plug doorbell: post an Event-Log record on
+    /// device `dev` for the addressed host's driver to drain.
+    pub fn post_fm_event(&mut self, dev: usize, rec: EventRecord) {
+        self.devices[dev].mailbox.push_event(rec);
     }
 
     /// Fabric-wide stats: devices (with per-LD host attribution),
@@ -218,6 +255,32 @@ mod tests {
         assert_eq!(f.devices[0].mailbox.state.ld_owner, vec![0, 1]);
         // Re-binding an owned LD must fail (exclusive ownership).
         assert!(f.bind_from_config(&cfg, &[0, 1]).is_err());
+    }
+
+    #[test]
+    fn runtime_fm_rebind_and_event_doorbell() {
+        use crate::cxl::mailbox::{event, EventRecord, UNBOUND};
+        let mut cfg = SimConfig::default().cxl;
+        cfg.interleave_ways = 1;
+        cfg.dev_overrides = vec![crate::config::CxlDevOverride {
+            lds: Some(2),
+            ..Default::default()
+        }];
+        let mut f = Fabric::new(&cfg);
+        f.bind_from_config(&cfg, &[0, 0]).unwrap();
+        assert_eq!(f.ld_owner(0, 1), 0);
+        // Re-bind while owned fails; unbind then bind moves ownership.
+        assert_eq!(f.fm_bind(0, 1, 1), retcode::BUSY);
+        assert_eq!(f.fm_unbind(0, 1), retcode::SUCCESS);
+        assert_eq!(f.ld_owner(0, 1), UNBOUND);
+        assert_eq!(f.fm_bind(0, 1, 1), retcode::SUCCESS);
+        assert_eq!(f.ld_owner(0, 1), 1);
+        // The doorbell record lands in the device's event log.
+        f.post_fm_event(
+            0,
+            EventRecord { host: 1, ld: 1, action: event::LD_BOUND },
+        );
+        assert_eq!(f.devices[0].mailbox.events_pending(), 1);
     }
 
     #[test]

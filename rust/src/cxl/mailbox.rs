@@ -7,6 +7,15 @@
 //! unmodified CXL-CLI/ndctl user-space toolchain talk to the modeled
 //! device ("Doorbell mechanism", §III-B.1) — our `guestos::cxlcli`
 //! drives exactly this surface.
+//!
+//! Besides the memory-device command set (IDENTIFY, partitions, health)
+//! the mailbox answers the **FM-API pooling commands** (`BIND_LD` /
+//! `UNBIND_LD` / `GET_LD_ALLOCATIONS` / `GET_LD_INFO`) and carries the
+//! **Event Log** ([`EventRecord`]): when the fabric manager re-binds a
+//! logical device at runtime it posts a record here, the status
+//! register raises [`dev::EVENT_PENDING`], and the owning (or gaining)
+//! guest drains it with `GET_EVENT_RECORDS` / `CLEAR_EVENT_RECORDS` —
+//! the hook the memory hot-add / hot-remove path hangs off.
 
 use super::regs::dev;
 
@@ -16,6 +25,11 @@ use super::regs::dev;
 /// fabric manager uses to parcel LDs out to hosts — collapsed here to
 /// per-LD ownership on the device, the first-order pooling semantic).
 pub mod opcode {
+    /// Events §8.2.9.1: read pending records from the (single modeled)
+    /// event log. Payload: log id (u8, ignored — one log).
+    pub const GET_EVENT_RECORDS: u16 = 0x0100;
+    /// Events §8.2.9.1.3: clear the first N records (N = u16 payload).
+    pub const CLEAR_EVENT_RECORDS: u16 = 0x0101;
     pub const IDENTIFY_MEMORY_DEVICE: u16 = 0x4000;
     pub const GET_PARTITION_INFO: u16 = 0x4100;
     pub const SET_PARTITION_INFO: u16 = 0x4101;
@@ -32,6 +46,33 @@ pub mod opcode {
 
 /// Owner value of a logical device no host has been bound to.
 pub const UNBOUND: u16 = 0xFFFF;
+
+/// Event-record actions carried in the device Event Log. The fabric
+/// manager posts these when it re-binds logical devices at runtime;
+/// the owning (or gaining) host's driver consumes them via
+/// `GET_EVENT_RECORDS` and runs the memory hot-remove / hot-add path.
+pub mod event {
+    /// The FM wants this LD back: offline + release it (hot-remove).
+    pub const UNBIND_REQUEST: u8 = 0;
+    /// This LD was just bound to the addressed host (hot-add).
+    pub const LD_BOUND: u8 = 1;
+}
+
+/// One record in the device Event Log (6 bytes on the wire:
+/// host u16, ld u16, action u8, reserved u8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EventRecord {
+    /// Host the record is addressed to (records for other hosts are
+    /// left in the log by a well-behaved driver).
+    pub host: u16,
+    /// Logical-device index the event concerns.
+    pub ld: u16,
+    /// One of [`event::UNBIND_REQUEST`] / [`event::LD_BOUND`].
+    pub action: u8,
+}
+
+/// Wire size of one serialized [`EventRecord`].
+pub const EVENT_RECORD_BYTES: usize = 6;
 
 /// Mailbox return codes (§8.2.8.4.5.1).
 pub mod retcode {
@@ -88,6 +129,10 @@ pub struct Mailbox {
     payload: Vec<u8>,
     pub state: MemdevState,
     pub commands_executed: u64,
+    /// The device Event Log: FM-posted records pending driver
+    /// consumption (surfaced via [`dev::EVENT_PENDING`] in the status
+    /// register and the `GET_EVENT_RECORDS` command).
+    event_log: Vec<EventRecord>,
 }
 
 impl Mailbox {
@@ -97,6 +142,7 @@ impl Mailbox {
             payload: vec![0u8; dev::MB_PAYLOAD_BYTES],
             state,
             commands_executed: 0,
+            event_log: Vec::new(),
         };
         // Payload size: log2(512) = 9.
         mb.regs.insert(dev::MB_CAPS, 9);
@@ -117,7 +163,22 @@ impl Mailbox {
             b[..n].copy_from_slice(&self.payload[i..i + n]);
             return u64::from_le_bytes(b);
         }
-        *self.regs.get(&off).unwrap_or(&0)
+        let mut v = *self.regs.get(&off).unwrap_or(&0);
+        if off == dev::MEMDEV_STATUS && !self.event_log.is_empty() {
+            v |= dev::EVENT_PENDING;
+        }
+        v
+    }
+
+    /// FM side: append an event record to the device Event Log (the
+    /// status register's [`dev::EVENT_PENDING`] bit follows the log).
+    pub fn push_event(&mut self, rec: EventRecord) {
+        self.event_log.push(rec);
+    }
+
+    /// Records currently pending in the Event Log.
+    pub fn events_pending(&self) -> usize {
+        self.event_log.len()
     }
 
     pub fn write64(&mut self, off: u64, v: u64) {
@@ -174,6 +235,37 @@ impl Mailbox {
             return;
         }
         match op {
+            opcode::GET_EVENT_RECORDS => {
+                // Count + records, oldest first. The 512 B payload fits
+                // 85 records; the log never grows near that (each FM
+                // action posts one and the driver drains synchronously).
+                let max = (self.payload.len() - 2) / EVENT_RECORD_BYTES;
+                let n = self.event_log.len().min(max);
+                let mut r = vec![0u8; 2 + n * EVENT_RECORD_BYTES];
+                r[0..2].copy_from_slice(&(n as u16).to_le_bytes());
+                for (k, rec) in self.event_log.iter().take(n).enumerate() {
+                    let o = 2 + k * EVENT_RECORD_BYTES;
+                    r[o..o + 2].copy_from_slice(&rec.host.to_le_bytes());
+                    r[o + 2..o + 4].copy_from_slice(&rec.ld.to_le_bytes());
+                    r[o + 4] = rec.action;
+                }
+                self.finish(retcode::SUCCESS, &r);
+            }
+            opcode::CLEAR_EVENT_RECORDS => {
+                if len < 2 {
+                    self.finish(retcode::INVALID_INPUT, &[]);
+                    return;
+                }
+                let n = u16::from_le_bytes(
+                    self.payload[0..2].try_into().unwrap(),
+                ) as usize;
+                if n > self.event_log.len() {
+                    self.finish(retcode::INVALID_INPUT, &[]);
+                    return;
+                }
+                self.event_log.drain(..n);
+                self.finish(retcode::SUCCESS, &[]);
+            }
             opcode::IDENTIFY_MEMORY_DEVICE => {
                 // §8.2.9.5.1.1 layout (prefix): fw_revision[16],
                 // total_capacity (256MiB units, u64), volatile_only u64,
@@ -433,6 +525,45 @@ mod tests {
         assert_eq!(code, retcode::INVALID_INPUT);
         // Short payloads.
         let (code, _) = m.run_command(opcode::BIND_LD, &[0]);
+        assert_eq!(code, retcode::INVALID_INPUT);
+    }
+
+    #[test]
+    fn event_log_roundtrip_through_registers() {
+        let mut m = mb();
+        // Empty log: no pending bit, zero records.
+        assert_eq!(m.read64(dev::MEMDEV_STATUS) & dev::EVENT_PENDING, 0);
+        let (code, resp) = m.run_command(opcode::GET_EVENT_RECORDS, &[0]);
+        assert_eq!(code, retcode::SUCCESS);
+        assert_eq!(u16::from_le_bytes(resp[0..2].try_into().unwrap()), 0);
+
+        // FM posts two records: status bit latches, records read back
+        // oldest-first with host/ld/action intact.
+        m.push_event(EventRecord {
+            host: 1,
+            ld: 3,
+            action: event::UNBIND_REQUEST,
+        });
+        m.push_event(EventRecord { host: 0, ld: 2, action: event::LD_BOUND });
+        assert_ne!(m.read64(dev::MEMDEV_STATUS) & dev::EVENT_PENDING, 0);
+        let (code, resp) = m.run_command(opcode::GET_EVENT_RECORDS, &[0]);
+        assert_eq!(code, retcode::SUCCESS);
+        assert_eq!(u16::from_le_bytes(resp[0..2].try_into().unwrap()), 2);
+        assert_eq!(u16::from_le_bytes(resp[2..4].try_into().unwrap()), 1);
+        assert_eq!(u16::from_le_bytes(resp[4..6].try_into().unwrap()), 3);
+        assert_eq!(resp[6], event::UNBIND_REQUEST);
+        assert_eq!(resp[12], event::LD_BOUND);
+
+        // GET does not clear; CLEAR drains the requested count.
+        assert_eq!(m.events_pending(), 2);
+        let (code, _) =
+            m.run_command(opcode::CLEAR_EVENT_RECORDS, &2u16.to_le_bytes());
+        assert_eq!(code, retcode::SUCCESS);
+        assert_eq!(m.events_pending(), 0);
+        assert_eq!(m.read64(dev::MEMDEV_STATUS) & dev::EVENT_PENDING, 0);
+        // Over-clearing is rejected.
+        let (code, _) =
+            m.run_command(opcode::CLEAR_EVENT_RECORDS, &1u16.to_le_bytes());
         assert_eq!(code, retcode::INVALID_INPUT);
     }
 

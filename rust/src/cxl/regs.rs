@@ -94,6 +94,11 @@ pub mod dev {
     /// Memory-device status register (§8.2.8.3): bit[1] media ready.
     pub const MEMDEV_STATUS: u64 = 0x0400;
     pub const MEDIA_READY: u64 = 1 << 1;
+    /// Model-specific summary bit: record(s) waiting in the device's
+    /// Event Log (stands in for the event-interrupt MSI/MSI-X the spec
+    /// delivers alongside the doorbell; the guest polls it before
+    /// issuing `GET_EVENT_RECORDS`).
+    pub const EVENT_PENDING: u64 = 1 << 5;
 
     pub const BLOCK_SIZE: u64 = 0x1000;
 }

@@ -146,6 +146,17 @@ impl CxlRootComplex {
         self.windows.push(w);
     }
 
+    /// Hot-remove hook: drop the routing window based at `base` (the
+    /// guest just uncommitted the matching host-bridge decoder). After
+    /// this, no new request can be routed at the departing device;
+    /// responses already timed stay valid. Returns whether a window
+    /// was removed.
+    pub fn remove_window(&mut self, base: u64) -> bool {
+        let before = self.windows.len();
+        self.windows.retain(|w| w.base != base);
+        self.windows.len() != before
+    }
+
     pub fn windows(&self) -> &[HdmWindow] {
         &self.windows
     }

@@ -18,6 +18,12 @@
 //!   4. Per owned logical device, HDM decoders are programmed +
 //!      committed on BOTH the host bridge and the endpoint, mapping one
 //!      CFMWS window onto that LD's capacity slice (DPA skip).
+//!   5. Runtime re-binding: in the hot-plug window layout (one window
+//!      per LD, published to every host) foreign LDs' windows are kept
+//!      as uncommitted *spares*; FM Event-Log records later drive
+//!      [`commit_memdev_decoders`] (hot-add) and
+//!      [`uncommit_memdev_decoders`] (hot-remove) against them — see
+//!      `GuestOs::handle_fm_events`.
 
 use anyhow::{bail, Context, Result};
 
@@ -60,6 +66,10 @@ pub struct CxlMemdev {
     pub component_block: u64, // absolute MMIO base (endpoint)
     pub device_block: u64,    // absolute MMIO base (mailbox)
     pub hb_component_block: u64,
+    /// Host-bridge HDM decoder index this logical device's window uses
+    /// (committed while bound, uncommitted by hot-remove; stable across
+    /// re-binds in the hot-plug window layout).
+    pub hb_decoder: usize,
     pub hb_uid: u32,
 }
 
@@ -139,6 +149,54 @@ fn commit_decoder(
     Ok(())
 }
 
+/// Uncommit decoder `idx` of the component block at `blk` (clears the
+/// commit bit; the committed latch follows).
+fn uncommit_decoder(p: &mut dyn Platform, blk: u64, idx: usize) {
+    let dec = blk + comp::HDM_DEC0 + (idx as u64) * comp::HDM_DEC_STRIDE;
+    p.mmio_write32(dec + comp::DEC_CTRL, 0);
+}
+
+/// Hot-add half of runtime re-binding: program + commit the endpoint
+/// and host-bridge HDM decoder pair for `md`'s window (leaf before
+/// root, as at boot).
+pub fn commit_memdev_decoders(
+    p: &mut dyn Platform,
+    md: &CxlMemdev,
+) -> Result<()> {
+    let ig = (md.window_granularity.trailing_zeros() - 8) as u8;
+    let eniw = md.window_ways.trailing_zeros() as u8;
+    let dpa = md.ld as u64 * md.capacity;
+    commit_decoder(
+        p,
+        md.component_block,
+        md.ld as usize,
+        md.hpa_base,
+        md.hpa_size,
+        ig,
+        eniw,
+        dpa,
+    )?;
+    commit_decoder(
+        p,
+        md.hb_component_block,
+        md.hb_decoder,
+        md.hpa_base,
+        md.hpa_size,
+        ig,
+        eniw,
+        0,
+    )?;
+    Ok(())
+}
+
+/// Hot-remove half: uncommit `md`'s decoder pair (root before leaf —
+/// upstream routing dies first so nothing can still be steered at the
+/// endpoint mid-teardown).
+pub fn uncommit_memdev_decoders(p: &mut dyn Platform, md: &CxlMemdev) {
+    uncommit_decoder(p, md.hb_component_block, md.hb_decoder);
+    uncommit_decoder(p, md.component_block, md.ld as usize);
+}
+
 /// Per-bridge window consumption state: published windows are consumed
 /// in CEDT order by this host's logical devices in (endpoint BDF, LD)
 /// order; a multi-way window whose target list names this bridge
@@ -153,6 +211,19 @@ struct BridgeCursor {
     decoder: usize,
 }
 
+/// What the driver binds and what it holds back: `bound` is one entry
+/// per logical device this host owns (decoders committed, ready to
+/// become regions); `spares` is the hot-plug pool — windows the
+/// firmware published for logical devices currently bound to *other*
+/// hosts, kept uncommitted until an FM re-bind event hands them to us.
+/// The pool is non-empty only in the hot-plug window layout (see
+/// [`bind_all`]).
+#[derive(Debug, Default)]
+pub struct BindResult {
+    pub bound: Vec<CxlMemdev>,
+    pub spares: Vec<CxlMemdev>,
+}
+
 /// Bind every CXL memdev by walking the PCIe *hierarchy*: the type-1
 /// bridges on bus 0 are the CXL root ports; root port `i` (BDF order)
 /// pairs with CHBS entry `i` (UID order) — the simulator wires them in
@@ -163,12 +234,21 @@ struct BridgeCursor {
 /// bridges. Each bridge's CFMWS windows (CEDT order) are then consumed
 /// by its endpoints in BDF order, one window slot per logical device
 /// this host owns.
+///
+/// **Hot-plug window layout**: when the firmware publishes exactly one
+/// 1-way window per logical device under a bridge (`windows == total
+/// LDs` — the layout BIOSes emit when a runtime FM schedule exists),
+/// window consumption turns *positional*: every LD, owned or not,
+/// claims its own window and host-bridge decoder slot, and windows of
+/// foreign LDs are recorded as uncommitted spares for later hot-add.
+/// Otherwise (the legacy layout) only owned LDs consume windows and a
+/// leftover window is a firmware/FM disagreement.
 pub fn bind_all(
     p: &mut dyn Platform,
     acpi: &AcpiInfo,
     pci_devs: &[PciDev],
     host: u16,
-) -> Result<Vec<CxlMemdev>> {
+) -> Result<BindResult> {
     let mut chbs = acpi.chbs.clone();
     chbs.sort_by_key(|c| c.uid);
     if chbs.is_empty() {
@@ -196,7 +276,7 @@ pub fn bind_all(
     if eps.is_empty() {
         bail!("no CXL memory device on the PCIe bus");
     }
-    let mut out = Vec::new();
+    let mut out = BindResult::default();
     let mut claimed = 0usize;
     for (rp, hb) in root_ports.iter().zip(&chbs) {
         let under: Vec<&PciDev> = eps
@@ -221,9 +301,21 @@ pub fn bind_all(
             .iter()
             .filter(|w| w.targets.contains(&hb.uid))
             .collect();
+        // Probe first (register blocks, IDENTIFY, LD counts/owners),
+        // so the window layout is known before anything commits.
+        let probes: Vec<EpProbe> = under
+            .iter()
+            .map(|ep| probe_endpoint(p, acpi, ep, hb))
+            .collect::<Result<_>>()?;
+        let total_lds: usize =
+            probes.iter().map(|pr| pr.lds as usize).sum();
+        let positional = wins.len() == total_lds
+            && wins.iter().all(|w| w.targets.len() == 1);
         let mut cursor = BridgeCursor { window: 0, slot: 0, decoder: 0 };
-        for ep in under {
-            bind_endpoint(p, acpi, ep, hb, &wins, &mut cursor, host, &mut out)?;
+        for pr in &probes {
+            bind_endpoint_lds(
+                p, pr, hb, &wins, &mut cursor, host, positional, &mut out,
+            )?;
         }
         if cursor.window < wins.len() || cursor.slot != 0 {
             bail!(
@@ -245,22 +337,27 @@ pub fn bind_all(
     Ok(out)
 }
 
-/// Bind one endpoint beneath its host bridge: locate register blocks,
-/// IDENTIFY, learn the LD count and this host's LD allocations, then
-/// commit one endpoint + host-bridge HDM decoder pair per owned logical
-/// device, consuming the bridge's windows at `cursor`. Appends one
-/// [`CxlMemdev`] per owned LD to `out`.
-#[allow(clippy::too_many_arguments)]
-fn bind_endpoint(
+/// Probe results for one endpoint: register-block locations and the
+/// mailbox-reported identity, gathered before any decoder commits.
+struct EpProbe {
+    bdf: Bdf,
+    serial: u64,
+    capacity: u64,
+    lds: u16,
+    slice: u64,
+    owners: Vec<u16>,
+    component_block: u64,
+    device_block: u64,
+}
+
+/// Locate one endpoint's register blocks and interrogate its mailbox:
+/// DVSEC walk, IDENTIFY, FM-API Get LD Info + Get LD Allocations.
+fn probe_endpoint(
     p: &mut dyn Platform,
     acpi: &AcpiInfo,
     ep: &PciDev,
     chbs: &ChbsInfo,
-    wins: &[&CfmwsInfo],
-    cursor: &mut BridgeCursor,
-    host: u16,
-    out: &mut Vec<CxlMemdev>,
-) -> Result<()> {
+) -> Result<EpProbe> {
     if chbs.cxl_version == 0 {
         bail!("CXL 1.1 host bridges unsupported (RCD mode)");
     }
@@ -352,11 +449,41 @@ fn bind_endpoint(
         } else {
             vec![UNBOUND; lds as usize]
         };
+    Ok(EpProbe {
+        bdf: ep.bdf,
+        serial,
+        capacity,
+        lds,
+        slice,
+        owners,
+        component_block,
+        device_block,
+    })
+}
 
+/// Walk one probed endpoint's logical devices, consuming the bridge's
+/// windows at `cursor`: owned LDs get their endpoint + host-bridge HDM
+/// decoder pair committed and become `out.bound` entries; in the
+/// positional (hot-plug) layout, foreign LDs still claim their window
+/// and decoder slot but stay uncommitted, landing in `out.spares`.
+#[allow(clippy::too_many_arguments)]
+fn bind_endpoint_lds(
+    p: &mut dyn Platform,
+    ep: &EpProbe,
+    chbs: &ChbsInfo,
+    wins: &[&CfmwsInfo],
+    cursor: &mut BridgeCursor,
+    host: u16,
+    positional: bool,
+    out: &mut BindResult,
+) -> Result<()> {
+    let (capacity, lds, slice) = (ep.capacity, ep.lds, ep.slice);
     for ld in 0..lds {
-        let owner = owners[ld as usize];
-        if !(owner == host || (owner == UNBOUND && host == 0)) {
-            // Another host's logical device: not presented to us.
+        let owner = ep.owners[ld as usize];
+        let owned = owner == host || (owner == UNBOUND && host == 0);
+        if !owned && !positional {
+            // Legacy layout: another host's logical device is simply
+            // not presented to us (its window isn't published here).
             continue;
         }
         let cfmws = wins.get(cursor.window).with_context(|| {
@@ -397,38 +524,10 @@ fn bind_endpoint(
         if !cfmws.granularity.is_power_of_two() || cfmws.granularity < 256 {
             bail!("bad CFMWS granularity {:#x}", cfmws.granularity);
         }
-        let ig = (cfmws.granularity.trailing_zeros() - 8) as u8;
-        let eniw = ways.trailing_zeros() as u8;
-        let dpa = ld as u64 * slice;
 
-        // HDM decoders: endpoint first, then host bridge (commit order
-        // matters on real hardware: leaf before root). The endpoint
-        // uses decoder `ld`; the bridge uses its running decoder index.
-        commit_decoder(
-            p,
-            component_block,
-            ld as usize,
-            cfmws.base_hpa,
-            map_size,
-            ig,
-            eniw,
-            dpa,
-        )?;
-        commit_decoder(
-            p,
-            chbs.base,
-            cursor.decoder,
-            cfmws.base_hpa,
-            map_size,
-            ig,
-            eniw,
-            0,
-        )?;
-        cursor.decoder += 1;
-
-        out.push(CxlMemdev {
+        let md = CxlMemdev {
             bdf: ep.bdf,
-            serial,
+            serial: ep.serial,
             capacity: slice,
             hpa_base: cfmws.base_hpa,
             hpa_size: map_size,
@@ -438,11 +537,24 @@ fn bind_endpoint(
             position,
             ld,
             lds,
-            component_block,
-            device_block,
+            component_block: ep.component_block,
+            device_block: ep.device_block,
             hb_component_block: chbs.base,
+            hb_decoder: cursor.decoder,
             hb_uid: chbs.uid,
-        });
+        };
+        if owned {
+            // HDM decoders: endpoint first, then host bridge (commit
+            // order matters on real hardware: leaf before root). The
+            // endpoint uses decoder `ld`; the bridge its claimed slot.
+            commit_memdev_decoders(p, &md)?;
+            out.bound.push(md);
+        } else {
+            // Positional layout: the window and decoder slot stay
+            // reserved (uncommitted) for a future FM hot-add.
+            out.spares.push(md);
+        }
+        cursor.decoder += 1;
         cursor.slot += 1;
         if cursor.slot >= my_slots.len() {
             cursor.slot = 0;

@@ -111,6 +111,27 @@ pub fn online_region(
     Ok(id)
 }
 
+/// `daxctl offline-memory` equivalent, the hot-remove half: take the
+/// zNUMA node offline so the region can be released back to the fabric
+/// manager. Mirrors Linux semantics: offlining fails while pages are in
+/// use (we model the no-migration case — busy memory blocks refuse to
+/// offline), so a workload actively using the node blocks the remove.
+pub fn offline_region(alloc: &mut PageAlloc, node: u32) -> Result<()> {
+    let n = alloc
+        .nodes
+        .get(node as usize)
+        .with_context(|| format!("no NUMA node {node}"))?;
+    if !n.online {
+        bail!("node {node} already offline");
+    }
+    let busy = alloc.pages_in_use(node);
+    if busy > 0 {
+        bail!("node {node} has {busy} page(s) in use");
+    }
+    alloc.offline(node);
+    Ok(())
+}
+
 /// `numactl --interleave=.. / --membind=.. ./workload` — just resolves
 /// the policy string; the workload's address space carries it.
 pub fn numactl(policy: &str) -> Result<MemPolicy> {
@@ -159,6 +180,26 @@ mod tests {
         assert!(!pa.nodes[1].has_cpus, "zNUMA node must be CPU-less");
         // Double online fails.
         assert!(online_region(&mut pa, &r).is_err());
+    }
+
+    #[test]
+    fn offline_refuses_busy_node_then_succeeds_when_free() {
+        let mut pa = alloc_with_dram();
+        let r = CxlRegion { base: 4 << 30, size: 1 << 20, node: 1 };
+        let id = online_region(&mut pa, &r).unwrap();
+        let pol = MemPolicy::Bind { nodes: vec![id] };
+        let page = pa.alloc_page(&pol, 0).unwrap();
+        // Busy node refuses to offline (no-migration model).
+        assert!(offline_region(&mut pa, id).is_err());
+        assert!(pa.nodes[id as usize].online);
+        // Freeing the page unblocks the remove.
+        pa.free_page(page);
+        offline_region(&mut pa, id).unwrap();
+        assert!(!pa.nodes[id as usize].online);
+        // Double offline fails; re-onlining works (hot re-add).
+        assert!(offline_region(&mut pa, id).is_err());
+        online_region(&mut pa, &r).unwrap();
+        assert!(pa.nodes[id as usize].online);
     }
 
     #[test]

@@ -52,6 +52,20 @@ pub enum ProgModel {
     Flat,
 }
 
+/// A guest-visible memory topology change produced by handling FM
+/// events — what the machine needs to mirror into the host-side
+/// routing (RC windows) and stats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemChange {
+    /// A hot-added window came online as zNUMA node `node`.
+    Onlined { base: u64, size: u64, node: u32 },
+    /// A hot-removed window went offline (node emptied and released).
+    Offlined { base: u64, size: u64, node: u32 },
+    /// The FM asked for this window back but its node still has pages
+    /// in use — the guest refused the remove (no-migration model).
+    OfflineRefused { base: u64, node: u32 },
+}
+
 /// The booted guest's state.
 pub struct GuestOs {
     /// Which simulated host this guest runs on (0 in single-host
@@ -62,6 +76,10 @@ pub struct GuestOs {
     pub pci_devs: Vec<PciDev>,
     /// Every bound expander, in host-bridge UID order (`mem0`, `mem1`…).
     pub memdevs: Vec<CxlMemdev>,
+    /// Hot-plug pool: published windows whose logical devices currently
+    /// belong to other hosts (uncommitted; populated only in the
+    /// hot-plug window layout — see [`cxl_driver::bind_all`]).
+    pub spares: Vec<CxlMemdev>,
     /// One region per interleave-set window, in window order.
     pub regions: Vec<CxlRegion>,
     pub alloc: PageAlloc,
@@ -142,32 +160,40 @@ impl GuestOs {
         log.push(format!("pci: {} functions enumerated", pci_devs.len()));
 
         // --- CXL driver -----------------------------------------------------
-        let memdevs = match cxl_driver::bind_all(p, &acpi, &pci_devs, host) {
-            Ok(mds) => {
-                for (i, md) in mds.iter().enumerate() {
-                    let ld = if md.lds > 1 {
-                        format!(", LD {}/{}", md.ld, md.lds)
-                    } else {
-                        String::new()
-                    };
-                    log.push(format!(
-                        "cxl: mem{i} bound at {} — {} MiB, window {:#x} \
-                         ({}-way @ {} B, slot {}{ld})",
-                        md.bdf,
-                        md.capacity >> 20,
-                        md.hpa_base,
-                        md.window_ways,
-                        md.window_granularity,
-                        md.position
-                    ));
+        let (memdevs, spares) =
+            match cxl_driver::bind_all(p, &acpi, &pci_devs, host) {
+                Ok(r) => {
+                    for (i, md) in r.bound.iter().enumerate() {
+                        let ld = if md.lds > 1 {
+                            format!(", LD {}/{}", md.ld, md.lds)
+                        } else {
+                            String::new()
+                        };
+                        log.push(format!(
+                            "cxl: mem{i} bound at {} — {} MiB, window \
+                             {:#x} ({}-way @ {} B, slot {}{ld})",
+                            md.bdf,
+                            md.capacity >> 20,
+                            md.hpa_base,
+                            md.window_ways,
+                            md.window_granularity,
+                            md.position
+                        ));
+                    }
+                    for md in &r.spares {
+                        log.push(format!(
+                            "cxl: window {:#x} reserved for hot-plug \
+                             ({} LD {} is bound to another host)",
+                            md.hpa_base, md.bdf, md.ld
+                        ));
+                    }
+                    (r.bound, r.spares)
                 }
-                mds
-            }
-            Err(e) => {
-                log.push(format!("cxl: no memdev ({e})"));
-                Vec::new()
-            }
-        };
+                Err(e) => {
+                    log.push(format!("cxl: no memdev ({e})"));
+                    (Vec::new(), Vec::new())
+                }
+            };
 
         // --- region creation + onlining ------------------------------------
         // Group memdevs by window: each interleave set becomes one
@@ -217,6 +243,7 @@ impl GuestOs {
             acpi,
             pci_devs,
             memdevs,
+            spares,
             regions,
             alloc,
             cxl_nodes,
@@ -227,5 +254,198 @@ impl GuestOs {
     /// The first zNUMA node id, if one was onlined.
     pub fn znuma_node(&self) -> Option<u32> {
         self.cxl_nodes.first().copied()
+    }
+
+    // ---- runtime FM events (hot add / remove) ---------------------------
+
+    /// The "interrupt handler" for the CXL event doorbell: poll every
+    /// known endpoint's status register for [`EVENT_PENDING`], drain
+    /// pending Event-Log records addressed to this host and run the
+    /// memory hot-add / hot-remove path for each. Returns the
+    /// topology changes for the machine to mirror (RC routing windows,
+    /// stats).
+    ///
+    /// [`EVENT_PENDING`]: crate::cxl::regs::dev::EVENT_PENDING
+    pub fn handle_fm_events(
+        &mut self,
+        p: &mut dyn Platform,
+    ) -> Result<Vec<MemChange>> {
+        use crate::cxl::mailbox::{
+            event, opcode, retcode, EVENT_RECORD_BYTES,
+        };
+        use crate::cxl::regs::dev;
+        let mut blocks: Vec<u64> = self
+            .memdevs
+            .iter()
+            .chain(self.spares.iter())
+            .map(|m| m.device_block)
+            .collect();
+        blocks.sort_unstable();
+        blocks.dedup();
+        let mut changes = Vec::new();
+        for blk in blocks {
+            if p.mmio_read64(blk + dev::MEMDEV_STATUS) & dev::EVENT_PENDING
+                == 0
+            {
+                continue;
+            }
+            let (code, resp) = cxl_driver::mailbox_command(
+                p,
+                blk,
+                opcode::GET_EVENT_RECORDS,
+                &[0],
+            )?;
+            if code != retcode::SUCCESS || resp.len() < 2 {
+                continue;
+            }
+            let n = u16::from_le_bytes(resp[0..2].try_into().unwrap());
+            // Handle (and later clear) only the LEADING run of records
+            // addressed to this host: CLEAR_EVENT_RECORDS drains from
+            // the front, so stopping at the first foreign record is
+            // what keeps other hosts' pending events in the log (the
+            // contract EventRecord documents). Our synchronous
+            // delivery never interleaves hosts, so the prefix is
+            // normally the whole log.
+            let mut handled: u16 = 0;
+            for k in 0..n as usize {
+                let o = 2 + k * EVENT_RECORD_BYTES;
+                let host =
+                    u16::from_le_bytes(resp[o..o + 2].try_into().unwrap());
+                let ld = u16::from_le_bytes(
+                    resp[o + 2..o + 4].try_into().unwrap(),
+                );
+                let action = resp[o + 4];
+                if host != self.host {
+                    break; // another host's record: leave it (and all
+                           // behind it) in the log
+                }
+                handled += 1;
+                match action {
+                    event::UNBIND_REQUEST => {
+                        self.hot_remove(p, blk, ld, &mut changes)?
+                    }
+                    event::LD_BOUND => {
+                        self.hot_add(p, blk, ld, &mut changes)?
+                    }
+                    other => self.boot_log.push(format!(
+                        "cxl: unknown event action {other} ignored"
+                    )),
+                }
+            }
+            if handled > 0 {
+                cxl_driver::mailbox_command(
+                    p,
+                    blk,
+                    opcode::CLEAR_EVENT_RECORDS,
+                    &handled.to_le_bytes(),
+                )?;
+            }
+        }
+        Ok(changes)
+    }
+
+    /// Memory hot-remove: the FM wants logical device `ld` (endpoint at
+    /// device block `blk`) back. Refuses while the node has pages in
+    /// use; otherwise offlines the zNUMA node, uncommits the decoder
+    /// pair and moves the memdev into the hot-plug spare pool.
+    fn hot_remove(
+        &mut self,
+        p: &mut dyn Platform,
+        blk: u64,
+        ld: u16,
+        changes: &mut Vec<MemChange>,
+    ) -> Result<()> {
+        let Some(pos) = self
+            .memdevs
+            .iter()
+            .position(|m| m.device_block == blk && m.ld == ld)
+        else {
+            self.boot_log.push(format!(
+                "cxl: unbind request for LD {ld} we do not hold — ignored"
+            ));
+            return Ok(());
+        };
+        let (base, size) =
+            (self.memdevs[pos].hpa_base, self.memdevs[pos].hpa_size);
+        let node = self
+            .alloc
+            .node_of_addr(base)
+            .context("window has no NUMA node")?;
+        match cxlcli::offline_region(&mut self.alloc, node) {
+            Err(e) => {
+                self.boot_log.push(format!(
+                    "cxl: cannot offline node {node} for LD {ld} \
+                     hot-remove: {e}"
+                ));
+                changes.push(MemChange::OfflineRefused { base, node });
+                Ok(())
+            }
+            Ok(()) => {
+                cxl_driver::uncommit_memdev_decoders(p, &self.memdevs[pos]);
+                self.regions.retain(|r| r.base != base);
+                self.cxl_nodes.retain(|&nd| nd != node);
+                let md = self.memdevs.remove(pos);
+                self.boot_log.push(format!(
+                    "cxl: memory hot-remove — {} LD {ld}: node {node} \
+                     offlined, {} MiB released to the fabric manager",
+                    md.bdf,
+                    size >> 20
+                ));
+                self.spares.push(md);
+                changes.push(MemChange::Offlined { base, size, node });
+                Ok(())
+            }
+        }
+    }
+
+    /// Memory hot-add: logical device `ld` was just bound to this host.
+    /// Commits the spare window's decoder pair, creates the region and
+    /// onlines its zNUMA node — the same path boot-time onlining takes.
+    fn hot_add(
+        &mut self,
+        p: &mut dyn Platform,
+        blk: u64,
+        ld: u16,
+        changes: &mut Vec<MemChange>,
+    ) -> Result<()> {
+        let Some(pos) = self
+            .spares
+            .iter()
+            .position(|m| m.device_block == blk && m.ld == ld)
+        else {
+            self.boot_log.push(format!(
+                "cxl: bind notification for LD {ld} without a spare \
+                 window — ignored"
+            ));
+            return Ok(());
+        };
+        let md = self.spares[pos].clone();
+        cxl_driver::commit_memdev_decoders(p, &md)?;
+        let domain = self
+            .acpi
+            .mem_affinity
+            .iter()
+            .find(|m| m.base == md.hpa_base)
+            .map(|m| m.domain)
+            .context("hot-added window has no SRAT domain")?;
+        let region = cxlcli::cxl_create_region(p, &[&md], 0, domain)?;
+        let node = cxlcli::online_region(&mut self.alloc, &region)?;
+        self.boot_log.push(format!(
+            "cxl: memory hot-add — {} LD {ld}: window {:#x} onlined as \
+             zNUMA node {node} (+{} MiB)",
+            md.bdf,
+            md.hpa_base,
+            md.hpa_size >> 20
+        ));
+        changes.push(MemChange::Onlined {
+            base: md.hpa_base,
+            size: md.hpa_size,
+            node,
+        });
+        self.spares.remove(pos);
+        self.cxl_nodes.push(node);
+        self.regions.push(region);
+        self.memdevs.push(md);
+        Ok(())
     }
 }

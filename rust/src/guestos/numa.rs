@@ -141,6 +141,18 @@ impl PageAlloc {
         self.nodes[id as usize].online = true;
     }
 
+    /// Take a node offline: no further allocations land on it. The
+    /// caller (hot-remove path) is responsible for checking that no
+    /// pages are still in use — see `cxlcli::offline_region`.
+    pub fn offline(&mut self, id: u32) {
+        self.nodes[id as usize].online = false;
+    }
+
+    /// Pages currently allocated on node `id`.
+    pub fn pages_in_use(&self, id: u32) -> u64 {
+        self.allocated.get(id as usize).copied().unwrap_or(0)
+    }
+
     pub fn node_of_addr(&self, addr: u64) -> Option<u32> {
         self.nodes
             .iter()

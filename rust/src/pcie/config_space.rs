@@ -146,7 +146,16 @@ impl ConfigSpace {
             };
             let size = self.bar_size[base_idx];
             if size == 0 {
-                return; // unimplemented BAR: writes ignored, reads 0
+                // Unimplemented BAR (PCIe 5.0 §7.5.1.2.1): hardwired to
+                // zero. Writes — sizing probes included — are dropped,
+                // and because nothing is ever stored at this dword it
+                // keeps reading back 0, which is exactly how
+                // enumeration discovers the BAR is absent. This also
+                // covers the would-be *high* dword of an unimplemented
+                // 64-bit pair; the high dword of an IMPLEMENTED 64-bit
+                // BAR never lands here (it resolves to `base_idx` with
+                // `is_high` above and answers the sizing protocol).
+                return;
             }
             let mask = !(size - 1);
             let cur = self.bar_val[base_idx];
@@ -333,6 +342,22 @@ mod tests {
         c.cfg_write32(off::BAR0 + 8, 0xFFFF_FFFF);
         assert_eq!(c.r32(off::BAR0 + 8), 0);
         assert_eq!(c.bar_addr(2), None);
+
+        // 64-bit coverage: with a 1 MiB 64-bit BAR in slots 0+1, the
+        // implemented pair's HIGH dword answers the sizing protocol
+        // (all-ones mask for a < 4 GiB BAR) ...
+        c.add_bar64(0, 1 << 20);
+        c.cfg_write32(off::BAR0 + 4, 0xFFFF_FFFF);
+        assert_eq!(c.r32(off::BAR0 + 4), 0xFFFF_FFFF);
+        // ... while the would-be high dword of the UNIMPLEMENTED pair
+        // at slots 2+3 stays hardwired to zero through sizing probes,
+        // so enumeration sees "no BAR" in both dwords.
+        c.cfg_write32(off::BAR0 + 8, 0xFFFF_FFFF);
+        c.cfg_write32(off::BAR0 + 12, 0xFFFF_FFFF);
+        assert_eq!(c.r32(off::BAR0 + 8), 0);
+        assert_eq!(c.r32(off::BAR0 + 12), 0);
+        assert_eq!(c.bar_addr(2), None);
+        assert_eq!(c.bar_addr(3), None);
     }
 
     #[test]

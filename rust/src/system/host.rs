@@ -14,6 +14,16 @@
 //! Events are scheduled into the machine's single unified queue tagged
 //! `(host id, Ev)`; (tick, seq) ordering is global, which keeps
 //! multi-host runs exactly as bit-deterministic as single-host ones.
+//!
+//! The host also carries the per-host half of **runtime FM re-binding**
+//! (`docs/ARCHITECTURE.md` has the full flow): before the fabric
+//! manager takes a logical device away, [`Host::has_inflight_in`]
+//! gates the unbind until every outstanding fetch to the departing
+//! window has drained — parked credit retries included — so packets to
+//! an unbinding LD complete (or retry onto the still-committed window)
+//! deterministically, never route into a hole. Hot add/remove shows up
+//! in the per-host stats as `sys.mem_online_events` /
+//! `sys.mem_offline_events`.
 
 use anyhow::{Context, Result};
 
@@ -51,6 +61,12 @@ pub(crate) enum Ev {
     /// L1 MSHR file was full when the miss arrived — the op is parked
     /// (request stays live in the core's LSQ) and re-probes later.
     MshrRetry { core: u8, pa: u64, is_write: bool, req: ReqId },
+    /// A scheduled Fabric-Manager action (index into
+    /// `SimConfig::fm_events`). Machine-level: `Machine::run` intercepts
+    /// it before host dispatch — the FM spans hosts (it quiesces one
+    /// host, drives the shared device's mailbox, notifies another), so
+    /// it cannot be handled from within a single [`Host`].
+    Fm(u32),
 }
 
 /// The unified queue's event type: `(host id, event)`.
@@ -85,6 +101,19 @@ pub struct MachineStats {
     pub cxl_dev_writebacks: Vec<Counter>,
     /// Misses parked on a full L1 MSHR file and retried.
     pub mshr_retries: Counter,
+    /// zNUMA windows hot-added to this host at runtime (FM bind).
+    pub mem_online_events: Counter,
+    /// zNUMA windows hot-removed from this host at runtime (FM unbind).
+    pub mem_offline_events: Counter,
+    /// FM unbind requests this host's guest refused (pages in use).
+    pub mem_offline_refused: Counter,
+    /// FM unbinds deferred because requests to the departing window
+    /// were still in flight (quiesce-and-retry).
+    pub fm_quiesce_retries: Counter,
+    /// Dirty evictions to addresses no routed window backs any more
+    /// (their CXL window was hot-removed) — dropped from the timing
+    /// model, data already functionally in memory.
+    pub writebacks_unmapped: Counter,
 }
 
 pub struct Host {
@@ -147,12 +176,22 @@ impl Host {
         window_hosts: &[usize],
     ) -> Result<Host> {
         let mut mem = PhysMem::new();
-        let my_defs: Vec<usize> = window_hosts
-            .iter()
-            .enumerate()
-            .filter(|&(_, &h)| h == id as usize)
-            .map(|(i, _)| i)
-            .collect();
+        // With a runtime FM schedule, firmware publishes EVERY window
+        // to every host (the hot-plug layout: one CFMWS + SRAT hotplug
+        // domain per logical device, still at per-host disjoint bases);
+        // the guest onlines only the LDs bound to it and keeps the rest
+        // as its hot-add pool. Without a schedule, only this host's
+        // bound windows are described — the PR-3 static layout.
+        let my_defs: Vec<usize> = if cfg.fm_events.is_empty() {
+            window_hosts
+                .iter()
+                .enumerate()
+                .filter(|&(_, &h)| h == id as usize)
+                .map(|(i, _)| i)
+                .collect()
+        } else {
+            (0..window_hosts.len()).collect()
+        };
         let bios = bios::build_with(cfg, &mut mem, &my_defs, first_window_base);
 
         let mut ecam = Ecam::new(bios.ecam_base, layout::ECAM_BUSES);
@@ -730,12 +769,21 @@ impl Host {
             // On credit exhaustion the posted write is dropped from the
             // timing model (data is already functionally in physmem);
             // counted so the approximation is visible.
-        } else {
+        } else if pa < self.cfg.sys_mem_size {
             self.stats.writebacks_dram.inc();
             let t = self.membus.transfer(now, 64 + 16);
             // Posted: force-accept into the controller (write queue
             // drains are not modeled with retries).
             self.dram.timing.access(t, pa, self.cfg.l1.line, true);
+        } else {
+            // Neither DRAM nor a routed CXL window: a dirty line whose
+            // backing window was hot-removed after its pages were freed
+            // (the FM quiesce drains in-flight *fetches*; clean-by-then
+            // resident dirty lines can outlive the window). The data is
+            // already functionally in physmem — drop the posted write
+            // from the timing model, as the credit-exhaustion path
+            // does, and count it so the approximation stays visible.
+            self.stats.writebacks_unmapped.inc();
         }
     }
 
@@ -928,7 +976,23 @@ impl Host {
             Ev::MshrRetry { core, pa, is_write, req } => {
                 self.access_with_req(fab, q, core, pa, is_write, req, t);
             }
+            Ev::Fm(_) => {
+                unreachable!("FM events are intercepted by Machine::run")
+            }
         }
+    }
+
+    /// Quiesce check for FM-driven hot-remove: is any memory fetch to
+    /// `[base, base+size)` still in flight? Every outstanding fetch —
+    /// demand or prefetch, including parked CXL credit retries — holds
+    /// an `l2_pending` entry from issue until its fill lands, so an
+    /// empty intersection means no packet can still be routed at the
+    /// departing window.
+    pub(crate) fn has_inflight_in(&self, base: u64, size: u64) -> bool {
+        let line = self.cfg.l2.line;
+        self.l2_pending
+            .keys()
+            .any(|&k| k * line >= base && k * line < base + size)
     }
 
     // ---- results ----------------------------------------------------------
@@ -996,6 +1060,26 @@ impl Host {
         d.counter(
             &format!("{prefix}sys.mshr_retries"),
             &self.stats.mshr_retries,
+        );
+        d.counter(
+            &format!("{prefix}sys.mem_online_events"),
+            &self.stats.mem_online_events,
+        );
+        d.counter(
+            &format!("{prefix}sys.mem_offline_events"),
+            &self.stats.mem_offline_events,
+        );
+        d.counter(
+            &format!("{prefix}sys.mem_offline_refused"),
+            &self.stats.mem_offline_refused,
+        );
+        d.counter(
+            &format!("{prefix}sys.fm_quiesce_retries"),
+            &self.stats.fm_quiesce_retries,
+        );
+        d.counter(
+            &format!("{prefix}sys.writebacks_unmapped"),
+            &self.stats.writebacks_unmapped,
         );
     }
 }

@@ -14,18 +14,26 @@
 //! `m.guest`, `m.l1s`, `m.rc`, … read exactly as they did before the
 //! host/fabric split. Multi-host code addresses `m.hosts[h]` and
 //! `m.fabric` explicitly.
+//!
+//! A `[fm] events` schedule adds machine-level `Ev::Fm` entries to the
+//! same queue: at their simulated timestamps the fabric manager
+//! re-binds logical devices between running hosts (quiesce -> Event-Log
+//! doorbell -> guest offline/online through the unmodified driver path
+//! -> mailbox `UNBIND_LD`/`BIND_LD` -> RC routing update), so elastic
+//! pooling runs inside one deterministic event order.
 
 use anyhow::{Context, Result};
 
 use crate::bios;
-use crate::config::{InterleaveArith, SimConfig};
+use crate::config::{FmOp, InterleaveArith, LdRef, SimConfig};
+use crate::cxl::mailbox::{event, retcode, EventRecord, UNBOUND};
 use crate::cxl::{Fabric, HdmWindow};
-use crate::guestos::{GuestOs, MemPolicy, ProgModel};
-use crate::sim::{EventQueue, Tick};
+use crate::guestos::{GuestOs, MemChange, MemPolicy, ProgModel};
+use crate::sim::{ns_to_ticks, EventQueue, Tick};
 use crate::stats::StatDump;
 use crate::workloads::Workload;
 
-use super::host::{Host, HostEv};
+use super::host::{Ev, Host, HostEv};
 use super::mmio::MmioWorld;
 
 pub use super::host::MachineStats;
@@ -61,7 +69,20 @@ pub struct Machine {
     /// The shared CXL tree all hosts' root ports lead into.
     pub fabric: Fabric,
     queue: EventQueue<HostEv>,
+    /// The `[fm] events` schedule has been injected into the queue
+    /// (first `run` call only).
+    fm_scheduled: bool,
+    /// Logical devices whose most recent FM unbind the owning guest
+    /// refused (pages in use). A scheduled bind finding the LD still
+    /// owned retries while its unbind is merely quiescing, but gives
+    /// up once the unbind was refused — refusal is terminal for the
+    /// run, so retrying would never terminate.
+    fm_refused: std::collections::BTreeSet<(usize, u16)>,
 }
+
+/// Re-probe interval while an FM unbind waits for in-flight requests to
+/// the departing window to drain (ns).
+const FM_QUIESCE_RETRY_NS: f64 = 500.0;
 
 /// Single-host ergonomics: the overwhelmingly common `hosts = 1` case
 /// reads as it did before the host/fabric split (`m.guest`, `m.l1s`,
@@ -82,8 +103,9 @@ impl std::ops::DerefMut for Machine {
 impl Machine {
     /// Build the hardware: the shared fabric with its FM LD bindings,
     /// then one host stack per `cfg.hosts` — each with BIOS tables in
-    /// its own memory describing only its bound windows, at host
-    /// physical bases disjoint from every other host's.
+    /// its own memory describing its windows (only the bound ones, or
+    /// all of them when an `[fm] events` schedule enables hot-plug), at
+    /// host physical bases disjoint from every other host's.
     pub fn new(cfg: SimConfig) -> Result<Self> {
         cfg.validate()?;
         let mut fabric = Fabric::new(&cfg.cxl);
@@ -96,7 +118,14 @@ impl Machine {
             next_base = host.bios.next_free_base;
             hosts.push(host);
         }
-        Ok(Machine { cfg, hosts, fabric, queue: EventQueue::new() })
+        Ok(Machine {
+            cfg,
+            hosts,
+            fabric,
+            queue: EventQueue::new(),
+            fm_scheduled: false,
+            fm_refused: Default::default(),
+        })
     }
 
     /// The MMIO surface host `h`'s guest drives: its own ECAM and
@@ -200,14 +229,27 @@ impl Machine {
     // ---- the event loop ---------------------------------------------------
 
     /// Run until all attached workloads (on every host) finish, or
-    /// `max_ticks`.
+    /// `max_ticks`. FM events from the `[fm] events` schedule fire at
+    /// their simulated timestamps, interleaved with workload events.
     pub fn run(&mut self, max_ticks: Option<Tick>) -> RunSummary {
+        if !self.fm_scheduled && !self.cfg.fm_events.is_empty() {
+            self.fm_scheduled = true;
+            for i in self.cfg.fm_events_in_time_order() {
+                let at = ns_to_ticks(self.cfg.fm_events[i].at_ns)
+                    .max(self.queue.now());
+                self.queue.schedule_at(at, (0, Ev::Fm(i as u32)));
+            }
+        }
         while let Some((t, (h, ev))) = self.queue.pop() {
             crate::util::logger::set_tick(t);
             if let Some(m) = max_ticks {
                 if t > m {
                     break;
                 }
+            }
+            if let Ev::Fm(idx) = ev {
+                self.handle_fm_event(idx as usize, t);
+                continue;
             }
             self.hosts[h as usize].dispatch(
                 &mut self.fabric,
@@ -217,6 +259,175 @@ impl Machine {
             );
         }
         self.summary()
+    }
+
+    // ---- runtime fabric-manager actions -----------------------------------
+
+    /// The window-definition index of logical device `r`, and the
+    /// host-physical window host `h`'s firmware published for it
+    /// (present for every def in the hot-plug layout).
+    fn def_window(&self, h: usize, r: LdRef) -> Option<(usize, u64, u64)> {
+        let def_idx =
+            self.cfg.window_keys().iter().position(|k| *k == r)?;
+        let bios = &self.hosts[h].bios;
+        let pos =
+            bios.cxl_window_defs.iter().position(|&d| d == def_idx)?;
+        let (base, size) = bios.cxl_windows[pos];
+        Some((def_idx, base, size))
+    }
+
+    /// Execute scheduled FM action `idx` at tick `t`: the full
+    /// cross-layer hot add / remove flow. Unbind sequencing is
+    /// quiesce -> Event-Log doorbell -> guest offline -> FM UNBIND_LD
+    /// -> host routing teardown; bind is FM BIND_LD -> Event-Log
+    /// doorbell -> guest hot-add -> host routing mirror. All through
+    /// the same mailbox/decoder surfaces the boot path uses.
+    fn handle_fm_event(&mut self, idx: usize, t: Tick) {
+        let ev = self.cfg.fm_events[idx].clone();
+        match ev.op {
+            FmOp::Unbind { ld } => {
+                let owner = self.fabric.ld_owner(ld.dev, ld.ld);
+                if owner == UNBOUND {
+                    log::warn!("fm: unbind of unbound {ld} — skipped");
+                    return;
+                }
+                let h = owner as usize;
+                let Some((_, base, size)) = self.def_window(h, ld) else {
+                    log::warn!(
+                        "fm: host{h} has no window for {ld} — skipped"
+                    );
+                    return;
+                };
+                // Quiesce: let packets to the departing window complete
+                // before the surprise-remove doorbell rings; re-probe on
+                // a fixed deterministic cadence.
+                if self.hosts[h].has_inflight_in(base, size) {
+                    self.hosts[h].stats.fm_quiesce_retries.inc();
+                    let at = t + ns_to_ticks(FM_QUIESCE_RETRY_NS);
+                    self.queue.schedule_at(at, (h as u8, Ev::Fm(idx as u32)));
+                    return;
+                }
+                self.fabric.post_fm_event(
+                    ld.dev,
+                    EventRecord {
+                        host: owner,
+                        ld: ld.ld,
+                        action: event::UNBIND_REQUEST,
+                    },
+                );
+                let changes = self.notify_host(h);
+                let offlined = changes.iter().any(
+                    |c| matches!(c, MemChange::Offlined { base: b, .. } if *b == base),
+                );
+                if offlined {
+                    let code = self.fabric.fm_unbind(ld.dev, ld.ld);
+                    debug_assert_eq!(code, retcode::SUCCESS);
+                    self.hosts[h].rc.remove_window(base);
+                    self.hosts[h].stats.mem_offline_events.inc();
+                    self.fm_refused.remove(&(ld.dev, ld.ld));
+                    log::info!("fm: {ld} unbound from host{h}");
+                } else {
+                    // The guest refused (pages in use): ownership is
+                    // unchanged and the LD stays online — exactly what
+                    // a failed `daxctl offline-memory` leaves behind.
+                    self.hosts[h].stats.mem_offline_refused.inc();
+                    self.fm_refused.insert((ld.dev, ld.ld));
+                    log::warn!("fm: host{h} refused to release {ld}");
+                }
+            }
+            FmOp::Bind { ld, host } => {
+                let code = self.fabric.fm_bind(ld.dev, ld.ld, host as u16);
+                if code == retcode::BUSY
+                    && !self.fm_refused.contains(&(ld.dev, ld.ld))
+                {
+                    // Still owned, but only because the scheduled
+                    // unbind ahead of us is itself parked in quiesce
+                    // retries — follow it on the same cadence rather
+                    // than dropping a validated bind on the floor.
+                    let at = t + ns_to_ticks(FM_QUIESCE_RETRY_NS);
+                    self.queue
+                        .schedule_at(at, (host as u8, Ev::Fm(idx as u32)));
+                    return;
+                }
+                if code != retcode::SUCCESS {
+                    // Terminal: the unbind this bind depends on was
+                    // refused (pages in use), so the LD keeps its
+                    // owner for the rest of the run.
+                    log::warn!(
+                        "fm: BIND_LD {ld} -> host{host} failed \
+                         ({code:#x}) — skipped"
+                    );
+                    return;
+                }
+                self.fabric.devices[ld.dev].note_rebind(ld.ld as usize);
+                self.fabric.post_fm_event(
+                    ld.dev,
+                    EventRecord {
+                        host: host as u16,
+                        ld: ld.ld,
+                        action: event::LD_BOUND,
+                    },
+                );
+                let changes = self.notify_host(host);
+                for c in changes {
+                    if let MemChange::Onlined { base, size, .. } = c {
+                        self.mirror_rc_window(host, ld, base, size);
+                        self.hosts[host].stats.mem_online_events.inc();
+                        log::info!("fm: {ld} bound to host{host}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Ring host `h`'s event doorbell: run the guest's FM-event handler
+    /// against the real MMIO world and return the topology changes it
+    /// made (empty if the host never booted or handling failed).
+    fn notify_host(&mut self, h: usize) -> Vec<MemChange> {
+        let Some(mut guest) = self.hosts[h].guest.take() else {
+            log::warn!("fm: host{h} has no booted guest to notify");
+            return Vec::new();
+        };
+        let res = {
+            let host = &mut self.hosts[h];
+            let mut world = MmioWorld {
+                ecam: &mut host.ecam,
+                cxl_devs: &mut self.fabric.devices,
+                hb_components: &mut host.hb_components,
+                chbs_base: bios::layout::CHBS_BASE,
+                chbs_stride: bios::layout::CHBS_SIZE,
+                ep_bdfs: &host.ep_bdfs,
+            };
+            guest.handle_fm_events(&mut world)
+        };
+        self.hosts[h].guest = Some(guest);
+        match res {
+            Ok(changes) => changes,
+            Err(e) => {
+                log::warn!("fm: host{h} event handling failed: {e}");
+                Vec::new()
+            }
+        }
+    }
+
+    /// Mirror a hot-added window into host `h`'s RC interleave decoder
+    /// — the runtime twin of the boot-time mirror in `boot_host`.
+    fn mirror_rc_window(&mut self, h: usize, r: LdRef, base: u64, size: u64) {
+        let defs = self.cfg.cxl.window_defs();
+        let Some(def) =
+            defs.iter().find(|d| d.targets[0] == r.dev && d.ld == r.ld)
+        else {
+            return;
+        };
+        let xor = self.cfg.cxl.interleave_arith == InterleaveArith::Xor;
+        self.hosts[h].rc.add_window(HdmWindow {
+            base,
+            size,
+            granularity: self.cfg.cxl.interleave_granularity,
+            targets: def.targets.clone(),
+            xor,
+            dpa_base: def.ld as u64 * size,
+        });
     }
 
     pub fn summary(&self) -> RunSummary {

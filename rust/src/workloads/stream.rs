@@ -161,12 +161,25 @@ impl Workload for Stream {
     }
 
     fn init_data(&self) -> Vec<(u64, u64)> {
-        // STREAM's canonical init: a=1.0, b=2.0, c=0.0.
-        let mut v = Vec::with_capacity(3 * self.n as usize);
-        for i in 0..self.n {
-            v.push((self.a + i * 8, 1.0f64.to_bits()));
-            v.push((self.b + i * 8, 2.0f64.to_bits()));
-            v.push((self.c + i * 8, 0.0f64.to_bits()));
+        // STREAM's canonical values (a=1.0, b=2.0, c=0.0), but only the
+        // arrays this kernel READS are initialized: the destination is
+        // fully overwritten before it is ever read, so pre-faulting it
+        // would only distort first-touch placement — destination pages
+        // fault in DURING the timed run under the workload's policy
+        // (which is what lets memory hot-added mid-run actually receive
+        // pages; see examples/rebind_sweep.rs).
+        use StreamKernel::*;
+        let src: Vec<(u64, f64)> = match self.kernel {
+            Copy => vec![(self.a, 1.0)],
+            Scale => vec![(self.c, 0.0)],
+            Add => vec![(self.a, 1.0), (self.b, 2.0)],
+            Triad => vec![(self.b, 2.0), (self.c, 0.0)],
+        };
+        let mut v = Vec::with_capacity(src.len() * self.n as usize);
+        for (base, val) in src {
+            for i in 0..self.n {
+                v.push((base + i * 8, val.to_bits()));
+            }
         }
         v
     }

@@ -118,7 +118,9 @@ fn warmed_machine_starts_hot_and_verifies() {
     )
     .unwrap();
     let trace = capture_init_trace(&mut m, 0).unwrap();
-    assert_eq!(trace.len(), 3 * 8192, "init touches all three arrays");
+    // Copy initializes only its source array `a`; the destination `c`
+    // first-touch faults during the timed run (see Stream::init_data).
+    assert_eq!(trace.len(), 8192, "init touches the source array");
     let warm = warm_machine(&mut m, &rt, 0, &trace).unwrap();
     assert!(warm.l2_occupancy > 0);
 
@@ -126,12 +128,14 @@ fn warmed_machine_starts_hot_and_verifies() {
     let s = m.run(None);
     m.verify().unwrap();
     let run_misses = m.l2.stats.misses.get() - before_l2_miss;
-    // All three arrays (192 KiB) fit the warmed 1 MiB L2: the measured
-    // region's L2 misses must be a small fraction of its accesses.
+    // The warmed source array (64 KiB, fits the 1 MiB L2) re-hits;
+    // only the cold destination lines may miss, so misses stay well
+    // under the all-cold level (every line of both arrays missing).
     let run_accesses = run_misses + m.l2.stats.hits.get();
     assert!(
-        (run_misses as f64) < 0.1 * run_accesses as f64,
-        "warm start should mostly hit L2: {run_misses}/{run_accesses}"
+        (run_misses as f64) < 0.6 * run_accesses as f64,
+        "warm start should hit L2 on the warmed source: \
+         {run_misses}/{run_accesses}"
     );
     assert!(s.ticks > 0);
 }

@@ -1,0 +1,206 @@
+//! docs/STATS.md coverage gate: every stat key a fully-loaded run
+//! emits must match a documented pattern.
+//!
+//! The run below deliberately lights up every emitter: two hosts over
+//! a switched 2-LD MLD (host prefixes, switch + link + per-LD + host-
+//! attribution keys), DRAM+CXL interleaved traffic (both memory
+//! classes, writebacks), the default L2 prefetcher, and a runtime FM
+//! re-bind (rebinds + hot-plug event counters). Emitted keys are
+//! normalized (indices -> `{N}`-style placeholders, `host{H}.` prefix
+//! stripped) and looked up in the set of backtick patterns parsed out
+//! of docs/STATS.md.
+
+use cxlramsim::config::{CxlDevOverride, FmEventDef, LdRef, SimConfig};
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::system::Machine;
+use cxlramsim::workloads::{Stream, StreamKernel};
+
+/// Expand one-level `{a,b,c}` alternation groups in a documented
+/// pattern (placeholders like `{N}` contain no comma and are left
+/// alone). `dram.latency_ticks.{count,mean,p50,p99}` -> four patterns.
+fn expand(pattern: &str, out: &mut Vec<String>) {
+    let Some(open) = pattern.find('{') else {
+        out.push(pattern.to_string());
+        return;
+    };
+    let Some(close) = pattern[open..].find('}').map(|i| i + open) else {
+        out.push(pattern.to_string());
+        return;
+    };
+    let inner = &pattern[open + 1..close];
+    if !inner.contains(',') {
+        // A placeholder — skip past it and keep expanding the tail.
+        let mut tails = Vec::new();
+        expand(&pattern[close + 1..], &mut tails);
+        for t in tails {
+            out.push(format!("{}{t}", &pattern[..close + 1]));
+        }
+        return;
+    }
+    for alt in inner.split(',') {
+        let candidate =
+            format!("{}{}{}", &pattern[..open], alt, &pattern[close + 1..]);
+        expand(&candidate, out);
+    }
+}
+
+/// Every backtick span in STATS.md that looks like a stat-key pattern.
+fn documented_patterns(md: &str) -> std::collections::BTreeSet<String> {
+    let mut set = std::collections::BTreeSet::new();
+    for raw in md.split('`').skip(1).step_by(2) {
+        if raw.contains(' ') || !raw.contains('.') {
+            continue; // prose code span, not a key pattern
+        }
+        let mut expanded = Vec::new();
+        expand(raw, &mut expanded);
+        set.extend(expanded);
+    }
+    set
+}
+
+/// Normalize an emitted key to its documented pattern: strip a
+/// `host{H}.` prefix, replace per-instance indices with placeholders.
+fn all_digits(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_digit())
+}
+
+fn normalize(key: &str) -> String {
+    let all: Vec<&str> = key.split('.').collect();
+    let segs: &[&str] = match all[0].strip_prefix("host") {
+        Some(rest) if all_digits(rest) => &all[1..],
+        _ => &all[..],
+    };
+    let mut out: Vec<String> = Vec::new();
+    let mut prev = "";
+    for &s in segs {
+        let digits_after = |pre: &str| {
+            s.strip_prefix(pre).is_some_and(all_digits)
+        };
+        let mapped = if digits_after("core") {
+            "core{C}".to_string()
+        } else if digits_after("dev") {
+            "dev{N}".to_string()
+        } else if digits_after("ld") {
+            "ld{K}".to_string()
+        } else if digits_after("sw") {
+            "sw{M}".to_string()
+        } else if digits_after("link") {
+            "link{N}".to_string()
+        } else if prev == "l1" && all_digits(s) {
+            "{C}".to_string()
+        } else if let Some((head, tail)) = s.split_once('_') {
+            // host attribution suffixes: host0_reads -> host{H}_reads
+            match head.strip_prefix("host") {
+                Some(idx) if all_digits(idx) => {
+                    format!("host{{H}}_{tail}")
+                }
+                _ => s.to_string(),
+            }
+        } else {
+            s.to_string()
+        };
+        out.push(mapped);
+        prev = s;
+    }
+    out.join(".")
+}
+
+#[test]
+fn every_emitted_stat_key_is_documented() {
+    let md = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/docs/STATS.md"
+    ))
+    .expect("docs/STATS.md must exist");
+    let documented = documented_patterns(&md);
+    assert!(
+        documented.len() > 40,
+        "suspiciously few documented patterns: {}",
+        documented.len()
+    );
+
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 2;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(2), ..Default::default() }];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }, LdRef { dev: 0, ld: 1 }],
+        vec![],
+    ];
+    cfg.fm_events = vec![
+        FmEventDef::parse("@20us unbind dev0.ld1").unwrap(),
+        FmEventDef::parse("@25us bind dev0.ld1 host1").unwrap(),
+    ];
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    // DRAM + CXL mix on host 0 (writebacks both ways), hot-added CXL
+    // traffic on host 1.
+    let wl0 = Stream::new(StreamKernel::Triad, 8192, 1);
+    m.attach_workloads_to(
+        0,
+        vec![Box::new(wl0)],
+        &MemPolicy::Interleave { weights: vec![(0, 1), (1, 1)] },
+    )
+    .unwrap();
+    let wl1 = Stream::new(StreamKernel::Triad, 16384, 1);
+    m.attach_workloads_to(
+        1,
+        vec![Box::new(wl1)],
+        &MemPolicy::Preferred { node: 2 },
+    )
+    .unwrap();
+    m.run(None);
+    m.verify().unwrap();
+
+    let d = m.dump_stats();
+    assert!(d.entries.len() > 100, "run did not light up the emitters");
+    // The interesting families really are present in this run.
+    for probe in [
+        "host0.l2.pf.issued",
+        "host1.sys.mem_online_events",
+        "cxl.sw0.us_link.credit_wait.p99",
+        "cxl.dev0.ld1.host1_reads",
+        "cxl.dev0.ld1.rebinds",
+        "cxl.dev0.media.latency_ticks.p50",
+    ] {
+        assert!(d.get(probe).is_some(), "expected emitter missing: {probe}");
+    }
+
+    let mut undocumented = Vec::new();
+    for (key, _) in &d.entries {
+        let pat = normalize(key);
+        if !documented.contains(&pat) {
+            undocumented.push(format!("{key}  (pattern {pat})"));
+        }
+    }
+    assert!(
+        undocumented.is_empty(),
+        "stat keys emitted but not documented in docs/STATS.md:\n  {}",
+        undocumented.join("\n  ")
+    );
+}
+
+#[test]
+fn normalize_maps_representative_keys() {
+    assert_eq!(normalize("host1.core0.loads"), "core{C}.loads");
+    assert_eq!(normalize("host0.l1.3.miss_rate"), "l1.{C}.miss_rate");
+    assert_eq!(normalize("l2.pf.useful"), "l2.pf.useful");
+    assert_eq!(
+        normalize("cxl.dev2.ld1.host3_writes"),
+        "cxl.dev{N}.ld{K}.host{H}_writes"
+    );
+    assert_eq!(
+        normalize("cxl.sw1.us_link.credit_wait.p99"),
+        "cxl.sw{M}.us_link.credit_wait.p99"
+    );
+    assert_eq!(normalize("cxl.link0.flits"), "cxl.link{N}.flits");
+    assert_eq!(normalize("sys.events"), "sys.events");
+    assert_eq!(
+        normalize("host0.cxl.dev0.fills"),
+        "cxl.dev{N}.fills"
+    );
+}
