@@ -108,6 +108,10 @@ impl Args {
                 }
                 "--artifacts" => a.artifacts = val(&mut i)?,
                 "--fm-script" => a.fm_script = Some(val(&mut i)?),
+                "--fm-policy" => {
+                    let v = val(&mut i)?;
+                    a.sets.push(format!("fm.policy=\"{v}\""));
+                }
                 "--verify" => a.verify = true,
                 other => bail!("unknown flag '{other}' (see `cxlramsim help`)"),
             }
@@ -212,6 +216,11 @@ pub fn print_help() {
                                   '@<time> unbind devN.ldK' or\n\
                                   '@<time> bind devN.ldK hostH' per line\n\
                                   (LD hot remove/add while guests run)\n\
+           --fm-policy P          telemetry-driven FM policy instead of\n\
+                                  a schedule: capacity_rebalance |\n\
+                                  bandwidth_fairness ([fm] epoch /\n\
+                                  min_residency / cooldown /\n\
+                                  refusal_backoff tune it via --set)\n\
            --prog-model M         znuma | flat\n\
            --artifacts DIR        AOT artifact directory\n\
            --verify               functional verification after the run"
@@ -541,6 +550,34 @@ mod tests {
         .unwrap();
         assert!(a.config().is_err(), "bind of a bound LD must fail");
         let _ = std::fs::remove_file(&bad);
+    }
+
+    #[test]
+    fn fm_policy_flag_reaches_config() {
+        use crate::config::FmPolicyKind;
+        let a = Args::parse(&sv(&[
+            "run",
+            "--hosts",
+            "2",
+            "--set",
+            "cxl.dev0.lds=2",
+            "--set",
+            "cxl.interleave_ways=1",
+            "--fm-policy",
+            "capacity_rebalance",
+        ]))
+        .unwrap();
+        let cfg = a.config().unwrap();
+        let p = cfg.fm_policy.as_ref().expect("policy configured");
+        assert_eq!(p.kind, FmPolicyKind::CapacityRebalance);
+        assert!(cfg.fm_events.is_empty());
+
+        // Unknown policy names fail at config time.
+        let a = Args::parse(&sv(&[
+            "run", "--hosts", "2", "--fm-policy", "chaos",
+        ]))
+        .unwrap();
+        assert!(a.config().is_err());
     }
 
     #[test]

@@ -120,6 +120,75 @@ impl FmEventDef {
     }
 }
 
+/// The load signal a `[fm] policy` optimizes (see `docs/CONFIG.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FmPolicyKind {
+    /// Move idle logical devices toward the host whose allocator is
+    /// spilling pages off its policy node (capacity pressure, sampled
+    /// as `sys.numa_fallback_allocs` deltas).
+    CapacityRebalance,
+    /// Move idle logical devices toward the host generating the most
+    /// CXL traffic (bandwidth pressure, sampled as per-host CXL
+    /// fill/write-back deltas), spreading load over more LD capacity.
+    BandwidthFairness,
+}
+
+impl FmPolicyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "capacity_rebalance" => Ok(FmPolicyKind::CapacityRebalance),
+            "bandwidth_fairness" => Ok(FmPolicyKind::BandwidthFairness),
+            _ => bail!(
+                "unknown fm policy '{s}' \
+                 (capacity_rebalance|bandwidth_fairness)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FmPolicyKind::CapacityRebalance => "capacity_rebalance",
+            FmPolicyKind::BandwidthFairness => "bandwidth_fairness",
+        }
+    }
+}
+
+/// Telemetry-driven Fabric-Manager policy (`[fm] policy`): instead of a
+/// hand-written `[fm] events` schedule, the FM samples per-host and
+/// per-LD stats at a deterministic `epoch` cadence and computes
+/// UNBIND/BIND moves itself, with hysteresis so decisions do not
+/// ping-pong. Mutually exclusive with `[fm] events`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FmPolicyConfig {
+    pub kind: FmPolicyKind,
+    /// Sampling/decision cadence in simulated ns (`[fm] epoch`).
+    pub epoch_ns: f64,
+    /// Minimum time an LD stays put after any bind — boot or policy —
+    /// before the policy may move it (`[fm] min_residency`).
+    pub min_residency_ns: f64,
+    /// Per-host cooldown after participating in a move; neither end of
+    /// a move donates or receives again until it expires
+    /// (`[fm] cooldown`).
+    pub cooldown_ns: f64,
+    /// Back-off after the owning guest refuses an offline (pages in
+    /// use); doubles per consecutive refusal of the same LD, capped at
+    /// 8x (`[fm] refusal_backoff`).
+    pub refusal_backoff_ns: f64,
+}
+
+impl FmPolicyConfig {
+    /// Policy `kind` with the default cadence/hysteresis knobs.
+    pub fn new(kind: FmPolicyKind) -> Self {
+        FmPolicyConfig {
+            kind,
+            epoch_ns: 10_000.0,          // 10 us
+            min_residency_ns: 20_000.0,  // 20 us
+            cooldown_ns: 20_000.0,       // 20 us
+            refusal_backoff_ns: 50_000.0, // 50 us
+        }
+    }
+}
+
 /// Parse a duration with a unit suffix into nanoseconds.
 fn parse_time_ns(s: &str) -> Result<f64> {
     // Longest suffixes first: "s" would otherwise swallow "ns"/"us"/"ms".
@@ -586,6 +655,10 @@ pub struct SimConfig {
     /// hosts (at per-host disjoint bases), unbound windows staying
     /// offline as the hot-add pool.
     pub fm_events: Vec<FmEventDef>,
+    /// Telemetry-driven FM policy (`[fm] policy` / `--fm-policy`).
+    /// Mutually exclusive with `fm_events`; also switches firmware to
+    /// the hot-plug window layout, since any LD may move at runtime.
+    pub fm_policy: Option<FmPolicyConfig>,
     pub page_size: u64,
     pub seed: u64,
 }
@@ -661,6 +734,7 @@ impl Default for SimConfig {
                 switch_overrides: Vec::new(),
             },
             fm_events: Vec::new(),
+            fm_policy: None,
             page_size: 4096,
             seed: 1,
         }
@@ -670,6 +744,15 @@ impl Default for SimConfig {
 impl SimConfig {
     pub fn cycle_ns(&self) -> f64 {
         1.0 / self.freq_ghz
+    }
+
+    /// Whether LD ownership can change at runtime — an `[fm] events`
+    /// schedule or an `[fm] policy` is configured. Selects the
+    /// hot-plug BIOS window layout (every host publishes every window,
+    /// unowned ones offline as its hot-add pool), since any LD may
+    /// move while guests run.
+    pub fn fm_dynamic(&self) -> bool {
+        !self.fm_events.is_empty() || self.fm_policy.is_some()
     }
 
     /// The `devN.ldK` key of every CXL window definition, in
@@ -921,21 +1004,58 @@ impl SimConfig {
         if self.issue_width == 0 || self.lsq_entries == 0 {
             bail!("o3 parameters must be positive");
         }
-        if !self.fm_events.is_empty() {
+        // Constraints shared by every runtime FM mechanism — scripted
+        // `[fm] events` and telemetry `[fm] policy` alike (both drive
+        // the same hot-remove/hot-add flow through the RC routing
+        // windows).
+        if self.fm_dynamic() {
             if ways != 1 {
                 bail!(
-                    "fm.events re-binds individual logical devices and \
-                     requires 1-way windows (set cxl.interleave_ways = 1)"
+                    "runtime FM re-binding ([fm] events / [fm] policy) \
+                     moves individual logical devices and requires \
+                     1-way windows (set cxl.interleave_ways = 1)"
                 );
             }
             if self.cxl.attach == CxlAttach::MemBus {
                 bail!(
-                    "fm.events requires the architectural iobus attach: \
-                     the membus baseline bypasses the root complex's \
-                     routing windows, so hot-removed capacity cannot be \
-                     torn out of its path"
+                    "runtime FM re-binding ([fm] events / [fm] policy) \
+                     requires the architectural iobus attach: the \
+                     membus baseline bypasses the root complex's \
+                     routing windows, so hot-removed capacity cannot \
+                     be torn out of its path"
                 );
             }
+        }
+        if let Some(p) = &self.fm_policy {
+            // Policy XOR explicit events: a policy computes its own
+            // schedule from telemetry; mixing the two would make the
+            // hand-written events race the closed loop.
+            if !self.fm_events.is_empty() {
+                bail!(
+                    "[fm] policy and [fm] events are mutually \
+                     exclusive (the policy computes its own schedule)"
+                );
+            }
+            if self.hosts < 2 {
+                bail!(
+                    "fm.policy needs system.hosts >= 2 (nothing to \
+                     rebalance between)"
+                );
+            }
+            if !p.epoch_ns.is_finite() || p.epoch_ns <= 0.0 {
+                bail!("fm.epoch must be a positive duration");
+            }
+            for (name, v) in [
+                ("min_residency", p.min_residency_ns),
+                ("cooldown", p.cooldown_ns),
+                ("refusal_backoff", p.refusal_backoff_ns),
+            ] {
+                if !v.is_finite() || v < 0.0 {
+                    bail!("fm.{name} must be a non-negative duration");
+                }
+            }
+        }
+        if !self.fm_events.is_empty() {
             // Replay the schedule against the boot-time assignment:
             // every unbind must target a bound LD, every bind an
             // unbound one (ownership is exclusive), so a valid schedule
@@ -1223,6 +1343,38 @@ impl SimConfig {
                 c.fm_events.push(FmEventDef::parse(s)?);
             }
         }
+        // Telemetry-driven FM policy from the [fm] section.
+        if let Some(v) = doc.get("fm.policy") {
+            let s = v.as_str().context("fm.policy must be a string")?;
+            c.fm_policy = Some(FmPolicyConfig::new(FmPolicyKind::parse(s)?));
+        }
+        if let Some(p) = &mut c.fm_policy {
+            let dur = |key: &str| -> Result<Option<f64>> {
+                match doc.get(key) {
+                    None => Ok(None),
+                    Some(v) => {
+                        let s = v.as_str().with_context(|| {
+                            format!("{key} must be a duration string")
+                        })?;
+                        Ok(Some(parse_time_ns(s).with_context(|| {
+                            format!("bad duration in {key}")
+                        })?))
+                    }
+                }
+            };
+            if let Some(ns) = dur("fm.epoch")? {
+                p.epoch_ns = ns;
+            }
+            if let Some(ns) = dur("fm.min_residency")? {
+                p.min_residency_ns = ns;
+            }
+            if let Some(ns) = dur("fm.cooldown")? {
+                p.cooldown_ns = ns;
+            }
+            if let Some(ns) = dur("fm.refusal_backoff")? {
+                p.refusal_backoff_ns = ns;
+            }
+        }
         // Reject overrides for devices/switches/hosts that don't exist,
         // and unknown keys inside valid sections, rather than silently
         // dropping them (a likely off-by-one or typo in configs).
@@ -1253,8 +1405,25 @@ impl SimConfig {
                 }
             }
             if let Some(rest) = key.strip_prefix("fm.") {
-                if rest != "events" {
-                    bail!("unknown key '{key}' ([fm] keys: [\"events\"])");
+                const FM_KEYS: [&str; 6] = [
+                    "events",
+                    "policy",
+                    "epoch",
+                    "min_residency",
+                    "cooldown",
+                    "refusal_backoff",
+                ];
+                if !FM_KEYS.contains(&rest) {
+                    bail!("unknown key '{key}' ([fm] keys: {FM_KEYS:?})");
+                }
+                if rest != "events"
+                    && rest != "policy"
+                    && c.fm_policy.is_none()
+                {
+                    bail!(
+                        "'{key}' only applies with [fm] policy set \
+                         (it tunes the policy's cadence/hysteresis)"
+                    );
                 }
             }
             if let Some(rest) = key.strip_prefix("cxl.dev") {
@@ -1823,6 +1992,89 @@ mod tests {
             FmEventDef::parse("@10us bind dev0.ld0 host0").unwrap(),
         ];
         assert_eq!(c.fm_events_in_time_order(), vec![1, 0]);
+    }
+
+    #[test]
+    fn fm_policy_parses_and_validates() {
+        let base = "[system]\nhosts = 2\n[cxl]\ninterleave_ways = 1\n\
+                    [cxl.dev0]\nlds = 2\n";
+        // Defaults + overridden cadence/hysteresis knobs.
+        let cfg = SimConfig::from_toml(
+            &format!(
+                "{base}[fm]\npolicy = \"capacity_rebalance\"\n\
+                 epoch = \"5us\"\nmin_residency = \"15us\"\n\
+                 cooldown = \"10us\"\nrefusal_backoff = \"40us\"\n"
+            ),
+            &[],
+        )
+        .unwrap();
+        let p = cfg.fm_policy.as_ref().unwrap();
+        assert_eq!(p.kind, FmPolicyKind::CapacityRebalance);
+        assert_eq!(p.epoch_ns, 5_000.0);
+        assert_eq!(p.min_residency_ns, 15_000.0);
+        assert_eq!(p.cooldown_ns, 10_000.0);
+        assert_eq!(p.refusal_backoff_ns, 40_000.0);
+        assert!(cfg.fm_dynamic(), "policy selects the hot-plug layout");
+        // Bare policy gets the documented defaults.
+        let cfg = SimConfig::from_toml(
+            &format!("{base}[fm]\npolicy = \"bandwidth_fairness\"\n"),
+            &[],
+        )
+        .unwrap();
+        let p = cfg.fm_policy.as_ref().unwrap();
+        assert_eq!(p.kind, FmPolicyKind::BandwidthFairness);
+        assert_eq!(p.epoch_ns, 10_000.0);
+
+        // Unknown policy name.
+        assert!(SimConfig::from_toml(
+            &format!("{base}[fm]\npolicy = \"chaos\"\n"),
+            &[],
+        )
+        .is_err());
+        // Policy XOR explicit events.
+        assert!(SimConfig::from_toml(
+            &format!(
+                "{base}[fm]\npolicy = \"capacity_rebalance\"\n\
+                 events = [\"@10us unbind dev0.ld1\"]\n"
+            ),
+            &[],
+        )
+        .is_err());
+        // Tuning knobs without a policy are rejected, not dropped.
+        assert!(SimConfig::from_toml(
+            &format!("{base}[fm]\nepoch = \"5us\"\n"),
+            &[],
+        )
+        .is_err());
+        // A single host has nothing to rebalance between.
+        assert!(SimConfig::from_toml(
+            "[cxl]\ninterleave_ways = 1\n[cxl.dev0]\nlds = 2\n\
+             [fm]\npolicy = \"capacity_rebalance\"\n",
+            &[],
+        )
+        .is_err());
+        // Same attach/ways constraints as [fm] events.
+        assert!(SimConfig::from_toml(
+            "[system]\nhosts = 2\n[cxl]\ndevices = 2\n\
+             [fm]\npolicy = \"capacity_rebalance\"\n",
+            &[],
+        )
+        .is_err());
+        let mut c = SimConfig::default();
+        c.hosts = 2;
+        c.cxl.interleave_ways = 1;
+        c.cxl.attach = CxlAttach::MemBus;
+        c.fm_policy =
+            Some(FmPolicyConfig::new(FmPolicyKind::CapacityRebalance));
+        assert!(c.validate().is_err());
+        // Degenerate durations.
+        let mut c = SimConfig::default();
+        c.hosts = 2;
+        c.cxl.interleave_ways = 1;
+        let mut p = FmPolicyConfig::new(FmPolicyKind::CapacityRebalance);
+        p.epoch_ns = 0.0;
+        c.fm_policy = Some(p);
+        assert!(c.validate().is_err());
     }
 
     #[test]

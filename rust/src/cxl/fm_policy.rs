@@ -1,0 +1,454 @@
+//! Telemetry-driven Fabric-Manager policy engine (`[fm] policy`).
+//!
+//! Instead of a hand-written `[fm] events` schedule, the FM samples
+//! per-host and per-LD load at a deterministic `epoch` cadence
+//! (machine-level `Ev::FmEpoch` entries in the unified `(tick, seq)`
+//! queue) and computes UNBIND/BIND moves itself — the ROADMAP's
+//! "load-driven FM policies": auto-rebalancing schedules computed from
+//! stats rather than scripts.
+//!
+//! Two policies ship:
+//!
+//! * `capacity_rebalance` — the demand signal is the guest allocator's
+//!   **fallback pressure** (`sys.numa_fallback_allocs` deltas: pages
+//!   that spilled off their policy node because it was offline or
+//!   full). The host spilling hardest gains an *idle* logical device
+//!   (zero pages resident on its zNUMA node, so the hot-remove cannot
+//!   be refused) from the least-pressured owner.
+//! * `bandwidth_fairness` — the demand signal is per-host **CXL
+//!   traffic** (fills + write-backs per epoch). The host generating
+//!   the most traffic gains an idle LD from a host generating at most
+//!   half as much, spreading load across more capacity/links.
+//!
+//! Decisions are pure functions of sampled machine state, so
+//! policy-driven runs stay bit-deterministic. Hysteresis keeps the
+//! closed loop stable:
+//!
+//! * **min-residency** — an LD never moves again until
+//!   `[fm] min_residency` after its last (boot or policy) bind;
+//! * **cooldown** — both hosts of a move sit out `[fm] cooldown`;
+//! * **refusal back-off** — when the owning guest declines the offline
+//!   (pages in use), the LD is blocked for `[fm] refusal_backoff`,
+//!   doubling per consecutive refusal (capped at 8x).
+//!
+//! The engine only *decides*; `system::Machine` executes each
+//! [`MoveDecision`] through the same quiesce → Event-Log doorbell →
+//! hot-remove/add flow the scripted path uses, posting a
+//! [`super::mailbox::event::POLICY_DECISION`] record first so the
+//! decision trail is drainable via `GET_EVENT_RECORDS`.
+
+use std::collections::BTreeMap;
+
+use crate::config::{FmPolicyConfig, FmPolicyKind, LdRef};
+use crate::sim::{ns_to_ticks, Tick};
+use crate::stats::{Counter, StatDump};
+
+use super::mailbox::UNBOUND;
+
+/// Minimum per-epoch fallback-page delta before a host counts as
+/// capacity-starved. Any spill is real demand (the guest wanted a node
+/// it could not use); stability against noise comes from the residency
+/// and cooldown gates, not from the threshold.
+const MIN_CAPACITY_DEMAND: u64 = 1;
+/// Minimum per-epoch CXL line-op delta before a host counts as
+/// bandwidth-hungry.
+const MIN_BANDWIDTH_DEMAND: u64 = 64;
+/// `bandwidth_fairness` moves only toward a host with at least this
+/// ratio of the donor's traffic (keeps near-equal hosts stable).
+const FAIRNESS_RATIO: u64 = 2;
+/// Cap on the refusal back-off doubling (2^3 = 8x).
+const MAX_BACKOFF_SHIFT: u32 = 3;
+
+/// One host's cumulative load sample (monotonic counters; the engine
+/// differentiates them per epoch).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HostLoad {
+    /// Guest allocator pages that spilled off their policy node.
+    pub fallback_allocs: u64,
+    /// CXL line fills + dirty write-backs issued by this host.
+    pub cxl_traffic: u64,
+}
+
+/// One logical device's state at sampling time.
+#[derive(Clone, Copy, Debug)]
+pub struct LdState {
+    pub ld: LdRef,
+    /// Owning host id, [`UNBOUND`] when unassigned.
+    pub owner: u16,
+    /// Pages the owning guest currently has allocated on the LD's
+    /// zNUMA node (0 = idle: an offline cannot be refused).
+    pub resident_pages: u64,
+}
+
+/// A policy decision: move `ld` from its current owner to host `to`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MoveDecision {
+    pub ld: LdRef,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// Decision/outcome counters, dumped as `fm.policy.*`.
+#[derive(Clone, Debug, Default)]
+pub struct FmPolicyStats {
+    /// Sampling epochs executed.
+    pub epochs: Counter,
+    /// Moves decided (and successfully executed end to end).
+    pub decisions: Counter,
+    /// Move executions deferred while in-flight requests to the
+    /// departing window drained (quiesce re-probes).
+    pub deferrals: Counter,
+    /// Moves abandoned because the owning guest refused the offline
+    /// (pages in use) — triggers refusal back-off.
+    pub refusals: Counter,
+    /// Epochs where a profitable move existed but hysteresis
+    /// (min-residency, cooldown or refusal back-off) held it back.
+    pub holds: Counter,
+}
+
+/// The policy engine: per-LD/per-host hysteresis state + last-epoch
+/// telemetry baselines. All state lives in `BTreeMap`s/`Vec`s and all
+/// inputs are deterministic machine state, so decisions replay
+/// bit-identically.
+pub struct FmPolicyEngine {
+    kind: FmPolicyKind,
+    epoch_ticks: Tick,
+    min_residency: Tick,
+    cooldown: Tick,
+    refusal_backoff: Tick,
+    /// Cumulative demand metric per host at the previous epoch.
+    prev: Vec<u64>,
+    /// Tick of each LD's most recent bind (absent = bound at boot, 0).
+    bound_at: BTreeMap<LdRef, Tick>,
+    /// Refusal back-off: the LD may not be selected before this tick.
+    blocked_until: BTreeMap<LdRef, Tick>,
+    /// Consecutive refusals per LD (drives the back-off doubling).
+    refusal_streak: BTreeMap<LdRef, u32>,
+    /// Per-host cooldown after participating in a move.
+    cooldown_until: Vec<Tick>,
+    pub stats: FmPolicyStats,
+}
+
+impl FmPolicyEngine {
+    pub fn new(cfg: &FmPolicyConfig, hosts: usize) -> Self {
+        FmPolicyEngine {
+            kind: cfg.kind,
+            epoch_ticks: ns_to_ticks(cfg.epoch_ns).max(1),
+            min_residency: ns_to_ticks(cfg.min_residency_ns),
+            cooldown: ns_to_ticks(cfg.cooldown_ns),
+            refusal_backoff: ns_to_ticks(cfg.refusal_backoff_ns),
+            prev: vec![0; hosts],
+            bound_at: BTreeMap::new(),
+            blocked_until: BTreeMap::new(),
+            refusal_streak: BTreeMap::new(),
+            cooldown_until: vec![0; hosts],
+            stats: FmPolicyStats::default(),
+        }
+    }
+
+    /// The sampling cadence in ticks (the machine schedules the next
+    /// `Ev::FmEpoch` this far ahead).
+    pub fn epoch_ticks(&self) -> Tick {
+        self.epoch_ticks
+    }
+
+    /// The configured policy kind.
+    pub fn kind(&self) -> FmPolicyKind {
+        self.kind
+    }
+
+    /// Run one sampling epoch at `now`: differentiate the hosts'
+    /// cumulative load, pick at most ONE move (conservative by design —
+    /// the next epoch re-samples with the move's effect included), and
+    /// update the telemetry baselines.
+    pub fn epoch(
+        &mut self,
+        now: Tick,
+        hosts: &[HostLoad],
+        lds: &[LdState],
+    ) -> Option<MoveDecision> {
+        self.stats.epochs.inc();
+        let cum: Vec<u64> = hosts
+            .iter()
+            .map(|h| match self.kind {
+                FmPolicyKind::CapacityRebalance => h.fallback_allocs,
+                FmPolicyKind::BandwidthFairness => h.cxl_traffic,
+            })
+            .collect();
+        let demand: Vec<u64> = cum
+            .iter()
+            .zip(self.prev.iter())
+            .map(|(&c, &p)| c.saturating_sub(p))
+            .collect();
+        self.prev = cum;
+
+        let min_demand = match self.kind {
+            FmPolicyKind::CapacityRebalance => MIN_CAPACITY_DEMAND,
+            FmPolicyKind::BandwidthFairness => MIN_BANDWIDTH_DEMAND,
+        };
+        // Receiver: the hungriest host (ties break toward the lower
+        // id — deterministic).
+        let (to, &to_demand) = demand
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))?;
+        if to_demand < min_demand {
+            return None;
+        }
+
+        // Donor candidates: someone else's *idle* LD (nothing resident
+        // on its node, so the offline cannot be refused), owned by a
+        // host under strictly less pressure. Sorted so selection is
+        // deterministic: least-loaded owner first, then LD identity.
+        let mut cands: Vec<&LdState> = lds
+            .iter()
+            .filter(|s| {
+                s.owner != UNBOUND
+                    && (s.owner as usize) < demand.len()
+                    && s.owner as usize != to
+                    && s.resident_pages == 0
+                    && match self.kind {
+                        FmPolicyKind::CapacityRebalance => {
+                            demand[s.owner as usize] < to_demand
+                        }
+                        FmPolicyKind::BandwidthFairness => {
+                            demand[s.owner as usize] * FAIRNESS_RATIO
+                                <= to_demand
+                        }
+                    }
+            })
+            .collect();
+        if cands.is_empty() {
+            return None;
+        }
+        cands.sort_by_key(|s| {
+            (demand[s.owner as usize], s.owner, s.ld.dev, s.ld.ld)
+        });
+
+        // Hysteresis gates, applied per candidate: min-residency on the
+        // LD, refusal back-off on the LD, cooldown on both hosts.
+        for s in &cands {
+            let from = s.owner as usize;
+            let resided =
+                now >= self.bound_at.get(&s.ld).copied().unwrap_or(0)
+                    + self.min_residency;
+            let unblocked = now
+                >= self.blocked_until.get(&s.ld).copied().unwrap_or(0);
+            let cool = now >= self.cooldown_until[from]
+                && now >= self.cooldown_until[to];
+            if resided && unblocked && cool {
+                return Some(MoveDecision { ld: s.ld, from, to });
+            }
+        }
+        // A profitable move existed but hysteresis held it back.
+        self.stats.holds.inc();
+        None
+    }
+
+    /// A decided move completed end to end: start the LD's residency
+    /// clock and both hosts' cooldowns, clear any refusal streak.
+    pub fn note_moved(
+        &mut self,
+        ld: LdRef,
+        from: usize,
+        to: usize,
+        now: Tick,
+    ) {
+        self.stats.decisions.inc();
+        self.bound_at.insert(ld, now);
+        self.refusal_streak.remove(&ld);
+        self.blocked_until.remove(&ld);
+        for h in [from, to] {
+            if let Some(slot) = self.cooldown_until.get_mut(h) {
+                *slot = now + self.cooldown;
+            }
+        }
+    }
+
+    /// The owning guest refused the offline: back off exponentially
+    /// (doubling per consecutive refusal, capped at 8x) before asking
+    /// for this LD again.
+    pub fn note_refused(&mut self, ld: LdRef, now: Tick) {
+        self.stats.refusals.inc();
+        let streak = self.refusal_streak.entry(ld).or_insert(0);
+        let shift = (*streak).min(MAX_BACKOFF_SHIFT);
+        *streak = streak.saturating_add(1);
+        self.blocked_until
+            .insert(ld, now + (self.refusal_backoff << shift));
+    }
+
+    /// A move execution was deferred on the quiesce gate (in-flight
+    /// requests to the departing window still draining).
+    pub fn note_deferred(&mut self) {
+        self.stats.deferrals.inc();
+    }
+
+    pub fn dump(&self, d: &mut StatDump) {
+        d.counter("fm.policy.epochs", &self.stats.epochs);
+        d.counter("fm.policy.decisions", &self.stats.decisions);
+        d.counter("fm.policy.deferrals", &self.stats.deferrals);
+        d.counter("fm.policy.refusals", &self.stats.refusals);
+        d.counter("fm.policy.holds", &self.stats.holds);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(kind: FmPolicyKind) -> FmPolicyEngine {
+        let mut cfg = FmPolicyConfig::new(kind);
+        cfg.epoch_ns = 10_000.0; // 10 us
+        cfg.min_residency_ns = 20_000.0;
+        cfg.cooldown_ns = 20_000.0;
+        cfg.refusal_backoff_ns = 50_000.0;
+        FmPolicyEngine::new(&cfg, 2)
+    }
+
+    fn ld(dev: usize, k: u16, owner: u16, resident: u64) -> LdState {
+        LdState {
+            ld: LdRef { dev, ld: k },
+            owner,
+            resident_pages: resident,
+        }
+    }
+
+    const US: Tick = 1_000_000; // ticks per microsecond
+
+    #[test]
+    fn capacity_moves_idle_ld_to_spilling_host() {
+        let mut e = engine(FmPolicyKind::CapacityRebalance);
+        // Host 1 spilled 100 pages; host 0 holds an idle LD 1 and a
+        // busy LD 0. Residency (20 us from boot) has passed at 30 us.
+        let hosts = [
+            HostLoad::default(),
+            HostLoad { fallback_allocs: 100, cxl_traffic: 0 },
+        ];
+        let lds = [ld(0, 0, 0, 512), ld(0, 1, 0, 0)];
+        let mv = e.epoch(30 * US, &hosts, &lds).unwrap();
+        assert_eq!(
+            mv,
+            MoveDecision { ld: LdRef { dev: 0, ld: 1 }, from: 0, to: 1 }
+        );
+        // Busy LD 0 was never a candidate (resident pages > 0).
+    }
+
+    #[test]
+    fn residency_holds_then_releases() {
+        let mut e = engine(FmPolicyKind::CapacityRebalance);
+        let hosts = [
+            HostLoad::default(),
+            HostLoad { fallback_allocs: 100, cxl_traffic: 0 },
+        ];
+        let lds = [ld(0, 1, 0, 0)];
+        // 10 us < 20 us min-residency from the boot bind: held.
+        assert_eq!(e.epoch(10 * US, &hosts, &lds), None);
+        assert_eq!(e.stats.holds.get(), 1);
+        // Past residency the same situation moves. (Cumulative demand
+        // is unchanged, so this epoch's delta is 0 — bump it.)
+        let hosts2 = [
+            HostLoad::default(),
+            HostLoad { fallback_allocs: 200, cxl_traffic: 0 },
+        ];
+        assert!(e.epoch(25 * US, &hosts2, &lds).is_some());
+    }
+
+    #[test]
+    fn cooldown_after_move_prevents_ping_pong() {
+        let mut e = engine(FmPolicyKind::CapacityRebalance);
+        let r = LdRef { dev: 0, ld: 1 };
+        e.note_moved(r, 0, 1, 30 * US);
+        assert_eq!(e.stats.decisions.get(), 1);
+        // Immediately after, host 0 becomes the hungry one and the
+        // moved LD sits idle on host 1 — but residency + cooldown hold.
+        let hosts = [
+            HostLoad { fallback_allocs: 100, cxl_traffic: 0 },
+            HostLoad::default(),
+        ];
+        let lds = [ld(0, 1, 1, 0)];
+        assert_eq!(e.epoch(40 * US, &hosts, &lds), None);
+        assert_eq!(e.stats.holds.get(), 1);
+        // Once both expire (30 + 20 us residency and cooldown), the
+        // reverse move is allowed again.
+        let hosts2 = [
+            HostLoad { fallback_allocs: 200, cxl_traffic: 0 },
+            HostLoad::default(),
+        ];
+        assert!(e.epoch(55 * US, &hosts2, &lds).is_some());
+    }
+
+    #[test]
+    fn refusal_backoff_doubles_and_caps() {
+        let mut e = engine(FmPolicyKind::CapacityRebalance);
+        let r = LdRef { dev: 0, ld: 0 };
+        e.note_refused(r, 0);
+        assert_eq!(e.blocked_until[&r], 50 * US);
+        e.note_refused(r, 0);
+        assert_eq!(e.blocked_until[&r], 100 * US);
+        e.note_refused(r, 0);
+        e.note_refused(r, 0);
+        e.note_refused(r, 0);
+        // Capped at 8x even as the streak keeps growing.
+        assert_eq!(e.blocked_until[&r], 400 * US);
+        assert_eq!(e.stats.refusals.get(), 5);
+        // A successful move clears the streak and the block.
+        e.note_moved(r, 0, 1, 500 * US);
+        assert!(e.blocked_until.get(&r).is_none());
+    }
+
+    #[test]
+    fn demand_is_differentiated_per_epoch() {
+        let mut e = engine(FmPolicyKind::CapacityRebalance);
+        let lds = [ld(0, 1, 0, 0)];
+        let hosts = [
+            HostLoad::default(),
+            HostLoad { fallback_allocs: 100, cxl_traffic: 0 },
+        ];
+        assert!(e.epoch(30 * US, &hosts, &lds).is_some());
+        // Same cumulative value next epoch -> delta 0 -> no demand.
+        let lds2 = [ld(0, 0, 0, 0)];
+        assert_eq!(e.epoch(40 * US, &hosts, &lds2), None);
+        assert_eq!(
+            e.stats.holds.get(),
+            0,
+            "no demand is not a hysteresis hold"
+        );
+    }
+
+    #[test]
+    fn bandwidth_fairness_requires_traffic_ratio() {
+        let mut e = engine(FmPolicyKind::BandwidthFairness);
+        // Host 1 pushes 1000 line ops, host 0 owns an idle LD and
+        // pushes 600: ratio < 2, stable.
+        let hosts = [
+            HostLoad { fallback_allocs: 0, cxl_traffic: 600 },
+            HostLoad { fallback_allocs: 0, cxl_traffic: 1000 },
+        ];
+        let lds = [ld(0, 0, 0, 0), ld(0, 1, 1, 128)];
+        assert_eq!(e.epoch(30 * US, &hosts, &lds), None);
+        // Next epoch host 1 doubles its lead: the idle LD moves.
+        let hosts2 = [
+            HostLoad { fallback_allocs: 0, cxl_traffic: 700 },
+            HostLoad { fallback_allocs: 0, cxl_traffic: 2200 },
+        ];
+        let mv = e.epoch(40 * US, &hosts2, &lds).unwrap();
+        assert_eq!(mv.ld, LdRef { dev: 0, ld: 0 });
+        assert_eq!((mv.from, mv.to), (0, 1));
+    }
+
+    #[test]
+    fn unbound_and_foreign_lds_are_never_candidates() {
+        let mut e = engine(FmPolicyKind::CapacityRebalance);
+        let hosts = [
+            HostLoad::default(),
+            HostLoad { fallback_allocs: 100, cxl_traffic: 0 },
+        ];
+        // Unbound LD, the receiver's own LD, and a busy LD: no move.
+        let lds = [
+            ld(0, 0, UNBOUND, 0),
+            ld(0, 1, 1, 0),
+            ld(1, 0, 0, 64),
+        ];
+        assert_eq!(e.epoch(30 * US, &hosts, &lds), None);
+    }
+}

@@ -12,6 +12,21 @@ use crate::stats::{Counter, Histogram, StatDump};
 
 use super::mem_proto::{Channel, CxlMemPacket};
 
+/// What the credit pool can promise a sender at a given tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CreditAvail {
+    /// A credit is free right now — send immediately.
+    Now,
+    /// Pool exhausted; the earliest in-flight credit retires at this
+    /// tick (> now), so retry then.
+    RetiresAt(Tick),
+    /// Pool exhausted and no in-flight credit has a timed retirement
+    /// yet (every one is an unretired placeholder). The sender must
+    /// re-probe after a bounded interval ([`CxlLink::reprobe_at`]) —
+    /// never park on a sentinel tick.
+    Unknown,
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct LinkStats {
     pub m2s_req: Counter,
@@ -62,9 +77,21 @@ impl CxlLink {
         }
     }
 
-    /// Wire bytes after flit framing: round payload up to whole flits.
+    /// Payload bytes one flit carries: the flit size minus its framing
+    /// overhead. A CXL 2.0 68 B flit packs 64 B of slot payload behind
+    /// 4 B of protocol ID + CRC; the CXL 3.x 256 B flit spends 16 B on
+    /// header + CRC + FEC around 240 B of payload. Charging the full
+    /// flit while dividing by this capacity is what keeps wide-flit
+    /// configs from being overbilled ~4x on the wire.
+    fn flit_payload(&self) -> u64 {
+        let overhead = if self.flit_bytes >= 128 { 16 } else { 4 };
+        self.flit_bytes.saturating_sub(overhead).max(8)
+    }
+
+    /// Wire bytes after flit framing: round payload up to whole flits
+    /// (of per-flit *payload* capacity), charge whole flits of wire.
     fn framed(&self, wire_bytes: u64) -> (u64, u64) {
-        let flits = wire_bytes.div_ceil(self.flit_bytes.min(64)).max(1);
+        let flits = wire_bytes.div_ceil(self.flit_payload()).max(1);
         (flits, flits * self.flit_bytes)
     }
 
@@ -74,15 +101,37 @@ impl CxlLink {
         self.credits_free += before - self.returns.len();
     }
 
-    /// Earliest tick (>= now) at which a credit will be available, or
-    /// `now` if one is free. `None` if the pool is empty and nothing is
-    /// in flight (configuration error).
-    pub fn credit_available_at(&mut self, now: Tick) -> Option<Tick> {
+    /// Credit availability at `now`: [`CreditAvail::Now`] if a credit
+    /// is free, the earliest timed retirement otherwise. When every
+    /// in-flight credit is still an unretired placeholder there is no
+    /// timed retirement to wait on — the answer is
+    /// [`CreditAvail::Unknown`], and the caller re-probes at
+    /// [`CxlLink::reprobe_at`] instead of parking on a sentinel (the
+    /// old `Tick::MAX` answer scheduled retries at the end of time and
+    /// poisoned the `credit_wait` histogram).
+    pub fn credit_available_at(&mut self, now: Tick) -> CreditAvail {
         self.reclaim(now);
         if self.credits_free > 0 {
-            return Some(now);
+            return CreditAvail::Now;
         }
-        self.returns.iter().copied().min()
+        assert!(!self.returns.is_empty(), "zero-credit link");
+        match self
+            .returns
+            .iter()
+            .copied()
+            .filter(|&t| t != Tick::MAX)
+            .min()
+        {
+            Some(t) => CreditAvail::RetiresAt(t),
+            None => CreditAvail::Unknown,
+        }
+    }
+
+    /// Bounded, deterministic re-probe tick for the
+    /// [`CreditAvail::Unknown`] case: one link round trip past `now`
+    /// (floored at 50 ns so a zero-latency test link still advances).
+    pub fn reprobe_at(&self, now: Tick) -> Tick {
+        now + (2 * self.lat_ticks).max(ns_to_ticks(50.0))
     }
 
     /// Send an M2S packet at `now`. Consumes a credit (caller must have
@@ -164,6 +213,10 @@ impl CxlLink {
         d.counter(&format!("{path}.wire_bytes"), &self.stats.wire_bytes);
         d.counter(&format!("{path}.credit_stalls"), &self.stats.credit_stalls);
         d.hist(&format!("{path}.credit_wait"), &self.stats.credit_wait);
+        d.hist(
+            &format!("{path}.occupancy_wait"),
+            &self.stats.occupancy_wait,
+        );
     }
 }
 
@@ -213,18 +266,42 @@ mod tests {
     #[test]
     fn credits_exhaust_and_return() {
         let mut l = link();
-        assert_eq!(l.credit_available_at(0), Some(0));
+        assert_eq!(l.credit_available_at(0), CreditAvail::Now);
         l.send_m2s(0, &read_pkt(1));
         l.send_m2s(0, &read_pkt(2));
         assert_eq!(l.credits_in_use(), 2);
-        // Pool (2) is exhausted; nothing retired yet -> next avail is
-        // the MAX placeholder.
-        assert_eq!(l.credit_available_at(100), Some(Tick::MAX));
+        // Pool (2) is exhausted; nothing retired yet -> no timed
+        // retirement exists, so the answer is Unknown (bounded
+        // re-probe), NOT a Tick::MAX sentinel.
+        assert_eq!(l.credit_available_at(100), CreditAvail::Unknown);
         l.retire(50_000);
-        assert_eq!(l.credit_available_at(100), Some(50_000));
+        assert_eq!(
+            l.credit_available_at(100),
+            CreditAvail::RetiresAt(50_000)
+        );
         // After that tick passes, a credit is free.
-        assert_eq!(l.credit_available_at(60_000), Some(60_000));
+        assert_eq!(l.credit_available_at(60_000), CreditAvail::Now);
         assert_eq!(l.credits_in_use(), 1);
+    }
+
+    #[test]
+    fn unknown_credit_reprobe_is_bounded() {
+        let mut l = link();
+        l.send_m2s(0, &read_pkt(1));
+        l.send_m2s(0, &read_pkt(2));
+        assert_eq!(l.credit_available_at(1_000), CreditAvail::Unknown);
+        // The re-probe tick is a small deterministic offset, nowhere
+        // near the end of time.
+        let t = l.reprobe_at(1_000);
+        assert!(t > 1_000);
+        assert!(t <= 1_000 + ns_to_ticks(100.0), "re-probe {t}");
+        // One retirement turns Unknown into a timed answer; the other
+        // placeholder must not leak back in as a sentinel.
+        l.retire(9_000);
+        assert_eq!(
+            l.credit_available_at(1_000),
+            CreditAvail::RetiresAt(9_000)
+        );
     }
 
     #[test]
@@ -242,6 +319,45 @@ mod tests {
         let a = l.send_m2s(0, &read_pkt(1));
         let b = l.send_m2s(0, &read_pkt(2));
         assert_eq!(b - a, 2125); // serialized behind the first flit
+    }
+
+    #[test]
+    fn contended_wire_samples_and_dumps_occupancy_wait() {
+        let mut l = CxlLink::new(0.0, 32.0, 68, 8);
+        l.send_m2s(0, &read_pkt(1));
+        l.send_m2s(0, &read_pkt(2)); // waits out the first flit's ser
+        assert_eq!(l.stats.occupancy_wait.count(), 2);
+        assert_eq!(l.stats.occupancy_wait.stats.max, 2125.0);
+        // The histogram the hot path samples must actually reach the
+        // stat dump (it used to be sampled but never emitted).
+        let mut d = StatDump::default();
+        l.dump("cxl.link0", &mut d);
+        assert_eq!(d.get("cxl.link0.occupancy_wait.count"), Some(2.0));
+        assert!(d.get("cxl.link0.occupancy_wait.mean").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn wide_flits_charge_payload_capacity_not_64b_chunks() {
+        // 128 B DRS on 68 B flits: 2 x 64 B payload -> 136 wire bytes.
+        let mut narrow = CxlLink::new(0.0, 32.0, 68, 8);
+        let resp = mem_proto::make_response(&read_pkt(1));
+        narrow.send_s2m(0, &resp);
+        assert_eq!(narrow.stats.flits.get(), 2);
+        assert_eq!(narrow.stats.wire_bytes.get(), 136);
+        // The same DRS on a CXL 3.x-style 256 B flit fits ONE flit
+        // (240 B payload capacity): 256 wire bytes, not the ~512 the
+        // old `min(flit, 64)` divisor charged (2 flits x 256 B).
+        let mut wide = CxlLink::new(0.0, 32.0, 256, 8);
+        wide.send_s2m(0, &resp);
+        assert_eq!(wide.stats.flits.get(), 1);
+        assert_eq!(wide.stats.wire_bytes.get(), 256);
+        // Sweeping the same traffic: wide flits may pad (256 vs 136)
+        // but never by the 4x framing inflation the bug produced.
+        assert!(
+            wide.stats.wire_bytes.get()
+                < 2 * narrow.stats.wire_bytes.get(),
+            "256 B flit framing must not multiply wire bytes"
+        );
     }
 
     #[test]

@@ -56,6 +56,12 @@ pub mod event {
     pub const UNBIND_REQUEST: u8 = 0;
     /// This LD was just bound to the addressed host (hot-add).
     pub const LD_BOUND: u8 = 1;
+    /// Informational decision-log record from a telemetry-driven FM
+    /// policy (`[fm] policy`): the addressed host's LD was selected
+    /// for re-binding. Posted ahead of the UNBIND_REQUEST so the
+    /// decision trail is visible through `GET_EVENT_RECORDS` exactly
+    /// like the actions themselves; drivers log and move on.
+    pub const POLICY_DECISION: u8 = 2;
 }
 
 /// One record in the device Event Log (6 bytes on the wire:

@@ -17,6 +17,10 @@
 //!   multi-logical-device (MLD) capacity slicing.
 //! * [`fabric`] — the shared tree below the hosts: devices, switches
 //!   and leaf links, plus the fabric-manager LD-ownership role.
+//! * [`fm_policy`] — the telemetry-driven Fabric-Manager policy engine
+//!   (`[fm] policy`): samples per-host/per-LD load each epoch and
+//!   computes UNBIND/BIND moves with hysteresis, replacing hand-written
+//!   `[fm] events` schedules with closed-loop elastic pooling.
 //! * [`root_complex`] — host side (one per simulated host): HDM routing
 //!   windows + packetizer, driving traffic into the fabric.
 
@@ -27,11 +31,13 @@ pub mod link;
 pub mod switch;
 pub mod device;
 pub mod fabric;
+pub mod fm_policy;
 pub mod root_complex;
 
 pub use device::CxlDevice;
 pub use fabric::Fabric;
-pub use link::CxlLink;
+pub use fm_policy::FmPolicyEngine;
+pub use link::{CreditAvail, CxlLink};
 pub use mem_proto::{M2SOpcode, S2MOpcode};
 pub use root_complex::{CxlRootComplex, HdmWindow};
 pub use switch::CxlSwitch;

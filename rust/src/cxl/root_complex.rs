@@ -205,12 +205,21 @@ impl CxlRootComplex {
         let after_pkt = now + self.pkt_ticks;
         let credit_link = fabric.credit_link(dev);
         match credit_link.credit_available_at(after_pkt) {
-            Some(t) if t <= after_pkt => {}
-            Some(t) => {
+            super::link::CreditAvail::Now => {}
+            super::link::CreditAvail::RetiresAt(t) => {
                 credit_link.note_credit_stall(after_pkt, t);
                 return Err(t);
             }
-            None => panic!("zero-credit link"),
+            super::link::CreditAvail::Unknown => {
+                // Every in-flight credit is an unretired placeholder:
+                // no timed retirement to wait on, so re-probe after a
+                // bounded link-determined interval (never a Tick::MAX
+                // park, which would strand the request and poison the
+                // credit_wait histogram).
+                let t = credit_link.reprobe_at(after_pkt);
+                credit_link.note_credit_stall(after_pkt, t);
+                return Err(t);
+            }
         }
         let tag = self.next_tag;
         self.next_tag = self.next_tag.wrapping_add(1);
@@ -309,6 +318,35 @@ mod tests {
             r.packetize_and_send(&mut f, done, &pkt(MemCmd::ReadReq), 0);
         assert!(retry.is_ok());
         assert_eq!(f.links[0].stats.credit_stalls.get(), 1);
+    }
+
+    #[test]
+    fn unretired_credit_pool_yields_bounded_retry() {
+        // The only credit is held by a request whose response has not
+        // been timed yet (placeholder unretired): the retry tick must
+        // be a bounded re-probe, not a Tick::MAX park, and the
+        // credit_wait histogram must not swallow a sentinel sample.
+        let mut cfg = SimConfig::default().cxl;
+        cfg.credits = 1;
+        let mut r = CxlRootComplex::new(&cfg);
+        let mut f = Fabric::new(&cfg);
+        r.set_hdm_range(0, 4 << 30);
+        r.packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 0)
+            .unwrap();
+        let retry = r
+            .packetize_and_send(&mut f, 0, &pkt(MemCmd::ReadReq), 0)
+            .unwrap_err();
+        assert!(
+            retry < ns_to_ticks(1_000.0),
+            "bounded re-probe expected, got {retry}"
+        );
+        let cw = &f.links[0].stats.credit_wait;
+        assert_eq!(cw.count(), 1);
+        assert!(
+            cw.stats.max < ns_to_ticks(1_000.0) as f64,
+            "credit_wait poisoned: {}",
+            cw.stats.max
+        );
     }
 
     #[test]

@@ -327,6 +327,15 @@ impl GuestOs {
                     event::LD_BOUND => {
                         self.hot_add(p, blk, ld, &mut changes)?
                     }
+                    event::POLICY_DECISION => {
+                        // Informational decision-log record from a
+                        // telemetry-driven FM policy: log it like a
+                        // kernel would and keep draining.
+                        self.boot_log.push(format!(
+                            "cxl: fm policy decision — LD {ld} selected \
+                             for re-binding"
+                        ));
+                    }
                     other => self.boot_log.push(format!(
                         "cxl: unknown event action {other} ignored"
                     )),

@@ -124,11 +124,21 @@ pub struct PageAlloc {
     /// Interleave cursor state per policy instance is the caller's; the
     /// allocator tracks per-node allocation counters for stats.
     pub allocated: Vec<u64>,
+    /// Pages the policy's chosen node could not supply (exhausted or
+    /// offline) that landed on a fallback node instead — the guest-side
+    /// memory-pressure signal the FM's `capacity_rebalance` policy
+    /// samples (dumped as `sys.numa_fallback_allocs`).
+    pub fallback_allocs: u64,
 }
 
 impl PageAlloc {
     pub fn new(page: u64) -> Self {
-        PageAlloc { nodes: Vec::new(), page, allocated: Vec::new() }
+        PageAlloc {
+            nodes: Vec::new(),
+            page,
+            allocated: Vec::new(),
+            fallback_allocs: 0,
+        }
     }
 
     pub fn add_node(&mut self, node: NumaNode) {
@@ -169,6 +179,40 @@ impl PageAlloc {
         got
     }
 
+    /// Allocate off-policy after `home` could not supply the page.
+    /// Scan order is nearest first, like a real NUMA distance table —
+    /// CPU (DRAM) nodes before CPU-less zNUMA (CXL) nodes, ids
+    /// ascending within each class, the home node excluded (it was
+    /// just probed). Two inline passes: this runs once per spilled
+    /// page, so no order list is materialized.
+    fn alloc_fallback(&mut self, home: u32) -> Option<u64> {
+        for want_cpus in [true, false] {
+            for id in 0..self.nodes.len() as u32 {
+                if id == home
+                    || self.nodes[id as usize].has_cpus != want_cpus
+                {
+                    continue;
+                }
+                if let Some(p) = self.alloc_on(id) {
+                    self.fallback_allocs += 1;
+                    return Some(p);
+                }
+            }
+        }
+        None
+    }
+
+    /// The scan order [`PageAlloc::alloc_fallback`] probes (exposed
+    /// for tests: DRAM class first, home excluded).
+    #[cfg(test)]
+    fn fallback_order(&self, home: u32) -> Vec<u32> {
+        let mut ids: Vec<u32> = (0..self.nodes.len() as u32)
+            .filter(|&id| id != home)
+            .collect();
+        ids.sort_by_key(|&id| (!self.nodes[id as usize].has_cpus, id));
+        ids
+    }
+
     /// Allocate one page under `policy`; `seq` is the caller's page
     /// sequence number (drives interleave round-robin).
     pub fn alloc_page(
@@ -181,9 +225,7 @@ impl PageAlloc {
                 if let Some(p) = self.alloc_on(*home) {
                     return Ok(p);
                 }
-                // Fallback: first online node with space.
-                (0..self.nodes.len() as u32)
-                    .find_map(|id| self.alloc_on(id))
+                self.alloc_fallback(*home)
             }
             MemPolicy::Bind { nodes } => nodes
                 .iter()
@@ -202,8 +244,7 @@ impl PageAlloc {
                 }
                 match self.alloc_on(chosen) {
                     Some(p) => return Ok(p),
-                    None => (0..self.nodes.len() as u32)
-                        .find_map(|id| self.alloc_on(id)),
+                    None => self.alloc_fallback(chosen),
                 }
             }
         };
@@ -292,6 +333,42 @@ mod tests {
             }
         }
         assert_eq!(on1, 44);
+    }
+
+    #[test]
+    fn fallback_is_nearest_first_and_skips_home() {
+        // Three nodes, deliberately ordered so id order and distance
+        // order disagree: node 0 is CPU-less (CXL), node 1 has CPUs
+        // (DRAM), node 2 is CPU-less (CXL). 4 pages each.
+        let mut pa = PageAlloc::new(4096);
+        pa.add_node(NumaNode::new(0, 8 << 30, 4 * 4096, false));
+        pa.add_node(NumaNode::new(1, 0, 4 * 4096, true));
+        pa.add_node(NumaNode::new(2, 12 << 30, 4 * 4096, false));
+        for id in 0..3 {
+            pa.online(id);
+        }
+        let pol = MemPolicy::Preferred { node: 2 };
+        // Fill the preferred node, then keep allocating: the fallback
+        // must land on the DRAM node (1) first even though the far
+        // zNUMA node (0) has the lower id, and only then on node 0.
+        for seq in 0..4u64 {
+            pa.alloc_page(&pol, seq).unwrap();
+        }
+        assert_eq!(pa.fallback_allocs, 0);
+        let p = pa.alloc_page(&pol, 4).unwrap();
+        assert_eq!(pa.node_of_addr(p), Some(1), "DRAM before far zNUMA");
+        assert_eq!(pa.fallback_allocs, 1);
+        for seq in 5..8u64 {
+            pa.alloc_page(&pol, seq).unwrap();
+        }
+        assert_eq!(pa.allocated, vec![0, 4, 4], "node 0 untouched so far");
+        let p = pa.alloc_page(&pol, 8).unwrap();
+        assert_eq!(pa.node_of_addr(p), Some(0), "far zNUMA is last resort");
+        assert_eq!(pa.fallback_allocs, 5);
+        // The exhausted home node is skipped by the scan (order lists
+        // every other node exactly once, DRAM class first).
+        assert_eq!(pa.fallback_order(2), vec![1, 0]);
+        assert_eq!(pa.fallback_order(0), vec![1, 2]);
     }
 
     #[test]

@@ -67,6 +67,15 @@ pub(crate) enum Ev {
     /// host, drives the shared device's mailbox, notifies another), so
     /// it cannot be handled from within a single [`Host`].
     Fm(u32),
+    /// Telemetry-policy sampling epoch (`[fm] policy`). Machine-level
+    /// like [`Ev::Fm`]: the policy reads every host's and LD's load
+    /// and may move LDs between hosts.
+    FmEpoch,
+    /// A policy-decided LD move (`devN.ldK`: host `from` -> host `to`)
+    /// re-probing its quiesce gate. Machine-level like [`Ev::Fm`];
+    /// `from` pins the donor the decision was made for, so a deferred
+    /// move is dropped as stale if ownership changed in the meantime.
+    FmMove { dev: u8, ld: u8, from: u8, to: u8 },
 }
 
 /// The unified queue's event type: `(host id, event)`.
@@ -176,13 +185,14 @@ impl Host {
         window_hosts: &[usize],
     ) -> Result<Host> {
         let mut mem = PhysMem::new();
-        // With a runtime FM schedule, firmware publishes EVERY window
-        // to every host (the hot-plug layout: one CFMWS + SRAT hotplug
-        // domain per logical device, still at per-host disjoint bases);
-        // the guest onlines only the LDs bound to it and keeps the rest
-        // as its hot-add pool. Without a schedule, only this host's
-        // bound windows are described — the PR-3 static layout.
-        let my_defs: Vec<usize> = if cfg.fm_events.is_empty() {
+        // With runtime FM dynamics (an `[fm] events` schedule or an
+        // `[fm] policy`), firmware publishes EVERY window to every host
+        // (the hot-plug layout: one CFMWS + SRAT hotplug domain per
+        // logical device, still at per-host disjoint bases); the guest
+        // onlines only the LDs bound to it and keeps the rest as its
+        // hot-add pool. Otherwise only this host's bound windows are
+        // described — the PR-3 static layout.
+        let my_defs: Vec<usize> = if !cfg.fm_dynamic() {
             window_hosts
                 .iter()
                 .enumerate()
@@ -976,10 +986,18 @@ impl Host {
             Ev::MshrRetry { core, pa, is_write, req } => {
                 self.access_with_req(fab, q, core, pa, is_write, req, t);
             }
-            Ev::Fm(_) => {
+            Ev::Fm(_) | Ev::FmEpoch | Ev::FmMove { .. } => {
                 unreachable!("FM events are intercepted by Machine::run")
             }
         }
+    }
+
+    /// Every workload-carrying core on this host has retired its last
+    /// op (vacuously true with no workloads attached). The policy
+    /// engine stops re-scheduling its sampling epoch once every host
+    /// is done, so the event queue can drain.
+    pub(crate) fn all_done(&self) -> bool {
+        (0..self.workloads.len()).all(|c| self.cores[c].done)
     }
 
     /// Quiesce check for FM-driven hot-remove: is any memory fetch to
@@ -1080,6 +1098,17 @@ impl Host {
         d.counter(
             &format!("{prefix}sys.writebacks_unmapped"),
             &self.stats.writebacks_unmapped,
+        );
+        // Guest-side capacity-pressure signal (pages that spilled off
+        // their policy node); 0 until the guest boots.
+        let fallback = self
+            .guest
+            .as_ref()
+            .map(|g| g.alloc.fallback_allocs)
+            .unwrap_or(0);
+        d.push(
+            &format!("{prefix}sys.numa_fallback_allocs"),
+            fallback as f64,
         );
     }
 }

@@ -21,11 +21,20 @@
 //! doorbell -> guest offline/online through the unmodified driver path
 //! -> mailbox `UNBIND_LD`/`BIND_LD` -> RC routing update), so elastic
 //! pooling runs inside one deterministic event order.
+//!
+//! An `[fm] policy` closes the loop instead: machine-level
+//! `Ev::FmEpoch` entries fire on a fixed cadence, the
+//! [`crate::cxl::fm_policy::FmPolicyEngine`] differentiates per-host /
+//! per-LD load and decides moves itself, and each decided move runs
+//! through exactly the scripted flow above (deferred moves re-probe as
+//! `Ev::FmMove`). Same queue, same `(tick, seq)` order — policy-driven
+//! runs stay bit-deterministic.
 
 use anyhow::{Context, Result};
 
 use crate::bios;
 use crate::config::{FmOp, InterleaveArith, LdRef, SimConfig};
+use crate::cxl::fm_policy::{FmPolicyEngine, HostLoad, LdState};
 use crate::cxl::mailbox::{event, retcode, EventRecord, UNBOUND};
 use crate::cxl::{Fabric, HdmWindow};
 use crate::guestos::{GuestOs, MemChange, MemPolicy, ProgModel};
@@ -78,6 +87,21 @@ pub struct Machine {
     /// up once the unbind was refused — refusal is terminal for the
     /// run, so retrying would never terminate.
     fm_refused: std::collections::BTreeSet<(usize, u16)>,
+    /// Telemetry-driven FM policy engine (`[fm] policy`): samples
+    /// per-host/per-LD load on `Ev::FmEpoch` ticks and decides
+    /// UNBIND/BIND moves, executed through the same flow as scripted
+    /// `Ev::Fm` events. `None` without a policy.
+    fm_policy: Option<FmPolicyEngine>,
+    /// Policy moves currently parked in quiesce deferral (an
+    /// `Ev::FmMove` re-probe chain is in flight for each). Epochs skip
+    /// re-deciding these so one real quiesce wait spawns one chain —
+    /// not one per epoch — keeping `fm.policy.deferrals` /
+    /// `sys.fm_quiesce_retries` honest.
+    fm_moves_parked: std::collections::BTreeSet<(usize, u16)>,
+    /// `cfg.window_keys()` snapshot (fixed after validation), so the
+    /// per-epoch telemetry sweep and `def_window` lookups don't
+    /// rebuild the key list on every call.
+    window_keys: Vec<LdRef>,
 }
 
 /// Re-probe interval while an FM unbind waits for in-flight requests to
@@ -118,6 +142,11 @@ impl Machine {
             next_base = host.bios.next_free_base;
             hosts.push(host);
         }
+        let fm_policy = cfg
+            .fm_policy
+            .as_ref()
+            .map(|p| FmPolicyEngine::new(p, cfg.hosts));
+        let window_keys = cfg.window_keys();
         Ok(Machine {
             cfg,
             hosts,
@@ -125,6 +154,9 @@ impl Machine {
             queue: EventQueue::new(),
             fm_scheduled: false,
             fm_refused: Default::default(),
+            fm_policy,
+            fm_moves_parked: Default::default(),
+            window_keys,
         })
     }
 
@@ -232,24 +264,60 @@ impl Machine {
     /// `max_ticks`. FM events from the `[fm] events` schedule fire at
     /// their simulated timestamps, interleaved with workload events.
     pub fn run(&mut self, max_ticks: Option<Tick>) -> RunSummary {
-        if !self.fm_scheduled && !self.cfg.fm_events.is_empty() {
+        if !self.fm_scheduled {
             self.fm_scheduled = true;
             for i in self.cfg.fm_events_in_time_order() {
                 let at = ns_to_ticks(self.cfg.fm_events[i].at_ns)
                     .max(self.queue.now());
                 self.queue.schedule_at(at, (0, Ev::Fm(i as u32)));
             }
+            // A policy samples on its own epoch cadence; arm the first
+            // tick only if some workload is actually going to run
+            // (epochs re-arm themselves until every host drains).
+            if let Some(eng) = &self.fm_policy {
+                if self.hosts.iter().any(|h| !h.all_done()) {
+                    let at = self.queue.now() + eng.epoch_ticks();
+                    self.queue.schedule_at(at, (0, Ev::FmEpoch));
+                }
+            }
         }
         while let Some((t, (h, ev))) = self.queue.pop() {
             crate::util::logger::set_tick(t);
             if let Some(m) = max_ticks {
                 if t > m {
+                    // Put the popped event back for a resumed `run`:
+                    // dropping it would silently kill self-re-arming
+                    // chains (the policy's FmEpoch ticks) and lose
+                    // scheduled FM actions.
+                    self.queue.schedule_at(t, (h, ev));
                     break;
                 }
             }
-            if let Ev::Fm(idx) = ev {
-                self.handle_fm_event(idx as usize, t);
-                continue;
+            match ev {
+                Ev::Fm(idx) => {
+                    self.handle_fm_event(idx as usize, t);
+                    continue;
+                }
+                Ev::FmEpoch => {
+                    self.handle_policy_epoch(t);
+                    continue;
+                }
+                Ev::FmMove { dev, ld, from, to } => {
+                    // A quiesce-deferred policy move re-probing.
+                    let Some(mut eng) = self.fm_policy.take() else {
+                        continue;
+                    };
+                    self.execute_policy_move(
+                        &mut eng,
+                        LdRef { dev: dev as usize, ld: ld as u16 },
+                        from as usize,
+                        to as usize,
+                        t,
+                    );
+                    self.fm_policy = Some(eng);
+                    continue;
+                }
+                _ => {}
             }
             self.hosts[h as usize].dispatch(
                 &mut self.fabric,
@@ -267,8 +335,7 @@ impl Machine {
     /// host-physical window host `h`'s firmware published for it
     /// (present for every def in the hot-plug layout).
     fn def_window(&self, h: usize, r: LdRef) -> Option<(usize, u64, u64)> {
-        let def_idx =
-            self.cfg.window_keys().iter().position(|k| *k == r)?;
+        let def_idx = self.window_keys.iter().position(|k| *k == r)?;
         let bios = &self.hosts[h].bios;
         let pos =
             bios.cxl_window_defs.iter().position(|&d| d == def_idx)?;
@@ -315,22 +382,13 @@ impl Machine {
                         action: event::UNBIND_REQUEST,
                     },
                 );
-                let changes = self.notify_host(h);
-                let offlined = changes.iter().any(
-                    |c| matches!(c, MemChange::Offlined { base: b, .. } if *b == base),
-                );
-                if offlined {
-                    let code = self.fabric.fm_unbind(ld.dev, ld.ld);
-                    debug_assert_eq!(code, retcode::SUCCESS);
-                    self.hosts[h].rc.remove_window(base);
-                    self.hosts[h].stats.mem_offline_events.inc();
+                if self.unbind_flow(ld, h, base) {
                     self.fm_refused.remove(&(ld.dev, ld.ld));
                     log::info!("fm: {ld} unbound from host{h}");
                 } else {
                     // The guest refused (pages in use): ownership is
                     // unchanged and the LD stays online — exactly what
                     // a failed `daxctl offline-memory` leaves behind.
-                    self.hosts[h].stats.mem_offline_refused.inc();
                     self.fm_refused.insert((ld.dev, ld.ld));
                     log::warn!("fm: host{h} refused to release {ld}");
                 }
@@ -359,25 +417,210 @@ impl Machine {
                     );
                     return;
                 }
-                self.fabric.devices[ld.dev].note_rebind(ld.ld as usize);
-                self.fabric.post_fm_event(
-                    ld.dev,
-                    EventRecord {
-                        host: host as u16,
-                        ld: ld.ld,
-                        action: event::LD_BOUND,
-                    },
-                );
-                let changes = self.notify_host(host);
-                for c in changes {
-                    if let MemChange::Onlined { base, size, .. } = c {
-                        self.mirror_rc_window(host, ld, base, size);
-                        self.hosts[host].stats.mem_online_events.inc();
-                        log::info!("fm: {ld} bound to host{host}");
-                    }
-                }
+                self.bind_flow(ld, host);
+                log::info!("fm: {ld} bound to host{host}");
             }
         }
+    }
+
+    /// Shared unbind flow, used by scripted events and policy moves
+    /// alike (the UNBIND_REQUEST doorbell record is already posted):
+    /// notify the owning guest, and if it offlined the window, drive
+    /// the mailbox `UNBIND_LD`, drop the RC routing window and count
+    /// the hot-remove. Returns whether the LD was actually released —
+    /// `false` means the guest refused (pages in use,
+    /// `sys.mem_offline_refused`) and ownership is unchanged.
+    fn unbind_flow(&mut self, r: LdRef, from: usize, base: u64) -> bool {
+        let changes = self.notify_host(from);
+        let offlined = changes.iter().any(
+            |c| matches!(c, MemChange::Offlined { base: b, .. } if *b == base),
+        );
+        if !offlined {
+            self.hosts[from].stats.mem_offline_refused.inc();
+            return false;
+        }
+        let code = self.fabric.fm_unbind(r.dev, r.ld);
+        debug_assert_eq!(code, retcode::SUCCESS);
+        self.hosts[from].rc.remove_window(base);
+        self.hosts[from].stats.mem_offline_events.inc();
+        true
+    }
+
+    /// Shared bind flow, used by scripted events and policy moves
+    /// alike (the mailbox `BIND_LD` already succeeded): count the
+    /// re-bind, ring the gaining host's Event-Log doorbell, and mirror
+    /// every window its guest onlines into its RC decoder.
+    fn bind_flow(&mut self, r: LdRef, to: usize) {
+        self.fabric.devices[r.dev].note_rebind(r.ld as usize);
+        self.fabric.post_fm_event(
+            r.dev,
+            EventRecord {
+                host: to as u16,
+                ld: r.ld,
+                action: event::LD_BOUND,
+            },
+        );
+        let changes = self.notify_host(to);
+        for c in changes {
+            if let MemChange::Onlined { base, size, .. } = c {
+                self.mirror_rc_window(to, r, base, size);
+                self.hosts[to].stats.mem_online_events.inc();
+            }
+        }
+    }
+
+    /// One `[fm] policy` sampling epoch at tick `t`: read every host's
+    /// and LD's load, let the engine decide at most one move, execute
+    /// it through the scripted path's quiesce/doorbell flow, and re-arm
+    /// the next epoch while any workload still runs (so the queue can
+    /// drain once every host finishes).
+    fn handle_policy_epoch(&mut self, t: Tick) {
+        let Some(mut eng) = self.fm_policy.take() else { return };
+        let (hosts, lds) = self.sample_telemetry();
+        if let Some(mv) = eng.epoch(t, &hosts, &lds) {
+            // A move already parked in quiesce deferral keeps its one
+            // re-probe chain; spawning another per epoch would only
+            // multiply the deferral counters.
+            if !self.fm_moves_parked.contains(&(mv.ld.dev, mv.ld.ld)) {
+                self.execute_policy_move(
+                    &mut eng, mv.ld, mv.from, mv.to, t,
+                );
+            }
+        }
+        let next = t + eng.epoch_ticks();
+        self.fm_policy = Some(eng);
+        if self.hosts.iter().any(|h| !h.all_done()) {
+            self.queue.schedule_at(next, (0, Ev::FmEpoch));
+        }
+    }
+
+    /// Sample the telemetry the policy engine consumes — the same
+    /// deterministic machine state the `host{H}.sys.*` and
+    /// `cxl.devN.ldK.*` stat keys report: per-host cumulative load
+    /// counters, and per-LD ownership + pages resident on the owning
+    /// guest's zNUMA node.
+    fn sample_telemetry(&self) -> (Vec<HostLoad>, Vec<LdState>) {
+        let hosts: Vec<HostLoad> = self
+            .hosts
+            .iter()
+            .map(|h| HostLoad {
+                fallback_allocs: h
+                    .guest
+                    .as_ref()
+                    .map(|g| g.alloc.fallback_allocs)
+                    .unwrap_or(0),
+                cxl_traffic: h.stats.cxl_reads.get()
+                    + h.stats.writebacks_cxl.get(),
+            })
+            .collect();
+        let lds: Vec<LdState> = self
+            .window_keys
+            .iter()
+            .map(|&r| {
+                let owner = self.fabric.ld_owner(r.dev, r.ld);
+                let resident_pages = if owner != UNBOUND
+                    && (owner as usize) < self.hosts.len()
+                {
+                    let h = owner as usize;
+                    self.def_window(h, r)
+                        .and_then(|(_, base, _)| {
+                            let g = self.hosts[h].guest.as_ref()?;
+                            let node = g.alloc.node_of_addr(base)?;
+                            Some(g.alloc.pages_in_use(node))
+                        })
+                        .unwrap_or(0)
+                } else {
+                    0
+                };
+                LdState { ld: r, owner, resident_pages }
+            })
+            .collect();
+        (hosts, lds)
+    }
+
+    /// Execute (or defer) one policy-decided move (`r`: host `from` ->
+    /// host `to`) at tick `t`: the same cross-layer flow as a scripted
+    /// unbind + bind pair, prefixed with a `POLICY_DECISION` Event-Log
+    /// record so the decision trail is drainable via
+    /// `GET_EVENT_RECORDS` like the actions themselves. Ownership is
+    /// re-read and compared against the decided donor, so a
+    /// quiesce-deferred move that the world outran (the LD already
+    /// moved elsewhere) is dropped as stale instead of yanking it from
+    /// its new owner behind the hysteresis gates' back.
+    fn execute_policy_move(
+        &mut self,
+        eng: &mut FmPolicyEngine,
+        r: LdRef,
+        from: usize,
+        to: usize,
+        t: Tick,
+    ) {
+        // Whatever happens below, this attempt owns the LD's (single)
+        // re-probe chain until it either parks again or resolves.
+        self.fm_moves_parked.remove(&(r.dev, r.ld));
+        let owner = self.fabric.ld_owner(r.dev, r.ld);
+        if owner as usize != from
+            || from == to
+            || to >= self.hosts.len()
+        {
+            return; // stale decision (ownership moved while deferred)
+        }
+        let Some((_, base, size)) = self.def_window(from, r) else {
+            log::warn!("fm-policy: host{from} has no window for {r}");
+            return;
+        };
+        // Quiesce exactly like the scripted path: in-flight fetches to
+        // the departing window drain first, re-probed on the same
+        // fixed deterministic cadence.
+        if self.hosts[from].has_inflight_in(base, size) {
+            self.hosts[from].stats.fm_quiesce_retries.inc();
+            eng.note_deferred();
+            self.fm_moves_parked.insert((r.dev, r.ld));
+            let at = t + ns_to_ticks(FM_QUIESCE_RETRY_NS);
+            self.queue.schedule_at(
+                at,
+                (
+                    from as u8,
+                    Ev::FmMove {
+                        dev: r.dev as u8,
+                        ld: r.ld as u8,
+                        from: from as u8,
+                        to: to as u8,
+                    },
+                ),
+            );
+            return;
+        }
+        // Decision log, then the unbind doorbell: the owning guest
+        // drains both records in one GET_EVENT_RECORDS pass.
+        self.fabric.post_fm_event(
+            r.dev,
+            EventRecord {
+                host: owner,
+                ld: r.ld,
+                action: event::POLICY_DECISION,
+            },
+        );
+        self.fabric.post_fm_event(
+            r.dev,
+            EventRecord {
+                host: owner,
+                ld: r.ld,
+                action: event::UNBIND_REQUEST,
+            },
+        );
+        if !self.unbind_flow(r, from, base) {
+            // Pages in use: the guest kept the node. Back off
+            // exponentially before asking for this LD again.
+            eng.note_refused(r, t);
+            log::warn!("fm-policy: host{from} refused to release {r}");
+            return;
+        }
+        let code = self.fabric.fm_bind(r.dev, r.ld, to as u16);
+        debug_assert_eq!(code, retcode::SUCCESS);
+        self.bind_flow(r, to);
+        eng.note_moved(r, from, to, t);
+        log::info!("fm-policy: moved {r} host{from} -> host{to}");
     }
 
     /// Ring host `h`'s event doorbell: run the guest's FM-event handler
@@ -558,6 +801,9 @@ impl Machine {
             host.dump(&prefix, &mut d);
         }
         self.fabric.dump(&mut d);
+        if let Some(eng) = &self.fm_policy {
+            eng.dump(&mut d);
+        }
         d.push("sys.events", self.queue.processed() as f64);
         d
     }
@@ -999,6 +1245,45 @@ mod tests {
             let issued = c.stats.loads.get() + c.stats.stores.get();
             assert_eq!(issued, c.stats.mem_latency.count());
         }
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn credit_starved_burst_drains() {
+        // One M2S credit for an O3 core's whole miss burst: requests
+        // must park on credit stalls and still all drain — no retry may
+        // ever be scheduled at a sentinel tick, and the credit_wait
+        // histogram must stay within the run's bounds.
+        let mut cfg = small_cfg();
+        cfg.cxl.credits = 1;
+        let mut m = booted(cfg);
+        let wl = Stream::new(StreamKernel::Triad, 8192, 1);
+        m.attach_workloads(
+            vec![Box::new(wl)],
+            &MemPolicy::Bind { nodes: vec![1] },
+        )
+        .unwrap();
+        let s = m.run(None);
+        assert!(s.ticks > 0 && s.cxl_accesses > 0);
+        for (i, c) in m.cores.iter().enumerate() {
+            assert!(c.done, "core {i} parked forever");
+            assert_eq!(c.outstanding(), 0, "core {i} leaked requests");
+        }
+        let link = &m.fabric.links[0].stats;
+        assert!(link.credit_stalls.get() > 0, "burst must stall");
+        assert_eq!(link.credit_wait.count(), link.credit_stalls.get());
+        assert!(
+            link.credit_wait.stats.max <= s.ticks as f64,
+            "credit_wait poisoned: {} > run {}",
+            link.credit_wait.stats.max,
+            s.ticks
+        );
+        // The contended wire's occupancy histogram reaches the dump.
+        let d = m.dump_stats();
+        assert!(
+            d.get("cxl.link0.occupancy_wait.count").unwrap() > 0.0,
+            "occupancy_wait must be emitted"
+        );
         m.verify().unwrap();
     }
 

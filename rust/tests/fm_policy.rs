@@ -1,0 +1,211 @@
+//! Telemetry-driven FM policies (`[fm] policy`): closed-loop elastic
+//! pooling with ZERO hand-written `[fm] events`. The FM samples
+//! per-host/per-LD load each epoch and moves logical devices toward
+//! demand through the same quiesce → doorbell → hot-remove/add flow the
+//! scripted path uses — bit-deterministically.
+
+use cxlramsim::config::{
+    CxlDevOverride, FmPolicyConfig, FmPolicyKind, LdRef, SimConfig,
+};
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::system::Machine;
+use cxlramsim::workloads::{Stream, StreamKernel};
+
+/// Two hosts over one switched 2-LD MLD, host 0 booting with both LDs
+/// — the rebind.rs topology, but with a policy instead of a schedule.
+fn policy_cfg(kind: FmPolicyKind) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 512 << 20; // 2 x 256 MiB LD slices
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(2), ..Default::default() }];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }, LdRef { dev: 0, ld: 1 }],
+        vec![],
+    ];
+    cfg.fm_policy = Some(FmPolicyConfig::new(kind));
+    cfg.seed = 7;
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Host 0 streams on its first LD (node 1, keeping LD 1 idle); host 1
+/// prefers the offline node 2, so every page it touches spills to DRAM
+/// — the capacity-pressure signal the policy feeds on.
+fn attach_capacity_workloads(m: &mut Machine) {
+    let wl0 = Stream::new(StreamKernel::Copy, 8192, 1);
+    m.attach_workloads_to(
+        0,
+        vec![Box::new(wl0)],
+        &MemPolicy::Bind { nodes: vec![1] },
+    )
+    .unwrap();
+    let wl1 = Stream::new(StreamKernel::Triad, 32768, 1);
+    m.attach_workloads_to(
+        1,
+        vec![Box::new(wl1)],
+        &MemPolicy::Preferred { node: 2 },
+    )
+    .unwrap();
+}
+
+#[test]
+fn capacity_policy_migrates_idle_ld_toward_pressure() {
+    let cfg = policy_cfg(FmPolicyKind::CapacityRebalance);
+    assert!(cfg.fm_events.is_empty(), "no hand-written schedule");
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    assert_eq!(
+        m.fabric.devices[0].mailbox.state.ld_owner,
+        vec![0, 0],
+        "boot binding: host 0 holds both LDs"
+    );
+    attach_capacity_workloads(&mut m);
+    let s = m.run(None);
+    assert!(s.ticks > 0);
+    m.verify().unwrap();
+
+    // The FM decided the move on its own: LD 1 now belongs to host 1.
+    assert_eq!(m.fabric.devices[0].mailbox.state.ld_owner, vec![0, 1]);
+
+    let d = m.dump_stats();
+    assert!(d.get("fm.policy.epochs").unwrap() > 0.0);
+    assert_eq!(d.get("fm.policy.decisions"), Some(1.0));
+    assert_eq!(d.get("fm.policy.refusals"), Some(0.0));
+    assert!(
+        d.get("fm.policy.holds").unwrap() >= 1.0,
+        "min-residency must hold the first pressured epochs back"
+    );
+    assert_eq!(d.get("cxl.dev0.ld1.rebinds"), Some(1.0));
+    assert_eq!(d.get("cxl.dev0.ld0.rebinds"), Some(0.0));
+    assert_eq!(d.get("host0.sys.mem_offline_events"), Some(1.0));
+    assert_eq!(d.get("host1.sys.mem_online_events"), Some(1.0));
+    assert!(
+        d.get("host1.sys.numa_fallback_allocs").unwrap() > 0.0,
+        "the pressure signal itself must be dumped"
+    );
+    assert!(
+        d.get("cxl.dev0.ld1.host1_reads").unwrap_or(0.0) > 0.0,
+        "host 1 must observe its new capacity mid-run"
+    );
+
+    // The decision trail went through the Event Log: the losing guest
+    // drained a POLICY_DECISION record ahead of the unbind request.
+    let g0 = m.hosts[0].guest.as_ref().unwrap();
+    assert!(g0.boot_log.iter().any(|l| l.contains("fm policy decision")));
+    assert!(g0.boot_log.iter().any(|l| l.contains("memory hot-remove")));
+    let g1 = m.hosts[1].guest.as_ref().unwrap();
+    assert!(g1.boot_log.iter().any(|l| l.contains("memory hot-add")));
+
+    // No leaked requests anywhere.
+    for h in 0..2 {
+        for (i, c) in m.hosts[h].cores.iter().enumerate() {
+            assert!(c.done, "host {h} core {i} never finished");
+            assert_eq!(c.outstanding(), 0, "host {h} core {i} leaked");
+        }
+    }
+}
+
+#[test]
+fn policy_runs_are_bitwise_deterministic() {
+    // Golden determinism for the closed loop, mirroring
+    // rebind_runs_are_bitwise_deterministic: same config twice ->
+    // identical tick count, event count and FULL stat dump.
+    let go = || {
+        let mut m =
+            Machine::new(policy_cfg(FmPolicyKind::CapacityRebalance))
+                .unwrap();
+        m.boot(ProgModel::Znuma).unwrap();
+        attach_capacity_workloads(&mut m);
+        let s = m.run(None);
+        m.verify().unwrap();
+        (s.ticks, s.events, s.cxl_accesses, m.dump_stats().to_text())
+    };
+    let a = go();
+    let b = go();
+    assert_eq!(a.0, b.0, "ticks diverged");
+    assert_eq!(a.1, b.1, "event counts diverged");
+    assert_eq!(a.2, b.2, "cxl accesses diverged");
+    assert_eq!(a.3, b.3, "full stat dump diverged");
+    assert!(a.3.contains("fm.policy.decisions"));
+}
+
+#[test]
+fn bandwidth_policy_spreads_idle_capacity_toward_traffic() {
+    // Each host boots with one LD; host 0 runs on DRAM (its LD 0 stays
+    // idle) while host 1 hammers its LD 1 — the bandwidth-fairness
+    // policy hands host 0's idle LD to the traffic-heavy host.
+    let mut cfg = policy_cfg(FmPolicyKind::BandwidthFairness);
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }],
+        vec![LdRef { dev: 0, ld: 1 }],
+    ];
+    cfg.validate().unwrap();
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let wl0 = Stream::new(StreamKernel::Copy, 8192, 1);
+    m.attach_workloads_to(
+        0,
+        vec![Box::new(wl0)],
+        &MemPolicy::Bind { nodes: vec![0] }, // DRAM only
+    )
+    .unwrap();
+    let wl1 = Stream::new(StreamKernel::Triad, 32768, 1);
+    m.attach_workloads_to(
+        1,
+        vec![Box::new(wl1)],
+        &MemPolicy::Bind { nodes: vec![2] }, // its own LD 1 node
+    )
+    .unwrap();
+    let s = m.run(None);
+    assert!(s.ticks > 0);
+    m.verify().unwrap();
+    assert_eq!(
+        m.fabric.devices[0].mailbox.state.ld_owner,
+        vec![1, 1],
+        "idle LD 0 must migrate to the traffic-heavy host"
+    );
+    let d = m.dump_stats();
+    assert_eq!(d.get("cxl.dev0.ld0.rebinds"), Some(1.0));
+    assert!(d.get("fm.policy.decisions").unwrap() >= 1.0);
+}
+
+#[test]
+fn busy_lds_are_never_stolen() {
+    // Host 1 is pressured, but host 0 has pages resident on BOTH its
+    // LD nodes: the policy must leave ownership alone (idle-LD filter)
+    // rather than trigger guest refusals.
+    let mut m =
+        Machine::new(policy_cfg(FmPolicyKind::CapacityRebalance))
+            .unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    // Host 0 interleaves over BOTH its LD nodes — nothing is idle.
+    let wl0 = Stream::new(StreamKernel::Copy, 16384, 1);
+    m.attach_workloads_to(
+        0,
+        vec![Box::new(wl0)],
+        &MemPolicy::Interleave { weights: vec![(1, 1), (2, 1)] },
+    )
+    .unwrap();
+    let wl1 = Stream::new(StreamKernel::Triad, 16384, 1);
+    m.attach_workloads_to(
+        1,
+        vec![Box::new(wl1)],
+        &MemPolicy::Preferred { node: 2 },
+    )
+    .unwrap();
+    m.run(None);
+    m.verify().unwrap();
+    assert_eq!(
+        m.fabric.devices[0].mailbox.state.ld_owner,
+        vec![0, 0],
+        "busy LDs must stay put"
+    );
+    let d = m.dump_stats();
+    assert_eq!(d.get("fm.policy.decisions"), Some(0.0));
+    assert_eq!(d.get("fm.policy.refusals"), Some(0.0));
+    assert_eq!(d.get("host0.sys.mem_offline_events"), Some(0.0));
+}

@@ -10,8 +10,12 @@
 //! stripped) and looked up in the set of backtick patterns parsed out
 //! of docs/STATS.md.
 
-use cxlramsim::config::{CxlDevOverride, FmEventDef, LdRef, SimConfig};
+use cxlramsim::config::{
+    CxlDevOverride, FmEventDef, FmPolicyConfig, FmPolicyKind, LdRef,
+    SimConfig,
+};
 use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::stats::StatDump;
 use cxlramsim::system::Machine;
 use cxlramsim::workloads::{Stream, StreamKernel};
 
@@ -170,6 +174,14 @@ fn every_emitted_stat_key_is_documented() {
         assert!(d.get(probe).is_some(), "expected emitter missing: {probe}");
     }
 
+    assert_documented(&d, &documented);
+}
+
+/// Every emitted key must normalize to a documented pattern.
+fn assert_documented(
+    d: &StatDump,
+    documented: &std::collections::BTreeSet<String>,
+) {
     let mut undocumented = Vec::new();
     for (key, _) in &d.entries {
         let pat = normalize(key);
@@ -182,6 +194,66 @@ fn every_emitted_stat_key_is_documented() {
         "stat keys emitted but not documented in docs/STATS.md:\n  {}",
         undocumented.join("\n  ")
     );
+}
+
+#[test]
+fn policy_run_stat_keys_are_documented() {
+    // The `[fm] policy` closed loop emits the fm.policy.* family (and
+    // exercises occupancy_wait on contended links); its dump must also
+    // be fully covered by docs/STATS.md.
+    let md = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/docs/STATS.md"
+    ))
+    .expect("docs/STATS.md must exist");
+    let documented = documented_patterns(&md);
+
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(2), ..Default::default() }];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }, LdRef { dev: 0, ld: 1 }],
+        vec![],
+    ];
+    cfg.fm_policy =
+        Some(FmPolicyConfig::new(FmPolicyKind::CapacityRebalance));
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let wl0 = Stream::new(StreamKernel::Copy, 8192, 1);
+    m.attach_workloads_to(
+        0,
+        vec![Box::new(wl0)],
+        &MemPolicy::Bind { nodes: vec![1] },
+    )
+    .unwrap();
+    let wl1 = Stream::new(StreamKernel::Triad, 16384, 1);
+    m.attach_workloads_to(
+        1,
+        vec![Box::new(wl1)],
+        &MemPolicy::Preferred { node: 2 },
+    )
+    .unwrap();
+    m.run(None);
+    m.verify().unwrap();
+
+    let d = m.dump_stats();
+    for probe in [
+        "fm.policy.epochs",
+        "fm.policy.decisions",
+        "fm.policy.holds",
+        "host1.sys.numa_fallback_allocs",
+        "cxl.sw0.us_link.occupancy_wait.count",
+        "cxl.link0.occupancy_wait.p99",
+    ] {
+        assert!(d.get(probe).is_some(), "expected emitter missing: {probe}");
+    }
+    assert!(d.get("fm.policy.epochs").unwrap() > 0.0);
+    assert_documented(&d, &documented);
 }
 
 #[test]
