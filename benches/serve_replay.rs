@@ -1,0 +1,135 @@
+//! Trace-replay throughput + fidelity: the checked-in mini trace
+//! (`benches/data/serve_mini.cxlt`, a hand-sized serving-shaped event
+//! stream) replayed end to end, and a live `serve` run captured and
+//! replayed in-process to confirm the replay path reproduces the live
+//! machine stats bit-for-bit.
+//!
+//! Non-gating: CI runs it with `CXLRAMSIM_BENCH_QUICK=1` and uploads
+//! `BENCH_serve_replay.json` (written to the repo root) as an
+//! artifact alongside the sim_throughput trajectory.
+//!
+//! Run: `cargo bench --bench serve_replay`
+
+use cxlramsim::config::SimConfig;
+use cxlramsim::coordinator::attach_replay;
+use cxlramsim::guestos::ProgModel;
+use cxlramsim::system::Machine;
+use cxlramsim::trace::{EventTrace, Recorder};
+use cxlramsim::util::bench::BenchRunner;
+use cxlramsim::workloads::{Serve, ServeConfig, Workload};
+
+const MINI_TRACE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/benches/data/serve_mini.cxlt");
+
+/// Single host, DRAM + one expander: node 0 (DRAM) backs the trace's
+/// `local` arena, node 1 (CXL) its `bind:1` arena.
+fn replay_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 1;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 256 << 20;
+    cfg
+}
+
+fn replay_once(cfg: &SimConfig, t: &EventTrace) -> cxlramsim::stats::StatDump {
+    let mut m = Machine::new(cfg.clone()).expect("machine");
+    m.boot(ProgModel::Znuma).expect("boot");
+    attach_replay(&mut m, t).expect("attach replay");
+    m.run(None);
+    m.dump_stats()
+}
+
+fn main() {
+    let cfg = replay_cfg();
+    let t = EventTrace::load(std::path::Path::new(MINI_TRACE))
+        .expect("checked-in mini trace must load");
+    println!(
+        "serve_mini.cxlt: {} vmas, {} inits, {} events",
+        t.vmas.len(),
+        t.inits.len(),
+        t.len()
+    );
+
+    // Fidelity first: two replays of the same trace are bit-identical
+    // and stream every recorded op.
+    let a = replay_once(&cfg, &t);
+    let b = replay_once(&cfg, &t);
+    assert_eq!(
+        a.to_text(),
+        b.to_text(),
+        "trace replay must be bit-deterministic"
+    );
+    assert_eq!(
+        a.get("trace.replay_ops"),
+        Some(t.len() as f64),
+        "every recorded op must be replayed"
+    );
+
+    // Then the throughput headline.
+    let mut r = BenchRunner::new("serve_replay");
+    let s = r.bench("mini_trace_end_to_end", || {
+        std::hint::black_box(replay_once(&cfg, &t));
+    });
+    let events_per_sec = t.len() as f64 * 1e9 / s.median_ns;
+
+    // Capture-side check: record a live serve run, replay the capture,
+    // and require the machine-side stats to match exactly (the live
+    // run additionally reports `serve.*`, the replay `trace.*`).
+    let scfg = ServeConfig {
+        users: 64,
+        zipf_s: 1.1,
+        requests: 60,
+        kv_block: 256,
+        context_blocks: 2,
+        dram_slots: 8,
+        cxl_slots: 16,
+        decode_work: 16,
+    };
+    let rec = Recorder::new();
+    let mut m = Machine::new(cfg.clone()).expect("machine");
+    m.boot(ProgModel::Znuma).expect("boot");
+    let (hot, cold) =
+        m.hosts[0].guest.as_ref().expect("guest").alloc.tier_policies();
+    let wl: Box<dyn Workload> = Box::new(Serve::new(scfg, hot.clone(), cold, 7));
+    m.attach_workloads_to(0, vec![rec.wrap(0, 0, wl)], &hot)
+        .expect("attach");
+    m.run(None);
+    let live = m.dump_stats();
+    let captured = rec.take();
+    let replayed = replay_once(&cfg, &captured);
+    let machine_only = |d: &cxlramsim::stats::StatDump| -> Vec<(String, f64)> {
+        d.entries
+            .iter()
+            .filter(|(k, _)| {
+                !k.starts_with("serve.") && !k.starts_with("trace.")
+            })
+            .cloned()
+            .collect()
+    };
+    assert_eq!(
+        machine_only(&live),
+        machine_only(&replayed),
+        "replaying a captured serve run must reproduce the live stats"
+    );
+    println!(
+        "capture fidelity: {} captured events replayed, machine stats \
+         identical to the live run",
+        captured.len()
+    );
+    r.finish();
+
+    let json = format!(
+        "{{\"bench\":\"serve_replay\",\"config\":\"serve_mini.cxlt, 1 \
+         host, dram+cxl\",\"mini_events\":{},\"replay_median_ns\":{:.1},\
+         \"replay_events_per_sec\":{events_per_sec:.1},\
+         \"capture_replay_match\":1}}\n",
+        t.len(),
+        s.median_ns
+    );
+    if let Err(e) = std::fs::write("BENCH_serve_replay.json", &json) {
+        eprintln!("serve_replay: could not write BENCH file: {e}");
+    } else {
+        println!("wrote BENCH_serve_replay.json");
+    }
+}

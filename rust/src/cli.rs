@@ -18,9 +18,11 @@ use anyhow::{bail, Context, Result};
 use crate::config::SimConfig;
 use crate::guestos::{MemPolicy, ProgModel};
 use crate::system::Machine;
+use crate::trace::{EventTrace, Recorder};
 use crate::util::bench::Table;
 use crate::workloads::{
-    PointerChase, RandomAccess, Stream, StreamKernel, TieredKv, Workload,
+    PointerChase, RandomAccess, Replay, Serve, Stream, StreamKernel,
+    TieredKv, Workload,
 };
 
 #[derive(Debug, Default)]
@@ -30,6 +32,9 @@ pub struct Args {
     pub sets: Vec<String>,
     pub policy: String,
     pub workload: String,
+    /// `--workload` was given explicitly (it then beats `[workload]
+    /// kind` from the config file).
+    pub workload_explicit: bool,
     pub wss_mult: u64,
     pub prog_model: ProgModel,
     pub artifacts: String,
@@ -37,6 +42,8 @@ pub struct Args {
     /// Fabric-Manager event script: one `@<time> bind|unbind …` line
     /// per scheduled action (appended to any `[fm] events` from TOML).
     pub fm_script: Option<String>,
+    /// Capture the run's memory events into this v2 trace file.
+    pub trace_out: Option<String>,
 }
 
 impl Args {
@@ -67,7 +74,11 @@ impl Args {
                     a.sets.push(v);
                 }
                 "--policy" => a.policy = val(&mut i)?,
-                "--workload" => a.workload = val(&mut i)?,
+                "--workload" => {
+                    a.workload = val(&mut i)?;
+                    a.workload_explicit = true;
+                }
+                "--trace-out" => a.trace_out = Some(val(&mut i)?),
                 "--wss-mult" => {
                     a.wss_mult = val(&mut i)?.parse().context("--wss-mult")?
                 }
@@ -187,6 +198,61 @@ impl Args {
         };
         Ok(w)
     }
+
+    /// The workload kind this invocation runs: an explicit `--workload`
+    /// wins, else the config's `[workload] kind`, else the CLI default.
+    pub fn effective_workload(&self, cfg: &SimConfig) -> String {
+        if self.workload_explicit {
+            return self.workload.clone();
+        }
+        cfg.workload
+            .kind
+            .clone()
+            .unwrap_or_else(|| self.workload.clone())
+    }
+
+    /// Workloads to attach to host `h` of the booted machine `m`: one
+    /// per recorded core for replay, a single workload otherwise.
+    /// Serve gets its DRAM/CXL tier policies from the host's booted
+    /// NUMA topology, which is why this needs the machine.
+    pub fn make_workloads_for(
+        &self,
+        cfg: &SimConfig,
+        m: &Machine,
+        h: usize,
+    ) -> Result<Vec<Box<dyn Workload>>> {
+        match self.effective_workload(cfg).as_str() {
+            "serve" => {
+                let (hot, cold) = m.hosts[h]
+                    .guest
+                    .as_ref()
+                    .context("machine must boot before serve attaches")?
+                    .alloc
+                    .tier_policies();
+                // Per-host seed decorrelation keeps a multi-host fleet
+                // from issuing clone request streams (still fully
+                // deterministic for a given config seed).
+                let seed = cfg
+                    .seed
+                    .wrapping_add((h as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                Ok(vec![Box::new(Serve::new(
+                    cfg.workload.serve.clone(),
+                    hot,
+                    cold,
+                    seed,
+                ))])
+            }
+            "replay" => {
+                let path = cfg.workload.trace.as_ref().context(
+                    "workload.trace must name the trace to replay \
+                     (set [workload] trace = \"file.cxlt\")",
+                )?;
+                let t = EventTrace::load(std::path::Path::new(path))?;
+                Ok(Replay::for_host(&t, h))
+            }
+            _ => Ok(vec![self.make_workload(cfg)?]),
+        }
+    }
 }
 
 pub fn print_help() {
@@ -210,8 +276,14 @@ pub fn print_help() {
            --policy P             local | bind:N | preferred:N |\n\
                                   interleave:0=3,1=1\n\
            --workload W           stream-{{copy,scale,add,triad}} | random |\n\
-                                  chase | kv\n\
+                                  chase | kv | serve | replay\n\
+                                  (serve/replay read their parameters from\n\
+                                  the [workload] / [workload.serve] config\n\
+                                  sections)\n\
            --wss-mult N           working set = N x L2 size (default 4)\n\
+           --trace-out FILE       capture the run's memory events into a\n\
+                                  v2 .cxlt trace (replay it with\n\
+                                  [workload] kind = \"replay\")\n\
            --fm-script FILE       runtime Fabric-Manager schedule: one\n\
                                   '@<time> unbind devN.ldK' or\n\
                                   '@<time> bind devN.ldK hostH' per line\n\
@@ -276,10 +348,23 @@ pub fn cmd_run(args: &Args) -> Result<()> {
     // node ids are host-local), so a --hosts N run actually measures
     // the N-host contention scenario rather than idling hosts 1..N.
     let policy = args.mem_policy()?;
-    let name = args.make_workload(&cfg)?.name();
+    let recorder = args.trace_out.as_ref().map(|_| Recorder::new());
+    let mut name = String::from("idle");
     for h in 0..m.hosts.len() {
-        let wl = args.make_workload(&cfg)?;
-        m.attach_workloads_to(h, vec![wl], &policy).with_context(
+        let mut wls = args.make_workloads_for(&cfg, &m, h)?;
+        if h == 0 {
+            if let Some(w) = wls.first() {
+                name = w.name();
+            }
+        }
+        if let Some(rec) = &recorder {
+            wls = wls
+                .into_iter()
+                .enumerate()
+                .map(|(c, w)| rec.wrap(h, c, w))
+                .collect();
+        }
+        m.attach_workloads_to(h, wls, &policy).with_context(
             || {
                 format!(
                     "host {h}: attaching workload (the policy's NUMA \
@@ -322,6 +407,16 @@ pub fn cmd_run(args: &Args) -> Result<()> {
         m.verify().map_err(|e| anyhow::anyhow!(e))?;
         println!("functional verification: OK");
     }
+    if let (Some(rec), Some(path)) = (&recorder, &args.trace_out) {
+        let t = rec.take();
+        t.save(std::path::Path::new(path))?;
+        println!(
+            "trace: {} vmas, {} inits, {} events -> {path}",
+            t.vmas.len(),
+            t.inits.len(),
+            t.len()
+        );
+    }
     Ok(())
 }
 
@@ -343,13 +438,32 @@ pub fn cmd_stats(args: &Args) -> Result<()> {
     let mut m = Machine::new(cfg.clone())?;
     m.boot(args.prog_model)?;
     let policy = args.mem_policy()?;
+    let recorder = args.trace_out.as_ref().map(|_| Recorder::new());
     for h in 0..m.hosts.len() {
-        let wl = args.make_workload(&cfg)?;
-        m.attach_workloads_to(h, vec![wl], &policy)
+        let mut wls = args.make_workloads_for(&cfg, &m, h)?;
+        if let Some(rec) = &recorder {
+            wls = wls
+                .into_iter()
+                .enumerate()
+                .map(|(c, w)| rec.wrap(h, c, w))
+                .collect();
+        }
+        m.attach_workloads_to(h, wls, &policy)
             .with_context(|| format!("host {h}: attaching workload"))?;
     }
     m.run(None);
     print!("{}", m.dump_stats().to_text());
+    if let (Some(rec), Some(path)) = (&recorder, &args.trace_out) {
+        let t = rec.take();
+        t.save(std::path::Path::new(path))?;
+        // stderr: stdout stays a pure, diffable stat dump.
+        eprintln!(
+            "trace: {} vmas, {} inits, {} events -> {path}",
+            t.vmas.len(),
+            t.inits.len(),
+            t.len()
+        );
+    }
     Ok(())
 }
 
@@ -602,5 +716,29 @@ mod tests {
             let a = Args::parse(&sv(&["run", "--workload", w])).unwrap();
             assert!(a.make_workload(&cfg).is_ok(), "{w}");
         }
+    }
+
+    #[test]
+    fn config_workload_kind_vs_explicit_flag() {
+        let mut cfg = SimConfig::default();
+        cfg.workload.kind = Some("serve".into());
+        // No --workload: the config's kind wins.
+        let a = Args::parse(&sv(&["run"])).unwrap();
+        assert_eq!(a.effective_workload(&cfg), "serve");
+        // Explicit --workload beats the config.
+        let a = Args::parse(&sv(&["run", "--workload", "chase"])).unwrap();
+        assert!(a.workload_explicit);
+        assert_eq!(a.effective_workload(&cfg), "chase");
+        // Neither: the CLI default.
+        cfg.workload.kind = None;
+        let a = Args::parse(&sv(&["run"])).unwrap();
+        assert_eq!(a.effective_workload(&cfg), "stream-triad");
+    }
+
+    #[test]
+    fn trace_out_flag_parses() {
+        let a = Args::parse(&sv(&["run", "--trace-out", "x.cxlt"])).unwrap();
+        assert_eq!(a.trace_out.as_deref(), Some("x.cxlt"));
+        assert!(Args::parse(&sv(&["run", "--trace-out"])).is_err());
     }
 }

@@ -8,6 +8,20 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::toml::{TomlDoc, TomlValue};
 use crate::util::{human_bytes, is_pow2};
+use crate::workloads::serve::ServeConfig;
+
+/// `[workload]` section: which workload `run` drives when the CLI does
+/// not override it, plus the serve/replay parameters.
+#[derive(Clone, Debug, Default)]
+pub struct WorkloadConfig {
+    /// Workload kind (`"serve"`, `"replay"`, `"stream-triad"`, …).
+    /// `None` = the CLI's default.
+    pub kind: Option<String>,
+    /// Trace path; required by (and only valid with) `kind = "replay"`.
+    pub trace: Option<String>,
+    /// `[workload.serve]` knobs (defaults when the section is absent).
+    pub serve: ServeConfig,
+}
 
 /// Maximum simulated hosts sharing one CXL fabric (`system.hosts`).
 pub const MAX_HOSTS: usize = 4;
@@ -661,6 +675,8 @@ pub struct SimConfig {
     pub fm_policy: Option<FmPolicyConfig>,
     pub page_size: u64,
     pub seed: u64,
+    /// `[workload]` section (kind/trace selection + serve knobs).
+    pub workload: WorkloadConfig,
 }
 
 impl Default for SimConfig {
@@ -737,6 +753,7 @@ impl Default for SimConfig {
             fm_policy: None,
             page_size: 4096,
             seed: 1,
+            workload: WorkloadConfig::default(),
         }
     }
 }
@@ -1107,6 +1124,59 @@ impl SimConfig {
                 }
             }
         }
+        // [workload] section consistency.
+        if let Some(kind) = &self.workload.kind {
+            const KINDS: [&str; 9] = [
+                "serve",
+                "replay",
+                "stream-copy",
+                "stream-scale",
+                "stream-add",
+                "stream-triad",
+                "random",
+                "chase",
+                "kv",
+            ];
+            if !KINDS.contains(&kind.as_str()) {
+                bail!("workload.kind '{kind}' is not one of {KINDS:?}");
+            }
+            if kind == "replay" && self.workload.trace.is_none() {
+                bail!(
+                    "workload.kind = \"replay\" needs \
+                     workload.trace = \"<path>\""
+                );
+            }
+        }
+        if self.workload.trace.is_some()
+            && self.workload.kind.as_deref() != Some("replay")
+        {
+            bail!(
+                "workload.trace only applies with \
+                 workload.kind = \"replay\""
+            );
+        }
+        let sv = &self.workload.serve;
+        if sv.users == 0 {
+            bail!("workload.serve.users must be positive");
+        }
+        if sv.kv_block < 64 || sv.kv_block % 64 != 0 {
+            bail!(
+                "workload.serve.kv_block must be a positive multiple of \
+                 64 (whole cache lines)"
+            );
+        }
+        if sv.context_blocks == 0 {
+            bail!("workload.serve.context_blocks must be positive");
+        }
+        if sv.dram_slots == 0 {
+            bail!(
+                "workload.serve.dram_slots must be positive (the hot \
+                 tier always exists; cxl_slots = 0 disables the warm one)"
+            );
+        }
+        if !sv.zipf_s.is_finite() || sv.zipf_s < 0.0 {
+            bail!("workload.serve.zipf_s must be finite and >= 0");
+        }
         Ok(())
     }
 
@@ -1375,6 +1445,41 @@ impl SimConfig {
                 p.refusal_backoff_ns = ns;
             }
         }
+        // [workload] section: run-time workload selection + serve knobs.
+        if let Some(v) = doc.get("workload.kind") {
+            c.workload.kind = Some(
+                v.as_str()
+                    .context("workload.kind must be string")?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = doc.get("workload.trace") {
+            c.workload.trace = Some(
+                v.as_str()
+                    .context("workload.trace must be string")?
+                    .to_string(),
+            );
+        }
+        get!("workload.serve.users", c.workload.serve.users, u64);
+        get!("workload.serve.zipf_s", c.workload.serve.zipf_s, f64);
+        get!("workload.serve.requests", c.workload.serve.requests, u64);
+        get!("workload.serve.kv_block", c.workload.serve.kv_block, u64);
+        get!(
+            "workload.serve.context_blocks",
+            c.workload.serve.context_blocks,
+            u64
+        );
+        get!(
+            "workload.serve.dram_slots",
+            c.workload.serve.dram_slots,
+            usize
+        );
+        get!("workload.serve.cxl_slots", c.workload.serve.cxl_slots, usize);
+        get!(
+            "workload.serve.decode_work",
+            c.workload.serve.decode_work,
+            u64
+        );
         // Reject overrides for devices/switches/hosts that don't exist,
         // and unknown keys inside valid sections, rather than silently
         // dropping them (a likely off-by-one or typo in configs).
@@ -1450,6 +1555,32 @@ impl SimConfig {
                              {DEV_KEYS:?})"
                         );
                     }
+                }
+            }
+            if let Some(rest) = key.strip_prefix("workload.") {
+                const WL_KEYS: [&str; 2] = ["kind", "trace"];
+                const SERVE_KEYS: [&str; 8] = [
+                    "users",
+                    "zipf_s",
+                    "requests",
+                    "kv_block",
+                    "context_blocks",
+                    "dram_slots",
+                    "cxl_slots",
+                    "decode_work",
+                ];
+                if let Some(sk) = rest.strip_prefix("serve.") {
+                    if !SERVE_KEYS.contains(&sk) {
+                        bail!(
+                            "unknown key '{key}' ([workload.serve] keys: \
+                             {SERVE_KEYS:?})"
+                        );
+                    }
+                } else if !WL_KEYS.contains(&rest) {
+                    bail!(
+                        "unknown key '{key}' ([workload] keys: {WL_KEYS:?} \
+                         plus the [workload.serve] table)"
+                    );
                 }
             }
             if let Some(rest) = key.strip_prefix("cxl.switch") {
@@ -1575,6 +1706,64 @@ mod tests {
 
         assert!(SimConfig::from_toml("[system]\ncpu = \"riscv\"", &[])
             .is_err());
+    }
+
+    #[test]
+    fn workload_section_parses_and_validates() {
+        let cfg = SimConfig::from_toml(
+            "[workload]\nkind = \"serve\"\n\
+             [workload.serve]\nusers = 64\nzipf_s = 0.9\nrequests = 10\n\
+             kv_block = 256\ncontext_blocks = 2\ndram_slots = 8\n\
+             cxl_slots = 16\ndecode_work = 8\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.kind.as_deref(), Some("serve"));
+        assert_eq!(cfg.workload.serve.users, 64);
+        assert_eq!(cfg.workload.serve.kv_block, 256);
+        assert_eq!(cfg.workload.serve.cxl_slots, 16);
+
+        // Replay requires a trace, and a trace requires replay.
+        assert!(SimConfig::from_toml("[workload]\nkind = \"replay\"\n", &[])
+            .is_err());
+        assert!(SimConfig::from_toml(
+            "[workload]\ntrace = \"t.cxlt\"\n",
+            &[]
+        )
+        .is_err());
+        let cfg = SimConfig::from_toml(
+            "[workload]\nkind = \"replay\"\ntrace = \"t.cxlt\"\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.trace.as_deref(), Some("t.cxlt"));
+
+        // Unknown kinds, unknown keys, and bad serve values.
+        assert!(SimConfig::from_toml(
+            "[workload]\nkind = \"fortran\"\n",
+            &[]
+        )
+        .is_err());
+        assert!(SimConfig::from_toml(
+            "[workload]\nbatch = 4\n",
+            &[]
+        )
+        .is_err());
+        assert!(SimConfig::from_toml(
+            "[workload.serve]\nwindow = 9\n",
+            &[]
+        )
+        .is_err());
+        assert!(SimConfig::from_toml(
+            "[workload.serve]\nkv_block = 100\n",
+            &[]
+        )
+        .is_err());
+        assert!(SimConfig::from_toml(
+            "[workload.serve]\ndram_slots = 0\n",
+            &[]
+        )
+        .is_err());
     }
 
     #[test]

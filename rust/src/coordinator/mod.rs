@@ -16,7 +16,7 @@ use crate::guestos::MemPolicy;
 use crate::runtime::{CacheState, XlaRuntime};
 use crate::system::Machine;
 use crate::trace::Trace;
-use crate::workloads::Workload;
+use crate::workloads::{Replay, Workload};
 
 /// Wraps a workload so its init phase runs as *timed* stores through
 /// the detailed model — the "no fast-forward" baseline for the E7
@@ -83,6 +83,12 @@ impl<W: Workload> Workload for WithTimedInit<W> {
             self.inner.store_value(va)
         }
     }
+    fn tick_hint(&mut self, tick: u64) {
+        self.inner.tick_hint(tick);
+    }
+    fn extra_stats(&self) -> Vec<(String, crate::workloads::WlStat)> {
+        self.inner.extra_stats()
+    }
     fn verify(
         &self,
         asp: &mut crate::guestos::AddressSpace,
@@ -112,6 +118,26 @@ pub fn capture_init_trace(m: &mut Machine, core: usize) -> Result<Trace> {
         t.push((pa / line) as i32, true);
     }
     Ok(t)
+}
+
+/// Attach a captured v2 event trace to a booted machine: every host
+/// present in the trace gets its recorded per-core [`Replay`] streams
+/// (hosts the trace doesn't mention stay idle). The machine config
+/// must match the one the trace was captured under — replay asserts
+/// the recorded VMA addresses come back from the deterministic mmap
+/// cursor.
+pub fn attach_replay(
+    m: &mut Machine,
+    t: &crate::trace::EventTrace,
+) -> Result<()> {
+    for h in 0..m.hosts.len() {
+        let wls = Replay::for_host(t, h);
+        // Replay re-mmaps its recorded policies; the attach policy is
+        // only a default for workloads that honor it, so Local{0} is a
+        // safe stand-in.
+        m.attach_workloads_to(h, wls, &MemPolicy::Local { home: 0 })?;
+    }
+    Ok(())
 }
 
 /// Outcome of a warming pass.

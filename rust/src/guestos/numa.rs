@@ -32,6 +32,9 @@ impl MemPolicy {
         if s == "local" {
             return Ok(MemPolicy::Local { home: 0 });
         }
+        if let Some(rest) = s.strip_prefix("local:") {
+            return Ok(MemPolicy::Local { home: rest.trim().parse()? });
+        }
         if let Some(rest) = s.strip_prefix("bind:") {
             let nodes = rest
                 .split(',')
@@ -61,6 +64,33 @@ impl MemPolicy {
             return Ok(MemPolicy::Interleave { weights });
         }
         bail!("unknown policy '{s}'")
+    }
+
+    /// The numactl-ish spec string this policy parses back from
+    /// (`parse(p.to_spec()) == p`). Trace files record VMA policies in
+    /// this form so replay runs rebuild identical address spaces.
+    pub fn to_spec(&self) -> String {
+        match self {
+            MemPolicy::Local { home: 0 } => "local".into(),
+            MemPolicy::Local { home } => format!("local:{home}"),
+            MemPolicy::Bind { nodes } => format!(
+                "bind:{}",
+                nodes
+                    .iter()
+                    .map(|n| n.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+            MemPolicy::Preferred { node } => format!("preferred:{node}"),
+            MemPolicy::Interleave { weights } => format!(
+                "interleave:{}",
+                weights
+                    .iter()
+                    .map(|(n, w)| format!("{n}={w}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+        }
     }
 }
 
@@ -258,6 +288,35 @@ impl PageAlloc {
             self.nodes[id as usize].free(addr);
         }
     }
+
+    /// Online node ids of one memory class, id-ascending: `true` for
+    /// CPU-carrying DRAM nodes, `false` for CPU-less zNUMA (CXL)
+    /// windows.
+    pub fn nodes_of_class(&self, has_cpus: bool) -> Vec<u32> {
+        self.nodes
+            .iter()
+            .filter(|n| n.online && n.has_cpus == has_cpus)
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Tier placement for a two-tier (hot/cold) workload, derived from
+    /// the booted topology rather than hard-coded node ids: the hot
+    /// tier strict-binds to the DRAM class, the cold tier to the zNUMA
+    /// (CXL) class. On a machine with no online CXL window both tiers
+    /// collapse onto DRAM — a serving fleet without an expander still
+    /// runs, it just has nowhere cheaper to demote warm KV blocks.
+    pub fn tier_policies(&self) -> (MemPolicy, MemPolicy) {
+        let dram = self.nodes_of_class(true);
+        let cxl = self.nodes_of_class(false);
+        let hot = MemPolicy::Bind { nodes: dram.clone() };
+        let cold = if cxl.is_empty() {
+            MemPolicy::Bind { nodes: dram }
+        } else {
+            MemPolicy::Bind { nodes: cxl }
+        };
+        (hot, cold)
+    }
 }
 
 #[cfg(test)]
@@ -292,6 +351,39 @@ mod tests {
         );
         assert!(MemPolicy::parse("chaos").is_err());
         assert!(MemPolicy::parse("interleave:0=0").is_err());
+    }
+
+    #[test]
+    fn policy_spec_round_trips() {
+        for p in [
+            MemPolicy::Local { home: 0 },
+            MemPolicy::Local { home: 2 },
+            MemPolicy::Bind { nodes: vec![1] },
+            MemPolicy::Bind { nodes: vec![0, 2, 3] },
+            MemPolicy::Preferred { node: 1 },
+            MemPolicy::Interleave { weights: vec![(0, 3), (1, 1)] },
+        ] {
+            let spec = p.to_spec();
+            assert_eq!(
+                MemPolicy::parse(&spec).unwrap(),
+                p,
+                "spec '{spec}'"
+            );
+        }
+    }
+
+    #[test]
+    fn tier_policies_split_by_memory_class() {
+        let mut pa = setup();
+        pa.online(1);
+        let (hot, cold) = pa.tier_policies();
+        assert_eq!(hot, MemPolicy::Bind { nodes: vec![0] });
+        assert_eq!(cold, MemPolicy::Bind { nodes: vec![1] });
+        // Offline CXL window: both tiers collapse onto DRAM.
+        pa.offline(1);
+        let (hot, cold) = pa.tier_policies();
+        assert_eq!(hot, MemPolicy::Bind { nodes: vec![0] });
+        assert_eq!(cold, MemPolicy::Bind { nodes: vec![0] });
     }
 
     #[test]

@@ -106,6 +106,17 @@ impl AddressSpace {
     pub fn resident_pages(&self) -> usize {
         self.table.len()
     }
+
+    /// The reserved VMAs as `(start, len, policy)` triples, in mmap
+    /// order. The trace recorder diffs this across a workload's
+    /// `setup` to capture the address-space layout a replay run must
+    /// rebuild.
+    pub fn vma_spans(&self) -> Vec<(u64, u64, MemPolicy)> {
+        self.vmas
+            .iter()
+            .map(|m| (m.start, m.len, m.policy.clone()))
+            .collect()
+    }
 }
 
 #[cfg(test)]

@@ -133,6 +133,57 @@ impl Histogram {
     }
 }
 
+/// Exact-percentile sample set (nearest-rank over the sorted samples).
+///
+/// [`Histogram`]'s power-of-two buckets are fine for latencies spanning
+/// decades, but per-request serving percentiles (`serve.p99_ns`) need
+/// exact tail values — a p99 that rounds to the next power of two is
+/// useless for a DRAM-vs-CXL tier-mix comparison. Sample counts here
+/// are per-request (thousands), not per-access (millions), so keeping
+/// the raw values is cheap.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    vals: Vec<u64>,
+}
+
+impl Samples {
+    pub fn add(&mut self, v: u64) {
+        self.vals.push(v);
+    }
+
+    pub fn extend(&mut self, vs: &[u64]) {
+        self.vals.extend_from_slice(vs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        self.vals.iter().sum::<u64>() as f64 / self.vals.len() as f64
+    }
+
+    /// Nearest-rank percentile (`p` a fraction, e.g. 0.99): the value
+    /// at rank `ceil(p * n)` of the sorted samples. 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.vals.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.vals.clone();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        let rank = ((p * n as f64).ceil() as usize).clamp(1, n);
+        sorted[rank - 1]
+    }
+}
+
 /// A flat named dump of stats: `(path, value)` pairs.
 #[derive(Clone, Debug, Default)]
 pub struct StatDump {
@@ -231,6 +282,69 @@ mod tests {
         assert_eq!(h.underflow, 1);
         assert!(h.percentile(0.5) <= 8);
         assert!(h.percentile(1.0) >= 1000);
+    }
+
+    #[test]
+    fn samples_empty_is_zero() {
+        let s = Samples::default();
+        assert!(s.is_empty());
+        assert_eq!(s.percentile(0.5), 0);
+        assert_eq!(s.percentile(0.99), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn samples_single_value_is_every_percentile() {
+        let mut s = Samples::default();
+        s.add(12345);
+        for p in [0.01, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(s.percentile(p), 12345, "p={p}");
+        }
+        assert_eq!(s.mean(), 12345.0);
+    }
+
+    #[test]
+    fn samples_p99_heavy_tail_is_exact() {
+        // 900 fast requests + 100 pathological stragglers: p50 must
+        // stay on the body, p99 must land exactly on the tail value —
+        // not a power-of-two bucket edge.
+        let mut s = Samples::default();
+        for _ in 0..900 {
+            s.add(10);
+        }
+        for _ in 0..100 {
+            s.add(1_000_000);
+        }
+        assert_eq!(s.len(), 1000);
+        assert_eq!(s.percentile(0.5), 10);
+        assert_eq!(s.percentile(0.90), 1_000_000);
+        assert_eq!(s.percentile(0.99), 1_000_000);
+        // The same tail through the pow2 Histogram rounds up to a
+        // bucket edge — the imprecision Samples exists to avoid.
+        let mut h = Histogram::default();
+        for _ in 0..900 {
+            h.sample(10);
+        }
+        for _ in 0..100 {
+            h.sample(1_000_000);
+        }
+        assert_ne!(h.percentile(0.99), 1_000_000);
+    }
+
+    #[test]
+    fn samples_percentiles_are_order_independent() {
+        let mut a = Samples::default();
+        let mut b = Samples::default();
+        for v in [5u64, 1, 9, 3, 7] {
+            a.add(v);
+        }
+        for v in [9u64, 7, 5, 3, 1] {
+            b.add(v);
+        }
+        assert_eq!(a.percentile(0.5), b.percentile(0.5));
+        assert_eq!(a.percentile(0.5), 5);
+        assert_eq!(a.percentile(1.0), 9);
+        assert_eq!(a.percentile(0.01), 1);
     }
 
     #[test]

@@ -42,7 +42,7 @@ use crate::mem::{MemCtrl, PhysMem};
 use crate::pcie::{self, config_space as cs, Bdf, Ecam};
 use crate::sim::{ns_to_ticks, EventQueue, MemCmd, Packet, ReqId, Tick};
 use crate::stats::{Counter, Histogram, StatDump};
-use crate::workloads::Workload;
+use crate::workloads::{WlStat, Workload};
 
 /// Host events (only async points become events — see module docs).
 /// The machine's queue carries them tagged with the owning host's id.
@@ -807,11 +807,16 @@ impl Host {
         }
     }
 
-    fn next_op_for(&mut self, core: usize) -> Option<WlOp> {
+    fn next_op_for(&mut self, core: usize, now: Tick) -> Option<WlOp> {
         if let Some(op) = self.pending_op[core].take() {
             return Some(op);
         }
-        self.workloads.get_mut(core).and_then(|w| w.next_op())
+        self.workloads.get_mut(core).and_then(|w| {
+            // Let request-oriented workloads timestamp op boundaries
+            // (fresh pulls only — parked re-issues keep their origin).
+            w.tick_hint(now);
+            w.next_op()
+        })
     }
 
     fn try_issue(
@@ -837,7 +842,7 @@ impl Host {
                 // Else: waiting on a response; completions re-trigger.
                 return;
             }
-            let Some(op) = self.next_op_for(c) else {
+            let Some(op) = self.next_op_for(c, now) else {
                 if self.cores[c].outstanding() == 0 {
                     self.cores[c].finish(now);
                 }
@@ -1110,5 +1115,34 @@ impl Host {
             &format!("{prefix}sys.numa_fallback_allocs"),
             fallback as f64,
         );
+        // Workload-contributed stats, merged across this host's cores:
+        // counts sum; latency sample sets concatenate (in core order,
+        // for determinism) before one host-wide percentile pass.
+        let mut counts: std::collections::BTreeMap<String, u64> =
+            Default::default();
+        let mut samples: std::collections::BTreeMap<
+            String,
+            crate::stats::Samples,
+        > = Default::default();
+        for w in &self.workloads {
+            for (key, stat) in w.extra_stats() {
+                match stat {
+                    WlStat::Count(n) => {
+                        *counts.entry(key).or_default() += n
+                    }
+                    WlStat::SamplesNs(vs) => {
+                        samples.entry(key).or_default().extend(&vs)
+                    }
+                }
+            }
+        }
+        for (key, n) in counts {
+            d.push(&format!("{prefix}{key}"), n as f64);
+        }
+        for (key, s) in samples {
+            d.push(&format!("{prefix}{key}.p50_ns"), s.percentile(0.50) as f64);
+            d.push(&format!("{prefix}{key}.p95_ns"), s.percentile(0.95) as f64);
+            d.push(&format!("{prefix}{key}.p99_ns"), s.percentile(0.99) as f64);
+        }
     }
 }

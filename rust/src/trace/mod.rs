@@ -1,11 +1,38 @@
 //! Access traces: capture, binary (de)serialization and replay.
 //!
-//! The fast-forward coordinator feeds traces to the XLA cache-warm
-//! artifact; benches use saved traces for reproducible inputs. Format:
-//! magic "CXLT", version u32, count u64, then per record packed
-//! (line_addr: i32, is_write: u8).
+//! Two formats share the "CXLT" magic, distinguished by version:
+//!
+//! * **v1** ([`Trace`]) — flat physical line-address stream, packed
+//!   (line_addr: i32, is_write: u8) records. Feeds the fast-forward
+//!   coordinator's XLA cache-warm artifact.
+//! * **v2** ([`EventTrace`]) — the multi-host *memory-event* format: a
+//!   VMA preamble (per-core mmap layout + policy specs), functional
+//!   init writes, and the full per-(host, core) workload op stream.
+//!   Captured from any live run via [`Recorder`] and replayed
+//!   bit-deterministically as a workload
+//!   (`[workload] kind = "replay"`, see
+//!   [`crate::workloads::Replay`]) — same config + same trace ⇒ the
+//!   identical event-by-event simulation, which is what lets benches
+//!   pin a small serving trace and CI regress on it.
+//!
+//! v2 wire layout (all little-endian):
+//!
+//! ```text
+//! "CXLT" | ver=2 u32 | n_vmas u32 | n_inits u64 | n_events u64
+//! vma:    host u8 | core u8 | start u64 | len u64 | spec_len u16 | spec
+//! init:   host u8 | core u8 | va u64 | bits u64
+//! event:  op u8 (0=load 1=store 2=work) | host u8 | core u8 | size u8
+//!         | arg u64 (va for load/store, cycles for work)
+//! ```
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
+
+use crate::cpu::WlOp;
+use crate::guestos::{AddressSpace, MemPolicy};
+use crate::workloads::{WlStat, Workload};
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Trace {
@@ -82,6 +109,373 @@ impl Trace {
     }
 }
 
+// ---- v2: multi-host memory-event traces --------------------------------
+
+/// Operation kind of one [`MemEvent`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceOp {
+    Load = 0,
+    Store = 1,
+    Work = 2,
+}
+
+impl TraceOp {
+    fn from_u8(b: u8) -> Result<TraceOp> {
+        match b {
+            0 => Ok(TraceOp::Load),
+            1 => Ok(TraceOp::Store),
+            2 => Ok(TraceOp::Work),
+            other => bail!("bad trace op tag {other}"),
+        }
+    }
+}
+
+/// One workload op as seen at the (host, core) issue boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemEvent {
+    pub host: u8,
+    pub core: u8,
+    pub op: TraceOp,
+    /// Access size for loads/stores, 0 for work.
+    pub size: u8,
+    /// Virtual address (load/store) or cycle count (work).
+    pub arg: u64,
+}
+
+/// One VMA a workload reserved during `setup`: replay re-mmaps these
+/// (same lengths, same order, same policies) so the demand-paging walk
+/// lands every page on the same node as the live run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VmaRecord {
+    pub host: u8,
+    pub core: u8,
+    /// VA the live mmap returned — replay asserts it gets the same.
+    pub start: u64,
+    pub len: u64,
+    /// `MemPolicy::to_spec` form ("bind:1", "interleave:0=3,1=1", …).
+    pub policy: String,
+}
+
+/// One functional init write (`Workload::init_data`), replayed so
+/// attach-time page faulting and memory contents match the live run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InitRecord {
+    pub host: u8,
+    pub core: u8,
+    pub va: u64,
+    pub bits: u64,
+}
+
+/// A captured multi-host memory-event trace (format v2).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EventTrace {
+    pub vmas: Vec<VmaRecord>,
+    pub inits: Vec<InitRecord>,
+    pub events: Vec<MemEvent>,
+}
+
+impl EventTrace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Hosts with at least one VMA, init record or event.
+    pub fn hosts(&self) -> Vec<u8> {
+        let mut hs: Vec<u8> = self
+            .vmas
+            .iter()
+            .map(|v| v.host)
+            .chain(self.inits.iter().map(|i| i.host))
+            .chain(self.events.iter().map(|e| e.host))
+            .collect();
+        hs.sort_unstable();
+        hs.dedup();
+        hs
+    }
+
+    /// Highest core index recorded for `host`, or `None` if the host
+    /// does not appear in the trace.
+    pub fn max_core(&self, host: u8) -> Option<u8> {
+        self.vmas
+            .iter()
+            .filter(|v| v.host == host)
+            .map(|v| v.core)
+            .chain(
+                self.inits
+                    .iter()
+                    .filter(|i| i.host == host)
+                    .map(|i| i.core),
+            )
+            .chain(
+                self.events
+                    .iter()
+                    .filter(|e| e.host == host)
+                    .map(|e| e.core),
+            )
+            .max()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            28 + self.vmas.len() * 32 + self.inits.len() * 18
+                + self.events.len() * 12,
+        );
+        out.extend_from_slice(b"CXLT");
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&(self.vmas.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.inits.len() as u64).to_le_bytes());
+        out.extend_from_slice(&(self.events.len() as u64).to_le_bytes());
+        for v in &self.vmas {
+            out.push(v.host);
+            out.push(v.core);
+            out.extend_from_slice(&v.start.to_le_bytes());
+            out.extend_from_slice(&v.len.to_le_bytes());
+            let spec = v.policy.as_bytes();
+            out.extend_from_slice(&(spec.len() as u16).to_le_bytes());
+            out.extend_from_slice(spec);
+        }
+        for i in &self.inits {
+            out.push(i.host);
+            out.push(i.core);
+            out.extend_from_slice(&i.va.to_le_bytes());
+            out.extend_from_slice(&i.bits.to_le_bytes());
+        }
+        for e in &self.events {
+            out.push(e.op as u8);
+            out.push(e.host);
+            out.push(e.core);
+            out.push(e.size);
+            out.extend_from_slice(&e.arg.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<EventTrace> {
+        if b.len() < 28 || &b[0..4] != b"CXLT" {
+            bail!("not a CXLT trace");
+        }
+        let ver = u32::from_le_bytes(b[4..8].try_into().unwrap());
+        if ver != 2 {
+            bail!("unsupported event-trace version {ver} (expected 2)");
+        }
+        let n_vmas =
+            u32::from_le_bytes(b[8..12].try_into().unwrap()) as usize;
+        let n_inits =
+            u64::from_le_bytes(b[12..20].try_into().unwrap()) as usize;
+        let n_events =
+            u64::from_le_bytes(b[20..28].try_into().unwrap()) as usize;
+        let mut t = EventTrace::default();
+        let mut at = 28usize;
+        let take = |at: &mut usize, n: usize| -> Result<&[u8]> {
+            let s = b
+                .get(*at..*at + n)
+                .context("event trace truncated")?;
+            *at += n;
+            Ok(s)
+        };
+        for _ in 0..n_vmas {
+            let hc = take(&mut at, 2)?;
+            let (host, core) = (hc[0], hc[1]);
+            let start =
+                u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap());
+            let len =
+                u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap());
+            let spec_len =
+                u16::from_le_bytes(take(&mut at, 2)?.try_into().unwrap())
+                    as usize;
+            let policy =
+                std::str::from_utf8(take(&mut at, spec_len)?)
+                    .context("vma policy spec is not utf8")?
+                    .to_string();
+            // Reject specs the replay-side parser cannot rebuild now,
+            // not at replay time.
+            MemPolicy::parse(&policy).with_context(|| {
+                format!("vma record carries unparseable policy '{policy}'")
+            })?;
+            t.vmas.push(VmaRecord { host, core, start, len, policy });
+        }
+        for _ in 0..n_inits {
+            let hc = take(&mut at, 2)?;
+            let (host, core) = (hc[0], hc[1]);
+            let va =
+                u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap());
+            let bits =
+                u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap());
+            t.inits.push(InitRecord { host, core, va, bits });
+        }
+        for _ in 0..n_events {
+            let head = take(&mut at, 4)?;
+            let (op, host, core, size) =
+                (TraceOp::from_u8(head[0])?, head[1], head[2], head[3]);
+            let arg =
+                u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap());
+            t.events.push(MemEvent { host, core, op, size, arg });
+        }
+        if at != b.len() {
+            bail!("event trace has {} trailing bytes", b.len() - at);
+        }
+        Ok(t)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<EventTrace> {
+        EventTrace::from_bytes(
+            &std::fs::read(path)
+                .with_context(|| format!("reading {}", path.display()))?,
+        )
+    }
+}
+
+/// Tees every workload on a machine into one shared [`EventTrace`].
+///
+/// Wrap each workload with its (host, core) before attaching:
+/// `m.attach_workloads_to(h, vec![rec.wrap(h, 0, wl)], &policy)`. The
+/// wrapper is transparent — it forwards every trait hook, so a
+/// recorded run stays bit-identical to an unrecorded one — and the
+/// single-threaded event loop makes the shared buffer safe.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    buf: Rc<RefCell<EventTrace>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    /// Wrap `inner` so its VMAs, init writes and ops are recorded
+    /// under `(host, core)`.
+    pub fn wrap(
+        &self,
+        host: usize,
+        core: usize,
+        inner: Box<dyn Workload>,
+    ) -> Box<dyn Workload> {
+        Box::new(Recorded {
+            host: host as u8,
+            core: core as u8,
+            inner,
+            buf: Rc::clone(&self.buf),
+        })
+    }
+
+    /// The trace captured so far (clone; the run may still be going).
+    pub fn snapshot(&self) -> EventTrace {
+        self.buf.borrow().clone()
+    }
+
+    /// Take the captured trace, leaving the recorder empty.
+    pub fn take(&self) -> EventTrace {
+        std::mem::take(&mut self.buf.borrow_mut())
+    }
+}
+
+struct Recorded {
+    host: u8,
+    core: u8,
+    inner: Box<dyn Workload>,
+    buf: Rc<RefCell<EventTrace>>,
+}
+
+impl Workload for Recorded {
+    fn name(&self) -> String {
+        format!("{}+rec", self.inner.name())
+    }
+
+    fn setup(&mut self, asp: &mut AddressSpace, policy: &MemPolicy) {
+        let before = asp.vma_spans().len();
+        self.inner.setup(asp, policy);
+        let mut buf = self.buf.borrow_mut();
+        for (start, len, pol) in asp.vma_spans().into_iter().skip(before) {
+            buf.vmas.push(VmaRecord {
+                host: self.host,
+                core: self.core,
+                start,
+                len,
+                policy: pol.to_spec(),
+            });
+        }
+        for (va, bits) in self.inner.init_data() {
+            buf.inits.push(InitRecord {
+                host: self.host,
+                core: self.core,
+                va,
+                bits,
+            });
+        }
+    }
+
+    fn next_op(&mut self) -> Option<WlOp> {
+        let op = self.inner.next_op()?;
+        let ev = match op {
+            WlOp::Load { va, size } => MemEvent {
+                host: self.host,
+                core: self.core,
+                op: TraceOp::Load,
+                size: size as u8,
+                arg: va,
+            },
+            WlOp::Store { va, size } => MemEvent {
+                host: self.host,
+                core: self.core,
+                op: TraceOp::Store,
+                size: size as u8,
+                arg: va,
+            },
+            WlOp::Work { cycles } => MemEvent {
+                host: self.host,
+                core: self.core,
+                op: TraceOp::Work,
+                size: 0,
+                arg: cycles,
+            },
+        };
+        self.buf.borrow_mut().events.push(ev);
+        Some(op)
+    }
+
+    fn tick_hint(&mut self, tick: u64) {
+        self.inner.tick_hint(tick);
+    }
+
+    fn extra_stats(&self) -> Vec<(String, WlStat)> {
+        self.inner.extra_stats()
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.inner.bytes_moved()
+    }
+
+    fn init_data(&self) -> Vec<(u64, u64)> {
+        self.inner.init_data()
+    }
+
+    fn load_done(&mut self, va: u64, bits: u64) {
+        self.inner.load_done(va, bits);
+    }
+
+    fn store_value(&mut self, va: u64) -> u64 {
+        self.inner.store_value(va)
+    }
+
+    fn verify(
+        &self,
+        asp: &mut AddressSpace,
+        alloc: &mut crate::guestos::PageAlloc,
+        mem: &crate::mem::PhysMem,
+    ) -> Result<(), String> {
+        self.inner.verify(asp, alloc, mem)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +511,148 @@ mod tests {
         assert_eq!(w.len(), 3);
         assert_eq!(w[0].0.len(), 4);
         assert_eq!(w[2].0.len(), 2);
+    }
+
+    // ---- v2 ------------------------------------------------------------
+
+    /// Build an EventTrace from shrinkable raw material: each vma is
+    /// (start_page, policy_pick), each event is (tag_and_ids, arg).
+    fn trace_from_raw(
+        vmas: &[(u64, u64)],
+        events: &[(u64, u64)],
+    ) -> EventTrace {
+        const SPECS: [&str; 5] =
+            ["local", "local:1", "bind:0,1", "preferred:1", "interleave:0=3,1=1"];
+        let mut t = EventTrace::default();
+        for (i, &(start, pick)) in vmas.iter().enumerate() {
+            t.vmas.push(VmaRecord {
+                host: (pick % 3) as u8,
+                core: (i % 4) as u8,
+                start: 0x7f00_0000_0000 + start * 4096,
+                len: (1 + pick % 64) * 4096,
+                policy: SPECS[pick as usize % SPECS.len()].to_string(),
+            });
+            t.inits.push(InitRecord {
+                host: (pick % 3) as u8,
+                core: (i % 4) as u8,
+                va: 0x7f00_0000_0000 + start * 4096,
+                bits: pick.wrapping_mul(0x9E37_79B9),
+            });
+        }
+        for &(head, arg) in events {
+            let op = match head % 3 {
+                0 => TraceOp::Load,
+                1 => TraceOp::Store,
+                _ => TraceOp::Work,
+            };
+            t.events.push(MemEvent {
+                host: (head / 3 % 3) as u8,
+                core: (head / 9 % 4) as u8,
+                op,
+                size: if op == TraceOp::Work { 0 } else { 8 },
+                arg,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn v2_roundtrip_property() {
+        crate::util::prop::check(
+            "event-trace-roundtrip",
+            200,
+            |r| {
+                let nv = r.below(6) as usize;
+                let ne = r.below(64) as usize;
+                let vmas: Vec<(u64, u64)> = (0..nv)
+                    .map(|_| (r.below(1 << 20), r.below(1 << 16)))
+                    .collect();
+                let events: Vec<(u64, u64)> = (0..ne)
+                    .map(|_| (r.below(1 << 30), r.next_u64()))
+                    .collect();
+                (vmas, events)
+            },
+            |(vmas, events)| {
+                let t = trace_from_raw(vmas, events);
+                let b = t.to_bytes();
+                let back = EventTrace::from_bytes(&b)
+                    .map_err(|e| format!("decode failed: {e}"))?;
+                if back != t {
+                    return Err("decoded trace differs".into());
+                }
+                // Bit-identical re-encode, not just structural equality.
+                if back.to_bytes() != b {
+                    return Err("re-encode differs".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn v2_rejects_garbage() {
+        assert!(EventTrace::from_bytes(b"nope").is_err());
+        // v1 bytes must not parse as v2 (and vice versa).
+        let mut v1 = Trace::default();
+        v1.push(1, true);
+        assert!(EventTrace::from_bytes(&v1.to_bytes()).is_err());
+        let v2 = trace_from_raw(&[(1, 2)], &[(0, 42)]);
+        assert!(Trace::from_bytes(&v2.to_bytes()).is_err());
+        // Truncation and trailing junk.
+        let mut b = v2.to_bytes();
+        b.pop();
+        assert!(EventTrace::from_bytes(&b).is_err());
+        let mut b = v2.to_bytes();
+        b.push(0);
+        assert!(EventTrace::from_bytes(&b).is_err());
+        // Bad op tag.
+        let mut b = v2.to_bytes();
+        let ev_at = b.len() - 12;
+        b[ev_at] = 9;
+        assert!(EventTrace::from_bytes(&b).is_err());
+        // Unparseable policy spec.
+        let mut t = trace_from_raw(&[(1, 0)], &[]);
+        t.vmas[0].policy = "martian:7".into();
+        assert!(EventTrace::from_bytes(&t.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn v2_hosts_and_cores() {
+        let t = trace_from_raw(&[(0, 0), (1, 4)], &[(3, 1), (26, 2)]);
+        // pick=0 → host 0; pick=4 → host 1; head=3 → host 1;
+        // head=26 → host 2 core 2.
+        assert_eq!(t.hosts(), vec![0, 1, 2]);
+        assert_eq!(t.max_core(2), Some(2));
+        assert_eq!(t.max_core(7), None);
+    }
+
+    #[test]
+    fn v2_recorder_captures_vmas_inits_and_ops() {
+        use crate::workloads::{Stream, StreamKernel};
+        let rec = Recorder::new();
+        let inner: Box<dyn Workload> =
+            Box::new(Stream::new(StreamKernel::Copy, 64 << 10, 1));
+        let mut w = rec.wrap(1, 0, inner);
+        let (mut asp, _pa) = crate::workloads::testutil::world();
+        w.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        let mut n_ops = 0u64;
+        while let Some(op) = w.next_op() {
+            n_ops += 1;
+            // Recorder must hand back the op unchanged.
+            match op {
+                WlOp::Load { size, .. } | WlOp::Store { size, .. } => {
+                    assert_eq!(size, 8)
+                }
+                WlOp::Work { .. } => {}
+            }
+            assert!(n_ops < 1_000_000);
+        }
+        let t = rec.take();
+        assert_eq!(t.events.len() as u64, n_ops);
+        assert!(!t.vmas.is_empty());
+        assert!(t.vmas.iter().all(|v| v.host == 1 && v.core == 0));
+        assert!(!t.inits.is_empty());
+        // take() drained the buffer.
+        assert!(rec.snapshot().is_empty());
     }
 }

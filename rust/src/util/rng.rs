@@ -93,6 +93,49 @@ impl Rng {
     }
 }
 
+/// Zipf(s) sampler over `0..n` via a precomputed CDF + binary search.
+///
+/// Serving-fleet request mixes are Zipf-distributed over the user
+/// population (a few users own most of the traffic); the CDF is built
+/// once so sampling is O(log n) and — like everything fed by [`Rng`] —
+/// bit-deterministic for a given seed.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// `n` items, exponent `s` (s = 0 degenerates to uniform).
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n > 0, "zipf needs a non-empty population");
+        assert!(s >= 0.0 && s.is_finite(), "zipf exponent must be >= 0");
+        let mut cdf = Vec::with_capacity(n as usize);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.cdf.len() as u64
+    }
+
+    /// Draw one item id in `0..n` (0 is the most popular).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.f64();
+        // min() guards the float-rounding case where the final CDF
+        // entry lands a hair under 1.0.
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+            as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +193,54 @@ mod tests {
         }
         let mean = sum / N as f64;
         assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_skews_toward_low_ids() {
+        let z = Zipf::new(100, 1.1);
+        let mut r = Rng::new(17);
+        let mut counts = [0u64; 100];
+        const N: usize = 50_000;
+        for _ in 0..N {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        // Item 0 dominates item 50 by roughly 50^1.1; allow slack.
+        assert!(counts[0] > 20 * counts[50].max(1), "{counts:?}");
+        // Every draw stayed in range (counts sums to N).
+        assert_eq!(counts.iter().sum::<u64>(), N as u64);
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_uniformish() {
+        let z = Zipf::new(10, 0.0);
+        let mut r = Rng::new(23);
+        let mut counts = [0u64; 10];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / 20_000.0;
+            assert!((frac - 0.1).abs() < 0.02, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_deterministic_for_seed() {
+        let z = Zipf::new(1000, 1.0);
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for _ in 0..500 {
+            assert_eq!(z.sample(&mut a), z.sample(&mut b));
+        }
+    }
+
+    #[test]
+    fn zipf_single_item_population() {
+        let z = Zipf::new(1, 1.3);
+        let mut r = Rng::new(3);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut r), 0);
+        }
     }
 
     #[test]

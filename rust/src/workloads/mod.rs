@@ -10,14 +10,32 @@ pub mod stream;
 pub mod random;
 pub mod pointer_chase;
 pub mod tiered_kv;
+pub mod serve;
+pub mod replay;
 
 pub use pointer_chase::PointerChase;
 pub use random::RandomAccess;
+pub use replay::Replay;
+pub use serve::{Serve, ServeConfig, TierLru};
 pub use stream::{Stream, StreamKernel};
 pub use tiered_kv::TieredKv;
 
 use crate::cpu::WlOp;
 use crate::guestos::{AddressSpace, MemPolicy};
+
+/// A stat contribution from a workload (see [`Workload::extra_stats`]).
+/// The host merges contributions across its cores at dump time: counts
+/// sum, sample sets concatenate before the percentile pass — so a
+/// 4-core serving host reports one fleet-wide `serve.p99_ns`, not four
+/// per-core ones.
+#[derive(Clone, Debug)]
+pub enum WlStat {
+    /// A plain counter, dumped under its key verbatim.
+    Count(u64),
+    /// Latency samples in nanoseconds; dumped as exact
+    /// `<key>.{p50_ns,p95_ns,p99_ns}` nearest-rank percentiles.
+    SamplesNs(Vec<u64>),
+}
 
 /// A workload bound to one core.
 pub trait Workload {
@@ -28,6 +46,19 @@ pub trait Workload {
 
     /// Next operation, or `None` when finished.
     fn next_op(&mut self) -> Option<WlOp>;
+
+    /// The issue engine's current tick, passed immediately before each
+    /// fresh `next_op` pull (not for ops re-issued after an MSHR park).
+    /// Request-oriented workloads use the hints to measure per-request
+    /// service spans without widening the op interface.
+    fn tick_hint(&mut self, _tick: u64) {}
+
+    /// Stats this workload contributes to the host dump (e.g. the
+    /// `serve.*` family). Keys are host-relative; contributions with
+    /// the same key merge across the host's cores.
+    fn extra_stats(&self) -> Vec<(String, WlStat)> {
+        Vec::new()
+    }
 
     /// Total bytes the workload intends to move (for bandwidth math).
     fn bytes_moved(&self) -> u64;

@@ -1,0 +1,231 @@
+//! Trace replay workload (`[workload] kind = "replay"`).
+//!
+//! Re-executes a captured [`EventTrace`](crate::trace::EventTrace)
+//! bit-deterministically: `setup` re-mmaps the recorded VMAs (same
+//! lengths, order and policies — and asserts the deterministic mmap
+//! cursor hands back the recorded VAs), `init_data` replays the
+//! recorded functional init writes (reproducing attach-time page
+//! placement), and `next_op` streams the recorded op sequence. Under
+//! the same machine config, a replay run is event-for-event identical
+//! to the live run it was captured from — the property the pinned
+//! bench traces and CI regressions rely on.
+
+use crate::cpu::WlOp;
+use crate::guestos::{AddressSpace, MemPolicy};
+use crate::trace::{EventTrace, TraceOp};
+
+use super::{WlStat, Workload};
+
+/// One (host, core)'s slice of a captured trace.
+pub struct Replay {
+    vmas: Vec<(u64, u64, MemPolicy)>, // (recorded start, len, policy)
+    inits: Vec<(u64, u64)>,
+    ops: Vec<WlOp>,
+    at: usize,
+    bytes: u64,
+}
+
+impl Replay {
+    /// Extract the `(host, core)` stream from `t`. Cores not present
+    /// in the trace yield an empty replay (immediately done).
+    pub fn from_trace(t: &EventTrace, host: usize, core: usize) -> Self {
+        let (h, c) = (host as u8, core as u8);
+        let vmas = t
+            .vmas
+            .iter()
+            .filter(|v| v.host == h && v.core == c)
+            .map(|v| {
+                let pol = MemPolicy::parse(&v.policy)
+                    .expect("load-validated policy spec");
+                (v.start, v.len, pol)
+            })
+            .collect();
+        let inits = t
+            .inits
+            .iter()
+            .filter(|i| i.host == h && i.core == c)
+            .map(|i| (i.va, i.bits))
+            .collect();
+        let mut bytes = 0u64;
+        let ops = t
+            .events
+            .iter()
+            .filter(|e| e.host == h && e.core == c)
+            .map(|e| match e.op {
+                TraceOp::Load => {
+                    bytes += e.size as u64;
+                    WlOp::Load { va: e.arg, size: e.size as u32 }
+                }
+                TraceOp::Store => {
+                    bytes += e.size as u64;
+                    WlOp::Store { va: e.arg, size: e.size as u32 }
+                }
+                TraceOp::Work => WlOp::Work { cycles: e.arg },
+            })
+            .collect();
+        Replay { vmas, inits, ops, at: 0, bytes }
+    }
+
+    /// All of `host`'s per-core replays, dense from core 0 up to the
+    /// highest core the trace recorded for it (gap cores get empty
+    /// replays so core indices line up). Empty when the host is absent.
+    pub fn for_host(t: &EventTrace, host: usize) -> Vec<Box<dyn Workload>> {
+        let Some(max_core) = t.max_core(host as u8) else {
+            return Vec::new();
+        };
+        (0..=max_core as usize)
+            .map(|c| Box::new(Replay::from_trace(t, host, c)) as Box<dyn Workload>)
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+impl Workload for Replay {
+    fn name(&self) -> String {
+        format!("replay-{}ops", self.ops.len())
+    }
+
+    fn setup(&mut self, asp: &mut AddressSpace, _policy: &MemPolicy) {
+        for &(start, len, ref pol) in &self.vmas {
+            let va = asp.mmap(len, pol.clone());
+            // The mmap cursor is deterministic, so under the recorded
+            // config the recorded VAs must come back verbatim; anything
+            // else means the trace is being replayed against a
+            // different address-space history.
+            assert_eq!(
+                va, start,
+                "replay VMA landed at {va:#x}, trace recorded {start:#x} \
+                 (trace/config mismatch)"
+            );
+        }
+    }
+
+    fn next_op(&mut self) -> Option<WlOp> {
+        let op = self.ops.get(self.at).copied()?;
+        self.at += 1;
+        Some(op)
+    }
+
+    fn init_data(&self) -> Vec<(u64, u64)> {
+        self.inits.clone()
+    }
+
+    fn extra_stats(&self) -> Vec<(String, WlStat)> {
+        vec![
+            ("trace.replay_ops".into(), WlStat::Count(self.at as u64)),
+            (
+                "trace.replay_vmas".into(),
+                WlStat::Count(self.vmas.len() as u64),
+            ),
+        ]
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{InitRecord, MemEvent, VmaRecord};
+    use crate::workloads::testutil::{drain, world};
+
+    fn mini_trace() -> EventTrace {
+        let mut t = EventTrace::default();
+        // Core 0's first mmap lands at the canonical base.
+        t.vmas.push(VmaRecord {
+            host: 0,
+            core: 0,
+            start: 0x7f00_0000_0000,
+            len: 8192,
+            policy: "local".into(),
+        });
+        t.inits.push(InitRecord {
+            host: 0,
+            core: 0,
+            va: 0x7f00_0000_0000,
+            bits: 0xdead_beef,
+        });
+        for i in 0..10u64 {
+            t.events.push(MemEvent {
+                host: 0,
+                core: 0,
+                op: if i % 3 == 0 { TraceOp::Store } else { TraceOp::Load },
+                size: 8,
+                arg: 0x7f00_0000_0000 + i * 64,
+            });
+        }
+        // A second host the first must not see.
+        t.events.push(MemEvent {
+            host: 1,
+            core: 0,
+            op: TraceOp::Work,
+            size: 0,
+            arg: 99,
+        });
+        t
+    }
+
+    #[test]
+    fn replay_streams_recorded_ops_in_order() {
+        let t = mini_trace();
+        let mut r = Replay::from_trace(&t, 0, 0);
+        assert_eq!(r.len(), 10);
+        let (mut asp, _) = world();
+        r.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        let ops = drain(&mut r, 100);
+        assert_eq!(ops.len(), 10);
+        assert_eq!(ops[0], WlOp::Store { va: 0x7f00_0000_0000, size: 8 });
+        assert_eq!(
+            ops[1],
+            WlOp::Load { va: 0x7f00_0000_0000 + 64, size: 8 }
+        );
+        assert_eq!(r.init_data(), vec![(0x7f00_0000_0000, 0xdead_beef)]);
+        assert_eq!(r.bytes_moved(), 80);
+    }
+
+    #[test]
+    fn replay_filters_by_host_and_core() {
+        let t = mini_trace();
+        let mut other = Replay::from_trace(&t, 1, 0);
+        assert_eq!(other.len(), 1);
+        assert_eq!(other.next_op(), Some(WlOp::Work { cycles: 99 }));
+        assert!(Replay::from_trace(&t, 2, 0).is_empty());
+        assert!(Replay::from_trace(&t, 0, 1).is_empty());
+    }
+
+    #[test]
+    fn for_host_is_dense_over_cores() {
+        let mut t = mini_trace();
+        // Host 0 also has an event on core 2 but nothing on core 1.
+        t.events.push(MemEvent {
+            host: 0,
+            core: 2,
+            op: TraceOp::Work,
+            size: 0,
+            arg: 1,
+        });
+        let ws = Replay::for_host(&t, 0);
+        assert_eq!(ws.len(), 3); // cores 0..=2, core 1 empty
+        assert!(Replay::for_host(&t, 7).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "trace/config mismatch")]
+    fn replay_rejects_wrong_address_space_history() {
+        let t = mini_trace();
+        let mut r = Replay::from_trace(&t, 0, 0);
+        let (mut asp, _) = world();
+        // Perturb the mmap cursor so the recorded VA can't come back.
+        asp.mmap(4096, MemPolicy::Local { home: 0 });
+        r.setup(&mut asp, &MemPolicy::Local { home: 0 });
+    }
+}

@@ -1,0 +1,515 @@
+//! LLM inference-serving workload: per-request KV-cache churn across
+//! DRAM + CXL zNUMA tiers.
+//!
+//! A fixed simulated-user population issues requests in a Zipf mix (a
+//! few users own most of the traffic). Each user's KV context lives in
+//! a fixed-size *slot*; a small DRAM arena holds the hot slots and a
+//! larger CXL arena holds warm ones, both managed LRU. A request for a
+//! DRAM-resident context streams it straight from DRAM; a warm context
+//! is streamed from CXL and promoted (demoting the DRAM LRU victim to
+//! CXL); a cold miss prefills the context from scratch. Every request
+//! then decodes — compute plus an appended KV block. Request latencies
+//! (measured via [`Workload::tick_hint`] spans) feed the
+//! `serve.p50/p95/p99_ns` percentiles; hit/miss/eviction counters
+//! round out the `serve.*` stat family.
+
+use std::collections::VecDeque;
+
+use crate::cpu::WlOp;
+use crate::guestos::{AddressSpace, MemPolicy};
+use crate::util::rng::{Rng, Zipf};
+
+use super::{WlStat, Workload};
+
+/// Knobs for [`Serve`] (the `[workload.serve]` TOML table).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Simulated-user population the Zipf mix draws from.
+    pub users: u64,
+    /// Zipf exponent of the request mix (0 = uniform).
+    pub zipf_s: f64,
+    /// Requests to serve per core before finishing.
+    pub requests: u64,
+    /// Bytes per KV block (multiple of 64).
+    pub kv_block: u64,
+    /// Blocks per user context; slot size = `kv_block * context_blocks`.
+    pub context_blocks: u64,
+    /// Hot-tier (DRAM arena) slot count.
+    pub dram_slots: usize,
+    /// Warm-tier (CXL arena) slot count; 0 disables the warm tier
+    /// (demoted contexts are simply dropped).
+    pub cxl_slots: usize,
+    /// Compute cycles per decoded block.
+    pub decode_work: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            users: 512,
+            zipf_s: 1.1,
+            requests: 500,
+            kv_block: 1024,
+            context_blocks: 4,
+            dram_slots: 64,
+            cxl_slots: 256,
+            decode_work: 32,
+        }
+    }
+}
+
+/// Fixed-capacity LRU slot cache mapping users to arena slots.
+///
+/// The eviction machinery behind both serving tiers: `get` touches,
+/// `insert` hands out a free slot or recycles the LRU victim's,
+/// `remove` frees a slot for reuse. MRU order is maintained explicitly
+/// so tier behaviour is deterministic and unit-testable.
+#[derive(Clone, Debug)]
+pub struct TierLru {
+    cap: usize,
+    /// (user, slot), LRU at front / MRU at back.
+    ents: Vec<(u64, usize)>,
+    free: Vec<usize>,
+}
+
+impl TierLru {
+    pub fn new(cap: usize) -> Self {
+        TierLru { cap, ents: Vec::new(), free: (0..cap).rev().collect() }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.ents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ents.is_empty()
+    }
+
+    /// Look `user` up; a hit becomes most-recently-used.
+    pub fn get(&mut self, user: u64) -> Option<usize> {
+        let i = self.ents.iter().position(|&(u, _)| u == user)?;
+        let e = self.ents.remove(i);
+        let slot = e.1;
+        self.ents.push(e);
+        Some(slot)
+    }
+
+    /// Insert `user`, returning its slot and the evicted `(user, slot)`
+    /// if the cache was full (the victim's slot is the one reused).
+    /// Inserting a resident user just touches it. Panics when `cap` is
+    /// 0 — a zero-capacity tier must not be inserted into.
+    pub fn insert(&mut self, user: u64) -> (usize, Option<(u64, usize)>) {
+        assert!(self.cap > 0, "insert into zero-capacity tier");
+        if let Some(slot) = self.get(user) {
+            return (slot, None);
+        }
+        if let Some(slot) = self.free.pop() {
+            self.ents.push((user, slot));
+            return (slot, None);
+        }
+        let victim = self.ents.remove(0); // LRU
+        let slot = victim.1;
+        self.ents.push((user, slot));
+        (slot, Some(victim))
+    }
+
+    /// Drop `user`, freeing its slot for a later `insert`.
+    pub fn remove(&mut self, user: u64) -> Option<usize> {
+        let i = self.ents.iter().position(|&(u, _)| u == user)?;
+        let (_, slot) = self.ents.remove(i);
+        self.free.push(slot);
+        Some(slot)
+    }
+}
+
+/// The serving workload proper (`[workload] kind = "serve"`).
+pub struct Serve {
+    cfg: ServeConfig,
+    /// Hot-tier arena policy (DRAM-bound; see `PageAlloc::tier_policies`).
+    pub hot_policy: MemPolicy,
+    /// Warm-tier arena policy (CXL-bound).
+    pub cold_policy: MemPolicy,
+    rng: Rng,
+    zipf: Zipf,
+    hot: TierLru,
+    warm: TierLru,
+    dram_base: u64,
+    cxl_base: u64,
+    slot_bytes: u64,
+    queue: VecDeque<WlOp>,
+    reqs_started: u64,
+    bytes: u64,
+    // Stats.
+    tier_hits: u64,
+    tier_misses: u64,
+    evictions: u64,
+    requests_done: u64,
+    latencies_ns: Vec<u64>,
+    last_tick: u64,
+    cur_start: Option<u64>,
+}
+
+impl Serve {
+    pub fn new(
+        cfg: ServeConfig,
+        hot_policy: MemPolicy,
+        cold_policy: MemPolicy,
+        seed: u64,
+    ) -> Self {
+        assert!(cfg.kv_block >= 64 && cfg.kv_block % 64 == 0);
+        assert!(cfg.context_blocks > 0 && cfg.users > 0);
+        assert!(cfg.dram_slots > 0);
+        let zipf = Zipf::new(cfg.users, cfg.zipf_s);
+        let slot_bytes = cfg.kv_block * cfg.context_blocks;
+        Serve {
+            hot: TierLru::new(cfg.dram_slots),
+            warm: TierLru::new(cfg.cxl_slots),
+            cfg,
+            hot_policy,
+            cold_policy,
+            rng: Rng::new(seed),
+            zipf,
+            dram_base: 0,
+            cxl_base: 0,
+            slot_bytes,
+            queue: VecDeque::new(),
+            reqs_started: 0,
+            bytes: 0,
+            tier_hits: 0,
+            tier_misses: 0,
+            evictions: 0,
+            requests_done: 0,
+            latencies_ns: Vec::new(),
+            last_tick: 0,
+            cur_start: None,
+        }
+    }
+
+    fn dram_addr(&self, slot: usize) -> u64 {
+        self.dram_base + slot as u64 * self.slot_bytes
+    }
+
+    fn cxl_addr(&self, slot: usize) -> u64 {
+        self.cxl_base + slot as u64 * self.slot_bytes
+    }
+
+    /// Queue a 64B-line sweep over `[base, base+len)`.
+    fn push_lines(&mut self, base: u64, len: u64, store: bool) {
+        for off in (0..len).step_by(64) {
+            let va = base + off;
+            self.queue.push_back(if store {
+                WlOp::Store { va, size: 8 }
+            } else {
+                WlOp::Load { va, size: 8 }
+            });
+        }
+        self.bytes += len;
+    }
+
+    /// Land `user` in a hot slot, demoting the DRAM LRU victim to the
+    /// warm tier (or dropping it when the warm tier is absent).
+    fn promote(&mut self, user: u64) -> usize {
+        let (slot, victim) = self.hot.insert(user);
+        if let Some((victim_user, victim_slot)) = victim {
+            self.evictions += 1;
+            if self.warm.cap() > 0 {
+                let (wslot, dropped) = self.warm.insert(victim_user);
+                // Write the victim's context out to CXL. Whoever
+                // `dropped` names loses its warm copy silently.
+                let _ = dropped;
+                let (base, len) = (self.cxl_addr(wslot), self.slot_bytes);
+                self.push_lines(base, len, true);
+            }
+            let _ = victim_slot; // == slot (the LRU victim's slot is reused)
+        }
+        slot
+    }
+
+    /// Generate the full op stream for one request.
+    fn gen_request(&mut self) {
+        let user = self.zipf.sample(&mut self.rng);
+        let dram_slot = if let Some(slot) = self.hot.get(user) {
+            // Hot: context streams straight from DRAM.
+            self.tier_hits += 1;
+            let (base, len) = (self.dram_addr(slot), self.slot_bytes);
+            self.push_lines(base, len, false);
+            slot
+        } else if let Some(wslot) = self.warm.remove(user) {
+            // Warm: stream from CXL, then promote into DRAM.
+            self.tier_hits += 1;
+            let (base, len) = (self.cxl_addr(wslot), self.slot_bytes);
+            self.push_lines(base, len, false);
+            let slot = self.promote(user);
+            let (base, len) = (self.dram_addr(slot), self.slot_bytes);
+            self.push_lines(base, len, true);
+            slot
+        } else {
+            // Cold miss: prefill the whole context into DRAM.
+            self.tier_misses += 1;
+            let slot = self.promote(user);
+            self.queue.push_back(WlOp::Work {
+                cycles: self.cfg.decode_work * self.cfg.context_blocks,
+            });
+            let (base, len) = (self.dram_addr(slot), self.slot_bytes);
+            self.push_lines(base, len, true);
+            slot
+        };
+        // Decode: compute, then append one KV block (ring position).
+        self.queue.push_back(WlOp::Work { cycles: self.cfg.decode_work });
+        let blk = self.reqs_started % self.cfg.context_blocks;
+        let base = self.dram_addr(dram_slot) + blk * self.cfg.kv_block;
+        self.push_lines(base, self.cfg.kv_block, true);
+    }
+}
+
+impl Workload for Serve {
+    fn name(&self) -> String {
+        format!("serve-{}u", self.cfg.users)
+    }
+
+    fn setup(&mut self, asp: &mut AddressSpace, _policy: &MemPolicy) {
+        // Tier arenas override the run-wide default policy — the
+        // DRAM/CXL split IS the workload's placement decision.
+        self.dram_base = asp.mmap(
+            self.cfg.dram_slots as u64 * self.slot_bytes,
+            self.hot_policy.clone(),
+        );
+        if self.cfg.cxl_slots > 0 {
+            self.cxl_base = asp.mmap(
+                self.cfg.cxl_slots as u64 * self.slot_bytes,
+                self.cold_policy.clone(),
+            );
+        }
+    }
+
+    fn next_op(&mut self) -> Option<WlOp> {
+        if self.queue.is_empty() {
+            // Request boundary: the tick_hint just before this pull
+            // closes the previous request's service span.
+            if let Some(start) = self.cur_start.take() {
+                self.latencies_ns
+                    .push(self.last_tick.saturating_sub(start) / 1000);
+                self.requests_done += 1;
+            }
+            if self.reqs_started >= self.cfg.requests {
+                return None;
+            }
+            self.cur_start = Some(self.last_tick);
+            self.gen_request();
+            self.reqs_started += 1;
+        }
+        self.queue.pop_front()
+    }
+
+    fn tick_hint(&mut self, tick: u64) {
+        self.last_tick = tick;
+    }
+
+    fn extra_stats(&self) -> Vec<(String, WlStat)> {
+        vec![
+            ("serve.requests".into(), WlStat::Count(self.requests_done)),
+            ("serve.tier_hits".into(), WlStat::Count(self.tier_hits)),
+            ("serve.tier_misses".into(), WlStat::Count(self.tier_misses)),
+            ("serve.evictions".into(), WlStat::Count(self.evictions)),
+            ("serve".into(), WlStat::SamplesNs(self.latencies_ns.clone())),
+        ]
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::testutil::{drain, world};
+
+    fn small_cfg() -> ServeConfig {
+        ServeConfig {
+            users: 64,
+            zipf_s: 1.1,
+            requests: 60,
+            kv_block: 256,
+            context_blocks: 2,
+            dram_slots: 8,
+            cxl_slots: 16,
+            decode_work: 16,
+        }
+    }
+
+    fn local(home: u32) -> MemPolicy {
+        MemPolicy::Local { home }
+    }
+
+    // ---- TierLru eviction machinery ------------------------------------
+
+    #[test]
+    fn lru_insert_fills_then_evicts_in_lru_order() {
+        let mut t = TierLru::new(2);
+        let (s0, e0) = t.insert(10);
+        let (s1, e1) = t.insert(11);
+        assert!(e0.is_none() && e1.is_none());
+        assert_ne!(s0, s1);
+        // 10 is now LRU; inserting 12 evicts it and reuses its slot.
+        let (s2, e2) = t.insert(12);
+        assert_eq!(e2, Some((10, s0)));
+        assert_eq!(s2, s0);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn lru_get_touches_recency() {
+        let mut t = TierLru::new(2);
+        t.insert(1);
+        t.insert(2);
+        assert_eq!(t.get(1), Some(t.get(1).unwrap()));
+        // 1 was touched, so 2 is now the victim.
+        let (_, ev) = t.insert(3);
+        assert_eq!(ev.map(|(u, _)| u), Some(2));
+        assert!(t.get(1).is_some());
+        assert!(t.get(2).is_none());
+    }
+
+    #[test]
+    fn lru_remove_frees_slot_for_reuse() {
+        let mut t = TierLru::new(1);
+        let (s, _) = t.insert(5);
+        assert_eq!(t.remove(5), Some(s));
+        assert!(t.is_empty());
+        assert_eq!(t.remove(5), None);
+        // Freed slot comes back without an eviction.
+        let (s2, ev) = t.insert(6);
+        assert_eq!(s2, s);
+        assert!(ev.is_none());
+    }
+
+    #[test]
+    fn lru_insert_resident_user_is_a_touch() {
+        let mut t = TierLru::new(2);
+        let (s, _) = t.insert(7);
+        t.insert(8);
+        let (s2, ev) = t.insert(7); // already resident
+        assert_eq!(s2, s);
+        assert!(ev.is_none());
+        assert_eq!(t.len(), 2);
+        // 8 is now LRU.
+        let (_, ev) = t.insert(9);
+        assert_eq!(ev.map(|(u, _)| u), Some(8));
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-capacity")]
+    fn lru_zero_capacity_insert_panics() {
+        TierLru::new(0).insert(1);
+    }
+
+    #[test]
+    fn lru_single_slot_thrash() {
+        let mut t = TierLru::new(1);
+        let (s0, _) = t.insert(1);
+        for u in 2..10u64 {
+            let (s, ev) = t.insert(u);
+            assert_eq!(s, s0, "single slot always reused");
+            assert_eq!(ev.map(|(v, _)| v), Some(u - 1));
+        }
+    }
+
+    // ---- Serve op stream -----------------------------------------------
+
+    #[test]
+    fn serve_ops_stay_inside_arenas() {
+        let (mut asp, _) = world();
+        let mut w = Serve::new(small_cfg(), local(0), local(0), 7);
+        w.setup(&mut asp, &local(0));
+        let dram_lo = w.dram_base;
+        let dram_hi = dram_lo + w.cfg.dram_slots as u64 * w.slot_bytes;
+        let cxl_lo = w.cxl_base;
+        let cxl_hi = cxl_lo + w.cfg.cxl_slots as u64 * w.slot_bytes;
+        let ops = drain(&mut w, 200_000);
+        assert!(!ops.is_empty());
+        for op in &ops {
+            if let WlOp::Load { va, .. } | WlOp::Store { va, .. } = op {
+                let in_dram = *va >= dram_lo && *va < dram_hi;
+                let in_cxl = *va >= cxl_lo && *va < cxl_hi;
+                assert!(in_dram || in_cxl, "op outside arenas: {va:#x}");
+            }
+        }
+        assert_eq!(w.tier_hits + w.tier_misses, w.cfg.requests);
+        assert!(w.tier_misses >= (w.cfg.dram_slots as u64).min(w.cfg.requests));
+    }
+
+    #[test]
+    fn serve_zipf_mix_hits_after_warmup() {
+        let (mut asp, _) = world();
+        let mut cfg = small_cfg();
+        cfg.requests = 400;
+        let mut w = Serve::new(cfg, local(0), local(0), 11);
+        w.setup(&mut asp, &local(0));
+        drain(&mut w, 2_000_000);
+        // Zipf skew means the popular users' contexts stay resident.
+        assert!(w.tier_hits > 0, "no tier hits at all");
+        assert!(w.evictions > 0, "hot tier never churned");
+    }
+
+    #[test]
+    fn serve_latency_spans_via_tick_hints() {
+        let (mut asp, _) = world();
+        let mut cfg = small_cfg();
+        cfg.requests = 3;
+        let mut w = Serve::new(cfg, local(0), local(0), 13);
+        w.setup(&mut asp, &local(0));
+        // Issue-engine shape: hint (monotonic tick), then pull.
+        let mut tick = 0u64;
+        loop {
+            w.tick_hint(tick);
+            if w.next_op().is_none() {
+                break;
+            }
+            tick += 2_000; // 2 ns per op
+        }
+        assert_eq!(w.requests_done, 3);
+        assert_eq!(w.latencies_ns.len(), 3);
+        // Spans measured in ns (ticks/1000), all non-zero here.
+        assert!(w.latencies_ns.iter().all(|&l| l > 0));
+        let stats = w.extra_stats();
+        assert!(stats.iter().any(|(k, _)| k == "serve"));
+    }
+
+    #[test]
+    fn serve_no_warm_tier_drops_demotions() {
+        let (mut asp, _) = world();
+        let mut cfg = small_cfg();
+        cfg.cxl_slots = 0;
+        cfg.requests = 200;
+        let mut w = Serve::new(cfg, local(0), local(0), 17);
+        w.setup(&mut asp, &local(0));
+        assert_eq!(w.cxl_base, 0, "no warm arena mapped");
+        let ops = drain(&mut w, 2_000_000);
+        let dram_hi = w.dram_base + w.cfg.dram_slots as u64 * w.slot_bytes;
+        for op in &ops {
+            if let WlOp::Load { va, .. } | WlOp::Store { va, .. } = op {
+                assert!(
+                    *va >= w.dram_base && *va < dram_hi,
+                    "op left the DRAM arena with cxl_slots=0"
+                );
+            }
+        }
+        assert!(w.evictions > 0);
+    }
+
+    #[test]
+    fn serve_deterministic_for_seed() {
+        let run = || {
+            let (mut asp, _) = world();
+            let mut w = Serve::new(small_cfg(), local(0), local(0), 23);
+            w.setup(&mut asp, &local(0));
+            drain(&mut w, 2_000_000)
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -35,6 +35,7 @@ pub struct TieredKv {
 impl TieredKv {
     pub fn new(entries: u64, value_bytes: u64, ops: u64, seed: u64) -> Self {
         assert!(value_bytes % 64 == 0 && value_bytes >= 64);
+        assert!(entries > 0, "tiered-kv needs at least one entry");
         TieredKv {
             entries,
             value_bytes,
@@ -55,7 +56,11 @@ impl TieredKv {
     }
 
     fn hot_entries(&self) -> u64 {
-        ((self.entries as f64 * self.hot_frac) as u64).max(1)
+        // Clamp to the population: hot_frac >= 1.0 means everything is
+        // hot (and the cold tier is empty, never sampled).
+        ((self.entries as f64 * self.hot_frac) as u64)
+            .max(1)
+            .min(self.entries)
     }
 }
 
@@ -90,7 +95,11 @@ impl Workload for TieredKv {
             return None;
         }
         self.emitted += 1;
-        let hot = self.rng.chance(self.hot_hit_prob);
+        // An empty cold tier (hot_frac >= 1.0, or a single entry) must
+        // never be sampled — `below(0)` is undefined and the cold VMA
+        // is zero-length.
+        let cold_entries = self.entries - self.hot_entries();
+        let hot = cold_entries == 0 || self.rng.chance(self.hot_hit_prob);
         let (base, count) = if hot {
             (self.hot_base, self.hot_entries())
         } else {
@@ -146,6 +155,56 @@ mod tests {
             .count();
         let frac = hot_hits as f64 / ops.len() as f64;
         assert!((frac - 0.8).abs() < 0.05, "hot frac {frac}");
+    }
+
+    #[test]
+    fn all_hot_population_never_touches_cold_tier() {
+        // hot_frac = 1.0 used to sample `below(0)` and then access the
+        // zero-length cold VMA; now everything must stay in the hot VMA.
+        let (mut asp, _) = world();
+        let mut w = TieredKv::new(32, 64, 500, 5);
+        w.hot_frac = 1.0;
+        w.hot_policy = MemPolicy::Local { home: 0 };
+        w.cold_policy = MemPolicy::Local { home: 0 };
+        w.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        assert_eq!(w.hot_entries(), 32);
+        let hot_lo = w.hot_base;
+        let hot_hi = hot_lo + 32 * 64;
+        let ops = drain(&mut w, 5_000);
+        assert_eq!(ops.len(), 500);
+        for op in &ops {
+            if let WlOp::Load { va, .. } | WlOp::Store { va, .. } = op {
+                assert!(
+                    *va >= hot_lo && *va < hot_hi,
+                    "op escaped the hot VMA: {va:#x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_entry_population_is_all_hot() {
+        let (mut asp, _) = world();
+        let mut w = TieredKv::new(1, 64, 50, 6);
+        w.hot_policy = MemPolicy::Local { home: 0 };
+        w.cold_policy = MemPolicy::Local { home: 0 };
+        w.setup(&mut asp, &MemPolicy::Local { home: 0 });
+        // hot_entries().max(1) == entries: cold tier is empty.
+        assert_eq!(w.hot_entries(), 1);
+        let ops = drain(&mut w, 500);
+        assert_eq!(ops.len(), 50);
+        for op in &ops {
+            if let WlOp::Load { va, .. } | WlOp::Store { va, .. } = op {
+                assert_eq!(*va, w.hot_base, "only one 64B value exists");
+            }
+        }
+    }
+
+    #[test]
+    fn overlarge_hot_frac_clamps_to_population() {
+        let mut w = TieredKv::new(10, 64, 1, 7);
+        w.hot_frac = 3.5;
+        assert_eq!(w.hot_entries(), 10, "hot set clamps at the population");
     }
 
     #[test]

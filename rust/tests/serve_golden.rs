@@ -1,0 +1,173 @@
+//! Serve-workload golden runs: bit-determinism of the serving fleet on
+//! a 2-host switched MLD, and trace capture/replay reproducing the
+//! live run's stats exactly.
+
+use cxlramsim::config::{CxlDevOverride, LdRef, SimConfig};
+use cxlramsim::coordinator::attach_replay;
+use cxlramsim::guestos::ProgModel;
+use cxlramsim::system::Machine;
+use cxlramsim::trace::{EventTrace, Recorder};
+use cxlramsim::workloads::{Serve, ServeConfig, Workload};
+
+/// Two hosts over one switched 2-LD MLD expander, one LD each: both
+/// hosts see a DRAM node and a CXL zNUMA node, so serve's tier split
+/// is real on both.
+fn mld_config() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 2;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(2), ..Default::default() }];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }],
+        vec![LdRef { dev: 0, ld: 1 }],
+    ];
+    cfg
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        users: 64,
+        zipf_s: 1.1,
+        requests: 60,
+        kv_block: 256,
+        context_blocks: 2,
+        dram_slots: 8,
+        cxl_slots: 16,
+        decode_work: 16,
+    }
+}
+
+/// Boot `cfg`, attach one serve workload per host (tier policies from
+/// each host's booted NUMA topology), optionally teeing into a
+/// recorder, run to completion and return the machine.
+fn run_serve(cfg: &SimConfig, recorder: Option<&Recorder>) -> Machine {
+    let mut m = Machine::new(cfg.clone()).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    for h in 0..m.hosts.len() {
+        let (hot, cold) = m.hosts[h]
+            .guest
+            .as_ref()
+            .unwrap()
+            .alloc
+            .tier_policies();
+        let seed = cfg
+            .seed
+            .wrapping_add((h as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let wl: Box<dyn Workload> =
+            Box::new(Serve::new(serve_cfg(), hot, cold, seed));
+        let wl = match recorder {
+            Some(rec) => rec.wrap(h, 0, wl),
+            None => wl,
+        };
+        m.attach_workloads_to(h, vec![wl], &hot_default()).unwrap();
+    }
+    m.run(None);
+    m
+}
+
+/// Attach-time default policy (serve overrides it with its own tier
+/// arenas, so any valid policy works here).
+fn hot_default() -> cxlramsim::guestos::MemPolicy {
+    cxlramsim::guestos::MemPolicy::Local { home: 0 }
+}
+
+#[test]
+fn serve_two_host_mld_is_bit_deterministic() {
+    let cfg = mld_config();
+    let a = run_serve(&cfg, None).dump_stats().to_text();
+    let b = run_serve(&cfg, None).dump_stats().to_text();
+    assert_eq!(a, b, "same seed must give the identical stats dump");
+    // The serving stats actually showed up on both hosts.
+    for probe in [
+        "host0.serve.requests",
+        "host1.serve.requests",
+        "host0.serve.p99_ns",
+        "host0.serve.tier_hits",
+        "host1.serve.evictions",
+    ] {
+        assert!(a.contains(probe), "{probe} missing from dump:\n{a}");
+    }
+}
+
+#[test]
+fn serve_seed_changes_the_run() {
+    let cfg = mld_config();
+    let mut cfg2 = mld_config();
+    cfg2.seed = 99;
+    let a = run_serve(&cfg, None).dump_stats().to_text();
+    let b = run_serve(&cfg2, None).dump_stats().to_text();
+    assert_ne!(a, b, "different seeds must differ (sanity check)");
+}
+
+/// Stat keys that describe the workload itself rather than the
+/// machine: the live run emits `serve.*`, the replay run `trace.*`.
+/// Everything else must match exactly between the two.
+fn machine_keys(dump: &cxlramsim::stats::StatDump) -> Vec<(String, f64)> {
+    dump.entries
+        .iter()
+        .filter(|(k, _)| {
+            let tail = k
+                .split_once('.')
+                .map(|(head, tail)| {
+                    if head.starts_with("host")
+                        && head[4..].chars().all(|c| c.is_ascii_digit())
+                    {
+                        tail
+                    } else {
+                        k.as_str()
+                    }
+                })
+                .unwrap_or(k.as_str());
+            !tail.starts_with("serve.") && !tail.starts_with("trace.")
+        })
+        .cloned()
+        .collect()
+}
+
+#[test]
+fn captured_serve_trace_replays_bit_identically() {
+    let cfg = mld_config();
+    // Live run, teeing every (host, core) stream into one trace.
+    let rec = Recorder::new();
+    let live = run_serve(&cfg, Some(&rec));
+    let live_dump = live.dump_stats();
+    let t = rec.take();
+    assert!(!t.is_empty(), "recorder captured nothing");
+    assert_eq!(t.hosts(), vec![0, 1]);
+
+    // The recorded wrapper must not have perturbed the run: a bare
+    // live run's machine stats match the recorded one's exactly.
+    let bare_dump = run_serve(&cfg, None).dump_stats();
+    assert_eq!(
+        machine_keys(&bare_dump),
+        machine_keys(&live_dump),
+        "recording changed the simulation"
+    );
+
+    // Byte round-trip through the on-disk format.
+    let t = EventTrace::from_bytes(&t.to_bytes()).unwrap();
+
+    // Replay into a fresh machine under the same config.
+    let mut m = Machine::new(cfg.clone()).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    attach_replay(&mut m, &t).unwrap();
+    m.run(None);
+    let replay_dump = m.dump_stats();
+
+    // Bit-identical machine behaviour: every per-tier read/write
+    // counter, latency percentile and link stat matches the live run.
+    assert_eq!(
+        machine_keys(&live_dump),
+        machine_keys(&replay_dump),
+        "replay diverged from the live run"
+    );
+    // And the replay bookkeeping is visible.
+    let ops: f64 = t.len() as f64;
+    let replayed = replay_dump.get("host0.trace.replay_ops").unwrap()
+        + replay_dump.get("host1.trace.replay_ops").unwrap();
+    assert_eq!(replayed, ops, "not every recorded op was replayed");
+}

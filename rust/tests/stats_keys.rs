@@ -17,7 +17,8 @@ use cxlramsim::config::{
 use cxlramsim::guestos::{MemPolicy, ProgModel};
 use cxlramsim::stats::StatDump;
 use cxlramsim::system::Machine;
-use cxlramsim::workloads::{Stream, StreamKernel};
+use cxlramsim::trace::Recorder;
+use cxlramsim::workloads::{Serve, ServeConfig, Stream, StreamKernel};
 
 /// Expand one-level `{a,b,c}` alternation groups in a documented
 /// pattern (placeholders like `{N}` contain no comma and are left
@@ -254,6 +255,85 @@ fn policy_run_stat_keys_are_documented() {
     }
     assert!(d.get("fm.policy.epochs").unwrap() > 0.0);
     assert_documented(&d, &documented);
+}
+
+#[test]
+fn serve_and_replay_stat_keys_are_documented() {
+    // The serving workload (`serve.*` family incl. latency percentiles)
+    // and trace replay (`trace.*` family) are the newest emitters; both
+    // dumps must be fully covered by docs/STATS.md.
+    let md = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/docs/STATS.md"
+    ))
+    .expect("docs/STATS.md must exist");
+    let documented = documented_patterns(&md);
+
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(2), ..Default::default() }];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }],
+        vec![LdRef { dev: 0, ld: 1 }],
+    ];
+    let scfg = ServeConfig {
+        users: 64,
+        zipf_s: 1.1,
+        requests: 40,
+        kv_block: 256,
+        context_blocks: 2,
+        dram_slots: 8,
+        cxl_slots: 16,
+        decode_work: 16,
+    };
+    let mut m = Machine::new(cfg.clone()).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let rec = Recorder::new();
+    for h in 0..2 {
+        let (hot, cold) =
+            m.hosts[h].guest.as_ref().unwrap().alloc.tier_policies();
+        let wl = Box::new(Serve::new(scfg.clone(), hot, cold, 7 + h as u64));
+        m.attach_workloads_to(
+            h,
+            vec![rec.wrap(h, 0, wl)],
+            &MemPolicy::Local { home: 0 },
+        )
+        .unwrap();
+    }
+    m.run(None);
+    let d = m.dump_stats();
+    for probe in [
+        "host0.serve.requests",
+        "host0.serve.tier_hits",
+        "host1.serve.tier_misses",
+        "host1.serve.evictions",
+        "host0.serve.p50_ns",
+        "host1.serve.p99_ns",
+    ] {
+        assert!(d.get(probe).is_some(), "expected emitter missing: {probe}");
+    }
+    assert_documented(&d, &documented);
+
+    // Replay the captured trace: the `trace.*` family must be
+    // documented too.
+    let t = rec.take();
+    let mut m2 = Machine::new(cfg).unwrap();
+    m2.boot(ProgModel::Znuma).unwrap();
+    cxlramsim::coordinator::attach_replay(&mut m2, &t).unwrap();
+    m2.run(None);
+    let d2 = m2.dump_stats();
+    for probe in ["host0.trace.replay_ops", "host1.trace.replay_vmas"] {
+        assert!(
+            d2.get(probe).is_some(),
+            "expected emitter missing: {probe}"
+        );
+    }
+    assert_documented(&d2, &documented);
 }
 
 #[test]
