@@ -9,7 +9,7 @@
 //!
 //! Run: `cargo bench --bench sim_throughput`
 
-use cxlramsim::config::SimConfig;
+use cxlramsim::config::{CxlDevOverride, LdRef, SimConfig};
 use cxlramsim::guestos::{MemPolicy, ProgModel};
 use cxlramsim::system::Machine;
 use cxlramsim::util::bench::BenchRunner;
@@ -71,6 +71,61 @@ fn measure_loop(samples: usize) -> (u64, u64, f64) {
     (events, ticks, per_run[per_run.len() / 2])
 }
 
+/// The 16-host rack from the parallel-determinism harness: four 4-LD
+/// MLDs behind two switches, one LD (and one STREAM core) per host.
+fn rack_cfg(threads: usize) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 16;
+    cfg.cores = 1;
+    cfg.threads = threads;
+    cfg.sys_mem_size = 128 << 20;
+    cfg.cxl.devices = 4;
+    cfg.cxl.mem_size = 1 << 30; // 4 x 256 MiB LD slices per device
+    cfg.cxl.switches = 2;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(4), ..Default::default() }; 4];
+    cfg.host_lds = (0..16)
+        .map(|h| vec![LdRef { dev: h / 4, ld: (h % 4) as u16 }])
+        .collect();
+    cfg
+}
+
+fn build_rack(threads: usize, n: u64) -> Machine {
+    let mut m = Machine::new(rack_cfg(threads)).expect("rack machine");
+    m.boot(ProgModel::Znuma).expect("rack boot");
+    for h in 0..16 {
+        let kernel = [
+            StreamKernel::Copy,
+            StreamKernel::Scale,
+            StreamKernel::Add,
+            StreamKernel::Triad,
+        ][h % 4];
+        m.attach_workloads_to(
+            h,
+            vec![Box::new(Stream::new(kernel, n, 1))],
+            &MemPolicy::Interleave { weights: vec![(0, 1), (1, 1)] },
+        )
+        .expect("rack attach");
+    }
+    m
+}
+
+/// Median event-loop time for the 16-host rack at a thread count.
+/// Returns (events, median loop ns).
+fn measure_rack(threads: usize, n: u64, samples: usize) -> (u64, f64) {
+    let mut per_run = Vec::with_capacity(samples);
+    let mut events = 0;
+    for _ in 0..samples {
+        let mut m = build_rack(threads, n);
+        let t = std::time::Instant::now();
+        let s = m.run(None);
+        per_run.push(t.elapsed().as_nanos() as f64);
+        events = s.events;
+    }
+    per_run.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (events, per_run[per_run.len() / 2])
+}
+
 fn main() {
     let quick = std::env::var("CXLRAMSIM_BENCH_QUICK").is_ok();
     let mut r = BenchRunner::new("sim_throughput");
@@ -88,6 +143,33 @@ fn main() {
         loop_ns / sim_ns
     );
 
+    // The rack-scale scaling axis: 16 hosts, threads 1/2/4/8. Same
+    // workload at every point (bit-identical results by the
+    // determinism contract), so events/sec differences are pure
+    // event-loop scaling.
+    let rack_n: u64 = if quick { 8192 } else { 32768 };
+    let rack_samples = if quick { 1 } else { 3 };
+    let mut rack_points = Vec::new();
+    let mut rack_serial_eps = 0.0;
+    for threads in [1usize, 2, 4, 8] {
+        let (ev, ns) = measure_rack(threads, rack_n, rack_samples);
+        let eps = ev as f64 * 1e9 / ns;
+        if threads == 1 {
+            rack_serial_eps = eps;
+        }
+        println!(
+            "sim_throughput[rack16 t={threads}]: {ev} events in \
+             {:.1} ms -> {:.0} events/s ({:.2}x vs serial)",
+            ns / 1e6,
+            eps,
+            eps / rack_serial_eps.max(1.0)
+        );
+        rack_points.push(format!(
+            "{{\"threads\":{threads},\"events\":{ev},\
+             \"loop_median_ns\":{ns:.1},\"events_per_sec\":{eps:.1}}}"
+        ));
+    }
+
     // End-to-end (new + boot + attach + run) for context.
     let s = r.bench("stream4x_4dev_end_to_end", || {
         std::hint::black_box(run_once());
@@ -101,8 +183,11 @@ fn main() {
          cores, 4 devices, 4-way interleave\",\"events\":{events},\
          \"sim_ticks\":{ticks},\"loop_median_ns\":{loop_ns:.1},\
          \"events_per_sec\":{events_per_sec:.1},\
-         \"end_to_end_median_ns\":{:.1},\"end_to_end_p90_ns\":{:.1}}}\n",
-        s.median_ns, s.p90_ns
+         \"end_to_end_median_ns\":{:.1},\"end_to_end_p90_ns\":{:.1},\
+         \"rack16\":[{}]}}\n",
+        s.median_ns,
+        s.p90_ns,
+        rack_points.join(",")
     );
     if let Err(e) = std::fs::write("BENCH_sim_throughput.json", &json) {
         eprintln!("sim_throughput: could not write BENCH file: {e}");

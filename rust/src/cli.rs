@@ -98,6 +98,10 @@ impl Args {
                     let v = val(&mut i)?;
                     a.sets.push(format!("system.hosts={v}"));
                 }
+                "--threads" => {
+                    let v = val(&mut i)?;
+                    a.sets.push(format!("sim.threads={v}"));
+                }
                 "--switches" => {
                     let v = val(&mut i)?;
                     a.sets.push(format!("cxl.switches={v}"));
@@ -268,6 +272,9 @@ pub fn print_help() {
            --attach iobus|membus  CXL attach point (membus = baseline)\n\
            --hosts H              simulated hosts sharing the fabric\n\
                                   (LD pooling via [host.N] lds lists)\n\
+           --threads N            worker threads for the parallel event\n\
+                                  loop (1 = serial; results are\n\
+                                  bit-identical at every N)\n\
            --devices N            number of CXL expander cards\n\
            --switches M           CXL switches between root ports and\n\
                                   endpoints (0 = direct attach)\n\
@@ -613,6 +620,14 @@ mod tests {
         let a = Args::parse(&sv(&["boot", "--hosts", "2"])).unwrap();
         let cfg = a.config().unwrap();
         assert_eq!(cfg.hosts, 2);
+    }
+
+    #[test]
+    fn threads_flag_reaches_config() {
+        let a =
+            Args::parse(&sv(&["run", "--threads", "4"])).unwrap();
+        let cfg = a.config().unwrap();
+        assert_eq!(cfg.threads, 4);
     }
 
     #[test]

@@ -24,7 +24,9 @@ pub struct WorkloadConfig {
 }
 
 /// Maximum simulated hosts sharing one CXL fabric (`system.hosts`).
-pub const MAX_HOSTS: usize = 4;
+/// Rack scale: a pod of up to 64 hosts over one fabric; the parallel
+/// event loop (`[sim] threads`) is what makes runs this wide tractable.
+pub const MAX_HOSTS: usize = 64;
 
 /// Reference to one logical device, written `"devN.ldK"` (or just
 /// `"devN"` for LD 0) in `[host.N] lds` lists. CXL windows are keyed by
@@ -677,6 +679,24 @@ pub struct SimConfig {
     pub seed: u64,
     /// `[workload]` section (kind/trace selection + serve knobs).
     pub workload: WorkloadConfig,
+    /// `[sim] threads`: worker threads for the conservative-parallel
+    /// event loop (`--threads`). 1 = serial. Any value produces
+    /// bit-identical results — the epoch structure is a function of
+    /// queue state, not thread count — so this is purely a wall-clock
+    /// knob. Defaults to `$CXLRAMSIM_THREADS` when set, else 1.
+    pub threads: usize,
+}
+
+/// Default for `[sim] threads`: the `CXLRAMSIM_THREADS` environment
+/// variable when it parses to a positive count, else 1 (serial). The
+/// env hook is how CI runs the whole tier-1 suite under the parallel
+/// scheduler without touching any test's config.
+fn default_threads() -> usize {
+    std::env::var("CXLRAMSIM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
 }
 
 impl Default for SimConfig {
@@ -754,6 +774,7 @@ impl Default for SimConfig {
             page_size: 4096,
             seed: 1,
             workload: WorkloadConfig::default(),
+            threads: default_threads(),
         }
     }
 }
@@ -807,6 +828,9 @@ impl SimConfig {
         }
         if self.hosts == 0 || self.hosts > MAX_HOSTS {
             bail!("system.hosts must be 1..={MAX_HOSTS}");
+        }
+        if self.threads == 0 || self.threads > 256 {
+            bail!("sim.threads must be 1..=256");
         }
         if !self.host_lds.is_empty() && self.host_lds.len() != self.hosts {
             bail!(
@@ -1242,6 +1266,7 @@ impl SimConfig {
             bail!("system.hosts must be 1..={MAX_HOSTS}");
         }
         get!("system.cores", c.cores, usize);
+        get!("sim.threads", c.threads, usize);
         get!("system.freq_ghz", c.freq_ghz, f64);
         get!("system.rob", c.rob_entries, usize);
         get!("system.lsq", c.lsq_entries, usize);
@@ -1978,6 +2003,24 @@ mod tests {
         assert!(err.is_err(), "huge hosts value must be rejected");
         let err = SimConfig::from_toml("[system]\nhosts = 0\n", &[]);
         assert!(err.is_err(), "hosts = 0 must be rejected");
+    }
+
+    #[test]
+    fn sim_threads_parses_and_validates() {
+        let cfg =
+            SimConfig::from_toml("[sim]\nthreads = 8\n", &[]).unwrap();
+        assert_eq!(cfg.threads, 8);
+        let cfg =
+            SimConfig::from_toml("", &["sim.threads=3".to_string()])
+                .unwrap();
+        assert_eq!(cfg.threads, 3);
+        let mut c = SimConfig::default();
+        c.threads = 0;
+        assert!(c.validate().is_err(), "threads = 0 must be rejected");
+        c.threads = 257;
+        assert!(c.validate().is_err(), "threads > 256 must be rejected");
+        c.threads = 16;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

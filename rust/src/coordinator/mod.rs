@@ -219,39 +219,58 @@ pub fn warm_machine(
 /// Multi-threaded sweep runner: runs `points` through `f` on worker
 /// threads (each worker builds its own machine — nothing is shared),
 /// preserving input order in the output.
+///
+/// Panic-safe by construction: a panicking point is caught in its
+/// worker, every *other* point still runs to completion (no stranded
+/// queue entries, no poisoned-mutex cascade through the siblings), and
+/// the first panic re-raises in the caller only after all workers have
+/// drained and joined. Scoped threads also drop the old `'static`
+/// bounds, so closures may borrow from the caller's stack.
 pub fn run_sweep<P, R, F>(points: Vec<P>, threads: usize, f: F) -> Vec<R>
 where
-    P: Send + 'static,
-    R: Send + 'static,
-    F: Fn(P) -> R + Send + Sync + 'static,
+    P: Send,
+    R: Send,
+    F: Fn(P) -> R + Send + Sync,
 {
-    let threads = threads.max(1);
-    let f = std::sync::Arc::new(f);
-    let work: Vec<(usize, P)> = points.into_iter().enumerate().collect();
-    let queue = std::sync::Arc::new(std::sync::Mutex::new(work));
-    let results = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
-    let mut handles = Vec::new();
-    for _ in 0..threads {
-        let q = queue.clone();
-        let r = results.clone();
-        let f = f.clone();
-        handles.push(std::thread::spawn(move || loop {
-            let item = q.lock().unwrap().pop();
-            let Some((idx, p)) = item else { break };
-            let out = f(p);
-            r.lock().unwrap().push((idx, out));
-        }));
+    let n = points.len();
+    let threads = threads.max(1).min(n.max(1));
+    // Reversed so `pop()` hands points out in input order; results go
+    // home by index, so completion order never matters.
+    let work: std::sync::Mutex<Vec<(usize, P)>> =
+        std::sync::Mutex::new(points.into_iter().enumerate().rev().collect());
+    let results: std::sync::Mutex<Vec<Option<R>>> =
+        std::sync::Mutex::new((0..n).map(|_| None).collect());
+    let first_panic: std::sync::Mutex<
+        Option<Box<dyn std::any::Any + Send>>,
+    > = std::sync::Mutex::new(None);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let item = work.lock().unwrap().pop();
+                let Some((idx, p)) = item else { break };
+                match std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| f(p)),
+                ) {
+                    Ok(out) => results.lock().unwrap()[idx] = Some(out),
+                    Err(e) => {
+                        let mut slot = first_panic.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    if let Some(p) = first_panic.into_inner().unwrap() {
+        std::panic::resume_unwind(p);
     }
-    for h in handles {
-        h.join().expect("sweep worker panicked");
-    }
-    let mut out = std::sync::Arc::try_unwrap(results)
-        .ok()
-        .expect("workers done")
+    results
         .into_inner()
-        .unwrap();
-    out.sort_by_key(|(i, _)| *i);
-    out.into_iter().map(|(_, r)| r).collect()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every point completed"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -268,5 +287,48 @@ mod tests {
     fn sweep_single_thread_works() {
         let out = run_sweep(vec![3u64, 1, 4], 1, |x| x + 1);
         assert_eq!(out, vec![4, 2, 5]);
+    }
+
+    #[test]
+    fn sweep_more_threads_than_points_preserves_input_order() {
+        // Property over every small point count, including the empty
+        // sweep: far more workers than work must neither hang nor
+        // scramble the input order.
+        for n in 0..8u64 {
+            let pts: Vec<u64> = (0..n).collect();
+            let want: Vec<u64> = pts.iter().map(|&x| x * 3 + 1).collect();
+            let out = run_sweep(pts, 16, |x| x * 3 + 1);
+            assert_eq!(out, want, "n = {n}");
+        }
+    }
+
+    #[test]
+    fn sweep_panicking_point_does_not_strand_the_rest() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let done = AtomicUsize::new(0);
+        let res = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                run_sweep((0..20u64).collect(), 3, |x| {
+                    if x == 5 {
+                        panic!("sweep point {x} exploded");
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                    x
+                })
+            }),
+        );
+        assert!(res.is_err(), "the point's panic must reach the caller");
+        // Every other point still ran: workers drain the queue rather
+        // than deadlocking on a dead sibling or a poisoned mutex.
+        assert_eq!(done.load(Ordering::SeqCst), 19);
+    }
+
+    #[test]
+    fn sweep_borrows_caller_state() {
+        // The scoped rewrite dropped the 'static bounds: closures may
+        // read (and results may reference) the caller's stack.
+        let base = vec![10u64, 20, 30];
+        let out = run_sweep(vec![0usize, 1, 2], 2, |i| base[i] + 1);
+        assert_eq!(out, vec![11, 21, 31]);
     }
 }

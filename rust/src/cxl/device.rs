@@ -33,8 +33,8 @@ pub struct DeviceStats {
     /// Per-LD traffic attributed to the issuing host
     /// (`[ld][host]`, host < [`crate::config::MAX_HOSTS`]) — makes
     /// cross-host contention on a pooled MLD's media measurable.
-    pub ld_host_reads: Vec<[Counter; crate::config::MAX_HOSTS]>,
-    pub ld_host_writes: Vec<[Counter; crate::config::MAX_HOSTS]>,
+    pub ld_host_reads: Vec<Vec<Counter>>,
+    pub ld_host_writes: Vec<Vec<Counter>>,
     /// Successful runtime FM re-binds per logical device (boot-time
     /// config binding is not counted).
     pub ld_rebinds: Vec<Counter>,
@@ -87,8 +87,14 @@ impl CxlDevice {
             stats: DeviceStats {
                 ld_reads: vec![Counter::default(); lds],
                 ld_writes: vec![Counter::default(); lds],
-                ld_host_reads: vec![Default::default(); lds],
-                ld_host_writes: vec![Default::default(); lds],
+                ld_host_reads: vec![
+                    vec![Counter::default(); crate::config::MAX_HOSTS];
+                    lds
+                ],
+                ld_host_writes: vec![
+                    vec![Counter::default(); crate::config::MAX_HOSTS];
+                    lds
+                ],
                 ld_rebinds: vec![Counter::default(); lds],
                 ..Default::default()
             },

@@ -186,6 +186,42 @@ impl CxlRootComplex {
         self.windows.iter().map(|w| (w.base, w.size)).collect()
     }
 
+    /// Packetize only: tag the request and account the packetization
+    /// cost, without touching the fabric. The split-phase event loop
+    /// uses this at emission time — the host builds the M2S packet when
+    /// it *decides* to send, and the credit check + link send happen
+    /// later at the fabric-commit barrier (see
+    /// `system::machine`'s parallel determinism contract). Tags are
+    /// therefore assigned in host event order, which is what makes them
+    /// independent of worker-thread scheduling.
+    pub fn packetize(&mut self, host_pkt: &Packet) -> CxlMemPacket {
+        let tag = self.next_tag;
+        self.next_tag = self.next_tag.wrapping_add(1);
+        let pkt = mem_proto::packetize(host_pkt, tag)
+            .expect("unroutable command reached the RC");
+        self.stats.packetized.inc();
+        self.stats.packetize_ticks.add(self.pkt_ticks);
+        pkt
+    }
+
+    /// Account a response that the fabric-commit phase already timed
+    /// (`done` = RC-side availability, after link hops + depacketize).
+    /// The stats-side half of [`CxlRootComplex::receive_s2m`].
+    pub fn note_response(&mut self, done: Tick, issued_at: Tick) {
+        self.stats.responses.inc();
+        self.stats.round_trip.sample(done.saturating_sub(issued_at));
+    }
+
+    /// RC-side packetization cost in ticks.
+    pub fn pkt_ticks(&self) -> Tick {
+        self.pkt_ticks
+    }
+
+    /// RC-side de-packetization cost in ticks.
+    pub fn depkt_ticks(&self) -> Tick {
+        self.depkt_ticks
+    }
+
     /// Packetize a host request at `now` onto device `dev`'s fabric
     /// path:
     /// * `Ok((pkt, device_arrival))` — entered the link(s).
@@ -221,12 +257,7 @@ impl CxlRootComplex {
                 return Err(t);
             }
         }
-        let tag = self.next_tag;
-        self.next_tag = self.next_tag.wrapping_add(1);
-        let pkt = mem_proto::packetize(host_pkt, tag)
-            .expect("unroutable command reached the RC");
-        self.stats.packetized.inc();
-        self.stats.packetize_ticks.add(self.pkt_ticks);
+        let pkt = self.packetize(host_pkt);
         let arrival = fabric.send_m2s(after_pkt, &pkt, dev);
         Ok((pkt, arrival))
     }
@@ -245,8 +276,7 @@ impl CxlRootComplex {
         let rc_arrival = fabric.send_s2m(ready, resp, dev);
         let done = rc_arrival + self.depkt_ticks; // RC-side unpack
         fabric.retire(dev, done);
-        self.stats.responses.inc();
-        self.stats.round_trip.sample(done.saturating_sub(issued_at));
+        self.note_response(done, issued_at);
         done
     }
 

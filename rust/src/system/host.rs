@@ -8,12 +8,31 @@
 //! windows + packetizer) are its hardware, and the event-driven memory
 //! path runs against its caches. What it does **not** own is the CXL
 //! tree below the root ports — devices, switches and links live in the
-//! shared [`crate::cxl::Fabric`], passed into every timing-path method,
-//! so multiple hosts contend on the same wires, credits and media.
+//! shared [`crate::cxl::Fabric`].
 //!
-//! Events are scheduled into the machine's single unified queue tagged
-//! `(host id, Ev)`; (tick, seq) ordering is global, which keeps
-//! multi-host runs exactly as bit-deterministic as single-host ones.
+//! # Split-phase event loop
+//!
+//! Since the rack-scale parallel scheduler, each host owns its **own**
+//! event queue and never touches the fabric directly from the timing
+//! path. Host-local events (issue, hits, fills, retries) are dispatched
+//! from [`Host::drain_to`]; anything that must cross the fabric
+//! boundary (a CXL fetch or write-back) is *emitted* as a
+//! [`FabricReq`] into the host's outbox instead of being timed inline.
+//! The machine merges every host's outbox into one globally ordered
+//! `(tick, host, seq)` map and commits the requests against the shared
+//! fabric on the main thread, which is what keeps `threads = N` runs
+//! bit-identical to serial ones: fabric state only ever mutates in that
+//! canonical order, regardless of which worker thread ran which host.
+//!
+//! The host self-throttles while draining: once it has emitted a
+//! request at tick `e`, it stops processing local events beyond
+//! `e + lookahead - 1`, where the lookahead is the minimum fixed
+//! round-trip latency to any device it can reach (packetize + path +
+//! de-packetize, both ways). No response can arrive earlier than that,
+//! so the host never runs past a tick at which new input could still
+//! appear — the conservative-parallel (null-message) invariant. The
+//! machine applies the same bound across epochs for requests that are
+//! still pending in the global map.
 //!
 //! The host also carries the per-host half of **runtime FM re-binding**
 //! (`docs/ARCHITECTURE.md` has the full flow): before the fabric
@@ -34,7 +53,7 @@ use crate::cache::{Access, CacheArray, Directory, MesiState, MshrAlloc,
                    MshrFile, Victim};
 use crate::config::{CxlAttach, SimConfig};
 use crate::cpu::{Core, WlOp};
-use crate::cxl::fabric::Fabric;
+use crate::cxl::mem_proto::CxlMemPacket;
 use crate::cxl::regs::ComponentRegs;
 use crate::cxl::CxlRootComplex;
 use crate::guestos::{AddressSpace, GuestOs, MemPolicy};
@@ -44,8 +63,9 @@ use crate::sim::{ns_to_ticks, EventQueue, MemCmd, Packet, ReqId, Tick};
 use crate::stats::{Counter, Histogram, StatDump};
 use crate::workloads::{WlStat, Workload};
 
-/// Host events (only async points become events — see module docs).
-/// The machine's queue carries them tagged with the owning host's id.
+/// Host-local events (only async points become events — see module
+/// docs). Machine-level events (FM actions, policy epochs) live in the
+/// machine's own queue, not here.
 #[derive(Debug)]
 pub(crate) enum Ev {
     /// Core front-end tries to issue.
@@ -56,33 +76,50 @@ pub(crate) enum Ev {
     LineFill { core: u8, line_pa: u64 },
     /// DRAM controller queue was full — retry the fetch.
     DramRetry { core: u8, line_pa: u64, wants_excl: bool },
-    /// CXL M2S credit stall — retry packetization.
-    CxlRetry { core: u8, line_pa: u64, wants_excl: bool },
     /// L1 MSHR file was full when the miss arrived — the op is parked
     /// (request stays live in the core's LSQ) and re-probes later.
     MshrRetry { core: u8, pa: u64, is_write: bool, req: ReqId },
-    /// A scheduled Fabric-Manager action (index into
-    /// `SimConfig::fm_events`). Machine-level: `Machine::run` intercepts
-    /// it before host dispatch — the FM spans hosts (it quiesces one
-    /// host, drives the shared device's mailbox, notifies another), so
-    /// it cannot be handled from within a single [`Host`].
-    Fm(u32),
-    /// Telemetry-policy sampling epoch (`[fm] policy`). Machine-level
-    /// like [`Ev::Fm`]: the policy reads every host's and LD's load
-    /// and may move LDs between hosts.
-    FmEpoch,
-    /// A policy-decided LD move (`devN.ldK`: host `from` -> host `to`)
-    /// re-probing its quiesce gate. Machine-level like [`Ev::Fm`];
-    /// `from` pins the donor the decision was made for, so a deferred
-    /// move is dropped as stale if ownership changed in the meantime.
-    FmMove { dev: u8, ld: u8, from: u8, to: u8 },
+    /// A CXL response committed on the fabric landed back at this host
+    /// (delivered by the machine's commit phase): de-packetized data is
+    /// at the root complex / membus edge, ready to travel up to L2.
+    CxlFill { core: u8, line_pa: u64, issued_at: Tick },
 }
 
-/// The unified queue's event type: `(host id, event)`.
-pub(crate) type HostEv = (u8, Ev);
+/// A fabric-crossing request emitted by a host's timing path. The
+/// machine commits these against the shared [`crate::cxl::Fabric`] in
+/// global `(tick, host, seq)` order — the only place fabric state
+/// mutates, in both serial and parallel runs.
+#[derive(Debug)]
+pub(crate) enum FabricReq {
+    /// IOBus-attach line fetch: an already-packetized M2S read heading
+    /// for device `dev`'s fabric path.
+    Fetch {
+        dev: usize,
+        pkt: CxlMemPacket,
+        core: u8,
+        line_pa: u64,
+        issued_at: Tick,
+    },
+    /// IOBus-attach posted write-back (NDR completion retires the
+    /// credit; no host-visible response).
+    Writeback { dev: usize, pkt: CxlMemPacket },
+    /// MemBus-baseline line fetch: straight to device media, protocol
+    /// collapsed into the host's fixed adder.
+    MediaFetch { dev: usize, dpa: u64, core: u8, line_pa: u64 },
+    /// MemBus-baseline posted write-back.
+    MediaWriteback { dev: usize, dpa: u64 },
+}
 
 /// Sentinel "core" marking an L2-prefetch fetch: the fill stops at L2.
 const PF_CORE: u8 = u8::MAX;
+
+/// Slack subtracted from the fixed-path lookahead: the per-term
+/// `ns_to_ticks` roundings along a committed response path (pkt/depkt
+/// both ways + up to three link-latency terms each way) can each lose
+/// up to half a tick against the single combined rounding the horizon
+/// is derived from. 16 ticks (16 ps) over-covers the worst case while
+/// staying negligible against real horizons (tens of ns).
+const LOOKAHEAD_ROUNDING_MARGIN: Tick = 16;
 
 /// Per-L2-line in-flight memory fetch (cores waiting on it).
 #[derive(Debug, Default)]
@@ -126,7 +163,7 @@ pub struct MachineStats {
 }
 
 pub struct Host {
-    /// This host's id on the fabric (tag in the unified event queue).
+    /// This host's id on the fabric (tag in the global commit order).
     pub id: u8,
     /// Construction-time snapshot of the machine config. Knobs are
     /// consumed at build time (latencies, geometries and the decode
@@ -163,13 +200,34 @@ pub struct Host {
     next_req: ReqId,
     l1_lat: Tick,
     l2_lat: Tick,
-    /// MemBus-baseline fixed protocol adder per device (pack + unpack
-    /// both ways + wire), precomputed so the hot path is an index.
+    /// Fixed protocol adder per device (pack + unpack both ways +
+    /// wire), precomputed so the hot path is an index. Times the
+    /// MemBus-baseline media path and floors the parallel lookahead.
     dev_fixed_ticks: Vec<Tick>,
     fault_ticks: Tick,
     pub prefetcher: Option<StridePrefetcher>,
     pub pf_book: PrefetchBook,
     pub stats: MachineStats,
+
+    /// This host's private event queue (split-phase loop; see module
+    /// docs). `(tick, seq)` order within the queue is host-local.
+    queue: EventQueue<Ev>,
+    /// Fabric-crossing requests emitted since the last
+    /// [`Host::take_outbox`], as `(entry tick, per-host seq, request)`.
+    outbox: Vec<(Tick, u64, FabricReq)>,
+    /// Monotonic per-host sequence for outbox entries: the global
+    /// commit order's tie-breaker within one host and tick.
+    fab_seq: u64,
+    /// Conservative horizon: no fabric response can land fewer than
+    /// this many ticks after its request's fabric-entry tick.
+    lookahead: Tick,
+    /// Test hook: pinned lookahead overriding the derived one
+    /// ([`Host::force_lookahead`]). A too-large pin breaks causality,
+    /// which the queue's scheduling debug-assertion then catches.
+    lookahead_override: Option<Tick>,
+    /// Earliest fabric-entry tick emitted during the current drain
+    /// (`Tick::MAX` when nothing was emitted yet).
+    emit_floor: Tick,
 }
 
 impl Host {
@@ -280,7 +338,7 @@ impl Host {
             .l2
             .prefetch
             .then(|| StridePrefetcher::new(256, cfg.l2.pf_degree));
-        Ok(Host {
+        let mut host = Host {
             id,
             issue_scheduled: vec![false; cfg.cores],
             pending_op: vec![None; cfg.cores],
@@ -315,12 +373,145 @@ impl Host {
             fault_ticks: ns_to_ticks(300.0),
             prefetcher,
             pf_book: PrefetchBook::default(),
-        })
+            queue: EventQueue::new(),
+            outbox: Vec::new(),
+            fab_seq: 0,
+            lookahead: 1,
+            lookahead_override: None,
+            emit_floor: Tick::MAX,
+        };
+        host.recompute_lookahead();
+        Ok(host)
     }
 
     #[inline]
-    fn sched(&self, q: &mut EventQueue<HostEv>, at: Tick, ev: Ev) {
-        q.schedule_at(at, (self.id, ev));
+    fn sched(&mut self, at: Tick, ev: Ev) {
+        self.queue.schedule_at(at, ev);
+    }
+
+    /// Queue a fabric-crossing request entering the fabric at `at`.
+    /// Tightens the drain throttle: local time must not pass
+    /// `at + lookahead - 1` until the machine has committed the request
+    /// (its response can land as early as `at + lookahead`).
+    fn emit(&mut self, at: Tick, req: FabricReq) {
+        self.emit_floor = self.emit_floor.min(at);
+        let seq = self.fab_seq;
+        self.fab_seq += 1;
+        self.outbox.push((at, seq, req));
+    }
+
+    // ---- the split-phase epoch API (driven by system::Machine) ------------
+
+    /// Apply fabric responses delivered by the machine's commit phase,
+    /// then drain local events up to `cap` (inclusive), self-throttled
+    /// by the lookahead horizon. Returns the number of events
+    /// dispatched.
+    pub(crate) fn epoch_step(
+        &mut self,
+        cap: Tick,
+        inbox: Vec<(Tick, Ev)>,
+    ) -> u64 {
+        for (at, ev) in inbox {
+            // `at >= queue.now()` by the lookahead argument; the queue
+            // debug-asserts it ("scheduling into the past"), which is
+            // exactly what trips when a test pins a too-large horizon.
+            self.queue.schedule_at(at, ev);
+        }
+        self.drain_to(cap)
+    }
+
+    /// Dispatch local events in `(tick, seq)` order while their tick is
+    /// within `cap` AND within `emitted + lookahead - 1` of the oldest
+    /// fabric request emitted during this drain (conservative-parallel
+    /// self-throttle; see module docs).
+    pub(crate) fn drain_to(&mut self, cap: Tick) -> u64 {
+        self.emit_floor = Tick::MAX;
+        let before = self.queue.processed();
+        while let Some(t) = self.queue.next_tick() {
+            let lim = if self.emit_floor == Tick::MAX {
+                cap
+            } else {
+                cap.min(
+                    self.emit_floor
+                        .saturating_add(self.lookahead)
+                        .saturating_sub(1),
+                )
+            };
+            if t > lim {
+                break;
+            }
+            let (t, ev) = self.queue.pop().unwrap();
+            crate::util::logger::set_tick(t);
+            self.dispatch(ev, t);
+        }
+        self.queue.processed() - before
+    }
+
+    /// Hand the emitted fabric requests to the machine (clears the
+    /// outbox).
+    pub(crate) fn take_outbox(&mut self) -> Vec<(Tick, u64, FabricReq)> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// Tick of this host's next local event, if any.
+    pub(crate) fn next_event_tick(&self) -> Option<Tick> {
+        self.queue.next_tick()
+    }
+
+    /// This host's local clock (tick of the last dispatched event).
+    pub(crate) fn queue_now(&self) -> Tick {
+        self.queue.now()
+    }
+
+    /// Events this host has dispatched over its lifetime.
+    pub(crate) fn events_processed(&self) -> u64 {
+        self.queue.processed()
+    }
+
+    /// Derive the conservative lookahead horizon from the bound
+    /// topology: the minimum fixed round-trip cost (packetize + path +
+    /// de-packetize, both ways) over every device this host can reach,
+    /// minus a rounding margin. Bound-LD changes (FM re-binds) change
+    /// the reachable set, so the machine re-derives horizons at every
+    /// section boundary. With no reachable device nothing can ever come
+    /// back: the horizon is unbounded.
+    pub fn recompute_lookahead(&mut self) {
+        if let Some(la) = self.lookahead_override {
+            self.lookahead = la.max(1);
+            return;
+        }
+        let min_fixed = if self.cfg.cxl.attach == CxlAttach::MemBus {
+            // The baseline window routes by interleave decode but may
+            // also fall back to device 0: every device is reachable.
+            self.dev_fixed_ticks.iter().copied().min()
+        } else {
+            self.rc
+                .windows()
+                .iter()
+                .flat_map(|w| w.targets.iter().copied())
+                .map(|dev| self.dev_fixed_ticks[dev])
+                .min()
+        };
+        self.lookahead = match min_fixed {
+            Some(f) => f.saturating_sub(LOOKAHEAD_ROUNDING_MARGIN).max(1),
+            None => Tick::MAX,
+        };
+    }
+
+    /// The current conservative horizon in ticks (`Tick::MAX` when no
+    /// device is reachable).
+    pub fn lookahead(&self) -> Tick {
+        self.lookahead
+    }
+
+    /// Test hook: pin the lookahead to `la` (or back to derived with
+    /// `None`). A deliberately-too-large pin lets responses land behind
+    /// the host's clock, which the event queue's "scheduling into the
+    /// past" debug assertion catches — the harness proving the horizon
+    /// math is load-bearing.
+    pub fn force_lookahead(&mut self, la: Option<Tick>) {
+        self.lookahead_override = la;
+        self.recompute_lookahead();
     }
 
     /// Attach one workload per core (fewer workloads than cores is
@@ -328,7 +519,6 @@ impl Host {
     /// fast-forwarded boot+init in gem5).
     pub(crate) fn attach_workloads(
         &mut self,
-        q: &mut EventQueue<HostEv>,
         mut wls: Vec<Box<dyn Workload>>,
         policy: &MemPolicy,
     ) -> Result<()> {
@@ -345,9 +535,9 @@ impl Host {
             self.spaces.push(asp);
         }
         self.workloads = wls;
-        let at = q.now();
+        let at = self.queue.now();
         for c in 0..self.workloads.len() {
-            self.sched(q, at, Ev::Issue(c as u8));
+            self.sched(at, Ev::Issue(c as u8));
             self.issue_scheduled[c] = true;
         }
         Ok(())
@@ -370,28 +560,17 @@ impl Host {
     // ---- the memory path --------------------------------------------------
 
     /// A core issues a load/store to `pa` at `now`.
-    fn access(
-        &mut self,
-        fab: &mut Fabric,
-        q: &mut EventQueue<HostEv>,
-        core: u8,
-        pa: u64,
-        is_write: bool,
-        now: Tick,
-    ) {
+    fn access(&mut self, core: u8, pa: u64, is_write: bool, now: Tick) {
         let req = self.alloc_req();
         self.cores[core as usize].begin_mem(now, req, is_write);
-        self.access_with_req(fab, q, core, pa, is_write, req, now);
+        self.access_with_req(core, pa, is_write, req, now);
     }
 
     /// Timing for a live request `req` (fresh, or re-probing after an
     /// MSHR-full park — the functional effect already happened at issue
     /// time, so retries re-run only the timing path).
-    #[allow(clippy::too_many_arguments)]
     fn access_with_req(
         &mut self,
-        fab: &mut Fabric,
-        q: &mut EventQueue<HostEv>,
         core: u8,
         pa: u64,
         is_write: bool,
@@ -402,7 +581,8 @@ impl Host {
         let probe = self.l1s[c].probe(pa, is_write);
         match probe.access {
             Access::Hit if !probe.needs_upgrade => {
-                self.sched(q, now + self.l1_lat, Ev::Hit { core, req });
+                let at = now + self.l1_lat;
+                self.sched(at, Ev::Hit { core, req });
             }
             Access::Hit => {
                 // Write hit on Shared: directory upgrade.
@@ -423,7 +603,7 @@ impl Host {
                     + self.membus.transfer(now, 16)
                     .saturating_sub(now)
                     + extra;
-                self.sched(q, t, Ev::Hit { core, req });
+                self.sched(t, Ev::Hit { core, req });
             }
             Access::Miss => {
                 let line = self.l1s[c].line_addr(pa);
@@ -441,14 +621,11 @@ impl Host {
                         // so conservation holds even on this path.
                         self.stats.mshr_retries.inc();
                         self.cores[c].note_lsq_stall();
-                        self.sched(
-                            q,
-                            now + self.l1_lat * 4,
-                            Ev::MshrRetry { core, pa, is_write, req },
-                        );
+                        let at = now + self.l1_lat * 4;
+                        self.sched(at, Ev::MshrRetry { core, pa, is_write, req });
                     }
                     MshrAlloc::Primary => {
-                        self.l1_primary_miss(fab, q, core, pa, is_write, now);
+                        self.l1_primary_miss(core, pa, is_write, now);
                     }
                 }
             }
@@ -458,8 +635,6 @@ impl Host {
     /// Handle coherence + L2 for a primary L1 miss.
     fn l1_primary_miss(
         &mut self,
-        fab: &mut Fabric,
-        q: &mut EventQueue<HostEv>,
         core: u8,
         pa: u64,
         is_write: bool,
@@ -484,7 +659,7 @@ impl Host {
         let at_l2 = self.membus.transfer(now + self.l1_lat, 16) + self.l2_lat
             + coh_extra;
         // Train the prefetcher on the demand stream reaching L2.
-        self.train_prefetcher(fab, q, pa, at_l2);
+        self.train_prefetcher(pa, at_l2);
         let l2_probe = self.l2.probe(pa, false);
         match l2_probe.access {
             Access::Hit => {
@@ -495,7 +670,7 @@ impl Host {
                 }
                 // Data back over the membus.
                 let back = self.membus.transfer(at_l2, 64);
-                self.sched(q, back, Ev::LineFill { core, line_pa: pa });
+                self.sched(back, Ev::LineFill { core, line_pa: pa });
             }
             Access::Miss => {
                 let key = self.l2.line_addr(pa);
@@ -515,19 +690,13 @@ impl Host {
                     key,
                     L2Pending { cores: vec![core], wants_excl: is_write },
                 );
-                self.fetch_from_memory(fab, q, core, pa, is_write, at_l2);
+                self.fetch_from_memory(core, pa, is_write, at_l2);
             }
         }
     }
 
     /// Feed the L2 prefetcher and launch predicted fetches.
-    fn train_prefetcher(
-        &mut self,
-        fab: &mut Fabric,
-        q: &mut EventQueue<HostEv>,
-        pa: u64,
-        now: Tick,
-    ) {
+    fn train_prefetcher(&mut self, pa: u64, now: Tick) {
         let line = self.l2.line_addr(pa);
         let Some(p) = &mut self.prefetcher else { return };
         let predictions = p.train(line);
@@ -553,30 +722,27 @@ impl Host {
                 target_line,
                 L2Pending { cores: Vec::new(), wants_excl: false },
             );
-            self.fetch_from_memory(fab, q, PF_CORE, target_pa, false, now);
+            self.fetch_from_memory(PF_CORE, target_pa, false, now);
         }
     }
 
     /// L2 miss -> system DRAM or CXL expander.
     fn fetch_from_memory(
         &mut self,
-        fab: &mut Fabric,
-        q: &mut EventQueue<HostEv>,
         core: u8,
         pa: u64,
         wants_excl: bool,
         now: Tick,
     ) {
         if self.is_cxl_addr(pa) {
-            self.fetch_from_cxl(fab, q, core, pa, wants_excl, now);
+            self.fetch_from_cxl(core, pa, now);
         } else {
-            self.fetch_from_dram(q, core, pa, wants_excl, now);
+            self.fetch_from_dram(core, pa, wants_excl, now);
         }
     }
 
     fn fetch_from_dram(
         &mut self,
-        q: &mut EventQueue<HostEv>,
         core: u8,
         pa: u64,
         wants_excl: bool,
@@ -587,27 +753,22 @@ impl Host {
             Some(done) => {
                 self.stats.dram_reads.inc();
                 let back = self.membus.transfer(done, 64);
-                self.sched(q, back, Ev::LineFill { core, line_pa: pa });
+                self.sched(back, Ev::LineFill { core, line_pa: pa });
             }
             None => {
-                self.sched(
-                    q,
-                    now + ns_to_ticks(100.0),
-                    Ev::DramRetry { core, line_pa: pa, wants_excl },
-                );
+                let at = now + ns_to_ticks(100.0);
+                self.sched(at, Ev::DramRetry { core, line_pa: pa, wants_excl });
             }
         }
     }
 
-    fn fetch_from_cxl(
-        &mut self,
-        fab: &mut Fabric,
-        q: &mut EventQueue<HostEv>,
-        core: u8,
-        pa: u64,
-        wants_excl: bool,
-        now: Tick,
-    ) {
+    /// Time the host-side leg of a CXL line fetch and emit the
+    /// fabric-crossing request. The fabric leg (credits, links, media)
+    /// is committed later by the machine in global order; the response
+    /// comes back as [`Ev::CxlFill`]. Credit-stall retries are the
+    /// commit phase's business now — the emission here is
+    /// unconditional, so fetch stats count requests, not attempts.
+    fn fetch_from_cxl(&mut self, core: u8, pa: u64, now: Tick) {
         if self.cfg.cxl.attach == CxlAttach::MemBus {
             // Baseline (CXL-DMSim/SimCXL style): expander hangs off the
             // membus; protocol costs collapse into a fixed adder (both
@@ -620,17 +781,9 @@ impl Host {
                 .rc
                 .route_dpa(pa)
                 .unwrap_or((0, pa - self.bios.cxl_window_base));
-            let fixed = self.dev_fixed_ticks[dev];
-            let done = fab.devices[dev].media.access(
-                t + fixed,
-                dpa,
-                self.cfg.l1.line,
-                false,
-            );
             self.stats.cxl_reads.inc();
             self.stats.cxl_dev_reads[dev].inc();
-            let back = self.membus.transfer(done, 64);
-            self.sched(q, back, Ev::LineFill { core, line_pa: pa });
+            self.emit(t, FabricReq::MediaFetch { dev, dpa, core, line_pa: pa });
             return;
         }
         // Architecturally correct path: membus -> IOBus -> RC interleave
@@ -641,28 +794,21 @@ impl Host {
         let t = self.membus.transfer(now, 16);
         let t = self.iobus.transfer(t, 16);
         let dev = self.rc.route(pa).unwrap_or(0);
-        let host_pkt =
-            Packet::new(0, MemCmd::ReadReq, pa & !(self.cfg.l1.line - 1), 64, core, now);
-        match self.rc.packetize_and_send(fab, t, &host_pkt, dev) {
-            Ok((m2s, arrival)) => {
-                self.stats.cxl_reads.inc();
-                self.stats.cxl_dev_reads[dev].inc();
-                let (resp, ready) =
-                    fab.devices[dev].handle_m2s(arrival, &m2s, self.id);
-                let host_done =
-                    self.rc.receive_s2m(fab, ready, &resp, now, dev);
-                let t = self.iobus.transfer(host_done, 64);
-                let back = self.membus.transfer(t, 64);
-                self.sched(q, back, Ev::LineFill { core, line_pa: pa });
-            }
-            Err(retry_at) => {
-                self.sched(
-                    q,
-                    retry_at,
-                    Ev::CxlRetry { core, line_pa: pa, wants_excl },
-                );
-            }
-        }
+        let host_pkt = Packet::new(
+            0,
+            MemCmd::ReadReq,
+            pa & !(self.cfg.l1.line - 1),
+            64,
+            core,
+            now,
+        );
+        let pkt = self.rc.packetize(&host_pkt);
+        self.stats.cxl_reads.inc();
+        self.stats.cxl_dev_reads[dev].inc();
+        self.emit(
+            t,
+            FabricReq::Fetch { dev, pkt, core, line_pa: pa, issued_at: now },
+        );
     }
 
     /// Invalidate peer L1 copies per the directory mask; returns the
@@ -688,12 +834,7 @@ impl Host {
     /// A line arrived at L2 from memory: fill L2, then distribute to the
     /// waiting cores' L1s. L2-*hit* fills carry no pending entry and
     /// must not touch L2 state (it could lose a dirty bit).
-    fn memory_fill_arrived(
-        &mut self,
-        fab: &mut Fabric,
-        pa: u64,
-        now: Tick,
-    ) -> Vec<u8> {
+    fn memory_fill_arrived(&mut self, pa: u64, now: Tick) -> Vec<u8> {
         let key = self.l2.line_addr(pa);
         let Some(pending) = self.l2_pending.remove(&key) else {
             return Vec::new();
@@ -702,12 +843,12 @@ impl Host {
         match self.l2.fill(pa, MesiState::Exclusive) {
             Victim::Dirty(victim_pa) => {
                 self.pf_book.note_evict(self.l2.line_addr(victim_pa));
-                self.writeback(fab, victim_pa, now);
-                self.inclusive_purge(fab, victim_pa, now);
+                self.writeback(victim_pa, now);
+                self.inclusive_purge(victim_pa, now);
             }
             Victim::Clean(victim_pa) => {
                 self.pf_book.note_evict(self.l2.line_addr(victim_pa));
-                self.inclusive_purge(fab, victim_pa, now);
+                self.inclusive_purge(victim_pa, now);
             }
             Victim::None => {}
         }
@@ -717,7 +858,7 @@ impl Host {
     /// Inclusive hierarchy: an L2 eviction kills L1 copies above.
     /// The directory tells us exactly which L1s can hold the line, so
     /// this is O(sharers) rather than O(cores) (perf-pass change #3).
-    fn inclusive_purge(&mut self, fab: &mut Fabric, victim_pa: u64, now: Tick) {
+    fn inclusive_purge(&mut self, victim_pa: u64, now: Tick) {
         use crate::cache::directory::DirState;
         let line = self.l2.line_addr(victim_pa);
         let mask: u64 = match self.dir.state(line) {
@@ -731,14 +872,17 @@ impl Host {
             m &= m - 1;
             if let Some(_wb) = self.l1s[c].invalidate(victim_pa) {
                 // Dirty L1 data above a dying L2 line goes to memory.
-                self.writeback(fab, victim_pa, now);
+                self.writeback(victim_pa, now);
             }
         }
         self.dir.purge(line);
     }
 
-    /// Posted write-back of a dirty line to its memory class.
-    fn writeback(&mut self, fab: &mut Fabric, pa: u64, now: Tick) {
+    /// Posted write-back of a dirty line to its memory class. CXL
+    /// write-backs emit a fabric request (committed in global order);
+    /// credit exhaustion drops them from the timing model at commit,
+    /// exactly as the inline path did.
+    fn writeback(&mut self, pa: u64, now: Tick) {
         if self.is_cxl_addr(pa) {
             self.stats.writebacks_cxl.inc();
             if self.cfg.cxl.attach == CxlAttach::MemBus {
@@ -748,12 +892,7 @@ impl Host {
                     .route_dpa(pa)
                     .unwrap_or((0, pa - self.bios.cxl_window_base));
                 self.stats.cxl_dev_writebacks[dev].inc();
-                fab.devices[dev].media.access(
-                    t,
-                    dpa,
-                    self.cfg.l1.line,
-                    true,
-                );
+                self.emit(t, FabricReq::MediaWriteback { dev, dpa });
                 return;
             }
             let Some(dev) = self.rc.route(pa) else { return };
@@ -768,17 +907,8 @@ impl Host {
                 0,
                 now,
             );
-            if let Ok((m2s, arrival)) =
-                self.rc.packetize_and_send(fab, t, &host_pkt, dev)
-            {
-                let (resp, ready) =
-                    fab.devices[dev].handle_m2s(arrival, &m2s, self.id);
-                // NDR completion retires the credit.
-                self.rc.receive_s2m(fab, ready, &resp, now, dev);
-            }
-            // On credit exhaustion the posted write is dropped from the
-            // timing model (data is already functionally in physmem);
-            // counted so the approximation is visible.
+            let pkt = self.rc.packetize(&host_pkt);
+            self.emit(t, FabricReq::Writeback { dev, pkt });
         } else if pa < self.cfg.sys_mem_size {
             self.stats.writebacks_dram.inc();
             let t = self.membus.transfer(now, 64 + 16);
@@ -799,11 +929,11 @@ impl Host {
 
     // ---- the issue engine -------------------------------------------------
 
-    fn schedule_issue(&mut self, q: &mut EventQueue<HostEv>, core: u8, at: Tick) {
+    fn schedule_issue(&mut self, core: u8, at: Tick) {
         if !self.issue_scheduled[core as usize] {
             self.issue_scheduled[core as usize] = true;
-            let at = at.max(q.now());
-            self.sched(q, at, Ev::Issue(core));
+            let at = at.max(self.queue.now());
+            self.sched(at, Ev::Issue(core));
         }
     }
 
@@ -819,13 +949,7 @@ impl Host {
         })
     }
 
-    fn try_issue(
-        &mut self,
-        fab: &mut Fabric,
-        q: &mut EventQueue<HostEv>,
-        core: u8,
-        now: Tick,
-    ) {
+    fn try_issue(&mut self, core: u8, now: Tick) {
         let c = core as usize;
         if c >= self.workloads.len() || self.cores[c].done {
             return;
@@ -837,7 +961,7 @@ impl Host {
                     && self.cores[c].next_issue > now
                 {
                     let at = self.cores[c].next_issue;
-                    self.schedule_issue(q, core, at);
+                    self.schedule_issue(core, at);
                 }
                 // Else: waiting on a response; completions re-trigger.
                 return;
@@ -890,20 +1014,13 @@ impl Host {
                         let bits = self.mem.read_u64(pa & !7);
                         self.workloads[c].load_done(va, bits);
                     }
-                    self.access(fab, q, core, pa, is_write, now);
+                    self.access(core, pa, is_write, now);
                 }
             }
         }
     }
 
-    fn complete_line_fill(
-        &mut self,
-        fab: &mut Fabric,
-        q: &mut EventQueue<HostEv>,
-        core: u8,
-        pa: u64,
-        now: Tick,
-    ) {
+    fn complete_line_fill(&mut self, core: u8, pa: u64, now: Tick) {
         let c = core as usize;
         let line = self.l1s[c].line_addr(pa);
         let Some(mshr) = self.l1_mshrs[c].complete(line) else {
@@ -948,51 +1065,52 @@ impl Host {
         for req in mshr.waiters {
             self.cores[c].complete_mem(now, req);
         }
-        self.try_issue(fab, q, core, now);
+        self.try_issue(core, now);
     }
 
-    /// Handle one of this host's events from the unified queue.
-    pub(crate) fn dispatch(
-        &mut self,
-        fab: &mut Fabric,
-        q: &mut EventQueue<HostEv>,
-        ev: Ev,
-        t: Tick,
-    ) {
+    /// Handle one of this host's local events.
+    fn dispatch(&mut self, ev: Ev, t: Tick) {
         match ev {
             Ev::Issue(core) => {
                 self.issue_scheduled[core as usize] = false;
-                self.try_issue(fab, q, core, t);
+                self.try_issue(core, t);
             }
             Ev::Hit { core, req } => {
                 self.cores[core as usize].complete_mem(t, req);
-                self.try_issue(fab, q, core, t);
+                self.try_issue(core, t);
             }
             Ev::LineFill { core, line_pa } => {
-                let cores = self.memory_fill_arrived(fab, line_pa, t);
+                let cores = self.memory_fill_arrived(line_pa, t);
                 // First deliver to the requester on this event, then
                 // to any cores that merged at L2. PF_CORE marks a
                 // prefetch fill: it stops at L2 unless demand merged.
                 if core != PF_CORE {
-                    self.complete_line_fill(fab, q, core, line_pa, t);
+                    self.complete_line_fill(core, line_pa, t);
                 }
                 for other in cores {
                     if other != core && other != PF_CORE {
-                        self.complete_line_fill(fab, q, other, line_pa, t);
+                        self.complete_line_fill(other, line_pa, t);
                     }
                 }
             }
             Ev::DramRetry { core, line_pa, wants_excl } => {
-                self.fetch_from_dram(q, core, line_pa, wants_excl, t);
-            }
-            Ev::CxlRetry { core, line_pa, wants_excl } => {
-                self.fetch_from_cxl(fab, q, core, line_pa, wants_excl, t);
+                self.fetch_from_dram(core, line_pa, wants_excl, t);
             }
             Ev::MshrRetry { core, pa, is_write, req } => {
-                self.access_with_req(fab, q, core, pa, is_write, req, t);
+                self.access_with_req(core, pa, is_write, req, t);
             }
-            Ev::Fm(_) | Ev::FmEpoch | Ev::FmMove { .. } => {
-                unreachable!("FM events are intercepted by Machine::run")
+            Ev::CxlFill { core, line_pa, issued_at } => {
+                if self.cfg.cxl.attach == CxlAttach::MemBus {
+                    // Baseline: media data rides the membus home.
+                    let back = self.membus.transfer(t, 64);
+                    self.sched(back, Ev::LineFill { core, line_pa });
+                } else {
+                    // RC protocol accounting, then IOBus + membus home.
+                    self.rc.note_response(t, issued_at);
+                    let tt = self.iobus.transfer(t, 64);
+                    let back = self.membus.transfer(tt, 64);
+                    self.sched(back, Ev::LineFill { core, line_pa });
+                }
             }
         }
     }
@@ -1007,10 +1125,10 @@ impl Host {
 
     /// Quiesce check for FM-driven hot-remove: is any memory fetch to
     /// `[base, base+size)` still in flight? Every outstanding fetch —
-    /// demand or prefetch, including parked CXL credit retries — holds
-    /// an `l2_pending` entry from issue until its fill lands, so an
-    /// empty intersection means no packet can still be routed at the
-    /// departing window.
+    /// demand or prefetch, including requests awaiting fabric commit or
+    /// parked on credit retries — holds an `l2_pending` entry from
+    /// issue until its fill lands, so an empty intersection means no
+    /// packet can still be routed at the departing window.
     pub(crate) fn has_inflight_in(&self, base: u64, size: u64) -> bool {
         let line = self.cfg.l2.line;
         self.l2_pending

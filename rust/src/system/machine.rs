@@ -1,34 +1,55 @@
 //! The machine shell: `hosts` [`Host`] stacks over one shared
-//! [`Fabric`], driven by a single unified event queue.
+//! [`Fabric`], driven by the rack-scale conservative-parallel event
+//! loop.
 //!
-//! `Machine` owns no timing state of its own anymore — it builds the
-//! hosts (each with its own BIOS/guest/caches/DRAM and CXL root
-//! complex) and the fabric (devices, switches, links, FM ownership),
-//! applies the fabric-manager LD bindings, and runs the event loop.
-//! Events are `(host, Ev)` pairs in one `(tick, seq)`-ordered queue, so
-//! multi-host runs stay bit-deterministic and hosts interleave at event
-//! granularity — which is what makes cross-host contention on shared
-//! links and media real rather than averaged.
+//! # Parallel determinism contract
+//!
+//! Every host owns its own event queue and drains it independently —
+//! on a worker thread when `[sim] threads > 1`, inline otherwise. The
+//! fabric is the only shared timing state, and it only ever mutates on
+//! the main thread, in one canonical order: fabric-crossing requests
+//! are committed from a global `(entry tick, host id, per-host seq)`
+//! map. Hosts self-throttle to their lookahead horizon (the minimum
+//! fixed round-trip to any reachable device — see
+//! [`Host::recompute_lookahead`]), so no host ever runs past a tick at
+//! which a fabric response could still land. The commit window is
+//! bounded the same way from the machine side: an entry at tick `t`
+//! commits only once every host has drained past `t - d_min` (no new
+//! request can enter the fabric at or before `t` any more) and no
+//! already-committed response could schedule new fabric entries before
+//! `t`. Because both the epoch structure and the commit order are pure
+//! functions of queue state — never of thread scheduling — a
+//! `threads = N` run is bit-identical to a serial one: same stats,
+//! same guest memory images, same event counts.
+//!
+//! Machine-level events (scripted FM actions, policy epochs, deferred
+//! policy moves) live in the machine's own small queue. They cut the
+//! run into *sections*: all host work strictly before a machine event's
+//! tick settles first (the epoch loop runs to a fixpoint), then the
+//! machine event executes on fully-quiesced state, then the next
+//! section starts with freshly derived horizons (an FM re-bind changes
+//! the reachable-device set, hence the lookahead).
 //!
 //! For the (default) single-host case, `Machine` derefs to host 0:
 //! `m.guest`, `m.l1s`, `m.rc`, … read exactly as they did before the
 //! host/fabric split. Multi-host code addresses `m.hosts[h]` and
 //! `m.fabric` explicitly.
 //!
-//! A `[fm] events` schedule adds machine-level `Ev::Fm` entries to the
-//! same queue: at their simulated timestamps the fabric manager
-//! re-binds logical devices between running hosts (quiesce -> Event-Log
-//! doorbell -> guest offline/online through the unmodified driver path
-//! -> mailbox `UNBIND_LD`/`BIND_LD` -> RC routing update), so elastic
-//! pooling runs inside one deterministic event order.
-//!
-//! An `[fm] policy` closes the loop instead: machine-level
-//! `Ev::FmEpoch` entries fire on a fixed cadence, the
-//! [`crate::cxl::fm_policy::FmPolicyEngine`] differentiates per-host /
-//! per-LD load and decides moves itself, and each decided move runs
-//! through exactly the scripted flow above (deferred moves re-probe as
-//! `Ev::FmMove`). Same queue, same `(tick, seq)` order — policy-driven
-//! runs stay bit-deterministic.
+//! A `[fm] events` schedule adds `MEv::Fm` entries: at their simulated
+//! timestamps the fabric manager re-binds logical devices between
+//! running hosts (quiesce -> Event-Log doorbell -> guest
+//! offline/online through the unmodified driver path -> mailbox
+//! `UNBIND_LD`/`BIND_LD` -> RC routing update). An `[fm] policy`
+//! closes the loop instead: `MEv::FmEpoch` entries fire on a fixed
+//! cadence, the [`crate::cxl::fm_policy::FmPolicyEngine`]
+//! differentiates per-host / per-LD load and decides moves itself
+//! (deferred moves re-probe as `MEv::FmMove`). Either way the actions
+//! run between sections, on settled state — policy-driven runs stay
+//! bit-deterministic at every thread count.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Barrier, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -36,13 +57,13 @@ use crate::bios;
 use crate::config::{FmOp, InterleaveArith, LdRef, SimConfig};
 use crate::cxl::fm_policy::{FmPolicyEngine, HostLoad, LdState};
 use crate::cxl::mailbox::{event, retcode, EventRecord, UNBOUND};
-use crate::cxl::{Fabric, HdmWindow};
+use crate::cxl::{CreditAvail, Fabric, HdmWindow};
 use crate::guestos::{GuestOs, MemChange, MemPolicy, ProgModel};
-use crate::sim::{ns_to_ticks, EventQueue, Tick};
+use crate::sim::{ns_to_ticks, ticks_to_ns, EventQueue, Tick};
 use crate::stats::StatDump;
 use crate::workloads::Workload;
 
-use super::host::{Ev, Host, HostEv};
+use super::host::{Ev, FabricReq, Host};
 use super::mmio::MmioWorld;
 
 pub use super::host::MachineStats;
@@ -71,13 +92,52 @@ pub struct RunSummary {
     pub events: u64,
 }
 
+/// Machine-level events: fabric-manager actions and policy epochs.
+/// They span hosts, so they live in the machine's own queue and bound
+/// the host sections — a machine event at tick `T` runs after every
+/// host event strictly before `T` and before any host event at `T`.
+#[derive(Debug)]
+enum MEv {
+    /// Scheduled `[fm] events` entry (index into `cfg.fm_events`).
+    Fm(u32),
+    /// `[fm] policy` sampling epoch.
+    FmEpoch,
+    /// A quiesce-deferred policy move re-probing.
+    FmMove { dev: u8, ld: u8, from: u8, to: u8 },
+}
+
 pub struct Machine {
     pub cfg: SimConfig,
     /// The per-host stacks, index = host id.
     pub hosts: Vec<Host>,
     /// The shared CXL tree all hosts' root ports lead into.
     pub fabric: Fabric,
-    queue: EventQueue<HostEv>,
+    /// Machine-level events only (FM actions, policy epochs); host
+    /// events live in each host's own queue.
+    mq: EventQueue<MEv>,
+    /// Fabric-crossing requests awaiting commit, in the canonical
+    /// global `(entry tick, host id, per-host seq)` order.
+    pending: BTreeMap<(Tick, u8, u64), FabricReq>,
+    /// RC-side packetization cost (ticks) — commit-phase timing.
+    pkt_ticks: Tick,
+    /// RC-side de-packetization cost (ticks).
+    depkt_ticks: Tick,
+    /// Fixed protocol adder per device (MemBus-baseline media timing).
+    dev_fixed_ticks: Vec<Tick>,
+    /// Minimum host-side delay between an event at `t` and any fabric
+    /// entry it can cause: one membus hop is always in the way and
+    /// `Bus::transfer` costs at least `1 + lat` ticks.
+    d_min: Tick,
+    /// Epochs run by the section scheduler (thread-count-invariant).
+    par_epochs: u64,
+    /// Cross-host synchronization points: epochs in which two or more
+    /// hosts made progress, weighted by how many did. Identical at
+    /// every thread count — it measures available parallelism, not
+    /// achieved parallelism.
+    par_barrier_waits: u64,
+    /// Smallest finite lookahead horizon seen at any section start
+    /// (`Tick::MAX` if no host ever had a reachable device).
+    par_horizon_min: Tick,
     /// The `[fm] events` schedule has been injected into the queue
     /// (first `run` call only).
     fm_scheduled: bool,
@@ -88,12 +148,12 @@ pub struct Machine {
     /// run, so retrying would never terminate.
     fm_refused: std::collections::BTreeSet<(usize, u16)>,
     /// Telemetry-driven FM policy engine (`[fm] policy`): samples
-    /// per-host/per-LD load on `Ev::FmEpoch` ticks and decides
+    /// per-host/per-LD load on `MEv::FmEpoch` ticks and decides
     /// UNBIND/BIND moves, executed through the same flow as scripted
-    /// `Ev::Fm` events. `None` without a policy.
+    /// `MEv::Fm` events. `None` without a policy.
     fm_policy: Option<FmPolicyEngine>,
     /// Policy moves currently parked in quiesce deferral (an
-    /// `Ev::FmMove` re-probe chain is in flight for each). Epochs skip
+    /// `MEv::FmMove` re-probe chain is in flight for each). Epochs skip
     /// re-deciding these so one real quiesce wait spawns one chain —
     /// not one per epoch — keeping `fm.policy.deferrals` /
     /// `sys.fm_quiesce_retries` honest.
@@ -124,6 +184,145 @@ impl std::ops::DerefMut for Machine {
     }
 }
 
+/// Per-host mailbox slots the parallel section loop trades through:
+/// main thread fills `cap`/`inbox`, the owning worker fills the rest.
+#[derive(Default)]
+struct EpochSlot {
+    cap: Tick,
+    inbox: Vec<(Tick, Ev)>,
+    processed: u64,
+    outbox: Vec<(Tick, u64, FabricReq)>,
+    next_tick: Option<Tick>,
+}
+
+/// Commit pending fabric requests against the shared fabric in global
+/// `(tick, host, seq)` order — the single place fabric state mutates.
+///
+/// An entry at tick `t` commits while `t <= limit` (the section bound)
+/// and `t < w`, where `w` starts at the barrier
+/// `min over hosts (next local event tick + d_min)` — no un-drained
+/// host event can emit a new fabric entry before `w` — and tightens to
+/// `min(w, done + d_min)` on every response delivered at `done`: the
+/// delivered fill may itself trigger emissions from `done + d_min` on,
+/// which must order ahead of any later pending entry. Entries that
+/// lose their credit race re-enter the map at the retry tick under the
+/// same `(host, seq)`, exactly as the old inline path re-scheduled
+/// them. Returns the number of entries handled (commits + retries —
+/// the section loop's progress signal, identical at every thread
+/// count).
+#[allow(clippy::too_many_arguments)]
+fn commit_pending(
+    fabric: &mut Fabric,
+    pending: &mut BTreeMap<(Tick, u8, u64), FabricReq>,
+    inboxes: &mut [Vec<(Tick, Ev)>],
+    limit: Tick,
+    barrier: Tick,
+    pkt_ticks: Tick,
+    depkt_ticks: Tick,
+    dev_fixed_ticks: &[Tick],
+    d_min: Tick,
+    line: u64,
+) -> u64 {
+    let mut handled = 0u64;
+    let mut w = barrier;
+    loop {
+        let Some((&(t, _, _), _)) = pending.first_key_value() else {
+            break;
+        };
+        if t > limit || t >= w {
+            break;
+        }
+        let ((t, h, seq), req) = pending.pop_first().unwrap();
+        handled += 1;
+        match req {
+            FabricReq::Fetch { dev, pkt, core, line_pa, issued_at } => {
+                let after_pkt = t + pkt_ticks;
+                let retry = {
+                    let link = fabric.credit_link(dev);
+                    match link.credit_available_at(after_pkt) {
+                        CreditAvail::Now => None,
+                        CreditAvail::RetiresAt(rt) => {
+                            link.note_credit_stall(after_pkt, rt);
+                            Some(rt)
+                        }
+                        CreditAvail::Unknown => {
+                            let rt = link.reprobe_at(after_pkt);
+                            link.note_credit_stall(after_pkt, rt);
+                            Some(rt)
+                        }
+                    }
+                };
+                if let Some(rt) = retry {
+                    pending.insert(
+                        (rt.max(t + 1), h, seq),
+                        FabricReq::Fetch {
+                            dev,
+                            pkt,
+                            core,
+                            line_pa,
+                            issued_at,
+                        },
+                    );
+                    continue;
+                }
+                let arrival = fabric.send_m2s(after_pkt, &pkt, dev);
+                let (resp, ready) =
+                    fabric.devices[dev].handle_m2s(arrival, &pkt, h);
+                let rc_arrival = fabric.send_s2m(ready, &resp, dev);
+                let done = rc_arrival + depkt_ticks;
+                fabric.retire(dev, done);
+                inboxes[h as usize]
+                    .push((done, Ev::CxlFill { core, line_pa, issued_at }));
+                w = w.min(done.saturating_add(d_min));
+            }
+            FabricReq::Writeback { dev, pkt } => {
+                let after_pkt = t + pkt_ticks;
+                let ok = {
+                    let link = fabric.credit_link(dev);
+                    match link.credit_available_at(after_pkt) {
+                        CreditAvail::Now => true,
+                        CreditAvail::RetiresAt(rt) => {
+                            link.note_credit_stall(after_pkt, rt);
+                            false
+                        }
+                        CreditAvail::Unknown => {
+                            let rt = link.reprobe_at(after_pkt);
+                            link.note_credit_stall(after_pkt, rt);
+                            false
+                        }
+                    }
+                };
+                // Credit exhaustion drops the posted write from the
+                // timing model (data is already functionally in
+                // physmem) — the old inline path's semantics.
+                if ok {
+                    let arrival = fabric.send_m2s(after_pkt, &pkt, dev);
+                    let (resp, ready) =
+                        fabric.devices[dev].handle_m2s(arrival, &pkt, h);
+                    let rc_arrival = fabric.send_s2m(ready, &resp, dev);
+                    let done = rc_arrival + depkt_ticks;
+                    fabric.retire(dev, done);
+                }
+            }
+            FabricReq::MediaFetch { dev, dpa, core, line_pa } => {
+                let done = fabric.devices[dev].media.access(
+                    t + dev_fixed_ticks[dev],
+                    dpa,
+                    line,
+                    false,
+                );
+                inboxes[h as usize]
+                    .push((done, Ev::CxlFill { core, line_pa, issued_at: t }));
+                w = w.min(done.saturating_add(d_min));
+            }
+            FabricReq::MediaWriteback { dev, dpa } => {
+                fabric.devices[dev].media.access(t, dpa, line, true);
+            }
+        }
+    }
+    handled
+}
+
 impl Machine {
     /// Build the hardware: the shared fabric with its FM LD bindings,
     /// then one host stack per `cfg.hosts` — each with BIOS tables in
@@ -147,11 +346,30 @@ impl Machine {
             .as_ref()
             .map(|p| FmPolicyEngine::new(p, cfg.hosts));
         let window_keys = cfg.window_keys();
+        let pkt_ticks = ns_to_ticks(cfg.cxl.pkt_lat_ns);
+        let depkt_ticks = ns_to_ticks(cfg.cxl.depkt_lat_ns);
+        let dev_fixed_ticks = (0..cfg.cxl.devices)
+            .map(|i| {
+                ns_to_ticks(
+                    2.0 * (cfg.cxl.pkt_lat_ns + cfg.cxl.depkt_lat_ns)
+                        + 2.0 * cfg.cxl.path_lat_ns(i),
+                )
+            })
+            .collect();
+        let d_min = ns_to_ticks(cfg.membus_lat_ns) + 1;
         Ok(Machine {
             cfg,
             hosts,
             fabric,
-            queue: EventQueue::new(),
+            mq: EventQueue::new(),
+            pending: BTreeMap::new(),
+            pkt_ticks,
+            depkt_ticks,
+            dev_fixed_ticks,
+            d_min,
+            par_epochs: 0,
+            par_barrier_waits: 0,
+            par_horizon_min: Tick::MAX,
             fm_scheduled: false,
             fm_refused: Default::default(),
             fm_policy,
@@ -255,78 +473,332 @@ impl Machine {
         policy: &MemPolicy,
     ) -> Result<()> {
         let host = self.hosts.get_mut(h).context("no such host")?;
-        host.attach_workloads(&mut self.queue, wls, policy)
+        host.attach_workloads(wls, policy)
     }
 
     // ---- the event loop ---------------------------------------------------
 
     /// Run until all attached workloads (on every host) finish, or
     /// `max_ticks`. FM events from the `[fm] events` schedule fire at
-    /// their simulated timestamps, interleaved with workload events.
+    /// their simulated timestamps, between fully-settled host sections.
     pub fn run(&mut self, max_ticks: Option<Tick>) -> RunSummary {
         if !self.fm_scheduled {
             self.fm_scheduled = true;
             for i in self.cfg.fm_events_in_time_order() {
                 let at = ns_to_ticks(self.cfg.fm_events[i].at_ns)
-                    .max(self.queue.now());
-                self.queue.schedule_at(at, (0, Ev::Fm(i as u32)));
+                    .max(self.mq.now());
+                self.mq.schedule_at(at, MEv::Fm(i as u32));
             }
             // A policy samples on its own epoch cadence; arm the first
             // tick only if some workload is actually going to run
             // (epochs re-arm themselves until every host drains).
             if let Some(eng) = &self.fm_policy {
                 if self.hosts.iter().any(|h| !h.all_done()) {
-                    let at = self.queue.now() + eng.epoch_ticks();
-                    self.queue.schedule_at(at, (0, Ev::FmEpoch));
+                    let at = self.mq.now() + eng.epoch_ticks();
+                    self.mq.schedule_at(at, MEv::FmEpoch);
                 }
             }
         }
-        while let Some((t, (h, ev))) = self.queue.pop() {
-            crate::util::logger::set_tick(t);
-            if let Some(m) = max_ticks {
-                if t > m {
-                    // Put the popped event back for a resumed `run`:
-                    // dropping it would silently kill self-re-arming
-                    // chains (the policy's FmEpoch ticks) and lose
-                    // scheduled FM actions.
-                    self.queue.schedule_at(t, (h, ev));
+        loop {
+            // Hosts run strictly up to the next machine event's tick
+            // (machine events at `T` precede host events at `T`).
+            let host_limit = match self.mq.next_tick() {
+                Some(0) => None, // machine event before any host work
+                Some(mt) => Some(mt - 1),
+                None => Some(Tick::MAX),
+            };
+            let host_limit = host_limit.map(|l| match max_ticks {
+                Some(m) => l.min(m),
+                None => l,
+            });
+            if let Some(l) = host_limit {
+                self.run_section(l);
+            }
+            match self.mq.next_tick() {
+                Some(t) if max_ticks.map_or(true, |m| t <= m) => {
+                    let (t, mev) = self.mq.pop().unwrap();
+                    crate::util::logger::set_tick(t);
+                    match mev {
+                        MEv::Fm(idx) => self.handle_fm_event(idx as usize, t),
+                        MEv::FmEpoch => self.handle_policy_epoch(t),
+                        MEv::FmMove { dev, ld, from, to } => {
+                            let Some(mut eng) = self.fm_policy.take() else {
+                                continue;
+                            };
+                            self.execute_policy_move(
+                                &mut eng,
+                                LdRef { dev: dev as usize, ld: ld as u16 },
+                                from as usize,
+                                to as usize,
+                                t,
+                            );
+                            self.fm_policy = Some(eng);
+                        }
+                    }
+                }
+                // No machine event within bounds: the section above
+                // already settled every host up to the limit.
+                _ => break,
+            }
+        }
+        self.summary()
+    }
+
+    /// Run every host to a settled fixpoint at `limit` — no local event
+    /// at or before `limit` left, no committable fabric entry left.
+    /// Serial and parallel paths run the *identical* epoch algorithm;
+    /// the thread count only changes who executes each host's drain.
+    fn run_section(&mut self, limit: Tick) {
+        // FM re-binds between sections change window routing; horizons
+        // are a function of the bound topology, so re-derive them.
+        for h in &mut self.hosts {
+            h.recompute_lookahead();
+        }
+        if let Some(min_la) = self
+            .hosts
+            .iter()
+            .map(|h| h.lookahead())
+            .filter(|&l| l != Tick::MAX)
+            .min()
+        {
+            self.par_horizon_min = self.par_horizon_min.min(min_la);
+        }
+        let nthreads = self.cfg.threads.min(self.hosts.len()).max(1);
+        if nthreads > 1 {
+            self.run_section_parallel(limit, nthreads);
+        } else {
+            self.run_section_serial(limit);
+        }
+    }
+
+    /// Per-host epoch caps: a host may drain up to `limit`, but not
+    /// past `oldest pending entry + its lookahead - 1` — its oldest
+    /// uncommitted fabric request could produce a response as early as
+    /// `entry + lookahead`.
+    fn epoch_caps(&self, limit: Tick) -> Vec<Tick> {
+        let nh = self.hosts.len();
+        let mut oldest = vec![Tick::MAX; nh];
+        for &(t, h, _) in self.pending.keys() {
+            let h = h as usize;
+            if t < oldest[h] {
+                oldest[h] = t;
+            }
+        }
+        self.hosts
+            .iter()
+            .enumerate()
+            .map(|(h, host)| {
+                limit.min(
+                    oldest[h]
+                        .saturating_add(host.lookahead())
+                        .saturating_sub(1),
+                )
+            })
+            .collect()
+    }
+
+    /// The commit barrier for this epoch: no host can emit a new fabric
+    /// entry before its next local event plus the minimum host-side
+    /// path (`d_min`), so everything in the pending map earlier than
+    /// this is globally final.
+    fn commit_barrier(&self) -> Tick {
+        self.hosts
+            .iter()
+            .filter_map(|h| h.next_event_tick())
+            .map(|t| t.saturating_add(self.d_min))
+            .min()
+            .unwrap_or(Tick::MAX)
+    }
+
+    fn run_section_serial(&mut self, limit: Tick) {
+        let nh = self.hosts.len();
+        let mut inboxes: Vec<Vec<(Tick, Ev)>> =
+            (0..nh).map(|_| Vec::new()).collect();
+        loop {
+            let caps = self.epoch_caps(limit);
+            let mut processed = 0u64;
+            let mut active = 0u32;
+            for h in 0..nh {
+                let inbox = std::mem::take(&mut inboxes[h]);
+                let n = self.hosts[h].epoch_step(caps[h], inbox);
+                processed += n;
+                if n > 0 {
+                    active += 1;
+                }
+            }
+            for h in 0..nh {
+                for (at, seq, req) in self.hosts[h].take_outbox() {
+                    self.pending.insert((at, h as u8, seq), req);
+                }
+            }
+            let barrier = self.commit_barrier();
+            let committed = commit_pending(
+                &mut self.fabric,
+                &mut self.pending,
+                &mut inboxes,
+                limit,
+                barrier,
+                self.pkt_ticks,
+                self.depkt_ticks,
+                &self.dev_fixed_ticks,
+                self.d_min,
+                self.cfg.l1.line,
+            );
+            self.par_epochs += 1;
+            if active >= 2 {
+                self.par_barrier_waits += active as u64;
+            }
+            if processed == 0 && committed == 0 {
+                break;
+            }
+        }
+    }
+
+    fn run_section_parallel(&mut self, limit: Tick, nthreads: usize) {
+        let nh = self.hosts.len();
+        let chunk = nh.div_ceil(nthreads);
+        let nworkers = nh.div_ceil(chunk);
+
+        let slots: Vec<Mutex<EpochSlot>> =
+            (0..nh).map(|_| Mutex::new(EpochSlot::default())).collect();
+        let start = Barrier::new(nworkers + 1);
+        let end = Barrier::new(nworkers + 1);
+        let stop = AtomicBool::new(false);
+        let panicked: Mutex<Option<Box<dyn std::any::Any + Send>>> =
+            Mutex::new(None);
+
+        // Split-borrow self: workers own disjoint host chunks, the main
+        // thread keeps the fabric and the pending map.
+        let hosts = &mut self.hosts;
+        let fabric = &mut self.fabric;
+        let pending = &mut self.pending;
+        let lookaheads: Vec<Tick> =
+            hosts.iter().map(|h| h.lookahead()).collect();
+        let pkt_ticks = self.pkt_ticks;
+        let depkt_ticks = self.depkt_ticks;
+        let dev_fixed = &self.dev_fixed_ticks;
+        let d_min = self.d_min;
+        let line = self.cfg.l1.line;
+
+        let mut epochs = 0u64;
+        let mut barrier_waits = 0u64;
+
+        std::thread::scope(|s| {
+            for (wi, hchunk) in hosts.chunks_mut(chunk).enumerate() {
+                let base = wi * chunk;
+                let slots = &slots;
+                let start = &start;
+                let end = &end;
+                let stop = &stop;
+                let panicked = &panicked;
+                s.spawn(move || loop {
+                    start.wait();
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let res = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            for (i, host) in hchunk.iter_mut().enumerate() {
+                                let (cap, inbox) = {
+                                    let mut sl =
+                                        slots[base + i].lock().unwrap();
+                                    (sl.cap, std::mem::take(&mut sl.inbox))
+                                };
+                                let n = host.epoch_step(cap, inbox);
+                                let outbox = host.take_outbox();
+                                let nt = host.next_event_tick();
+                                let mut sl = slots[base + i].lock().unwrap();
+                                sl.processed = n;
+                                sl.outbox = outbox;
+                                sl.next_tick = nt;
+                            }
+                        }),
+                    );
+                    if let Err(p) = res {
+                        *panicked.lock().unwrap() = Some(p);
+                    }
+                    end.wait();
+                });
+            }
+
+            let mut inboxes: Vec<Vec<(Tick, Ev)>> =
+                (0..nh).map(|_| Vec::new()).collect();
+            loop {
+                // Caps from the pending map — identical computation to
+                // the serial path's `epoch_caps`.
+                let mut oldest = vec![Tick::MAX; nh];
+                for &(t, h, _) in pending.keys() {
+                    let h = h as usize;
+                    if t < oldest[h] {
+                        oldest[h] = t;
+                    }
+                }
+                for h in 0..nh {
+                    let mut sl = slots[h].lock().unwrap();
+                    sl.cap = limit.min(
+                        oldest[h]
+                            .saturating_add(lookaheads[h])
+                            .saturating_sub(1),
+                    );
+                    sl.inbox = std::mem::take(&mut inboxes[h]);
+                }
+                start.wait();
+                end.wait();
+                if panicked.lock().unwrap().is_some() {
+                    let p = panicked.lock().unwrap().take().unwrap();
+                    stop.store(true, Ordering::Release);
+                    start.wait();
+                    std::panic::resume_unwind(p);
+                }
+                let mut processed = 0u64;
+                let mut active = 0u32;
+                let mut barrier = Tick::MAX;
+                for h in 0..nh {
+                    let mut sl = slots[h].lock().unwrap();
+                    processed += sl.processed;
+                    if sl.processed > 0 {
+                        active += 1;
+                    }
+                    for (at, seq, req) in sl.outbox.drain(..) {
+                        pending.insert((at, h as u8, seq), req);
+                    }
+                    if let Some(t) = sl.next_tick {
+                        barrier = barrier.min(t.saturating_add(d_min));
+                    }
+                }
+                let committed = commit_pending(
+                    fabric,
+                    pending,
+                    &mut inboxes,
+                    limit,
+                    barrier,
+                    pkt_ticks,
+                    depkt_ticks,
+                    dev_fixed,
+                    d_min,
+                    line,
+                );
+                epochs += 1;
+                if active >= 2 {
+                    barrier_waits += active as u64;
+                }
+                if processed == 0 && committed == 0 {
+                    stop.store(true, Ordering::Release);
+                    start.wait();
                     break;
                 }
             }
-            match ev {
-                Ev::Fm(idx) => {
-                    self.handle_fm_event(idx as usize, t);
-                    continue;
-                }
-                Ev::FmEpoch => {
-                    self.handle_policy_epoch(t);
-                    continue;
-                }
-                Ev::FmMove { dev, ld, from, to } => {
-                    // A quiesce-deferred policy move re-probing.
-                    let Some(mut eng) = self.fm_policy.take() else {
-                        continue;
-                    };
-                    self.execute_policy_move(
-                        &mut eng,
-                        LdRef { dev: dev as usize, ld: ld as u16 },
-                        from as usize,
-                        to as usize,
-                        t,
-                    );
-                    self.fm_policy = Some(eng);
-                    continue;
-                }
-                _ => {}
-            }
-            self.hosts[h as usize].dispatch(
-                &mut self.fabric,
-                &mut self.queue,
-                ev,
-                t,
-            );
-        }
-        self.summary()
+        });
+
+        self.par_epochs += epochs;
+        self.par_barrier_waits += barrier_waits;
+    }
+
+    /// Events dispatched machine-wide: every host's local queue plus
+    /// the machine queue.
+    fn events_total(&self) -> u64 {
+        self.hosts.iter().map(|h| h.events_processed()).sum::<u64>()
+            + self.mq.processed()
     }
 
     // ---- runtime fabric-manager actions -----------------------------------
@@ -371,7 +843,7 @@ impl Machine {
                 if self.hosts[h].has_inflight_in(base, size) {
                     self.hosts[h].stats.fm_quiesce_retries.inc();
                     let at = t + ns_to_ticks(FM_QUIESCE_RETRY_NS);
-                    self.queue.schedule_at(at, (h as u8, Ev::Fm(idx as u32)));
+                    self.mq.schedule_at(at, MEv::Fm(idx as u32));
                     return;
                 }
                 self.fabric.post_fm_event(
@@ -403,8 +875,7 @@ impl Machine {
                     // retries — follow it on the same cadence rather
                     // than dropping a validated bind on the floor.
                     let at = t + ns_to_ticks(FM_QUIESCE_RETRY_NS);
-                    self.queue
-                        .schedule_at(at, (host as u8, Ev::Fm(idx as u32)));
+                    self.mq.schedule_at(at, MEv::Fm(idx as u32));
                     return;
                 }
                 if code != retcode::SUCCESS {
@@ -490,7 +961,7 @@ impl Machine {
         let next = t + eng.epoch_ticks();
         self.fm_policy = Some(eng);
         if self.hosts.iter().any(|h| !h.all_done()) {
-            self.queue.schedule_at(next, (0, Ev::FmEpoch));
+            self.mq.schedule_at(next, MEv::FmEpoch);
         }
     }
 
@@ -577,17 +1048,14 @@ impl Machine {
             eng.note_deferred();
             self.fm_moves_parked.insert((r.dev, r.ld));
             let at = t + ns_to_ticks(FM_QUIESCE_RETRY_NS);
-            self.queue.schedule_at(
+            self.mq.schedule_at(
                 at,
-                (
-                    from as u8,
-                    Ev::FmMove {
-                        dev: r.dev as u8,
-                        ld: r.ld as u8,
-                        from: from as u8,
-                        to: to as u8,
-                    },
-                ),
+                MEv::FmMove {
+                    dev: r.dev as u8,
+                    ld: r.ld as u8,
+                    from: from as u8,
+                    to: to as u8,
+                },
             );
             return;
         }
@@ -674,12 +1142,21 @@ impl Machine {
     }
 
     pub fn summary(&self) -> RunSummary {
-        // Wall tick = the last core to finish anywhere (the queue may
+        // Wall tick = the last core to finish anywhere (the queues may
         // still drain trailing prefetch fills past that point).
         let finished =
             self.hosts.iter().map(|h| h.finished_at()).max().unwrap_or(0);
-        let ticks =
-            if finished == 0 { self.queue.now() } else { finished }.max(1);
+        let ticks = if finished == 0 {
+            self.hosts
+                .iter()
+                .map(|h| h.queue_now())
+                .max()
+                .unwrap_or(0)
+                .max(self.mq.now())
+        } else {
+            finished
+        }
+        .max(1);
         let seconds = ticks as f64 * 1e-12;
         let bytes: u64 = self.hosts.iter().map(|h| h.bytes_moved()).sum();
         let l1_hits: u64 = self
@@ -780,7 +1257,7 @@ impl Machine {
             m2s_rwd: self.fabric.agg_link(|s| s.m2s_rwd.get()),
             s2m_ndr: self.fabric.agg_link(|s| s.s2m_ndr.get()),
             s2m_drs: self.fabric.agg_link(|s| s.s2m_drs.get()),
-            events: self.queue.processed(),
+            events: self.events_total(),
         }
     }
 
@@ -804,7 +1281,21 @@ impl Machine {
         if let Some(eng) = &self.fm_policy {
             eng.dump(&mut d);
         }
-        d.push("sys.events", self.queue.processed() as f64);
+        d.push("sys.events", self.events_total() as f64);
+        // Parallel-scheduler telemetry: identical at every thread
+        // count (the epoch structure is a function of queue state, not
+        // of thread scheduling), so these keys are safe inside the
+        // bit-determinism contract.
+        d.push("sim.par.epochs", self.par_epochs as f64);
+        d.push("sim.par.barrier_waits", self.par_barrier_waits as f64);
+        d.push(
+            "sim.par.horizon_ns_min",
+            if self.par_horizon_min == Tick::MAX {
+                0.0
+            } else {
+                ticks_to_ns(self.par_horizon_min)
+            },
+        );
         d
     }
 }
@@ -1186,6 +1677,39 @@ mod tests {
             (s.ticks, s.events, s.dram_accesses, s.cxl_accesses)
         };
         assert_eq!(go(), go());
+    }
+
+    #[test]
+    fn serial_and_threaded_sections_agree() {
+        // The contract in miniature (the full property sweep lives in
+        // tests/parallel_determinism.rs): a 2-host run behind one
+        // switch must produce identical digests at threads = 1 and 2.
+        let go = |threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.hosts = 2;
+            cfg.threads = threads;
+            cfg.cxl.mem_size = 512 << 20;
+            cfg.cxl.switches = 1;
+            cfg.cxl.dev_overrides =
+                vec![crate::config::CxlDevOverride {
+                    lds: Some(2),
+                    ..Default::default()
+                }];
+            let mut m = booted(cfg);
+            for h in 0..2 {
+                let wl = Stream::new(StreamKernel::Triad, 8192, 1);
+                m.attach_workloads_to(
+                    h,
+                    vec![Box::new(wl)],
+                    &MemPolicy::Bind { nodes: vec![1] },
+                )
+                .unwrap();
+            }
+            let s = m.run(None);
+            m.verify().unwrap();
+            (s.ticks, s.events, s.cxl_accesses, m.dump_stats().to_text())
+        };
+        assert_eq!(go(1), go(2));
     }
 
     #[test]

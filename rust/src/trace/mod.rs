@@ -25,8 +25,7 @@
 //!         | arg u64 (va for load/store, cycles for work)
 //! ```
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -334,16 +333,34 @@ impl EventTrace {
     }
 }
 
+/// One `(host, core)` wrapper's captured slice. Each [`Recorded`]
+/// appends only to its own part, so concurrent capture from several
+/// worker threads never interleaves records within a stream.
+#[derive(Default)]
+struct Part {
+    host: u8,
+    core: u8,
+    vmas: Vec<VmaRecord>,
+    inits: Vec<InitRecord>,
+    events: Vec<MemEvent>,
+}
+
 /// Tees every workload on a machine into one shared [`EventTrace`].
 ///
 /// Wrap each workload with its (host, core) before attaching:
 /// `m.attach_workloads_to(h, vec![rec.wrap(h, 0, wl)], &policy)`. The
 /// wrapper is transparent — it forwards every trait hook, so a
-/// recorded run stays bit-identical to an unrecorded one — and the
-/// single-threaded event loop makes the shared buffer safe.
+/// recorded run stays bit-identical to an unrecorded one. Capture is
+/// thread-safe (hosts may drain on worker threads under
+/// `[sim] threads > 1`): each wrapper owns a private per-(host, core)
+/// part and [`Recorder::snapshot`]/[`Recorder::take`] merge the parts
+/// in `(host, core)` order — the assembled trace is a function of what
+/// each core did, never of which worker thread ran its host first.
+/// [`crate::workloads::Replay`] consumes the trace per (host, core)
+/// stream, so the grouped merge replays identically.
 #[derive(Clone, Default)]
 pub struct Recorder {
-    buf: Rc<RefCell<EventTrace>>,
+    parts: Arc<Mutex<Vec<Part>>>,
 }
 
 impl Recorder {
@@ -359,30 +376,58 @@ impl Recorder {
         core: usize,
         inner: Box<dyn Workload>,
     ) -> Box<dyn Workload> {
-        Box::new(Recorded {
+        let mut parts = self.parts.lock().unwrap();
+        parts.push(Part {
             host: host as u8,
             core: core as u8,
+            ..Default::default()
+        });
+        let idx = parts.len() - 1;
+        drop(parts);
+        Box::new(Recorded {
+            idx,
             inner,
-            buf: Rc::clone(&self.buf),
+            parts: Arc::clone(&self.parts),
         })
+    }
+
+    /// Deterministic merge: parts ordered by `(host, core)` (wrap
+    /// order as the tiebreak), each part's records in capture order.
+    fn merged(parts: &[Part]) -> EventTrace {
+        let mut order: Vec<usize> = (0..parts.len()).collect();
+        order.sort_by_key(|&i| (parts[i].host, parts[i].core, i));
+        let mut t = EventTrace::default();
+        for &i in &order {
+            t.vmas.extend(parts[i].vmas.iter().cloned());
+            t.inits.extend(parts[i].inits.iter().cloned());
+            t.events.extend(parts[i].events.iter().cloned());
+        }
+        t
     }
 
     /// The trace captured so far (clone; the run may still be going).
     pub fn snapshot(&self) -> EventTrace {
-        self.buf.borrow().clone()
+        Self::merged(&self.parts.lock().unwrap())
     }
 
     /// Take the captured trace, leaving the recorder empty.
     pub fn take(&self) -> EventTrace {
-        std::mem::take(&mut self.buf.borrow_mut())
+        let mut parts = self.parts.lock().unwrap();
+        let t = Self::merged(&parts);
+        for p in parts.iter_mut() {
+            p.vmas.clear();
+            p.inits.clear();
+            p.events.clear();
+        }
+        t
     }
 }
 
 struct Recorded {
-    host: u8,
-    core: u8,
+    /// This wrapper's slot in the shared part list.
+    idx: usize,
     inner: Box<dyn Workload>,
-    buf: Rc<RefCell<EventTrace>>,
+    parts: Arc<Mutex<Vec<Part>>>,
 }
 
 impl Workload for Recorded {
@@ -393,52 +438,53 @@ impl Workload for Recorded {
     fn setup(&mut self, asp: &mut AddressSpace, policy: &MemPolicy) {
         let before = asp.vma_spans().len();
         self.inner.setup(asp, policy);
-        let mut buf = self.buf.borrow_mut();
+        let init = self.inner.init_data();
+        let mut parts = self.parts.lock().unwrap();
+        let part = &mut parts[self.idx];
+        let (host, core) = (part.host, part.core);
         for (start, len, pol) in asp.vma_spans().into_iter().skip(before) {
-            buf.vmas.push(VmaRecord {
-                host: self.host,
-                core: self.core,
+            part.vmas.push(VmaRecord {
+                host,
+                core,
                 start,
                 len,
                 policy: pol.to_spec(),
             });
         }
-        for (va, bits) in self.inner.init_data() {
-            buf.inits.push(InitRecord {
-                host: self.host,
-                core: self.core,
-                va,
-                bits,
-            });
+        for (va, bits) in init {
+            part.inits.push(InitRecord { host, core, va, bits });
         }
     }
 
     fn next_op(&mut self) -> Option<WlOp> {
         let op = self.inner.next_op()?;
+        let mut parts = self.parts.lock().unwrap();
+        let part = &mut parts[self.idx];
+        let (host, core) = (part.host, part.core);
         let ev = match op {
             WlOp::Load { va, size } => MemEvent {
-                host: self.host,
-                core: self.core,
+                host,
+                core,
                 op: TraceOp::Load,
                 size: size as u8,
                 arg: va,
             },
             WlOp::Store { va, size } => MemEvent {
-                host: self.host,
-                core: self.core,
+                host,
+                core,
                 op: TraceOp::Store,
                 size: size as u8,
                 arg: va,
             },
             WlOp::Work { cycles } => MemEvent {
-                host: self.host,
-                core: self.core,
+                host,
+                core,
                 op: TraceOp::Work,
                 size: 0,
                 arg: cycles,
             },
         };
-        self.buf.borrow_mut().events.push(ev);
+        part.events.push(ev);
         Some(op)
     }
 

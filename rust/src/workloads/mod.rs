@@ -38,7 +38,15 @@ pub enum WlStat {
 }
 
 /// A workload bound to one core.
-pub trait Workload {
+///
+/// `Send` is a supertrait: a workload travels with its [`Host`] onto a
+/// worker thread when the parallel event loop (`[sim] threads > 1`)
+/// partitions hosts across threads, so every implementor must hold
+/// only thread-movable state (plain data, or `Arc`-shared buffers like
+/// [`crate::trace::Recorder`]'s).
+///
+/// [`Host`]: crate::system::Host
+pub trait Workload: Send {
     fn name(&self) -> String;
 
     /// Reserve VMAs under `policy`. Called once before the run.

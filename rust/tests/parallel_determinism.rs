@@ -1,0 +1,649 @@
+//! The bit-determinism harness for the rack-scale parallel event loop.
+//!
+//! The contract under test (see `system::machine` module docs): for any
+//! topology, workload mix, and FM schedule/policy, a run at `[sim]
+//! threads = N` is *byte-identical* to the serial `threads = 1` run —
+//! same `RunSummary`, same full stat dump, same event count. The epoch
+//! structure is a function of queue state alone, never of thread
+//! scheduling, so the only thing threads may change is wall-clock time.
+//!
+//! Alongside the equivalence property this file pins down the safety
+//! side of the conservative horizon:
+//!
+//! * the lookahead is never zero and never exceeds the true minimum
+//!   round-trip to any LD the host can reach;
+//! * an FM re-bind that changes a host's reachable set re-derives the
+//!   horizon (gaining a lower-latency path shrinks it);
+//! * a deliberately *wrong* (too large) horizon is caught by the
+//!   debug assertion ("scheduling into the past") rather than silently
+//!   corrupting event order — on the serial path and through the
+//!   worker-panic relay of the threaded path alike.
+
+use cxlramsim::config::{
+    CxlDevOverride, FmEventDef, FmPolicyConfig, FmPolicyKind, LdRef,
+    SimConfig,
+};
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::sim::{ns_to_ticks, Tick};
+use cxlramsim::system::{Machine, RunSummary};
+use cxlramsim::util::rng::Rng;
+use cxlramsim::workloads::{
+    PointerChase, RandomAccess, Serve, ServeConfig, Stream, StreamKernel,
+    TieredKv, Workload,
+};
+
+/// Boot `cfg` at the given thread count, attach workloads, run to
+/// completion and return the full stat dump plus the run summary.
+fn run_once(
+    cfg: &SimConfig,
+    threads: usize,
+    attach: impl Fn(&mut Machine),
+) -> (String, RunSummary) {
+    let mut cfg = cfg.clone();
+    cfg.threads = threads;
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    attach(&mut m);
+    let s = m.run(None);
+    m.verify().unwrap();
+    (m.dump_stats().to_text(), s)
+}
+
+/// Field-by-field `RunSummary` equality (floats compared by bits: the
+/// contract is bit-determinism, not approximate agreement).
+fn assert_summaries_eq(a: &RunSummary, b: &RunSummary, what: &str) {
+    assert_eq!(a.ticks, b.ticks, "{what}: ticks");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.bytes_moved, b.bytes_moved, "{what}: bytes_moved");
+    assert_eq!(a.dram_accesses, b.dram_accesses, "{what}: dram_accesses");
+    assert_eq!(a.cxl_accesses, b.cxl_accesses, "{what}: cxl_accesses");
+    assert_eq!(a.cxl_dev_fills, b.cxl_dev_fills, "{what}: cxl_dev_fills");
+    assert_eq!(a.m2s_req, b.m2s_req, "{what}: m2s_req");
+    assert_eq!(a.m2s_rwd, b.m2s_rwd, "{what}: m2s_rwd");
+    assert_eq!(a.s2m_ndr, b.s2m_ndr, "{what}: s2m_ndr");
+    assert_eq!(a.s2m_drs, b.s2m_drs, "{what}: s2m_drs");
+    for (x, y, f) in [
+        (a.seconds, b.seconds, "seconds"),
+        (a.bandwidth_gbps, b.bandwidth_gbps, "bandwidth_gbps"),
+        (a.l1_miss_rate, b.l1_miss_rate, "l1_miss_rate"),
+        (a.l2_miss_rate, b.l2_miss_rate, "l2_miss_rate"),
+        (a.avg_lat_dram_ns, b.avg_lat_dram_ns, "avg_lat_dram_ns"),
+        (a.avg_lat_cxl_ns, b.avg_lat_cxl_ns, "avg_lat_cxl_ns"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {f}");
+    }
+}
+
+/// FNV-1a over the stat dump text — the in-process "golden digest".
+fn fnv64(text: &str) -> u64 {
+    text.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x1_0000_01b3)
+    })
+}
+
+/// True minimum round-trip through the fabric for device `dev` — the
+/// upper bound a host's lookahead horizon must never exceed.
+fn dev_round_trip_ticks(cfg: &SimConfig, dev: usize) -> Tick {
+    ns_to_ticks(
+        2.0 * (cfg.cxl.pkt_lat_ns + cfg.cxl.depkt_lat_ns)
+            + 2.0 * cfg.cxl.path_lat_ns(dev),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Property sweep: random topologies x workload mixes, threads 1 vs N.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_topologies_are_thread_count_invariant() {
+    let mut rng = Rng::new(0x7ac4_5ca1e);
+    for case in 0..4u32 {
+        let hosts = rng.range(2, 4) as usize;
+        let devices = rng.range(1, 2) as usize;
+        let lds = rng.range(1, 2) as usize;
+        let mut cfg = SimConfig::default();
+        cfg.hosts = hosts;
+        cfg.cores = rng.range(1, 2) as usize;
+        cfg.sys_mem_size = 128 << 20;
+        cfg.cxl.devices = devices;
+        cfg.cxl.mem_size = (lds as u64) * (256 << 20);
+        cfg.cxl.switches = usize::from(rng.chance(0.5));
+        // One window per LD: direct-attach auto would interleave a
+        // power-of-two device count into a single set, which cannot be
+        // dealt out via [host.N] lds (and MLDs require 1-way anyway).
+        cfg.cxl.interleave_ways = 1;
+        cfg.cxl.dev_overrides = vec![
+            CxlDevOverride { lds: Some(lds), ..Default::default() };
+            devices
+        ];
+        // Deal the LDs round-robin; hosts past the LD supply run
+        // DRAM-only, which the equivalence must hold for too.
+        cfg.host_lds = vec![Vec::new(); hosts];
+        for i in 0..devices * lds {
+            cfg.host_lds[i % hosts]
+                .push(LdRef { dev: i / lds, ld: (i % lds) as u16 });
+        }
+        cfg.seed = rng.next_u64();
+        cfg.validate().unwrap();
+
+        let kinds: Vec<u64> = (0..hosts).map(|_| rng.below(3)).collect();
+        let seeds: Vec<u64> = (0..hosts).map(|_| rng.next_u64()).collect();
+        let threads = rng.range(2, 5) as usize;
+
+        let attach = |m: &mut Machine| {
+            for h in 0..m.hosts.len() {
+                let wl: Box<dyn Workload> = match kinds[h] {
+                    0 => Box::new(Stream::new(StreamKernel::Triad, 4096, 1)),
+                    1 => Box::new(RandomAccess::new(
+                        1 << 20,
+                        2000,
+                        0.25,
+                        seeds[h],
+                    )),
+                    _ => Box::new(PointerChase::new(1024, 3000, seeds[h])),
+                };
+                let policy = if m.cfg.host_lds[h].is_empty() {
+                    MemPolicy::Local { home: 0 }
+                } else {
+                    MemPolicy::Interleave { weights: vec![(0, 1), (1, 1)] }
+                };
+                m.attach_workloads_to(h, vec![wl], &policy).unwrap();
+            }
+        };
+
+        let (t1, s1) = run_once(&cfg, 1, attach);
+        let (tn, sn) = run_once(&cfg, threads, attach);
+        assert_eq!(
+            t1, tn,
+            "case {case}: stat dump diverged between threads=1 and \
+             threads={threads} (hosts={hosts} devices={devices} lds={lds})"
+        );
+        assert_summaries_eq(&s1, &sn, &format!("case {case}"));
+        assert!(s1.events > 0, "case {case}: nothing ran");
+    }
+}
+
+/// Serve (the latency-percentile workload) over the 2-host switched
+/// MLD: per-request samples and `extra_stats` percentile merging must
+/// not depend on which worker ran which host.
+#[test]
+fn serve_fleet_is_thread_count_invariant() {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 2;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(2), ..Default::default() }];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }],
+        vec![LdRef { dev: 0, ld: 1 }],
+    ];
+    cfg.validate().unwrap();
+
+    let attach = |m: &mut Machine| {
+        for h in 0..m.hosts.len() {
+            let (hot, cold) =
+                m.hosts[h].guest.as_ref().unwrap().alloc.tier_policies();
+            let seed = m
+                .cfg
+                .seed
+                .wrapping_add((h as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let sc = ServeConfig {
+                users: 64,
+                zipf_s: 1.1,
+                requests: 60,
+                kv_block: 256,
+                context_blocks: 2,
+                dram_slots: 8,
+                cxl_slots: 16,
+                decode_work: 16,
+            };
+            let wl: Box<dyn Workload> =
+                Box::new(Serve::new(sc, hot, cold, seed));
+            m.attach_workloads_to(
+                h,
+                vec![wl],
+                &MemPolicy::Local { home: 0 },
+            )
+            .unwrap();
+        }
+    };
+
+    let (t1, s1) = run_once(&cfg, 1, attach);
+    let (t4, s4) = run_once(&cfg, 4, attach);
+    assert_eq!(t1, t4, "serve stat dump diverged at threads=4");
+    assert_summaries_eq(&s1, &s4, "serve");
+    assert!(t1.contains("serve."), "percentile stats missing from dump");
+}
+
+/// Tiered-KV pins its own hot/cold tier arenas; the hot/cold split must
+/// survive the threaded path bit-exactly.
+#[test]
+fn tiered_kv_is_thread_count_invariant() {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(2), ..Default::default() }];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }],
+        vec![LdRef { dev: 0, ld: 1 }],
+    ];
+    cfg.seed = 11;
+    cfg.validate().unwrap();
+
+    let attach = |m: &mut Machine| {
+        for h in 0..m.hosts.len() {
+            let wl: Box<dyn Workload> = Box::new(TieredKv::new(
+                512,
+                128,
+                1500,
+                m.cfg.seed.wrapping_add(h as u64),
+            ));
+            m.attach_workloads_to(
+                h,
+                vec![wl],
+                &MemPolicy::Local { home: 0 },
+            )
+            .unwrap();
+        }
+    };
+
+    let (t1, s1) = run_once(&cfg, 1, attach);
+    let (t3, s3) = run_once(&cfg, 3, attach);
+    assert_eq!(t1, t3, "tiered-kv stat dump diverged at threads=3");
+    assert_summaries_eq(&s1, &s3, "tiered-kv");
+}
+
+/// The closed-loop `[fm] policy` path: machine-level telemetry epochs,
+/// quiesce negotiations, and mid-run re-binds must make the same
+/// decisions at every thread count.
+#[test]
+fn fm_policy_run_is_thread_count_invariant() {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 512 << 20;
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(2), ..Default::default() }];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }, LdRef { dev: 0, ld: 1 }],
+        vec![],
+    ];
+    cfg.fm_policy =
+        Some(FmPolicyConfig::new(FmPolicyKind::CapacityRebalance));
+    cfg.seed = 7;
+    cfg.validate().unwrap();
+
+    let attach = |m: &mut Machine| {
+        let wl0 = Stream::new(StreamKernel::Copy, 8192, 1);
+        m.attach_workloads_to(
+            0,
+            vec![Box::new(wl0)],
+            &MemPolicy::Bind { nodes: vec![1] },
+        )
+        .unwrap();
+        let wl1 = Stream::new(StreamKernel::Triad, 32768, 1);
+        m.attach_workloads_to(
+            1,
+            vec![Box::new(wl1)],
+            &MemPolicy::Preferred { node: 2 },
+        )
+        .unwrap();
+    };
+
+    let (t1, s1) = run_once(&cfg, 1, attach);
+    let (t2, s2) = run_once(&cfg, 2, attach);
+    assert_eq!(t1, t2, "[fm] policy stat dump diverged at threads=2");
+    assert_summaries_eq(&s1, &s2, "fm-policy");
+    // The policy actually acted in both runs (identical decisions).
+    assert!(t1.contains("fm.policy.decisions"));
+}
+
+// ---------------------------------------------------------------------------
+// The 16-host rack golden: one digest at every thread count.
+// ---------------------------------------------------------------------------
+
+/// Sixteen hosts over four 4-LD MLDs behind two switches (the rack from
+/// the issue title). The serial run's dump digest is the golden value;
+/// threads ∈ {2, 4, 8} and a repeated threads=8 run must all reproduce
+/// it bit-for-bit.
+#[test]
+fn sixteen_host_rack_golden_digest() {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 16;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 128 << 20;
+    cfg.cxl.devices = 4;
+    cfg.cxl.mem_size = 1 << 30; // 4 x 256 MiB LD slices per device
+    cfg.cxl.switches = 2;
+    cfg.cxl.dev_overrides = vec![
+        CxlDevOverride { lds: Some(4), ..Default::default() };
+        4
+    ];
+    cfg.host_lds = (0..16)
+        .map(|h| vec![LdRef { dev: h / 4, ld: (h % 4) as u16 }])
+        .collect();
+    cfg.seed = 42;
+    cfg.validate().unwrap();
+
+    let attach = |m: &mut Machine| {
+        for h in 0..m.hosts.len() {
+            let kernel = [
+                StreamKernel::Copy,
+                StreamKernel::Scale,
+                StreamKernel::Add,
+                StreamKernel::Triad,
+            ][h % 4];
+            let wl: Box<dyn Workload> =
+                Box::new(Stream::new(kernel, 2048, 1));
+            m.attach_workloads_to(
+                h,
+                vec![wl],
+                &MemPolicy::Bind { nodes: vec![1] },
+            )
+            .unwrap();
+        }
+    };
+
+    let (golden_text, golden_sum) = run_once(&cfg, 1, attach);
+    let golden = fnv64(&golden_text);
+    assert!(golden_sum.cxl_accesses > 0, "rack never touched the fabric");
+    assert!(
+        golden_text.contains("sim.par.epochs"),
+        "parallel-loop stats missing from the dump"
+    );
+
+    for threads in [2usize, 4, 8, 8] {
+        let (text, sum) = run_once(&cfg, threads, attach);
+        assert_eq!(
+            fnv64(&text),
+            golden,
+            "16-host digest diverged at threads={threads}"
+        );
+        assert_eq!(text, golden_text);
+        assert_summaries_eq(
+            &sum,
+            &golden_sum,
+            &format!("rack threads={threads}"),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lookahead-horizon safety.
+// ---------------------------------------------------------------------------
+
+/// The horizon is never zero, and never exceeds the true minimum
+/// round-trip latency of any LD the host can reach; hosts with no
+/// bound LD advance unthrottled (`Tick::MAX`).
+#[test]
+fn lookahead_is_positive_and_bounded_by_reachable_latency() {
+    // Direct-attach, switched, and a mixed set where host 1 is LD-less.
+    for switches in [0usize, 1] {
+        let mut cfg = SimConfig::default();
+        cfg.hosts = 3;
+        cfg.cores = 1;
+        cfg.sys_mem_size = 128 << 20;
+        cfg.cxl.devices = 2;
+        cfg.cxl.mem_size = 256 << 20;
+        cfg.cxl.switches = switches;
+        // Per-device windows even on the direct-attach arm (auto would
+        // fold two devices into one interleave set).
+        cfg.cxl.interleave_ways = 1;
+        cfg.host_lds = vec![
+            vec![LdRef { dev: 0, ld: 0 }],
+            vec![],
+            vec![LdRef { dev: 1, ld: 0 }],
+        ];
+        cfg.validate().unwrap();
+        let mut m = Machine::new(cfg.clone()).unwrap();
+        m.boot(ProgModel::Znuma).unwrap();
+        for h in 0..3 {
+            m.hosts[h].recompute_lookahead();
+            let la = m.hosts[h].lookahead();
+            assert!(la >= 1, "switches={switches} host{h}: zero horizon");
+            if cfg.host_lds[h].is_empty() {
+                assert_eq!(
+                    la,
+                    Tick::MAX,
+                    "switches={switches} host{h}: LD-less host throttled"
+                );
+            } else {
+                let bound =
+                    dev_round_trip_ticks(&cfg, cfg.host_lds[h][0].dev);
+                assert!(
+                    la <= bound,
+                    "switches={switches} host{h}: horizon {la} exceeds \
+                     true min round-trip {bound}"
+                );
+                assert!(
+                    la >= bound.saturating_sub(1000).max(1),
+                    "switches={switches} host{h}: horizon {la} gives \
+                     away more than the rounding margin below {bound}"
+                );
+            }
+        }
+    }
+}
+
+/// An FM re-bind changes the reachable set, and the next section runs
+/// with a re-derived horizon: host 0 starts behind the slow expander
+/// only, gains the fast one mid-run, and its horizon shrinks to the
+/// fast round-trip; host 1 loses its only LD and becomes unthrottled.
+#[test]
+fn lookahead_rederives_after_fm_rebind() {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.devices = 2;
+    cfg.cxl.mem_size = 256 << 20;
+    cfg.cxl.switches = 1;
+    // dev 0 keeps the default (fast) link; dev 1 sits on a much slower
+    // downstream link, so the two round-trips are ~320 ns apart.
+    cfg.cxl.dev_overrides = vec![
+        CxlDevOverride::default(),
+        CxlDevOverride { link_lat_ns: Some(180.0), ..Default::default() },
+    ];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 1, ld: 0 }],
+        vec![LdRef { dev: 0, ld: 0 }],
+    ];
+    cfg.fm_events = vec![
+        FmEventDef::parse("@20us unbind dev0.ld0").unwrap(),
+        FmEventDef::parse("@25us bind dev0.ld0 host0").unwrap(),
+    ];
+    cfg.seed = 7;
+    cfg.validate().unwrap();
+
+    let slow = dev_round_trip_ticks(&cfg, 1);
+    let fast = dev_round_trip_ticks(&cfg, 0);
+    assert!(fast + 100_000 < slow, "topology must separate the paths");
+
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    m.hosts[0].recompute_lookahead();
+    let before = m.hosts[0].lookahead();
+    assert!(before <= slow && before > fast, "boot horizon on slow path");
+
+    // Host 0 streams on its slow LD well past the 25 us re-bind; host 1
+    // stays idle so the unbind quiesces immediately.
+    let wl = Stream::new(StreamKernel::Triad, 32768, 1);
+    m.attach_workloads_to(
+        0,
+        vec![Box::new(wl)],
+        &MemPolicy::Bind { nodes: vec![1] },
+    )
+    .unwrap();
+    let s = m.run(None);
+    assert!(s.ticks > ns_to_ticks(25_000.0), "run ended before the bind");
+
+    let after = m.hosts[0].lookahead();
+    assert!(
+        after < before,
+        "gaining the fast path must shrink the horizon \
+         ({before} -> {after})"
+    );
+    assert!(after <= fast && after >= fast.saturating_sub(1000).max(1));
+    assert_eq!(
+        m.hosts[1].lookahead(),
+        Tick::MAX,
+        "host 1 lost its only LD and must run unthrottled"
+    );
+}
+
+/// A deliberately-wrong horizon must be *caught*, not absorbed: pin the
+/// horizon far past the true round-trip, let the host race ahead
+/// through a long DRAM stretch while a CXL fill is still in flight, and
+/// the commit lands in the host's past — the event queue's debug
+/// assertion fires.
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "scheduling into the past")]
+fn forced_stale_horizon_is_caught_serial() {
+    let mut cfg = forced_horizon_cfg(1);
+    cfg.threads = 1;
+    run_forced_horizon(cfg);
+}
+
+/// Same trap on the threaded path: the worker's panic must relay
+/// through the epoch barrier to the caller with its message intact
+/// (not deadlock the section).
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "scheduling into the past")]
+fn forced_stale_horizon_is_caught_across_worker_threads() {
+    let mut cfg = forced_horizon_cfg(2);
+    cfg.threads = 2;
+    run_forced_horizon(cfg);
+}
+
+#[cfg(debug_assertions)]
+fn forced_horizon_cfg(hosts: usize) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = hosts;
+    cfg.cores = 1;
+    // A deep LSQ so a whole CXL page's misses stay outstanding while
+    // the core streams on through the DRAM stretch behind them.
+    cfg.lsq_entries = 256;
+    cfg.sys_mem_size = 128 << 20;
+    cfg.cxl.devices = 1;
+    cfg.cxl.mem_size = 256 << 20;
+    let mut host_lds = vec![vec![LdRef { dev: 0, ld: 0 }]];
+    host_lds.resize(hosts, Vec::new());
+    cfg.host_lds = host_lds;
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[cfg(debug_assertions)]
+fn run_forced_horizon(cfg: SimConfig) {
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    // 16 DRAM pages per CXL page: after each burst of CXL misses the
+    // host has microseconds of purely local work to race ahead into.
+    m.attach_workloads_to(
+        0,
+        vec![Box::new(Stream::new(StreamKernel::Copy, 32768, 1))],
+        &MemPolicy::Interleave { weights: vec![(0, 16), (1, 1)] },
+    )
+    .unwrap();
+    for h in 1..m.hosts.len() {
+        m.attach_workloads_to(
+            h,
+            vec![Box::new(Stream::new(StreamKernel::Triad, 4096, 1))],
+            &MemPolicy::Local { home: 0 },
+        )
+        .unwrap();
+    }
+    // Pin host 0's horizon far past the true round-trip: the
+    // self-throttle is gone, so a fill must eventually commit behind
+    // the host's local clock.
+    m.hosts[0].force_lookahead(Some(Tick::MAX));
+    m.run(None);
+}
+
+// ---------------------------------------------------------------------------
+// Stats-merge hardening.
+// ---------------------------------------------------------------------------
+
+/// `Workload::extra_stats` percentiles come out of `Samples`, which
+/// must be insensitive to the order values were recorded in — the
+/// order hosts retire requests is an execution detail.
+#[test]
+fn sample_percentiles_are_insertion_order_invariant() {
+    use cxlramsim::stats::Samples;
+    let vals: Vec<u64> = (0..997u64)
+        .map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 40)
+        .collect();
+    let mut fwd = Samples::default();
+    fwd.extend(&vals);
+    let mut rev = Samples::default();
+    let mut shuffled = vals.clone();
+    shuffled.reverse();
+    rev.extend(&shuffled);
+    let mut rng = Rng::new(3);
+    rng.shuffle(&mut shuffled);
+    let mut perm = Samples::default();
+    for v in &shuffled {
+        perm.add(*v);
+    }
+    for p in [0.5, 0.9, 0.99, 1.0] {
+        assert_eq!(fwd.percentile(p), rev.percentile(p), "p={p} reversed");
+        assert_eq!(fwd.percentile(p), perm.percentile(p), "p={p} shuffled");
+    }
+    assert_eq!(fwd.mean().to_bits(), rev.mean().to_bits());
+}
+
+/// The dump walks hosts in index order regardless of which worker
+/// finished last, so two identical runs at different thread counts
+/// produce the same *ordering* of per-host keys, not just the same
+/// values.
+#[test]
+fn stat_dump_key_order_is_execution_order_independent() {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 4;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 128 << 20;
+    cfg.cxl.mem_size = 1 << 30; // four 256 MiB LD slices
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(4), ..Default::default() }];
+    cfg.host_lds = (0..4)
+        .map(|h| vec![LdRef { dev: 0, ld: h as u16 }])
+        .collect();
+    cfg.validate().unwrap();
+
+    let attach = |m: &mut Machine| {
+        for h in 0..m.hosts.len() {
+            // Wildly uneven work so worker completion order differs
+            // from host index order.
+            let n = [16384u64, 512, 8192, 1024][h];
+            let wl: Box<dyn Workload> =
+                Box::new(Stream::new(StreamKernel::Copy, n, 1));
+            m.attach_workloads_to(
+                h,
+                vec![wl],
+                &MemPolicy::Bind { nodes: vec![1] },
+            )
+            .unwrap();
+        }
+    };
+
+    let (t1, _) = run_once(&cfg, 1, attach);
+    let (t4, _) = run_once(&cfg, 4, attach);
+    let keys = |t: &str| {
+        t.lines()
+            .filter_map(|l| l.split_whitespace().next().map(String::from))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(keys(&t1), keys(&t4), "per-host key order diverged");
+    assert_eq!(t1, t4);
+}

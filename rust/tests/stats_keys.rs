@@ -165,6 +165,9 @@ fn every_emitted_stat_key_is_documented() {
     assert!(d.entries.len() > 100, "run did not light up the emitters");
     // The interesting families really are present in this run.
     for probe in [
+        "sim.par.epochs",
+        "sim.par.barrier_waits",
+        "sim.par.horizon_ns_min",
         "host0.l2.pf.issued",
         "host1.sys.mem_online_events",
         "cxl.sw0.us_link.credit_wait.p99",
