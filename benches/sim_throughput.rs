@@ -1,6 +1,8 @@
 //! Simulator-hosting throughput: events/second on the standard
 //! 4-device STREAM configuration — the number that tracks whether the
-//! event loop is getting faster or slower across PRs.
+//! event loop is getting faster or slower across PRs — plus the
+//! 16-host rack thread-scaling axis (`rack16`) and the fabric-heavy
+//! commit-lane axis (`rack16_fabric`, threads x `[sim] commit_lanes`).
 //!
 //! Non-gating: CI runs it with `CXLRAMSIM_BENCH_QUICK=1` and uploads
 //! `BENCH_sim_throughput.json` (written to the repo root) as an
@@ -126,6 +128,65 @@ fn measure_rack(threads: usize, n: u64, samples: usize) -> (u64, f64) {
     (events, per_run[per_run.len() / 2])
 }
 
+/// The fabric-heavy rack for the commit-lane axis: 16 hosts over eight
+/// 2-LD devices behind two switches (two switch-credit-disjoint lane
+/// groups), every host pinned all-CXL so the commit phase dominates.
+fn rack_fabric_cfg(threads: usize, lanes: usize) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 16;
+    cfg.cores = 1;
+    cfg.threads = threads;
+    cfg.commit_lanes = lanes;
+    cfg.sys_mem_size = 128 << 20;
+    cfg.cxl.devices = 8;
+    cfg.cxl.mem_size = 512 << 20; // 2 x 256 MiB LD slices per device
+    cfg.cxl.switches = 2;
+    cfg.cxl.dev_overrides =
+        vec![CxlDevOverride { lds: Some(2), ..Default::default() }; 8];
+    cfg.host_lds = (0..16)
+        .map(|h| vec![LdRef { dev: h / 2, ld: (h % 2) as u16 }])
+        .collect();
+    cfg
+}
+
+fn build_rack_fabric(threads: usize, lanes: usize, n: u64) -> Machine {
+    let mut m = Machine::new(rack_fabric_cfg(threads, lanes))
+        .expect("rack_fabric machine");
+    m.boot(ProgModel::Znuma).expect("rack_fabric boot");
+    for h in 0..16 {
+        let kernel = [StreamKernel::Copy, StreamKernel::Triad][h % 2];
+        m.attach_workloads_to(
+            h,
+            vec![Box::new(Stream::new(kernel, n, 1))],
+            // All-CXL: every access crosses the fabric.
+            &MemPolicy::Bind { nodes: vec![1] },
+        )
+        .expect("rack_fabric attach");
+    }
+    m
+}
+
+/// Median event-loop time for the fabric-heavy rack at one
+/// `(threads, commit_lanes)` point. Returns (events, median loop ns).
+fn measure_rack_fabric(
+    threads: usize,
+    lanes: usize,
+    n: u64,
+    samples: usize,
+) -> (u64, f64) {
+    let mut per_run = Vec::with_capacity(samples);
+    let mut events = 0;
+    for _ in 0..samples {
+        let mut m = build_rack_fabric(threads, lanes, n);
+        let t = std::time::Instant::now();
+        let s = m.run(None);
+        per_run.push(t.elapsed().as_nanos() as f64);
+        events = s.events;
+    }
+    per_run.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (events, per_run[per_run.len() / 2])
+}
+
 fn main() {
     let quick = std::env::var("CXLRAMSIM_BENCH_QUICK").is_ok();
     let mut r = BenchRunner::new("sim_throughput");
@@ -170,6 +231,46 @@ fn main() {
         ));
     }
 
+    // The commit-lane axis: the fabric-heavy rack at threads 1/2/4/8,
+    // each with the commit phase on the main thread (lanes = 1) and
+    // sharded (lanes = auto). Identical results at every point; the
+    // delta is pure commit-phase scaling.
+    let ngroups = Machine::new(rack_fabric_cfg(1, 1))
+        .expect("rack_fabric machine")
+        .fabric
+        .lane_ranges()
+        .len();
+    let mut fabric_points = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let mut lane1_eps = 0.0;
+        for lanes_req in [1usize, 0] {
+            let (ev, ns) =
+                measure_rack_fabric(threads, lanes_req, rack_n, rack_samples);
+            let eps = ev as f64 * 1e9 / ns;
+            // Resolve "auto" (0) the way the machine does, so the JSON
+            // carries concrete lane counts.
+            let lanes = if lanes_req == 0 { threads } else { lanes_req }
+                .min(ngroups)
+                .max(1);
+            if lanes_req == 1 {
+                lane1_eps = eps;
+            }
+            println!(
+                "sim_throughput[rack16_fabric t={threads} l={lanes}]: \
+                 {ev} events in {:.1} ms -> {:.0} events/s \
+                 ({:.2}x vs lanes=1)",
+                ns / 1e6,
+                eps,
+                eps / lane1_eps.max(1.0)
+            );
+            fabric_points.push(format!(
+                "{{\"threads\":{threads},\"lanes\":{lanes},\
+                 \"events\":{ev},\"loop_median_ns\":{ns:.1},\
+                 \"events_per_sec\":{eps:.1}}}"
+            ));
+        }
+    }
+
     // End-to-end (new + boot + attach + run) for context.
     let s = r.bench("stream4x_4dev_end_to_end", || {
         std::hint::black_box(run_once());
@@ -184,10 +285,11 @@ fn main() {
          \"sim_ticks\":{ticks},\"loop_median_ns\":{loop_ns:.1},\
          \"events_per_sec\":{events_per_sec:.1},\
          \"end_to_end_median_ns\":{:.1},\"end_to_end_p90_ns\":{:.1},\
-         \"rack16\":[{}]}}\n",
+         \"rack16\":[{}],\"rack16_fabric\":[{}]}}\n",
         s.median_ns,
         s.p90_ns,
-        rack_points.join(",")
+        rack_points.join(","),
+        fabric_points.join(",")
     );
     if let Err(e) = std::fs::write("BENCH_sim_throughput.json", &json) {
         eprintln!("sim_throughput: could not write BENCH file: {e}");

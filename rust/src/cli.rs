@@ -102,6 +102,17 @@ impl Args {
                     let v = val(&mut i)?;
                     a.sets.push(format!("sim.threads={v}"));
                 }
+                "--commit-lanes" => {
+                    // "auto" is spelled 0 in the config (the override
+                    // parser only accepts bare scalars).
+                    let v = val(&mut i)?;
+                    let v = if v.eq_ignore_ascii_case("auto") {
+                        "0".to_string()
+                    } else {
+                        v
+                    };
+                    a.sets.push(format!("sim.commit_lanes={v}"));
+                }
                 "--switches" => {
                     let v = val(&mut i)?;
                     a.sets.push(format!("cxl.switches={v}"));
@@ -275,6 +286,9 @@ pub fn print_help() {
            --threads N            worker threads for the parallel event\n\
                                   loop (1 = serial; results are\n\
                                   bit-identical at every N)\n\
+           --commit-lanes L       fabric-commit lanes sharded by device\n\
+                                  (auto = follow --threads; bit-identical\n\
+                                  at every L)\n\
            --devices N            number of CXL expander cards\n\
            --switches M           CXL switches between root ports and\n\
                                   endpoints (0 = direct attach)\n\
@@ -459,7 +473,7 @@ pub fn cmd_stats(args: &Args) -> Result<()> {
             .with_context(|| format!("host {h}: attaching workload"))?;
     }
     m.run(None);
-    print!("{}", m.dump_stats().to_text());
+    print!("{}", m.dump_stats_full().to_text());
     if let (Some(rec), Some(path)) = (&recorder, &args.trace_out) {
         let t = rec.take();
         t.save(std::path::Path::new(path))?;
@@ -628,6 +642,18 @@ mod tests {
             Args::parse(&sv(&["run", "--threads", "4"])).unwrap();
         let cfg = a.config().unwrap();
         assert_eq!(cfg.threads, 4);
+    }
+
+    #[test]
+    fn commit_lanes_flag_reaches_config() {
+        let a =
+            Args::parse(&sv(&["run", "--commit-lanes", "2"])).unwrap();
+        let cfg = a.config().unwrap();
+        assert_eq!(cfg.commit_lanes, 2);
+        let a =
+            Args::parse(&sv(&["run", "--commit-lanes", "auto"])).unwrap();
+        let cfg = a.config().unwrap();
+        assert_eq!(cfg.commit_lanes, 0, "auto is spelled 0 internally");
     }
 
     #[test]

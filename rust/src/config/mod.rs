@@ -685,6 +685,13 @@ pub struct SimConfig {
     /// queue state, not thread count — so this is purely a wall-clock
     /// knob. Defaults to `$CXLRAMSIM_THREADS` when set, else 1.
     pub threads: usize,
+    /// `[sim] commit_lanes`: worker lanes for the sharded fabric commit
+    /// phase (`--commit-lanes`). Pending fabric entries are partitioned
+    /// by routed device into switch-credit-disjoint lane groups and
+    /// committed concurrently; 0 = `"auto"` follows `threads`. Like
+    /// `threads`, every value is bit-identical — purely a wall-clock
+    /// knob. Defaults to `$CXLRAMSIM_COMMIT_LANES` when set, else auto.
+    pub commit_lanes: usize,
 }
 
 /// Default for `[sim] threads`: the `CXLRAMSIM_THREADS` environment
@@ -697,6 +704,28 @@ fn default_threads() -> usize {
         .and_then(|v| v.parse::<usize>().ok())
         .filter(|&t| t >= 1)
         .unwrap_or(1)
+}
+
+/// Default for `[sim] commit_lanes`: the `CXLRAMSIM_COMMIT_LANES`
+/// environment variable when it parses (`"auto"` or a lane count),
+/// else 0 (auto — follow `[sim] threads`). Same CI hook as
+/// [`default_threads`]: the nightly TSan smoke exercises the sharded
+/// commit path suite-wide without touching any test's config.
+fn default_commit_lanes() -> usize {
+    std::env::var("CXLRAMSIM_COMMIT_LANES")
+        .ok()
+        .and_then(|v| parse_commit_lanes(&v))
+        .unwrap_or(0)
+}
+
+/// Parse a `commit_lanes` spelling: `"auto"` maps to 0, otherwise a
+/// plain lane count. Shared by the env default and the TOML loader.
+fn parse_commit_lanes(s: &str) -> Option<usize> {
+    if s.eq_ignore_ascii_case("auto") {
+        Some(0)
+    } else {
+        s.parse::<usize>().ok()
+    }
 }
 
 impl Default for SimConfig {
@@ -775,6 +804,7 @@ impl Default for SimConfig {
             seed: 1,
             workload: WorkloadConfig::default(),
             threads: default_threads(),
+            commit_lanes: default_commit_lanes(),
         }
     }
 }
@@ -831,6 +861,9 @@ impl SimConfig {
         }
         if self.threads == 0 || self.threads > 256 {
             bail!("sim.threads must be 1..=256");
+        }
+        if self.commit_lanes > 256 {
+            bail!("sim.commit_lanes must be \"auto\" (0) or 1..=256");
         }
         if !self.host_lds.is_empty() && self.host_lds.len() != self.hosts {
             bail!(
@@ -1267,6 +1300,18 @@ impl SimConfig {
         }
         get!("system.cores", c.cores, usize);
         get!("sim.threads", c.threads, usize);
+        if let Some(v) = doc.get("sim.commit_lanes") {
+            // Accepts the string "auto" (0) or an integer lane count.
+            c.commit_lanes = match v.as_str() {
+                Some(s) => parse_commit_lanes(s).with_context(|| {
+                    format!("sim.commit_lanes string must be \"auto\", got '{s}'")
+                })?,
+                None => v
+                    .as_u64()
+                    .context("sim.commit_lanes must be \"auto\" or integer")?
+                    as usize,
+            };
+        }
         get!("system.freq_ghz", c.freq_ghz, f64);
         get!("system.rob", c.rob_entries, usize);
         get!("system.lsq", c.lsq_entries, usize);
@@ -2020,6 +2065,35 @@ mod tests {
         c.threads = 257;
         assert!(c.validate().is_err(), "threads > 256 must be rejected");
         c.threads = 16;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn sim_commit_lanes_parses_and_validates() {
+        let cfg =
+            SimConfig::from_toml("[sim]\ncommit_lanes = 4\n", &[]).unwrap();
+        assert_eq!(cfg.commit_lanes, 4);
+        let cfg =
+            SimConfig::from_toml("[sim]\ncommit_lanes = \"auto\"\n", &[])
+                .unwrap();
+        assert_eq!(cfg.commit_lanes, 0, "\"auto\" spells lane count 0");
+        let cfg = SimConfig::from_toml(
+            "",
+            &["sim.commit_lanes=2".to_string()],
+        )
+        .unwrap();
+        assert_eq!(cfg.commit_lanes, 2);
+        assert!(
+            SimConfig::from_toml("[sim]\ncommit_lanes = \"three\"\n", &[])
+                .is_err(),
+            "non-auto strings must be rejected"
+        );
+        let mut c = SimConfig::default();
+        c.commit_lanes = 0;
+        assert!(c.validate().is_ok(), "0 = auto is valid");
+        c.commit_lanes = 257;
+        assert!(c.validate().is_err(), "lanes > 256 must be rejected");
+        c.commit_lanes = 256;
         assert!(c.validate().is_ok());
     }
 

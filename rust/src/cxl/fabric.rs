@@ -148,6 +148,96 @@ impl Fabric {
         self.links.iter().map(|l| f(&l.stats)).sum()
     }
 
+    /// Commit-lane partition: contiguous, switch-credit-disjoint device
+    /// ranges `[lo, hi)` covering `0..ndev` in order. Devices behind the
+    /// same switch share its upstream credit pool, so every device a
+    /// switch serves lands in one range (the ranges are the connected
+    /// components of the "shares flow-control state" relation). Two
+    /// lanes never touch the same link, switch, or device, which is what
+    /// makes the `&mut`-disjoint views of [`Fabric::lane_views`] sound.
+    pub fn lane_ranges(&self) -> Vec<(usize, usize)> {
+        let n = self.ndev();
+        // reach_hi[i]: one past the furthest device that shares credit
+        // state with i through some switch (i + 1 when direct-attached).
+        let mut reach_hi: Vec<usize> = (0..n).map(|i| i + 1).collect();
+        for sw in &self.switches {
+            let lo = sw.devices.iter().copied().min().unwrap_or(0);
+            let hi =
+                sw.devices.iter().copied().max().map_or(0, |m| m + 1);
+            for r in reach_hi.iter_mut().take(hi).skip(lo) {
+                *r = (*r).max(hi);
+            }
+        }
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let mut hi = reach_hi[i];
+            let mut j = i + 1;
+            while j < hi {
+                hi = hi.max(reach_hi[j]);
+                j += 1;
+            }
+            out.push((i, hi));
+            i = hi;
+        }
+        out
+    }
+
+    /// Routing table from device index to its lane group in `ranges`
+    /// (as produced by [`Fabric::lane_ranges`]). The commit scheduler
+    /// snapshots this so it can distribute pending entries while lane
+    /// views hold `&mut` borrows of the fabric interior.
+    pub fn lane_of_dev(&self, ranges: &[(usize, usize)]) -> Vec<usize> {
+        let mut map = vec![0usize; self.ndev()];
+        for (g, &(lo, hi)) in ranges.iter().enumerate() {
+            for m in map.iter_mut().take(hi).skip(lo) {
+                *m = g;
+            }
+        }
+        map
+    }
+
+    /// Split the fabric interior into one [`FabricLane`] per range:
+    /// disjoint `&mut` views over links/devices (via `split_at_mut`)
+    /// plus each switch handed to the lane owning its span. Lanes are
+    /// `Send`, so worker threads can commit against them concurrently;
+    /// the borrow checker guarantees no lane can reach another's state.
+    /// `ranges` must come from [`Fabric::lane_ranges`] on this fabric.
+    pub fn lane_views(
+        &mut self,
+        ranges: &[(usize, usize)],
+    ) -> Vec<FabricLane<'_>> {
+        let dev_switch = &self.dev_switch;
+        let mut links = self.links.as_mut_slice();
+        let mut devices = self.devices.as_mut_slice();
+        // Hand each switch to the lane whose range covers its span
+        // (lane_ranges guarantees exactly one does).
+        let mut sw_by_lane: Vec<Vec<(usize, &mut CxlSwitch)>> =
+            ranges.iter().map(|_| Vec::new()).collect();
+        for (j, sw) in self.switches.iter_mut().enumerate() {
+            let lo = sw.devices.iter().copied().min().unwrap_or(0);
+            let lane = ranges
+                .iter()
+                .position(|&(a, b)| a <= lo && lo < b)
+                .expect("switch span outside every lane range");
+            sw_by_lane[lane].push((j, sw));
+        }
+        let mut out = Vec::with_capacity(ranges.len());
+        let mut cursor = 0;
+        for (&(lo, hi), switches) in ranges.iter().zip(sw_by_lane) {
+            debug_assert_eq!(lo, cursor, "lane ranges must be contiguous");
+            let (l, lrest) =
+                std::mem::take(&mut links).split_at_mut(hi - lo);
+            links = lrest;
+            let (d, drest) =
+                std::mem::take(&mut devices).split_at_mut(hi - lo);
+            devices = drest;
+            out.push(FabricLane { lo, links: l, switches, dev_switch, devices: d });
+            cursor = hi;
+        }
+        out
+    }
+
     /// Fabric-manager role: drive the FM-API `BIND_LD` command through
     /// every device's mailbox so each window definition's logical
     /// device(s) belong to the host `window_hosts` assigns. The guests
@@ -223,6 +313,92 @@ impl Fabric {
     }
 }
 
+/// One commit lane's `&mut`-disjoint view of the fabric interior: the
+/// contiguous device range starting at `lo`, exactly the leaf links and
+/// switches serving it, and a shared read-only copy of the route table.
+/// Methods take **global** device indices and mirror the [`Fabric`]
+/// traffic API one-for-one, so the commit kernel is lane-agnostic —
+/// committing a lane's entries in `(tick, host, seq)` order through a
+/// lane view reproduces, state-bit for state-bit, what the serial path
+/// would have done to this slice of the fabric (no other lane can touch
+/// it, and stats counters live inside the owned links/devices, so they
+/// fold in with no separate accumulator merge).
+pub struct FabricLane<'a> {
+    /// First global device index of this lane's range.
+    lo: usize,
+    /// Leaf links for devices `lo..lo + links.len()`.
+    links: &'a mut [CxlLink],
+    /// Switches whose device span lies inside this lane's range,
+    /// tagged with their global switch index.
+    switches: Vec<(usize, &'a mut CxlSwitch)>,
+    /// Full route table (read-only — shared across lanes).
+    dev_switch: &'a [Option<usize>],
+    /// Devices `lo..lo + devices.len()`.
+    devices: &'a mut [CxlDevice],
+}
+
+impl FabricLane<'_> {
+    fn switch_mut(&mut self, s: usize) -> &mut CxlSwitch {
+        self.switches
+            .iter_mut()
+            .find(|(j, _)| *j == s)
+            .map(|(_, sw)| &mut **sw)
+            .expect("device routed to a switch outside its lane")
+    }
+
+    /// Lane mirror of [`Fabric::credit_link`].
+    pub fn credit_link(&mut self, dev: usize) -> &mut CxlLink {
+        match self.dev_switch[dev] {
+            Some(s) => &mut self.switch_mut(s).us_link,
+            None => &mut self.links[dev - self.lo],
+        }
+    }
+
+    /// Lane mirror of [`Fabric::send_m2s`].
+    pub fn send_m2s(
+        &mut self,
+        at: Tick,
+        pkt: &CxlMemPacket,
+        dev: usize,
+    ) -> Tick {
+        let i = dev - self.lo;
+        match self.dev_switch[dev] {
+            None => self.links[i].send_m2s(at, pkt),
+            Some(s) => {
+                let at_dsp = self.switch_mut(s).forward_m2s(at, pkt);
+                self.links[i].forward_m2s(at_dsp, pkt)
+            }
+        }
+    }
+
+    /// Lane mirror of [`Fabric::send_s2m`].
+    pub fn send_s2m(
+        &mut self,
+        ready: Tick,
+        resp: &CxlMemPacket,
+        dev: usize,
+    ) -> Tick {
+        let i = dev - self.lo;
+        match self.dev_switch[dev] {
+            None => self.links[i].send_s2m(ready, resp),
+            Some(s) => {
+                let at_sw = self.links[i].send_s2m(ready, resp);
+                self.switch_mut(s).forward_s2m(at_sw, resp)
+            }
+        }
+    }
+
+    /// Lane mirror of [`Fabric::retire`].
+    pub fn retire(&mut self, dev: usize, done: Tick) {
+        self.credit_link(dev).retire(done);
+    }
+
+    /// The lane-owned device model for global index `dev`.
+    pub fn device_mut(&mut self, dev: usize) -> &mut CxlDevice {
+        &mut self.devices[dev - self.lo]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,6 +457,54 @@ mod tests {
             EventRecord { host: 1, ld: 1, action: event::LD_BOUND },
         );
         assert_eq!(f.devices[0].mailbox.events_pending(), 1);
+    }
+
+    #[test]
+    fn lane_ranges_group_by_switch_credit_pool() {
+        // 8 devices behind 2 switches: two 4-device lanes.
+        let mut cfg = SimConfig::default().cxl;
+        cfg.devices = 8;
+        cfg.interleave_ways = 1;
+        cfg.switches = 2;
+        let f = Fabric::new(&cfg);
+        assert_eq!(f.lane_ranges(), vec![(0, 4), (4, 8)]);
+        assert_eq!(
+            f.lane_of_dev(&f.lane_ranges()),
+            vec![0, 0, 0, 0, 1, 1, 1, 1]
+        );
+
+        // Direct attach: every device is its own lane.
+        let mut cfg = SimConfig::default().cxl;
+        cfg.devices = 3;
+        cfg.interleave_ways = 1;
+        let f = Fabric::new(&cfg);
+        assert_eq!(f.lane_ranges(), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(f.lane_of_dev(&f.lane_ranges()), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn lane_views_route_like_the_fabric() {
+        let mut cfg = SimConfig::default().cxl;
+        cfg.devices = 6;
+        cfg.interleave_ways = 1;
+        cfg.switches = 2; // 3 devices per switch -> 2 lanes
+        let mut f = Fabric::new(&cfg);
+        let ranges = f.lane_ranges();
+        assert_eq!(ranges, vec![(0, 3), (3, 6)]);
+        let mut lanes = f.lane_views(&ranges);
+        assert_eq!(lanes.len(), 2);
+        // Within a lane, switched siblings resolve to the same shared
+        // credit pool — the invariant the grouping exists to protect.
+        let (a, b) = lanes.split_at_mut(1);
+        let c0 = a[0].credit_link(0) as *const CxlLink;
+        let c1 = a[0].credit_link(1) as *const CxlLink;
+        assert_eq!(c0, c1, "lane siblings share one credit pool");
+        let c3 = b[0].credit_link(3) as *const CxlLink;
+        assert_ne!(c0, c3, "distinct lanes own distinct credit state");
+        // Global device indexing works through the second lane's view.
+        let d5 = b[0].device_mut(5) as *const CxlDevice;
+        drop(lanes);
+        assert_eq!(d5, &f.devices[5] as *const CxlDevice);
     }
 
     #[test]

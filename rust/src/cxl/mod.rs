@@ -35,7 +35,7 @@ pub mod fm_policy;
 pub mod root_complex;
 
 pub use device::CxlDevice;
-pub use fabric::Fabric;
+pub use fabric::{Fabric, FabricLane};
 pub use fm_policy::FmPolicyEngine;
 pub use link::{CreditAvail, CxlLink};
 pub use mem_proto::{M2SOpcode, S2MOpcode};

@@ -37,8 +37,10 @@ pub struct HdmWindow {
     pub size: u64,
     /// Interleave granularity in bytes (power of two).
     pub granularity: u64,
-    /// Device indices in CFMWS target-slot order (len = ways).
-    pub targets: Vec<usize>,
+    /// Device indices in CFMWS target-slot order (len = ways). Shared
+    /// (`Arc`) because every host mirroring the same window definition
+    /// carries the same list — mirroring clones a pointer, not a `Vec`.
+    pub targets: std::sync::Arc<[usize]>,
     /// XOR target-selection arithmetic instead of modulo.
     pub xor: bool,
     /// Device-physical base the window maps onto (mirrors the endpoint
@@ -129,7 +131,7 @@ impl CxlRootComplex {
             base,
             size,
             granularity: 256,
-            targets: vec![0],
+            targets: vec![0].into(),
             xor: false,
             dpa_base: 0,
         });
@@ -405,7 +407,7 @@ mod tests {
             base: 4 << 30,
             size: 8 << 30,
             granularity: 256,
-            targets: vec![0, 1],
+            targets: vec![0, 1].into(),
             xor: false,
             dpa_base: 0,
         });
@@ -434,7 +436,7 @@ mod tests {
             base: 4 << 30,
             size: 4 << 30,
             granularity: 256,
-            targets: vec![0],
+            targets: vec![0].into(),
             xor: false,
             dpa_base: 0,
         });
@@ -504,7 +506,7 @@ mod tests {
             base: 4 << 30,
             size: 8 << 30,
             granularity: 1024,
-            targets: vec![0, 1],
+            targets: vec![0, 1].into(),
             xor: false,
             dpa_base: 0,
         };
@@ -526,7 +528,7 @@ mod tests {
             base: 0,
             size: 1 << 20,
             granularity: 256,
-            targets: vec![0, 1, 2, 3],
+            targets: vec![0, 1, 2, 3].into(),
             xor: true,
             dpa_base: 0,
         };

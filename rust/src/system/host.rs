@@ -110,6 +110,21 @@ pub(crate) enum FabricReq {
     MediaWriteback { dev: usize, dpa: u64 },
 }
 
+impl FabricReq {
+    /// The routed target device — fixed at enqueue time (the RC's
+    /// interleave decoder already ran), which is what lets the machine
+    /// partition pending entries into per-device commit lanes without
+    /// touching fabric state.
+    pub(crate) fn dev(&self) -> usize {
+        match self {
+            FabricReq::Fetch { dev, .. }
+            | FabricReq::Writeback { dev, .. }
+            | FabricReq::MediaFetch { dev, .. }
+            | FabricReq::MediaWriteback { dev, .. } => *dev,
+        }
+    }
+}
+
 /// Sentinel "core" marking an L2-prefetch fetch: the fill stops at L2.
 const PF_CORE: u8 = u8::MAX;
 
@@ -212,8 +227,8 @@ pub struct Host {
     /// This host's private event queue (split-phase loop; see module
     /// docs). `(tick, seq)` order within the queue is host-local.
     queue: EventQueue<Ev>,
-    /// Fabric-crossing requests emitted since the last
-    /// [`Host::take_outbox`], as `(entry tick, per-host seq, request)`.
+    /// Fabric-crossing requests emitted since the machine last drained
+    /// [`Host::outbox_mut`], as `(entry tick, per-host seq, request)`.
     outbox: Vec<(Tick, u64, FabricReq)>,
     /// Monotonic per-host sequence for outbox entries: the global
     /// commit order's tie-breaker within one host and tick.
@@ -404,14 +419,15 @@ impl Host {
 
     /// Apply fabric responses delivered by the machine's commit phase,
     /// then drain local events up to `cap` (inclusive), self-throttled
-    /// by the lookahead horizon. Returns the number of events
-    /// dispatched.
+    /// by the lookahead horizon. Drains `inbox` in place (the caller
+    /// keeps the allocation — the machine reuses one buffer per host
+    /// across every epoch). Returns the number of events dispatched.
     pub(crate) fn epoch_step(
         &mut self,
         cap: Tick,
-        inbox: Vec<(Tick, Ev)>,
+        inbox: &mut Vec<(Tick, Ev)>,
     ) -> u64 {
-        for (at, ev) in inbox {
+        for (at, ev) in inbox.drain(..) {
             // `at >= queue.now()` by the lookahead argument; the queue
             // debug-asserts it ("scheduling into the past"), which is
             // exactly what trips when a test pins a too-large horizon.
@@ -447,10 +463,13 @@ impl Host {
         self.queue.processed() - before
     }
 
-    /// Hand the emitted fabric requests to the machine (clears the
-    /// outbox).
-    pub(crate) fn take_outbox(&mut self) -> Vec<(Tick, u64, FabricReq)> {
-        std::mem::take(&mut self.outbox)
+    /// The emitted fabric requests, for the machine to drain (or swap
+    /// against a recycled buffer — the host never inspects past
+    /// entries, only pushes).
+    pub(crate) fn outbox_mut(
+        &mut self,
+    ) -> &mut Vec<(Tick, u64, FabricReq)> {
+        &mut self.outbox
     }
 
     /// Tick of this host's next local event, if any.

@@ -6,11 +6,11 @@
 //!
 //! Every host owns its own event queue and drains it independently —
 //! on a worker thread when `[sim] threads > 1`, inline otherwise. The
-//! fabric is the only shared timing state, and it only ever mutates on
-//! the main thread, in one canonical order: fabric-crossing requests
-//! are committed from a global `(entry tick, host id, per-host seq)`
-//! map. Hosts self-throttle to their lookahead horizon (the minimum
-//! fixed round-trip to any reachable device — see
+//! fabric is the only shared timing state, and it only ever mutates in
+//! one canonical order: fabric-crossing requests are committed from a
+//! global `(entry tick, host id, per-host seq)` map. Hosts
+//! self-throttle to their lookahead horizon (the minimum fixed
+//! round-trip to any reachable device — see
 //! [`Host::recompute_lookahead`]), so no host ever runs past a tick at
 //! which a fabric response could still land. The commit window is
 //! bounded the same way from the machine side: an entry at tick `t`
@@ -21,6 +21,31 @@
 //! functions of queue state — never of thread scheduling — a
 //! `threads = N` run is bit-identical to a serial one: same stats,
 //! same guest memory images, same event counts.
+//!
+//! ## Sharded commit lanes (`[sim] commit_lanes`)
+//!
+//! The commit phase itself shards across worker threads without
+//! weakening that contract, under three lane-partitioning rules:
+//!
+//! 1. **Device-disjointness.** Pending entries partition by routed
+//!    target device (fixed at enqueue time), and each lane owns a
+//!    `&mut`-disjoint slice of the fabric interior
+//!    ([`Fabric::lane_views`]) — two lanes can never touch the same
+//!    link, switch, or device state.
+//! 2. **Switch-group serialization.** Devices behind one switch share
+//!    its upstream credit pool, so [`Fabric::lane_ranges`] folds a
+//!    switch's whole span into a single lane: shared-credit accounting
+//!    (availability probes, stall notes, retirements) is always
+//!    serialized inside one lane, in canonical order.
+//! 3. **Canonical merge order.** A wave hands each lane its entries in
+//!    global `(tick, host, seq)` order restricted to that lane's
+//!    devices; waves are sized (`min(window, t0 + d_min)`) so no
+//!    same-wave delivery can tighten the window into the wave. Lane
+//!    outputs — responses, deferred retries, window bounds — merge
+//!    back on the main thread sorted by the same global key, which
+//!    reproduces the serial delivery order exactly. Every
+//!    `(threads, commit_lanes)` combination is therefore bit-identical
+//!    to serial, enforced by `rust/tests/parallel_determinism.rs`.
 //!
 //! Machine-level events (scripted FM actions, policy epochs, deferred
 //! policy moves) live in the machine's own small queue. They cut the
@@ -48,8 +73,9 @@
 //! bit-deterministic at every thread count.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Barrier, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -57,7 +83,7 @@ use crate::bios;
 use crate::config::{FmOp, InterleaveArith, LdRef, SimConfig};
 use crate::cxl::fm_policy::{FmPolicyEngine, HostLoad, LdState};
 use crate::cxl::mailbox::{event, retcode, EventRecord, UNBOUND};
-use crate::cxl::{CreditAvail, Fabric, HdmWindow};
+use crate::cxl::{CreditAvail, Fabric, FabricLane, HdmWindow};
 use crate::guestos::{GuestOs, MemChange, MemPolicy, ProgModel};
 use crate::sim::{ns_to_ticks, ticks_to_ns, EventQueue, Tick};
 use crate::stats::StatDump;
@@ -162,6 +188,39 @@ pub struct Machine {
     /// per-epoch telemetry sweep and `def_window` lookups don't
     /// rebuild the key list on every call.
     window_keys: Vec<LdRef>,
+    /// `cfg.cxl.window_defs()` snapshot (fixed after validation):
+    /// boot-time and hot-add window mirrors look defs up here instead
+    /// of rebuilding the list per call.
+    win_defs: Vec<crate::config::CxlWindowDef>,
+    /// Shared target lists, aligned with `win_defs` — mirroring a
+    /// window into a host's RC clones an `Arc`, not a `Vec`.
+    win_targets: Vec<Arc<[usize]>>,
+    /// Commit-lane partition of the fabric ([`Fabric::lane_ranges`]) —
+    /// fixed at build time (FM re-binds move LD ownership, never the
+    /// device/switch topology).
+    lane_ranges: Vec<(usize, usize)>,
+    /// Device index -> lane group ([`Fabric::lane_of_dev`]) snapshot,
+    /// so the wave distributor can route entries while lane views hold
+    /// `&mut` borrows of the fabric interior.
+    lane_of_dev: Vec<usize>,
+    /// Reusable per-host response inboxes: the commit phase pushes
+    /// fills in, the next epoch's drain consumes them in place — one
+    /// allocation per host for the whole run, not one per epoch.
+    inboxes: Vec<Vec<(Tick, Ev)>>,
+    /// Reusable oldest-pending-entry scratch (per host).
+    scratch_oldest: Vec<Tick>,
+    /// Reusable epoch-cap scratch (per host).
+    scratch_caps: Vec<Tick>,
+    /// Reusable canonical-merge buffer for sharded-commit lane outputs.
+    merge_buf: Vec<((Tick, u8, u64), Tick, Ev)>,
+    /// Wall-clock spent draining hosts (ns) — see
+    /// [`Machine::dump_stats_full`]. Not deterministic; never part of
+    /// golden digests.
+    wall_drain_ns: u64,
+    /// Wall-clock spent committing fabric entries (ns).
+    wall_commit_ns: u64,
+    /// Wall-clock spent merging outboxes/lane outputs back (ns).
+    wall_merge_ns: u64,
 }
 
 /// Re-probe interval while an FM unbind waits for in-flight requests to
@@ -193,6 +252,169 @@ struct EpochSlot {
     processed: u64,
     outbox: Vec<(Tick, u64, FabricReq)>,
     next_tick: Option<Tick>,
+}
+
+/// Worker-pool phase word for the sharded section loop: what the next
+/// `start`-barrier release asks the workers to do.
+const PHASE_DRAIN: u8 = 0;
+const PHASE_COMMIT: u8 = 1;
+const PHASE_STOP: u8 = 2;
+
+/// One commit lane's mailbox for the sharded commit phase: the lane's
+/// `&mut`-disjoint fabric view plus the wave working state the main
+/// thread fills (`input`, `wave_hi`) and the owning worker fills back
+/// (`out`, `deferred`, `handled`, `w_min`).
+struct LaneSlot<'a> {
+    lane: FabricLane<'a>,
+    /// This wave's entries for this lane's devices, in global
+    /// `(tick, host, seq)` order (the distributor pops the pending map
+    /// in key order).
+    input: Vec<((Tick, u8, u64), FabricReq)>,
+    /// Wave-local working set: input entries plus credit-race retries
+    /// whose retry key still falls inside the wave.
+    local: BTreeMap<(Tick, u8, u64), FabricReq>,
+    /// Deliveries, keyed by final pop key for the canonical merge.
+    out: Vec<((Tick, u8, u64), Tick, Ev)>,
+    /// Retries that left the wave — returned to the global pending map.
+    deferred: Vec<((Tick, u8, u64), FabricReq)>,
+    /// Exclusive upper tick bound of this wave.
+    wave_hi: Tick,
+    /// Entries popped this wave (commits + retries), the progress
+    /// signal summed by the main thread.
+    handled: u64,
+    /// Tightest `done + d_min` window bound among this wave's
+    /// deliveries (`Tick::MAX` if none).
+    w_min: Tick,
+}
+
+/// Commit one wave of one lane's entries against its fabric slice —
+/// the sharded twin of [`commit_pending`]'s dispatch arms, byte-for-
+/// byte the same timing math. Entries (and any same-wave retries)
+/// process in `(tick, host, seq)` order; every popped key's tick is in
+/// `[t0, wave_hi)`, and since a delivery retires at `done > t0` its
+/// window contribution `done + d_min >= wave_hi` — no same-wave
+/// delivery can invalidate the wave, which is what makes per-lane
+/// processing exactly equivalent to the serial global pop loop.
+fn commit_lane_wave(
+    sl: &mut LaneSlot<'_>,
+    pkt_ticks: Tick,
+    depkt_ticks: Tick,
+    dev_fixed_ticks: &[Tick],
+    d_min: Tick,
+    line: u64,
+) {
+    sl.handled = 0;
+    sl.w_min = Tick::MAX;
+    if sl.input.is_empty() {
+        return;
+    }
+    let mut handled = 0u64;
+    let mut w_min = Tick::MAX;
+    let wave_hi = sl.wave_hi;
+    let LaneSlot { lane, input, local, out, deferred, .. } = sl;
+    local.extend(input.drain(..));
+    while let Some((&(t, _, _), _)) = local.first_key_value() {
+        if t >= wave_hi {
+            break;
+        }
+        let ((t, h, seq), req) = local.pop_first().unwrap();
+        handled += 1;
+        match req {
+            FabricReq::Fetch { dev, pkt, core, line_pa, issued_at } => {
+                let after_pkt = t + pkt_ticks;
+                let retry = {
+                    let link = lane.credit_link(dev);
+                    match link.credit_available_at(after_pkt) {
+                        CreditAvail::Now => None,
+                        CreditAvail::RetiresAt(rt) => {
+                            link.note_credit_stall(after_pkt, rt);
+                            Some(rt)
+                        }
+                        CreditAvail::Unknown => {
+                            let rt = link.reprobe_at(after_pkt);
+                            link.note_credit_stall(after_pkt, rt);
+                            Some(rt)
+                        }
+                    }
+                };
+                if let Some(rt) = retry {
+                    local.insert(
+                        (rt.max(t + 1), h, seq),
+                        FabricReq::Fetch {
+                            dev,
+                            pkt,
+                            core,
+                            line_pa,
+                            issued_at,
+                        },
+                    );
+                    continue;
+                }
+                let arrival = lane.send_m2s(after_pkt, &pkt, dev);
+                let (resp, ready) =
+                    lane.device_mut(dev).handle_m2s(arrival, &pkt, h);
+                let rc_arrival = lane.send_s2m(ready, &resp, dev);
+                let done = rc_arrival + depkt_ticks;
+                lane.retire(dev, done);
+                out.push((
+                    (t, h, seq),
+                    done,
+                    Ev::CxlFill { core, line_pa, issued_at },
+                ));
+                w_min = w_min.min(done.saturating_add(d_min));
+            }
+            FabricReq::Writeback { dev, pkt } => {
+                let after_pkt = t + pkt_ticks;
+                let ok = {
+                    let link = lane.credit_link(dev);
+                    match link.credit_available_at(after_pkt) {
+                        CreditAvail::Now => true,
+                        CreditAvail::RetiresAt(rt) => {
+                            link.note_credit_stall(after_pkt, rt);
+                            false
+                        }
+                        CreditAvail::Unknown => {
+                            let rt = link.reprobe_at(after_pkt);
+                            link.note_credit_stall(after_pkt, rt);
+                            false
+                        }
+                    }
+                };
+                // Credit exhaustion drops the posted write from the
+                // timing model (data is already functionally in
+                // physmem) — same semantics as the serial path.
+                if ok {
+                    let arrival = lane.send_m2s(after_pkt, &pkt, dev);
+                    let (resp, ready) =
+                        lane.device_mut(dev).handle_m2s(arrival, &pkt, h);
+                    let rc_arrival = lane.send_s2m(ready, &resp, dev);
+                    let done = rc_arrival + depkt_ticks;
+                    lane.retire(dev, done);
+                }
+            }
+            FabricReq::MediaFetch { dev, dpa, core, line_pa } => {
+                let done = lane.device_mut(dev).media.access(
+                    t + dev_fixed_ticks[dev],
+                    dpa,
+                    line,
+                    false,
+                );
+                out.push((
+                    (t, h, seq),
+                    done,
+                    Ev::CxlFill { core, line_pa, issued_at: t },
+                ));
+                w_min = w_min.min(done.saturating_add(d_min));
+            }
+            FabricReq::MediaWriteback { dev, dpa } => {
+                lane.device_mut(dev).media.access(t, dpa, line, true);
+            }
+        }
+    }
+    // Retries that escaped the wave go back to the global pending map.
+    deferred.extend(std::mem::take(local));
+    sl.handled = handled;
+    sl.w_min = w_min;
 }
 
 /// Commit pending fabric requests against the shared fabric in global
@@ -346,6 +568,11 @@ impl Machine {
             .as_ref()
             .map(|p| FmPolicyEngine::new(p, cfg.hosts));
         let window_keys = cfg.window_keys();
+        let win_defs = cfg.cxl.window_defs();
+        let win_targets: Vec<Arc<[usize]>> =
+            win_defs.iter().map(|d| d.targets.clone().into()).collect();
+        let lane_ranges = fabric.lane_ranges();
+        let lane_of_dev = fabric.lane_of_dev(&lane_ranges);
         let pkt_ticks = ns_to_ticks(cfg.cxl.pkt_lat_ns);
         let depkt_ticks = ns_to_ticks(cfg.cxl.depkt_lat_ns);
         let dev_fixed_ticks = (0..cfg.cxl.devices)
@@ -357,6 +584,7 @@ impl Machine {
             })
             .collect();
         let d_min = ns_to_ticks(cfg.membus_lat_ns) + 1;
+        let nh = hosts.len();
         Ok(Machine {
             cfg,
             hosts,
@@ -375,6 +603,17 @@ impl Machine {
             fm_policy,
             fm_moves_parked: Default::default(),
             window_keys,
+            win_defs,
+            win_targets,
+            lane_ranges,
+            lane_of_dev,
+            inboxes: (0..nh).map(|_| Vec::new()).collect(),
+            scratch_oldest: Vec::new(),
+            scratch_caps: Vec::new(),
+            merge_buf: Vec::new(),
+            wall_drain_ns: 0,
+            wall_commit_ns: 0,
+            wall_merge_ns: 0,
         })
     }
 
@@ -423,7 +662,6 @@ impl Machine {
         // committed the range (routing is by hierarchy: device ->
         // bridge).
         let xor = self.cfg.cxl.interleave_arith == InterleaveArith::Xor;
-        let defs = self.cfg.cxl.window_defs();
         let published: Vec<(usize, (u64, u64))> = host
             .bios
             .cxl_window_defs
@@ -432,7 +670,7 @@ impl Machine {
             .zip(host.bios.cxl_windows.iter().copied())
             .collect();
         for (def_idx, (base, size)) in published {
-            let def = &defs[def_idx];
+            let def = &self.win_defs[def_idx];
             let all_committed = def.targets.iter().all(|&i| {
                 host.hb_components[self.cfg.cxl.bridge_of(i)]
                     .committed_ranges()
@@ -444,7 +682,7 @@ impl Machine {
                     base,
                     size,
                     granularity: self.cfg.cxl.interleave_granularity,
-                    targets: def.targets.clone(),
+                    targets: self.win_targets[def_idx].clone(),
                     xor,
                     // 1-way LD slices relocate densely by slice size.
                     dpa_base: def.ld as u64 * size,
@@ -564,37 +802,54 @@ impl Machine {
             self.par_horizon_min = self.par_horizon_min.min(min_la);
         }
         let nthreads = self.cfg.threads.min(self.hosts.len()).max(1);
-        if nthreads > 1 {
+        let lane_workers = self.commit_lane_workers();
+        if lane_workers > 1 {
+            self.run_section_sharded(limit, nthreads, lane_workers);
+        } else if nthreads > 1 {
             self.run_section_parallel(limit, nthreads);
         } else {
             self.run_section_serial(limit);
         }
     }
 
-    /// Per-host epoch caps: a host may drain up to `limit`, but not
-    /// past `oldest pending entry + its lookahead - 1` — its oldest
+    /// Resolved commit-lane worker count: `[sim] commit_lanes`
+    /// (`0 = auto` follows `[sim] threads`), clamped to the number of
+    /// switch-credit-disjoint lane groups the topology actually has.
+    /// 1 means the commit phase stays on the main thread.
+    fn commit_lane_workers(&self) -> usize {
+        let req = if self.cfg.commit_lanes == 0 {
+            self.cfg.threads
+        } else {
+            self.cfg.commit_lanes
+        };
+        req.min(self.lane_ranges.len()).max(1)
+    }
+
+    /// Per-host epoch caps into the reused scratch arrays: a host may
+    /// drain up to `limit`, but not past
+    /// `oldest pending entry + its lookahead - 1` — its oldest
     /// uncommitted fabric request could produce a response as early as
     /// `entry + lookahead`.
-    fn epoch_caps(&self, limit: Tick) -> Vec<Tick> {
+    fn epoch_caps_into(&mut self, limit: Tick) {
         let nh = self.hosts.len();
-        let mut oldest = vec![Tick::MAX; nh];
+        self.scratch_oldest.clear();
+        self.scratch_oldest.resize(nh, Tick::MAX);
         for &(t, h, _) in self.pending.keys() {
             let h = h as usize;
-            if t < oldest[h] {
-                oldest[h] = t;
+            if t < self.scratch_oldest[h] {
+                self.scratch_oldest[h] = t;
             }
         }
-        self.hosts
-            .iter()
-            .enumerate()
-            .map(|(h, host)| {
+        self.scratch_caps.clear();
+        for (h, host) in self.hosts.iter().enumerate() {
+            self.scratch_caps.push(
                 limit.min(
-                    oldest[h]
+                    self.scratch_oldest[h]
                         .saturating_add(host.lookahead())
                         .saturating_sub(1),
-                )
-            })
-            .collect()
+                ),
+            );
+        }
     }
 
     /// The commit barrier for this epoch: no host can emit a new fabric
@@ -612,30 +867,34 @@ impl Machine {
 
     fn run_section_serial(&mut self, limit: Tick) {
         let nh = self.hosts.len();
-        let mut inboxes: Vec<Vec<(Tick, Ev)>> =
-            (0..nh).map(|_| Vec::new()).collect();
         loop {
-            let caps = self.epoch_caps(limit);
+            let t0 = Instant::now();
+            self.epoch_caps_into(limit);
             let mut processed = 0u64;
             let mut active = 0u32;
             for h in 0..nh {
-                let inbox = std::mem::take(&mut inboxes[h]);
-                let n = self.hosts[h].epoch_step(caps[h], inbox);
+                let cap = self.scratch_caps[h];
+                let n =
+                    self.hosts[h].epoch_step(cap, &mut self.inboxes[h]);
                 processed += n;
                 if n > 0 {
                     active += 1;
                 }
             }
+            let t1 = Instant::now();
             for h in 0..nh {
-                for (at, seq, req) in self.hosts[h].take_outbox() {
-                    self.pending.insert((at, h as u8, seq), req);
+                let (host, pending) =
+                    (&mut self.hosts[h], &mut self.pending);
+                for (at, seq, req) in host.outbox_mut().drain(..) {
+                    pending.insert((at, h as u8, seq), req);
                 }
             }
             let barrier = self.commit_barrier();
+            let t2 = Instant::now();
             let committed = commit_pending(
                 &mut self.fabric,
                 &mut self.pending,
-                &mut inboxes,
+                &mut self.inboxes,
                 limit,
                 barrier,
                 self.pkt_ticks,
@@ -644,6 +903,10 @@ impl Machine {
                 self.d_min,
                 self.cfg.l1.line,
             );
+            let t3 = Instant::now();
+            self.wall_drain_ns += (t1 - t0).as_nanos() as u64;
+            self.wall_merge_ns += (t2 - t1).as_nanos() as u64;
+            self.wall_commit_ns += (t3 - t2).as_nanos() as u64;
             self.par_epochs += 1;
             if active >= 2 {
                 self.par_barrier_waits += active as u64;
@@ -672,6 +935,8 @@ impl Machine {
         let hosts = &mut self.hosts;
         let fabric = &mut self.fabric;
         let pending = &mut self.pending;
+        let inboxes = &mut self.inboxes;
+        let scratch_oldest = &mut self.scratch_oldest;
         let lookaheads: Vec<Tick> =
             hosts.iter().map(|h| h.lookahead()).collect();
         let pkt_ticks = self.pkt_ticks;
@@ -682,6 +947,9 @@ impl Machine {
 
         let mut epochs = 0u64;
         let mut barrier_waits = 0u64;
+        let mut drain_ns = 0u64;
+        let mut commit_ns = 0u64;
+        let mut merge_ns = 0u64;
 
         std::thread::scope(|s| {
             for (wi, hchunk) in hosts.chunks_mut(chunk).enumerate() {
@@ -699,18 +967,19 @@ impl Machine {
                     let res = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
                             for (i, host) in hchunk.iter_mut().enumerate() {
-                                let (cap, inbox) = {
-                                    let mut sl =
-                                        slots[base + i].lock().unwrap();
-                                    (sl.cap, std::mem::take(&mut sl.inbox))
-                                };
-                                let n = host.epoch_step(cap, inbox);
-                                let outbox = host.take_outbox();
-                                let nt = host.next_event_tick();
-                                let mut sl = slots[base + i].lock().unwrap();
+                                let mut sl =
+                                    slots[base + i].lock().unwrap();
+                                let cap = sl.cap;
+                                let n = host.epoch_step(cap, &mut sl.inbox);
                                 sl.processed = n;
-                                sl.outbox = outbox;
-                                sl.next_tick = nt;
+                                // Trade buffers: the slot's outbox was
+                                // drained by the main thread, so the
+                                // host re-fills a recycled allocation.
+                                std::mem::swap(
+                                    &mut sl.outbox,
+                                    host.outbox_mut(),
+                                );
+                                sl.next_tick = host.next_event_tick();
                             }
                         }),
                     );
@@ -721,26 +990,27 @@ impl Machine {
                 });
             }
 
-            let mut inboxes: Vec<Vec<(Tick, Ev)>> =
-                (0..nh).map(|_| Vec::new()).collect();
+            let mut tp = Instant::now();
             loop {
                 // Caps from the pending map — identical computation to
-                // the serial path's `epoch_caps`.
-                let mut oldest = vec![Tick::MAX; nh];
+                // the serial path's `epoch_caps_into`.
+                scratch_oldest.clear();
+                scratch_oldest.resize(nh, Tick::MAX);
                 for &(t, h, _) in pending.keys() {
                     let h = h as usize;
-                    if t < oldest[h] {
-                        oldest[h] = t;
+                    if t < scratch_oldest[h] {
+                        scratch_oldest[h] = t;
                     }
                 }
                 for h in 0..nh {
                     let mut sl = slots[h].lock().unwrap();
                     sl.cap = limit.min(
-                        oldest[h]
+                        scratch_oldest[h]
                             .saturating_add(lookaheads[h])
                             .saturating_sub(1),
                     );
-                    sl.inbox = std::mem::take(&mut inboxes[h]);
+                    // Filled inbox in, drained (recycled) buffer back.
+                    std::mem::swap(&mut sl.inbox, &mut inboxes[h]);
                 }
                 start.wait();
                 end.wait();
@@ -750,6 +1020,9 @@ impl Machine {
                     start.wait();
                     std::panic::resume_unwind(p);
                 }
+                let now = Instant::now();
+                drain_ns += (now - tp).as_nanos() as u64;
+                tp = now;
                 let mut processed = 0u64;
                 let mut active = 0u32;
                 let mut barrier = Tick::MAX;
@@ -766,10 +1039,13 @@ impl Machine {
                         barrier = barrier.min(t.saturating_add(d_min));
                     }
                 }
+                let now = Instant::now();
+                merge_ns += (now - tp).as_nanos() as u64;
+                tp = now;
                 let committed = commit_pending(
                     fabric,
                     pending,
-                    &mut inboxes,
+                    inboxes,
                     limit,
                     barrier,
                     pkt_ticks,
@@ -778,6 +1054,9 @@ impl Machine {
                     d_min,
                     line,
                 );
+                let now = Instant::now();
+                commit_ns += (now - tp).as_nanos() as u64;
+                tp = now;
                 epochs += 1;
                 if active >= 2 {
                     barrier_waits += active as u64;
@@ -792,6 +1071,283 @@ impl Machine {
 
         self.par_epochs += epochs;
         self.par_barrier_waits += barrier_waits;
+        self.wall_drain_ns += drain_ns;
+        self.wall_commit_ns += commit_ns;
+        self.wall_merge_ns += merge_ns;
+    }
+
+    /// The sharded section loop: host drains on the worker pool (as in
+    /// [`Machine::run_section_parallel`]) AND the commit phase sharded
+    /// across the same pool as per-device commit lanes. Each epoch's
+    /// commit runs as a sequence of *waves*: the main thread pops every
+    /// pending entry below `min(window, limit + 1, t0 + d_min)` and
+    /// deals it to its device's lane, the pool commits all lanes
+    /// concurrently against `&mut`-disjoint fabric views, and the lane
+    /// outputs merge back in global `(tick, host, seq)` order — see the
+    /// module-level lane-partitioning rules. Bit-identical to the
+    /// serial commit loop for every `(threads, commit_lanes)` pair.
+    fn run_section_sharded(
+        &mut self,
+        limit: Tick,
+        nthreads: usize,
+        lane_workers: usize,
+    ) {
+        let nh = self.hosts.len();
+        let chunk = nh.div_ceil(nthreads);
+        let nworkers = nh.div_ceil(chunk).max(lane_workers);
+
+        let slots: Vec<Mutex<EpochSlot>> =
+            (0..nh).map(|_| Mutex::new(EpochSlot::default())).collect();
+        let start = Barrier::new(nworkers + 1);
+        let end = Barrier::new(nworkers + 1);
+        let phase = AtomicU8::new(PHASE_DRAIN);
+        let panicked: Mutex<Option<Box<dyn std::any::Any + Send>>> =
+            Mutex::new(None);
+
+        let hosts = &mut self.hosts;
+        let fabric = &mut self.fabric;
+        let pending = &mut self.pending;
+        let inboxes = &mut self.inboxes;
+        let merge_buf = &mut self.merge_buf;
+        let scratch_oldest = &mut self.scratch_oldest;
+        let lane_of_dev = &self.lane_of_dev;
+        let lookaheads: Vec<Tick> =
+            hosts.iter().map(|h| h.lookahead()).collect();
+        let pkt_ticks = self.pkt_ticks;
+        let depkt_ticks = self.depkt_ticks;
+        let dev_fixed = &self.dev_fixed_ticks;
+        let d_min = self.d_min;
+        let line = self.cfg.l1.line;
+
+        // One lane slot per switch-credit-disjoint device group; the
+        // views hold `&mut` borrows of the fabric interior for the
+        // whole section, so the main thread routes entries via the
+        // `lane_of_dev` snapshot only.
+        let lane_slots: Vec<Mutex<LaneSlot<'_>>> = fabric
+            .lane_views(&self.lane_ranges)
+            .into_iter()
+            .map(|lane| {
+                Mutex::new(LaneSlot {
+                    lane,
+                    input: Vec::new(),
+                    local: BTreeMap::new(),
+                    out: Vec::new(),
+                    deferred: Vec::new(),
+                    wave_hi: 0,
+                    handled: 0,
+                    w_min: Tick::MAX,
+                })
+            })
+            .collect();
+
+        let mut epochs = 0u64;
+        let mut barrier_waits = 0u64;
+        let mut drain_ns = 0u64;
+        let mut commit_ns = 0u64;
+        let mut merge_ns = 0u64;
+
+        std::thread::scope(|s| {
+            // Every worker gets a (possibly empty) host chunk for the
+            // drain phases plus a strided set of lane groups for the
+            // commit waves.
+            let mut chunks: Vec<&mut [Host]> =
+                hosts.chunks_mut(chunk).collect();
+            chunks.resize_with(nworkers, Default::default);
+            for (wi, hchunk) in chunks.into_iter().enumerate() {
+                let base = wi * chunk;
+                let slots = &slots;
+                let lane_slots = &lane_slots;
+                let start = &start;
+                let end = &end;
+                let phase = &phase;
+                let panicked = &panicked;
+                s.spawn(move || loop {
+                    start.wait();
+                    let ph = phase.load(Ordering::Acquire);
+                    if ph == PHASE_STOP {
+                        break;
+                    }
+                    let res = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| match ph {
+                            PHASE_DRAIN => {
+                                for (i, host) in
+                                    hchunk.iter_mut().enumerate()
+                                {
+                                    let mut sl =
+                                        slots[base + i].lock().unwrap();
+                                    let cap = sl.cap;
+                                    let n =
+                                        host.epoch_step(cap, &mut sl.inbox);
+                                    sl.processed = n;
+                                    std::mem::swap(
+                                        &mut sl.outbox,
+                                        host.outbox_mut(),
+                                    );
+                                    sl.next_tick = host.next_event_tick();
+                                }
+                            }
+                            _ => {
+                                // PHASE_COMMIT: commit this worker's
+                                // lanes (static stride assignment; the
+                                // canonical merge makes the mapping
+                                // result-irrelevant).
+                                if wi < lane_workers {
+                                    let mut g = wi;
+                                    while g < lane_slots.len() {
+                                        let mut sl =
+                                            lane_slots[g].lock().unwrap();
+                                        commit_lane_wave(
+                                            &mut sl,
+                                            pkt_ticks,
+                                            depkt_ticks,
+                                            dev_fixed,
+                                            d_min,
+                                            line,
+                                        );
+                                        g += lane_workers;
+                                    }
+                                }
+                            }
+                        }),
+                    );
+                    if let Err(p) = res {
+                        *panicked.lock().unwrap() = Some(p);
+                    }
+                    end.wait();
+                });
+            }
+
+            // Phase barrier + panic relay, shared by both phases.
+            let run_phase = |ph: u8| {
+                phase.store(ph, Ordering::Release);
+                start.wait();
+                end.wait();
+                if panicked.lock().unwrap().is_some() {
+                    let p = panicked.lock().unwrap().take().unwrap();
+                    phase.store(PHASE_STOP, Ordering::Release);
+                    start.wait();
+                    std::panic::resume_unwind(p);
+                }
+            };
+
+            let mut tp = Instant::now();
+            loop {
+                // ---- drain phase (same structure as the unsharded
+                // parallel path) ----
+                scratch_oldest.clear();
+                scratch_oldest.resize(nh, Tick::MAX);
+                for &(t, h, _) in pending.keys() {
+                    let h = h as usize;
+                    if t < scratch_oldest[h] {
+                        scratch_oldest[h] = t;
+                    }
+                }
+                for h in 0..nh {
+                    let mut sl = slots[h].lock().unwrap();
+                    sl.cap = limit.min(
+                        scratch_oldest[h]
+                            .saturating_add(lookaheads[h])
+                            .saturating_sub(1),
+                    );
+                    std::mem::swap(&mut sl.inbox, &mut inboxes[h]);
+                }
+                run_phase(PHASE_DRAIN);
+                let now = Instant::now();
+                drain_ns += (now - tp).as_nanos() as u64;
+                tp = now;
+                let mut processed = 0u64;
+                let mut active = 0u32;
+                let mut barrier = Tick::MAX;
+                for h in 0..nh {
+                    let mut sl = slots[h].lock().unwrap();
+                    processed += sl.processed;
+                    if sl.processed > 0 {
+                        active += 1;
+                    }
+                    for (at, seq, req) in sl.outbox.drain(..) {
+                        pending.insert((at, h as u8, seq), req);
+                    }
+                    if let Some(t) = sl.next_tick {
+                        barrier = barrier.min(t.saturating_add(d_min));
+                    }
+                }
+                let now = Instant::now();
+                merge_ns += (now - tp).as_nanos() as u64;
+                tp = now;
+
+                // ---- commit phase: waves over the lane pool ----
+                let mut committed = 0u64;
+                let mut w = barrier;
+                loop {
+                    let Some((&(t0, _, _), _)) = pending.first_key_value()
+                    else {
+                        break;
+                    };
+                    if t0 > limit || t0 >= w {
+                        break;
+                    }
+                    // Entries in [t0, wave_hi) are final: no same-wave
+                    // delivery can tighten the window below wave_hi
+                    // (done > t0 implies done + d_min >= wave_hi).
+                    let wave_hi = w
+                        .min(limit.saturating_add(1))
+                        .min(t0.saturating_add(d_min));
+                    while let Some((&(t, _, _), _)) =
+                        pending.first_key_value()
+                    {
+                        if t >= wave_hi {
+                            break;
+                        }
+                        let (k, req) = pending.pop_first().unwrap();
+                        let mut sl =
+                            lane_slots[lane_of_dev[req.dev()]]
+                                .lock()
+                                .unwrap();
+                        sl.wave_hi = wave_hi;
+                        sl.input.push((k, req));
+                    }
+                    run_phase(PHASE_COMMIT);
+                    let now = Instant::now();
+                    commit_ns += (now - tp).as_nanos() as u64;
+                    tp = now;
+                    // Canonical merge: lane outputs sorted by global
+                    // key reproduce the serial delivery order.
+                    merge_buf.clear();
+                    for slm in &lane_slots {
+                        let mut sl = slm.lock().unwrap();
+                        committed += sl.handled;
+                        w = w.min(sl.w_min);
+                        merge_buf.append(&mut sl.out);
+                        for (k, req) in sl.deferred.drain(..) {
+                            pending.insert(k, req);
+                        }
+                    }
+                    merge_buf.sort_unstable_by_key(|&(k, _, _)| k);
+                    for (k, done, ev) in merge_buf.drain(..) {
+                        inboxes[k.1 as usize].push((done, ev));
+                    }
+                    let now = Instant::now();
+                    merge_ns += (now - tp).as_nanos() as u64;
+                    tp = now;
+                }
+
+                epochs += 1;
+                if active >= 2 {
+                    barrier_waits += active as u64;
+                }
+                if processed == 0 && committed == 0 {
+                    phase.store(PHASE_STOP, Ordering::Release);
+                    start.wait();
+                    break;
+                }
+            }
+        });
+
+        self.par_epochs += epochs;
+        self.par_barrier_waits += barrier_waits;
+        self.wall_drain_ns += drain_ns;
+        self.wall_commit_ns += commit_ns;
+        self.wall_merge_ns += merge_ns;
     }
 
     /// Events dispatched machine-wide: every host's local queue plus
@@ -822,8 +1378,8 @@ impl Machine {
     /// doorbell -> guest hot-add -> host routing mirror. All through
     /// the same mailbox/decoder surfaces the boot path uses.
     fn handle_fm_event(&mut self, idx: usize, t: Tick) {
-        let ev = self.cfg.fm_events[idx].clone();
-        match ev.op {
+        let op = self.cfg.fm_events[idx].op;
+        match op {
             FmOp::Unbind { ld } => {
                 let owner = self.fabric.ld_owner(ld.dev, ld.ld);
                 if owner == UNBOUND {
@@ -1124,20 +1680,24 @@ impl Machine {
     /// Mirror a hot-added window into host `h`'s RC interleave decoder
     /// — the runtime twin of the boot-time mirror in `boot_host`.
     fn mirror_rc_window(&mut self, h: usize, r: LdRef, base: u64, size: u64) {
-        let defs = self.cfg.cxl.window_defs();
-        let Some(def) =
-            defs.iter().find(|d| d.targets[0] == r.dev && d.ld == r.ld)
+        let Some(i) = self
+            .win_defs
+            .iter()
+            .position(|d| d.targets[0] == r.dev && d.ld == r.ld)
         else {
             return;
         };
+        // Pull the cached pieces into locals before borrowing the host.
+        let targets = self.win_targets[i].clone();
+        let ld = self.win_defs[i].ld;
         let xor = self.cfg.cxl.interleave_arith == InterleaveArith::Xor;
         self.hosts[h].rc.add_window(HdmWindow {
             base,
             size,
             granularity: self.cfg.cxl.interleave_granularity,
-            targets: def.targets.clone(),
+            targets,
             xor,
-            dpa_base: def.ld as u64 * size,
+            dpa_base: ld as u64 * size,
         });
     }
 
@@ -1296,6 +1856,19 @@ impl Machine {
                 ticks_to_ns(self.par_horizon_min)
             },
         );
+        d
+    }
+
+    /// [`Machine::dump_stats`] plus the wall-clock phase timers
+    /// (`sim.par.drain_ns` / `commit_ns` / `merge_ns`). These measure
+    /// host time, not simulated time, so they differ run-to-run and
+    /// are deliberately OUTSIDE the deterministic dump: golden-digest
+    /// comparisons use `dump_stats`, the CLI prints this one.
+    pub fn dump_stats_full(&self) -> StatDump {
+        let mut d = self.dump_stats();
+        d.push("sim.par.drain_ns", self.wall_drain_ns as f64);
+        d.push("sim.par.commit_ns", self.wall_commit_ns as f64);
+        d.push("sim.par.merge_ns", self.wall_merge_ns as f64);
         d
     }
 }

@@ -56,7 +56,7 @@ fn window(ways: usize, granularity: u64, xor: bool) -> HdmWindow {
         base: 4 << 30,
         size: 4 << 30,
         granularity,
-        targets: (0..ways).collect(),
+        targets: (0..ways).collect::<Vec<_>>().into(),
         xor,
         dpa_base: 0,
     }

@@ -39,8 +39,20 @@ fn run_once(
     threads: usize,
     attach: impl Fn(&mut Machine),
 ) -> (String, RunSummary) {
+    run_with(cfg, threads, cfg.commit_lanes, attach)
+}
+
+/// Like [`run_once`] but also pinning `[sim] commit_lanes` (`0` =
+/// auto), for the `(threads, lanes)` invariance sweeps.
+fn run_with(
+    cfg: &SimConfig,
+    threads: usize,
+    lanes: usize,
+    attach: impl Fn(&mut Machine),
+) -> (String, RunSummary) {
     let mut cfg = cfg.clone();
     cfg.threads = threads;
+    cfg.commit_lanes = lanes;
     let mut m = Machine::new(cfg).unwrap();
     m.boot(ProgModel::Znuma).unwrap();
     attach(&mut m);
@@ -646,4 +658,186 @@ fn stat_dump_key_order_is_execution_order_independent() {
     };
     assert_eq!(keys(&t1), keys(&t4), "per-host key order diverged");
     assert_eq!(t1, t4);
+}
+
+// ---------------------------------------------------------------------------
+// Sharded-commit lanes: (threads x commit_lanes) invariance.
+// ---------------------------------------------------------------------------
+
+/// A fabric-heavy rack (every access is CXL) where eight single-LD
+/// devices sit behind two switches — two switch-credit-disjoint lane
+/// groups. Every `(threads, commit_lanes)` combination, including
+/// `auto`, must reproduce the `threads = 1, lanes = 1` run
+/// byte-for-byte.
+#[test]
+fn fabric_heavy_lane_count_invariance() {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 8;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 128 << 20;
+    cfg.cxl.devices = 8;
+    cfg.cxl.mem_size = 256 << 20;
+    cfg.cxl.switches = 2;
+    cfg.cxl.interleave_ways = 1;
+    cfg.host_lds =
+        (0..8).map(|h| vec![LdRef { dev: h, ld: 0 }]).collect();
+    cfg.seed = 23;
+    cfg.validate().unwrap();
+
+    let attach = |m: &mut Machine| {
+        for h in 0..m.hosts.len() {
+            let kernel =
+                [StreamKernel::Copy, StreamKernel::Triad][h % 2];
+            let wl: Box<dyn Workload> =
+                Box::new(Stream::new(kernel, 4096, 1));
+            // Bind to the zNUMA node: all traffic crosses the fabric.
+            m.attach_workloads_to(
+                h,
+                vec![wl],
+                &MemPolicy::Bind { nodes: vec![1] },
+            )
+            .unwrap();
+        }
+    };
+
+    let (golden_text, golden_sum) = run_with(&cfg, 1, 1, attach);
+    assert!(golden_sum.cxl_accesses > 0, "rack never touched the fabric");
+    // 0 = auto (lanes follow the thread count).
+    for (threads, lanes) in [(1, 2), (1, 0), (4, 1), (4, 2), (4, 0)] {
+        let (text, sum) = run_with(&cfg, threads, lanes, attach);
+        assert_eq!(
+            fnv64(&text),
+            fnv64(&golden_text),
+            "digest diverged at threads={threads} lanes={lanes}"
+        );
+        assert_eq!(text, golden_text);
+        assert_summaries_eq(
+            &sum,
+            &golden_sum,
+            &format!("threads={threads} lanes={lanes}"),
+        );
+    }
+}
+
+/// The 32-host scale-up of the rack golden: eight 4-LD MLDs behind two
+/// switches, every host pinned all-CXL. One serial digest; threads
+/// ∈ {2, 4, 8} with auto lanes must reproduce it bit-for-bit.
+#[test]
+fn thirty_two_host_fabric_heavy_golden_digest() {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 32;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 128 << 20;
+    cfg.cxl.devices = 8;
+    cfg.cxl.mem_size = 1 << 30; // 4 x 256 MiB LD slices per device
+    cfg.cxl.switches = 2;
+    cfg.cxl.dev_overrides = vec![
+        CxlDevOverride { lds: Some(4), ..Default::default() };
+        8
+    ];
+    cfg.host_lds = (0..32)
+        .map(|h| vec![LdRef { dev: h / 4, ld: (h % 4) as u16 }])
+        .collect();
+    cfg.seed = 1234;
+    cfg.validate().unwrap();
+
+    let attach = |m: &mut Machine| {
+        for h in 0..m.hosts.len() {
+            let kernel = [
+                StreamKernel::Copy,
+                StreamKernel::Scale,
+                StreamKernel::Add,
+                StreamKernel::Triad,
+            ][h % 4];
+            let wl: Box<dyn Workload> =
+                Box::new(Stream::new(kernel, 1024, 1));
+            m.attach_workloads_to(
+                h,
+                vec![wl],
+                &MemPolicy::Bind { nodes: vec![1] },
+            )
+            .unwrap();
+        }
+    };
+
+    let (golden_text, golden_sum) = run_with(&cfg, 1, 1, attach);
+    let golden = fnv64(&golden_text);
+    assert!(golden_sum.cxl_accesses > 0, "rack never touched the fabric");
+
+    for threads in [2usize, 4, 8] {
+        let (text, sum) = run_with(&cfg, threads, 0, attach);
+        assert_eq!(
+            fnv64(&text),
+            golden,
+            "32-host digest diverged at threads={threads} lanes=auto"
+        );
+        assert_eq!(text, golden_text);
+        assert_summaries_eq(
+            &sum,
+            &golden_sum,
+            &format!("rack32 threads={threads}"),
+        );
+    }
+}
+
+/// Shared-upstream-switch credit contention: with a single M2S credit
+/// per pool, four hosts hammering two devices behind each switch are
+/// continuously in the retry path — the exact accounting the
+/// switch-group lane rule exists to serialize. Every lane/thread combo
+/// must agree bit-for-bit, and the runs must actually exercise credit
+/// stalls on the shared upstream links.
+#[test]
+fn shared_upstream_credit_contention_is_lane_invariant() {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 4;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 128 << 20;
+    cfg.cxl.devices = 4;
+    cfg.cxl.mem_size = 256 << 20;
+    cfg.cxl.switches = 2;
+    cfg.cxl.interleave_ways = 1;
+    cfg.cxl.credits = 1;
+    cfg.host_lds =
+        (0..4).map(|h| vec![LdRef { dev: h, ld: 0 }]).collect();
+    cfg.seed = 5;
+    cfg.validate().unwrap();
+
+    let attach = |m: &mut Machine| {
+        for h in 0..m.hosts.len() {
+            let wl: Box<dyn Workload> =
+                Box::new(Stream::new(StreamKernel::Copy, 4096, 1));
+            m.attach_workloads_to(
+                h,
+                vec![wl],
+                &MemPolicy::Bind { nodes: vec![1] },
+            )
+            .unwrap();
+        }
+    };
+
+    let (golden_text, golden_sum) = run_with(&cfg, 1, 1, attach);
+    let stalls: f64 = golden_text
+        .lines()
+        .filter(|l| {
+            l.starts_with("cxl.sw") && l.contains(".credit_stalls")
+        })
+        .filter_map(|l| l.split_whitespace().last()?.parse().ok())
+        .sum();
+    assert!(
+        stalls > 0.0,
+        "contention case never stalled on a shared upstream credit"
+    );
+    for (threads, lanes) in [(1, 2), (1, 0), (4, 1), (4, 2), (4, 0)] {
+        let (text, sum) = run_with(&cfg, threads, lanes, attach);
+        assert_eq!(
+            text, golden_text,
+            "credit-contention dump diverged at threads={threads} \
+             lanes={lanes}"
+        );
+        assert_summaries_eq(
+            &sum,
+            &golden_sum,
+            &format!("contention threads={threads} lanes={lanes}"),
+        );
+    }
 }

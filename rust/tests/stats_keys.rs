@@ -340,6 +340,62 @@ fn serve_and_replay_stat_keys_are_documented() {
 }
 
 #[test]
+fn wall_clock_keys_live_outside_the_deterministic_dump() {
+    // The sim.par.*_ns phase timers measure *host* wall-clock, so they
+    // differ run-to-run: they must never appear in `dump_stats` (the
+    // dump golden digests and the determinism harness compare) — only
+    // in `dump_stats_full`, where they are documented keys like any
+    // other.
+    let md = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/docs/STATS.md"
+    ))
+    .expect("docs/STATS.md must exist");
+    let documented = documented_patterns(&md);
+
+    let mut cfg = SimConfig::default();
+    cfg.cores = 1;
+    cfg.sys_mem_size = 128 << 20;
+    cfg.cxl.mem_size = 256 << 20;
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    let wl = Stream::new(StreamKernel::Copy, 4096, 1);
+    m.attach_workloads_to(
+        0,
+        vec![Box::new(wl)],
+        &MemPolicy::Interleave { weights: vec![(0, 1), (1, 1)] },
+    )
+    .unwrap();
+    m.run(None);
+    m.verify().unwrap();
+
+    let det = m.dump_stats();
+    let full = m.dump_stats_full();
+    for probe in
+        ["sim.par.drain_ns", "sim.par.commit_ns", "sim.par.merge_ns"]
+    {
+        assert!(
+            det.get(probe).is_none(),
+            "wall-clock key {probe} leaked into the deterministic dump"
+        );
+        assert!(
+            full.get(probe).is_some(),
+            "wall-clock key {probe} missing from the full dump"
+        );
+    }
+    // The run did real work, so at least one phase accumulated time.
+    let spent: f64 = ["sim.par.drain_ns", "sim.par.commit_ns"]
+        .iter()
+        .map(|k| full.get(k).unwrap())
+        .sum();
+    assert!(spent > 0.0, "phase timers never accumulated");
+    // The full dump is the deterministic dump plus the timer keys, and
+    // every key in it (timers included) is documented.
+    assert_eq!(full.entries.len(), det.entries.len() + 3);
+    assert_documented(&full, &documented);
+}
+
+#[test]
 fn normalize_maps_representative_keys() {
     assert_eq!(normalize("host1.core0.loads"), "core{C}.loads");
     assert_eq!(normalize("host0.l1.3.miss_rate"), "l1.{C}.miss_rate");
