@@ -370,6 +370,12 @@ pub struct CxlDevOverride {
     /// Logical devices (MLD pooling): the card's capacity splits into
     /// `lds` equal slices, each with its own HDM decoder and window.
     pub lds: Option<usize>,
+    /// Logical devices of this card mapped into SEVERAL hosts at once
+    /// (CXL 3.x sharing): each listed LD index becomes a guest-visible
+    /// shared zNUMA node with device-side back-invalidate coherence.
+    /// Sharers are the hosts listing the LD in `[host.N] lds` (every
+    /// host when nobody lists it explicitly).
+    pub shared_lds: Option<Vec<u16>>,
 }
 
 /// Fully-resolved parameters of one expander card: the shared `[cxl]`
@@ -384,6 +390,10 @@ pub struct CxlDeviceCfg {
     pub media: DramConfig,
     /// Logical devices exposed (1 = plain SLD).
     pub lds: usize,
+    /// LD indices declared shared via `[cxl.devN] shared_lds` (empty
+    /// when sharing is expressed only through multi-host `[host.N]
+    /// lds` lists — the machine marks those at build time).
+    pub shared_lds: Vec<u16>,
 }
 
 /// Default store-and-forward latency of a virtual switch hop (ns) when
@@ -526,6 +536,7 @@ impl CxlConfig {
             latency_class: class,
             media,
             lds: ov.lds.unwrap_or(1),
+            shared_lds: ov.shared_lds.unwrap_or_default(),
         }
     }
 
@@ -836,20 +847,64 @@ impl SimConfig {
     /// The host owning each CXL window definition, in
     /// [`CxlConfig::window_defs`] order: explicit `[host.N] lds` lists
     /// when given, else round-robin over the windows. With one host
-    /// everything lands on host 0 (the pre-pooling behaviour).
+    /// everything lands on host 0 (the pre-pooling behaviour). Shared
+    /// windows report their first sharer here; use
+    /// [`Self::window_sharers`] for the full mapping.
     pub fn window_hosts(&self) -> Vec<usize> {
+        self.window_sharers()
+            .iter()
+            .map(|s| s.first().copied().unwrap_or(0))
+            .collect()
+    }
+
+    /// The sharer hosts of each CXL window definition, in
+    /// [`CxlConfig::window_defs`] order, ascending host order. Private
+    /// (pooled) windows carry exactly one entry — the host
+    /// [`Self::window_hosts`] reports. Shared LDs (CXL 3.x) carry one
+    /// entry per sharer: the hosts listing the window under
+    /// `[host.N] lds`, or every host when a `[cxl.devN] shared_lds`
+    /// window is listed by nobody.
+    pub fn window_sharers(&self) -> Vec<Vec<usize>> {
         let keys = self.window_keys();
-        if self.host_lds.iter().all(|l| l.is_empty()) {
-            return (0..keys.len()).map(|i| i % self.hosts).collect();
-        }
+        let explicit = self.host_lds.iter().any(|l| !l.is_empty());
         keys.iter()
-            .map(|k| {
-                self.host_lds
+            .enumerate()
+            .map(|(i, k)| {
+                let listed: Vec<usize> = self
+                    .host_lds
                     .iter()
-                    .position(|lds| lds.contains(k))
-                    .expect("validated: explicit assignments are total")
+                    .enumerate()
+                    .filter(|(_, lds)| lds.contains(k))
+                    .map(|(h, _)| h)
+                    .collect();
+                if !listed.is_empty() {
+                    listed
+                } else if self.ld_declared_shared(k) {
+                    (0..self.hosts).collect()
+                } else if explicit {
+                    // Unreachable after validate() (totality), but a
+                    // harmless answer beats a panic for ad-hoc configs.
+                    vec![0]
+                } else {
+                    vec![i % self.hosts]
+                }
             })
             .collect()
+    }
+
+    /// Whether `devN.ldK` appears in its device's `[cxl.devN]
+    /// shared_lds` list.
+    pub fn ld_declared_shared(&self, k: &LdRef) -> bool {
+        self.cxl
+            .dev_overrides
+            .get(k.dev)
+            .and_then(|o| o.shared_lds.as_ref())
+            .is_some_and(|s| s.contains(&k.ld))
+    }
+
+    /// Whether window definition `w` is shared by more than one host.
+    pub fn window_is_shared(&self, w: usize) -> bool {
+        self.window_sharers().get(w).is_some_and(|s| s.len() > 1)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -872,12 +927,43 @@ impl SimConfig {
                 self.hosts
             );
         }
+        // Shared-LD declarations must denote real LDs before the
+        // ownership rules below lean on them.
+        let mut any_shared = false;
+        for (i, ov) in self.cxl.dev_overrides.iter().enumerate() {
+            let Some(shared) = &ov.shared_lds else { continue };
+            if i >= self.cxl.devices {
+                bail!(
+                    "cxl.dev{i}.shared_lds targets a device outside \
+                     cxl.devices = {}",
+                    self.cxl.devices
+                );
+            }
+            let lds = self.cxl.device(i).lds;
+            let mut seen_ld = std::collections::BTreeSet::new();
+            for &k in shared {
+                if (k as usize) >= lds {
+                    bail!(
+                        "cxl.dev{i}.shared_lds: ld{k} is out of range \
+                         (device exposes {lds} LDs)"
+                    );
+                }
+                if !seen_ld.insert(k) {
+                    bail!("cxl.dev{i}.shared_lds lists ld{k} twice");
+                }
+            }
+            any_shared |= !shared.is_empty();
+        }
         if self.host_lds.iter().any(|l| !l.is_empty()) {
-            // Explicit assignment: every window must be named exactly
-            // once, and every name must denote an existing window.
+            // Explicit assignment: every name must denote an existing
+            // window. Ownership is exclusive for PRIVATE (pooled) LDs;
+            // shared LDs (CXL 3.x) may — and, when any host lists
+            // them, must — appear on several hosts' lists.
             let keys = self.window_keys();
-            let mut seen = std::collections::BTreeSet::new();
+            let mut count: std::collections::BTreeMap<LdRef, usize> =
+                Default::default();
             for (h, lds) in self.host_lds.iter().enumerate() {
+                let mut mine = std::collections::BTreeSet::new();
                 for r in lds {
                     if !keys.contains(r) {
                         bail!(
@@ -890,19 +976,83 @@ impl SimConfig {
                                 .join(", ")
                         );
                     }
-                    if !seen.insert(*r) {
-                        bail!(
-                            "'{r}' is assigned to more than one host \
-                             (LD ownership is exclusive)"
-                        );
+                    if !mine.insert(*r) {
+                        bail!("host.{h} lists '{r}' twice");
                     }
+                    *count.entry(*r).or_insert(0) += 1;
+                }
+            }
+            for (r, n) in &count {
+                if *n > 1 {
+                    any_shared = true;
+                } else if self.ld_declared_shared(r) {
+                    bail!(
+                        "'{r}' is declared shared (cxl.dev{}.shared_lds) \
+                         but assigned to a single host — a shared LD \
+                         needs >= 2 sharers; list it on every sharer \
+                         host, or drop it from shared_lds to keep it a \
+                         private (exclusively owned) LD",
+                        r.dev
+                    );
                 }
             }
             for k in &keys {
-                if !seen.contains(k) {
+                if count.contains_key(k) {
+                    continue;
+                }
+                if self.ld_declared_shared(k) {
+                    continue; // shared by every host by default
+                }
+                bail!(
+                    "window '{k}' is not assigned to any host \
+                     (explicit [host.N] lds lists must be total; \
+                     private LD ownership is exclusive — to share an \
+                     LD across hosts declare it in cxl.devN.shared_lds \
+                     or list it on every sharer host)"
+                );
+            }
+        }
+        if any_shared {
+            if self.hosts < 2 {
+                bail!(
+                    "shared LDs need at least 2 sharer hosts \
+                     (system.hosts = {}); sharer count cannot exceed \
+                     system.hosts",
+                    self.hosts
+                );
+            }
+            if self.cxl.ways() != 1 {
+                bail!(
+                    "shared LDs require 1-way windows (set \
+                     cxl.interleave_ways = 1)"
+                );
+            }
+            if self.cxl.attach == CxlAttach::MemBus {
+                bail!(
+                    "shared LDs require the architectural iobus attach: \
+                     back-invalidate coherence rides the CXL.mem \
+                     link/credit model the membus baseline bypasses"
+                );
+            }
+            // Every sharer commits its own endpoint HDM decoder for
+            // the shared LD (distinct HPA base, same DPA skip), so a
+            // device's decoder demand is the sum of sharer counts over
+            // its windows — bounded by the 10 decoders the component
+            // block models.
+            let mut demand = vec![0usize; self.cxl.devices];
+            for (def, sharers) in
+                self.cxl.window_defs().iter().zip(self.window_sharers())
+            {
+                for &t in &def.targets {
+                    demand[t] += sharers.len().max(1);
+                }
+            }
+            for (d, n) in demand.iter().enumerate() {
+                if *n > 10 {
                     bail!(
-                        "window '{k}' is not assigned to any host \
-                         (explicit [host.N] lds lists must be total)"
+                        "cxl.dev{d} needs {n} endpoint HDM decoders \
+                         (one per window sharer; max 10 modeled) — \
+                         reduce sharer counts or LDs"
                     );
                 }
             }
@@ -1135,6 +1285,12 @@ impl SimConfig {
             // unbound one (ownership is exclusive), so a valid schedule
             // can never fail at runtime for ownership reasons.
             let keys = self.window_keys();
+            let shared: std::collections::BTreeSet<LdRef> = keys
+                .iter()
+                .zip(self.window_sharers())
+                .filter(|(_, s)| s.len() > 1)
+                .map(|(k, _)| *k)
+                .collect();
             let mut owner: std::collections::BTreeMap<LdRef, Option<usize>> =
                 keys.iter()
                     .copied()
@@ -1144,6 +1300,13 @@ impl SimConfig {
                 let ev = &self.fm_events[i];
                 if !ev.at_ns.is_finite() || ev.at_ns < 0.0 {
                     bail!("fm event {i}: time must be finite and >= 0");
+                }
+                if shared.contains(&ev.ld()) {
+                    bail!(
+                        "fm event {i}: '{}' is a shared LD — runtime FM \
+                         re-binding moves private (pooled) LDs only",
+                        ev.ld()
+                    );
                 }
                 let slot = owner.get_mut(&ev.ld()).with_context(|| {
                     format!(
@@ -1420,6 +1583,21 @@ impl SimConfig {
                     format!("{pre}.lds must be int")
                 })? as usize);
             }
+            if let Some(v) = doc.get(&format!("{pre}.shared_lds")) {
+                let items = match v {
+                    TomlValue::Arr(items) => items,
+                    _ => bail!(
+                        "{pre}.shared_lds must be an array of LD indices"
+                    ),
+                };
+                let mut lds = Vec::new();
+                for it in items {
+                    lds.push(it.as_u64().with_context(|| {
+                        format!("{pre}.shared_lds entries must be ints")
+                    })? as u16);
+                }
+                ov.shared_lds = Some(lds);
+            }
         }
         // Per-switch overrides from [cxl.switchN] sections.
         c.cxl.switch_overrides =
@@ -1611,13 +1789,14 @@ impl SimConfig {
                             c.cxl.devices
                         ),
                     }
-                    const DEV_KEYS: [&str; 6] = [
+                    const DEV_KEYS: [&str; 7] = [
                         "size",
                         "link_lat_ns",
                         "link_bw_gbps",
                         "link_width",
                         "latency_class",
                         "lds",
+                        "shared_lds",
                     ];
                     if !DEV_KEYS.contains(&field) {
                         bail!(
@@ -2048,6 +2227,132 @@ mod tests {
         assert!(err.is_err(), "huge hosts value must be rejected");
         let err = SimConfig::from_toml("[system]\nhosts = 0\n", &[]);
         assert!(err.is_err(), "hosts = 0 must be rejected");
+    }
+
+    #[test]
+    fn shared_ld_validation_splits_private_and_shared() {
+        // Positive: both hosts list the declared-shared LD; the sharer
+        // set is exactly the listing hosts, in ascending order.
+        let cfg = SimConfig::from_toml(
+            "[system]\nhosts = 2\n[cxl]\ninterleave_ways = 1\n\
+             [cxl.dev0]\nlds = 2\nshared_lds = [0]\n\
+             [host.0]\nlds = [\"dev0.ld0\", \"dev0.ld1\"]\n\
+             [host.1]\nlds = [\"dev0.ld0\"]\n",
+            &[],
+        )
+        .unwrap();
+        assert!(cfg.ld_declared_shared(&LdRef { dev: 0, ld: 0 }));
+        assert_eq!(cfg.window_sharers()[0], vec![0, 1]);
+        assert_eq!(cfg.window_sharers()[1], vec![0]);
+        assert!(cfg.window_is_shared(0));
+        assert!(!cfg.window_is_shared(1));
+
+        // A declared-shared LD listed by nobody defaults to ALL hosts.
+        let cfg = SimConfig::from_toml(
+            "[system]\nhosts = 3\n[cxl]\ninterleave_ways = 1\n\
+             [cxl.dev0]\nshared_lds = [0]\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.window_sharers()[0], vec![0, 1, 2]);
+
+        // Same LD private AND shared: declared shared but assigned to
+        // exactly one host — exclusivity and sharing are contradictory.
+        let err = SimConfig::from_toml(
+            "[system]\nhosts = 2\n[cxl]\ninterleave_ways = 1\n\
+             [cxl.dev0]\nlds = 2\nshared_lds = [0]\n\
+             [host.0]\nlds = [\"dev0.ld0\", \"dev0.ld1\"]\n\
+             [host.1]\nlds = []\n",
+            &[],
+        );
+        assert!(
+            err.is_err(),
+            "an LD cannot be both private (single owner) and shared"
+        );
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(
+            msg.contains("declared shared") && msg.contains("single host"),
+            "error must explain the private/shared split: {msg}"
+        );
+
+        // A multi-host listing WITHOUT a shared_lds declaration is the
+        // duplicate-assignment error path only when sharing never
+        // enters the config; listing the same LD on two hosts is the
+        // sharing opt-in, so it validates (CXL 3.x shared LD).
+        let cfg = SimConfig::from_toml(
+            "[system]\nhosts = 2\n[cxl]\ninterleave_ways = 1\n\
+             [cxl.dev0]\nlds = 2\n\
+             [host.0]\nlds = [\"dev0.ld0\", \"dev0.ld1\"]\n\
+             [host.1]\nlds = [\"dev0.ld0\"]\n",
+            &[],
+        )
+        .unwrap();
+        assert!(cfg.window_is_shared(0));
+    }
+
+    #[test]
+    fn shared_ld_validation_rejects_bad_shapes() {
+        // Sharer count can never exceed system.hosts: a lone host
+        // cannot share with anyone.
+        let err = SimConfig::from_toml(
+            "[system]\nhosts = 1\n[cxl]\ninterleave_ways = 1\n\
+             [cxl.dev0]\nshared_lds = [0]\n",
+            &[],
+        );
+        assert!(err.is_err(), "sharing needs >= 2 hosts");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(
+            msg.contains("sharer count cannot exceed system.hosts"),
+            "error must name the bound: {msg}"
+        );
+
+        // More sharers than the device has endpoint decoders to
+        // commit: 11 default-sharers overflow the 10-decoder block.
+        let err = SimConfig::from_toml(
+            "[system]\nhosts = 11\n[cxl]\ninterleave_ways = 1\n\
+             [cxl.dev0]\nshared_lds = [0]\n",
+            &[],
+        );
+        assert!(err.is_err(), "sharers must fit the decoder pool");
+        assert!(format!("{:#}", err.unwrap_err())
+            .contains("endpoint HDM decoders"));
+
+        // Out-of-range and duplicate shared_lds entries.
+        let err = SimConfig::from_toml(
+            "[system]\nhosts = 2\n[cxl]\ninterleave_ways = 1\n\
+             [cxl.dev0]\nlds = 2\nshared_lds = [5]\n",
+            &[],
+        );
+        assert!(err.is_err(), "shared_lds must name a real LD");
+        let err = SimConfig::from_toml(
+            "[system]\nhosts = 2\n[cxl]\ninterleave_ways = 1\n\
+             [cxl.dev0]\nlds = 2\nshared_lds = [0, 0]\n",
+            &[],
+        );
+        assert!(err.is_err(), "duplicate shared_lds entries must fail");
+
+        // Shared LDs ride the CXL.mem link model: interleaved windows
+        // and the membus-attach baseline cannot express them.
+        let mut c = SimConfig::default();
+        c.hosts = 2;
+        c.cxl.devices = 2;
+        c.cxl.interleave_ways = 2;
+        c.cxl.dev_overrides = vec![CxlDevOverride {
+            shared_lds: Some(vec![0]),
+            ..Default::default()
+        }];
+        assert!(c.validate().is_err(), "shared LDs need 1-way windows");
+
+        // A runtime FM event may never target a shared LD (it is
+        // pinned to its sharer set).
+        let err = SimConfig::from_toml(
+            "[system]\nhosts = 2\n[cxl]\ninterleave_ways = 1\n\
+             [cxl.dev0]\nshared_lds = [0]\n\
+             [fm]\nevents = [\"@10us unbind dev0.ld0\"]\n",
+            &[],
+        );
+        assert!(err.is_err(), "FM rebind of a shared LD must fail");
+        assert!(format!("{:#}", err.unwrap_err()).contains("shared"));
     }
 
     #[test]

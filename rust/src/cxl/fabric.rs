@@ -137,6 +137,27 @@ impl Fabric {
         }
     }
 
+    /// Carry a host's M2S BIRsp down to device `dev` on the dedicated
+    /// uncredited BI channel (CXL 3.x): same path and wire costs as
+    /// [`Fabric::send_m2s`], but no request credit is consumed — the
+    /// snooped host may be stalled on those very credits, and its ack
+    /// must still get through. Returns the endpoint arrival tick.
+    pub fn send_birsp(
+        &mut self,
+        at: Tick,
+        pkt: &CxlMemPacket,
+        dev: usize,
+    ) -> Tick {
+        match self.dev_switch[dev] {
+            None => self.links[dev].forward_m2s(at, pkt),
+            Some(s) => {
+                let at_dsp =
+                    self.switches[s].forward_m2s_uncredited(at, pkt);
+                self.links[dev].forward_m2s(at_dsp, pkt)
+            }
+        }
+    }
+
     /// A response retired on the host side at `done`: free the credit on
     /// device `dev`'s flow-control pool.
     pub fn retire(&mut self, dev: usize, done: Tick) {
@@ -240,24 +261,41 @@ impl Fabric {
 
     /// Fabric-manager role: drive the FM-API `BIND_LD` command through
     /// every device's mailbox so each window definition's logical
-    /// device(s) belong to the host `window_hosts` assigns. The guests
-    /// later read exactly this state back with `GET_LD_ALLOCATIONS`.
+    /// device(s) belong to the host(s) `window_sharers` assigns —
+    /// exclusive mode for single-host (pooled) windows, shared mode
+    /// once per sharer for CXL 3.x shared windows. The guests later
+    /// read exactly this state back with `GET_LD_ALLOCATIONS`.
     pub fn bind_from_config(
         &mut self,
         cfg: &CxlConfig,
-        window_hosts: &[usize],
+        window_sharers: &[Vec<usize>],
     ) -> Result<()> {
         let defs = cfg.window_defs();
-        assert_eq!(defs.len(), window_hosts.len());
-        for (def, &host) in defs.iter().zip(window_hosts) {
+        assert_eq!(defs.len(), window_sharers.len());
+        for (def, sharers) in defs.iter().zip(window_sharers) {
             for &dev in &def.targets {
-                let code = self.fm_bind(dev, def.ld, host as u16);
-                if code != retcode::SUCCESS {
-                    bail!(
-                        "FM BIND_LD dev{dev}.ld{} -> host{host} failed \
-                         with code {code:#x}",
-                        def.ld
-                    );
+                if sharers.len() > 1 {
+                    for &host in sharers {
+                        let code =
+                            self.fm_bind_shared(dev, def.ld, host as u16);
+                        if code != retcode::SUCCESS {
+                            bail!(
+                                "FM BIND_LD (shared) dev{dev}.ld{} -> \
+                                 host{host} failed with code {code:#x}",
+                                def.ld
+                            );
+                        }
+                    }
+                } else {
+                    let host = sharers.first().copied().unwrap_or(0);
+                    let code = self.fm_bind(dev, def.ld, host as u16);
+                    if code != retcode::SUCCESS {
+                        bail!(
+                            "FM BIND_LD dev{dev}.ld{} -> host{host} \
+                             failed with code {code:#x}",
+                            def.ld
+                        );
+                    }
                 }
             }
         }
@@ -271,6 +309,25 @@ impl Fabric {
         let mut payload = [0u8; 4];
         payload[0..2].copy_from_slice(&ld.to_le_bytes());
         payload[2..4].copy_from_slice(&host.to_le_bytes());
+        self.devices[dev]
+            .mailbox
+            .run_command(opcode::BIND_LD, &payload)
+            .0
+    }
+
+    /// FM-API `BIND_LD` in shared mode on device `dev`: add `host` to
+    /// logical device `ld`'s sharer set (CXL 3.x sharing). Fails BUSY
+    /// when the LD is exclusively owned.
+    pub fn fm_bind_shared(
+        &mut self,
+        dev: usize,
+        ld: u16,
+        host: u16,
+    ) -> u16 {
+        let mut payload = [0u8; 5];
+        payload[0..2].copy_from_slice(&ld.to_le_bytes());
+        payload[2..4].copy_from_slice(&host.to_le_bytes());
+        payload[4] = super::mailbox::BIND_MODE_SHARED;
         self.devices[dev]
             .mailbox
             .run_command(opcode::BIND_LD, &payload)
@@ -388,6 +445,24 @@ impl FabricLane<'_> {
         }
     }
 
+    /// Lane mirror of [`Fabric::send_birsp`].
+    pub fn send_birsp(
+        &mut self,
+        at: Tick,
+        pkt: &CxlMemPacket,
+        dev: usize,
+    ) -> Tick {
+        let i = dev - self.lo;
+        match self.dev_switch[dev] {
+            None => self.links[i].forward_m2s(at, pkt),
+            Some(s) => {
+                let at_dsp =
+                    self.switch_mut(s).forward_m2s_uncredited(at, pkt);
+                self.links[i].forward_m2s(at_dsp, pkt)
+            }
+        }
+    }
+
     /// Lane mirror of [`Fabric::retire`].
     pub fn retire(&mut self, dev: usize, done: Tick) {
         self.credit_link(dev).retire(done);
@@ -427,10 +502,29 @@ mod tests {
         }];
         let mut f = Fabric::new(&cfg);
         // Two LD windows round-robined over two hosts.
-        f.bind_from_config(&cfg, &[0, 1]).unwrap();
+        f.bind_from_config(&cfg, &[vec![0], vec![1]]).unwrap();
         assert_eq!(f.devices[0].mailbox.state.ld_owner, vec![0, 1]);
         // Re-binding an owned LD must fail (exclusive ownership).
-        assert!(f.bind_from_config(&cfg, &[0, 1]).is_err());
+        assert!(f.bind_from_config(&cfg, &[vec![0], vec![1]]).is_err());
+    }
+
+    #[test]
+    fn bind_from_config_shared_mode_tracks_sharers() {
+        use crate::cxl::mailbox::SHARED;
+        let mut cfg = SimConfig::default().cxl;
+        cfg.interleave_ways = 1;
+        cfg.dev_overrides = vec![crate::config::CxlDevOverride {
+            lds: Some(2),
+            shared_lds: Some(vec![0]),
+            ..Default::default()
+        }];
+        let mut f = Fabric::new(&cfg);
+        // LD0 shared by hosts 0+1, LD1 private to host 1.
+        f.bind_from_config(&cfg, &[vec![0, 1], vec![1]]).unwrap();
+        assert_eq!(f.ld_owner(0, 0), SHARED);
+        assert_eq!(f.devices[0].mailbox.state.ld_sharers[0], 0b11);
+        assert_eq!(f.devices[0].mailbox.state.sharer_count(0), 2);
+        assert_eq!(f.ld_owner(0, 1), 1);
     }
 
     #[test]
@@ -443,7 +537,7 @@ mod tests {
             ..Default::default()
         }];
         let mut f = Fabric::new(&cfg);
-        f.bind_from_config(&cfg, &[0, 0]).unwrap();
+        f.bind_from_config(&cfg, &[vec![0], vec![0]]).unwrap();
         assert_eq!(f.ld_owner(0, 1), 0);
         // Re-bind while owned fails; unbind then bind moves ownership.
         assert_eq!(f.fm_bind(0, 1, 1), retcode::BUSY);

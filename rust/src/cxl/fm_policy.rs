@@ -78,6 +78,14 @@ pub struct LdState {
     /// Pages the owning guest currently has allocated on the LD's
     /// zNUMA node (0 = idle: an offline cannot be refused).
     pub resident_pages: u64,
+    /// Hosts currently bound to the LD (FM-API bind state). `> 1`
+    /// means BI-coherent sharing: the LD is pinned in place — moving
+    /// it would yank a mapped window out from under the other sharers.
+    pub sharers: u16,
+    /// Cumulative back-invalidate snoops the device sent for this LD
+    /// (the engine differentiates the sum per epoch as a cross-host
+    /// contention signal, dumped as `fm.policy.bi_rate_last`).
+    pub bi_sent: u64,
 }
 
 /// A policy decision: move `ld` from its current owner to host `to`.
@@ -126,6 +134,10 @@ pub struct FmPolicyEngine {
     refusal_streak: BTreeMap<LdRef, u32>,
     /// Per-host cooldown after participating in a move.
     cooldown_until: Vec<Tick>,
+    /// Fabric-wide cumulative BI snoops at the previous epoch.
+    prev_bi: u64,
+    /// BI snoops observed during the last epoch interval (gauge).
+    last_bi_rate: u64,
     pub stats: FmPolicyStats,
 }
 
@@ -142,6 +154,8 @@ impl FmPolicyEngine {
             blocked_until: BTreeMap::new(),
             refusal_streak: BTreeMap::new(),
             cooldown_until: vec![0; hosts],
+            prev_bi: 0,
+            last_bi_rate: 0,
             stats: FmPolicyStats::default(),
         }
     }
@@ -168,6 +182,11 @@ impl FmPolicyEngine {
         lds: &[LdState],
     ) -> Option<MoveDecision> {
         self.stats.epochs.inc();
+        // Cross-host contention signal: BI snoops per epoch across all
+        // shared LDs (observability for now; policies can key on it).
+        let bi_cum: u64 = lds.iter().map(|s| s.bi_sent).sum();
+        self.last_bi_rate = bi_cum.saturating_sub(self.prev_bi);
+        self.prev_bi = bi_cum;
         let cum: Vec<u64> = hosts
             .iter()
             .map(|h| match self.kind {
@@ -204,6 +223,7 @@ impl FmPolicyEngine {
             .iter()
             .filter(|s| {
                 s.owner != UNBOUND
+                    && s.sharers <= 1
                     && (s.owner as usize) < demand.len()
                     && s.owner as usize != to
                     && s.resident_pages == 0
@@ -283,12 +303,18 @@ impl FmPolicyEngine {
         self.stats.deferrals.inc();
     }
 
+    /// BI snoops observed fabric-wide during the last sampling epoch.
+    pub fn last_bi_rate(&self) -> u64 {
+        self.last_bi_rate
+    }
+
     pub fn dump(&self, d: &mut StatDump) {
         d.counter("fm.policy.epochs", &self.stats.epochs);
         d.counter("fm.policy.decisions", &self.stats.decisions);
         d.counter("fm.policy.deferrals", &self.stats.deferrals);
         d.counter("fm.policy.refusals", &self.stats.refusals);
         d.counter("fm.policy.holds", &self.stats.holds);
+        d.push("fm.policy.bi_rate_last", self.last_bi_rate as f64);
     }
 }
 
@@ -310,6 +336,8 @@ mod tests {
             ld: LdRef { dev, ld: k },
             owner,
             resident_pages: resident,
+            sharers: if owner == UNBOUND { 0 } else { 1 },
+            bi_sent: 0,
         }
     }
 
@@ -434,6 +462,30 @@ mod tests {
         let mv = e.epoch(40 * US, &hosts2, &lds).unwrap();
         assert_eq!(mv.ld, LdRef { dev: 0, ld: 0 });
         assert_eq!((mv.from, mv.to), (0, 1));
+    }
+
+    #[test]
+    fn shared_lds_are_pinned_and_bi_rate_differentiates() {
+        let mut e = engine(FmPolicyKind::CapacityRebalance);
+        let hosts = [
+            HostLoad::default(),
+            HostLoad { fallback_allocs: 100, cxl_traffic: 0 },
+        ];
+        // Idle, would otherwise move — but two sharers pin it in place.
+        let mut s = ld(0, 1, 0, 0);
+        s.sharers = 2;
+        s.bi_sent = 40;
+        assert_eq!(e.epoch(30 * US, &hosts, &[s]), None);
+        assert_eq!(e.last_bi_rate(), 40);
+        // The BI signal is differentiated per epoch, not cumulative.
+        let mut s2 = s;
+        s2.bi_sent = 100;
+        let hosts2 = [
+            HostLoad::default(),
+            HostLoad { fallback_allocs: 200, cxl_traffic: 0 },
+        ];
+        assert_eq!(e.epoch(40 * US, &hosts2, &[s2]), None);
+        assert_eq!(e.last_bi_rate(), 60);
     }
 
     #[test]

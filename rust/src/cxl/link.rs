@@ -33,6 +33,10 @@ pub struct LinkStats {
     pub m2s_rwd: Counter,
     pub s2m_ndr: Counter,
     pub s2m_drs: Counter,
+    /// CXL 3.x back-invalidate snoops (device -> host).
+    pub s2m_bisnp: Counter,
+    /// CXL 3.x back-invalidate responses (host -> device).
+    pub m2s_birsp: Counter,
     pub flits: Counter,
     pub wire_bytes: Counter,
     pub credit_stalls: Counter,
@@ -155,6 +159,10 @@ impl CxlLink {
         match pkt.channel {
             Channel::M2SReq => self.stats.m2s_req.inc(),
             Channel::M2SRwD => self.stats.m2s_rwd.inc(),
+            // BIRsp rides its own (uncredited) M2S channel: it answers
+            // a device-initiated snoop, so it must never compete for
+            // the request credits it may itself be unblocking.
+            Channel::M2SBIRsp => self.stats.m2s_birsp.inc(),
             _ => panic!("forward_m2s with S2M packet"),
         }
         let (flits, bytes) = self.framed(pkt.wire_bytes);
@@ -172,6 +180,9 @@ impl CxlLink {
         match pkt.channel {
             Channel::S2MNdr => self.stats.s2m_ndr.inc(),
             Channel::S2MDrs => self.stats.s2m_drs.inc(),
+            // Device-initiated BISnp: uncredited by construction (S2M
+            // never consumed M2S request credits).
+            Channel::S2MBISnp => self.stats.s2m_bisnp.inc(),
             _ => panic!("send_s2m with M2S packet"),
         }
         let (flits, bytes) = self.framed(pkt.wire_bytes);
@@ -209,6 +220,8 @@ impl CxlLink {
         d.counter(&format!("{path}.m2s_rwd"), &self.stats.m2s_rwd);
         d.counter(&format!("{path}.s2m_ndr"), &self.stats.s2m_ndr);
         d.counter(&format!("{path}.s2m_drs"), &self.stats.s2m_drs);
+        d.counter(&format!("{path}.s2m_bisnp"), &self.stats.s2m_bisnp);
+        d.counter(&format!("{path}.m2s_birsp"), &self.stats.m2s_birsp);
         d.counter(&format!("{path}.flits"), &self.stats.flits);
         d.counter(&format!("{path}.wire_bytes"), &self.stats.wire_bytes);
         d.counter(&format!("{path}.credit_stalls"), &self.stats.credit_stalls);
@@ -369,6 +382,19 @@ mod tests {
         // DRS = header+data = 128 B -> 2 flits = 136 B -> 4.25 ns.
         assert_eq!(s, 4250 + 20_000);
         assert!(m > 0);
+    }
+
+    #[test]
+    fn bi_channels_are_uncredited_and_counted() {
+        let mut l = link();
+        l.send_s2m(0, &mem_proto::make_bi_snoop(0x1000, 1, 1));
+        l.forward_m2s(0, &mem_proto::make_bi_response(0x1000, 1, 1, true));
+        // Neither BI direction touches the M2S request credit pool —
+        // that independence is what makes the flow deadlock-free.
+        assert_eq!(l.credits_in_use(), 0);
+        assert_eq!(l.stats.s2m_bisnp.get(), 1);
+        assert_eq!(l.stats.m2s_birsp.get(), 1);
+        assert_eq!(l.stats.m2s_req.get(), 0);
     }
 
     #[test]

@@ -47,6 +47,19 @@ pub mod opcode {
 /// Owner value of a logical device no host has been bound to.
 pub const UNBOUND: u16 = 0xFFFF;
 
+/// Owner sentinel of a logical device bound in SHARED mode (CXL 3.x):
+/// no single host owns it — the sharer set lives in the per-LD bitmap
+/// ([`MemdevState::ld_sharers`], appended to `GET_LD_ALLOCATIONS`).
+/// Deliberately >= any real host id, so owner-indexed policy code
+/// (`owner < hosts` guards) skips shared LDs without special cases.
+pub const SHARED: u16 = 0xFFFE;
+
+/// BIND_LD mode byte (optional 5th payload byte): exclusive pooling.
+pub const BIND_MODE_EXCLUSIVE: u8 = 0;
+/// BIND_LD mode byte: shared mapping — the host joins the LD's sharer
+/// set instead of taking exclusive ownership.
+pub const BIND_MODE_SHARED: u8 = 1;
+
 /// Event-record actions carried in the device Event Log. The fabric
 /// manager posts these when it re-binds logical devices at runtime;
 /// the owning (or gaining) host's driver consumes them via
@@ -104,7 +117,12 @@ pub struct MemdevState {
     pub lds: u16,
     /// Per-LD owner host id ([`UNBOUND`] until the FM binds it); the
     /// state BIND_LD / UNBIND_LD mutate and GET_LD_ALLOCATIONS reports.
+    /// [`SHARED`] when the LD is bound in shared mode.
     pub ld_owner: Vec<u16>,
+    /// Per-LD sharer-host bitmap (bit `h` = host `h` is a sharer).
+    /// Non-zero only while `ld_owner` is [`SHARED`]; `MAX_HOSTS` = 64
+    /// keeps the whole set in one u64.
+    pub ld_sharers: Vec<u64>,
 }
 
 impl MemdevState {
@@ -124,7 +142,15 @@ impl MemdevState {
             fw_revision: fw,
             lds,
             ld_owner: vec![UNBOUND; lds as usize],
+            ld_sharers: vec![0; lds as usize],
         }
+    }
+
+    /// Sharer hosts of `ld` (popcount of the sharer bitmap).
+    pub fn sharer_count(&self, ld: u16) -> u32 {
+        self.ld_sharers
+            .get(ld as usize)
+            .map_or(0, |b| b.count_ones())
     }
 }
 
@@ -317,9 +343,14 @@ impl Mailbox {
             }
             opcode::BIND_LD => {
                 // FM-API bind: give logical device `ld` to host `host`.
-                // Ownership is exclusive — a bound LD must be unbound
-                // before it can move (the property the pooling tests
-                // assert under random bind/unbind sequences).
+                // Exclusive mode (default / mode byte 0): ownership is
+                // exclusive — a bound LD must be unbound before it can
+                // move (the property the pooling tests assert under
+                // random bind/unbind sequences). Shared mode (optional
+                // 5th payload byte = 1, CXL 3.x): the host joins the
+                // LD's sharer set; the owner field holds [`SHARED`]
+                // and the sharer bitmap tracks membership. The two
+                // modes never mix on one LD.
                 if len < 4 {
                     self.finish(retcode::INVALID_INPUT, &[]);
                     return;
@@ -328,20 +359,39 @@ impl Mailbox {
                     u16::from_le_bytes(self.payload[0..2].try_into().unwrap());
                 let host =
                     u16::from_le_bytes(self.payload[2..4].try_into().unwrap());
+                let mode = if len >= 5 { self.payload[4] } else { 0 };
                 if ld >= self.state.lds
                     || host as usize >= crate::config::MAX_HOSTS
+                    || mode > BIND_MODE_SHARED
                 {
                     self.finish(retcode::INVALID_INPUT, &[]);
                     return;
                 }
-                if self.state.ld_owner[ld as usize] != UNBOUND {
-                    self.finish(retcode::BUSY, &[]);
-                    return;
+                let owner = &mut self.state.ld_owner[ld as usize];
+                if mode == BIND_MODE_SHARED {
+                    if *owner != UNBOUND && *owner != SHARED {
+                        // Exclusively owned: cannot be joined.
+                        self.finish(retcode::BUSY, &[]);
+                        return;
+                    }
+                    *owner = SHARED;
+                    self.state.ld_sharers[ld as usize] |= 1u64 << host;
+                } else {
+                    if *owner != UNBOUND {
+                        // Owned — or shared, which an exclusive bind
+                        // can never take over.
+                        self.finish(retcode::BUSY, &[]);
+                        return;
+                    }
+                    *owner = host;
                 }
-                self.state.ld_owner[ld as usize] = host;
                 self.finish(retcode::SUCCESS, &[]);
             }
             opcode::UNBIND_LD => {
+                // Payload: LD (u16). A SHARED LD additionally takes
+                // the leaving host (u16) and drops only its sharer
+                // bit; when the set empties the LD returns to
+                // [`UNBOUND`].
                 if len < 2 {
                     self.finish(retcode::INVALID_INPUT, &[]);
                     return;
@@ -354,16 +404,47 @@ impl Mailbox {
                     self.finish(retcode::INVALID_INPUT, &[]);
                     return;
                 }
-                self.state.ld_owner[ld as usize] = UNBOUND;
+                if self.state.ld_owner[ld as usize] == SHARED {
+                    if len < 4 {
+                        self.finish(retcode::INVALID_INPUT, &[]);
+                        return;
+                    }
+                    let host = u16::from_le_bytes(
+                        self.payload[2..4].try_into().unwrap(),
+                    );
+                    let bits = &mut self.state.ld_sharers[ld as usize];
+                    if host as usize >= crate::config::MAX_HOSTS
+                        || *bits & (1u64 << host) == 0
+                    {
+                        self.finish(retcode::INVALID_INPUT, &[]);
+                        return;
+                    }
+                    *bits &= !(1u64 << host);
+                    if *bits == 0 {
+                        self.state.ld_owner[ld as usize] = UNBOUND;
+                    }
+                } else {
+                    self.state.ld_owner[ld as usize] = UNBOUND;
+                }
                 self.finish(retcode::SUCCESS, &[]);
             }
             opcode::GET_LD_ALLOCATIONS => {
-                // LD count + the owner host of each LD, in LD order.
-                let mut r = vec![0u8; 2 + 2 * self.state.lds as usize];
+                // LD count + the owner host of each LD, in LD order,
+                // then one u64 sharer bitmap per LD. The bitmaps are
+                // appended AFTER the owner array so pre-sharing
+                // readers, which parse only the `2 + 2 * lds` prefix,
+                // keep working unchanged.
+                let lds = self.state.lds as usize;
+                let mut r = vec![0u8; 2 + 2 * lds + 8 * lds];
                 r[0..2].copy_from_slice(&self.state.lds.to_le_bytes());
                 for (k, &o) in self.state.ld_owner.iter().enumerate() {
                     r[2 + 2 * k..4 + 2 * k]
                         .copy_from_slice(&o.to_le_bytes());
+                }
+                let base = 2 + 2 * lds;
+                for (k, &b) in self.state.ld_sharers.iter().enumerate() {
+                    r[base + 8 * k..base + 8 * (k + 1)]
+                        .copy_from_slice(&b.to_le_bytes());
                 }
                 self.finish(retcode::SUCCESS, &r);
             }
@@ -514,6 +595,65 @@ mod tests {
         assert_eq!(code, retcode::SUCCESS);
         let (_, resp) = m.run_command(opcode::GET_LD_ALLOCATIONS, &[]);
         assert_eq!(u16::from_le_bytes(resp[2..4].try_into().unwrap()), 0);
+    }
+
+    #[test]
+    fn shared_bind_lifecycle() {
+        let mut m =
+            Mailbox::new(MemdevState::new_mld(4 << 30, 0xC0FFEE, 2));
+        // Hosts 0 and 2 join LD 0 in shared mode.
+        for h in [0u8, 2] {
+            let (code, _) = m.run_command(
+                opcode::BIND_LD,
+                &[0, 0, h, 0, BIND_MODE_SHARED],
+            );
+            assert_eq!(code, retcode::SUCCESS);
+        }
+        assert_eq!(m.state.ld_owner[0], SHARED);
+        assert_eq!(m.state.ld_sharers[0], 0b101);
+        assert_eq!(m.state.sharer_count(0), 2);
+        // Exclusive bind cannot take over a shared LD...
+        let (code, _) = m.run_command(opcode::BIND_LD, &[0, 0, 1, 0]);
+        assert_eq!(code, retcode::BUSY);
+        // ...and shared bind cannot join an exclusively owned one.
+        let (code, _) = m.run_command(opcode::BIND_LD, &[1, 0, 1, 0]);
+        assert_eq!(code, retcode::SUCCESS);
+        let (code, _) = m.run_command(
+            opcode::BIND_LD,
+            &[1, 0, 0, 0, BIND_MODE_SHARED],
+        );
+        assert_eq!(code, retcode::BUSY);
+        // GET_LD_ALLOCATIONS: legacy prefix + appended bitmaps.
+        let (code, resp) = m.run_command(opcode::GET_LD_ALLOCATIONS, &[]);
+        assert_eq!(code, retcode::SUCCESS);
+        assert_eq!(
+            u16::from_le_bytes(resp[2..4].try_into().unwrap()),
+            SHARED
+        );
+        assert_eq!(u16::from_le_bytes(resp[4..6].try_into().unwrap()), 1);
+        assert_eq!(
+            u64::from_le_bytes(resp[6..14].try_into().unwrap()),
+            0b101
+        );
+        assert_eq!(
+            u64::from_le_bytes(resp[14..22].try_into().unwrap()),
+            0
+        );
+        // Per-host shared unbind: host 2 leaves, host 0 remains.
+        let (code, _) = m.run_command(opcode::UNBIND_LD, &[0, 0, 2, 0]);
+        assert_eq!(code, retcode::SUCCESS);
+        assert_eq!(m.state.ld_owner[0], SHARED);
+        assert_eq!(m.state.ld_sharers[0], 0b001);
+        // A non-sharer cannot leave; short payload is rejected.
+        let (code, _) = m.run_command(opcode::UNBIND_LD, &[0, 0, 3, 0]);
+        assert_eq!(code, retcode::INVALID_INPUT);
+        let (code, _) = m.run_command(opcode::UNBIND_LD, &[0, 0]);
+        assert_eq!(code, retcode::INVALID_INPUT);
+        // Last sharer out: the LD returns to UNBOUND.
+        let (code, _) = m.run_command(opcode::UNBIND_LD, &[0, 0, 0, 0]);
+        assert_eq!(code, retcode::SUCCESS);
+        assert_eq!(m.state.ld_owner[0], UNBOUND);
+        assert_eq!(m.state.sharer_count(0), 0);
     }
 
     #[test]

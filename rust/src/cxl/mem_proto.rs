@@ -55,6 +55,10 @@ pub enum S2MOpcode {
     Cmp,
     /// DRS MemData — read data return.
     MemData,
+    /// BISnp — back-invalidate snoop (CXL 3.x): the device asks a
+    /// sharer host to invalidate a line its snoop filter tracks.
+    /// Header-only; the host answers with an M2S BIRsp.
+    BISnpInv,
 }
 
 impl S2MOpcode {
@@ -63,13 +67,22 @@ impl S2MOpcode {
     }
 }
 
-/// Direction + channel classification for stats.
+/// Direction + channel classification for stats. The two BI channels
+/// are CXL 3.x additions: device-initiated requests (S2M BISnp) and
+/// their host responses (M2S BIRsp) ride dedicated channels precisely
+/// so they never contend with — or deadlock against — the credited
+/// M2S request path they may be blocking.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Channel {
     M2SReq,
     M2SRwD,
     S2MNdr,
     S2MDrs,
+    /// Device -> host back-invalidate snoop (CXL 3.x BISnp).
+    S2MBISnp,
+    /// Host -> device back-invalidate response (CXL 3.x BIRsp);
+    /// carries the dirty line when the host held it Modified.
+    M2SBIRsp,
 }
 
 /// One CXL.mem protocol packet as carried over the link.
@@ -117,6 +130,61 @@ pub fn packetize(pkt: &Packet, tag: u16) -> Option<CxlMemPacket> {
         wire_bytes: bytes,
         req_id: pkt.id,
     })
+}
+
+/// Packetizer for a shared-region store miss (RFO): MemInv on the Req
+/// channel — a metadata-only ownership request. The device invalidates
+/// every other sharer (back-invalidate) and returns the line via DRS
+/// MemData ([`make_response`] already maps non-data M2S opcodes to
+/// DRS), so one round trip both fetches and claims the line.
+pub fn packetize_rfo(pkt: &Packet, tag: u16) -> CxlMemPacket {
+    CxlMemPacket {
+        channel: Channel::M2SReq,
+        m2s: Some(M2SOpcode::MemInv),
+        s2m: None,
+        addr: pkt.addr,
+        tag,
+        wire_bytes: HEADER_BYTES,
+        req_id: pkt.id,
+    }
+}
+
+/// Build a device-initiated back-invalidate snoop (S2M BISnp) for the
+/// host-physical line `addr`. Header-only on the wire.
+pub fn make_bi_snoop(addr: u64, tag: u16, req_id: u64) -> CxlMemPacket {
+    CxlMemPacket {
+        channel: Channel::S2MBISnp,
+        m2s: None,
+        s2m: Some(S2MOpcode::BISnpInv),
+        addr,
+        tag,
+        wire_bytes: HEADER_BYTES,
+        req_id,
+    }
+}
+
+/// Build the host's answer to a BISnp (M2S BIRsp). A clean line acks
+/// with the header alone; a Modified line carries its 64 B of dirty
+/// data back to the device with the response.
+pub fn make_bi_response(
+    addr: u64,
+    tag: u16,
+    req_id: u64,
+    dirty: bool,
+) -> CxlMemPacket {
+    CxlMemPacket {
+        channel: Channel::M2SBIRsp,
+        m2s: Some(M2SOpcode::MemInv),
+        s2m: None,
+        addr,
+        tag,
+        wire_bytes: if dirty {
+            HEADER_BYTES + DATA_BYTES
+        } else {
+            HEADER_BYTES
+        },
+        req_id,
+    }
 }
 
 /// De-packetizer (endpoint side): M2S packet -> media operation.
@@ -202,6 +270,32 @@ mod tests {
         assert_eq!(r.channel, Channel::S2MNdr);
         assert_eq!(r.s2m, Some(S2MOpcode::Cmp));
         assert!(!r.s2m.unwrap().carries_data());
+    }
+
+    #[test]
+    fn rfo_is_header_only_and_its_grant_carries_the_line() {
+        let p = packetize_rfo(&req(MemCmd::WriteReq), 4);
+        assert_eq!(p.channel, Channel::M2SReq);
+        assert_eq!(p.m2s, Some(M2SOpcode::MemInv));
+        assert_eq!(p.wire_bytes, HEADER_BYTES);
+        let r = make_response(&p);
+        assert_eq!(r.channel, Channel::S2MDrs);
+        assert_eq!(r.s2m, Some(S2MOpcode::MemData));
+        assert_eq!(r.tag, 4);
+    }
+
+    #[test]
+    fn bi_snoop_and_response_wire_shapes() {
+        let snp = make_bi_snoop(0x2000, 7, 11);
+        assert_eq!(snp.channel, Channel::S2MBISnp);
+        assert_eq!(snp.s2m, Some(S2MOpcode::BISnpInv));
+        assert!(!snp.s2m.unwrap().carries_data());
+        assert_eq!(snp.wire_bytes, HEADER_BYTES);
+        let clean = make_bi_response(0x2000, 7, 11, false);
+        assert_eq!(clean.channel, Channel::M2SBIRsp);
+        assert_eq!(clean.wire_bytes, HEADER_BYTES);
+        let dirty = make_bi_response(0x2000, 7, 11, true);
+        assert_eq!(dirty.wire_bytes, HEADER_BYTES + DATA_BYTES);
     }
 
     #[test]

@@ -206,6 +206,20 @@ impl CxlRootComplex {
         pkt
     }
 
+    /// Packetize a store to a BI-coherent shared line as an RFO (M2S
+    /// Req + MemInv): same tag discipline and packetization cost as
+    /// [`CxlRootComplex::packetize`], but the opcode tells the device's
+    /// snoop filter to grant exclusivity and back-invalidate the other
+    /// sharer hosts.
+    pub fn packetize_rfo(&mut self, host_pkt: &Packet) -> CxlMemPacket {
+        let tag = self.next_tag;
+        self.next_tag = self.next_tag.wrapping_add(1);
+        let pkt = mem_proto::packetize_rfo(host_pkt, tag);
+        self.stats.packetized.inc();
+        self.stats.packetize_ticks.add(self.pkt_ticks);
+        pkt
+    }
+
     /// Account a response that the fabric-commit phase already timed
     /// (`done` = RC-side availability, after link hops + depacketize).
     /// The stats-side half of [`CxlRootComplex::receive_s2m`].

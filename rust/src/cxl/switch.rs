@@ -70,6 +70,19 @@ impl CxlSwitch {
         self.us_link.send_m2s(now, pkt) + self.fwd_ticks
     }
 
+    /// M2S hop on the dedicated uncredited BI channel: a BIRsp answers
+    /// a device-initiated snoop, so it must never wait on the request
+    /// credits its sender may itself be blocking. Same wire + forward
+    /// cost as [`CxlSwitch::forward_m2s`], no credit consumed.
+    pub fn forward_m2s_uncredited(
+        &mut self,
+        now: Tick,
+        pkt: &CxlMemPacket,
+    ) -> Tick {
+        self.stats.m2s_forwarded.inc();
+        self.us_link.forward_m2s(now, pkt) + self.fwd_ticks
+    }
+
     /// S2M hop: pay the forwarding latency, then cross the upstream
     /// wire toward the root complex. Returns the RC arrival tick.
     pub fn forward_s2m(&mut self, now: Tick, pkt: &CxlMemPacket) -> Tick {

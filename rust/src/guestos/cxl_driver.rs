@@ -27,7 +27,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::cxl::mailbox::{opcode, retcode, CAP_MULTIPLE, UNBOUND};
+use crate::cxl::mailbox::{opcode, retcode, CAP_MULTIPLE, SHARED, UNBOUND};
 use crate::cxl::regs::{comp, dev, dev_block_ids};
 use crate::pcie::config_space::{CXL_VENDOR_ID, DVSEC_CXL_DEVICE,
                                 DVSEC_REGISTER_LOCATOR};
@@ -63,6 +63,12 @@ pub struct CxlMemdev {
     pub ld: u16,
     /// Logical devices the endpoint exposes.
     pub lds: u16,
+    /// Endpoint HDM decoder slot this binding commits. Equal to `ld`
+    /// for private LDs; sharers of a shared LD past the first take
+    /// overflow slots beyond `lds` so their commits never collide.
+    pub ep_decoder: usize,
+    /// The LD is CXL 3.x shared (this host is one of several sharers).
+    pub shared: bool,
     pub component_block: u64, // absolute MMIO base (endpoint)
     pub device_block: u64,    // absolute MMIO base (mailbox)
     pub hb_component_block: u64,
@@ -169,7 +175,7 @@ pub fn commit_memdev_decoders(
     commit_decoder(
         p,
         md.component_block,
-        md.ld as usize,
+        md.ep_decoder,
         md.hpa_base,
         md.hpa_size,
         ig,
@@ -194,7 +200,7 @@ pub fn commit_memdev_decoders(
 /// endpoint mid-teardown).
 pub fn uncommit_memdev_decoders(p: &mut dyn Platform, md: &CxlMemdev) {
     uncommit_decoder(p, md.hb_component_block, md.hb_decoder);
-    uncommit_decoder(p, md.component_block, md.ld as usize);
+    uncommit_decoder(p, md.component_block, md.ep_decoder);
 }
 
 /// Per-bridge window consumption state: published windows are consumed
@@ -346,8 +352,42 @@ struct EpProbe {
     lds: u16,
     slice: u64,
     owners: Vec<u16>,
+    /// Per-LD sharer-host bitmaps (CXL 3.x shared LDs report owner ==
+    /// SHARED and list their sharers here; zero otherwise).
+    sharer_maps: Vec<u64>,
     component_block: u64,
     device_block: u64,
+}
+
+/// Endpoint HDM decoder slot for (`ld`, `host`): private LDs use slot
+/// `ld`; a shared LD's first sharer (lowest host id) also uses slot
+/// `ld`, and every further sharer takes one slot from the overflow
+/// region past `lds`, in (ld, sharer-rank) order. Every host computes
+/// this independently from the Get LD Allocations bitmaps, so sharer
+/// commits on the shared endpoint never collide.
+fn endpoint_decoder_slot(
+    lds: u16,
+    owners: &[u16],
+    sharer_maps: &[u64],
+    ld: u16,
+    host: u16,
+) -> usize {
+    if owners[ld as usize] != SHARED {
+        return ld as usize;
+    }
+    let below = (1u64 << (host as u64 & 63)) - 1;
+    let rank = (sharer_maps[ld as usize] & below).count_ones() as usize;
+    if rank == 0 {
+        return ld as usize;
+    }
+    let mut slot = lds as usize;
+    for j in 0..ld as usize {
+        if owners[j] == SHARED {
+            slot +=
+                (sharer_maps[j].count_ones() as usize).saturating_sub(1);
+        }
+    }
+    slot + rank - 1
 }
 
 /// Locate one endpoint's register blocks and interrogate its mailbox:
@@ -449,6 +489,24 @@ fn probe_endpoint(
         } else {
             vec![UNBOUND; lds as usize]
         };
+    // Sharer bitmaps follow the owner array (devices that predate
+    // sharing return the short form; all-private then).
+    let bm_off = 2 + 2 * lds as usize;
+    let sharer_maps: Vec<u64> =
+        if code == retcode::SUCCESS && alloc.len() >= bm_off + 8 * lds as usize
+        {
+            (0..lds as usize)
+                .map(|k| {
+                    u64::from_le_bytes(
+                        alloc[bm_off + 8 * k..bm_off + 8 * k + 8]
+                            .try_into()
+                            .unwrap(),
+                    )
+                })
+                .collect()
+        } else {
+            vec![0; lds as usize]
+        };
     Ok(EpProbe {
         bdf: ep.bdf,
         serial,
@@ -456,6 +514,7 @@ fn probe_endpoint(
         lds,
         slice,
         owners,
+        sharer_maps,
         component_block,
         device_block,
     })
@@ -480,7 +539,12 @@ fn bind_endpoint_lds(
     let (capacity, lds, slice) = (ep.capacity, ep.lds, ep.slice);
     for ld in 0..lds {
         let owner = ep.owners[ld as usize];
-        let owned = owner == host || (owner == UNBOUND && host == 0);
+        let shared = owner == SHARED;
+        let owned = owner == host
+            || (owner == UNBOUND && host == 0)
+            || (shared
+                && ep.sharer_maps[ld as usize] >> (host as u64 & 63) & 1
+                    == 1);
         if !owned && !positional {
             // Legacy layout: another host's logical device is simply
             // not presented to us (its window isn't published here).
@@ -537,6 +601,14 @@ fn bind_endpoint_lds(
             position,
             ld,
             lds,
+            ep_decoder: endpoint_decoder_slot(
+                lds,
+                &ep.owners,
+                &ep.sharer_maps,
+                ld,
+                host,
+            ),
+            shared,
             component_block: ep.component_block,
             device_block: ep.device_block,
             hb_component_block: chbs.base,

@@ -53,7 +53,7 @@ use crate::cache::{Access, CacheArray, Directory, MesiState, MshrAlloc,
                    MshrFile, Victim};
 use crate::config::{CxlAttach, SimConfig};
 use crate::cpu::{Core, WlOp};
-use crate::cxl::mem_proto::CxlMemPacket;
+use crate::cxl::mem_proto::{self, CxlMemPacket};
 use crate::cxl::regs::ComponentRegs;
 use crate::cxl::CxlRootComplex;
 use crate::guestos::{AddressSpace, GuestOs, MemPolicy};
@@ -83,6 +83,11 @@ pub(crate) enum Ev {
     /// (delivered by the machine's commit phase): de-packetized data is
     /// at the root complex / membus edge, ready to travel up to L2.
     CxlFill { core: u8, line_pa: u64, issued_at: Tick },
+    /// A device-initiated S2M back-invalidate snoop (CXL 3.x BISnp)
+    /// landed: another sharer host claimed the line at `dpa` on shared
+    /// device `dev`. The host drops its cached copies and answers with
+    /// an M2S BIRsp fabric request (dirty data rides the response).
+    BiInv { dev: usize, dpa: u64 },
 }
 
 /// A fabric-crossing request emitted by a host's timing path. The
@@ -108,6 +113,10 @@ pub(crate) enum FabricReq {
     MediaFetch { dev: usize, dpa: u64, core: u8, line_pa: u64 },
     /// MemBus-baseline posted write-back.
     MediaWriteback { dev: usize, dpa: u64 },
+    /// Answer to a device BISnp: the host invalidated its copies of the
+    /// shared line at `dpa` and acks on the dedicated uncredited BI
+    /// channel (`dirty` = a Modified copy rides home with the ack).
+    BiRsp { dev: usize, pkt: CxlMemPacket, dpa: u64, dirty: bool },
 }
 
 impl FabricReq {
@@ -120,7 +129,8 @@ impl FabricReq {
             FabricReq::Fetch { dev, .. }
             | FabricReq::Writeback { dev, .. }
             | FabricReq::MediaFetch { dev, .. }
-            | FabricReq::MediaWriteback { dev, .. } => *dev,
+            | FabricReq::MediaWriteback { dev, .. }
+            | FabricReq::BiRsp { dev, .. } => *dev,
         }
     }
 }
@@ -175,6 +185,9 @@ pub struct MachineStats {
     /// (their CXL window was hot-removed) — dropped from the timing
     /// model, data already functionally in memory.
     pub writebacks_unmapped: Counter,
+    /// Device BISnps processed: cached copies of a shared line dropped
+    /// because another sharer host claimed it.
+    pub bi_invalidations: Counter,
 }
 
 pub struct Host {
@@ -243,19 +256,35 @@ pub struct Host {
     /// Earliest fabric-entry tick emitted during the current drain
     /// (`Tick::MAX` when nothing was emitted yet).
     emit_floor: Tick,
+    /// Host-physical `(base, size)` of every published window this host
+    /// shares with at least one other host (BI-coherent addresses).
+    shared_ranges: Vec<(u64, u64)>,
+    /// Shared line addresses this host holds exclusively (RFO granted,
+    /// not yet written back or back-invalidated). A store to a shared
+    /// line outside this set must take the RFO miss path even on a
+    /// local cache hit — the device's snoop filter is the only
+    /// authority on who else caches the line.
+    owned_lines: std::collections::BTreeSet<u64>,
+    /// Membus-edge delay between a BISnp landing and its BIRsp entering
+    /// the fabric; equals the machine's `d_min` so every emission keeps
+    /// the conservative-parallel w-invariant (emit tick >= event tick
+    /// + d_min is never required, but response tick >= event tick + 1
+    /// membus hop is what the commit-horizon proof uses).
+    bi_rsp_delay: Tick,
 }
 
 impl Host {
     /// Build host `id`'s hardware: BIOS tables (publishing only the
-    /// CXL windows `window_hosts` assigns to this host, placed from
-    /// `first_window_base` up so bases are fabric-globally unique),
-    /// the PCIe/ECAM view of the shared endpoints, and the CPU-side
-    /// memory system. `cfg` must already be validated.
+    /// CXL windows `window_sharers` assigns to this host — a shared
+    /// window lists several sharer hosts and is published on each —
+    /// placed from `first_window_base` up so bases are fabric-globally
+    /// unique), the PCIe/ECAM view of the shared endpoints, and the
+    /// CPU-side memory system. `cfg` must already be validated.
     pub(crate) fn new(
         cfg: &SimConfig,
         id: u8,
         first_window_base: u64,
-        window_hosts: &[usize],
+        window_sharers: &[Vec<usize>],
     ) -> Result<Host> {
         let mut mem = PhysMem::new();
         // With runtime FM dynamics (an `[fm] events` schedule or an
@@ -266,14 +295,14 @@ impl Host {
         // hot-add pool. Otherwise only this host's bound windows are
         // described — the PR-3 static layout.
         let my_defs: Vec<usize> = if !cfg.fm_dynamic() {
-            window_hosts
+            window_sharers
                 .iter()
                 .enumerate()
-                .filter(|&(_, &h)| h == id as usize)
+                .filter(|(_, sharers)| sharers.contains(&(id as usize)))
                 .map(|(i, _)| i)
                 .collect()
         } else {
-            (0..window_hosts.len()).collect()
+            (0..window_sharers.len()).collect()
         };
         let bios = bios::build_with(cfg, &mut mem, &my_defs, first_window_base);
 
@@ -353,6 +382,18 @@ impl Host {
             .l2
             .prefetch
             .then(|| StridePrefetcher::new(256, cfg.l2.pf_degree));
+        // Which published windows are BI-coherent on this host: the
+        // window's sharer list names this host AND at least one other.
+        let shared_ranges: Vec<(u64, u64)> = bios
+            .cxl_window_defs
+            .iter()
+            .zip(bios.cxl_windows.iter())
+            .filter(|(&d, _)| {
+                window_sharers[d].len() > 1
+                    && window_sharers[d].contains(&(id as usize))
+            })
+            .map(|(_, &(base, size))| (base, size))
+            .collect();
         let mut host = Host {
             id,
             issue_scheduled: vec![false; cfg.cores],
@@ -394,6 +435,9 @@ impl Host {
             lookahead: 1,
             lookahead_override: None,
             emit_floor: Tick::MAX,
+            shared_ranges,
+            owned_lines: std::collections::BTreeSet::new(),
+            bi_rsp_delay: ns_to_ticks(cfg.membus_lat_ns) + 1,
         };
         host.recompute_lookahead();
         Ok(host)
@@ -597,6 +641,14 @@ impl Host {
         now: Tick,
     ) {
         let c = core as usize;
+        // A store to a BI-coherent shared line this host does not own
+        // must reach the device as an RFO (MemInv) so the snoop filter
+        // can back-invalidate the other sharers — a stale local hit
+        // would write behind their caches. Demote local copies first so
+        // the probe below takes the miss path.
+        if is_write && self.needs_shared_rfo(pa) {
+            self.rfo_demote(pa, now);
+        }
         let probe = self.l1s[c].probe(pa, is_write);
         match probe.access {
             Access::Hit if !probe.needs_upgrade => {
@@ -754,9 +806,49 @@ impl Host {
         now: Tick,
     ) {
         if self.is_cxl_addr(pa) {
-            self.fetch_from_cxl(core, pa, now);
+            self.fetch_from_cxl(core, pa, wants_excl, now);
         } else {
             self.fetch_from_dram(core, pa, wants_excl, now);
+        }
+    }
+
+    /// True when `pa` falls inside a window this host shares with at
+    /// least one other host (device-side BI coherence applies).
+    fn is_shared_addr(&self, pa: u64) -> bool {
+        self.shared_ranges
+            .iter()
+            .any(|&(base, size)| pa >= base && pa < base + size)
+    }
+
+    #[inline]
+    fn shared_line_key(&self, pa: u64) -> u64 {
+        pa & !(self.cfg.l1.line - 1)
+    }
+
+    /// Should a store to `pa` take the RFO miss path? Yes iff the line
+    /// is BI-coherent and this host holds no exclusive grant for it.
+    fn needs_shared_rfo(&self, pa: u64) -> bool {
+        !self.shared_ranges.is_empty()
+            && self.is_shared_addr(pa)
+            && !self.owned_lines.contains(&self.shared_line_key(pa))
+    }
+
+    /// Drop every local copy of an unowned shared line ahead of the RFO
+    /// miss path; dirty data goes home first so device media stays the
+    /// single source of truth the other sharers refill from.
+    fn rfo_demote(&mut self, pa: u64, now: Tick) {
+        let mut dirty = false;
+        for c in 0..self.l1s.len() {
+            if self.l1s[c].invalidate(pa).is_some() {
+                dirty = true;
+            }
+        }
+        self.dir.purge(self.l2.line_addr(pa));
+        if self.l2.invalidate(pa).is_some() {
+            dirty = true;
+        }
+        if dirty {
+            self.writeback(pa, now);
         }
     }
 
@@ -787,7 +879,13 @@ impl Host {
     /// comes back as [`Ev::CxlFill`]. Credit-stall retries are the
     /// commit phase's business now — the emission here is
     /// unconditional, so fetch stats count requests, not attempts.
-    fn fetch_from_cxl(&mut self, core: u8, pa: u64, now: Tick) {
+    fn fetch_from_cxl(
+        &mut self,
+        core: u8,
+        pa: u64,
+        wants_excl: bool,
+        now: Tick,
+    ) {
         if self.cfg.cxl.attach == CxlAttach::MemBus {
             // Baseline (CXL-DMSim/SimCXL style): expander hangs off the
             // membus; protocol costs collapse into a fixed adder (both
@@ -821,7 +919,19 @@ impl Host {
             core,
             now,
         );
-        let pkt = self.rc.packetize(&host_pkt);
+        // Stores to BI-coherent lines ride an RFO (M2S MemInv): same
+        // wire cost as a read, but the device's snoop filter records
+        // this host as owner and back-invalidates the other sharers.
+        let rfo = wants_excl && self.is_shared_addr(pa);
+        let pkt = if rfo {
+            self.rc.packetize_rfo(&host_pkt)
+        } else {
+            self.rc.packetize(&host_pkt)
+        };
+        if rfo {
+            let key = self.shared_line_key(pa);
+            self.owned_lines.insert(key);
+        }
         self.stats.cxl_reads.inc();
         self.stats.cxl_dev_reads[dev].inc();
         self.emit(
@@ -904,6 +1014,12 @@ impl Host {
     fn writeback(&mut self, pa: u64, now: Tick) {
         if self.is_cxl_addr(pa) {
             self.stats.writebacks_cxl.inc();
+            if !self.shared_ranges.is_empty() {
+                // Writing a shared line back surrenders the exclusive
+                // grant (the device clears its owner mark on MemWr).
+                let key = self.shared_line_key(pa);
+                self.owned_lines.remove(&key);
+            }
             if self.cfg.cxl.attach == CxlAttach::MemBus {
                 let t = self.membus.transfer(now, 64 + 16);
                 let (dev, dpa) = self
@@ -1087,6 +1203,22 @@ impl Host {
         self.try_issue(core, now);
     }
 
+    /// Translate a device BISnp's DPA back to this host's physical
+    /// address through the routed 1-way windows (shared windows never
+    /// interleave, so the slice math is a straight offset).
+    fn bi_dpa_to_pa(&self, dev: usize, dpa: u64) -> Option<u64> {
+        for w in self.rc.windows() {
+            if w.targets.len() == 1
+                && w.targets[0] == dev
+                && dpa >= w.dpa_base
+                && dpa < w.dpa_base + w.size
+            {
+                return Some(w.base + (dpa - w.dpa_base));
+            }
+        }
+        None
+    }
+
     /// Handle one of this host's local events.
     fn dispatch(&mut self, ev: Ev, t: Tick) {
         match ev {
@@ -1117,6 +1249,38 @@ impl Host {
             }
             Ev::MshrRetry { core, pa, is_write, req } => {
                 self.access_with_req(core, pa, is_write, req, t);
+            }
+            Ev::BiInv { dev, dpa } => {
+                self.stats.bi_invalidations.inc();
+                let dirty = match self.bi_dpa_to_pa(dev, dpa) {
+                    Some(pa) => {
+                        let mut d = false;
+                        for c in 0..self.l1s.len() {
+                            if self.l1s[c].invalidate(pa).is_some() {
+                                d = true;
+                            }
+                        }
+                        self.dir.purge(self.l2.line_addr(pa));
+                        if self.l2.invalidate(pa).is_some() {
+                            d = true;
+                        }
+                        let key = self.shared_line_key(pa);
+                        self.owned_lines.remove(&key);
+                        d
+                    }
+                    // Window already offline (unbound after the snoop
+                    // departed): nothing cached, ack clean.
+                    None => false,
+                };
+                // Ack on the uncredited BI channel after one membus hop;
+                // a dirty copy rides home inside the response packet
+                // (no separate MemWr — the device counts it as a BI
+                // write-back when the ack lands).
+                let pkt = mem_proto::make_bi_response(dpa, 0, 0, dirty);
+                self.emit(
+                    t + self.bi_rsp_delay,
+                    FabricReq::BiRsp { dev, pkt, dpa, dirty },
+                );
             }
             Ev::CxlFill { core, line_pa, issued_at } => {
                 if self.cfg.cxl.attach == CxlAttach::MemBus {
@@ -1240,6 +1404,10 @@ impl Host {
         d.counter(
             &format!("{prefix}sys.writebacks_unmapped"),
             &self.stats.writebacks_unmapped,
+        );
+        d.counter(
+            &format!("{prefix}sys.bi_invalidations"),
+            &self.stats.bi_invalidations,
         );
         // Guest-side capacity-pressure signal (pages that spilled off
         // their policy node); 0 until the guest boots.

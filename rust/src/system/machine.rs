@@ -83,6 +83,7 @@ use crate::bios;
 use crate::config::{FmOp, InterleaveArith, LdRef, SimConfig};
 use crate::cxl::fm_policy::{FmPolicyEngine, HostLoad, LdState};
 use crate::cxl::mailbox::{event, retcode, EventRecord, UNBOUND};
+use crate::cxl::mem_proto;
 use crate::cxl::{CreditAvail, Fabric, FabricLane, HdmWindow};
 use crate::guestos::{GuestOs, MemChange, MemPolicy, ProgModel};
 use crate::sim::{ns_to_ticks, ticks_to_ns, EventQueue, Tick};
@@ -115,6 +116,10 @@ pub struct RunSummary {
     pub m2s_rwd: u64,
     pub s2m_ndr: u64,
     pub s2m_drs: u64,
+    /// Back-invalidate snoops (S2M BISnp) across all leaf links.
+    pub s2m_bisnp: u64,
+    /// Back-invalidate acks (M2S BIRsp) across all leaf links.
+    pub m2s_birsp: u64,
     pub events: u64,
 }
 
@@ -211,8 +216,25 @@ pub struct Machine {
     scratch_oldest: Vec<Tick>,
     /// Reusable epoch-cap scratch (per host).
     scratch_caps: Vec<Tick>,
-    /// Reusable canonical-merge buffer for sharded-commit lane outputs.
-    merge_buf: Vec<((Tick, u8, u64), Tick, Ev)>,
+    /// Reusable canonical-merge buffer for sharded-commit lane outputs:
+    /// `(pop key + delivery sub-index, target host, delivery tick,
+    /// event)`. One committed entry can deliver to several hosts (a
+    /// shared-LD RFO back-invalidates every other sharer before the
+    /// requester's fill), so the sub-index keeps equal pop keys in the
+    /// emission order the serial path uses, and the target host rides
+    /// explicitly instead of in the key.
+    merge_buf: Vec<((Tick, u8, u64, u32), u8, Tick, Ev)>,
+    /// Per host: the other hosts it shares at least one BI-coherent
+    /// window with (empty everywhere without shared LDs).
+    bi_peers: Vec<Vec<usize>>,
+    /// Any host has a nonempty `bi_peers` entry.
+    has_bi: bool,
+    /// Lower bound on how far ahead of its triggering commit a BISnp
+    /// can land at a sharer host (RC packetize + depacketize, >= 1
+    /// tick): the epoch cap for a sharer must stay within this horizon
+    /// of its peers' oldest undrained work, or a back-invalidation
+    /// could arrive in the host's past.
+    bi_horizon: Tick,
     /// Wall-clock spent draining hosts (ns) — see
     /// [`Machine::dump_stats_full`]. Not deterministic; never part of
     /// golden digests.
@@ -273,8 +295,10 @@ struct LaneSlot<'a> {
     /// Wave-local working set: input entries plus credit-race retries
     /// whose retry key still falls inside the wave.
     local: BTreeMap<(Tick, u8, u64), FabricReq>,
-    /// Deliveries, keyed by final pop key for the canonical merge.
-    out: Vec<((Tick, u8, u64), Tick, Ev)>,
+    /// Deliveries for the canonical merge: `(pop key + sub-index,
+    /// target host, delivery tick, event)` — see
+    /// [`Machine`]'s `merge_buf` for the key shape rationale.
+    out: Vec<((Tick, u8, u64, u32), u8, Tick, Ev)>,
     /// Retries that left the wave — returned to the global pending map.
     deferred: Vec<((Tick, u8, u64), FabricReq)>,
     /// Exclusive upper tick bound of this wave.
@@ -353,11 +377,32 @@ fn commit_lane_wave(
                 let arrival = lane.send_m2s(after_pkt, &pkt, dev);
                 let (resp, ready) =
                     lane.device_mut(dev).handle_m2s(arrival, &pkt, h);
+                // Device-side coherence: the snoop filter may have
+                // queued back-invalidations to other sharer hosts.
+                // Emit them before the requester's fill, in filter
+                // order, each under this pop key with a rising
+                // sub-index — byte-identical to the serial push order.
+                let mut sub = 0u32;
+                for bi in lane.device_mut(dev).take_pending_bi() {
+                    let snp =
+                        mem_proto::make_bi_snoop(bi.dpa, pkt.tag, pkt.req_id);
+                    let at_host = lane.send_s2m(arrival, &snp, dev);
+                    let deliver = at_host + depkt_ticks;
+                    out.push((
+                        (t, h, seq, sub),
+                        bi.host,
+                        deliver,
+                        Ev::BiInv { dev, dpa: bi.dpa },
+                    ));
+                    sub += 1;
+                    w_min = w_min.min(deliver.saturating_add(d_min));
+                }
                 let rc_arrival = lane.send_s2m(ready, &resp, dev);
                 let done = rc_arrival + depkt_ticks;
                 lane.retire(dev, done);
                 out.push((
-                    (t, h, seq),
+                    (t, h, seq, sub),
+                    h,
                     done,
                     Ev::CxlFill { core, line_pa, issued_at },
                 ));
@@ -400,7 +445,8 @@ fn commit_lane_wave(
                     false,
                 );
                 out.push((
-                    (t, h, seq),
+                    (t, h, seq, 0),
+                    h,
                     done,
                     Ev::CxlFill { core, line_pa, issued_at: t },
                 ));
@@ -408,6 +454,15 @@ fn commit_lane_wave(
             }
             FabricReq::MediaWriteback { dev, dpa } => {
                 lane.device_mut(dev).media.access(t, dpa, line, true);
+            }
+            FabricReq::BiRsp { dev, pkt, dpa, dirty } => {
+                // Uncredited BI channel: never probes the M2S credit
+                // pool (a BIRsp blocking on credits its own sender
+                // holds would deadlock the fabric) and delivers no
+                // host event — the device absorbs the ack.
+                let after_pkt = t + pkt_ticks;
+                let at_dev = lane.send_birsp(after_pkt, &pkt, dev);
+                let _ = lane.device_mut(dev).handle_bi_rsp(at_dev, dpa, dirty);
             }
         }
     }
@@ -490,6 +545,19 @@ fn commit_pending(
                 let arrival = fabric.send_m2s(after_pkt, &pkt, dev);
                 let (resp, ready) =
                     fabric.devices[dev].handle_m2s(arrival, &pkt, h);
+                // Device-side coherence: deliver any queued
+                // back-invalidations to the other sharer hosts before
+                // the requester's fill (the sharded path reproduces
+                // this order through its merge sub-index).
+                for bi in fabric.devices[dev].take_pending_bi() {
+                    let snp =
+                        mem_proto::make_bi_snoop(bi.dpa, pkt.tag, pkt.req_id);
+                    let at_host = fabric.send_s2m(arrival, &snp, dev);
+                    let deliver = at_host + depkt_ticks;
+                    inboxes[bi.host as usize]
+                        .push((deliver, Ev::BiInv { dev, dpa: bi.dpa }));
+                    w = w.min(deliver.saturating_add(d_min));
+                }
                 let rc_arrival = fabric.send_s2m(ready, &resp, dev);
                 let done = rc_arrival + depkt_ticks;
                 fabric.retire(dev, done);
@@ -540,6 +608,16 @@ fn commit_pending(
             FabricReq::MediaWriteback { dev, dpa } => {
                 fabric.devices[dev].media.access(t, dpa, line, true);
             }
+            FabricReq::BiRsp { dev, pkt, dpa, dirty } => {
+                // Uncredited BI channel: no credit probe (a BIRsp
+                // blocking on credits its own sender holds would
+                // deadlock), no host-side delivery — the device
+                // absorbs the ack and unblocks nothing host-visible.
+                let after_pkt = t + pkt_ticks;
+                let at_dev = fabric.send_birsp(after_pkt, &pkt, dev);
+                let _ =
+                    fabric.devices[dev].handle_bi_rsp(at_dev, dpa, dirty);
+            }
         }
     }
     handled
@@ -554,28 +632,12 @@ impl Machine {
     pub fn new(cfg: SimConfig) -> Result<Self> {
         cfg.validate()?;
         let mut fabric = Fabric::new(&cfg.cxl);
-        let window_hosts = cfg.window_hosts();
-        fabric.bind_from_config(&cfg.cxl, &window_hosts)?;
-        let mut hosts = Vec::with_capacity(cfg.hosts);
-        let mut next_base = bios::cxl_window_base(cfg.sys_mem_size);
-        for h in 0..cfg.hosts {
-            let host = Host::new(&cfg, h as u8, next_base, &window_hosts)?;
-            next_base = host.bios.next_free_base;
-            hosts.push(host);
-        }
-        let fm_policy = cfg
-            .fm_policy
-            .as_ref()
-            .map(|p| FmPolicyEngine::new(p, cfg.hosts));
-        let window_keys = cfg.window_keys();
+        let window_sharers = cfg.window_sharers();
+        fabric.bind_from_config(&cfg.cxl, &window_sharers)?;
         let win_defs = cfg.cxl.window_defs();
-        let win_targets: Vec<Arc<[usize]>> =
-            win_defs.iter().map(|d| d.targets.clone().into()).collect();
-        let lane_ranges = fabric.lane_ranges();
-        let lane_of_dev = fabric.lane_of_dev(&lane_ranges);
         let pkt_ticks = ns_to_ticks(cfg.cxl.pkt_lat_ns);
         let depkt_ticks = ns_to_ticks(cfg.cxl.depkt_lat_ns);
-        let dev_fixed_ticks = (0..cfg.cxl.devices)
+        let dev_fixed_ticks: Vec<Tick> = (0..cfg.cxl.devices)
             .map(|i| {
                 ns_to_ticks(
                     2.0 * (cfg.cxl.pkt_lat_ns + cfg.cxl.depkt_lat_ns)
@@ -584,6 +646,71 @@ impl Machine {
             })
             .collect();
         let d_min = ns_to_ticks(cfg.membus_lat_ns) + 1;
+        // Arm the snoop filter on every device exposing a shared LD,
+        // sizing its decoder file for the per-sharer HDM commits the
+        // guest drivers will make (one slot per window per sharer).
+        // The BI round-trip floor mirrors the MemBus-baseline fixed
+        // adder: the snoop must cross the same wire the data does.
+        for d in 0..cfg.cxl.devices {
+            let mut shared: Vec<u16> = Vec::new();
+            let mut decoders = 0usize;
+            for (def, sharers) in win_defs.iter().zip(&window_sharers) {
+                for &t in &def.targets {
+                    if t == d {
+                        decoders += sharers.len().max(1);
+                    }
+                }
+                if def.targets.len() == 1
+                    && def.targets[0] == d
+                    && sharers.len() > 1
+                {
+                    shared.push(def.ld);
+                }
+            }
+            if !shared.is_empty() {
+                let bi_rt = dev_fixed_ticks[d] + d_min;
+                fabric.devices[d].configure_sharing(&shared, decoders, bi_rt);
+            }
+        }
+        // Which hosts can back-invalidate which: co-sharers of any
+        // BI-coherent window. The epoch schedulers use this to keep a
+        // sharer's cap within `bi_horizon` of its peers' frontiers.
+        let mut bi_peers: Vec<Vec<usize>> = vec![Vec::new(); cfg.hosts];
+        for sharers in &window_sharers {
+            if sharers.len() < 2 {
+                continue;
+            }
+            for &a in sharers {
+                for &b in sharers {
+                    if a != b && !bi_peers[a].contains(&b) {
+                        bi_peers[a].push(b);
+                    }
+                }
+            }
+        }
+        for p in &mut bi_peers {
+            p.sort_unstable();
+        }
+        let has_bi = bi_peers.iter().any(|p| !p.is_empty());
+        // `max(1)`: a zero horizon (degenerate zero-latency protocol
+        // config) would let mutual caps livelock at `floor - 1`.
+        let bi_horizon = (pkt_ticks + depkt_ticks).max(1);
+        let mut hosts = Vec::with_capacity(cfg.hosts);
+        let mut next_base = bios::cxl_window_base(cfg.sys_mem_size);
+        for h in 0..cfg.hosts {
+            let host = Host::new(&cfg, h as u8, next_base, &window_sharers)?;
+            next_base = host.bios.next_free_base;
+            hosts.push(host);
+        }
+        let fm_policy = cfg
+            .fm_policy
+            .as_ref()
+            .map(|p| FmPolicyEngine::new(p, cfg.hosts));
+        let window_keys = cfg.window_keys();
+        let win_targets: Vec<Arc<[usize]>> =
+            win_defs.iter().map(|d| d.targets.clone().into()).collect();
+        let lane_ranges = fabric.lane_ranges();
+        let lane_of_dev = fabric.lane_of_dev(&lane_ranges);
         let nh = hosts.len();
         Ok(Machine {
             cfg,
@@ -611,6 +738,9 @@ impl Machine {
             scratch_oldest: Vec::new(),
             scratch_caps: Vec::new(),
             merge_buf: Vec::new(),
+            bi_peers,
+            has_bi,
+            bi_horizon,
             wall_drain_ns: 0,
             wall_commit_ns: 0,
             wall_merge_ns: 0,
@@ -850,6 +980,41 @@ impl Machine {
                 ),
             );
         }
+        // Back-invalidate horizon: a sharer host must not drain past
+        // `peer frontier + bi_horizon - 1` — a peer's undrained work can
+        // commit an RFO whose BISnp lands at this host as early as
+        // `frontier + bi_horizon`. The frontier counts the peer's
+        // uncommitted fabric entries, its next queued event AND its
+        // undelivered inbox (a fill still in the inbox can trigger the
+        // emission that snoops us).
+        if self.has_bi {
+            for h in 0..self.hosts.len() {
+                let mut floor = Tick::MAX;
+                for &p in &self.bi_peers[h] {
+                    let inbox_min = self.inboxes[p]
+                        .iter()
+                        .map(|e| e.0)
+                        .min()
+                        .unwrap_or(Tick::MAX);
+                    let f = self.scratch_oldest[p]
+                        .min(
+                            self.hosts[p]
+                                .next_event_tick()
+                                .unwrap_or(Tick::MAX),
+                        )
+                        .min(inbox_min);
+                    floor = floor.min(f);
+                }
+                if floor != Tick::MAX {
+                    let bi_cap = floor
+                        .saturating_add(self.bi_horizon)
+                        .saturating_sub(1);
+                    if bi_cap < self.scratch_caps[h] {
+                        self.scratch_caps[h] = bi_cap;
+                    }
+                }
+            }
+        }
     }
 
     /// The commit barrier for this epoch: no host can emit a new fabric
@@ -922,8 +1087,16 @@ impl Machine {
         let chunk = nh.div_ceil(nthreads);
         let nworkers = nh.div_ceil(chunk);
 
-        let slots: Vec<Mutex<EpochSlot>> =
-            (0..nh).map(|_| Mutex::new(EpochSlot::default())).collect();
+        // `next_tick` starts live (not `None`): the first epoch's BI
+        // floor must see each host's real frontier, exactly as the
+        // serial path's live `next_event_tick()` call does.
+        let slots: Vec<Mutex<EpochSlot>> = (0..nh)
+            .map(|h| {
+                let mut sl = EpochSlot::default();
+                sl.next_tick = self.hosts[h].next_event_tick();
+                Mutex::new(sl)
+            })
+            .collect();
         let start = Barrier::new(nworkers + 1);
         let end = Barrier::new(nworkers + 1);
         let stop = AtomicBool::new(false);
@@ -944,6 +1117,10 @@ impl Machine {
         let dev_fixed = &self.dev_fixed_ticks;
         let d_min = self.d_min;
         let line = self.cfg.l1.line;
+        let bi_peers = &self.bi_peers;
+        let has_bi = self.has_bi;
+        let bi_horizon = self.bi_horizon;
+        let mut bi_floors = vec![Tick::MAX; nh];
 
         let mut epochs = 0u64;
         let mut barrier_waits = 0u64;
@@ -1002,13 +1179,48 @@ impl Machine {
                         scratch_oldest[h] = t;
                     }
                 }
+                // Per-host frontiers for the BI horizon clamp — the
+                // slot's `next_tick` equals what a live
+                // `next_event_tick()` would return here (host queues
+                // only move during drains), so this matches the serial
+                // computation bit for bit.
+                if has_bi {
+                    for h in 0..nh {
+                        let nt = slots[h]
+                            .lock()
+                            .unwrap()
+                            .next_tick
+                            .unwrap_or(Tick::MAX);
+                        let inbox_min = inboxes[h]
+                            .iter()
+                            .map(|e| e.0)
+                            .min()
+                            .unwrap_or(Tick::MAX);
+                        bi_floors[h] =
+                            scratch_oldest[h].min(nt).min(inbox_min);
+                    }
+                }
                 for h in 0..nh {
                     let mut sl = slots[h].lock().unwrap();
-                    sl.cap = limit.min(
+                    let mut cap = limit.min(
                         scratch_oldest[h]
                             .saturating_add(lookaheads[h])
                             .saturating_sub(1),
                     );
+                    if has_bi {
+                        let mut floor = Tick::MAX;
+                        for &p in &bi_peers[h] {
+                            floor = floor.min(bi_floors[p]);
+                        }
+                        if floor != Tick::MAX {
+                            cap = cap.min(
+                                floor
+                                    .saturating_add(bi_horizon)
+                                    .saturating_sub(1),
+                            );
+                        }
+                    }
+                    sl.cap = cap;
                     // Filled inbox in, drained (recycled) buffer back.
                     std::mem::swap(&mut sl.inbox, &mut inboxes[h]);
                 }
@@ -1096,8 +1308,15 @@ impl Machine {
         let chunk = nh.div_ceil(nthreads);
         let nworkers = nh.div_ceil(chunk).max(lane_workers);
 
-        let slots: Vec<Mutex<EpochSlot>> =
-            (0..nh).map(|_| Mutex::new(EpochSlot::default())).collect();
+        // `next_tick` starts live for the first epoch's BI floor, as in
+        // the unsharded parallel path.
+        let slots: Vec<Mutex<EpochSlot>> = (0..nh)
+            .map(|h| {
+                let mut sl = EpochSlot::default();
+                sl.next_tick = self.hosts[h].next_event_tick();
+                Mutex::new(sl)
+            })
+            .collect();
         let start = Barrier::new(nworkers + 1);
         let end = Barrier::new(nworkers + 1);
         let phase = AtomicU8::new(PHASE_DRAIN);
@@ -1118,6 +1337,10 @@ impl Machine {
         let dev_fixed = &self.dev_fixed_ticks;
         let d_min = self.d_min;
         let line = self.cfg.l1.line;
+        let bi_peers = &self.bi_peers;
+        let has_bi = self.has_bi;
+        let bi_horizon = self.bi_horizon;
+        let mut bi_floors = vec![Tick::MAX; nh];
 
         // One lane slot per switch-credit-disjoint device group; the
         // views hold `&mut` borrows of the fabric interior for the
@@ -1242,13 +1465,45 @@ impl Machine {
                         scratch_oldest[h] = t;
                     }
                 }
+                // BI horizon clamp — same computation as the serial
+                // `epoch_caps_into`, frontiers read from the slots.
+                if has_bi {
+                    for h in 0..nh {
+                        let nt = slots[h]
+                            .lock()
+                            .unwrap()
+                            .next_tick
+                            .unwrap_or(Tick::MAX);
+                        let inbox_min = inboxes[h]
+                            .iter()
+                            .map(|e| e.0)
+                            .min()
+                            .unwrap_or(Tick::MAX);
+                        bi_floors[h] =
+                            scratch_oldest[h].min(nt).min(inbox_min);
+                    }
+                }
                 for h in 0..nh {
                     let mut sl = slots[h].lock().unwrap();
-                    sl.cap = limit.min(
+                    let mut cap = limit.min(
                         scratch_oldest[h]
                             .saturating_add(lookaheads[h])
                             .saturating_sub(1),
                     );
+                    if has_bi {
+                        let mut floor = Tick::MAX;
+                        for &p in &bi_peers[h] {
+                            floor = floor.min(bi_floors[p]);
+                        }
+                        if floor != Tick::MAX {
+                            cap = cap.min(
+                                floor
+                                    .saturating_add(bi_horizon)
+                                    .saturating_sub(1),
+                            );
+                        }
+                    }
+                    sl.cap = cap;
                     std::mem::swap(&mut sl.inbox, &mut inboxes[h]);
                 }
                 run_phase(PHASE_DRAIN);
@@ -1322,9 +1577,9 @@ impl Machine {
                             pending.insert(k, req);
                         }
                     }
-                    merge_buf.sort_unstable_by_key(|&(k, _, _)| k);
-                    for (k, done, ev) in merge_buf.drain(..) {
-                        inboxes[k.1 as usize].push((done, ev));
+                    merge_buf.sort_unstable_by_key(|&(k, _, _, _)| k);
+                    for (_, target, done, ev) in merge_buf.drain(..) {
+                        inboxes[target as usize].push((done, ev));
                     }
                     let now = Instant::now();
                     merge_ns += (now - tp).as_nanos() as u64;
@@ -1559,7 +1814,19 @@ impl Machine {
                 } else {
                     0
                 };
-                LdState { ld: r, owner, resident_pages }
+                let dev = &self.fabric.devices[r.dev];
+                LdState {
+                    ld: r,
+                    owner,
+                    resident_pages,
+                    sharers: dev.mailbox.state.sharer_count(r.ld) as u16,
+                    bi_sent: dev
+                        .stats
+                        .ld_bi_sent
+                        .get(r.ld as usize)
+                        .map(|c| c.get())
+                        .unwrap_or(0),
+                }
             })
             .collect();
         (hosts, lds)
@@ -1817,6 +2084,8 @@ impl Machine {
             m2s_rwd: self.fabric.agg_link(|s| s.m2s_rwd.get()),
             s2m_ndr: self.fabric.agg_link(|s| s.s2m_ndr.get()),
             s2m_drs: self.fabric.agg_link(|s| s.s2m_drs.get()),
+            s2m_bisnp: self.fabric.agg_link(|s| s.s2m_bisnp.get()),
+            m2s_birsp: self.fabric.agg_link(|s| s.m2s_birsp.get()),
             events: self.events_total(),
         }
     }

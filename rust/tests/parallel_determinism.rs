@@ -74,6 +74,8 @@ fn assert_summaries_eq(a: &RunSummary, b: &RunSummary, what: &str) {
     assert_eq!(a.m2s_rwd, b.m2s_rwd, "{what}: m2s_rwd");
     assert_eq!(a.s2m_ndr, b.s2m_ndr, "{what}: s2m_ndr");
     assert_eq!(a.s2m_drs, b.s2m_drs, "{what}: s2m_drs");
+    assert_eq!(a.s2m_bisnp, b.s2m_bisnp, "{what}: s2m_bisnp");
+    assert_eq!(a.m2s_birsp, b.m2s_birsp, "{what}: m2s_birsp");
     for (x, y, f) in [
         (a.seconds, b.seconds, "seconds"),
         (a.bandwidth_gbps, b.bandwidth_gbps, "bandwidth_gbps"),
@@ -134,6 +136,19 @@ fn random_topologies_are_thread_count_invariant() {
         for i in 0..devices * lds {
             cfg.host_lds[i % hosts]
                 .push(LdRef { dev: i / lds, ld: (i % lds) as u16 });
+        }
+        // Half the topologies promote dev0.ld0 to a shared LD (CXL 3.x
+        // back-invalidate coherence) mapped into every host: the BI
+        // fan-out + uncredited BIRsp path must hold the same
+        // equivalence as private pooling.
+        if rng.chance(0.5) {
+            cfg.cxl.dev_overrides[0].shared_lds = Some(vec![0]);
+            let shared = LdRef { dev: 0, ld: 0 };
+            for lds in &mut cfg.host_lds {
+                if !lds.contains(&shared) {
+                    lds.push(shared);
+                }
+            }
         }
         cfg.seed = rng.next_u64();
         cfg.validate().unwrap();
@@ -386,6 +401,88 @@ fn sixteen_host_rack_golden_digest() {
             &golden_sum,
             &format!("rack threads={threads}"),
         );
+    }
+}
+
+/// The BI-heavy variant of the rack golden: sixteen hosts in four
+/// 4-host sharing groups, each group hammering one shared LD. Every
+/// store is an RFO through the device snoop filter and every epoch
+/// carries BISnp/BIRsp traffic across host domains — the cross-host
+/// event flow the BI horizon cap exists to order. The serial digest is
+/// golden; threads ∈ {2, 4, 8} and a repeated threads=8 run (auto
+/// lanes) must reproduce it bit-for-bit.
+#[test]
+fn sixteen_host_bi_heavy_rack_golden_digest() {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 16;
+    cfg.cores = 1;
+    cfg.sys_mem_size = 128 << 20;
+    cfg.cxl.devices = 4;
+    cfg.cxl.mem_size = 256 << 20;
+    cfg.cxl.switches = 2;
+    cfg.cxl.interleave_ways = 1;
+    cfg.cxl.dev_overrides = vec![
+        CxlDevOverride {
+            lds: Some(1),
+            shared_lds: Some(vec![0]),
+            ..Default::default()
+        };
+        4
+    ];
+    // Hosts 4d..4d+3 share device d's only LD.
+    cfg.host_lds = (0..16)
+        .map(|h| vec![LdRef { dev: h / 4, ld: 0 }])
+        .collect();
+    cfg.seed = 4242;
+    cfg.validate().unwrap();
+
+    let attach = |m: &mut Machine| {
+        for h in 0..m.hosts.len() {
+            let kernel = [
+                StreamKernel::Copy,
+                StreamKernel::Scale,
+                StreamKernel::Add,
+                StreamKernel::Triad,
+            ][h % 4];
+            // Same small footprint per group member: the four sharers
+            // collide on the same lines continuously.
+            let wl: Box<dyn Workload> =
+                Box::new(Stream::new(kernel, 2048, 1));
+            m.attach_workloads_to(
+                h,
+                vec![wl],
+                &MemPolicy::Bind { nodes: vec![1] },
+            )
+            .unwrap();
+        }
+    };
+
+    let (golden_text, golden_sum) = run_with(&cfg, 1, 1, attach);
+    let golden = fnv64(&golden_text);
+    assert!(
+        golden_sum.s2m_bisnp > 0,
+        "BI-heavy rack never back-invalidated"
+    );
+    assert_eq!(
+        golden_sum.s2m_bisnp, golden_sum.m2s_birsp,
+        "every BISnp must be acked by run end"
+    );
+
+    for threads in [2usize, 4, 8, 8] {
+        let (text, sum) = run_with(&cfg, threads, 0, attach);
+        assert_eq!(
+            fnv64(&text),
+            golden,
+            "BI-heavy 16-host digest diverged at threads={threads}"
+        );
+        assert_eq!(text, golden_text);
+        assert_summaries_eq(
+            &sum,
+            &golden_sum,
+            &format!("bi-rack threads={threads}"),
+        );
+        assert_eq!(sum.s2m_bisnp, golden_sum.s2m_bisnp);
+        assert_eq!(sum.m2s_birsp, golden_sum.m2s_birsp);
     }
 }
 

@@ -1,0 +1,538 @@
+//! Cross-host consistency harness for shared logical devices (CXL 3.x
+//! back-invalidate coherence).
+//!
+//! Two layers of litmus:
+//!
+//! * **Device-level** — drive `CxlDevice::handle_m2s` directly with the
+//!   classic litmus shapes (message passing, store buffer) and check
+//!   the snoop filter's answers: who gets a BISnp, whether the dirty
+//!   line is pulled home, and that a read which raced a foreign owner
+//!   STALLS until the BI round trip completes — the structural reason a
+//!   stale value can never be returned.
+//! * **Machine-level** — boot two (and more) hosts onto one shared LD,
+//!   run real workloads through caches/RC/links/switch, and gate the
+//!   end-to-end counters against each other: every BISnp the device
+//!   sent was delivered to a host cache, acked, and (for owned lines)
+//!   carried the dirty data home. The whole exchange must be
+//!   bit-identical at every `(threads, commit_lanes)` pair.
+//!
+//! The simulator models timing + coherence metadata, not data values,
+//! so "every read returns the last globally committed write" is pinned
+//! through the snoop filter's `version` counter (ground truth bumped on
+//! each ownership grant) plus a reference model in the property test.
+
+use cxlramsim::config::{CxlDevOverride, LdRef, SimConfig};
+use cxlramsim::cxl::device::{BiRequest, CxlDevice, SnoopLine};
+use cxlramsim::cxl::mem_proto::{self, CxlMemPacket};
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::sim::{MemCmd, Packet};
+use cxlramsim::system::Machine;
+use cxlramsim::util::rng::Rng;
+use cxlramsim::workloads::{RandomAccess, Stream, StreamKernel, Workload};
+
+// ---------------------------------------------------------------------------
+// Device-level litmus: the snoop filter as an SC referee.
+// ---------------------------------------------------------------------------
+
+/// A 1-LD shared expander with two sharer hosts mapped at distinct HPA
+/// bases onto the same DPA slice (what the machine's boot path commits).
+fn shared_device() -> CxlDevice {
+    let mut cfg = SimConfig::default().cxl;
+    cfg.dev_overrides = vec![CxlDevOverride {
+        lds: Some(1),
+        shared_lds: Some(vec![0]),
+        ..Default::default()
+    }];
+    let mut d = CxlDevice::new(&cfg, 7);
+    d.configure_sharing(&[0], 2, 0);
+    d.component.program_decoder_at(0, 4 << 30, 2 << 30, 0);
+    d.component.program_decoder_at(1, 8 << 30, 2 << 30, 0);
+    d.component
+        .write32(cxlramsim::cxl::regs::comp::HDM_GLOBAL_CTRL, 0b10);
+    d
+}
+
+/// Host `h`'s HPA for shared-line index `line` (64 B lines).
+fn hpa(h: u8, line: u64) -> u64 {
+    (if h == 0 { 4u64 << 30 } else { 8u64 << 30 }) + line * 64
+}
+
+fn rd(addr: u64) -> CxlMemPacket {
+    mem_proto::packetize(&Packet::new(1, MemCmd::ReadReq, addr, 64, 0, 0), 1)
+        .unwrap()
+}
+
+fn wb(addr: u64) -> CxlMemPacket {
+    mem_proto::packetize(
+        &Packet::new(1, MemCmd::WritebackDirty, addr, 64, 0, 0),
+        1,
+    )
+    .unwrap()
+}
+
+fn rfo(addr: u64) -> CxlMemPacket {
+    mem_proto::packetize_rfo(
+        &Packet::new(1, MemCmd::WriteReq, addr, 64, 0, 0),
+        1,
+    )
+}
+
+/// Message passing: P0 writes data (line 0) then flag (line 1); P1
+/// spins on the flag, then reads the data. Forbidden outcome: P1 sees
+/// the new flag but stale data. Structurally: once host 0 owns both
+/// lines, host 1's read of EITHER snoops the dirty copy home and stalls
+/// behind the BI round trip — there is no interleaving in which the
+/// data read is served from pre-write media after the flag read saw the
+/// committed flag.
+#[test]
+fn litmus_message_passing_pulls_dirty_data_home() {
+    let mut d = shared_device();
+    // P0: w(data)=1; w(flag)=1 — two ownership grants.
+    d.handle_m2s(0, &rfo(hpa(0, 0)), 0);
+    d.handle_m2s(0, &rfo(hpa(0, 1)), 0);
+    assert!(d.take_pending_bi().is_empty(), "no sharers yet: no BI");
+    assert_eq!(d.snoop_line(0).version, 1);
+    assert_eq!(d.snoop_line(64).version, 1);
+
+    // P1: r(flag) — the flag's dirty copy must come home first.
+    let (_, t_flag) = d.handle_m2s(1000, &rd(hpa(1, 1)), 1);
+    assert_eq!(
+        d.take_pending_bi(),
+        vec![BiRequest { host: 0, dpa: 64, expect_dirty: true }]
+    );
+    // P1: r(data) — same for the data line. Seeing the flag cannot
+    // outrun the data: both reads independently stall on the owner.
+    let (_, t_data) = d.handle_m2s(1000, &rd(hpa(1, 0)), 1);
+    assert_eq!(
+        d.take_pending_bi(),
+        vec![BiRequest { host: 0, dpa: 0, expect_dirty: true }]
+    );
+    // Both dirty lines land before the fills are served.
+    let done_flag = d.handle_bi_rsp(1100, 64, true);
+    let done_data = d.handle_bi_rsp(1100, 0, true);
+    assert!(done_flag > 1100 && done_data > 1100, "dirty WB takes media time");
+    assert_eq!(d.stats.ld_bi_dirty_wb[0].get(), 2);
+
+    // An uncontended read of an idle line for comparison: the snooped
+    // reads stalled a full BI round trip beyond it.
+    let (_, t_idle) = d.handle_m2s(1000, &rd(hpa(1, 9)), 1);
+    assert!(t_flag > t_idle && t_data > t_idle, "snooped reads must stall");
+
+    // Final filter state: host 1 shares both lines, nobody owns them.
+    for dpa in [0u64, 64] {
+        let line = d.snoop_line(dpa);
+        assert_eq!(line.owner, None);
+        assert_eq!(line.sharers, 0b10);
+        assert_eq!(line.version, 1, "reads never mint versions");
+    }
+}
+
+/// Store buffer: P0 w(x)=1; r(y) || P1 w(y)=1; r(x). Under SC at least
+/// one read sees the other's write. Structurally: the snoop filter
+/// serializes the two RFOs (each a committed write), so whichever read
+/// runs second finds a foreign owner, snoops the dirty line home, and
+/// is served post-write media — `r(x)=0 && r(y)=0` is unreachable.
+#[test]
+fn litmus_store_buffer_serializes_ownership() {
+    let mut d = shared_device();
+    d.handle_m2s(0, &rfo(hpa(0, 0)), 0); // P0: w(x)
+    d.handle_m2s(0, &rfo(hpa(1, 1)), 1); // P1: w(y)
+    assert!(d.take_pending_bi().is_empty());
+    assert_eq!(d.snoop_line(0).owner, Some(0));
+    assert_eq!(d.snoop_line(64).owner, Some(1));
+
+    // P0: r(y) — y's committed write comes home before the fill.
+    d.handle_m2s(2000, &rd(hpa(0, 1)), 0);
+    assert_eq!(
+        d.take_pending_bi(),
+        vec![BiRequest { host: 1, dpa: 64, expect_dirty: true }]
+    );
+    d.handle_bi_rsp(2100, 64, true);
+    // P1: r(x) — symmetric.
+    d.handle_m2s(2000, &rd(hpa(1, 0)), 1);
+    assert_eq!(
+        d.take_pending_bi(),
+        vec![BiRequest { host: 0, dpa: 0, expect_dirty: true }]
+    );
+    d.handle_bi_rsp(2100, 0, true);
+
+    // Both committed writes survived (versions intact), both lines now
+    // shared by their reader, and both dirty copies were written back.
+    assert_eq!(d.snoop_line(0).version, 1);
+    assert_eq!(d.snoop_line(64).version, 1);
+    assert_eq!(d.stats.ld_bi_dirty_wb[0].get(), 2);
+    assert_eq!(d.stats.ld_bi_acks[0].get(), 2);
+}
+
+/// Dirty-writeback-on-BI: a clean sharer acks without data; an owner
+/// acks with the line, and the media write is visible in the BIRsp
+/// completion time.
+#[test]
+fn litmus_bi_ack_carries_data_only_when_owned() {
+    let mut d = shared_device();
+    // Clean sharer case: host 0 reads, host 1 RFOs — BI expects clean.
+    d.handle_m2s(0, &rd(hpa(0, 0)), 0);
+    d.take_pending_bi();
+    d.handle_m2s(0, &rfo(hpa(1, 0)), 1);
+    assert_eq!(
+        d.take_pending_bi(),
+        vec![BiRequest { host: 0, dpa: 0, expect_dirty: false }]
+    );
+    let done_clean = d.handle_bi_rsp(500, 0, false);
+    assert_eq!(d.stats.ld_bi_dirty_wb[0].get(), 0, "clean ack: no WB");
+
+    // Owner case: host 1 owns line 1; host 0's read snoops it dirty.
+    d.handle_m2s(0, &rfo(hpa(1, 1)), 1);
+    d.take_pending_bi();
+    d.handle_m2s(0, &rd(hpa(0, 1)), 0);
+    assert_eq!(
+        d.take_pending_bi(),
+        vec![BiRequest { host: 1, dpa: 64, expect_dirty: true }]
+    );
+    let done_dirty = d.handle_bi_rsp(500, 64, true);
+    assert_eq!(d.stats.ld_bi_dirty_wb[0].get(), 1);
+    assert!(
+        done_dirty > done_clean,
+        "the dirty ack pays the media write the clean ack skips"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Random-op property test: snoop filter vs. a reference MESI model.
+// ---------------------------------------------------------------------------
+
+/// Reference state of one line: the last committed write's version,
+/// which host holds it Modified, and who may hold clean copies.
+#[derive(Clone, Copy, Default)]
+struct RefLine {
+    version: u64,
+    owner: Option<u8>,
+    sharers: u64,
+}
+
+/// Drive random {read, rfo, writeback} ops from random hosts through
+/// the device and mirror them in the reference model. After every op
+/// the snoop filter must agree with the model exactly — which is
+/// precisely the "every read observes the last globally committed
+/// write" claim: a read either finds media current (no foreign owner)
+/// or snoops the owner's dirty line home before being served.
+#[test]
+fn property_random_ops_track_reference_model() {
+    let mut rng = Rng::new(0xb1_c0_17e5);
+    let mut d = shared_device();
+    const LINES: u64 = 8;
+    let mut model = [RefLine::default(); LINES as usize];
+
+    for step in 0..4000u32 {
+        let h = rng.below(2) as u8;
+        let line = rng.below(LINES);
+        let dpa = line * 64;
+        let m = &mut model[line as usize];
+        match rng.below(3) {
+            0 => {
+                // Read: a foreign owner is snooped home (dirty).
+                let (_, _) = d.handle_m2s(0, &rd(hpa(h, line)), h);
+                let bi = d.take_pending_bi();
+                match m.owner {
+                    Some(o) if o != h => {
+                        assert_eq!(
+                            bi,
+                            vec![BiRequest {
+                                host: o,
+                                dpa,
+                                expect_dirty: true
+                            }],
+                            "step {step}: read must snoop the owner"
+                        );
+                        d.handle_bi_rsp(0, dpa, true);
+                        m.sharers &= !(1u64 << o);
+                        m.owner = None;
+                    }
+                    _ => assert!(
+                        bi.is_empty(),
+                        "step {step}: clean read must not snoop"
+                    ),
+                }
+                m.sharers |= 1 << h;
+            }
+            1 => {
+                // RFO: every other copy is invalidated; the grant is
+                // the next globally committed write.
+                let (_, _) = d.handle_m2s(0, &rfo(hpa(h, line)), h);
+                let bi = d.take_pending_bi();
+                let mut expect = m.sharers;
+                if let Some(o) = m.owner {
+                    expect |= 1 << o;
+                }
+                expect &= !(1u64 << h);
+                let got: u64 =
+                    bi.iter().fold(0, |acc, b| acc | 1 << b.host);
+                assert_eq!(
+                    got, expect,
+                    "step {step}: RFO must BI exactly the stale copies"
+                );
+                for b in &bi {
+                    assert_eq!(b.dpa, dpa);
+                    assert_eq!(
+                        b.expect_dirty,
+                        m.owner == Some(b.host),
+                        "step {step}: only the owner returns data"
+                    );
+                    d.handle_bi_rsp(0, dpa, b.expect_dirty);
+                }
+                m.version += 1;
+                m.owner = Some(h);
+                m.sharers = 1 << h;
+            }
+            _ => {
+                // Writeback: the writer drops its copy; media becomes
+                // current without any BI.
+                let (_, _) = d.handle_m2s(0, &wb(hpa(h, line)), h);
+                assert!(
+                    d.take_pending_bi().is_empty(),
+                    "step {step}: writeback must not snoop"
+                );
+                m.sharers &= !(1u64 << h);
+                if m.owner == Some(h) {
+                    m.owner = None;
+                }
+            }
+        }
+        let got = d.snoop_line(dpa);
+        let want = SnoopLine {
+            sharers: m.sharers,
+            owner: m.owner,
+            version: m.version,
+        };
+        assert_eq!(got, want, "step {step}: filter diverged from model");
+    }
+    // The walk really exercised the machinery.
+    assert!(d.stats.ld_bi_sent[0].get() > 100);
+    assert_eq!(
+        d.stats.ld_bi_sent[0].get(),
+        d.stats.ld_bi_acks[0].get(),
+        "every snoop acked"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Machine-level: the full stack, bit-identical at every (threads, lanes).
+// ---------------------------------------------------------------------------
+
+/// Two hosts sharing one 256 MiB LD behind a switch.
+fn shared_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 2;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 256 << 20;
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides = vec![CxlDevOverride {
+        lds: Some(1),
+        shared_lds: Some(vec![0]),
+        ..Default::default()
+    }];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }],
+        vec![LdRef { dev: 0, ld: 0 }],
+    ];
+    cfg.seed = 99;
+    cfg
+}
+
+fn run_shared(
+    cfg: &SimConfig,
+    threads: usize,
+    lanes: usize,
+    attach: impl Fn(&mut Machine),
+) -> (String, Machine) {
+    let mut cfg = cfg.clone();
+    cfg.threads = threads;
+    cfg.commit_lanes = lanes;
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    attach(&mut m);
+    m.run(None);
+    m.verify().unwrap();
+    (m.dump_stats().to_text(), m)
+}
+
+fn attach_producer_consumer(m: &mut Machine) {
+    // Producer: read-write kernel on the shared node — every store is
+    // an RFO through the snoop filter.
+    let wl0 = Stream::for_wss(StreamKernel::Triad, m.cfg.l2.size, 2);
+    m.attach_workloads_to(
+        0,
+        vec![Box::new(wl0)],
+        &MemPolicy::Bind { nodes: vec![1] },
+    )
+    .unwrap();
+    // Consumer: walks the same (overlapping) region of the same node.
+    let wl1 = Stream::for_wss(StreamKernel::Triad, m.cfg.l2.size, 2);
+    m.attach_workloads_to(
+        1,
+        vec![Box::new(wl1)],
+        &MemPolicy::Bind { nodes: vec![1] },
+    )
+    .unwrap();
+}
+
+/// End-to-end message passing: producer stores are RFOs, consumer
+/// caches get back-invalidated, dirty lines ride BIRsp acks home, and
+/// the counters reconcile exactly across the whole fabric.
+#[test]
+fn shared_ld_counters_reconcile_end_to_end() {
+    let cfg = shared_cfg();
+    let (text, m) = run_shared(&cfg, 1, 1, attach_producer_consumer);
+    let d = m.dump_stats();
+    let get = |k: &str| d.get(k).unwrap_or(0.0) as u64;
+
+    let bi_sent = get("cxl.dev0.ld0.bi_sent");
+    let bi_acks = get("cxl.dev0.ld0.bi_acks");
+    let bi_dirty = get("cxl.dev0.ld0.bi_dirty_wb");
+    let inv0 = get("host0.sys.bi_invalidations");
+    let inv1 = get("host1.sys.bi_invalidations");
+    assert!(bi_sent > 0, "contended sharing must generate BISnps");
+    assert_eq!(
+        bi_sent,
+        inv0 + inv1,
+        "every BISnp sent must invalidate exactly one host cache"
+    );
+    assert_eq!(bi_sent, bi_acks, "every BISnp must be acked");
+    assert!(bi_dirty > 0, "producer-owned lines must come home dirty");
+    assert!(bi_dirty <= bi_acks);
+    assert!(inv0 > 0 && inv1 > 0, "contention runs both directions");
+    assert_eq!(get("cxl.dev0.ld0.sharers"), 2);
+
+    let s = m.summary();
+    assert_eq!(s.s2m_bisnp, bi_sent, "leaf links carry every BISnp");
+    assert_eq!(s.m2s_birsp, bi_acks, "leaf links carry every BIRsp");
+    assert!(text.contains("cxl.dev0.ld0.bi_sent"));
+
+    // No line is left exclusively owned with foreign sharers, and no
+    // sharer bit names a host outside the topology (filter sanity over
+    // the touched working set).
+    let dev = &m.fabric.devices[0];
+    for line in 0..(16u64 << 20) / 64 {
+        let sl = dev.snoop_line(line * 64);
+        assert_eq!(sl.sharers & !0b11, 0, "ghost sharer on line {line}");
+        if let Some(o) = sl.owner {
+            assert_eq!(
+                sl.sharers & !(1u64 << o),
+                0,
+                "line {line}: owner {o} coexists with foreign sharers"
+            );
+        }
+    }
+}
+
+/// The acceptance gate: a 2-host shared-LD run is bit-identical across
+/// threads x commit_lanes — BISnp/BIRsp traffic included — and repeat
+/// runs reproduce the golden digest.
+#[test]
+fn shared_ld_golden_digest_across_threads_and_lanes() {
+    let cfg = shared_cfg();
+    let (golden, m) = run_shared(&cfg, 1, 1, attach_producer_consumer);
+    assert!(
+        m.summary().s2m_bisnp > 0,
+        "golden run must exercise back-invalidates"
+    );
+    // 0 = auto lanes.
+    for (threads, lanes) in [(1, 1), (1, 4), (4, 0), (4, 4)] {
+        let (text, _) =
+            run_shared(&cfg, threads, lanes, attach_producer_consumer);
+        assert_eq!(
+            text, golden,
+            "shared-LD dump diverged at threads={threads} lanes={lanes}"
+        );
+    }
+}
+
+/// Random-op machine property: mixed random workloads over the shared
+/// node must produce identical dumps at every (threads, lanes) — the
+/// BI exchange is part of the deterministic event order, so identical
+/// dumps mean every read observed the same committed-write history.
+#[test]
+fn random_shared_workloads_are_schedule_invariant() {
+    let mut rng = Rng::new(0x5eed_5a1e);
+    for case in 0..3u32 {
+        let mut cfg = shared_cfg();
+        cfg.seed = rng.next_u64();
+        let seeds = [rng.next_u64(), rng.next_u64()];
+        let kinds = [rng.below(2), rng.below(2)];
+        let attach = |m: &mut Machine| {
+            for h in 0..2usize {
+                let wl: Box<dyn Workload> = match kinds[h] {
+                    0 => Box::new(Stream::new(
+                        StreamKernel::Triad,
+                        16384,
+                        1,
+                    )),
+                    _ => Box::new(RandomAccess::new(
+                        1 << 20,
+                        3000,
+                        0.5,
+                        seeds[h],
+                    )),
+                };
+                m.attach_workloads_to(
+                    h,
+                    vec![wl],
+                    &MemPolicy::Bind { nodes: vec![1] },
+                )
+                .unwrap();
+            }
+        };
+        let (golden, gm) = run_shared(&cfg, 1, 1, attach);
+        for (threads, lanes) in [(1, 4), (4, 0), (4, 4)] {
+            let (text, _) = run_shared(&cfg, threads, lanes, attach);
+            assert_eq!(
+                text, golden,
+                "case {case}: diverged at threads={threads} lanes={lanes}"
+            );
+        }
+        // Both hosts really hit the shared LD.
+        let d = gm.dump_stats();
+        assert!(d.get("cxl.dev0.ld0.host0_reads").unwrap_or(0.0) > 0.0);
+        assert!(d.get("cxl.dev0.ld0.host1_reads").unwrap_or(0.0) > 0.0);
+    }
+}
+
+/// Three sharers: BI fan-out hits every stale copy exactly once and the
+/// per-host invalidation counters sum to the device's send count.
+#[test]
+fn three_sharer_fanout_reconciles() {
+    let mut cfg = shared_cfg();
+    cfg.hosts = 3;
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }],
+        vec![LdRef { dev: 0, ld: 0 }],
+        vec![LdRef { dev: 0, ld: 0 }],
+    ];
+    let attach = |m: &mut Machine| {
+        for h in 0..3usize {
+            let wl: Box<dyn Workload> =
+                Box::new(Stream::new(StreamKernel::Triad, 8192, 1));
+            m.attach_workloads_to(
+                h,
+                vec![wl],
+                &MemPolicy::Bind { nodes: vec![1] },
+            )
+            .unwrap();
+        }
+    };
+    let (golden, m) = run_shared(&cfg, 1, 1, attach);
+    let d = m.dump_stats();
+    let get = |k: &str| d.get(k).unwrap_or(0.0) as u64;
+    let bi_sent = get("cxl.dev0.ld0.bi_sent");
+    assert!(bi_sent > 0);
+    assert_eq!(
+        bi_sent,
+        get("host0.sys.bi_invalidations")
+            + get("host1.sys.bi_invalidations")
+            + get("host2.sys.bi_invalidations")
+    );
+    assert_eq!(get("cxl.dev0.ld0.sharers"), 3);
+    let (t4, _) = run_shared(&cfg, 4, 4, attach);
+    assert_eq!(t4, golden, "3-sharer run diverged at threads=4 lanes=4");
+}

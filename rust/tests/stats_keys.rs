@@ -340,6 +340,77 @@ fn serve_and_replay_stat_keys_are_documented() {
 }
 
 #[test]
+fn sharing_run_stat_keys_are_documented() {
+    // A shared-LD (CXL 3.x back-invalidate) run lights up the sharing
+    // emitters: per-LD snoop-filter counters on the device, the
+    // BISnp/BIRsp channel counters on every link block, the host-side
+    // invalidation counter, and — with `[fm] policy` configured — the
+    // differentiated BI-rate signal. All of it must be covered by
+    // docs/STATS.md.
+    let md = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/docs/STATS.md"
+    ))
+    .expect("docs/STATS.md must exist");
+    let documented = documented_patterns(&md);
+
+    let mut cfg = SimConfig::default();
+    cfg.hosts = 2;
+    cfg.cores = 2;
+    cfg.sys_mem_size = 256 << 20;
+    cfg.cxl.mem_size = 256 << 20;
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides = vec![CxlDevOverride {
+        lds: Some(1),
+        shared_lds: Some(vec![0]),
+        ..Default::default()
+    }];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }],
+        vec![LdRef { dev: 0, ld: 0 }],
+    ];
+    cfg.fm_policy =
+        Some(FmPolicyConfig::new(FmPolicyKind::CapacityRebalance));
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    // Both hosts hammer the same shared node: stores RFO through the
+    // snoop filter, peer copies get back-invalidated.
+    for h in 0..2 {
+        let wl = Stream::new(StreamKernel::Triad, 16384, 1);
+        m.attach_workloads_to(
+            h,
+            vec![Box::new(wl)],
+            &MemPolicy::Bind { nodes: vec![1] },
+        )
+        .unwrap();
+    }
+    m.run(None);
+    m.verify().unwrap();
+
+    let d = m.dump_stats();
+    for probe in [
+        "cxl.dev0.ld0.sharers",
+        "cxl.dev0.ld0.bi_sent",
+        "cxl.dev0.ld0.bi_acks",
+        "cxl.dev0.ld0.bi_dirty_wb",
+        "host0.sys.bi_invalidations",
+        "host1.sys.bi_invalidations",
+        "cxl.link0.s2m_bisnp",
+        "cxl.link0.m2s_birsp",
+        "cxl.sw0.us_link.s2m_bisnp",
+        "fm.policy.bi_rate_last",
+    ] {
+        assert!(d.get(probe).is_some(), "expected emitter missing: {probe}");
+    }
+    assert!(
+        d.get("cxl.dev0.ld0.bi_sent").unwrap() > 0.0,
+        "sharing run generated no back-invalidates"
+    );
+    assert_eq!(d.get("cxl.dev0.ld0.sharers"), Some(2.0));
+    assert_documented(&d, &documented);
+}
+
+#[test]
 fn wall_clock_keys_live_outside_the_deterministic_dump() {
     // The sim.par.*_ns phase timers measure *host* wall-clock, so they
     // differ run-to-run: they must never appear in `dump_stats` (the
