@@ -138,6 +138,9 @@ impl Args {
                     let v = val(&mut i)?;
                     a.sets.push(format!("fm.policy=\"{v}\""));
                 }
+                "--check" => {
+                    a.sets.push("sim.check=true".to_string());
+                }
                 "--verify" => a.verify = true,
                 other => bail!("unknown flag '{other}' (see `cxlramsim help`)"),
             }
@@ -316,6 +319,10 @@ pub fn print_help() {
                                   refusal_backoff tune it via --set)\n\
            --prog-model M         znuma | flat\n\
            --artifacts DIR        AOT artifact directory\n\
+           --check                arm the runtime protocol-invariant\n\
+                                  checker ([sim] check): credit\n\
+                                  conservation, commit ordering, window\n\
+                                  disjointness, snoop-filter soundness\n\
            --verify               functional verification after the run"
     );
 }
@@ -634,6 +641,13 @@ mod tests {
         let a = Args::parse(&sv(&["boot", "--hosts", "2"])).unwrap();
         let cfg = a.config().unwrap();
         assert_eq!(cfg.hosts, 2);
+    }
+
+    #[test]
+    fn check_flag_reaches_config() {
+        let a = Args::parse(&sv(&["run", "--check"])).unwrap();
+        let cfg = a.config().unwrap();
+        assert!(cfg.check);
     }
 
     #[test]

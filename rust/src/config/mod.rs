@@ -703,6 +703,14 @@ pub struct SimConfig {
     /// `threads`, every value is bit-identical — purely a wall-clock
     /// knob. Defaults to `$CXLRAMSIM_COMMIT_LANES` when set, else auto.
     pub commit_lanes: usize,
+    /// `[sim] check`: arm the runtime protocol-invariant checker
+    /// (`--check`). Audits credit conservation, event-queue and commit
+    /// ordering, window disjointness and snoop-filter soundness on the
+    /// live run and fails it loudly on any violation — see
+    /// `sim::invariants` for the rule catalog. Off by default (the
+    /// audits cost wall-clock, never simulated behaviour). Defaults to
+    /// `$CXLRAMSIM_CHECK` when set, else false.
+    pub check: bool,
 }
 
 /// Default for `[sim] threads`: the `CXLRAMSIM_THREADS` environment
@@ -737,6 +745,16 @@ fn parse_commit_lanes(s: &str) -> Option<usize> {
     } else {
         s.parse::<usize>().ok()
     }
+}
+
+/// Default for `[sim] check`: the `CXLRAMSIM_CHECK` environment
+/// variable (`1`/`true` arms the checker), else false. Same CI hook as
+/// [`default_threads`]: a workflow leg runs the whole tier-1 suite
+/// under the invariant checker without touching any test's config.
+fn default_check() -> bool {
+    std::env::var("CXLRAMSIM_CHECK")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
 }
 
 impl Default for SimConfig {
@@ -816,6 +834,7 @@ impl Default for SimConfig {
             workload: WorkloadConfig::default(),
             threads: default_threads(),
             commit_lanes: default_commit_lanes(),
+            check: default_check(),
         }
     }
 }
@@ -1474,6 +1493,9 @@ impl SimConfig {
                     .context("sim.commit_lanes must be \"auto\" or integer")?
                     as usize,
             };
+        }
+        if let Some(v) = doc.get("sim.check") {
+            c.check = v.as_bool().context("sim.check must be bool")?;
         }
         get!("system.freq_ghz", c.freq_ghz, f64);
         get!("system.rob", c.rob_entries, usize);
@@ -2400,6 +2422,24 @@ mod tests {
         assert!(c.validate().is_err(), "lanes > 256 must be rejected");
         c.commit_lanes = 256;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn sim_check_parses() {
+        let cfg =
+            SimConfig::from_toml("[sim]\ncheck = true\n", &[]).unwrap();
+        assert!(cfg.check);
+        let cfg = SimConfig::from_toml("[sim]\ncheck = false\n", &[])
+            .unwrap();
+        assert!(!cfg.check);
+        let cfg =
+            SimConfig::from_toml("", &["sim.check=true".to_string()])
+                .unwrap();
+        assert!(cfg.check, "--set sim.check=true (the --check flag) arms it");
+        assert!(
+            SimConfig::from_toml("[sim]\ncheck = 1\n", &[]).is_err(),
+            "non-bool must be rejected"
+        );
     }
 
     #[test]

@@ -169,6 +169,25 @@ impl Fabric {
         self.links.iter().map(|l| f(&l.stats)).sum()
     }
 
+    /// Every credit pool on the fabric, labeled for invariant-violation
+    /// reports: each device's leaf link plus each switch's shared
+    /// upstream link. Leaf links behind a switch are forward-only
+    /// (their credit state never moves, so their conservation equation
+    /// holds trivially) — enumerating them unconditionally gives the
+    /// checker total coverage without double-counting a pool.
+    pub fn pools(&self) -> Vec<(String, &CxlLink)> {
+        let mut out: Vec<(String, &CxlLink)> = self
+            .links
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (format!("link{i}"), l))
+            .collect();
+        for (j, sw) in self.switches.iter().enumerate() {
+            out.push((format!("sw{j}.us"), &sw.us_link));
+        }
+        out
+    }
+
     /// Commit-lane partition: contiguous, switch-credit-disjoint device
     /// ranges `[lo, hi)` covering `0..ndev` in order. Devices behind the
     /// same switch share its upstream credit pool, so every device a

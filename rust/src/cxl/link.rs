@@ -215,6 +215,33 @@ impl CxlLink {
         self.credits_total - self.credits_free
     }
 
+    /// Credit-pool snapshot for the runtime invariant checker (rule
+    /// CR-1/CR-2): `(total, free, in_flight, placeholders)`, where
+    /// `in_flight` counts timed retirements still pending and
+    /// `placeholders` counts `Tick::MAX` entries awaiting their
+    /// [`CxlLink::retire`] fix-up. Conservation demands
+    /// `free + in_flight + placeholders == total` at every tick, and
+    /// `placeholders == 0` at quiesce.
+    pub fn credit_audit(&self) -> (usize, usize, usize, usize) {
+        let placeholders =
+            self.returns.iter().filter(|&&t| t == Tick::MAX).count();
+        (
+            self.credits_total,
+            self.credits_free,
+            self.returns.len() - placeholders,
+            placeholders,
+        )
+    }
+
+    /// Fault hook for the checker's mutation tests: grow the issued
+    /// pool without a matching free/in-flight entry, i.e. one credit
+    /// has vanished from tracking. Breaks CR-1 by construction; only
+    /// compiled under the `check` feature.
+    #[cfg(feature = "check")]
+    pub fn debug_leak_credit(&mut self) {
+        self.credits_total += 1;
+    }
+
     pub fn dump(&self, path: &str, d: &mut StatDump) {
         d.counter(&format!("{path}.m2s_req"), &self.stats.m2s_req);
         d.counter(&format!("{path}.m2s_rwd"), &self.stats.m2s_rwd);

@@ -1,0 +1,675 @@
+//! Runtime CXL protocol-invariant checker (`[sim] check` / `--check`).
+//!
+//! The machine's golden digests prove determinism by example; this
+//! module enforces the *conservation laws* behind them on a live run.
+//! Off by default (zero cost for benches); when `[sim] check = true`
+//! the machine audits after each epoch commit wave and once more at
+//! quiesce, recording structured [`InvariantViolation`]s and a
+//! `check.{epochs,violations,rules_evaluated}` stat surface. A clean
+//! run must produce zero violations at any `(threads, commit_lanes)`.
+//!
+//! Rule catalog (ids appear in reports, docs/ARCHITECTURE.md and the
+//! mutation tests):
+//!
+//! | id    | law                                                       |
+//! |-------|-----------------------------------------------------------|
+//! | CR-1  | per-pool credit conservation: free + in-flight +          |
+//! |       | placeholders == issued, every epoch                       |
+//! | CR-2  | no `Tick::MAX` credit placeholders once drained (every    |
+//! |       | send eventually retired)                                  |
+//! | EQ-1  | per-host clock monotone: `queue_now` never regresses and  |
+//! |       | the next event is never behind the clock                  |
+//! | EQ-2  | global commit order: within a wave, `(tick, host, seq)`   |
+//! |       | strictly increasing; across waves the tick floor never    |
+//! |       | regresses (a later wave may legally start at the same     |
+//! |       | tick with a smaller host id)                              |
+//! | WIN-1 | HDM/CFMWS windows: per-host HPA ranges disjoint; two      |
+//! |       | hosts' windows covering the same device DPA only for a    |
+//! |       | shared LD                                                 |
+//! | SF-1  | snoop-filter soundness at quiesce: a host's owned shared  |
+//! |       | lines and the device directory's owner entries agree      |
+//! |       | exactly, both directions                                  |
+//! | SF-2  | BI accounting at quiesce: every BISnp sent was acked      |
+//! |       | (`bi_sent == bi_acks`), none still queued                 |
+//! | RT-1  | no orphaned MSHRs at quiesce: `l2_pending`, outboxes and  |
+//! |       | the global pending map all empty                          |
+//!
+//! The checker never panics mid-run: violations are recorded so a
+//! broken run still produces its full report. The machine decides at
+//! end of run whether to fail (it does, loudly, unless a fault hook
+//! marked the checker tolerant — the mutation tests in
+//! `rust/tests/invariants.rs` seed corruption on purpose).
+
+use std::fmt;
+
+use crate::cxl::mem_proto::DATA_BYTES;
+use crate::cxl::Fabric;
+use crate::sim::Tick;
+use crate::system::host::Host;
+
+/// Cap on *recorded* violations: a conservation bug trips every epoch,
+/// and the report only needs the first screenful. The running count
+/// (`check.violations`) keeps the true total.
+const MAX_RECORDED: usize = 256;
+
+/// One broken invariant, with enough context to find the state that
+/// broke it.
+#[derive(Clone, Debug)]
+pub struct InvariantViolation {
+    /// Rule id from the module-level catalog (e.g. `"CR-1"`).
+    pub rule: &'static str,
+    /// Simulated tick of the audit that caught it.
+    pub tick: Tick,
+    /// Host involved, when the rule is host-scoped.
+    pub host: Option<usize>,
+    /// Device involved, when the rule is device-scoped.
+    pub device: Option<usize>,
+    /// Narrative: what equation failed, with the numbers.
+    pub what: String,
+}
+
+impl fmt::Display for InvariantViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] t={}", self.rule, self.tick)?;
+        if let Some(h) = self.host {
+            write!(f, " host{h}")?;
+        }
+        if let Some(d) = self.device {
+            write!(f, " dev{d}")?;
+        }
+        write!(f, ": {}", self.what)
+    }
+}
+
+/// Streaming audit of the global commit order (rule EQ-2). The commit
+/// paths feed every `(tick, host, seq)` key they pop from the pending
+/// map through [`CommitOrderAudit::note`]; wave boundaries (each
+/// `commit_pending` call / sharded wave) reset the within-wave cursor
+/// via [`CommitOrderAudit::begin_wave`] while ratcheting the tick
+/// floor — entries committed in a later wave may start at the same
+/// tick as the previous wave's limit (with any host id), but never at
+/// an earlier tick.
+#[derive(Debug, Default)]
+pub struct CommitOrderAudit {
+    /// Largest key committed in the current wave.
+    last: Option<(Tick, u8, u64)>,
+    /// Largest tick of any completed wave.
+    floor: Tick,
+    /// EQ-2 violations awaiting pickup by the checker's next audit.
+    pending: Vec<InvariantViolation>,
+    /// Fault hook: hold the next key and emit it after its successor.
+    #[cfg(feature = "check")]
+    fault_armed: bool,
+    #[cfg(feature = "check")]
+    held: Option<(Tick, u8, u64)>,
+}
+
+impl CommitOrderAudit {
+    /// A new commit wave begins: within-wave ordering restarts, the
+    /// cross-wave tick floor ratchets up.
+    pub fn begin_wave(&mut self) {
+        if let Some((t, _, _)) = self.last {
+            self.floor = self.floor.max(t);
+        }
+        self.last = None;
+    }
+
+    /// Observe the next key popped from the pending map, in commit
+    /// order.
+    pub fn note(&mut self, key: (Tick, u8, u64)) {
+        #[cfg(feature = "check")]
+        if self.fault_armed {
+            match self.held.take() {
+                None => {
+                    self.held = Some(key);
+                    return;
+                }
+                Some(h) => {
+                    self.fault_armed = false;
+                    self.observe(key);
+                    self.observe(h);
+                    return;
+                }
+            }
+        }
+        self.observe(key);
+    }
+
+    fn observe(&mut self, key: (Tick, u8, u64)) {
+        if key.0 < self.floor {
+            self.pending.push(InvariantViolation {
+                rule: "EQ-2",
+                tick: key.0,
+                host: Some(key.1 as usize),
+                device: None,
+                what: format!(
+                    "commit key {key:?} regresses behind the completed-\
+                     wave tick floor {}",
+                    self.floor
+                ),
+            });
+        }
+        if let Some(last) = self.last {
+            if key <= last {
+                self.pending.push(InvariantViolation {
+                    rule: "EQ-2",
+                    tick: key.0,
+                    host: Some(key.1 as usize),
+                    device: None,
+                    what: format!(
+                        "commit key {key:?} not strictly after {last:?} \
+                         within one wave"
+                    ),
+                });
+            }
+        }
+        self.last = Some(match self.last {
+            Some(l) if l > key => l,
+            _ => key,
+        });
+    }
+
+    /// Arm the EQ-2 mutation fault: the next committed key is held
+    /// back and delivered after its successor, exactly the reordering
+    /// the rule exists to catch.
+    #[cfg(feature = "check")]
+    pub fn arm_reorder_fault(&mut self) {
+        self.fault_armed = true;
+    }
+}
+
+/// The runtime invariant engine. Owned by `system::Machine` when
+/// `[sim] check` is on; all audits are driven from the machine's
+/// single-threaded sections (never from commit-lane workers), so the
+/// checker needs no synchronization.
+#[derive(Debug, Default)]
+pub struct InvariantChecker {
+    /// EQ-2 streaming audit, fed by the commit paths.
+    pub order: CommitOrderAudit,
+    violations: Vec<InvariantViolation>,
+    total_violations: u64,
+    epochs: u64,
+    rules_evaluated: u64,
+    /// Per-host high-water mark of `queue_now` (EQ-1).
+    watermarks: Vec<Tick>,
+    /// Set by the fault hooks: a seeded corruption is *supposed* to
+    /// violate rules, so the end-of-run audit reports instead of
+    /// failing the run.
+    tolerant: bool,
+}
+
+impl InvariantChecker {
+    pub fn new(nhosts: usize) -> Self {
+        InvariantChecker {
+            watermarks: vec![0; nhosts],
+            ..Default::default()
+        }
+    }
+
+    fn push(&mut self, v: InvariantViolation) {
+        self.total_violations += 1;
+        if self.violations.len() < MAX_RECORDED {
+            self.violations.push(v);
+        }
+    }
+
+    /// Per-epoch audit: credit conservation (CR-1), host clock
+    /// monotonicity (EQ-1) and any commit-order violations the
+    /// streaming EQ-2 audit collected since the last call. `now` is
+    /// the epoch's commit limit.
+    pub fn audit_epoch(
+        &mut self,
+        now: Tick,
+        hosts: &[Host],
+        fabric: &Fabric,
+    ) {
+        self.epochs += 1;
+        self.rules_evaluated += 3;
+        for (label, link) in fabric.pools() {
+            let (total, free, inflight, placeholders) =
+                link.credit_audit();
+            if free + inflight + placeholders != total {
+                self.push(InvariantViolation {
+                    rule: "CR-1",
+                    tick: now,
+                    host: None,
+                    device: None,
+                    what: format!(
+                        "credit pool {label}: issued {total} != free \
+                         {free} + in-flight {inflight} + placeholders \
+                         {placeholders}"
+                    ),
+                });
+            }
+        }
+        for (h, host) in hosts.iter().enumerate() {
+            let qnow = host.queue_now();
+            if qnow < self.watermarks[h] {
+                self.push(InvariantViolation {
+                    rule: "EQ-1",
+                    tick: now,
+                    host: Some(h),
+                    device: None,
+                    what: format!(
+                        "queue_now {qnow} regressed below watermark {}",
+                        self.watermarks[h]
+                    ),
+                });
+            } else {
+                self.watermarks[h] = qnow;
+            }
+            if let Some(next) = host.next_event_tick() {
+                if next < qnow {
+                    self.push(InvariantViolation {
+                        rule: "EQ-1",
+                        tick: now,
+                        host: Some(h),
+                        device: None,
+                        what: format!(
+                            "next event at {next} is behind the host \
+                             clock {qnow}"
+                        ),
+                    });
+                }
+            }
+        }
+        let order_violations = std::mem::take(&mut self.order.pending);
+        for v in order_violations {
+            self.push(v);
+        }
+    }
+
+    /// Window audit (WIN-1), run after every FM rebind wave and at
+    /// quiesce: per-host HPA disjointness, and cross-host DPA overlap
+    /// on one device only where the FM actually bound a shared LD.
+    pub fn audit_windows(
+        &mut self,
+        now: Tick,
+        hosts: &[Host],
+        fabric: &Fabric,
+    ) {
+        self.rules_evaluated += 1;
+        for (h, host) in hosts.iter().enumerate() {
+            let mut spans: Vec<(u64, u64)> = host
+                .rc
+                .windows()
+                .iter()
+                .map(|w| (w.base, w.size))
+                .collect();
+            spans.sort_unstable();
+            for pair in spans.windows(2) {
+                if pair[0].0 + pair[0].1 > pair[1].0 {
+                    self.push(InvariantViolation {
+                        rule: "WIN-1",
+                        tick: now,
+                        host: Some(h),
+                        device: None,
+                        what: format!(
+                            "HPA windows overlap: [{:#x}, {:#x}) and \
+                             [{:#x}, {:#x})",
+                            pair[0].0,
+                            pair[0].0 + pair[0].1,
+                            pair[1].0,
+                            pair[1].0 + pair[1].1
+                        ),
+                    });
+                }
+            }
+        }
+        // Cross-host: which DPA span of which device does each window
+        // reach? For an N-way window each target device sees size/N
+        // bytes starting at the window's DPA base.
+        let mut per_dev: Vec<Vec<(usize, u64, u64)>> =
+            vec![Vec::new(); fabric.ndev()];
+        for (h, host) in hosts.iter().enumerate() {
+            for w in host.rc.windows() {
+                let ways = w.targets.len().max(1) as u64;
+                let span = w.size / ways;
+                for &t in w.targets.iter() {
+                    if t < per_dev.len() {
+                        per_dev[t].push((
+                            h,
+                            w.dpa_base,
+                            w.dpa_base + span,
+                        ));
+                    }
+                }
+            }
+        }
+        for (d, spans) in per_dev.iter().enumerate() {
+            for i in 0..spans.len() {
+                for j in i + 1..spans.len() {
+                    let (ha, lo_a, hi_a) = spans[i];
+                    let (hb, lo_b, hi_b) = spans[j];
+                    if ha == hb || lo_a >= hi_b || lo_b >= hi_a {
+                        continue;
+                    }
+                    let ld =
+                        fabric.devices[d].ld_of_dpa(lo_a.max(lo_b));
+                    if !fabric.devices[d].is_shared_ld(ld) {
+                        self.push(InvariantViolation {
+                            rule: "WIN-1",
+                            tick: now,
+                            host: Some(ha),
+                            device: Some(d),
+                            what: format!(
+                                "hosts {ha} and {hb} both map DPA \
+                                 [{:#x}, {:#x}) of unshared ld{ld}",
+                                lo_a.max(lo_b),
+                                hi_a.min(hi_b)
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Quiesce audit (CR-2, SF-1, SF-2, RT-1). Only meaningful once
+    /// the run actually drained — a `max_ticks` truncation legally
+    /// leaves work in flight, so the final-state rules are skipped
+    /// (and not counted as evaluated) when anything is still pending.
+    pub fn audit_quiesce(
+        &mut self,
+        now: Tick,
+        hosts: &[Host],
+        fabric: &Fabric,
+        pending_inflight: usize,
+    ) {
+        let drained = pending_inflight == 0
+            && hosts.iter().all(|h| h.next_event_tick().is_none());
+        if !drained {
+            return;
+        }
+        self.rules_evaluated += 4;
+        // CR-2: every consumed credit was retired.
+        for (label, link) in fabric.pools() {
+            let (_, _, _, placeholders) = link.credit_audit();
+            if placeholders > 0 {
+                self.push(InvariantViolation {
+                    rule: "CR-2",
+                    tick: now,
+                    host: None,
+                    device: None,
+                    what: format!(
+                        "credit pool {label}: {placeholders} \
+                         Tick::MAX placeholder(s) never retired"
+                    ),
+                });
+            }
+        }
+        // RT-1: no orphaned MSHRs or undrained outboxes.
+        for (h, host) in hosts.iter().enumerate() {
+            if host.inflight_fetches() > 0 {
+                self.push(InvariantViolation {
+                    rule: "RT-1",
+                    tick: now,
+                    host: Some(h),
+                    device: None,
+                    what: format!(
+                        "{} l2_pending MSHR(s) orphaned at quiesce",
+                        host.inflight_fetches()
+                    ),
+                });
+            }
+            if host.outbox_len() > 0 {
+                self.push(InvariantViolation {
+                    rule: "RT-1",
+                    tick: now,
+                    host: Some(h),
+                    device: None,
+                    what: format!(
+                        "{} outbox entr(ies) never drained",
+                        host.outbox_len()
+                    ),
+                });
+            }
+        }
+        // SF-1, host -> device: every line a host believes it owns
+        // must be owned by that host in the device directory.
+        let mut host_owned: Vec<(usize, u64, usize)> = Vec::new();
+        for (h, host) in hosts.iter().enumerate() {
+            for line in host.owned_shared_lines() {
+                match host.rc.route_dpa(line) {
+                    Some((dev, dpa)) => {
+                        let sl = fabric.devices[dev].snoop_line(dpa);
+                        if sl.owner != Some(h as u8) {
+                            self.push(InvariantViolation {
+                                rule: "SF-1",
+                                tick: now,
+                                host: Some(h),
+                                device: Some(dev),
+                                what: format!(
+                                    "host owns line {line:#x} (dpa \
+                                     {dpa:#x}) but the snoop filter \
+                                     says owner = {:?}",
+                                    sl.owner
+                                ),
+                            });
+                        } else {
+                            host_owned.push((
+                                dev,
+                                dpa / DATA_BYTES,
+                                h,
+                            ));
+                        }
+                    }
+                    None => self.push(InvariantViolation {
+                        rule: "SF-1",
+                        tick: now,
+                        host: Some(h),
+                        device: None,
+                        what: format!(
+                            "owned line {line:#x} routes to no window"
+                        ),
+                    }),
+                }
+            }
+        }
+        // SF-1, device -> host: every exclusive entry in a directory
+        // must be claimed by that host.
+        host_owned.sort_unstable();
+        for (d, dev) in fabric.devices.iter().enumerate() {
+            for (line_dpa, sl) in dev.snoop_entries() {
+                let Some(o) = sl.owner else { continue };
+                let key = (d, line_dpa / DATA_BYTES, o as usize);
+                if host_owned.binary_search(&key).is_err() {
+                    self.push(InvariantViolation {
+                        rule: "SF-1",
+                        tick: now,
+                        host: Some(o as usize),
+                        device: Some(d),
+                        what: format!(
+                            "snoop filter grants dpa {line_dpa:#x} \
+                             exclusively to host{o}, which claims no \
+                             such line"
+                        ),
+                    });
+                }
+            }
+        }
+        // SF-2: BI bookkeeping closed out.
+        for (d, dev) in fabric.devices.iter().enumerate() {
+            if dev.pending_bi_len() > 0 {
+                self.push(InvariantViolation {
+                    rule: "SF-2",
+                    tick: now,
+                    host: None,
+                    device: Some(d),
+                    what: format!(
+                        "{} BISnp(s) still queued at quiesce",
+                        dev.pending_bi_len()
+                    ),
+                });
+            }
+            let sent: u64 =
+                dev.stats.ld_bi_sent.iter().map(|c| c.get()).sum();
+            let acks: u64 =
+                dev.stats.ld_bi_acks.iter().map(|c| c.get()).sum();
+            if sent != acks {
+                self.push(InvariantViolation {
+                    rule: "SF-2",
+                    tick: now,
+                    host: None,
+                    device: Some(d),
+                    what: format!(
+                        "bi_sent {sent} != bi_acks {acks} at quiesce"
+                    ),
+                });
+            }
+        }
+    }
+
+    /// Mark seeded-fault mode: the end-of-run audit reports violations
+    /// without failing the run (mutation tests inspect them instead).
+    #[cfg(feature = "check")]
+    pub fn set_tolerant(&mut self) {
+        self.tolerant = true;
+    }
+
+    pub fn tolerant(&self) -> bool {
+        self.tolerant
+    }
+
+    /// Audits performed (stat `check.epochs`).
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Rule-group evaluations across all audits
+    /// (stat `check.rules_evaluated`).
+    pub fn rules_evaluated(&self) -> u64 {
+        self.rules_evaluated
+    }
+
+    /// Total violations observed, including any past the recording cap
+    /// (stat `check.violations`).
+    pub fn total_violations(&self) -> u64 {
+        self.total_violations
+    }
+
+    /// The recorded violations (first [`MAX_RECORDED`]), audit order.
+    pub fn violations(&self) -> &[InvariantViolation] {
+        &self.violations
+    }
+
+    /// Multi-line report for the end-of-run failure path.
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "invariant checker: {} violation(s) over {} epoch(s)\n",
+            self.total_violations, self.epochs
+        );
+        for v in &self.violations {
+            s.push_str(&format!("  {v}\n"));
+        }
+        if self.total_violations > self.violations.len() as u64 {
+            s.push_str(&format!(
+                "  ... and {} more (recording capped)\n",
+                self.total_violations - self.violations.len() as u64
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(t: Tick, h: u8, s: u64) -> (Tick, u8, u64) {
+        (t, h, s)
+    }
+
+    #[test]
+    fn commit_order_accepts_strictly_increasing_waves() {
+        let mut a = CommitOrderAudit::default();
+        a.begin_wave();
+        a.note(k(10, 0, 1));
+        a.note(k(10, 1, 0));
+        a.note(k(12, 0, 2));
+        a.begin_wave();
+        // Same tick as the previous wave's limit, smaller host: legal.
+        a.note(k(12, 0, 3));
+        a.note(k(20, 2, 0));
+        assert!(a.pending.is_empty(), "{:?}", a.pending);
+    }
+
+    #[test]
+    fn commit_order_rejects_within_wave_regression() {
+        let mut a = CommitOrderAudit::default();
+        a.begin_wave();
+        a.note(k(10, 1, 0));
+        a.note(k(10, 0, 0)); // smaller host at same tick, same wave
+        assert_eq!(a.pending.len(), 1);
+        assert_eq!(a.pending[0].rule, "EQ-2");
+    }
+
+    #[test]
+    fn commit_order_rejects_cross_wave_tick_regression() {
+        let mut a = CommitOrderAudit::default();
+        a.begin_wave();
+        a.note(k(100, 0, 0));
+        a.begin_wave();
+        a.note(k(99, 0, 1));
+        assert_eq!(a.pending.len(), 1);
+        assert!(a.pending[0].what.contains("floor"));
+    }
+
+    #[test]
+    fn duplicate_key_is_a_violation() {
+        let mut a = CommitOrderAudit::default();
+        a.begin_wave();
+        a.note(k(5, 0, 0));
+        a.note(k(5, 0, 0));
+        assert_eq!(a.pending.len(), 1, "strictly-increasing means no dup");
+    }
+
+    #[test]
+    fn checker_caps_recording_but_counts_all() {
+        let mut c = InvariantChecker::new(1);
+        for i in 0..(MAX_RECORDED as u64 + 10) {
+            c.push(InvariantViolation {
+                rule: "CR-1",
+                tick: i,
+                host: None,
+                device: None,
+                what: "x".into(),
+            });
+        }
+        assert_eq!(c.total_violations(), MAX_RECORDED as u64 + 10);
+        assert_eq!(c.violations().len(), MAX_RECORDED);
+        assert!(c.report().contains("more (recording capped)"));
+    }
+
+    #[test]
+    fn violation_display_has_rule_site_and_narrative() {
+        let v = InvariantViolation {
+            rule: "SF-1",
+            tick: 42,
+            host: Some(3),
+            device: Some(1),
+            what: "owner mismatch".into(),
+        };
+        let s = v.to_string();
+        assert!(s.contains("[SF-1]"));
+        assert!(s.contains("t=42"));
+        assert!(s.contains("host3"));
+        assert!(s.contains("dev1"));
+        assert!(s.contains("owner mismatch"));
+    }
+
+    #[cfg(feature = "check")]
+    #[test]
+    fn reorder_fault_trips_eq2() {
+        let mut a = CommitOrderAudit::default();
+        a.arm_reorder_fault();
+        a.begin_wave();
+        a.note(k(10, 0, 0)); // held
+        a.note(k(11, 0, 1)); // delivered first, then the held key
+        assert!(
+            a.pending.iter().any(|v| v.rule == "EQ-2"),
+            "{:?}",
+            a.pending
+        );
+    }
+}

@@ -7,6 +7,7 @@
 //!   caches, buses, DRAM and the CXL transaction layer.
 
 pub mod event;
+pub mod invariants;
 pub mod packet;
 
 pub use event::{EventQueue, Scheduled};

@@ -531,6 +531,31 @@ impl Host {
         self.queue.processed()
     }
 
+    // ---- invariant-checker surface (sim::invariants) ----------------------
+
+    /// Outstanding fetch MSHRs: every in-flight demand/prefetch fetch
+    /// holds an `l2_pending` entry from issue until its fill lands, so
+    /// the checker's quiesce rule RT-1 demands zero once the machine
+    /// has drained.
+    pub(crate) fn inflight_fetches(&self) -> usize {
+        self.l2_pending.len()
+    }
+
+    /// Fabric requests emitted but not yet drained by the machine
+    /// (RT-1: must be zero at quiesce).
+    pub(crate) fn outbox_len(&self) -> usize {
+        self.outbox.len()
+    }
+
+    /// Shared lines this host currently holds exclusively, in address
+    /// order (BTreeSet storage order — deterministic). Rule SF-1
+    /// checks each against the owning device's snoop filter.
+    pub(crate) fn owned_shared_lines(
+        &self,
+    ) -> impl Iterator<Item = u64> + '_ {
+        self.owned_lines.iter().copied()
+    }
+
     /// Derive the conservative lookahead horizon from the bound
     /// topology: the minimum fixed round-trip cost (packetize + path +
     /// de-packetize, both ways) over every device this host can reach,
@@ -1314,6 +1339,10 @@ impl Host {
     /// packet can still be routed at the departing window.
     pub(crate) fn has_inflight_in(&self, base: u64, size: u64) -> bool {
         let line = self.cfg.l2.line;
+        // Audited for the determinism contract: `any` over disjoint
+        // keys is a pure existence test, so hash iteration order
+        // cannot reach the result.
+        // simlint: allow(hash-iter, order-insensitive existence check)
         self.l2_pending
             .keys()
             .any(|&k| k * line >= base && k * line < base + size)

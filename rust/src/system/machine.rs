@@ -86,6 +86,7 @@ use crate::cxl::mailbox::{event, retcode, EventRecord, UNBOUND};
 use crate::cxl::mem_proto;
 use crate::cxl::{CreditAvail, Fabric, FabricLane, HdmWindow};
 use crate::guestos::{GuestOs, MemChange, MemPolicy, ProgModel};
+use crate::sim::invariants::{CommitOrderAudit, InvariantChecker};
 use crate::sim::{ns_to_ticks, ticks_to_ns, EventQueue, Tick};
 use crate::stats::StatDump;
 use crate::workloads::Workload;
@@ -243,6 +244,11 @@ pub struct Machine {
     wall_commit_ns: u64,
     /// Wall-clock spent merging outboxes/lane outputs back (ns).
     wall_merge_ns: u64,
+    /// Runtime protocol-invariant engine (`[sim] check` / `--check`).
+    /// `None` (the default) costs nothing on the hot paths; when armed,
+    /// the section loops feed it commit keys and audit after each
+    /// settle, and `run` fails loudly on any recorded violation.
+    checker: Option<InvariantChecker>,
 }
 
 /// Re-probe interval while an FM unbind waits for in-flight requests to
@@ -499,6 +505,7 @@ fn commit_pending(
     dev_fixed_ticks: &[Tick],
     d_min: Tick,
     line: u64,
+    mut order: Option<&mut CommitOrderAudit>,
 ) -> u64 {
     let mut handled = 0u64;
     let mut w = barrier;
@@ -510,6 +517,9 @@ fn commit_pending(
             break;
         }
         let ((t, h, seq), req) = pending.pop_first().unwrap();
+        if let Some(o) = order.as_deref_mut() {
+            o.note((t, h, seq));
+        }
         handled += 1;
         match req {
             FabricReq::Fetch { dev, pkt, core, line_pa, issued_at } => {
@@ -712,6 +722,11 @@ impl Machine {
         let lane_ranges = fabric.lane_ranges();
         let lane_of_dev = fabric.lane_of_dev(&lane_ranges);
         let nh = hosts.len();
+        let checker = if cfg.check {
+            Some(InvariantChecker::new(nh))
+        } else {
+            None
+        };
         Ok(Machine {
             cfg,
             hosts,
@@ -744,6 +759,7 @@ impl Machine {
             wall_drain_ns: 0,
             wall_commit_ns: 0,
             wall_merge_ns: 0,
+            checker,
         })
     }
 
@@ -903,13 +919,48 @@ impl Machine {
                             self.fm_policy = Some(eng);
                         }
                     }
+                    // FM actions are the only thing that rewires HDM
+                    // windows mid-run; re-check disjointness after each
+                    // (WIN-1).
+                    if let Some(ck) = self.checker.as_mut() {
+                        ck.audit_windows(t, &self.hosts, &self.fabric);
+                    }
                 }
                 // No machine event within bounds: the section above
                 // already settled every host up to the limit.
                 _ => break,
             }
         }
+        if self.checker.is_some() {
+            self.audit_final();
+            let ck = self.checker.as_ref().unwrap();
+            if ck.total_violations() > 0 && !ck.tolerant() {
+                panic!("{}", ck.report());
+            }
+        }
         self.summary()
+    }
+
+    /// End-of-run audit pass: one last epoch audit (drains any EQ-2
+    /// findings the order audit still holds), the window check, and the
+    /// quiesce-only rules (CR-2 / SF-1 / SF-2 / RT-1).
+    fn audit_final(&mut self) {
+        let now = self
+            .hosts
+            .iter()
+            .map(|h| h.queue_now())
+            .max()
+            .unwrap_or(0);
+        if let Some(ck) = self.checker.as_mut() {
+            ck.audit_epoch(now, &self.hosts, &self.fabric);
+            ck.audit_windows(now, &self.hosts, &self.fabric);
+            ck.audit_quiesce(
+                now,
+                &self.hosts,
+                &self.fabric,
+                self.pending.len(),
+            );
+        }
     }
 
     /// Run every host to a settled fixpoint at `limit` — no local event
@@ -1056,6 +1107,9 @@ impl Machine {
             }
             let barrier = self.commit_barrier();
             let t2 = Instant::now();
+            if let Some(ck) = self.checker.as_mut() {
+                ck.order.begin_wave();
+            }
             let committed = commit_pending(
                 &mut self.fabric,
                 &mut self.pending,
@@ -1067,6 +1121,7 @@ impl Machine {
                 &self.dev_fixed_ticks,
                 self.d_min,
                 self.cfg.l1.line,
+                self.checker.as_mut().map(|c| &mut c.order),
             );
             let t3 = Instant::now();
             self.wall_drain_ns += (t1 - t0).as_nanos() as u64;
@@ -1075,6 +1130,9 @@ impl Machine {
             self.par_epochs += 1;
             if active >= 2 {
                 self.par_barrier_waits += active as u64;
+            }
+            if let Some(ck) = self.checker.as_mut() {
+                ck.audit_epoch(limit, &self.hosts, &self.fabric);
             }
             if processed == 0 && committed == 0 {
                 break;
@@ -1104,12 +1162,14 @@ impl Machine {
             Mutex::new(None);
 
         // Split-borrow self: workers own disjoint host chunks, the main
-        // thread keeps the fabric and the pending map.
+        // thread keeps the fabric, the pending map and the commit-order
+        // audit (EQ-2 keys are only ever noted from the main thread).
         let hosts = &mut self.hosts;
         let fabric = &mut self.fabric;
         let pending = &mut self.pending;
         let inboxes = &mut self.inboxes;
         let scratch_oldest = &mut self.scratch_oldest;
+        let mut order = self.checker.as_mut().map(|c| &mut c.order);
         let lookaheads: Vec<Tick> =
             hosts.iter().map(|h| h.lookahead()).collect();
         let pkt_ticks = self.pkt_ticks;
@@ -1254,6 +1314,9 @@ impl Machine {
                 let now = Instant::now();
                 merge_ns += (now - tp).as_nanos() as u64;
                 tp = now;
+                if let Some(o) = order.as_deref_mut() {
+                    o.begin_wave();
+                }
                 let committed = commit_pending(
                     fabric,
                     pending,
@@ -1265,6 +1328,7 @@ impl Machine {
                     dev_fixed,
                     d_min,
                     line,
+                    order.as_deref_mut(),
                 );
                 let now = Instant::now();
                 commit_ns += (now - tp).as_nanos() as u64;
@@ -1286,6 +1350,14 @@ impl Machine {
         self.wall_drain_ns += drain_ns;
         self.wall_commit_ns += commit_ns;
         self.wall_merge_ns += merge_ns;
+        // Audit once per settled section (not per epoch — the workers
+        // hold the host borrows between barriers). The checked laws are
+        // invariants of the queue state, so a coarser cadence changes
+        // `check.epochs`, never whether a violation is caught by the
+        // end of the run.
+        if let Some(ck) = self.checker.as_mut() {
+            ck.audit_epoch(limit, &self.hosts, &self.fabric);
+        }
     }
 
     /// The sharded section loop: host drains on the worker pool (as in
@@ -1330,6 +1402,9 @@ impl Machine {
         let merge_buf = &mut self.merge_buf;
         let scratch_oldest = &mut self.scratch_oldest;
         let lane_of_dev = &self.lane_of_dev;
+        // EQ-2 keys are noted at the wave distributor (main thread) —
+        // the one place global commit order exists in this path.
+        let mut order = self.checker.as_mut().map(|c| &mut c.order);
         let lookaheads: Vec<Tick> =
             hosts.iter().map(|h| h.lookahead()).collect();
         let pkt_ticks = self.pkt_ticks;
@@ -1547,6 +1622,13 @@ impl Machine {
                     let wave_hi = w
                         .min(limit.saturating_add(1))
                         .min(t0.saturating_add(d_min));
+                    // Lane-deferred retries always re-enter the map at
+                    // or past `wave_hi`, while every key dealt below is
+                    // under it — so the audit's cross-wave tick floor
+                    // holds even when a retry escapes its wave.
+                    if let Some(o) = order.as_deref_mut() {
+                        o.begin_wave();
+                    }
                     while let Some((&(t, _, _), _)) =
                         pending.first_key_value()
                     {
@@ -1554,6 +1636,9 @@ impl Machine {
                             break;
                         }
                         let (k, req) = pending.pop_first().unwrap();
+                        if let Some(o) = order.as_deref_mut() {
+                            o.note(k);
+                        }
                         let mut sl =
                             lane_slots[lane_of_dev[req.dev()]]
                                 .lock()
@@ -1603,6 +1688,13 @@ impl Machine {
         self.wall_drain_ns += drain_ns;
         self.wall_commit_ns += commit_ns;
         self.wall_merge_ns += merge_ns;
+        // Per-section audit cadence, as in the unsharded parallel path.
+        // The lane views hold `&mut` borrows of the fabric interior;
+        // end them before the audit reborrows the fabric shared.
+        drop(lane_slots);
+        if let Some(ck) = self.checker.as_mut() {
+            ck.audit_epoch(limit, &self.hosts, &self.fabric);
+        }
     }
 
     /// Events dispatched machine-wide: every host's local queue plus
@@ -2098,6 +2190,63 @@ impl Machine {
         Ok(())
     }
 
+    // ---- runtime invariant checker (`[sim] check`) ------------------------
+
+    /// Run the full audit suite against the current state. The mutation
+    /// tests in `rust/tests/invariants.rs` corrupt state after a run and
+    /// call this to collect the rule ids that fire; it is also the
+    /// end-of-run pass `run` itself performs.
+    pub fn check_now(&mut self) {
+        self.audit_final();
+    }
+
+    /// The invariant checker, when `[sim] check` is on.
+    pub fn checker(&self) -> Option<&InvariantChecker> {
+        self.checker.as_ref()
+    }
+
+    /// Rule ids of every recorded violation, in audit order (empty when
+    /// the checker is off or the run was clean).
+    pub fn check_violation_rules(&self) -> Vec<&'static str> {
+        self.checker
+            .as_ref()
+            .map(|c| c.violations().iter().map(|v| v.rule).collect())
+            .unwrap_or_default()
+    }
+
+    /// Fault hook (mutation tests): grow device `dev`'s leaf-link
+    /// credit pool without a matching free/in-flight entry — CR-1 must
+    /// fire at the next audit. Marks the checker tolerant so the
+    /// seeded corruption reports instead of failing the run.
+    #[cfg(feature = "check")]
+    pub fn debug_leak_credit(&mut self, dev: usize) {
+        self.fabric.credit_link(dev).debug_leak_credit();
+        if let Some(ck) = self.checker.as_mut() {
+            ck.set_tolerant();
+        }
+    }
+
+    /// Fault hook (mutation tests): hold the next committed key back
+    /// one slot so it emerges out of order — EQ-2 must fire.
+    #[cfg(feature = "check")]
+    pub fn debug_reorder_commit(&mut self) {
+        if let Some(ck) = self.checker.as_mut() {
+            ck.order.arm_reorder_fault();
+            ck.set_tolerant();
+        }
+    }
+
+    /// Fault hook (mutation tests): clear device `dev`'s snoop filter
+    /// under live host-side ownership — SF-1 must fire at the next
+    /// quiesce audit.
+    #[cfg(feature = "check")]
+    pub fn debug_desync_sharer(&mut self, dev: usize) {
+        self.fabric.devices[dev].debug_desync_sharer();
+        if let Some(ck) = self.checker.as_mut() {
+            ck.set_tolerant();
+        }
+    }
+
     pub fn dump_stats(&self) -> StatDump {
         let mut d = StatDump::default();
         let multi = self.hosts.len() > 1;
@@ -2138,6 +2287,16 @@ impl Machine {
         d.push("sim.par.drain_ns", self.wall_drain_ns as f64);
         d.push("sim.par.commit_ns", self.wall_commit_ns as f64);
         d.push("sim.par.merge_ns", self.wall_merge_ns as f64);
+        // Checker telemetry lives here, not in the deterministic dump:
+        // the audit *cadence* (per epoch serial, per section threaded)
+        // legitimately differs across scheduler modes, so `check.epochs`
+        // would break cross-thread-count golden comparisons. Violations
+        // must be zero everywhere regardless of cadence.
+        if let Some(ck) = &self.checker {
+            d.push("check.epochs", ck.epochs() as f64);
+            d.push("check.violations", ck.total_violations() as f64);
+            d.push("check.rules_evaluated", ck.rules_evaluated() as f64);
+        }
         d
     }
 }

@@ -1,0 +1,284 @@
+//! Mutation tests for the runtime protocol-invariant checker
+//! (`[sim] check`, `sim::invariants`).
+//!
+//! The checker's value is falsifiable: a clean run must report zero
+//! violations at every `(threads, commit_lanes)` pair, and each seeded
+//! corruption — a leaked credit, a reordered commit, a desynced snoop
+//! filter — must fire exactly the rule written for it. The fault hooks
+//! (`Machine::debug_*`) only exist under the `check` feature, which is
+//! why this whole file is feature-gated.
+#![cfg(feature = "check")]
+
+use cxlramsim::config::{CxlDevOverride, LdRef, SimConfig};
+use cxlramsim::guestos::{MemPolicy, ProgModel};
+use cxlramsim::system::Machine;
+use cxlramsim::util::rng::Rng;
+use cxlramsim::workloads::{RandomAccess, Stream, StreamKernel, Workload};
+
+/// A single-host machine with the checker armed.
+fn checked_cfg() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.cores = 2;
+    c.sys_mem_size = 256 << 20;
+    c.cxl.mem_size = 256 << 20;
+    c.check = true;
+    c
+}
+
+/// Two hosts sharing one LD (the sharing.rs topology) with the checker
+/// armed — exercises BI traffic, so SF-1/SF-2 have state to audit.
+fn checked_shared_cfg() -> SimConfig {
+    let mut cfg = checked_cfg();
+    cfg.hosts = 2;
+    cfg.cxl.switches = 1;
+    cfg.cxl.dev_overrides = vec![CxlDevOverride {
+        lds: Some(1),
+        shared_lds: Some(vec![0]),
+        ..Default::default()
+    }];
+    cfg.host_lds = vec![
+        vec![LdRef { dev: 0, ld: 0 }],
+        vec![LdRef { dev: 0, ld: 0 }],
+    ];
+    cfg.seed = 99;
+    cfg
+}
+
+fn attach_stream(m: &mut Machine, hosts: usize) {
+    for h in 0..hosts {
+        let wl = Stream::for_wss(StreamKernel::Triad, m.cfg.l2.size, 2);
+        m.attach_workloads_to(
+            h,
+            vec![Box::new(wl)],
+            &MemPolicy::Bind { nodes: vec![1] },
+        )
+        .unwrap();
+    }
+}
+
+fn booted(mut cfg: SimConfig, threads: usize, lanes: usize) -> Machine {
+    cfg.threads = threads;
+    cfg.commit_lanes = lanes;
+    let hosts = cfg.hosts;
+    let mut m = Machine::new(cfg).unwrap();
+    m.boot(ProgModel::Znuma).unwrap();
+    attach_stream(&mut m, hosts);
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Clean runs: zero violations, every scheduler mode, goldens unchanged.
+// ---------------------------------------------------------------------------
+
+/// The acceptance gate: with the checker armed, a clean shared-LD run
+/// reports zero violations at every `(threads, commit_lanes)` pair AND
+/// leaves the deterministic stat dump bit-identical to the unchecked
+/// run — auditing must observe, never perturb.
+#[test]
+fn clean_runs_have_zero_violations_at_every_schedule() {
+    let mut unchecked = checked_shared_cfg();
+    unchecked.check = false;
+    let mut m = booted(unchecked, 1, 1);
+    m.run(None);
+    let golden = m.dump_stats().to_text();
+
+    // 0 = auto lanes.
+    for (threads, lanes) in [(1, 1), (1, 4), (4, 0), (4, 4)] {
+        let mut m = booted(checked_shared_cfg(), threads, lanes);
+        m.run(None);
+        m.verify().unwrap();
+        let ck = m.checker().expect("[sim] check = true arms the checker");
+        assert_eq!(
+            ck.total_violations(),
+            0,
+            "threads={threads} lanes={lanes}: {}",
+            ck.report()
+        );
+        assert!(ck.epochs() > 0, "audits must actually have run");
+        assert!(ck.rules_evaluated() > 0);
+        assert_eq!(
+            m.dump_stats().to_text(),
+            golden,
+            "threads={threads} lanes={lanes}: checking changed the run"
+        );
+    }
+}
+
+/// The checker stats ride in the full dump only: the deterministic
+/// dump must not grow mode-dependent keys (audit cadence differs per
+/// scheduler), and an unchecked run must not grow them at all.
+#[test]
+fn check_stats_surface_only_in_full_dump_when_armed() {
+    let mut m = booted(checked_cfg(), 1, 1);
+    m.run(None);
+    let det = m.dump_stats();
+    let full = m.dump_stats_full();
+    for key in ["check.epochs", "check.violations", "check.rules_evaluated"]
+    {
+        assert!(full.get(key).is_some(), "full dump must carry {key}");
+        assert!(det.get(key).is_none(), "det dump must not carry {key}");
+    }
+    assert_eq!(full.get("check.violations"), Some(0.0));
+    assert!(full.get("check.epochs").unwrap() > 0.0);
+
+    let mut plain = checked_cfg();
+    plain.check = false;
+    let mut m = booted(plain, 1, 1);
+    m.run(None);
+    assert!(
+        !m.dump_stats_full().to_text().contains("check."),
+        "unchecked runs must not emit checker keys"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Mutations: each seeded fault fires exactly the rule written for it.
+// ---------------------------------------------------------------------------
+
+/// Leak a credit after a clean run: the issued pool grows without a
+/// matching free/in-flight entry, so the next audit must fire CR-1 (and
+/// only a conservation rule — commit order and the snoop filter are
+/// untouched).
+#[test]
+fn leaked_credit_trips_cr1() {
+    let mut m = booted(checked_cfg(), 1, 1);
+    m.run(None);
+    assert_eq!(m.checker().unwrap().total_violations(), 0);
+    m.debug_leak_credit(0);
+    m.check_now();
+    let rules = m.check_violation_rules();
+    assert!(
+        rules.contains(&"CR-1"),
+        "leaked credit must break conservation, got {rules:?}"
+    );
+    assert!(
+        rules.iter().all(|r| *r == "CR-1"),
+        "a leaked credit is purely a CR-1 fault, got {rules:?}"
+    );
+}
+
+/// Arm the commit-reorder fault before the run: the order audit holds
+/// one key back a slot, so the stream of committed `(tick, host, seq)`
+/// keys is no longer monotone and EQ-2 must fire — in every scheduler
+/// mode, since all of them feed the same audit.
+#[test]
+fn reordered_commit_trips_eq2() {
+    // Serial commit path.
+    let mut m = booted(checked_cfg(), 1, 1);
+    m.debug_reorder_commit();
+    m.run(None);
+    let rules = m.check_violation_rules();
+    assert!(
+        rules.contains(&"EQ-2"),
+        "serial: reordered commit must trip EQ-2, got {rules:?}"
+    );
+    // Threaded commit path feeds the same audit from its distributor.
+    let mut m = booted(checked_shared_cfg(), 2, 1);
+    m.debug_reorder_commit();
+    m.run(None);
+    let rules = m.check_violation_rules();
+    assert!(
+        rules.contains(&"EQ-2"),
+        "threaded: reordered commit must trip EQ-2, got {rules:?}"
+    );
+}
+
+/// Wipe the shared device's snoop filter after a contended run: hosts
+/// still claim ownership the directory no longer remembers, so the
+/// quiesce audit must fire SF-1.
+#[test]
+fn desynced_sharer_trips_sf1() {
+    let mut m = booted(checked_shared_cfg(), 1, 1);
+    m.run(None);
+    assert_eq!(m.checker().unwrap().total_violations(), 0);
+    assert!(
+        m.fabric.devices[0]
+            .snoop_entries()
+            .any(|(_, sl)| sl.owner.is_some()),
+        "precondition: the run must end with host-owned lines, or the \
+         desync has nothing to contradict"
+    );
+    m.debug_desync_sharer(0);
+    m.check_now();
+    let rules = m.check_violation_rules();
+    assert!(
+        rules.contains(&"SF-1"),
+        "cleared snoop filter under live owners must trip SF-1, \
+         got {rules:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Random topologies: the checker holds across the config space.
+// ---------------------------------------------------------------------------
+
+/// 100 randomly drawn topologies (hosts x devices x switches x
+/// interleave x sharing x scheduler mode x workload), each run under
+/// the checker: zero violations everywhere. This is the sweep that
+/// makes the invariants *laws of the simulator*, not properties of one
+/// lucky config.
+#[test]
+fn random_topologies_run_clean_under_check() {
+    let mut rng = Rng::new(0xc4ec_4e55);
+    for case in 0..100u32 {
+        let mut cfg = checked_cfg();
+        cfg.seed = rng.next_u64();
+        cfg.cores = 1 + rng.below(2) as usize;
+        let shared = rng.below(3) == 0;
+        if shared {
+            cfg = checked_shared_cfg();
+            cfg.seed = rng.next_u64();
+            cfg.hosts = 2 + rng.below(2) as usize;
+            cfg.host_lds = (0..cfg.hosts)
+                .map(|_| vec![LdRef { dev: 0, ld: 0 }])
+                .collect();
+        } else {
+            cfg.hosts = 1 + rng.below(2) as usize;
+            if cfg.hosts == 2 {
+                // Round-robin LD assignment hands window i to host
+                // i % hosts: two pooled hosts need one window each.
+                cfg.cxl.devices = 2;
+                cfg.cxl.switches = rng.below(2) as usize;
+            } else {
+                cfg.cxl.devices = 1 + rng.below(2) as usize;
+                if cfg.cxl.devices == 2 {
+                    cfg.cxl.interleave_ways =
+                        if rng.below(2) == 0 { 0 } else { 2 };
+                    cfg.cxl.switches = rng.below(2) as usize;
+                }
+            }
+        }
+        cfg.threads = 1 + rng.below(4) as usize;
+        cfg.commit_lanes = rng.below(3) as usize; // 0 = auto
+        let hosts = cfg.hosts;
+        let mut m = Machine::new(cfg).unwrap();
+        m.boot(ProgModel::Znuma).unwrap();
+        for h in 0..hosts {
+            let wl: Box<dyn Workload> = match rng.below(3) {
+                0 => Box::new(Stream::new(StreamKernel::Triad, 8192, 1)),
+                1 => Box::new(Stream::new(StreamKernel::Copy, 8192, 1)),
+                _ => Box::new(RandomAccess::new(
+                    1 << 20,
+                    2000,
+                    0.5,
+                    rng.next_u64(),
+                )),
+            };
+            m.attach_workloads_to(
+                h,
+                vec![wl],
+                &MemPolicy::Bind { nodes: vec![1] },
+            )
+            .unwrap();
+        }
+        m.run(None);
+        let ck = m.checker().unwrap();
+        assert_eq!(
+            ck.total_violations(),
+            0,
+            "case {case}: {}",
+            ck.report()
+        );
+        assert!(ck.rules_evaluated() > 0, "case {case}: no audits ran");
+    }
+}

@@ -1,0 +1,706 @@
+//! simlint — static enforcement of CXLRAMSim's determinism contract.
+//!
+//! The simulator promises bit-identical results for a given config at
+//! any `(threads, commit_lanes)` setting (docs/ARCHITECTURE.md). That
+//! contract is easy to break silently from source: iterate a hash map,
+//! read the wall clock inside the model, fold floats in a
+//! traversal-dependent order. This binary walks `rust/src` and flags
+//! those hazards before they reach a golden digest.
+//!
+//! Rules (ids are what pragmas and the baseline reference):
+//!
+//! * `hash-iter`   — iteration over `FxHashMap` / `FxHashSet` /
+//!   `HashMap` / `HashSet` (`.iter()`, `.keys()`, `.values()`,
+//!   `.drain()`, `for … in`). Hash iteration order depends on the
+//!   hasher and insertion history, so anything order-sensitive
+//!   downstream diverges. Feed the result through a sort (suppressed
+//!   automatically when `.sort` appears in the same statement) or
+//!   annotate the site: `// simlint: allow(hash-iter, <reason>)`.
+//! * `wall-clock`  — `Instant::now` / `SystemTime` / `std::thread` /
+//!   `thread_rng` outside the allowlist (`util/bench.rs`,
+//!   `system/machine.rs` wall-clock section timers, `coordinator`).
+//! * `float-accum` — `f32`/`f64` accumulation (`.sum::<f64>()`,
+//!   `.fold(` with a float seed): float addition is not associative,
+//!   so traversal order leaks into the result.
+//! * `par-unordered` — rayon-style `par_*` combinators: unordered
+//!   reduction outside the machine's deterministic-merge harness.
+//!
+//! Pre-existing accepted sites live in `tools/simlint/baseline.txt`
+//! (content-keyed: `rule<TAB>file<TAB>trimmed line`), so the lint
+//! gates only *new* hazards. `--write-baseline` regenerates the file;
+//! `--format json` emits a machine-readable report.
+//!
+//! Exit code: 0 clean (or baselined-only), 1 new findings, 2 usage/IO.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// One lint hit. `snippet` is the trimmed source line — together with
+/// `rule` and `file` it forms the content key used by the baseline, so
+/// unrelated line drift does not invalidate accepted sites.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+    snippet: String,
+}
+
+impl Finding {
+    fn key(&self) -> String {
+        format!("{}\t{}\t{}", self.rule, self.file, self.snippet)
+    }
+}
+
+const HASH_TYPES: [&str; 4] =
+    ["FxHashMap<", "FxHashSet<", "HashMap<", "HashSet<"];
+
+/// Method suffixes that enumerate a container in storage order.
+const ITER_SUFFIXES: [&str; 7] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".drain(",
+];
+
+/// Files where host-time / host-thread APIs are part of the design:
+/// the bench harness measures wall time, the machine's parallel
+/// sections use scoped threads + wall-clock phase timers (outside the
+/// simulated-time domain), and the coordinator fans whole simulations
+/// out across OS threads.
+const WALL_ALLOW: [&str; 3] =
+    ["util/bench.rs", "system/machine.rs", "coordinator"];
+
+const WALL_TOKENS: [(&str, &str); 5] = [
+    ("Instant::now", "wall-clock read"),
+    ("SystemTime", "wall-clock read"),
+    ("std::thread", "host-thread API"),
+    ("thread_rng", "nondeterministic RNG"),
+    ("rand::random", "nondeterministic RNG"),
+];
+
+const PAR_TOKENS: [&str; 5] = [
+    ".par_iter",
+    ".into_par_iter",
+    ".par_bridge",
+    ".par_chunks",
+    ".par_sort",
+];
+
+fn main() -> ExitCode {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut json = false;
+    let mut write_baseline = false;
+    let mut baseline_path = PathBuf::from("tools/simlint/baseline.txt");
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--format" => match args.next().as_deref() {
+                Some("json") => json = true,
+                Some("text") => json = false,
+                other => {
+                    eprintln!(
+                        "simlint: --format expects json|text, got {other:?}"
+                    );
+                    return ExitCode::from(2);
+                }
+            },
+            "--baseline" => match args.next() {
+                Some(p) => baseline_path = PathBuf::from(p),
+                None => {
+                    eprintln!("simlint: --baseline expects a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--write-baseline" => write_baseline = true,
+            "--help" | "-h" => {
+                println!(
+                    "usage: simlint [--format json|text] \
+                     [--baseline FILE] [--write-baseline] PATH..."
+                );
+                return ExitCode::SUCCESS;
+            }
+            _ => paths.push(PathBuf::from(a)),
+        }
+    }
+    if paths.is_empty() {
+        eprintln!("simlint: no paths given (try `simlint rust/src`)");
+        return ExitCode::from(2);
+    }
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in &paths {
+        collect_rs(p, &mut files);
+    }
+    files.sort();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in &files {
+        let Ok(src) = fs::read_to_string(f) else {
+            eprintln!("simlint: cannot read {}", f.display());
+            return ExitCode::from(2);
+        };
+        let rel = f.to_string_lossy().replace('\\', "/");
+        findings.extend(scan_file(&rel, &src));
+    }
+    findings.sort();
+
+    if write_baseline {
+        let mut out = String::from(
+            "# simlint baseline: accepted pre-existing findings.\n\
+             # rule<TAB>file<TAB>trimmed source line (content-keyed).\n",
+        );
+        for f in &findings {
+            out.push_str(&f.key());
+            out.push('\n');
+        }
+        if let Err(e) = fs::write(&baseline_path, out) {
+            eprintln!(
+                "simlint: cannot write {}: {e}",
+                baseline_path.display()
+            );
+            return ExitCode::from(2);
+        }
+        println!(
+            "simlint: wrote {} entries to {}",
+            findings.len(),
+            baseline_path.display()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let baseline: BTreeSet<String> = fs::read_to_string(&baseline_path)
+        .map(|s| {
+            s.lines()
+                .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
+
+    let (old, new): (Vec<&Finding>, Vec<&Finding>) =
+        findings.iter().partition(|f| baseline.contains(&f.key()));
+
+    if json {
+        println!("{}", report_json(&new, old.len(), files.len()));
+    } else {
+        for f in &new {
+            println!(
+                "error[{}]: {}\n  --> {}:{}\n   | {}\n",
+                f.rule, f.msg, f.file, f.line, f.snippet
+            );
+        }
+        println!(
+            "simlint: {} file(s), {} finding(s): {} baselined, {} new",
+            files.len(),
+            findings.len(),
+            old.len(),
+            new.len()
+        );
+    }
+    if new.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn collect_rs(p: &Path, out: &mut Vec<PathBuf>) {
+    if p.is_dir() {
+        let Ok(rd) = fs::read_dir(p) else { return };
+        let mut entries: Vec<PathBuf> =
+            rd.flatten().map(|e| e.path()).collect();
+        entries.sort();
+        for e in entries {
+            let name = e.file_name().unwrap_or_default().to_string_lossy()
+                == "target";
+            if !name {
+                collect_rs(&e, out);
+            }
+        }
+    } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+        out.push(p.to_path_buf());
+    }
+}
+
+fn scan_file(rel: &str, src: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    hash_iter_rule(rel, src, &lines, &mut out);
+    wall_clock_rule(rel, &lines, &mut out);
+    float_accum_rule(rel, &lines, &mut out);
+    par_rule(rel, &lines, &mut out);
+    out
+}
+
+/// `// simlint: allow(rule, reason)` on the flagged line or the line
+/// above it. The reason string is mandatory: an allow without a "why"
+/// is just a suppressed bug.
+fn allowed(lines: &[&str], line_idx: usize, rule: &str) -> bool {
+    let check = |l: &str| -> bool {
+        let Some(p) = l.find("simlint: allow(") else {
+            return false;
+        };
+        let body = &l[p + "simlint: allow(".len()..];
+        let Some(close) = body.find(')') else { return false };
+        let body = &body[..close];
+        let Some((r, reason)) = body.split_once(',') else {
+            return false;
+        };
+        r.trim() == rule && !reason.trim().is_empty()
+    };
+    check(lines[line_idx])
+        || (line_idx > 0 && check(lines[line_idx - 1]))
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Names bound to hash-ordered containers in this file: struct fields,
+/// `let` bindings and fn params whose declared/initialized type is one
+/// of [`HASH_TYPES`]. Per-file scoping keeps short names from matching
+/// across modules.
+fn hash_decl_names(lines: &[&str]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for l in lines {
+        let t = l.trim();
+        if t.starts_with("//") || t.starts_with("type ")
+            || t.starts_with("pub type ")
+        {
+            continue;
+        }
+        if !HASH_TYPES.iter().any(|ty| t.contains(ty)) {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix("let ") {
+            let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+            let name: String =
+                rest.chars().take_while(|&c| is_ident(c)).collect();
+            if !name.is_empty() {
+                names.insert(name);
+            }
+            continue;
+        }
+        // Field or param: `[pub] name: path::HashMap<..>`.
+        if let Some(colon) = t.find(':') {
+            if let Some(name) = t[..colon].split_whitespace().last() {
+                if !name.is_empty() && name.chars().all(is_ident) {
+                    names.insert(name.to_string());
+                }
+            }
+        }
+    }
+    names
+}
+
+fn line_of(line_starts: &[usize], off: usize) -> usize {
+    match line_starts.binary_search(&off) {
+        Ok(i) => i + 1,
+        Err(i) => i,
+    }
+}
+
+fn hash_iter_rule(
+    rel: &str,
+    src: &str,
+    lines: &[&str],
+    out: &mut Vec<Finding>,
+) {
+    let names = hash_decl_names(lines);
+    if names.is_empty() {
+        return;
+    }
+    let mut line_starts = vec![0usize];
+    for (i, b) in src.bytes().enumerate() {
+        if b == b'\n' {
+            line_starts.push(i + 1);
+        }
+    }
+    let bytes = src.as_bytes();
+    for name in &names {
+        for (off, _) in src.match_indices(name.as_str()) {
+            // Word boundaries: allow a preceding `.` (field access),
+            // reject mid-identifier hits.
+            if off > 0 {
+                let prev = bytes[off - 1] as char;
+                if is_ident(prev) {
+                    continue;
+                }
+            }
+            let end = off + name.len();
+            if end < bytes.len() && is_ident(bytes[end] as char) {
+                continue;
+            }
+            let lineno = line_of(&line_starts, off);
+            let lt = lines[lineno - 1].trim_start();
+            if lt.starts_with("//") {
+                continue;
+            }
+            // What follows the name (whitespace/newlines skipped)?
+            let tail = src[end..].trim_start();
+            let method = ITER_SUFFIXES
+                .iter()
+                .find(|s| tail.starts_with(**s))
+                .copied();
+            let line_before =
+                &lines[lineno - 1][..off - line_starts[lineno - 1]];
+            let for_in = method.is_none()
+                && !tail.starts_with('.')
+                && line_before.contains("for ")
+                && line_before.contains(" in ");
+            if method.is_none() && !for_in {
+                continue;
+            }
+            // Sorted downstream in the same statement? Then the order
+            // hazard is discharged.
+            let mut win_end = (end + 240).min(src.len());
+            while !src.is_char_boundary(win_end) {
+                win_end -= 1;
+            }
+            let rest = &src[end..win_end];
+            let stmt_end =
+                rest.find(';').unwrap_or(rest.len());
+            if rest[..stmt_end].contains(".sort") {
+                continue;
+            }
+            if allowed(lines, lineno - 1, "hash-iter") {
+                continue;
+            }
+            let how = method.unwrap_or("for-loop");
+            out.push(Finding {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "hash-iter",
+                msg: format!(
+                    "iteration over hash-ordered container `{name}` \
+                     ({how}): order depends on hasher state; sort the \
+                     result or annotate \
+                     `// simlint: allow(hash-iter, <reason>)`"
+                ),
+                snippet: lines[lineno - 1].trim().to_string(),
+            });
+        }
+    }
+}
+
+fn wall_clock_rule(rel: &str, lines: &[&str], out: &mut Vec<Finding>) {
+    if WALL_ALLOW.iter().any(|a| rel.contains(a)) {
+        return;
+    }
+    for (i, l) in lines.iter().enumerate() {
+        let t = l.trim();
+        if t.starts_with("//") {
+            continue;
+        }
+        for (tok, what) in WALL_TOKENS {
+            if t.contains(tok) && !allowed(lines, i, "wall-clock") {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "wall-clock",
+                    msg: format!(
+                        "{what} `{tok}` in sim-state code: host time / \
+                         host threads must not reach the model (see \
+                         docs/ARCHITECTURE.md determinism contract)"
+                    ),
+                    snippet: t.to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn float_accum_rule(rel: &str, lines: &[&str], out: &mut Vec<Finding>) {
+    for (i, l) in lines.iter().enumerate() {
+        let t = l.trim();
+        if t.starts_with("//") {
+            continue;
+        }
+        let flagged = if t.contains(".sum::<f64>()")
+            || t.contains(".sum::<f32>()")
+        {
+            true
+        } else if let Some(p) = t.find(".fold(") {
+            // Float seed? Look from the fold's argument list up to the
+            // closure, spilling onto the next line for split calls.
+            let mut window = t[p + ".fold(".len()..].to_string();
+            if let Some(next) = lines.get(i + 1) {
+                window.push(' ');
+                window.push_str(next.trim());
+            }
+            let upto = window.find('|').unwrap_or(window.len());
+            let seed = &window[..upto];
+            seed.contains("0.0") || seed.contains("f64") || seed.contains("f32")
+        } else {
+            false
+        };
+        if flagged && !allowed(lines, i, "float-accum") {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "float-accum",
+                msg: "float accumulation in a traversal: f32/f64 \
+                      addition is order-sensitive; accumulate in \
+                      integers/ticks or document the fixed traversal \
+                      order"
+                    .to_string(),
+                snippet: t.to_string(),
+            });
+        }
+    }
+}
+
+fn par_rule(rel: &str, lines: &[&str], out: &mut Vec<Finding>) {
+    for (i, l) in lines.iter().enumerate() {
+        let t = l.trim();
+        if t.starts_with("//") {
+            continue;
+        }
+        for tok in PAR_TOKENS {
+            if t.contains(tok) && !allowed(lines, i, "par-unordered") {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "par-unordered",
+                    msg: format!(
+                        "unordered parallel combinator `{tok}`: \
+                         reductions must go through the machine's \
+                         deterministic merge, not rayon scheduling"
+                    ),
+                    snippet: t.to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut o = String::with_capacity(s.len() + 8);
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            '\n' => o.push_str("\\n"),
+            '\t' => o.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                o.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => o.push(c),
+        }
+    }
+    o
+}
+
+fn report_json(new: &[&Finding], baselined: usize, files: usize) -> String {
+    let mut s = String::from("{\"findings\":[");
+    for (i, f) in new.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\
+             \"message\":\"{}\",\"snippet\":\"{}\"}}",
+            f.rule,
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.msg),
+            json_escape(&f.snippet)
+        ));
+    }
+    s.push_str(&format!(
+        "],\"new\":{},\"baselined\":{},\"files\":{}}}",
+        new.len(),
+        baselined,
+        files
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> Vec<Finding> {
+        scan_file("rust/src/fake.rs", src)
+    }
+
+    #[test]
+    fn flags_hash_map_iteration_variants() {
+        let src = "struct S { m: FxHashMap<u64, u64> }\n\
+                   fn f(s: &S) -> u64 {\n\
+                   \x20   s.m.iter().map(|(_, v)| *v).max().unwrap_or(0)\n\
+                   }\n\
+                   fn g(s: &mut S) {\n\
+                   \x20   for v in s.m.values() { drop(v); }\n\
+                   \x20   s.m.drain();\n\
+                   }\n";
+        let f = scan(src);
+        let hash: Vec<_> =
+            f.iter().filter(|f| f.rule == "hash-iter").collect();
+        assert_eq!(hash.len(), 3, "{hash:?}");
+        assert_eq!(hash[0].line, 3);
+    }
+
+    #[test]
+    fn flags_multiline_chain_and_for_loop() {
+        let src = "struct S { l2_pending: FxHashMap<u64, u64> }\n\
+                   impl S {\n\
+                   \x20 fn any(&self) -> bool {\n\
+                   \x20   self.l2_pending\n\
+                   \x20     .keys()\n\
+                   \x20     .any(|&k| k > 0)\n\
+                   \x20 }\n\
+                   \x20 fn each(&self) { for k in &self.l2_pending {\n\
+                   \x20   let _ = k; } }\n\
+                   }\n";
+        let f = scan(src);
+        let hash: Vec<_> =
+            f.iter().filter(|f| f.rule == "hash-iter").collect();
+        assert_eq!(hash.len(), 2, "{hash:?}");
+        assert_eq!(hash[0].line, 4, "chain flags at the receiver line");
+        assert_eq!(hash[1].line, 8);
+    }
+
+    #[test]
+    fn sort_in_statement_discharges_hash_iter() {
+        let src = "fn f(m: &HashMap<u64, u64>) -> Vec<u64> {\n\
+                   \x20 let mut v: Vec<u64> = m.keys().copied()\n\
+                   \x20   .collect::<Vec<_>>();\n\
+                   \x20 v.sort_unstable();\n\
+                   \x20 v\n}\n";
+        // `.sort` appears past the `;`, so the collect itself still
+        // flags — but piping straight into a sort suppresses:
+        let piped = "fn f(m: &HashMap<u64, u64>) -> Vec<u64> {\n\
+                   \x20 let mut v: Vec<u64> = m.keys().copied().collect();\n\
+                   \x20 v.sort_unstable(); v }\n";
+        assert_eq!(
+            scan(src).iter().filter(|f| f.rule == "hash-iter").count(),
+            1
+        );
+        let inline = "fn f(m: &HashMap<u64, u64>) -> Vec<u64> {\n\
+                   \x20 let mut v: Vec<u64> = m.keys().copied()\n\
+                   \x20   .collect::<Vec<_>>(); v.sort_unstable(); v }\n";
+        let _ = piped;
+        assert_eq!(
+            scan(inline)
+                .iter()
+                .filter(|f| f.rule == "hash-iter")
+                .count(),
+            1,
+            "sort after the `;` does not discharge"
+        );
+    }
+
+    #[test]
+    fn pragma_with_reason_suppresses_without_reason_does_not() {
+        let good = "struct S { m: FxHashSet<u64> }\n\
+                    fn f(s: &S) -> bool {\n\
+                    \x20 // simlint: allow(hash-iter, existence check)\n\
+                    \x20 s.m.iter().any(|&k| k > 0)\n}\n";
+        let bad = "struct S { m: FxHashSet<u64> }\n\
+                   fn f(s: &S) -> bool {\n\
+                   \x20 // simlint: allow(hash-iter,)\n\
+                   \x20 s.m.iter().any(|&k| k > 0)\n}\n";
+        assert_eq!(
+            scan(good).iter().filter(|f| f.rule == "hash-iter").count(),
+            0
+        );
+        assert_eq!(
+            scan(bad).iter().filter(|f| f.rule == "hash-iter").count(),
+            1
+        );
+    }
+
+    #[test]
+    fn wall_clock_banned_outside_allowlist() {
+        let src = "fn f() { let _t = Instant::now(); }\n";
+        assert_eq!(
+            scan_file("rust/src/cxl/link.rs", src)
+                .iter()
+                .filter(|f| f.rule == "wall-clock")
+                .count(),
+            1
+        );
+        assert_eq!(
+            scan_file("rust/src/system/machine.rs", src)
+                .iter()
+                .filter(|f| f.rule == "wall-clock")
+                .count(),
+            0,
+            "machine.rs wall-clock section timers are allowlisted"
+        );
+    }
+
+    #[test]
+    fn float_accum_flags_float_folds_not_integer_folds() {
+        let int_fold =
+            "fn f(v: &[u8]) -> u8 { v.iter().fold(0u8, |a, b| a ^ b) }\n";
+        let float_fold = "fn f(v: &[f64]) -> f64 {\n\
+                          \x20 v.iter().fold(\n\
+                          \x20   (0.0f64, 0u64),\n\
+                          \x20   |a, _| a).0\n}\n";
+        let float_sum =
+            "fn f(v: &[f64]) -> f64 { v.iter().sum::<f64>() }\n";
+        assert_eq!(scan(int_fold).len(), 0);
+        assert_eq!(
+            scan(float_fold)
+                .iter()
+                .filter(|f| f.rule == "float-accum")
+                .count(),
+            1,
+            "split-line fold with float seed"
+        );
+        assert_eq!(
+            scan(float_sum)
+                .iter()
+                .filter(|f| f.rule == "float-accum")
+                .count(),
+            1
+        );
+    }
+
+    #[test]
+    fn par_combinators_flagged() {
+        let src = "fn f(v: &[u8]) { v.par_iter().for_each(|_| ()); }\n";
+        assert_eq!(
+            scan(src).iter().filter(|f| f.rule == "par-unordered").count(),
+            1
+        );
+    }
+
+    #[test]
+    fn baseline_key_is_content_not_line() {
+        let f = Finding {
+            file: "a.rs".into(),
+            line: 10,
+            rule: "hash-iter",
+            msg: "m".into(),
+            snippet: "x.keys()".into(),
+        };
+        let g = Finding { line: 99, ..f.clone() };
+        assert_eq!(f.key(), g.key());
+    }
+
+    #[test]
+    fn json_report_escapes() {
+        let f = Finding {
+            file: "a\"b.rs".into(),
+            line: 1,
+            rule: "wall-clock",
+            msg: "tab\there".into(),
+            snippet: "x".into(),
+        };
+        let s = report_json(&[&f], 2, 3);
+        assert!(s.contains("a\\\"b.rs"));
+        assert!(s.contains("tab\\there"));
+        assert!(s.contains("\"baselined\":2"));
+    }
+}
